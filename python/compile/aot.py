@@ -1,0 +1,142 @@
+"""AOT lowering: L2 worker graphs → artifacts/*.hlo.txt + manifest.json.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per (task, shape-class).  The shape classes below mirror
+rust/src/data/registry.rs — every dataset the experiments use, with N_m
+= padded per-worker rows after an even split across M workers.  Rust
+reads manifest.json to find the artifact and its argument layout.
+
+Run:  python -m compile.aot --out-dir ../artifacts [--only ijcnn1]
+`make artifacts` is a no-op when inputs are older than the manifest.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# shape classes — keep in sync with rust/src/data/registry.rs
+# ---------------------------------------------------------------------------
+
+# name → (N_total, d, M, tasks)
+DATASETS = {
+    # synthetic, paper Fig. 1/2/3/11/12: M=9 workers, 50 samples of 50
+    # features each
+    "synth": (450, 50, 9, ("linreg", "logreg")),
+    # ijcnn1 (49 990 × 22), evenly split over 9 workers (Table I)
+    "ijcnn1": (49_990, 22, 9, ("linreg", "logreg", "lasso", "nn")),
+    # MNIST (60 000 × 784), 9 workers (Table III)
+    "mnist": (60_000, 784, 9, ("linreg", "logreg", "lasso", "nn")),
+    # Experiment-set-2 small datasets, 3 workers, features truncated to
+    # the per-task-group minimum (paper §IV-B protocol): linreg trio → 8,
+    # logreg/lasso/nn trio → 14
+    "housing": (506, 8, 3, ("linreg",)),
+    "bodyfat": (252, 8, 3, ("linreg",)),
+    "abalone": (4_177, 8, 3, ("linreg",)),
+    "ionosphere": (351, 14, 3, ("logreg", "lasso")),
+    "adult": (1_605, 14, 3, ("logreg", "lasso", "nn")),
+    "derm": (366, 14, 3, ("logreg", "lasso")),
+}
+
+
+def per_worker_padded(n_total: int, m: int) -> int:
+    """Rows per worker after even split + padding to the kernel tile."""
+    n_m = (n_total + m - 1) // m
+    return model.padded_n(n_m)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(task: str, n_pad: int, d: int):
+    """Lower one worker graph; returns (hlo_text, arg spec list)."""
+    fn, needs_mask, needs_lam = model.worker_fn(task)
+    p = model.theta_dim(task, d)
+    f32 = jnp.float32
+    specs = [
+        ("theta", (p,)),
+        ("x", (n_pad, d)),
+        ("y", (n_pad,)),
+    ]
+    if needs_mask:
+        specs.append(("mask", (n_pad,)))
+    if needs_lam:
+        specs.append(("lam", (1,)))
+    if task == "nn":
+        specs.append(("wscale", (1,)))
+    args = [jax.ShapeDtypeStruct(s, f32) for _, s in specs]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), [
+        {"name": nm, "shape": list(s)} for nm, s in specs
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated dataset filter")
+    ap.add_argument("--tasks", default=None,
+                    help="comma-separated task filter")
+    ns = ap.parse_args(argv)
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    only = set(ns.only.split(",")) if ns.only else None
+    task_filter = set(ns.tasks.split(",")) if ns.tasks else None
+
+    manifest = {"block_n": model.BLOCK_N, "hidden": model.HIDDEN,
+                "artifacts": []}
+    for ds, (n_total, d, m, tasks) in DATASETS.items():
+        if only and ds not in only:
+            continue
+        n_pad = per_worker_padded(n_total, m)
+        for task in tasks:
+            if task_filter and task not in task_filter:
+                continue
+            name = f"{task}_{ds}"
+            path = f"{name}.hlo.txt"
+            print(f"lowering {name}: n_pad={n_pad} d={d} ...",
+                  flush=True)
+            hlo, arg_specs = lower_artifact(task, n_pad, d)
+            with open(os.path.join(ns.out_dir, path), "w") as f:
+                f.write(hlo)
+            manifest["artifacts"].append({
+                "name": name,
+                "task": task,
+                "dataset": ds,
+                "file": path,
+                "n_total": n_total,
+                "workers": m,
+                "n_pad": n_pad,
+                "d": d,
+                "theta_dim": model.theta_dim(task, d),
+                "args": arg_specs,
+                "outputs": ["grad", "loss"],
+                "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            })
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {ns.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""L1 Pallas kernel suite for the CHB federated-learning workers.
+
+Each module provides one fused worker-gradient kernel (interpret=True —
+see common.py for why) plus its streaming HBM->VMEM schedule:
+
+  matmul  — tiled MXU matmul building block
+  linreg  — X^T(X theta - y) + loss, one pass
+  logreg  — regularized logistic gradient + loss
+  lasso   — lasso subgradient + loss
+  nn      — fused fwd + manual-bwd of the 1x30 sigmoid network
+
+ref.py holds the pure-jnp oracles every kernel is tested against.
+"""
+
+from .linreg import linreg_grad_loss
+from .logreg import logreg_grad_loss
+from .lasso import lasso_grad_loss
+from .matmul import matmul
+from .nn import nn_grad_loss
+
+__all__ = [
+    "linreg_grad_loss",
+    "logreg_grad_loss",
+    "lasso_grad_loss",
+    "matmul",
+    "nn_grad_loss",
+]

@@ -1,0 +1,66 @@
+"""Shared helpers for the Pallas kernel suite.
+
+All kernels in this package are written for the TPU memory model —
+BlockSpec expresses the HBM→VMEM schedule, accumulators live in the
+revisited output block — but are *executed* with ``interpret=True``
+because the CPU PJRT plugin cannot run Mosaic custom-calls (see
+DESIGN.md §Hardware-Adaptation). Structure is TPU-shaped; numerics are
+validated on CPU.
+"""
+
+import jax.numpy as jnp
+
+# Default row-tile: one HBM→VMEM transfer of the data matrix per grid
+# step.  256 rows × ≤1024 features × 4 B = ≤1 MiB, comfortably inside
+# the ~16 MiB VMEM budget together with θ and the accumulator.
+DEFAULT_BLOCK_N = 256
+
+# float32 everywhere: the paper's workloads are small-dimension convex
+# problems where bf16 would visibly perturb the censoring decisions.
+DTYPE = jnp.float32
+
+
+# VMEM budget for the X row-tile (half of a ~16 MiB VMEM, leaving room
+# for θ, y, and the accumulators).  The largest tile that fits gives
+# the fewest grid steps — on interpret-mode CPU that minimizes XLA
+# while-loop overhead, and on a real TPU it maximizes the compute per
+# HBM→VMEM transfer (see tuning.py).
+VMEM_TILE_BUDGET = 8 * 1024 * 1024
+
+
+def choose_block_n(n: int, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """Largest row-tile ≤ block_n; caller pads n up to a multiple."""
+    return min(n, block_n)
+
+
+def best_block_n(n_pad: int, d: int,
+                 budget: int = VMEM_TILE_BUDGET) -> int:
+    """Largest divisor of n_pad whose (block × d) f32 tile fits the
+    VMEM budget.  n_pad is already a multiple of DEFAULT_BLOCK_N (or
+    equals the raw n for small shards), so candidate blocks are the
+    divisors of n_pad — the BlockSpec grid must tile exactly."""
+    if n_pad * d * 4 <= budget:
+        return n_pad
+    best = 1
+    limit = max(1, budget // (4 * d))
+    k = 1
+    while k * k <= n_pad:
+        if n_pad % k == 0:
+            for div in (k, n_pad // k):
+                if div <= limit and div > best:
+                    best = div
+        k += 1
+    return best
+
+
+def padded_rows(n: int, block_n: int) -> int:
+    """n rounded up to a multiple of the row tile."""
+    return ((n + block_n - 1) // block_n) * block_n
+
+
+def vmem_bytes(block_n: int, d: int, extra: int = 0) -> int:
+    """Estimated VMEM footprint of one grid step of a fused-gradient
+    kernel: X tile + θ + y tile + accumulator (+ task-specific extra
+    floats).  Used by tuning.py and quoted in EXPERIMENTS.md §Perf."""
+    floats = block_n * d + d + block_n + d + extra
+    return 4 * floats

@@ -1,0 +1,67 @@
+"""Fused lasso subgradient kernel.
+
+subgrad = Xᵀ(Xθ − y) + λ·sign(θ)      (sign(0) := 0)
+loss    = ½‖Xθ − y‖² + λ‖θ‖₁
+
+Identical streaming schedule to linreg; the nondifferentiable λ·sign(θ)
+term (the paper replaces the gradient by a subgradient for lasso, §IV)
+is applied once on the final grid step.  Zero-padded rows contribute 0.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DTYPE, choose_block_n
+
+
+def _lasso_grad_kernel(theta_ref, x_ref, y_ref, lam_ref, g_ref, loss_ref):
+    i = pl.program_id(0)
+    steps = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]
+    r = x @ theta_ref[...] - y_ref[...]
+    g_ref[...] += r @ x
+    loss_ref[...] += 0.5 * jnp.sum(r * r)[None]
+
+    @pl.when(i == steps - 1)
+    def _l1():
+        lam = lam_ref[0]
+        theta = theta_ref[...]
+        g_ref[...] += lam * jnp.sign(theta)
+        loss_ref[...] += lam * jnp.sum(jnp.abs(theta))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def lasso_grad_loss(theta, x, y, lam, block_n: int = 0):
+    """Returns (subgrad (d,), loss (1,)).  lam: shape-(1,) array."""
+    n, d = x.shape
+    bn = choose_block_n(n) if block_n == 0 else block_n
+    assert n % bn == 0, f"N={n} not a multiple of block_n={bn}"
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _lasso_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+        ],
+        interpret=True,
+    )(theta, x, y, lam)

@@ -1,0 +1,60 @@
+"""Fused linear-regression gradient kernel.
+
+One pallas_call computes both the worker gradient Xᵀ(Xθ − y) and the
+loss ½‖Xθ − y‖² in a single pass over X: the grid streams row tiles of
+X through VMEM while the (d,) gradient accumulator and the scalar loss
+stay resident in the revisited output blocks.  This is the paper's
+worker hot-spot (every worker, every iteration).
+
+Zero-padded rows (x = 0, y = 0) contribute exactly 0 to both outputs,
+so the caller may pad N up to a tile multiple with no mask needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DTYPE, choose_block_n
+
+
+def _linreg_grad_kernel(theta_ref, x_ref, y_ref, g_ref, loss_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]  # (bn, d) tile
+    r = x @ theta_ref[...] - y_ref[...]  # (bn,) residual
+    g_ref[...] += r @ x  # Xᵀr for this tile
+    loss_ref[...] += 0.5 * jnp.sum(r * r)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def linreg_grad_loss(theta, x, y, block_n: int = 0):
+    """Returns (grad (d,), loss (1,)).  x: (N,d) with N % block_n == 0."""
+    n, d = x.shape
+    bn = choose_block_n(n) if block_n == 0 else block_n
+    assert n % bn == 0, f"N={n} not a multiple of block_n={bn}"
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _linreg_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+        ],
+        interpret=True,
+    )(theta, x, y)

@@ -1,0 +1,49 @@
+"""Tiled Pallas matmul — the MXU building block.
+
+C[M,N] = A[M,K] @ B[K,N] with a 3-D grid over (M/bm, N/bn, K/bk) tiles
+and accumulation in the revisited output block.  This is the canonical
+TPU schedule: each (i, j) output tile stays resident in VMEM while the
+K dimension streams through.
+
+Shapes must be multiples of the block sizes; ``model.py`` pads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Pallas tiled matmul.  a: (M,K), b: (K,N), all multiples of tiles."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not tileable by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

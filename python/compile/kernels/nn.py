@@ -1,0 +1,128 @@
+"""Fused forward+backward kernel for the paper's 1×30 sigmoid network.
+
+One pallas_call per worker computes, in a single streaming pass over X,
+the full manual backprop of
+
+    pred = σ(XW1 + b1) · w2 + b2,   loss = ½‖pred − y‖² + ½λ‖θ‖²
+
+emitting (gW1, gb1, gw2, gb2, loss).  All parameter-sized accumulators
+(d×h + 3h + 2 floats) stay resident in VMEM across the grid; only X/y
+row tiles stream.  Padded rows are masked (a zero row still produces
+pred = σ(b1)·w2 + b2 ≠ 0).
+
+jax.grad cannot differentiate through pallas_call, so the backward pass
+is written out by hand — matching ref.nn_grad exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DTYPE, choose_block_n
+
+
+def _sigmoid(z):
+    return 0.5 * (jnp.tanh(0.5 * z) + 1.0)
+
+
+def _nn_grad_kernel(w1_ref, b1_ref, w2_ref, b2_ref, x_ref, y_ref,
+                    mask_ref, lam_ref, wscale_ref,
+                    gw1_ref, gb1_ref, gw2_ref, gb2_ref, loss_ref):
+    i = pl.program_id(0)
+    steps = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gw1_ref[...] = jnp.zeros_like(gw1_ref)
+        gb1_ref[...] = jnp.zeros_like(gb1_ref)
+        gw2_ref[...] = jnp.zeros_like(gw2_ref)
+        gb2_ref[...] = jnp.zeros_like(gb2_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]  # (bn, d)
+    y = y_ref[...]  # (bn,)
+    mask = mask_ref[...]  # (bn,)
+    w1 = w1_ref[...]  # (d, h)
+    w2 = w2_ref[...]  # (h,)
+
+    # forward
+    z = _sigmoid(x @ w1 + b1_ref[...])  # (bn, h)
+    pred = z @ w2 + b2_ref[0]  # (bn,)
+    r = (pred - y) * mask  # (bn,) masked residual
+
+    # backward (manual)
+    gw2_ref[...] += r @ z  # zᵀr
+    gb2_ref[...] += jnp.sum(r)[None]
+    dz = r[:, None] * w2[None, :] * z * (1.0 - z)  # (bn, h)
+    gw1_ref[...] += x.T @ dz
+    gb1_ref[...] += jnp.sum(dz, axis=0)
+    loss_ref[...] += 0.5 * jnp.sum(r * r)[None]
+
+    @pl.when(i == steps - 1)
+    def _finalize():
+        # scale the accumulated data terms (wscale = 1/N_m gives the
+        # paper's mean-loss regime), then add the ℓ2 term once
+        ws = wscale_ref[0]
+        gw1_ref[...] *= ws
+        gb1_ref[...] *= ws
+        gw2_ref[...] *= ws
+        gb2_ref[...] *= ws
+        loss_ref[...] *= ws
+        lam = lam_ref[0]
+        gw1_ref[...] += lam * w1_ref[...]
+        gb1_ref[...] += lam * b1_ref[...]
+        gw2_ref[...] += lam * w2_ref[...]
+        gb2_ref[...] += lam * b2_ref[...]
+        sq = (jnp.sum(w1_ref[...] ** 2) + jnp.sum(b1_ref[...] ** 2)
+              + jnp.sum(w2_ref[...] ** 2) + jnp.sum(b2_ref[...] ** 2))
+        loss_ref[...] += 0.5 * lam * sq[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def nn_grad_loss(w1, b1, w2, b2, x, y, mask, lam, wscale=None,
+                 block_n: int = 0):
+    """Returns (gW1 (d,h), gb1 (h,), gw2 (h,), gb2 (1,), loss (1,)).
+
+    b2, lam, wscale are shape-(1,) arrays.  wscale multiplies the data
+    terms (1/N_m → mean loss, the paper's NN regime); defaults to 1.
+    x: (N,d), N % block_n == 0.
+    """
+    n, d = x.shape
+    h = w1.shape[1]
+    if wscale is None:
+        wscale = jnp.ones((1,), x.dtype)
+    bn = choose_block_n(n) if block_n == 0 else block_n
+    assert n % bn == 0, f"N={n} not a multiple of block_n={bn}"
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _nn_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, h), DTYPE),
+            jax.ShapeDtypeStruct((h,), DTYPE),
+            jax.ShapeDtypeStruct((h,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+            jax.ShapeDtypeStruct((1,), DTYPE),
+        ],
+        interpret=True,
+    )(w1, b1, w2, b2, x, y, mask, lam, wscale)

@@ -1,0 +1,136 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel and L2 graph.
+
+These are the *correctness ground truth*: pytest compares each Pallas
+kernel (interpret=True) and each composed model graph against the
+functions here with ``assert_allclose``. Keep these boring and obviously
+correct — no tiling, no fusion, just textbook math.
+
+Loss conventions (match the paper, Section IV):
+  linear regression    f_m(θ) = ½‖X θ − y‖²
+  logistic regression  f_m(θ) = Σ_n log(1 + exp(−y_n x_nᵀθ)) + ½ λ_m ‖θ‖²
+                       (labels y ∈ {−1, +1})
+  lasso                f_m(θ) = ½‖X θ − y‖² + λ_m ‖θ‖₁   (subgradient used)
+  neural network       1 hidden layer, H=30, sigmoid activation, linear
+                       output, ½ MSE loss + ½ λ_m ‖θ‖²; θ packs
+                       (W1[d,H], b1[H], w2[H], b2) row-major.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# elementary pieces
+# ---------------------------------------------------------------------------
+
+
+def sigmoid(z):
+    """Numerically-stable logistic function."""
+    return 0.5 * (jnp.tanh(0.5 * z) + 1.0)
+
+
+def log1pexp(z):
+    """log(1 + exp(z)) without overflow."""
+    return jnp.logaddexp(0.0, z)
+
+
+# ---------------------------------------------------------------------------
+# linear regression
+# ---------------------------------------------------------------------------
+
+
+def linreg_loss(theta, x, y):
+    r = x @ theta - y
+    return 0.5 * jnp.dot(r, r)
+
+
+def linreg_grad(theta, x, y):
+    """∇ ½‖Xθ − y‖² = Xᵀ(Xθ − y)."""
+    return x.T @ (x @ theta - y)
+
+
+# ---------------------------------------------------------------------------
+# (regularized) logistic regression
+# ---------------------------------------------------------------------------
+
+
+def logreg_loss(theta, x, y, lam):
+    margins = y * (x @ theta)
+    return jnp.sum(log1pexp(-margins)) + 0.5 * lam * jnp.dot(theta, theta)
+
+
+def logreg_grad(theta, x, y, lam):
+    """∇ Σ log(1+exp(−y xᵀθ)) + ½λ‖θ‖² = −Xᵀ(y·σ(−y Xθ)) + λθ."""
+    margins = y * (x @ theta)
+    coeff = -y * sigmoid(-margins)  # (N,)
+    return x.T @ coeff + lam * theta
+
+
+# ---------------------------------------------------------------------------
+# lasso (subgradient)
+# ---------------------------------------------------------------------------
+
+
+def lasso_loss(theta, x, y, lam):
+    r = x @ theta - y
+    return 0.5 * jnp.dot(r, r) + lam * jnp.sum(jnp.abs(theta))
+
+
+def lasso_subgrad(theta, x, y, lam):
+    """Subgradient Xᵀ(Xθ−y) + λ·sign(θ); sign(0) := 0."""
+    return x.T @ (x @ theta - y) + lam * jnp.sign(theta)
+
+
+# ---------------------------------------------------------------------------
+# 1-hidden-layer sigmoid network
+# ---------------------------------------------------------------------------
+
+
+def nn_unpack(theta, d, h):
+    """Split flat θ into (W1[d,h], b1[h], w2[h], b2)."""
+    i = 0
+    w1 = theta[i : i + d * h].reshape(d, h)
+    i += d * h
+    b1 = theta[i : i + h]
+    i += h
+    w2 = theta[i : i + h]
+    i += h
+    b2 = theta[i]
+    return w1, b1, w2, b2
+
+
+def nn_pack(w1, b1, w2, b2):
+    return jnp.concatenate([w1.reshape(-1), b1, w2, jnp.atleast_1d(b2)])
+
+
+def nn_dim(d, h=30):
+    """Flat parameter count for feature dim d and hidden width h."""
+    return d * h + h + h + 1
+
+
+def nn_forward(theta, x, d, h):
+    w1, b1, w2, b2 = nn_unpack(theta, d, h)
+    z = sigmoid(x @ w1 + b1)  # (N, h)
+    return z @ w2 + b2  # (N,)
+
+
+def nn_loss(theta, x, y, lam, h=30):
+    d = x.shape[1]
+    pred = nn_forward(theta, x, d, h)
+    r = pred - y
+    return 0.5 * jnp.dot(r, r) + 0.5 * lam * jnp.dot(theta, theta)
+
+
+def nn_grad(theta, x, y, lam, h=30):
+    """Manual backprop for the ½MSE + ½λ‖θ‖² objective."""
+    d = x.shape[1]
+    w1, b1, w2, b2 = nn_unpack(theta, d, h)
+    a = x @ w1 + b1  # (N, h) pre-activation
+    z = sigmoid(a)  # (N, h)
+    pred = z @ w2 + b2  # (N,)
+    r = pred - y  # (N,)
+    gw2 = z.T @ r  # (h,)
+    gb2 = jnp.sum(r)
+    dz = jnp.outer(r, w2) * z * (1.0 - z)  # (N, h)
+    gw1 = x.T @ dz  # (d, h)
+    gb1 = jnp.sum(dz, axis=0)  # (h,)
+    g = nn_pack(gw1, gb1, gw2, gb2)
+    return g + lam * theta

@@ -1,0 +1,104 @@
+"""L2 — per-worker compute graphs for the four paper tasks.
+
+Each task exposes one jax function mapping
+    (θ, X_m, y_m, …) → (∇f_m(θ), f_m(θ))
+built on the L1 Pallas kernels (kernels/*).  These are the graphs
+``aot.py`` lowers to HLO text; the rust coordinator executes one per
+worker per iteration, and Python never runs at that point.
+
+Shape protocol (mirrored by rust/src/data/mod.rs — keep in sync):
+  * N_m is padded up to a multiple of BLOCK_N with zero rows; logistic
+    and NN take an explicit {0,1} mask so padded rows are inert.
+  * d is the dataset's true feature count (no column padding).
+  * θ for the NN task is the flat (d·h + 2h + 1) parameter vector; the
+    unpack/pack is part of the lowered graph.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    lasso_grad_loss,
+    linreg_grad_loss,
+    logreg_grad_loss,
+    nn_grad_loss,
+)
+from .kernels.common import best_block_n, DEFAULT_BLOCK_N
+from .kernels import ref
+
+BLOCK_N = DEFAULT_BLOCK_N
+HIDDEN = 30  # paper: one hidden layer with 30 nodes
+
+TASKS = ("linreg", "logreg", "lasso", "nn")
+
+
+def padded_n(n: int) -> int:
+    """Rows after padding to the kernel row-tile."""
+    block = min(n, BLOCK_N)
+    return ((n + block - 1) // block) * block
+
+
+def nn_param_dim(d: int, h: int = HIDDEN) -> int:
+    return ref.nn_dim(d, h)
+
+
+# ---------------------------------------------------------------------------
+# task graphs
+# ---------------------------------------------------------------------------
+
+
+def linreg_worker(theta, x, y):
+    """(∇½‖Xθ−y‖², loss). x: (Np, d) zero-padded."""
+    bn = best_block_n(x.shape[0], x.shape[1])
+    return linreg_grad_loss(theta, x, y, block_n=bn)
+
+
+def logreg_worker(theta, x, y, mask, lam):
+    """ℓ2-regularized logistic gradient + loss. lam: (1,)."""
+    bn = best_block_n(x.shape[0], x.shape[1])
+    return logreg_grad_loss(theta, x, y, mask, lam, block_n=bn)
+
+
+def lasso_worker(theta, x, y, lam):
+    """Lasso subgradient + loss. lam: (1,)."""
+    bn = best_block_n(x.shape[0], x.shape[1])
+    return lasso_grad_loss(theta, x, y, lam, block_n=bn)
+
+
+def nn_worker(theta, x, y, mask, lam, wscale, h: int = HIDDEN):
+    """Flat-θ wrapper around the fused NN kernel.
+
+    Unpacks θ → (W1, b1, w2, b2), runs the fused fwd+bwd Pallas kernel,
+    and repacks the gradients into a flat vector so the coordinator only
+    ever sees ℝ^P vectors (same code path as every other task).
+    `wscale` = 1/N_m gives the paper's mean-loss NN regime.
+    """
+    d = x.shape[1]
+    w1, b1, w2, b2 = ref.nn_unpack(theta, d, h)
+    bn = best_block_n(x.shape[0], x.shape[1])
+    gw1, gb1, gw2, gb2, loss = nn_grad_loss(
+        w1, b1, w2, jnp.atleast_1d(b2), x, y, mask, lam, wscale, block_n=bn
+    )
+    grad = jnp.concatenate([gw1.reshape(-1), gb1, gw2, gb2])
+    return grad, loss
+
+
+# ---------------------------------------------------------------------------
+# registry used by aot.py
+# ---------------------------------------------------------------------------
+
+
+def worker_fn(task: str):
+    """Return (fn, needs_mask, needs_lam) for a task name."""
+    if task == "linreg":
+        return linreg_worker, False, False
+    if task == "logreg":
+        return logreg_worker, True, True
+    if task == "lasso":
+        return lasso_worker, False, True
+    if task == "nn":
+        return nn_worker, True, True
+    raise ValueError(f"unknown task {task!r} (want one of {TASKS})")
+
+
+def theta_dim(task: str, d: int) -> int:
+    return nn_param_dim(d) if task == "nn" else d

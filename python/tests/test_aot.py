@@ -1,0 +1,71 @@
+"""AOT lowering: manifest consistency and HLO-text well-formedness."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_per_worker_padded_matches_protocol():
+    # ijcnn1: ceil(49990/9) = 5555 → 5632
+    assert aot.per_worker_padded(49_990, 9) == 5632
+    # mnist: ceil(60000/9) = 6667 → 6912
+    assert aot.per_worker_padded(60_000, 9) == 6912
+    # small sets: no padding when n_m < block
+    assert aot.per_worker_padded(450, 9) == 50
+    assert aot.per_worker_padded(506, 3) == 169
+
+
+def test_dataset_table_covers_every_task():
+    tasks = set()
+    for _, (_, _, _, ts) in aot.DATASETS.items():
+        tasks.update(ts)
+    assert tasks == set(model.TASKS)
+
+
+def test_lower_artifact_produces_hlo_text_and_specs():
+    hlo, specs = aot.lower_artifact("linreg", 50, 8)
+    assert hlo.startswith("HloModule")
+    assert "f32[50,8]" in hlo
+    assert [s["name"] for s in specs] == ["theta", "x", "y"]
+    hlo, specs = aot.lower_artifact("nn", 50, 8)
+    names = [s["name"] for s in specs]
+    assert names == ["theta", "x", "y", "mask", "lam", "wscale"]
+    # flat θ dim: 8·30 + 61
+    assert specs[0]["shape"] == [8 * 30 + 61]
+
+
+def test_main_writes_manifest(tmp_path):
+    out = tmp_path / "arts"
+    rc = aot.main(["--out-dir", str(out), "--only", "synth",
+                   "--tasks", "linreg"])
+    assert rc == 0
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["block_n"] == model.BLOCK_N
+    (entry,) = manifest["artifacts"]
+    assert entry["name"] == "linreg_synth"
+    assert os.path.exists(out / entry["file"])
+    assert len(entry["sha256"]) == 64
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "..", "..", "artifacts",
+                                    "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_checked_in_manifest_is_consistent():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = json.loads(open(os.path.join(root, "manifest.json")).read())
+    names = set()
+    for a in manifest["artifacts"]:
+        assert a["name"] not in names, "duplicate artifact"
+        names.add(a["name"])
+        assert os.path.exists(os.path.join(root, a["file"])), a["file"]
+        spec = aot.DATASETS[a["dataset"]]
+        assert a["n_total"] == spec[0]
+        assert a["d"] == spec[1]
+        assert a["workers"] == spec[2]
+        assert a["n_pad"] == aot.per_worker_padded(spec[0], spec[2])

@@ -1,0 +1,238 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes, seeds, padding amounts, and block sizes;
+assert_allclose is the pass criterion (f32, so atol/rtol ~1e-4 relative
+to problem scale).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    lasso_grad_loss,
+    linreg_grad_loss,
+    logreg_grad_loss,
+    matmul,
+    nn_grad_loss,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _problem(seed, n, d, pad=0, labels="gauss"):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    if labels == "pm1":
+        y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    else:
+        y = rng.standard_normal(n).astype(np.float32)
+    theta = rng.standard_normal(d).astype(np.float32)
+    mask = np.ones(n, dtype=np.float32)
+    if pad:
+        x = np.vstack([x, np.zeros((pad, d), np.float32)])
+        y = np.concatenate([y, np.zeros(pad, np.float32)])
+        mask = np.concatenate([mask, np.zeros(pad, np.float32)])
+    return theta, x, y, mask
+
+
+def _block(n_total, frac_idx):
+    """Pick a block size that divides n_total."""
+    divisors = [b for b in range(1, n_total + 1) if n_total % b == 0]
+    return divisors[frac_idx % len(divisors)]
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31),
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 3),
+)
+def test_matmul_vs_jnp(seed, mi, ni, ki):
+    m, n, k = 32 * mi, 32 * ni, 32 * ki
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = matmul(jnp.asarray(a), jnp.asarray(b), bm=32, bn=32, bk=32)
+    assert_allclose(np.asarray(got), a @ b, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_rejects_untileable():
+    a = jnp.zeros((33, 32))
+    b = jnp.zeros((32, 32))
+    with pytest.raises(AssertionError):
+        matmul(a, b, bm=32, bn=32, bk=32)
+
+
+# ---------------------------------------------------------------------------
+# linreg
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31),
+    n=st.integers(2, 200),
+    d=st.integers(1, 64),
+    pad_blocks=st.integers(0, 2),
+)
+def test_linreg_kernel_vs_ref(seed, n, d, pad_blocks):
+    theta, x, y, _ = _problem(seed, n, d)
+    g_ref = np.asarray(ref.linreg_grad(theta, x, y))
+    l_ref = float(ref.linreg_loss(theta, x, y))
+    # pad to a multiple of some divisor-based block
+    bn = _block(n, seed % 7)
+    pad = pad_blocks * bn
+    xp = np.vstack([x, np.zeros((pad, d), np.float32)])
+    yp = np.concatenate([y, np.zeros(pad, np.float32)])
+    g, l = linreg_grad_loss(theta, xp, yp, block_n=bn)
+    scale = max(1.0, float(np.abs(g_ref).max()))
+    assert_allclose(np.asarray(g), g_ref, rtol=1e-4, atol=1e-4 * scale)
+    assert_allclose(float(l[0]), l_ref, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# logistic
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31),
+    n=st.integers(2, 200),
+    d=st.integers(1, 64),
+    pad_blocks=st.integers(0, 2),
+    lam=st.floats(0.0, 1.0),
+)
+def test_logreg_kernel_vs_ref(seed, n, d, pad_blocks, lam):
+    theta, x, y, _ = _problem(seed, n, d, labels="pm1")
+    g_ref = np.asarray(ref.logreg_grad(theta, x, y, lam))
+    l_ref = float(ref.logreg_loss(theta, x, y, lam))
+    bn = _block(n, seed % 7)
+    pad = pad_blocks * bn
+    xp = np.vstack([x, np.zeros((pad, d), np.float32)])
+    yp = np.concatenate([y, np.zeros(pad, np.float32)])
+    mask = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    g, l = logreg_grad_loss(
+        theta, xp, yp, mask, np.float32([lam]), block_n=bn
+    )
+    assert_allclose(np.asarray(g), g_ref, rtol=1e-4, atol=1e-4)
+    assert_allclose(float(l[0]), l_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_logreg_padding_changes_nothing():
+    """The mask must make padded and unpadded results identical."""
+    theta, x, y, _ = _problem(0, 64, 8, labels="pm1")
+    lam = np.float32([0.01])
+    mask = np.ones(64, np.float32)
+    g0, l0 = logreg_grad_loss(theta, x, y, mask, lam, block_n=64)
+    xp = np.vstack([x, np.zeros((64, 8), np.float32)])
+    yp = np.concatenate([y, np.zeros(64, np.float32)])
+    mp = np.concatenate([mask, np.zeros(64, np.float32)])
+    g1, l1 = logreg_grad_loss(theta, xp, yp, mp, lam, block_n=64)
+    assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-6)
+    assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lasso
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31),
+    n=st.integers(2, 200),
+    d=st.integers(1, 64),
+    lam=st.floats(0.0, 2.0),
+)
+def test_lasso_kernel_vs_ref(seed, n, d, lam):
+    theta, x, y, _ = _problem(seed, n, d)
+    g_ref = np.asarray(ref.lasso_subgrad(theta, x, y, lam))
+    l_ref = float(ref.lasso_loss(theta, x, y, lam))
+    bn = _block(n, seed % 5)
+    g, l = lasso_grad_loss(theta, x, y, np.float32([lam]), block_n=bn)
+    scale = max(1.0, float(np.abs(g_ref).max()))
+    assert_allclose(np.asarray(g), g_ref, rtol=1e-4, atol=1e-4 * scale)
+    assert_allclose(float(l[0]), l_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_lasso_sign_zero_is_zero():
+    """sign(0) must contribute no subgradient."""
+    d = 4
+    theta = np.zeros(d, np.float32)
+    x = np.zeros((8, d), np.float32)
+    y = np.zeros(8, np.float32)
+    g, l = lasso_grad_loss(theta, x, y, np.float32([5.0]), block_n=8)
+    assert_allclose(np.asarray(g), np.zeros(d), atol=0)
+    assert float(l[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# neural network
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31),
+    n=st.integers(2, 120),
+    d=st.integers(1, 32),
+    h=st.integers(1, 30),
+    pad_blocks=st.integers(0, 1),
+    lam=st.floats(0.0, 0.1),
+)
+def test_nn_kernel_vs_ref(seed, n, d, h, pad_blocks, lam):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    theta = (0.5 * rng.standard_normal(ref.nn_dim(d, h))).astype(np.float32)
+    g_ref = np.asarray(ref.nn_grad(theta, x, y, lam, h=h))
+    l_ref = float(ref.nn_loss(theta, x, y, lam, h=h))
+
+    w1, b1, w2, b2 = ref.nn_unpack(jnp.asarray(theta), d, h)
+    bn = _block(n, seed % 5)
+    pad = pad_blocks * bn
+    xp = np.vstack([x, np.zeros((pad, d), np.float32)])
+    yp = np.concatenate([y, np.zeros(pad, np.float32)])
+    mask = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    gw1, gb1, gw2, gb2, loss = nn_grad_loss(
+        w1, b1, w2, np.float32([float(b2)]), xp, yp, mask,
+        np.float32([lam]), block_n=bn,
+    )
+    got = np.concatenate(
+        [np.asarray(gw1).reshape(-1), np.asarray(gb1), np.asarray(gw2),
+         np.asarray(gb2)]
+    )
+    scale = max(1.0, float(np.abs(g_ref).max()))
+    assert_allclose(got, g_ref, rtol=5e-4, atol=5e-4 * scale)
+    assert_allclose(float(loss[0]), l_ref, rtol=5e-4, atol=1e-3)
+
+
+def test_nn_mask_blocks_padded_rows():
+    """Without the mask, padded rows would push σ(b1)·w2+b2 into the grad."""
+    d, h, n = 3, 5, 16
+    rng = np.random.default_rng(1)
+    theta = rng.standard_normal(ref.nn_dim(d, h)).astype(np.float32)
+    w1, b1, w2, b2 = ref.nn_unpack(jnp.asarray(theta), d, h)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    ones = np.ones(n, np.float32)
+    base = nn_grad_loss(w1, b1, w2, np.float32([float(b2)]), x, y, ones,
+                        np.float32([0.0]), block_n=16)
+    xp = np.vstack([x, np.zeros((16, d), np.float32)])
+    yp = np.concatenate([y, np.zeros(16, np.float32)])
+    mp = np.concatenate([ones, np.zeros(16, np.float32)])
+    padded = nn_grad_loss(w1, b1, w2, np.float32([float(b2)]), xp, yp, mp,
+                          np.float32([0.0]), block_n=16)
+    for a, b in zip(base, padded):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

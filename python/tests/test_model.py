@@ -1,0 +1,90 @@
+"""L2 model graphs: shapes, composition, and agreement with ref.py."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def _worker_data(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    mask = np.ones(n, np.float32)
+    return x, y, mask
+
+
+@pytest.mark.parametrize("task", model.TASKS)
+def test_worker_fn_signature_and_shapes(task):
+    fn, needs_mask, needs_lam = model.worker_fn(task)
+    n, d = 64, 10
+    x, y, mask = _worker_data(0, n, d)
+    p = model.theta_dim(task, d)
+    theta = (0.1 * np.arange(p, dtype=np.float32) % 1.0) - 0.5
+    args = [theta, x, y]
+    if needs_mask:
+        args.append(mask)
+    if needs_lam:
+        args.append(np.float32([0.01]))
+    if task == "nn":
+        args.append(np.float32([1.0 / n]))
+    grad, loss = fn(*args)
+    assert grad.shape == (p,)
+    assert loss.shape == (1,)
+    assert np.isfinite(np.asarray(grad)).all()
+    assert np.isfinite(float(loss[0]))
+
+
+def test_linreg_model_matches_ref():
+    x, y, _ = _worker_data(1, 50, 8)
+    theta = np.linspace(-1, 1, 8, dtype=np.float32)
+    grad, loss = model.linreg_worker(theta, x, y)
+    assert_allclose(
+        np.asarray(grad), np.asarray(ref.linreg_grad(theta, x, y)),
+        rtol=1e-4, atol=1e-3,
+    )
+    assert_allclose(float(loss[0]), float(ref.linreg_loss(theta, x, y)),
+                    rtol=1e-4)
+
+
+def test_nn_model_flat_theta_round_trip():
+    """nn_worker must unpack/pack exactly like ref.nn_grad (sum mode)."""
+    n, d, h = 32, 6, model.HIDDEN
+    x, y, mask = _worker_data(2, n, d)
+    rng = np.random.default_rng(3)
+    theta = (0.3 * rng.standard_normal(model.nn_param_dim(d))).astype(
+        np.float32
+    )
+    lam = np.float32([0.01])
+    grad, loss = model.nn_worker(theta, x, y, mask, lam, np.float32([1.0]))
+    g_ref = np.asarray(ref.nn_grad(theta, x, y, 0.01, h=h))
+    scale = max(1.0, float(np.abs(g_ref).max()))
+    assert_allclose(np.asarray(grad), g_ref, rtol=5e-4, atol=5e-4 * scale)
+    assert_allclose(float(loss[0]), float(ref.nn_loss(theta, x, y, 0.01, h=h)),
+                    rtol=5e-4)
+
+
+def test_nn_wscale_scales_data_terms_only():
+    n, d = 16, 4
+    x, y, mask = _worker_data(4, n, d)
+    rng = np.random.default_rng(5)
+    theta = (0.3 * rng.standard_normal(model.nn_param_dim(d))).astype(
+        np.float32
+    )
+    lam = np.float32([0.0])  # isolate the data term
+    g1, l1 = model.nn_worker(theta, x, y, mask, lam, np.float32([1.0]))
+    g2, l2 = model.nn_worker(theta, x, y, mask, lam, np.float32([0.25]))
+    assert_allclose(np.asarray(g2), 0.25 * np.asarray(g1), rtol=1e-5)
+    assert_allclose(float(l2[0]), 0.25 * float(l1[0]), rtol=1e-5)
+
+
+def test_padded_n_protocol():
+    # mirrors rust data::padded_n tests — keep the two in sync
+    assert model.padded_n(50) == 50
+    assert model.padded_n(5555) == 5632
+    assert model.padded_n(6667) == 6912
+    assert model.padded_n(256) == 256
+    assert model.padded_n(257) == 512

@@ -1,0 +1,64 @@
+//! `cargo bench --bench backends` — gradient-backend latency:
+//! pure-rust f64 vs PJRT (AOT Pallas artifact), per worker call.
+//!
+//! This is the L1/L2-vs-L3 boundary measurement in EXPERIMENTS.md
+//! §Perf: how much does routing the worker gradient through the XLA
+//! executable cost relative to the in-process implementation, and
+//! where is the break-even shape.
+
+use std::path::Path;
+
+use chb_fed::bench::{black_box, header, Bencher};
+use chb_fed::coordinator::GradientBackend;
+use chb_fed::data::{partition, registry};
+use chb_fed::runtime::PjrtRuntime;
+use chb_fed::tasks::{self, TaskKind};
+
+fn main() {
+    header("backends");
+    let b = Bencher::default();
+    let Ok(mut rt) = PjrtRuntime::new(Path::new("artifacts")) else {
+        println!("(artifacts missing — run `make artifacts`; rust-only run)");
+        bench_rust_only(&b);
+        return;
+    };
+    println!("PJRT platform: {}", rt.platform());
+
+    for (task, dataset) in [
+        (TaskKind::LinReg, "synth"),
+        (TaskKind::LogReg, "synth"),
+        (TaskKind::LinReg, "ijcnn1"),
+        (TaskKind::Nn, "ijcnn1"),
+    ] {
+        let spec = registry::spec(dataset).unwrap();
+        let ds = registry::load(dataset, Path::new("data")).unwrap();
+        let shards = partition::split_even(&ds, spec.workers);
+        let shard = &shards[0];
+        let lam = 0.001 / spec.workers as f64;
+
+        let obj = tasks::build_objective(task, shard, lam);
+        let dim = obj.dim();
+        let theta: Vec<f64> = (0..dim).map(|i| (i % 5) as f64 * 0.01).collect();
+        let mut grad = vec![0.0; dim];
+        b.run(&format!("rust {} {dataset}", task.name()), |_| {
+            black_box(obj.grad_loss_into(black_box(&theta), &mut grad));
+        });
+
+        let meta = rt.manifest().find(task, dataset).unwrap().clone();
+        let mut pjrt = rt.worker_backend(&meta, shard, lam).unwrap();
+        b.run(&format!("pjrt {} {dataset}", task.name()), |_| {
+            black_box(pjrt.grad_loss_into(black_box(&theta), &mut grad));
+        });
+    }
+}
+
+fn bench_rust_only(b: &Bencher) {
+    let ds = registry::load("synth", Path::new("data")).unwrap();
+    let shards = partition::split_even(&ds, 9);
+    let obj = tasks::build_objective(TaskKind::LinReg, &shards[0], 0.0);
+    let theta = vec![0.01; obj.dim()];
+    let mut grad = vec![0.0; obj.dim()];
+    b.run("rust linreg synth", |_| {
+        black_box(obj.grad_loss_into(black_box(&theta), &mut grad));
+    });
+}

@@ -1,0 +1,99 @@
+//! `cargo bench --bench hotpath` — the L3 §Perf microbenches.
+//!
+//! Measures the per-round cost components on the two shapes that
+//! matter (d = 50 synthetic; d = 784 MNIST-class) so EXPERIMENTS.md
+//! §Perf can separate coordinator overhead from gradient compute.
+
+use chb_fed::bench::{black_box, header, Bencher};
+use chb_fed::coordinator::{run_serial, RunConfig, Server, Worker};
+use chb_fed::data::partition::shard_whole;
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::linalg::{self, Matrix};
+use chb_fed::optim::{GradDiffCensor, Method, MethodParams};
+use chb_fed::rng::Xoshiro256;
+use chb_fed::tasks::{build_objective, TaskKind};
+
+fn main() {
+    header("hotpath");
+    let micro = Bencher::micro();
+    let std = Bencher::default();
+
+    // -- linalg primitives ------------------------------------------------
+    let mut rng = Xoshiro256::new(1);
+    for d in [50usize, 784] {
+        let x = rng.gaussian_vec(d);
+        let y = rng.gaussian_vec(d);
+        micro.run(&format!("dot d={d}"), |_| {
+            black_box(linalg::dot(black_box(&x), black_box(&y)));
+        });
+    }
+    for (n, d) in [(50usize, 50usize), (768, 784)] {
+        let mut m = Matrix::zeros(n, d);
+        for v in &mut m.data {
+            *v = rng.next_gaussian();
+        }
+        let theta = rng.gaussian_vec(d);
+        let mut out = vec![0.0; n];
+        let mut g = vec![0.0; d];
+        micro.run(&format!("gemv {n}x{d}"), |_| {
+            m.gemv(black_box(&theta), &mut out);
+        });
+        micro.run(&format!("gemv_t {n}x{d}"), |_| {
+            m.gemv_t_into(black_box(&out), &mut g);
+        });
+    }
+
+    // -- worker round (gradient + censor decision) ------------------------
+    for (name, n, d) in [("synth", 50usize, 50usize), ("mnist-class", 768, 784)] {
+        let mut r = Xoshiro256::new(7);
+        let ds = synthetic::gaussian_pm1(&mut r, n, d);
+        let shard = shard_whole(&ds);
+        let obj = build_objective(TaskKind::LinReg, &shard, 0.0);
+        let mut worker = Worker::new(
+            0,
+            Box::new(chb_fed::coordinator::RustBackend::new(obj)),
+        );
+        let censor = GradDiffCensor { epsilon1: 1.0 };
+        let theta = r.gaussian_vec(d);
+        std.run(&format!("worker round linreg {name}"), |k| {
+            black_box(worker.round(black_box(&theta), 1.0, &censor, k + 1));
+        });
+    }
+
+    // -- server fold (aggregate + update), d = 784 ------------------------
+    {
+        let d = 784;
+        let params = MethodParams::new(1e-3).with_beta(0.4);
+        let mut server = Server::new(Method::Chb, &params, vec![0.0; d]);
+        let mut r = Xoshiro256::new(9);
+        let rounds: Vec<_> = (0..9)
+            .map(|w| chb_fed::coordinator::WorkerRound {
+                worker: w,
+                decision: chb_fed::optim::CensorDecision::Transmit,
+                delta: r.gaussian_vec(d),
+                loss: 1.0,
+                delta_sq: 1.0,
+                bits: 64 * d as u64,
+            })
+            .collect();
+        std.run("server fold M=9 d=784", |_| {
+            black_box(server.apply_round(black_box(&rounds)));
+        });
+    }
+
+    // -- end-to-end rounds ------------------------------------------------
+    let problem = {
+        let l_m = synthetic::increasing_l(9);
+        let per_worker = synthetic::per_worker_rescaled(3, 9, 50, 50, &l_m);
+        Problem::from_worker_datasets(TaskKind::LinReg, "synth", &per_worker, 0.0)
+    };
+    let params = MethodParams::new(1.0 / problem.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, 9);
+    std.run("100 CHB rounds M=9 d=50 (serial)", |_| {
+        let cfg = RunConfig::new(Method::Chb, params, 100);
+        let mut ws = problem.rust_workers();
+        black_box(run_serial(&mut ws, &cfg, problem.theta0()));
+    });
+}

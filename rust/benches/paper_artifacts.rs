@@ -1,0 +1,47 @@
+//! `cargo bench --bench paper_artifacts` — regenerates every paper
+//! table and figure end-to-end and reports wall-clock per artifact.
+//!
+//! One bench per DESIGN.md §5 row.  Uses the quick profile unless
+//! CHB_FULL=1 (paper-scale budgets).  Results land in
+//! `results-bench/` so a bench run leaves the same CSVs as
+//! `chb-fed exp all`.
+
+use std::path::Path;
+
+use chb_fed::bench::{header, Bencher};
+use chb_fed::experiments::{ablations, figures, tables};
+
+fn main() {
+    header("paper_artifacts");
+    let out = Path::new("results-bench");
+    let data = Path::new("data");
+    let quick = std::env::var("CHB_FULL").map_or(true, |v| v != "1");
+    let b = Bencher { warmup_iters: 0, samples: 1, iters_per_sample: 1 };
+
+    macro_rules! art {
+        ($name:literal, $f:expr) => {
+            b.run($name, |_| {
+                $f(out, data, quick).expect(concat!($name, " failed"));
+            });
+        };
+    }
+
+    art!("bench_fig1", figures::fig1);
+    art!("bench_fig2", figures::fig2);
+    art!("bench_fig3", figures::fig3);
+    art!("bench_fig4", figures::fig4);
+    art!("bench_fig5", figures::fig5);
+    art!("bench_fig6", figures::fig6);
+    art!("bench_fig7", figures::fig7);
+    art!("bench_fig8", figures::fig8);
+    art!("bench_fig9", figures::fig9);
+    art!("bench_fig10", figures::fig10);
+    art!("bench_fig11", figures::fig11);
+    art!("bench_fig12", figures::fig12);
+    art!("bench_table1", tables::table1);
+    art!("bench_table2", tables::table2);
+    art!("bench_table3", tables::table3);
+    b.run("bench_ablations", |_| {
+        ablations::all(out, quick).expect("ablations failed");
+    });
+}

@@ -1,0 +1,150 @@
+//! Statistical micro/macro-benchmark harness (criterion is not on
+//! this image).  Used by every `benches/*.rs` target (`harness =
+//! false` in Cargo.toml) and by the §Perf pass.
+//!
+//! Method: warmup, then timed samples; report median and MAD with
+//! simple outlier rejection.  Deterministic sample counts so repeated
+//! `cargo bench` runs are comparable.
+
+use std::time::Instant;
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    /// per-iteration time, seconds
+    pub median: f64,
+    /// median absolute deviation
+    pub mad: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{:>10}, n={}, min {}, max {})",
+            self.name,
+            crate::util::timer::fmt_duration(self.median),
+            crate::util::timer::fmt_duration(self.mad),
+            self.samples,
+            crate::util::timer::fmt_duration(self.min),
+            crate::util::timer::fmt_duration(self.max),
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// iterations per timed sample (amortizes clock overhead)
+    pub iters_per_sample: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 3, samples: 15, iters_per_sample: 1 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, samples: 5, iters_per_sample: 1 }
+    }
+
+    /// For sub-millisecond bodies: batch many iters per sample.
+    pub fn micro() -> Self {
+        Self { warmup_iters: 10, samples: 25, iters_per_sample: 100 }
+    }
+
+    /// Run `f` and report per-iteration stats.  `f` takes the
+    /// iteration index (so stateful bodies can reset / vary).
+    pub fn run<F: FnMut(usize)>(&self, name: &str, mut f: F) -> BenchResult {
+        for i in 0..self.warmup_iters * self.iters_per_sample {
+            f(i);
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        let mut idx = 0usize;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                f(idx);
+                idx += 1;
+            }
+            times.push(
+                t0.elapsed().as_secs_f64() / self.iters_per_sample as f64,
+            );
+        }
+        let result = summarize(name, &mut times);
+        println!("{}", result.report());
+        result
+    }
+}
+
+fn summarize(name: &str, times: &mut [f64]) -> BenchResult {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = percentile_sorted(times, 0.5);
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = percentile_sorted(&devs, 0.5);
+    BenchResult {
+        name: name.to_string(),
+        samples: times.len(),
+        median,
+        mad,
+        min: times[0],
+        max: times[times.len() - 1],
+    }
+}
+
+fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print the standard bench header (called by each bench target).
+pub fn header(target: &str) {
+    println!("== bench: {target} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_mad_of_known_samples() {
+        let mut t = vec![3.0, 1.0, 2.0, 100.0, 2.5];
+        let r = summarize("x", &mut t);
+        assert_eq!(r.median, 2.5);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 100.0);
+        // devs from 2.5: [1.5, 0.5, 0, 97.5, 0] sorted → median 0.5
+        assert_eq!(r.mad, 0.5);
+    }
+
+    #[test]
+    fn bencher_runs_expected_iterations() {
+        let b = Bencher { warmup_iters: 2, samples: 3, iters_per_sample: 4 };
+        let mut count = 0usize;
+        b.run("count", |_| count += 1);
+        assert_eq!(count, 2 * 4 + 3 * 4);
+    }
+
+    #[test]
+    fn percentile_degenerate() {
+        assert!(percentile_sorted(&[], 0.5).is_nan());
+        assert_eq!(percentile_sorted(&[7.0], 0.5), 7.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Uplink compression — the composition the paper's conclusion calls
+//! out: "CHB … can potentially be applied along with other
+//! complementary techniques such as quantization, compression, and
+//! gradient sparsification, to make CHB more efficient in terms of
+//! bandwidth per communication as well as the number of
+//! communications."
+//!
+//! A [`Compressor`] maps the uplink payload δ∇ to a (decoded-value,
+//! bit-count) pair.  The engine keeps eq. (5) consistent by having
+//! the worker advance its θ̂ bookkeeping with the *decoded* delta —
+//! the server and worker always agree on Σ transmitted deltas, so the
+//! aggregate still telescopes exactly (the compression error shows up
+//! as gradient staleness, not divergence; property-tested).
+
+use crate::linalg;
+
+/// A compressed uplink payload.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    /// the values the server will fold (decoder output)
+    pub decoded: Vec<f64>,
+    /// simulated wire size
+    pub bits: u64,
+}
+
+/// Lossy uplink codec.
+pub trait Compressor: Send + Sync {
+    fn compress(&self, delta: &[f64]) -> Compressed;
+    fn name(&self) -> &'static str;
+}
+
+/// Identity codec: full-precision f64 payload.
+pub struct NoCompression;
+
+impl Compressor for NoCompression {
+    fn compress(&self, delta: &[f64]) -> Compressed {
+        Compressed { decoded: delta.to_vec(), bits: 64 * delta.len() as u64 }
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}
+
+/// Uniform symmetric quantizer: `bits`-bit signed levels scaled by
+/// max|δ|, plus one f32 scale on the wire.
+pub struct UniformQuantizer {
+    pub bits: u32,
+}
+
+impl Compressor for UniformQuantizer {
+    fn compress(&self, delta: &[f64]) -> Compressed {
+        assert!((2..=32).contains(&self.bits), "need 2..=32 bits");
+        let maxabs = delta.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if maxabs == 0.0 {
+            return Compressed { decoded: vec![0.0; delta.len()], bits: 32 };
+        }
+        let levels = ((1u64 << (self.bits - 1)) - 1) as f64;
+        let scale = maxabs / levels;
+        let decoded = delta
+            .iter()
+            .map(|v| (v / scale).round().clamp(-levels, levels) * scale)
+            .collect();
+        Compressed {
+            decoded,
+            bits: 32 + u64::from(self.bits) * delta.len() as u64,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform-quant"
+    }
+}
+
+/// Top-k magnitude sparsifier: k values + k indices on the wire.
+pub struct TopK {
+    pub k: usize,
+}
+
+impl Compressor for TopK {
+    fn compress(&self, delta: &[f64]) -> Compressed {
+        let d = delta.len();
+        let k = self.k.min(d);
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.sort_by(|&a, &b| {
+            delta[b].abs().partial_cmp(&delta[a].abs()).unwrap()
+        });
+        let mut decoded = vec![0.0; d];
+        for &i in idx.iter().take(k) {
+            decoded[i] = delta[i];
+        }
+        // 32-bit index + f32 value per kept coordinate
+        Compressed { decoded, bits: (64 * k) as u64 }
+    }
+
+    fn name(&self) -> &'static str {
+        "top-k"
+    }
+}
+
+/// Relative ℓ2 error of a codec on a vector (diagnostics/tests).
+pub fn relative_error(c: &dyn Compressor, v: &[f64]) -> f64 {
+    let out = c.compress(v);
+    let mut diff = 0.0;
+    for (a, b) in v.iter().zip(&out.decoded) {
+        diff += (a - b) * (a - b);
+    }
+    (diff / linalg::norm2_sq(v).max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f64> {
+        (0..n).map(|i| (i as f64 - n as f64 / 2.0) * 0.37).collect()
+    }
+
+    #[test]
+    fn identity_codec_is_lossless() {
+        let v = ramp(33);
+        let c = NoCompression.compress(&v);
+        assert_eq!(c.decoded, v);
+        assert_eq!(c.bits, 64 * 33);
+    }
+
+    #[test]
+    fn quantizer_error_shrinks_with_bits() {
+        let v = ramp(101);
+        let e4 = relative_error(&UniformQuantizer { bits: 4 }, &v);
+        let e8 = relative_error(&UniformQuantizer { bits: 8 }, &v);
+        let e16 = relative_error(&UniformQuantizer { bits: 16 }, &v);
+        assert!(e4 > e8 && e8 > e16, "{e4} {e8} {e16}");
+        assert!(e16 < 1e-3);
+        // bit accounting
+        assert_eq!(
+            UniformQuantizer { bits: 8 }.compress(&v).bits,
+            32 + 8 * 101
+        );
+    }
+
+    #[test]
+    fn quantizer_handles_zero_and_preserves_max() {
+        let q = UniformQuantizer { bits: 8 };
+        let z = q.compress(&[0.0; 5]);
+        assert_eq!(z.decoded, vec![0.0; 5]);
+        let v = vec![-3.0, 0.5, 3.0];
+        let out = q.compress(&v);
+        // endpoints land exactly on the extreme levels
+        assert!((out.decoded[0] + 3.0).abs() < 1e-12);
+        assert!((out.decoded[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let v = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let out = TopK { k: 2 }.compress(&v);
+        assert_eq!(out.decoded, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+        assert_eq!(out.bits, 128);
+        // k ≥ d is lossless
+        let all = TopK { k: 99 }.compress(&v);
+        assert_eq!(all.decoded, v);
+    }
+}

@@ -1,0 +1,433 @@
+//! Round engines: serial (deterministic reference) and threaded
+//! (one OS thread per worker, the deployment-shaped path).
+//!
+//! Both engines run the identical protocol and produce identical
+//! traces — `tests/engine_equivalence.rs` pins this.  The serial
+//! engine is what the experiment sweeps use (no thread overhead at
+//! d = 50); the threaded engine is what `chb-fed run --engine
+//! threaded` and the e2e example use.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::metrics::{IterStat, Trace};
+use crate::net::{Direction, SimNetwork};
+use crate::optim::{self, CensorDecision, Method, MethodParams};
+
+use super::protocol::{broadcast_bytes, Downlink, Uplink};
+use super::server::Server;
+use super::worker::Worker;
+
+/// When to stop a run (checked after every iteration).
+#[derive(Clone, Copy, Debug)]
+pub enum StopRule {
+    /// run exactly `max_iters`
+    MaxIters,
+    /// stop once f(θᵏ) − f* < tol (the Tables I/II protocol)
+    ObjErrBelow { f_star: f64, tol: f64 },
+    /// stop once ‖∇ᵏ‖² < tol (nonconvex runs)
+    AggGradBelow { tol: f64 },
+}
+
+/// Full description of one run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub method: Method,
+    pub params: MethodParams,
+    pub max_iters: usize,
+    pub stop: StopRule,
+    /// record the O(K·M) per-worker transmit map (Fig. 1)
+    pub record_comm_map: bool,
+    /// uplink drop probability (failure injection; 0 = paper setting)
+    pub drop_prob: f64,
+    pub drop_seed: u64,
+}
+
+impl RunConfig {
+    pub fn new(method: Method, params: MethodParams, max_iters: usize) -> Self {
+        Self {
+            method,
+            params,
+            max_iters,
+            stop: StopRule::MaxIters,
+            record_comm_map: false,
+            drop_prob: 0.0,
+            drop_seed: 0,
+        }
+    }
+
+    pub fn with_stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn with_comm_map(mut self) -> Self {
+        self.record_comm_map = true;
+        self
+    }
+
+    pub fn with_drops(mut self, prob: f64, seed: u64) -> Self {
+        self.drop_prob = prob;
+        self.drop_seed = seed;
+        self
+    }
+
+    fn should_stop(&self, stat: &IterStat) -> bool {
+        match self.stop {
+            StopRule::MaxIters => false,
+            StopRule::ObjErrBelow { f_star, tol } => stat.loss - f_star < tol,
+            StopRule::AggGradBelow { tol } => stat.agg_grad_sq < tol,
+        }
+    }
+}
+
+/// Shared per-iteration bookkeeping for both engines.
+fn fold_round(
+    server: &mut Server,
+    net: &mut SimNetwork,
+    cfg: &RunConfig,
+    rounds: &mut Vec<super::worker::WorkerRound>,
+    trace: &mut Trace,
+) -> IterStat {
+    let dim = server.dim();
+    // network accounting + failure injection; payload size comes from
+    // the worker (compression-aware), +8 B worker-id framing
+    let mut up_bytes = Vec::with_capacity(rounds.len());
+    for r in rounds.iter_mut() {
+        if r.decision == CensorDecision::Transmit {
+            let nbytes = r.bits.div_ceil(8) + 8;
+            let delivered = net.send(Direction::Up, r.worker, nbytes);
+            up_bytes.push(nbytes);
+            if !delivered {
+                // dropped uplink: the worker believes it transmitted
+                // (its θ̂_m advanced) but the server never folds the
+                // delta — eq. (5) simply carries the stale term.
+                r.decision = CensorDecision::Skip;
+                r.delta.clear();
+            }
+        }
+    }
+    net.advance_round(broadcast_bytes(dim), &up_bytes);
+
+    if cfg.record_comm_map {
+        let mut row = vec![false; rounds.len()];
+        for r in rounds.iter() {
+            row[r.worker] = r.decision == CensorDecision::Transmit;
+        }
+        trace.comm_map.push(row);
+    }
+
+    let bits_round: u64 = rounds
+        .iter()
+        .filter(|r| r.decision == CensorDecision::Transmit)
+        .map(|r| r.bits)
+        .sum();
+    let out = server.apply_round(rounds);
+    let prev = trace.iters.last();
+    IterStat {
+        k: out.k,
+        loss: out.loss,
+        comms_round: out.transmitted,
+        comms_cum: prev.map_or(0, |s| s.comms_cum) + out.transmitted,
+        agg_grad_sq: out.agg_grad_sq,
+        step_sq: out.step_sq,
+        bits_cum: prev.map_or(0, |s| s.bits_cum) + bits_round,
+    }
+}
+
+/// Deterministic single-threaded engine.
+pub fn run_serial(
+    workers: &mut [Worker],
+    cfg: &RunConfig,
+    theta0: Vec<f64>,
+) -> Trace {
+    let censor = optim::method::build_censor_rule(cfg.method, &cfg.params);
+    let mut server = Server::new(cfg.method, &cfg.params, theta0);
+    let mut net =
+        SimNetwork::new(workers.len()).with_drops(cfg.drop_prob, cfg.drop_seed);
+    let mut trace = Trace::new(cfg.method.name());
+    let dim = server.dim();
+
+    for k in 1..=cfg.max_iters {
+        let step_sq = server.theta_step_sq();
+        let theta = server.theta.clone();
+        let mut rounds = Vec::with_capacity(workers.len());
+        for w in workers.iter_mut() {
+            net.send(Direction::Down, w.id, broadcast_bytes(dim));
+            rounds.push(w.round(&theta, step_sq, censor.as_ref(), k));
+        }
+        let stat = fold_round(&mut server, &mut net, cfg, &mut rounds, &mut trace);
+        let stop = cfg.should_stop(&stat);
+        trace.iters.push(stat);
+        if stop {
+            break;
+        }
+    }
+    trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
+    trace
+}
+
+/// Threaded engine: each worker runs on its own OS thread, speaking
+/// the `protocol::Downlink`/`Uplink` channel protocol with the server
+/// loop on the calling thread.
+pub fn run_threaded(
+    workers: Vec<Worker>,
+    cfg: &RunConfig,
+    theta0: Vec<f64>,
+) -> Trace {
+    let m = workers.len();
+    let censor: Arc<dyn crate::optim::CensorRule> = Arc::from(
+        optim::method::build_censor_rule(cfg.method, &cfg.params),
+    );
+    let mut server = Server::new(cfg.method, &cfg.params, theta0);
+    let mut net =
+        SimNetwork::new(m).with_drops(cfg.drop_prob, cfg.drop_seed);
+    let mut trace = Trace::new(cfg.method.name());
+    let dim = server.dim();
+
+    // spawn workers
+    let (up_tx, up_rx) = mpsc::channel::<Uplink>();
+    let mut down_txs = Vec::with_capacity(m);
+    let mut handles = Vec::with_capacity(m);
+    for mut w in workers {
+        let (down_tx, down_rx) = mpsc::channel::<Downlink>();
+        let up = up_tx.clone();
+        let censor = Arc::clone(&censor);
+        handles.push(std::thread::spawn(move || {
+            while let Ok(msg) = down_rx.recv() {
+                match msg {
+                    Downlink::Broadcast { k, theta, step_sq } => {
+                        let round =
+                            w.round(&theta, step_sq, censor.as_ref(), k);
+                        if up.send(Uplink { round }).is_err() {
+                            break;
+                        }
+                    }
+                    Downlink::Stop => break,
+                }
+            }
+            w // hand the worker back for per-worker stats
+        }));
+        down_txs.push(down_tx);
+    }
+    drop(up_tx);
+
+    for k in 1..=cfg.max_iters {
+        let step_sq = server.theta_step_sq();
+        let theta = Arc::new(server.theta.clone());
+        for (id, tx) in down_txs.iter().enumerate() {
+            net.send(Direction::Down, id, broadcast_bytes(dim));
+            tx.send(Downlink::Broadcast { k, theta: Arc::clone(&theta), step_sq })
+                .expect("worker thread died");
+        }
+        // collect all M reports, then order by worker id so the fold
+        // (and its f64 sums) is deterministic
+        let mut rounds: Vec<Option<super::worker::WorkerRound>> =
+            (0..m).map(|_| None).collect();
+        for _ in 0..m {
+            let up = up_rx.recv().expect("worker thread died");
+            let id = up.round.worker;
+            rounds[id] = Some(up.round);
+        }
+        let mut rounds: Vec<_> =
+            rounds.into_iter().map(|r| r.expect("missing worker")).collect();
+        let stat = fold_round(&mut server, &mut net, cfg, &mut rounds, &mut trace);
+        let stop = cfg.should_stop(&stat);
+        trace.iters.push(stat);
+        if stop {
+            break;
+        }
+    }
+    for tx in &down_txs {
+        let _ = tx.send(Downlink::Stop);
+    }
+    let mut per_worker = vec![0usize; m];
+    for h in handles {
+        let w = h.join().expect("worker panicked");
+        per_worker[w.id] = w.transmissions;
+    }
+    trace.per_worker_comms = per_worker;
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::{GradientBackend, Worker};
+    use crate::optim::Method;
+
+    /// f_m(θ) = ½ c_m ‖θ − t_m‖²  — strongly convex toy problem.
+    struct Quad {
+        c: f64,
+        t: Vec<f64>,
+    }
+
+    impl GradientBackend for Quad {
+        fn dim(&self) -> usize {
+            self.t.len()
+        }
+
+        fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+            let mut l = 0.0;
+            for i in 0..theta.len() {
+                let d = theta[i] - self.t[i];
+                grad[i] = self.c * d;
+                l += d * d;
+            }
+            0.5 * self.c * l
+        }
+    }
+
+    fn quad_workers(dim: usize, m: usize) -> Vec<Worker> {
+        (0..m)
+            .map(|i| {
+                let t: Vec<f64> =
+                    (0..dim).map(|j| ((i + j) % 5) as f64 - 2.0).collect();
+                Worker::new(
+                    i,
+                    Box::new(Quad { c: 1.0 + i as f64 * 0.3, t }),
+                )
+            })
+            .collect()
+    }
+
+    fn total_c(m: usize) -> f64 {
+        (0..m).map(|i| 1.0 + i as f64 * 0.3).sum()
+    }
+
+    /// Analytic minimum of Σ ½c_m‖θ−t_m‖²: θ* = Σc_m t_m / Σc_m.
+    fn quad_f_star(dim: usize, m: usize) -> f64 {
+        let cs: Vec<f64> = (0..m).map(|i| 1.0 + i as f64 * 0.3).collect();
+        let ts: Vec<Vec<f64>> = (0..m)
+            .map(|i| (0..dim).map(|j| ((i + j) % 5) as f64 - 2.0).collect())
+            .collect();
+        let csum: f64 = cs.iter().sum();
+        let theta_star: Vec<f64> = (0..dim)
+            .map(|j| {
+                (0..m).map(|i| cs[i] * ts[i][j]).sum::<f64>() / csum
+            })
+            .collect();
+        (0..m)
+            .map(|i| {
+                0.5 * cs[i]
+                    * (0..dim)
+                        .map(|j| (theta_star[j] - ts[i][j]).powi(2))
+                        .sum::<f64>()
+            })
+            .sum()
+    }
+
+    #[test]
+    fn gd_converges_on_quadratic() {
+        let (dim, m) = (4, 3);
+        let mut ws = quad_workers(dim, m);
+        let alpha = 1.0 / total_c(m);
+        let cfg = RunConfig::new(Method::Gd, MethodParams::new(alpha), 200);
+        let trace = run_serial(&mut ws, &cfg, vec![0.0; dim]);
+        assert_eq!(trace.iterations(), 200);
+        // GD transmits every worker every round
+        assert_eq!(trace.total_comms(), 200 * m);
+        let f_star = quad_f_star(dim, m);
+        let first = trace.iters.first().unwrap().loss - f_star;
+        let last = trace.final_loss() - f_star;
+        assert!(last < first * 1e-6, "no convergence: {first} → {last}");
+    }
+
+    #[test]
+    fn chb_converges_with_fewer_comms_than_hb() {
+        let (dim, m) = (6, 5);
+        let alpha = 1.0 / total_c(m);
+        let p = MethodParams::new(alpha)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let mut ws = quad_workers(dim, m);
+        let chb =
+            run_serial(&mut ws, &RunConfig::new(Method::Chb, p, 300), vec![0.0; dim]);
+        let mut ws = quad_workers(dim, m);
+        let hb =
+            run_serial(&mut ws, &RunConfig::new(Method::Hb, p, 300), vec![0.0; dim]);
+        let f_star = quad_f_star(dim, m);
+        assert!(
+            chb.final_loss() - f_star
+                < (hb.iters.first().unwrap().loss - f_star) * 1e-6
+        );
+        assert!(
+            chb.total_comms() < hb.total_comms(),
+            "CHB {} vs HB {}",
+            chb.total_comms(),
+            hb.total_comms()
+        );
+    }
+
+    #[test]
+    fn epsilon_zero_chb_equals_hb_trace() {
+        let (dim, m) = (3, 4);
+        let alpha = 0.5 / total_c(m);
+        let p = MethodParams::new(alpha).with_beta(0.3).with_epsilon1(0.0);
+        let mut ws = quad_workers(dim, m);
+        let chb =
+            run_serial(&mut ws, &RunConfig::new(Method::Chb, p, 50), vec![1.0; dim]);
+        let mut ws = quad_workers(dim, m);
+        let hb =
+            run_serial(&mut ws, &RunConfig::new(Method::Hb, p, 50), vec![1.0; dim]);
+        for (a, b) in chb.iters.iter().zip(&hb.iters) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "k={}", a.k);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial_bit_for_bit() {
+        let (dim, m) = (5, 7);
+        let alpha = 0.8 / total_c(m);
+        let p = MethodParams::new(alpha)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, p, 120).with_comm_map();
+        let mut ws = quad_workers(dim, m);
+        let serial = run_serial(&mut ws, &cfg, vec![0.5; dim]);
+        let threaded = run_threaded(quad_workers(dim, m), &cfg, vec![0.5; dim]);
+        assert_eq!(serial.iterations(), threaded.iterations());
+        for (a, b) in serial.iters.iter().zip(&threaded.iters) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss k={}", a.k);
+            assert_eq!(a.comms_cum, b.comms_cum, "comms k={}", a.k);
+        }
+        assert_eq!(serial.per_worker_comms, threaded.per_worker_comms);
+        assert_eq!(serial.comm_map, threaded.comm_map);
+    }
+
+    #[test]
+    fn stop_rule_obj_err_halts_early() {
+        let (dim, m) = (4, 3);
+        let mut ws = quad_workers(dim, m);
+        let alpha = 1.0 / total_c(m);
+        let f_star = quad_f_star(dim, m);
+        let cfg = RunConfig::new(Method::Hb, MethodParams::new(alpha), 10_000)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-6 });
+        let trace = run_serial(&mut ws, &cfg, vec![0.0; dim]);
+        assert!(trace.iterations() < 10_000, "stop rule never fired");
+        assert!(trace.final_loss() - f_star < 1e-6);
+    }
+
+    #[test]
+    fn dropped_uplinks_do_not_crash_and_counts_reflect_delivery() {
+        let (dim, m) = (4, 6);
+        let alpha = 0.5 / total_c(m);
+        let p = MethodParams::new(alpha).with_beta(0.2).with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, p, 100).with_drops(0.2, 99);
+        let mut ws = quad_workers(dim, m);
+        // start far from the optimum so the drop-induced bias (which is
+        // O(stale-delta), independent of θ⁰) stays below the initial error
+        let trace = run_serial(&mut ws, &cfg, vec![10.0; dim]);
+        // per-worker counters count *attempts*; trace counts deliveries
+        let attempts: usize = trace.per_worker_comms.iter().sum();
+        assert!(trace.total_comms() <= attempts);
+        // Dropped deltas leave the aggregate permanently stale, so the
+        // run converges to a *biased* point — but it must stay bounded
+        // and still improve on the start.
+        let f_star = quad_f_star(dim, m);
+        let first = trace.iters.first().unwrap().loss - f_star;
+        let last = trace.final_loss() - f_star;
+        assert!(last.is_finite(), "diverged under drops");
+        assert!(last < first, "no progress at all: {first} → {last}");
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 federated runtime: the paper's Algorithm 1.
+//!
+//! One [`Server`] owns the iterate θ and the running gradient
+//! aggregate ∇ᵏ (eq. 5); M [`Worker`]s own their shards, their last
+//! *transmitted* gradient ∇f_m(θ̂_m), and a gradient backend (pure
+//! rust or PJRT).  A round is:
+//!
+//! 1. server broadcasts θᵏ (M downlink messages),
+//! 2. each worker computes ∇f_m(θᵏ), forms δ∇_m^k, applies the censor
+//!    rule (8), and either uploads δ∇_m^k or stays silent,
+//! 3. server folds received deltas into ∇ᵏ and steps θ via the
+//!    method's update rule (eq. 4).
+//!
+//! Engines: [`engine::run_serial`] (deterministic, used by the sweeps)
+//! and [`engine::run_threaded`] (one OS thread per worker, channel
+//! protocol — the deployment-shaped path).  Both produce identical
+//! traces; a property test pins that.
+
+pub mod engine;
+pub mod protocol;
+pub mod server;
+pub mod worker;
+
+pub use engine::{run_serial, run_threaded, RunConfig, StopRule};
+pub use server::Server;
+pub use worker::{GradientBackend, RustBackend, Worker, WorkerRound};

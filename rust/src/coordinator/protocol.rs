@@ -1,0 +1,56 @@
+//! Wire protocol for the threaded engine (and byte accounting for the
+//! network simulator).
+//!
+//! Rust channels carry these messages in-process; `wire_bytes` models
+//! what a real deployment would serialize, so the byte counters in
+//! `net/` stay meaningful.
+
+use std::sync::Arc;
+
+use super::worker::WorkerRound;
+
+/// server → worker
+#[derive(Clone, Debug)]
+pub enum Downlink {
+    /// start iteration k at iterate θᵏ
+    Broadcast {
+        k: usize,
+        theta: Arc<Vec<f64>>,
+        /// ‖θᵏ − θ^{k−1}‖², the censor rule's RHS scale
+        step_sq: f64,
+    },
+    /// shut the worker thread down
+    Stop,
+}
+
+/// worker → server
+#[derive(Debug)]
+pub struct Uplink {
+    pub round: WorkerRound,
+}
+
+/// Serialized size of a broadcast: d·8 (θ) + 8 (step_sq) + 8 (k).
+pub fn broadcast_bytes(dim: usize) -> u64 {
+    (dim * 8 + 16) as u64
+}
+
+/// Serialized size of a gradient-delta upload: d·8 + 8 (worker id tag).
+pub fn uplink_bytes(dim: usize) -> u64 {
+    (dim * 8 + 8) as u64
+}
+
+/// Size of a "skip" — censored workers send nothing at all.
+pub const SKIP_BYTES: u64 = 0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_model_scales_with_dimension() {
+        assert_eq!(broadcast_bytes(0), 16);
+        assert_eq!(broadcast_bytes(50), 416);
+        assert_eq!(uplink_bytes(50), 408);
+        assert!(uplink_bytes(784 * 30 + 61) > uplink_bytes(22));
+    }
+}

@@ -1,0 +1,178 @@
+//! Server-side state (Algorithm 1, lines 2 and 10).
+//!
+//! The server never sees per-worker gradients — only deltas from the
+//! uncensored workers.  Its aggregate ∇ᵏ follows eq. (5):
+//!
+//! ```text
+//! ∇ᵏ = ∇^{k−1} + Σ_{m ∈ Mᵏ} δ∇_m^k
+//! ```
+//!
+//! which telescopes to Σ_m ∇f_m(θ̂_mᵏ) — the invariant the property
+//! tests pin against the workers' `last_transmitted()` state.
+
+use crate::linalg;
+use crate::optim::{self, Method, MethodParams, ServerRule};
+
+use super::worker::WorkerRound;
+use crate::optim::CensorDecision;
+
+/// Aggregated outcome of one server round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub k: usize,
+    /// number of uplink transmissions |Mᵏ| this round
+    pub transmitted: usize,
+    /// Σ_m f_m(θᵏ) (instrumentation)
+    pub loss: f64,
+    /// ‖∇ᵏ‖² after folding this round's deltas (the paper's NN metric)
+    pub agg_grad_sq: f64,
+    /// ‖θ^{k+1} − θᵏ‖²
+    pub step_sq: f64,
+}
+
+/// The parameter server.
+pub struct Server {
+    pub theta: Vec<f64>,
+    pub theta_prev: Vec<f64>,
+    /// ∇ᵏ — running aggregate of eq. (5)
+    pub agg_grad: Vec<f64>,
+    rule: Box<dyn ServerRule>,
+    k: usize,
+}
+
+impl Server {
+    pub fn new(method: Method, params: &MethodParams, theta0: Vec<f64>) -> Self {
+        let dim = theta0.len();
+        Self {
+            theta_prev: theta0.clone(),
+            theta: theta0,
+            agg_grad: vec![0.0; dim],
+            rule: optim::method::build_server_rule(method, params, dim),
+            k: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.k
+    }
+
+    /// ‖θᵏ − θ^{k−1}‖² — broadcast alongside θᵏ so workers can
+    /// evaluate the censor rule's RHS.
+    pub fn theta_step_sq(&self) -> f64 {
+        linalg::dist2_sq(&self.theta, &self.theta_prev)
+    }
+
+    /// Fold one round of worker reports and advance θ (eq. 4 + 5).
+    pub fn apply_round(&mut self, rounds: &[WorkerRound]) -> RoundOutcome {
+        self.k += 1;
+        let mut transmitted = 0;
+        let mut loss = 0.0;
+        for r in rounds {
+            loss += r.loss;
+            if r.decision == CensorDecision::Transmit {
+                debug_assert_eq!(r.delta.len(), self.agg_grad.len());
+                linalg::axpy(1.0, &r.delta, &mut self.agg_grad);
+                transmitted += 1;
+            }
+        }
+        let agg_grad_sq = linalg::norm2_sq(&self.agg_grad);
+        self.rule
+            .step(&mut self.theta, &mut self.theta_prev, &self.agg_grad);
+        RoundOutcome {
+            k: self.k,
+            transmitted,
+            loss,
+            agg_grad_sq,
+            step_sq: self.theta_step_sq(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tx(worker: usize, delta: Vec<f64>, loss: f64) -> WorkerRound {
+        let delta_sq = delta.iter().map(|d| d * d).sum();
+        let bits = 64 * delta.len() as u64;
+        WorkerRound {
+            worker,
+            decision: CensorDecision::Transmit,
+            delta,
+            loss,
+            delta_sq,
+            bits,
+        }
+    }
+
+    fn skip(worker: usize, loss: f64) -> WorkerRound {
+        WorkerRound {
+            worker,
+            decision: CensorDecision::Skip,
+            delta: Vec::new(),
+            loss,
+            delta_sq: 0.0,
+            bits: 0,
+        }
+    }
+
+    #[test]
+    fn aggregate_accumulates_only_transmitted_deltas() {
+        let p = MethodParams::new(0.0); // α = 0: θ must not move
+        let mut s = Server::new(Method::Gd, &p, vec![0.0, 0.0]);
+        let out = s.apply_round(&[
+            tx(0, vec![1.0, 0.0], 0.5),
+            skip(1, 0.25),
+            tx(2, vec![0.0, 2.0], 0.25),
+        ]);
+        assert_eq!(out.transmitted, 2);
+        assert_eq!(s.agg_grad, vec![1.0, 2.0]);
+        assert!((out.loss - 1.0).abs() < 1e-15);
+        assert_eq!(s.theta, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn aggregate_persists_across_rounds() {
+        let p = MethodParams::new(0.0);
+        let mut s = Server::new(Method::Gd, &p, vec![0.0]);
+        s.apply_round(&[tx(0, vec![3.0], 0.0)]);
+        s.apply_round(&[skip(0, 0.0)]);
+        s.apply_round(&[tx(0, vec![-1.0], 0.0)]);
+        // eq. (5): ∇ = 3 + 0 + (−1) = 2
+        assert_eq!(s.agg_grad, vec![2.0]);
+    }
+
+    #[test]
+    fn gd_update_uses_aggregate() {
+        let p = MethodParams::new(0.5);
+        let mut s = Server::new(Method::Gd, &p, vec![1.0]);
+        let out = s.apply_round(&[tx(0, vec![2.0], 0.0)]);
+        assert_eq!(s.theta, vec![0.0]); // 1 − 0.5·2
+        assert!((out.step_sq - 1.0).abs() < 1e-15);
+        assert!((out.agg_grad_sq - 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chb_momentum_applies_across_rounds() {
+        let p = MethodParams::new(1.0).with_beta(0.5);
+        let mut s = Server::new(Method::Chb, &p, vec![0.0]);
+        s.apply_round(&[tx(0, vec![-1.0], 0.0)]); // θ: 0 → 1 (no momentum yet)
+        assert_eq!(s.theta, vec![1.0]);
+        s.apply_round(&[skip(0, 0.0)]); // θ: 1 + 1·1 (−∇=1) + 0.5·(1−0) = 2.5
+        assert!((s.theta[0] - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn iteration_counter_advances() {
+        let p = MethodParams::new(0.1);
+        let mut s = Server::new(Method::Hb, &p, vec![0.0]);
+        assert_eq!(s.iteration(), 0);
+        s.apply_round(&[]);
+        s.apply_round(&[]);
+        assert_eq!(s.iteration(), 2);
+    }
+}

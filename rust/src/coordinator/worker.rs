@@ -1,0 +1,263 @@
+//! Worker-side state machine (Algorithm 1, lines 3–9).
+
+use std::sync::Arc;
+
+use crate::compress::Compressor;
+use crate::linalg;
+use crate::optim::{CensorDecision, CensorRule};
+use crate::tasks::WorkerObjective;
+
+/// Where a worker's gradient comes from.  The pure-rust backend wraps
+/// a [`WorkerObjective`]; the PJRT backend (runtime/pjrt.rs) executes
+/// the AOT artifact.  Both must compute the *same* function.
+pub trait GradientBackend: Send {
+    fn dim(&self) -> usize;
+    /// Write ∇f_m(θ) into `grad`, return f_m(θ).
+    fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64;
+}
+
+/// f64 in-process backend.
+pub struct RustBackend {
+    obj: Box<dyn WorkerObjective>,
+}
+
+impl RustBackend {
+    pub fn new(obj: Box<dyn WorkerObjective>) -> Self {
+        Self { obj }
+    }
+}
+
+impl GradientBackend for RustBackend {
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+
+    fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        self.obj.grad_loss_into(theta, grad)
+    }
+}
+
+/// What a worker reports for one round (the uplink message, or the
+/// record that it stayed silent).
+#[derive(Clone, Debug)]
+pub struct WorkerRound {
+    pub worker: usize,
+    pub decision: CensorDecision,
+    /// δ∇_m^k (codec-decoded when compression is on) — only
+    /// meaningful when `decision == Transmit`
+    pub delta: Vec<f64>,
+    /// f_m(θᵏ) — measurement-side only, costs no communication
+    pub loss: f64,
+    /// ‖δ∇_m^k‖² (recorded for Lemma-2 style diagnostics)
+    pub delta_sq: f64,
+    /// simulated wire size of the uplink payload (0 when skipping)
+    pub bits: u64,
+}
+
+/// One federated worker: shard + censor state.
+pub struct Worker {
+    pub id: usize,
+    backend: Box<dyn GradientBackend>,
+    /// ∇f_m(θ̂_m^{k−1}) — the last gradient this worker *transmitted*
+    last_tx_grad: Vec<f64>,
+    /// scratch: current gradient (steady-state allocation-free)
+    grad: Vec<f64>,
+    /// scratch: δ∇ buffer reused across rounds
+    delta: Vec<f64>,
+    /// optional uplink codec (paper conclusion: CHB ∘ quantization)
+    compressor: Option<Arc<dyn Compressor>>,
+    /// lifetime transmit counter S_m (Lemma 2)
+    pub transmissions: usize,
+}
+
+impl Worker {
+    pub fn new(id: usize, backend: Box<dyn GradientBackend>) -> Self {
+        let dim = backend.dim();
+        Self {
+            id,
+            backend,
+            // θ̂⁰ convention: "no gradient transmitted yet" ⇒ zero
+            // vector, so the first δ∇ is the full gradient and every
+            // worker transmits at k = 1 (RHS of (8) is 0 at k = 1).
+            last_tx_grad: vec![0.0; dim],
+            grad: vec![0.0; dim],
+            delta: vec![0.0; dim],
+            compressor: None,
+            transmissions: 0,
+        }
+    }
+
+    /// Attach an uplink codec.  The worker advances its θ̂ bookkeeping
+    /// with the *decoded* payload, so server and worker stay in exact
+    /// agreement (eq. (5) still telescopes) and the codec error
+    /// appears only as bounded gradient staleness.
+    pub fn with_compressor(mut self, c: Arc<dyn Compressor>) -> Self {
+        self.compressor = Some(c);
+        self
+    }
+
+    pub fn dim(&self) -> usize {
+        self.backend.dim()
+    }
+
+    /// Execute one round at iterate θᵏ.  `theta_step_sq` is
+    /// ‖θᵏ − θ^{k−1}‖², precomputed by the server and included in the
+    /// broadcast (it is a scalar; the paper's workers know both
+    /// iterates anyway).
+    pub fn round(
+        &mut self,
+        theta: &[f64],
+        theta_step_sq: f64,
+        censor: &dyn CensorRule,
+        k: usize,
+    ) -> WorkerRound {
+        let loss = self.backend.grad_loss_into(theta, &mut self.grad);
+        linalg::sub_into(&self.grad, &self.last_tx_grad, &mut self.delta);
+        let delta_sq = linalg::norm2_sq(&self.delta);
+        let decision = censor.decide(delta_sq, theta_step_sq, k);
+        let (delta, bits) = if decision == CensorDecision::Transmit {
+            self.transmissions += 1;
+            match &self.compressor {
+                None => {
+                    // Algorithm 1 line 5: transmit δ∇, update θ̂_m ← θᵏ
+                    self.last_tx_grad.copy_from_slice(&self.grad);
+                    // payload allocation models the send
+                    (self.delta.clone(), 64 * self.delta.len() as u64)
+                }
+                Some(c) => {
+                    let out = c.compress(&self.delta);
+                    // bookkeeping uses the decoded payload — server
+                    // and worker agree exactly on Σ transmitted deltas
+                    linalg::axpy(1.0, &out.decoded, &mut self.last_tx_grad);
+                    (out.decoded, out.bits)
+                }
+            }
+        } else {
+            (Vec::new(), 0)
+        };
+        WorkerRound { worker: self.id, decision, delta, loss, delta_sq, bits }
+    }
+
+    /// Current gradient (for diagnostics; engine-side only).
+    pub fn current_grad(&self) -> &[f64] {
+        &self.grad
+    }
+
+    /// Last transmitted gradient (for invariant checks).
+    pub fn last_transmitted(&self) -> &[f64] {
+        &self.last_tx_grad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{GradDiffCensor, NeverCensor};
+
+    /// Quadratic toy backend: f(θ) = ½‖θ − c‖², ∇ = θ − c.
+    struct Toy {
+        c: Vec<f64>,
+    }
+
+    impl GradientBackend for Toy {
+        fn dim(&self) -> usize {
+            self.c.len()
+        }
+
+        fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+            let mut l = 0.0;
+            for i in 0..theta.len() {
+                grad[i] = theta[i] - self.c[i];
+                l += grad[i] * grad[i];
+            }
+            0.5 * l
+        }
+    }
+
+    #[test]
+    fn first_round_always_transmits_full_gradient() {
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![1.0, 2.0] }));
+        let r = w.round(&[0.0, 0.0], 0.0, &GradDiffCensor { epsilon1: 9e9 }, 1);
+        assert_eq!(r.decision, CensorDecision::Transmit);
+        assert_eq!(r.delta, vec![-1.0, -2.0]);
+        assert_eq!(w.transmissions, 1);
+    }
+
+    #[test]
+    fn unchanged_theta_skips_after_first_transmit() {
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![1.0] }));
+        let censor = GradDiffCensor { epsilon1: 0.5 };
+        let r1 = w.round(&[0.0], 0.0, &censor, 1);
+        assert_eq!(r1.decision, CensorDecision::Transmit);
+        // same θ again: δ∇ = 0 ≤ anything → skip, no state change
+        let r2 = w.round(&[0.0], 0.0, &censor, 2);
+        assert_eq!(r2.decision, CensorDecision::Skip);
+        assert_eq!(w.transmissions, 1);
+        assert!(r2.delta.is_empty());
+    }
+
+    #[test]
+    fn delta_is_relative_to_last_transmitted_not_last_computed() {
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![0.0] }));
+        // huge ε₁ ⇒ worker skips everything after the first transmit
+        let censor = GradDiffCensor { epsilon1: 1e12 };
+        let r1 = w.round(&[1.0], 0.0, &censor, 1);
+        assert_eq!(r1.decision, CensorDecision::Transmit); // rhs = 0, lhs > 0
+        let _ = w.round(&[2.0], 1.0, &censor, 2); // skip
+        let r3 = w.round(&[3.0], 1.0, &censor, 3); // skip
+        assert_eq!(r3.decision, CensorDecision::Skip);
+        // δ at k=3 must be grad(3) − grad(1) = 3 − 1 = 2 (not 3 − 2)
+        assert!((r3.delta_sq - 4.0).abs() < 1e-12);
+        assert_eq!(w.last_transmitted(), &[1.0]);
+    }
+
+    #[test]
+    fn never_censor_transmits_every_round_and_deltas_telescope() {
+        let mut w = Worker::new(3, Box::new(Toy { c: vec![5.0] }));
+        let mut sum = 0.0;
+        let thetas = [[1.0], [2.0], [-1.0]];
+        for (k, th) in thetas.iter().enumerate() {
+            let r = w.round(th, 1.0, &NeverCensor, k + 1);
+            assert_eq!(r.decision, CensorDecision::Transmit);
+            sum += r.delta[0];
+        }
+        // Σδ telescopes to the latest gradient: (−1) − 5 = −6
+        assert!((sum - (-6.0)).abs() < 1e-12);
+        assert_eq!(w.transmissions, 3);
+    }
+
+    #[test]
+    fn compressed_transmissions_keep_worker_and_server_in_sync() {
+        use crate::compress::UniformQuantizer;
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![0.0, 0.0] }))
+            .with_compressor(Arc::new(UniformQuantizer { bits: 4 }));
+        let censor = NeverCensor;
+        // server-side replica of the aggregate
+        let mut agg = vec![0.0; 2];
+        for (k, th) in [[1.0, -2.0], [0.5, 3.0], [-4.0, 0.25]].iter().enumerate() {
+            let r = w.round(th, 1.0, &censor, k + 1);
+            assert_eq!(r.decision, CensorDecision::Transmit);
+            // 4-bit payload: 32-bit scale + 4 bits × 2 coords
+            assert_eq!(r.bits, 32 + 8);
+            linalg::axpy(1.0, &r.delta, &mut agg);
+            // invariant: server aggregate == worker's θ̂ bookkeeping
+            assert_eq!(agg, w.last_transmitted());
+        }
+        // lossy: last_transmitted differs from the exact gradient, but
+        // boundedly (4-bit relative error ≤ 1/7 of max|grad|)
+        let exact = [-4.0, 0.25];
+        for i in 0..2 {
+            assert!((w.last_transmitted()[i] - exact[i]).abs() < 4.0 / 7.0 * 3.0);
+        }
+    }
+
+    #[test]
+    fn loss_reported_even_when_skipping() {
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![0.0] }));
+        let censor = GradDiffCensor { epsilon1: 1e12 };
+        let _ = w.round(&[2.0], 0.0, &censor, 1);
+        let r = w.round(&[2.0], 0.0, &censor, 2);
+        assert_eq!(r.decision, CensorDecision::Skip);
+        assert!((r.loss - 2.0).abs() < 1e-12); // ½·4
+    }
+}

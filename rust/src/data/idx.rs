@@ -1,0 +1,119 @@
+//! IDX (MNIST) binary format parser.
+//!
+//! Magic: 0x00 0x00 <dtype> <ndims>, big-endian dims, then raw data.
+//! Only the u8 dtype (0x08) is needed for MNIST images/labels.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+
+use super::Dataset;
+
+/// Parsed IDX tensor of u8.
+pub struct IdxU8 {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+/// Read an IDX u8 tensor from any reader.
+pub fn parse_u8<R: Read>(mut r: R) -> Result<IdxU8> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("read magic")?;
+    if magic[0] != 0 || magic[1] != 0 {
+        bail!("bad IDX magic {magic:?}");
+    }
+    if magic[2] != 0x08 {
+        bail!("unsupported IDX dtype 0x{:02x} (want u8)", magic[2]);
+    }
+    let ndims = magic[3] as usize;
+    if ndims == 0 || ndims > 4 {
+        bail!("unreasonable IDX ndims {ndims}");
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b).context("read dim")?;
+        dims.push(u32::from_be_bytes(b) as usize);
+    }
+    let total: usize = dims.iter().product();
+    let mut data = vec![0u8; total];
+    r.read_exact(&mut data).context("read payload")?;
+    Ok(IdxU8 { dims, data })
+}
+
+/// Combine an images file (n×28×28) and a labels file (n) into a
+/// Dataset: pixels scaled to [0,1], labels mapped to ±1 by parity
+/// (even digit → +1) to match the binary tasks in the experiments.
+pub fn load_mnist(images: &Path, labels: &Path) -> Result<Dataset> {
+    let img = parse_u8(
+        std::fs::File::open(images)
+            .with_context(|| format!("open {}", images.display()))?,
+    )?;
+    let lab = parse_u8(
+        std::fs::File::open(labels)
+            .with_context(|| format!("open {}", labels.display()))?,
+    )?;
+    if img.dims.len() != 3 {
+        bail!("images: want 3 dims, got {:?}", img.dims);
+    }
+    if lab.dims.len() != 1 || lab.dims[0] != img.dims[0] {
+        bail!("labels: dims {:?} vs images {:?}", lab.dims, img.dims);
+    }
+    let n = img.dims[0];
+    let d = img.dims[1] * img.dims[2];
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = img.data[i * d + j] as f64 / 255.0;
+        }
+    }
+    let y = lab
+        .data
+        .iter()
+        .map(|&v| if v % 2 == 0 { 1.0 } else { -1.0 })
+        .collect();
+    Ok(Dataset {
+        x,
+        y,
+        source: format!("{} + {}", images.display(), labels.display()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx_bytes(dims: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut b = vec![0, 0, 0x08, dims.len() as u8];
+        for d in dims {
+            b.extend_from_slice(&d.to_be_bytes());
+        }
+        b.extend_from_slice(payload);
+        b
+    }
+
+    #[test]
+    fn parses_vector_and_tensor() {
+        let v = parse_u8(&idx_bytes(&[3], &[1, 2, 3])[..]).unwrap();
+        assert_eq!(v.dims, vec![3]);
+        assert_eq!(v.data, vec![1, 2, 3]);
+        let t = parse_u8(&idx_bytes(&[2, 2, 2], &[0; 8])[..]).unwrap();
+        assert_eq!(t.dims, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_dtype() {
+        assert!(parse_u8(&[1, 0, 8, 1, 0, 0, 0, 0][..]).is_err());
+        assert!(parse_u8(&[0, 0, 0x0D, 1, 0, 0, 0, 0][..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let b = idx_bytes(&[10], &[1, 2, 3]);
+        assert!(parse_u8(&b[..]).is_err());
+    }
+}

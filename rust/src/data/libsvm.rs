@@ -1,0 +1,110 @@
+//! LIBSVM sparse-text format parser (ijcnn1, the UCI exports, …).
+//!
+//! Format: one sample per line, `label idx:val idx:val …` with 1-based
+//! feature indices.  Dense-ifies into `Matrix` since every dataset in
+//! the paper is small enough (MNIST dense = 188 MB f64, fine).
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Matrix;
+
+use super::Dataset;
+
+/// Parse LIBSVM text from any reader. `d_hint` pre-sizes the feature
+/// count; actual max index wins if larger.
+pub fn parse<R: Read>(reader: R, d_hint: usize) -> Result<Dataset> {
+    let mut labels = Vec::new();
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut d = d_hint;
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.context("read line")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .with_context(|| format!("line {}: empty", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: token {tok:?}", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: index {idx:?}", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: libsvm indices are 1-based", lineno + 1);
+            }
+            let val: f64 = val
+                .parse()
+                .with_context(|| format!("line {}: value {val:?}", lineno + 1))?;
+            d = d.max(idx);
+            feats.push((idx - 1, val));
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+    let n = labels.len();
+    let mut x = Matrix::zeros(n, d);
+    for (i, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x.set(i, j, v);
+        }
+    }
+    Ok(Dataset { x, y: labels, source: "libsvm".into() })
+}
+
+/// Parse a LIBSVM file from disk.
+pub fn load(path: &Path, d_hint: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut ds = parse(f, d_hint)?;
+    ds.source = path.display().to_string();
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_lines() {
+        let text = "+1 1:0.5 3:-2\n-1 2:1.0\n";
+        let ds = parse(text.as_bytes(), 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.x.get(0, 0), 0.5);
+        assert_eq!(ds.x.get(0, 2), -2.0);
+        assert_eq!(ds.x.get(1, 1), 1.0);
+        assert_eq!(ds.x.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn respects_d_hint_and_skips_blank_lines() {
+        let text = "\n# comment\n1 1:2.0\n";
+        let ds = parse(text.as_bytes(), 5).unwrap();
+        assert_eq!(ds.d(), 5);
+        assert_eq!(ds.n(), 1);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        let text = "1 0:2.0\n";
+        assert!(parse(text.as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("abc def".as_bytes(), 0).is_err());
+        assert!(parse("1 x:1".as_bytes(), 0).is_err());
+        assert!(parse("1 1:zz".as_bytes(), 0).is_err());
+    }
+}

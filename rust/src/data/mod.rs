@@ -1,0 +1,119 @@
+//! Dataset substrate: generation, parsing, partitioning.
+//!
+//! The experiments in the paper use one synthetic protocol and eight
+//! "real" datasets.  This image has no network access, so each real
+//! dataset has a synthetic stand-in with identical shape and the same
+//! per-worker smoothness structure (DESIGN.md §3); if the genuine file
+//! is dropped into `data/` (libsvm, idx, or csv format) the registry
+//! picks it up instead.
+//!
+//! Shape protocol (must stay in sync with python/compile/aot.py):
+//! an even split of N samples over M workers, each shard zero-padded to
+//! `padded_n(ceil(N/M))` rows so every worker shares one artifact shape.
+
+pub mod idx;
+pub mod libsvm;
+pub mod partition;
+pub mod registry;
+pub mod synthetic;
+
+use crate::linalg::Matrix;
+
+/// A labelled dense dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    /// human-readable provenance ("synthetic ijcnn1 stand-in", file path…)
+    pub source: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Keep only the first k features (paper §IV-B protocol).
+    pub fn truncate_features(&self, k: usize) -> Dataset {
+        Dataset {
+            x: self.x.truncate_cols(k),
+            y: self.y.clone(),
+            source: format!("{} (features truncated to {k})", self.source),
+        }
+    }
+
+    /// Z-score every feature column (standard preprocessing for the
+    /// NN task; constant columns become zero).
+    pub fn standardized(&self) -> Dataset {
+        let (n, d) = (self.n(), self.d());
+        let mut x = self.x.clone();
+        for j in 0..d {
+            let mean =
+                (0..n).map(|i| x.get(i, j)).sum::<f64>() / n.max(1) as f64;
+            let var = (0..n)
+                .map(|i| (x.get(i, j) - mean).powi(2))
+                .sum::<f64>()
+                / n.max(1) as f64;
+            let sd = var.sqrt();
+            for i in 0..n {
+                let v = x.get(i, j);
+                x.set(i, j, if sd > 0.0 { (v - mean) / sd } else { 0.0 });
+            }
+        }
+        Dataset {
+            x,
+            y: self.y.clone(),
+            source: format!("{} (standardized)", self.source),
+        }
+    }
+}
+
+/// One worker's shard: rows padded with zeros up to `n_pad`; `mask[i]`
+/// is 1.0 for real rows and 0.0 for padding.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub mask: Vec<f64>,
+    pub n_real: usize,
+}
+
+impl Shard {
+    pub fn n_pad(&self) -> usize {
+        self.x.rows
+    }
+}
+
+/// The kernel row-tile; mirrors kernels/common.py DEFAULT_BLOCK_N.
+pub const BLOCK_N: usize = 256;
+
+/// Rows after padding to the kernel tile (mirror of model.padded_n).
+pub fn padded_n(n: usize) -> usize {
+    let block = n.min(BLOCK_N);
+    if block == 0 {
+        return 0;
+    }
+    n.div_ceil(block) * block
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_n_matches_python_protocol() {
+        // small n: block == n, no padding
+        assert_eq!(padded_n(50), 50);
+        assert_eq!(padded_n(169), 169);
+        // large n: round up to multiple of 256
+        assert_eq!(padded_n(5555), 5632);
+        assert_eq!(padded_n(6667), 6912);
+        assert_eq!(padded_n(256), 256);
+        assert_eq!(padded_n(257), 512);
+        assert_eq!(padded_n(0), 0);
+    }
+}

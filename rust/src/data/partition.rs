@@ -1,0 +1,110 @@
+//! Shard construction: even split across workers + zero padding.
+//!
+//! The paper: "All samples are evenly split between nine workers."
+//! Each shard is padded to a single common row count so every worker
+//! shares one AOT artifact shape (aot.py's `per_worker_padded`).
+
+use crate::linalg::Matrix;
+
+use super::{padded_n, Dataset, Shard};
+
+/// Split `ds` evenly across `m` workers; worker i gets rows
+/// i, i+m, i+2m, … (round-robin keeps shard row counts within 1 of
+/// each other and mixes any ordering in the source file).  All shards
+/// are padded to the same `padded_n(ceil(n/m))` rows.
+pub fn split_even(ds: &Dataset, m: usize) -> Vec<Shard> {
+    assert!(m > 0, "need at least one worker");
+    let n = ds.n();
+    let d = ds.d();
+    let n_max = n.div_ceil(m);
+    let n_pad = padded_n(n_max);
+    (0..m)
+        .map(|w| {
+            let rows: Vec<usize> = (w..n).step_by(m).collect();
+            let mut x = Matrix::zeros(n_pad, d);
+            let mut y = vec![0.0; n_pad];
+            let mut mask = vec![0.0; n_pad];
+            for (i, &src) in rows.iter().enumerate() {
+                x.row_mut(i).copy_from_slice(ds.x.row(src));
+                y[i] = ds.y[src];
+                mask[i] = 1.0;
+            }
+            Shard { x, y, mask, n_real: rows.len() }
+        })
+        .collect()
+}
+
+/// A single shard holding the whole dataset, unpadded (tests, M=1).
+pub fn shard_whole(ds: &Dataset) -> Shard {
+    Shard {
+        x: ds.x.clone(),
+        y: ds.y.clone(),
+        mask: vec![1.0; ds.n()],
+        n_real: ds.n(),
+    }
+}
+
+/// Wrap pre-partitioned per-worker datasets (the Fig. 1/2 synthetic
+/// protocol where each worker's data is generated directly).
+pub fn shards_from_datasets(per_worker: &[Dataset]) -> Vec<Shard> {
+    per_worker.iter().map(shard_whole).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn split_covers_every_row_exactly_once() {
+        let mut rng = Xoshiro256::new(20);
+        let ds = synthetic::gaussian_pm1(&mut rng, 103, 4);
+        let shards = split_even(&ds, 9);
+        assert_eq!(shards.len(), 9);
+        let total: usize = shards.iter().map(|s| s.n_real).sum();
+        assert_eq!(total, 103);
+        // every shard same padded height
+        let n_pad = shards[0].n_pad();
+        assert!(shards.iter().all(|s| s.n_pad() == n_pad));
+        // row-level reconstruction: sum of masked y equals sum of ds.y
+        let got: f64 = shards
+            .iter()
+            .flat_map(|s| s.y.iter().zip(&s.mask).map(|(y, m)| y * m))
+            .sum();
+        let want: f64 = ds.y.iter().sum();
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_sizes_differ_by_at_most_one() {
+        let mut rng = Xoshiro256::new(21);
+        let ds = synthetic::gaussian_pm1(&mut rng, 49_990 % 1000, 3);
+        let shards = split_even(&ds, 9);
+        let min = shards.iter().map(|s| s.n_real).min().unwrap();
+        let max = shards.iter().map(|s| s.n_real).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn padding_rows_are_zero_with_zero_mask() {
+        let mut rng = Xoshiro256::new(22);
+        let ds = synthetic::gaussian_pm1(&mut rng, 10, 3);
+        let shards = split_even(&ds, 3);
+        for s in &shards {
+            for i in s.n_real..s.n_pad() {
+                assert_eq!(s.mask[i], 0.0);
+                assert_eq!(s.y[i], 0.0);
+                assert!(s.x.row(i).iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn ijcnn1_shapes_match_aot_manifest() {
+        // 49 990 over 9 workers → ceil = 5555 + pad → 5632 (aot.py)
+        assert_eq!(padded_n(49_990usize.div_ceil(9)), 5632);
+        // mnist: 60 000 / 9 → 6667 → 6912
+        assert_eq!(padded_n(60_000usize.div_ceil(9)), 6912);
+    }
+}

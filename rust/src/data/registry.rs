@@ -1,0 +1,206 @@
+//! Named-dataset registry — the single source of dataset truth.
+//!
+//! Mirrors python/compile/aot.py `DATASETS` (names, shapes, worker
+//! counts) so artifact shapes always match shard shapes.  Each entry
+//! loads the genuine file from `data/` when present and otherwise
+//! falls back to a deterministic synthetic stand-in of identical shape
+//! (DESIGN.md §3 documents each substitution).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::rng::Xoshiro256;
+
+use super::{idx, libsvm, synthetic, Dataset};
+
+/// Static description of one registry entry (mirror of aot.py).
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub n: usize,
+    /// feature count used by the experiments (after the paper's
+    /// min-feature truncation for the §IV-B small datasets)
+    pub d: usize,
+    /// native feature count of the real file, pre-truncation
+    pub d_native: usize,
+    pub workers: usize,
+}
+
+/// All datasets the experiments use; `d` matches aot.py exactly.
+pub const SPECS: &[DatasetSpec] = &[
+    DatasetSpec { name: "synth", n: 450, d: 50, d_native: 50, workers: 9 },
+    DatasetSpec { name: "ijcnn1", n: 49_990, d: 22, d_native: 22, workers: 9 },
+    DatasetSpec { name: "mnist", n: 60_000, d: 784, d_native: 784, workers: 9 },
+    DatasetSpec { name: "housing", n: 506, d: 8, d_native: 13, workers: 3 },
+    DatasetSpec { name: "bodyfat", n: 252, d: 8, d_native: 14, workers: 3 },
+    DatasetSpec { name: "abalone", n: 4_177, d: 8, d_native: 8, workers: 3 },
+    DatasetSpec { name: "ionosphere", n: 351, d: 14, d_native: 34, workers: 3 },
+    DatasetSpec { name: "adult", n: 1_605, d: 14, d_native: 14, workers: 3 },
+    DatasetSpec { name: "derm", n: 366, d: 14, d_native: 34, workers: 3 },
+];
+
+pub fn spec(name: &str) -> Result<&'static DatasetSpec> {
+    SPECS
+        .iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))
+}
+
+/// Stable per-dataset seed so stand-ins are reproducible and distinct.
+fn seed_for(name: &str) -> u64 {
+    // FNV-1a over the name, mixed with a project constant.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h ^ 0xC0FF_EE00_5EED_0001
+}
+
+/// Load a dataset by name: real file from `data_dir` when present,
+/// deterministic synthetic stand-in otherwise.
+pub fn load(name: &str, data_dir: &Path) -> Result<Dataset> {
+    let s = spec(name)?;
+    if let Some(ds) = try_load_real(s, data_dir)? {
+        return Ok(truncate(ds, s));
+    }
+    Ok(stand_in(s))
+}
+
+fn truncate(ds: Dataset, s: &DatasetSpec) -> Dataset {
+    if ds.d() > s.d {
+        ds.truncate_features(s.d)
+    } else {
+        ds
+    }
+}
+
+fn try_load_real(s: &DatasetSpec, dir: &Path) -> Result<Option<Dataset>> {
+    if s.name == "mnist" {
+        let img: PathBuf = dir.join("train-images-idx3-ubyte");
+        let lab: PathBuf = dir.join("train-labels-idx1-ubyte");
+        if img.exists() && lab.exists() {
+            return Ok(Some(idx::load_mnist(&img, &lab)?));
+        }
+        return Ok(None);
+    }
+    // libsvm-format file named after the dataset
+    for cand in [dir.join(s.name), dir.join(format!("{}.txt", s.name))] {
+        if cand.exists() {
+            let ds = libsvm::load(&cand, s.d_native)?;
+            if ds.n() == 0 {
+                bail!("{}: empty file", cand.display());
+            }
+            return Ok(Some(ds));
+        }
+    }
+    Ok(None)
+}
+
+/// The synthetic stand-in for a registry entry (DESIGN.md §3).
+///
+/// Raw real-world feature matrices are ill-conditioned (feature
+/// scales span decades), which is what makes GD slow, momentum
+/// valuable, and gradients anisotropic enough for censoring to pay
+/// off.  Every stand-in therefore gets a geometric column scaling
+/// (condition ≈ spread² on the Gram matrix) — without it the paper's
+/// comparisons collapse (a whitened Gaussian converges in ~10 GD
+/// steps and nothing censors).
+pub fn stand_in(s: &DatasetSpec) -> Dataset {
+    let mut rng = Xoshiro256::new(seed_for(s.name));
+    let mut ds = match s.name {
+        // class-structured, like digit data
+        "mnist" => synthetic::blobs_pm1(&mut rng, s.n, s.d, 10),
+        // regression targets for the linreg trio (labels generated
+        // *after* the column scaling below, from the scaled features)
+        "housing" | "bodyfat" | "abalone" => {
+            synthetic::gaussian_pm1(&mut rng, s.n, s.d)
+        }
+        // ±1-labelled feature clouds for the classification sets
+        _ => synthetic::gaussian_pm1(&mut rng, s.n, s.d),
+    };
+    // Ill-conditioning: Gram condition ≈ spread².  Per-dataset values
+    // are chosen so GD's iteration count at α ≈ 1/L lands in the range
+    // the paper reports for the real dataset (Table I: ~200 iters on
+    // ijcnn1; Table II: 10²–10³ on the UCI sets; Table III: far from
+    // converged after 2000 iters on MNIST).
+    let spread = match s.name {
+        "synth" => 1.0, // the paper defines this one: whitened normal
+        "ijcnn1" => 4.0,
+        "mnist" => 30.0,
+        _ => 8.0,
+    };
+    if spread > 1.0 {
+        synthetic::scale_columns(&mut ds.x, spread);
+    }
+    if matches!(s.name, "housing" | "bodyfat" | "abalone") {
+        // regression labels from the scaled features + noise
+        let theta_star: Vec<f64> = rng.gaussian_vec(s.d);
+        let scale = 1.0
+            / crate::tasks::smoothness::lambda_max_xtx(&ds.x).sqrt().max(1e-12);
+        let mut y = vec![0.0; s.n];
+        ds.x.gemv(&theta_star, &mut y);
+        for v in &mut y {
+            *v = *v * scale + 0.05 * rng.next_gaussian();
+        }
+        ds.y = y;
+    }
+    ds.source = format!("synthetic {} stand-in ({}x{})", s.name, s.n, s.d);
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_spec_loads_with_right_shape() {
+        for s in SPECS {
+            // skip mnist here (covered separately; it is the slow one)
+            if s.name == "mnist" {
+                continue;
+            }
+            let ds = load(s.name, Path::new("/nonexistent")).unwrap();
+            assert_eq!(ds.n(), s.n, "{}", s.name);
+            assert_eq!(ds.d(), s.d, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(load("nope", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn stand_ins_are_deterministic_and_distinct() {
+        let a = stand_in(spec("ijcnn1").unwrap());
+        let b = stand_in(spec("ijcnn1").unwrap());
+        assert_eq!(a.x.data[..20], b.x.data[..20]);
+        let c = stand_in(spec("derm").unwrap());
+        assert_ne!(a.x.data[..5], c.x.data[..5]);
+    }
+
+    #[test]
+    fn real_file_wins_over_stand_in() {
+        let dir = std::env::temp_dir().join("chb_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // a miniature "derm" in libsvm format — wrong n, but real files win
+        std::fs::write(dir.join("derm"), "1 1:1\n-1 2:1\n").unwrap();
+        let ds = load("derm", &dir).unwrap();
+        assert!(ds.source.contains("derm"));
+        assert_eq!(ds.n(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spec_shapes_match_aot_manifest_protocol() {
+        use crate::data::padded_n;
+        // these pairs are asserted against artifacts/manifest.json by
+        // the integration test; here just pin the arithmetic
+        let s = spec("ijcnn1").unwrap();
+        assert_eq!(padded_n(s.n.div_ceil(s.workers)), 5632);
+        let s = spec("synth").unwrap();
+        assert_eq!(padded_n(s.n.div_ceil(s.workers)), 50);
+    }
+}

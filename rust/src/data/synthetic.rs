@@ -1,0 +1,216 @@
+//! Synthetic dataset generators implementing the paper's protocols.
+//!
+//! Paper §IV-A: "randomly generate an independent sequence of labels,
+//! each with equal probability of y = ±1 … randomly generate 50
+//! independent instances x ∈ ℝ⁵⁰ from a standard normal distribution
+//! and use the same approach as [54] to rescale the data to change the
+//! value of smoothness constants."
+//!
+//! The rescale is exact, not approximate: for linear regression the
+//! worker smoothness constant is L_m = λ_max(X_mᵀX_m), so scaling X_m
+//! by √(L_target / λ_max) sets L_m = L_target up to power-iteration
+//! tolerance.  For logistic regression L_m = ¼λ_max(X_mᵀX_m) + λ.
+
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+use crate::tasks::smoothness::lambda_max_xtx;
+
+use super::Dataset;
+
+/// Standard-normal features, ±1 labels.
+pub fn gaussian_pm1(rng: &mut Xoshiro256, n: usize, d: usize) -> Dataset {
+    let mut x = Matrix::zeros(n, d);
+    for v in &mut x.data {
+        *v = rng.next_gaussian();
+    }
+    let y = (0..n).map(|_| rng.next_sign()).collect();
+    Dataset { x, y, source: format!("synthetic gaussian±1 {n}x{d}") }
+}
+
+/// Standard-normal features with real-valued labels y = Xθ* + noise —
+/// used for regression stand-ins where ±1 labels would make the
+/// objective trivially flat.
+pub fn gaussian_regression(
+    rng: &mut Xoshiro256,
+    n: usize,
+    d: usize,
+    noise: f64,
+) -> Dataset {
+    let mut x = Matrix::zeros(n, d);
+    for v in &mut x.data {
+        *v = rng.next_gaussian();
+    }
+    let theta_star: Vec<f64> = rng.gaussian_vec(d);
+    let mut y = vec![0.0; n];
+    x.gemv(&theta_star, &mut y);
+    for v in &mut y {
+        *v += noise * rng.next_gaussian();
+    }
+    Dataset { x, y, source: format!("synthetic regression {n}x{d}") }
+}
+
+/// Class-structured blobs for the MNIST stand-in: `classes` Gaussian
+/// centers, labels ±1 by class parity (even/odd digit).
+pub fn blobs_pm1(
+    rng: &mut Xoshiro256,
+    n: usize,
+    d: usize,
+    classes: usize,
+) -> Dataset {
+    let centers: Vec<Vec<f64>> = (0..classes)
+        .map(|_| rng.gaussian_vec(d).iter().map(|v| 2.0 * v).collect())
+        .collect();
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let c = rng.next_below(classes as u64) as usize;
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = centers[c][j] + rng.next_gaussian();
+        }
+        y[i] = if c % 2 == 0 { 1.0 } else { -1.0 };
+    }
+    Dataset { x, y, source: format!("synthetic blobs {n}x{d} ({classes} classes)") }
+}
+
+/// Rescale X so that λ_max(XᵀX) == `target` (exactly, via power
+/// iteration).  This is the [54]-style smoothness rescale the paper
+/// uses to set each worker's L_m for linear regression.
+pub fn rescale_to_lambda_max(x: &mut Matrix, target: f64) {
+    let cur = lambda_max_xtx(x);
+    if cur > 0.0 {
+        x.scale((target / cur).sqrt());
+    }
+}
+
+/// Geometric per-column scaling: column j gets factor
+/// spread^(j/(d−1)).  Raw UCI/ijcnn1/MNIST features span decades of
+/// scale, which is what makes the paper's real-data problems
+/// ill-conditioned (GD slow, momentum valuable, gradients
+/// anisotropic → censoring profitable).  The stand-ins apply this so
+/// the *shape* of the comparisons survives the substitution
+/// (DESIGN.md §3).
+pub fn scale_columns(x: &mut Matrix, spread: f64) {
+    let d = x.cols;
+    if d < 2 {
+        return;
+    }
+    let scales: Vec<f64> =
+        (0..d).map(|j| spread.powf(j as f64 / (d - 1) as f64)).collect();
+    for i in 0..x.rows {
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] *= scales[j];
+        }
+    }
+}
+
+/// The Fig. 1/2 protocol: M workers, each with `n_m` standard-normal
+/// samples of dimension d and ±1 labels, worker m rescaled so its
+/// linear-regression smoothness constant is exactly `l_m[m]`.
+/// Returns one Dataset per worker (pre-partitioned by construction).
+pub fn per_worker_rescaled(
+    seed: u64,
+    m_workers: usize,
+    n_m: usize,
+    d: usize,
+    l_m: &[f64],
+) -> Vec<Dataset> {
+    assert_eq!(l_m.len(), m_workers);
+    let mut root = Xoshiro256::new(seed);
+    (0..m_workers)
+        .map(|m| {
+            let mut rng = root.split();
+            let mut ds = gaussian_pm1(&mut rng, n_m, d);
+            rescale_to_lambda_max(&mut ds.x, l_m[m]);
+            ds.source = format!(
+                "synthetic worker {m} {n_m}x{d}, L_m={:.4}", l_m[m]
+            );
+            ds
+        })
+        .collect()
+}
+
+/// Paper Fig. 1/2 smoothness schedule: L_m = (1.3^{m-1})², m = 1..=M.
+pub fn increasing_l(m_workers: usize) -> Vec<f64> {
+    (0..m_workers)
+        .map(|m| {
+            let b: f64 = 1.3f64.powi(m as i32);
+            b * b
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_pm1() {
+        let mut rng = Xoshiro256::new(1);
+        let ds = gaussian_pm1(&mut rng, 100, 5);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn rescale_hits_target() {
+        let mut rng = Xoshiro256::new(2);
+        let mut ds = gaussian_pm1(&mut rng, 60, 10);
+        rescale_to_lambda_max(&mut ds.x, 4.0);
+        let l = lambda_max_xtx(&ds.x);
+        assert!((l - 4.0).abs() < 1e-6, "λ_max={l}");
+    }
+
+    #[test]
+    fn increasing_l_matches_paper() {
+        let l = increasing_l(9);
+        assert!((l[0] - 1.0).abs() < 1e-12);
+        assert!((l[1] - 1.69).abs() < 1e-12); // (1.3)²
+        assert!((l[8] - 1.3f64.powi(8).powi(2)).abs() < 1e-9);
+        // strictly increasing
+        assert!(l.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn per_worker_shapes_and_smoothness() {
+        let l = increasing_l(3);
+        let shards = per_worker_rescaled(7, 3, 50, 50, &l);
+        assert_eq!(shards.len(), 3);
+        for (m, ds) in shards.iter().enumerate() {
+            assert_eq!(ds.n(), 50);
+            assert_eq!(ds.d(), 50);
+            let got = lambda_max_xtx(&ds.x);
+            assert!(
+                (got - l[m]).abs() < 1e-5 * l[m].max(1.0),
+                "worker {m}: λ_max={got} want {}",
+                l[m]
+            );
+        }
+    }
+
+    #[test]
+    fn blobs_have_both_labels() {
+        let mut rng = Xoshiro256::new(3);
+        let ds = blobs_pm1(&mut rng, 200, 8, 10);
+        let pos = ds.y.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > 20 && pos < 180, "pos={pos}");
+    }
+
+    #[test]
+    fn regression_labels_correlate_with_features() {
+        let mut rng = Xoshiro256::new(4);
+        let ds = gaussian_regression(&mut rng, 500, 10, 0.1);
+        // y should have variance ≈ ‖θ*‖² ≈ d, far above the noise
+        let var: f64 =
+            ds.y.iter().map(|v| v * v).sum::<f64>() / ds.n() as f64;
+        assert!(var > 1.0, "var={var}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = per_worker_rescaled(9, 2, 10, 4, &[1.0, 2.0]);
+        let b = per_worker_rescaled(9, 2, 10, 4, &[1.0, 2.0]);
+        assert_eq!(a[0].x.data, b[0].x.data);
+        assert_eq!(a[1].y, b[1].y);
+    }
+}

@@ -1,0 +1,427 @@
+//! Beyond-paper ablation studies (DESIGN.md §5 "extensions").
+//!
+//! * censor-rule variants: the paper's relative rule vs an absolute
+//!   threshold vs periodic transmission — shows why (8) is the right
+//!   shape.
+//! * β sweep: momentum's effect on both iterations *and* censoring.
+//! * worker scaling: comm savings as M grows.
+//! * failure injection: CHB under lossy uplinks.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::{run_serial, RunConfig};
+use crate::metrics::csv;
+use crate::optim::censor::{AbsoluteCensor, PeriodicCensor};
+use crate::optim::{
+    CensorRule, GradDiffCensor, Method, MethodParams,
+};
+use crate::tasks::TaskKind;
+
+use super::figures::synth_linreg_problem;
+use super::runner::{self, Protocol};
+use super::Problem;
+
+/// Run CHB but with an arbitrary censor rule (bypasses the Method
+/// composition table — this is exactly what the ablation varies).
+fn run_with_censor(
+    problem: &Problem,
+    params: MethodParams,
+    censor: &dyn CensorRule,
+    iters: usize,
+) -> crate::metrics::Trace {
+    // mirror engine::run_serial but with an injected censor rule
+    let mut server =
+        crate::coordinator::Server::new(Method::Chb, &params, problem.theta0());
+    let mut workers = problem.rust_workers();
+    let mut trace = crate::metrics::Trace::new(censor.name());
+    for k in 1..=iters {
+        let step_sq = server.theta_step_sq();
+        let theta = server.theta.clone();
+        let rounds: Vec<_> = workers
+            .iter_mut()
+            .map(|w| w.round(&theta, step_sq, censor, k))
+            .collect();
+        let bits: u64 = rounds.iter().map(|r| r.bits).sum();
+        let out = server.apply_round(&rounds);
+        let prev = trace.iters.last();
+        trace.iters.push(crate::metrics::IterStat {
+            k: out.k,
+            loss: out.loss,
+            comms_round: out.transmitted,
+            comms_cum: prev.map_or(0, |s| s.comms_cum) + out.transmitted,
+            agg_grad_sq: out.agg_grad_sq,
+            step_sq: out.step_sq,
+            bits_cum: prev.map_or(0, |s| s.bits_cum) + bits,
+        });
+    }
+    trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
+    trace
+}
+
+/// Ablation A: censor-rule shapes at matched comm budgets.
+pub fn censor_rules(out_dir: &Path, quick: bool) -> Result<()> {
+    let p = synth_linreg_problem(0xAB1);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 300 } else { 1_000 };
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+
+    println!("\n── ablation: censor rules (synthetic linreg), f*={f_star:.4e}");
+    let rules: Vec<Box<dyn CensorRule>> = vec![
+        Box::new(GradDiffCensor { epsilon1: params.epsilon1 }),
+        Box::new(AbsoluteCensor { tau: 1.0 }),
+        Box::new(AbsoluteCensor { tau: 100.0 }),
+        Box::new(PeriodicCensor { period: 2 }),
+    ];
+    let labels = ["grad-diff (paper)", "absolute τ=1", "absolute τ=100", "periodic /2"];
+    let mut rows = Vec::new();
+    for (rule, label) in rules.iter().zip(labels) {
+        let t = run_with_censor(&p, params, rule.as_ref(), iters);
+        println!(
+            "  {label:<20} comms {:>6}  final err {:.4e}",
+            t.total_comms(),
+            t.final_loss() - f_star
+        );
+        rows.push(vec![
+            label.to_string(),
+            t.total_comms().to_string(),
+            format!("{:.8e}", t.final_loss() - f_star),
+        ]);
+    }
+    csv::write_table(
+        &out_dir.join("ablation_censor").join("summary.csv"),
+        &["rule", "comms", "final_obj_err"],
+        &rows,
+    )
+}
+
+/// Ablation B: momentum sweep — β's joint effect on iterations and
+/// censoring (the paper fixes β = 0.4 throughout).
+pub fn beta_sweep(out_dir: &Path, quick: bool) -> Result<()> {
+    let p = synth_linreg_problem(0xAB2);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 400 } else { 1_500 };
+    println!("\n── ablation: β sweep (CHB, synthetic linreg)");
+    let mut rows = Vec::new();
+    for beta in [0.0, 0.2, 0.4, 0.6, 0.8] {
+        let proto = Protocol {
+            alpha: 1.0 / p.l_global,
+            beta,
+            eps_c: 0.1,
+            eps_abs: None,
+            max_iters: iters,
+            stop: crate::coordinator::StopRule::ObjErrBelow {
+                f_star,
+                tol: 1e-10,
+            },
+        };
+        let t = runner::run_method(&p, Method::Chb, &proto, false);
+        println!(
+            "  β={beta:.1}  comms {:>6}  iters {:>6}  final err {:.3e}",
+            t.total_comms(),
+            t.iterations(),
+            t.final_loss() - f_star
+        );
+        rows.push(vec![
+            beta.to_string(),
+            t.total_comms().to_string(),
+            t.iterations().to_string(),
+            format!("{:.8e}", t.final_loss() - f_star),
+        ]);
+    }
+    csv::write_table(
+        &out_dir.join("ablation_beta").join("summary.csv"),
+        &["beta", "comms", "iters", "final_obj_err"],
+        &rows,
+    )
+}
+
+/// Ablation C: worker-count scaling M ∈ {3, 9, 27}.
+pub fn worker_scaling(out_dir: &Path, quick: bool) -> Result<()> {
+    let iters = if quick { 300 } else { 1_000 };
+    println!("\n── ablation: worker scaling (CHB vs HB comms @ equal err)");
+    let mut rows = Vec::new();
+    for m in [3usize, 9, 27] {
+        let l_m: Vec<f64> = (0..m).map(|i| (1.0 + i as f64 * 0.5).powi(2)).collect();
+        let per_worker =
+            crate::data::synthetic::per_worker_rescaled(0xAB3, m, 50, 30, &l_m);
+        let p = Problem::from_worker_datasets(
+            TaskKind::LinReg,
+            "scale",
+            &per_worker,
+            0.0,
+        );
+        let f_star = p.f_star().unwrap();
+        let proto = Protocol::paper_default(1.0 / p.l_global, iters).with_stop(
+            crate::coordinator::StopRule::ObjErrBelow { f_star, tol: 1e-9 },
+        );
+        let chb = runner::run_method(&p, Method::Chb, &proto, false);
+        let hb = runner::run_method(&p, Method::Hb, &proto, false);
+        let saving = 1.0 - chb.total_comms() as f64 / hb.total_comms().max(1) as f64;
+        println!(
+            "  M={m:<3} CHB {:>6} vs HB {:>6}  (saving {:.1}%)",
+            chb.total_comms(),
+            hb.total_comms(),
+            100.0 * saving
+        );
+        rows.push(vec![
+            m.to_string(),
+            chb.total_comms().to_string(),
+            hb.total_comms().to_string(),
+            format!("{saving:.4}"),
+        ]);
+    }
+    csv::write_table(
+        &out_dir.join("ablation_scaling").join("summary.csv"),
+        &["workers", "chb_comms", "hb_comms", "saving"],
+        &rows,
+    )
+}
+
+/// Ablation D: lossy uplinks — CHB's stale-aggregate tolerance.
+pub fn failure_injection(out_dir: &Path, quick: bool) -> Result<()> {
+    let p = synth_linreg_problem(0xAB4);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 400 } else { 1_500 };
+    println!("\n── ablation: uplink drop probability (CHB)");
+    let mut rows = Vec::new();
+    for drop in [0.0, 0.01, 0.05, 0.1] {
+        let params = MethodParams::new(1.0 / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, p.m_workers());
+        let cfg = RunConfig::new(Method::Chb, params, iters).with_drops(drop, 0xD20);
+        let mut ws = p.rust_workers();
+        let t = run_serial(&mut ws, &cfg, p.theta0());
+        println!(
+            "  drop={drop:<5} comms {:>6}  final err {:.4e}",
+            t.total_comms(),
+            t.final_loss() - f_star
+        );
+        rows.push(vec![
+            drop.to_string(),
+            t.total_comms().to_string(),
+            format!("{:.8e}", t.final_loss() - f_star),
+        ]);
+    }
+    csv::write_table(
+        &out_dir.join("ablation_drops").join("summary.csv"),
+        &["drop_prob", "delivered_comms", "final_obj_err"],
+        &rows,
+    )
+}
+
+/// Ablation E: CHB ∘ uplink compression — the composition the paper's
+/// conclusion proposes.  Censoring cuts the *number* of uplinks;
+/// quantization / top-k cut the *bits per uplink*; together they
+/// multiply.
+pub fn compression(out_dir: &Path, quick: bool) -> Result<()> {
+    use crate::compress::{Compressor, NoCompression, TopK, UniformQuantizer};
+    use std::sync::Arc;
+
+    let p = synth_linreg_problem(0xAB5);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 400 } else { 1_500 };
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    println!("\n── ablation: CHB ∘ uplink compression (synthetic linreg)");
+    let codecs: Vec<(&str, Option<Arc<dyn Compressor>>)> = vec![
+        ("f64 (none)", None),
+        ("none-explicit", Some(Arc::new(NoCompression))),
+        ("quant-8bit", Some(Arc::new(UniformQuantizer { bits: 8 }))),
+        ("quant-4bit", Some(Arc::new(UniformQuantizer { bits: 4 }))),
+        ("top-25", Some(Arc::new(TopK { k: 25 }))),
+    ];
+    let mut rows = Vec::new();
+    for (label, codec) in codecs {
+        let cfg = RunConfig::new(Method::Chb, params, iters).with_stop(
+            crate::coordinator::StopRule::ObjErrBelow { f_star, tol: 1e-9 },
+        );
+        let mut ws = p.rust_workers();
+        if let Some(c) = codec {
+            ws = ws
+                .into_iter()
+                .map(|w| w.with_compressor(Arc::clone(&c)))
+                .collect();
+        }
+        let t = run_serial(&mut ws, &cfg, p.theta0());
+        let bits = t.iters.last().map_or(0, |s| s.bits_cum);
+        println!(
+            "  {label:<14} comms {:>6}  uplink {:>8.1} KiB  iters {:>5}  \
+             final err {:.3e}",
+            t.total_comms(),
+            bits as f64 / 8.0 / 1024.0,
+            t.iterations(),
+            t.final_loss() - f_star
+        );
+        rows.push(vec![
+            label.to_string(),
+            t.total_comms().to_string(),
+            bits.to_string(),
+            t.iterations().to_string(),
+            format!("{:.8e}", t.final_loss() - f_star),
+        ]);
+    }
+    csv::write_table(
+        &out_dir.join("ablation_compression").join("summary.csv"),
+        &["codec", "comms", "uplink_bits", "iters", "final_obj_err"],
+        &rows,
+    )
+}
+
+/// Run one problem with an arbitrary (server rule, censor) pair —
+/// the generalized composition the extensions explore.
+fn run_custom(
+    problem: &Problem,
+    mut rule: Box<dyn crate::optim::ServerRule>,
+    censor: &dyn CensorRule,
+    label: &str,
+    iters: usize,
+    stop_err: Option<(f64, f64)>,
+) -> crate::metrics::Trace {
+    let mut theta = problem.theta0();
+    let mut theta_prev = theta.clone();
+    let mut agg = vec![0.0; problem.dim()];
+    let mut workers = problem.rust_workers();
+    let mut trace = crate::metrics::Trace::new(label);
+    for k in 1..=iters {
+        let step_sq = crate::linalg::dist2_sq(&theta, &theta_prev);
+        let mut loss = 0.0;
+        let mut transmitted = 0;
+        for w in workers.iter_mut() {
+            let r = w.round(&theta, step_sq, censor, k);
+            loss += r.loss;
+            if r.decision == crate::optim::CensorDecision::Transmit {
+                crate::linalg::axpy(1.0, &r.delta, &mut agg);
+                transmitted += 1;
+            }
+        }
+        rule.step(&mut theta, &mut theta_prev, &agg);
+        let prev = trace.iters.last();
+        trace.iters.push(crate::metrics::IterStat {
+            k,
+            loss,
+            comms_round: transmitted,
+            comms_cum: prev.map_or(0, |s| s.comms_cum) + transmitted,
+            agg_grad_sq: crate::linalg::norm2_sq(&agg),
+            step_sq: crate::linalg::dist2_sq(&theta, &theta_prev),
+            bits_cum: 0,
+        });
+        if let Some((f_star, tol)) = stop_err {
+            if loss - f_star < tol {
+                break;
+            }
+        }
+    }
+    trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
+    trace
+}
+
+/// Ablation F: censored Nesterov (CNAG) vs CHB vs censored GD — the
+/// censor rule composes with any momentum scheme.
+pub fn nesterov(out_dir: &Path, quick: bool) -> Result<()> {
+    use crate::optim::{GdRule, HeavyBallRule, NesterovRule, ServerRule};
+    let p = synth_linreg_problem(0xAB6);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 800 } else { 3_000 };
+    let alpha = 1.0 / p.l_global;
+    let eps1 = crate::optim::censor::epsilon1_scaled(0.1, alpha, p.m_workers());
+    let censor = GradDiffCensor { epsilon1: eps1 };
+    println!("\n── ablation: censored momentum family (synthetic linreg)");
+    let rules: Vec<(&str, Box<dyn ServerRule>)> = vec![
+        ("C-GD (LAG)", Box::new(GdRule { alpha })),
+        ("CHB (paper)", Box::new(HeavyBallRule::new(alpha, 0.4, p.dim()))),
+        ("C-NAG", Box::new(NesterovRule::new(alpha, 0.4, p.dim()))),
+    ];
+    let mut rows = Vec::new();
+    for (label, rule) in rules {
+        let t = run_custom(&p, rule, &censor, label, iters,
+                           Some((f_star, 1e-9)));
+        println!(
+            "  {label:<12} comms {:>6}  iters {:>5}  final err {:.3e}",
+            t.total_comms(),
+            t.iterations(),
+            t.final_loss() - f_star
+        );
+        rows.push(vec![
+            label.to_string(),
+            t.total_comms().to_string(),
+            t.iterations().to_string(),
+            format!("{:.8e}", t.final_loss() - f_star),
+        ]);
+    }
+    csv::write_table(
+        &out_dir.join("ablation_nesterov").join("summary.csv"),
+        &["rule", "comms", "iters", "final_obj_err"],
+        &rows,
+    )
+}
+
+/// Ablation G: adaptive ε₁ annealing vs the paper's fixed threshold
+/// (the conclusion's open problem).
+pub fn adaptive_epsilon(out_dir: &Path, quick: bool) -> Result<()> {
+    use crate::optim::{AdaptiveCensor, HeavyBallRule};
+    let p = synth_linreg_problem(0xAB7);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 800 } else { 3_000 };
+    let alpha = 1.0 / p.l_global;
+    let m = p.m_workers();
+    let eps_ref = crate::optim::censor::epsilon1_scaled(0.1, alpha, m);
+    println!("\n── ablation: adaptive ε₁ (anneal hi→lo) vs fixed");
+    let mut rows = Vec::new();
+    let cases: Vec<(&str, Box<dyn CensorRule>)> = vec![
+        ("fixed 0.1", Box::new(GradDiffCensor { epsilon1: eps_ref })),
+        (
+            "anneal 10→0.01",
+            Box::new(AdaptiveCensor {
+                eps_hi: crate::optim::censor::epsilon1_scaled(10.0, alpha, m),
+                eps_lo: crate::optim::censor::epsilon1_scaled(0.01, alpha, m),
+                horizon: iters / 4,
+            }),
+        ),
+        (
+            "anneal 1→0.1",
+            Box::new(AdaptiveCensor {
+                eps_hi: crate::optim::censor::epsilon1_scaled(1.0, alpha, m),
+                eps_lo: eps_ref,
+                horizon: iters / 4,
+            }),
+        ),
+    ];
+    for (label, censor) in cases {
+        let rule = Box::new(HeavyBallRule::new(alpha, 0.4, p.dim()));
+        let t = run_custom(&p, rule, censor.as_ref(), label, iters,
+                           Some((f_star, 1e-9)));
+        println!(
+            "  {label:<16} comms {:>6}  iters {:>5}  final err {:.3e}",
+            t.total_comms(),
+            t.iterations(),
+            t.final_loss() - f_star
+        );
+        rows.push(vec![
+            label.to_string(),
+            t.total_comms().to_string(),
+            t.iterations().to_string(),
+            format!("{:.8e}", t.final_loss() - f_star),
+        ]);
+    }
+    csv::write_table(
+        &out_dir.join("ablation_adaptive_eps").join("summary.csv"),
+        &["schedule", "comms", "iters", "final_obj_err"],
+        &rows,
+    )
+}
+
+/// Run every ablation.
+pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
+    censor_rules(out_dir, quick)?;
+    beta_sweep(out_dir, quick)?;
+    worker_scaling(out_dir, quick)?;
+    failure_injection(out_dir, quick)?;
+    compression(out_dir, quick)?;
+    nesterov(out_dir, quick)?;
+    adaptive_epsilon(out_dir, quick)
+}

@@ -1,0 +1,155 @@
+//! Experiment harness: one driver per paper figure/table.
+//!
+//! [`Problem`] bundles everything a run needs (task, shards, λ, L,
+//! f*); [`runner`] executes the four methods on it; `figures` /
+//! `tables` / `ablations` are the per-artifact drivers listed in
+//! DESIGN.md §5.  Every driver writes CSVs under `results/<id>/` and
+//! prints the paper-matching summary rows.
+
+pub mod ablations;
+pub mod figures;
+pub mod fstar;
+pub mod runner;
+pub mod tables;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::{partition, registry, Dataset, Shard};
+use crate::tasks::{self, smoothness, TaskKind};
+
+/// A fully-specified learning problem (one dataset × one task).
+pub struct Problem {
+    pub task: TaskKind,
+    pub dataset: String,
+    pub shards: Vec<Shard>,
+    /// per-worker regularization λ_m = λ_global / M, so that
+    /// Σ_m ½λ_m‖θ‖² = ½λ_global‖θ‖² (the paper's single global λ)
+    pub lam_m: f64,
+    /// global smoothness L = Σ_m L_m (α = 1/L protocol)
+    pub l_global: f64,
+    /// per-worker smoothness constants L_m
+    pub l_m: Vec<f64>,
+}
+
+impl Problem {
+    /// Build from a registry dataset with the paper's worker count.
+    pub fn from_registry(
+        task: TaskKind,
+        dataset: &str,
+        data_dir: &Path,
+        lam_global: f64,
+    ) -> Result<Problem> {
+        let spec = registry::spec(dataset)?;
+        let ds = registry::load(dataset, data_dir)?;
+        // NN protocol: standardized features + mean loss (NnTask); the
+        // sigmoid net needs O(1) activations for the paper's α range
+        let ds = if task == TaskKind::Nn { ds.standardized() } else { ds };
+        let shards = partition::split_even(&ds, spec.workers);
+        Ok(Self::from_shards(task, dataset, shards, lam_global))
+    }
+
+    /// Build from pre-partitioned per-worker datasets (the synthetic
+    /// Fig. 1/2/3 protocols).
+    pub fn from_worker_datasets(
+        task: TaskKind,
+        dataset: &str,
+        per_worker: &[Dataset],
+        lam_global: f64,
+    ) -> Problem {
+        let shards = partition::shards_from_datasets(per_worker);
+        Self::from_shards(task, dataset, shards, lam_global)
+    }
+
+    /// Build directly from shards (used by the subsampling drivers).
+    pub fn from_shards(
+        task: TaskKind,
+        dataset: &str,
+        shards: Vec<Shard>,
+        lam_global: f64,
+    ) -> Problem {
+        let m = shards.len();
+        let lam_m = lam_global / m as f64;
+        let l_m: Vec<f64> = shards
+            .iter()
+            .map(|s| {
+                // NN uses the mean-loss regime (tasks::NnTask::new)
+                let wscale = if task == TaskKind::Nn {
+                    1.0 / s.n_real.max(1) as f64
+                } else {
+                    1.0
+                };
+                smoothness::worker_smoothness_scaled(task, &s.x, lam_m, wscale)
+            })
+            .collect();
+        let l_global = l_m.iter().sum();
+        Problem {
+            task,
+            dataset: dataset.to_string(),
+            shards,
+            lam_m,
+            l_global,
+            l_m,
+        }
+    }
+
+    pub fn m_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.task.theta_dim(self.shards[0].x.cols)
+    }
+
+    /// Initial iterate (paper: unspecified; zeros everywhere except
+    /// the NN, which needs symmetry breaking).
+    pub fn theta0(&self) -> Vec<f64> {
+        let p = self.dim();
+        if self.task == TaskKind::Nn {
+            // small deterministic init, same for every method
+            let mut rng = crate::rng::Xoshiro256::new(0x1217);
+            (0..p).map(|_| 0.2 * rng.next_gaussian()).collect()
+        } else {
+            vec![0.0; p]
+        }
+    }
+
+    /// Pure-rust workers (the default experiment backend).
+    pub fn rust_workers(&self) -> Vec<crate::coordinator::Worker> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                crate::coordinator::Worker::new(
+                    i,
+                    Box::new(crate::coordinator::RustBackend::new(
+                        tasks::build_objective(self.task, s, self.lam_m),
+                    )),
+                )
+            })
+            .collect()
+    }
+
+    /// PJRT workers executing the AOT artifact for this problem.
+    pub fn pjrt_workers(
+        &self,
+        rt: &mut crate::runtime::PjrtRuntime,
+    ) -> Result<Vec<crate::coordinator::Worker>> {
+        let meta = rt.manifest().find(self.task, &self.dataset)?.clone();
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let backend = rt.worker_backend(&meta, s, self.lam_m)?;
+                Ok(crate::coordinator::Worker::new(i, Box::new(backend)))
+            })
+            .collect()
+    }
+
+    /// Minimum objective value f(θ*) (None for the nonconvex NN,
+    /// where the paper reports ‖∇‖² instead).
+    pub fn f_star(&self) -> Option<f64> {
+        fstar::f_star(self)
+    }
+}

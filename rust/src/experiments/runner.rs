@@ -1,0 +1,159 @@
+//! Shared run orchestration: execute the four methods on one problem
+//! with the paper's parameter protocol, collect traces.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::{run_serial, RunConfig, StopRule};
+use crate::metrics::{csv, Trace};
+use crate::optim::{Method, MethodParams};
+
+use super::Problem;
+
+/// Parameter protocol for one experiment (paper §IV defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct Protocol {
+    pub alpha: f64,
+    pub beta: f64,
+    /// ε₁ = eps_c / (α²M²); `eps_abs` overrides when Some (NN runs use
+    /// a raw ε₁ = 0.01)
+    pub eps_c: f64,
+    pub eps_abs: Option<f64>,
+    pub max_iters: usize,
+    pub stop: StopRule,
+}
+
+impl Protocol {
+    /// The §IV default: β = 0.4, ε₁ = 0.1/(α²M²).
+    pub fn paper_default(alpha: f64, max_iters: usize) -> Protocol {
+        Protocol {
+            alpha,
+            beta: 0.4,
+            eps_c: 0.1,
+            eps_abs: None,
+            max_iters,
+            stop: StopRule::MaxIters,
+        }
+    }
+
+    pub fn with_stop(mut self, stop: StopRule) -> Protocol {
+        self.stop = stop;
+        self
+    }
+
+    pub fn with_eps_abs(mut self, eps: f64) -> Protocol {
+        self.eps_abs = Some(eps);
+        self
+    }
+
+    pub fn params(&self, m_workers: usize) -> MethodParams {
+        let p = MethodParams::new(self.alpha).with_beta(self.beta);
+        match self.eps_abs {
+            Some(e) => p.with_epsilon1(e),
+            None => p.with_epsilon1_scaled(self.eps_c, m_workers),
+        }
+    }
+}
+
+/// Run one method on a problem; fresh workers each time.
+pub fn run_method(
+    problem: &Problem,
+    method: Method,
+    proto: &Protocol,
+    comm_map: bool,
+) -> Trace {
+    let params = proto.params(problem.m_workers());
+    let mut cfg = RunConfig::new(method, params, proto.max_iters)
+        .with_stop(proto.stop);
+    if comm_map {
+        cfg = cfg.with_comm_map();
+    }
+    let mut workers = problem.rust_workers();
+    run_serial(&mut workers, &cfg, problem.theta0())
+}
+
+/// Run all four methods; returns traces in Method::ALL order
+/// (CHB, HB, LAG, GD — the paper's table order).
+pub fn run_all_methods(problem: &Problem, proto: &Protocol) -> Vec<Trace> {
+    Method::ALL
+        .iter()
+        .map(|&m| run_method(problem, m, proto, false))
+        .collect()
+}
+
+/// Write one CSV per trace under `results/<id>/`.
+pub fn write_traces(
+    out_dir: &Path,
+    id: &str,
+    traces: &[Trace],
+    f_star: f64,
+) -> Result<()> {
+    for t in traces {
+        let path = out_dir.join(id).join(format!("{}.csv", t.method));
+        csv::write_trace(&path, t, f_star)?;
+    }
+    Ok(())
+}
+
+/// Console summary block shared by the figure drivers.
+pub fn print_summary(id: &str, problem: &Problem, traces: &[Trace], f_star: f64) {
+    println!("\n── {id}: {} / {} (M={}, d={}, L={:.4e})",
+        problem.task.name(), problem.dataset, problem.m_workers(),
+        problem.dim(), problem.l_global);
+    println!(
+        "{:<6} {:>10} {:>10} {:>14} {:>14}",
+        "method", "comms", "iters", "final f−f*", "final ‖∇‖²"
+    );
+    for t in traces {
+        let last = t.iters.last();
+        println!(
+            "{:<6} {:>10} {:>10} {:>14.4e} {:>14.4e}",
+            t.method,
+            t.total_comms(),
+            t.iterations(),
+            last.map_or(f64::NAN, |s| s.loss - f_star),
+            last.map_or(f64::NAN, |s| s.agg_grad_sq),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::tasks::TaskKind;
+
+    fn quick_problem() -> Problem {
+        let l_m = synthetic::increasing_l(3);
+        let per_worker = synthetic::per_worker_rescaled(5, 3, 20, 10, &l_m);
+        Problem::from_worker_datasets(TaskKind::LinReg, "quick", &per_worker, 0.0)
+    }
+
+    #[test]
+    fn run_all_methods_produces_four_ordered_traces() {
+        let p = quick_problem();
+        let proto = Protocol::paper_default(1.0 / p.l_global, 50);
+        let traces = run_all_methods(&p, &proto);
+        assert_eq!(traces.len(), 4);
+        assert_eq!(traces[0].method, "CHB");
+        assert_eq!(traces[1].method, "HB");
+        assert_eq!(traces[2].method, "LAG");
+        assert_eq!(traces[3].method, "GD");
+        // uncensored methods transmit M per iteration
+        assert_eq!(traces[3].total_comms(), 50 * 3);
+        assert_eq!(traces[1].total_comms(), 50 * 3);
+        // censored methods should save something on this problem
+        assert!(traces[0].total_comms() < traces[1].total_comms());
+    }
+
+    #[test]
+    fn protocol_eps_abs_overrides_scaling() {
+        let proto = Protocol::paper_default(0.1, 10).with_eps_abs(0.01);
+        let p = proto.params(9);
+        assert_eq!(p.epsilon1, 0.01);
+        let proto2 = Protocol::paper_default(0.1, 10);
+        let p2 = proto2.params(9);
+        assert!((p2.epsilon1 - 0.1 / (0.01 * 81.0)).abs() < 1e-12);
+    }
+}

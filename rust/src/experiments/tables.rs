@@ -1,0 +1,381 @@
+//! Table drivers (Tables I–III) and the shared per-dataset "suites"
+//! the figure drivers reuse (Fig. 4/5 plot the Table-I runs, etc.).
+//!
+//! Protocols follow §IV exactly; where the synthetic stand-in's scale
+//! differs from the real dataset's, the step size is re-expressed
+//! relative to the measured L (EXPERIMENTS.md documents each case).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::StopRule;
+use crate::data::Dataset;
+use crate::metrics::{csv, Trace};
+use crate::rng::Xoshiro256;
+use crate::tasks::TaskKind;
+
+use super::runner::{self, Protocol};
+use super::Problem;
+
+/// One task's results within a suite.
+pub struct SuiteEntry {
+    pub task: TaskKind,
+    pub dataset: String,
+    /// CHB, HB, LAG, GD (paper order)
+    pub traces: Vec<Trace>,
+    /// f(θ*) (NaN for the NN task)
+    pub f_star: f64,
+    /// f(θ⁰) (for per-communication descent)
+    pub f_theta0: f64,
+}
+
+/// Subsample a dataset to at most `n` rows (deterministic).
+pub fn subsample(ds: &Dataset, n: usize, seed: u64) -> Dataset {
+    if ds.n() <= n {
+        return ds.clone();
+    }
+    let mut idx: Vec<usize> = (0..ds.n()).collect();
+    Xoshiro256::new(seed).shuffle(&mut idx);
+    idx.truncate(n);
+    let mut x = crate::linalg::Matrix::zeros(n, ds.d());
+    let mut y = vec![0.0; n];
+    for (i, &src) in idx.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(ds.x.row(src));
+        y[i] = ds.y[src];
+    }
+    Dataset { x, y, source: format!("{} (subsampled to {n})", ds.source) }
+}
+
+fn run_entry(problem: &Problem, proto: &Protocol) -> SuiteEntry {
+    let f_star = problem.f_star().unwrap_or(f64::NAN);
+    let traces = runner::run_all_methods(problem, proto);
+    let f_theta0 = super::fstar::objective(problem, &problem.theta0());
+    SuiteEntry {
+        task: problem.task,
+        dataset: problem.dataset.clone(),
+        traces,
+        f_star,
+        f_theta0,
+    }
+}
+
+/// Build a registry problem, optionally subsampled (MNIST on 1 core).
+pub fn registry_problem(
+    task: TaskKind,
+    dataset: &str,
+    data_dir: &Path,
+    lam: f64,
+    max_n: Option<usize>,
+) -> Result<Problem> {
+    let spec = crate::data::registry::spec(dataset)?;
+    let ds = crate::data::registry::load(dataset, data_dir)?;
+    let ds = match max_n {
+        Some(n) => subsample(&ds, n, 0xD5),
+        None => ds,
+    };
+    // NN protocol: standardized features + mean loss (see NnTask);
+    // the sigmoid net needs O(1) activations for the paper's α.
+    let ds = if task == TaskKind::Nn { ds.standardized() } else { ds };
+    let shards = crate::data::partition::split_even(&ds, spec.workers);
+    Ok(Problem::from_shards(task, dataset, shards, lam))
+}
+
+// ---------------------------------------------------------------------------
+// Table I suite: ijcnn1, 4 tasks (also feeds Fig. 4 and Fig. 5)
+// ---------------------------------------------------------------------------
+
+/// Paper protocol: α = 1e-4 for the three regressions (re-expressed
+/// against the measured L for the stand-in), ε₁ = 0.1/(α²M²); stops at
+/// obj-err 1e-7 (lin/lasso) and 1e-5 (logistic); NN: α = 0.02,
+/// ε₁ = 0.01, λ = 1/49990, 500 iterations.
+pub fn table1_suite(data_dir: &Path, quick: bool) -> Result<Vec<SuiteEntry>> {
+    let mut out = Vec::new();
+    let cap = if quick { Some(9_000) } else { None };
+    let iters_cap = if quick { 4_000 } else { 20_000 };
+    let nn_iters = if quick { 200 } else { 500 };
+
+    // linear regression, target 1e-7
+    {
+        let p = registry_problem(TaskKind::LinReg, "ijcnn1", data_dir, 0.0, cap)?;
+        let f_star = p.f_star().unwrap();
+        let alpha = pick_alpha(&p, 1e-4, data_dir);
+        let proto = Protocol::paper_default(alpha, iters_cap)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-7 });
+        out.push(run_entry(&p, &proto));
+    }
+    // lasso, λ = 0.5, target 1e-7
+    {
+        let p = registry_problem(TaskKind::Lasso, "ijcnn1", data_dir, 0.5, cap)?;
+        let f_star = p.f_star().unwrap();
+        let alpha = pick_alpha(&p, 1e-4, data_dir);
+        let proto = Protocol::paper_default(alpha, iters_cap)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-7 });
+        out.push(run_entry(&p, &proto));
+    }
+    // logistic, λ = 0.001, target 1e-5
+    {
+        let p = registry_problem(TaskKind::LogReg, "ijcnn1", data_dir, 0.001, cap)?;
+        let f_star = p.f_star().unwrap();
+        let alpha = pick_alpha(&p, 1e-4, data_dir);
+        let proto = Protocol::paper_default(alpha, iters_cap)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-5 });
+        out.push(run_entry(&p, &proto));
+    }
+    // NN: fixed iterations, α = 0.02, ε₁ = 0.01, λ = 1/49990
+    {
+        let p = registry_problem(
+            TaskKind::Nn,
+            "ijcnn1",
+            data_dir,
+            1.0 / 49_990.0,
+            cap,
+        )?;
+        let alpha = nn_alpha(&p, 0.02);
+        let proto = Protocol::paper_default(alpha, nn_iters).with_eps_abs(0.01);
+        out.push(run_entry(&p, &proto));
+    }
+    Ok(out)
+}
+
+/// The paper's absolute α was tuned to the real dataset's scale.  With
+/// the real file present we use it verbatim; for the synthetic
+/// stand-in we preserve the paper's *regime* — a stable step slightly
+/// below 1/L — so the convergence/censoring behavior matches
+/// (DESIGN.md §3, EXPERIMENTS.md "step-size re-expression").
+fn pick_alpha(p: &Problem, paper_alpha: f64, data_dir: &Path) -> f64 {
+    let real = data_dir.join(&p.dataset).exists()
+        || data_dir.join(format!("{}.txt", p.dataset)).exists()
+        || (p.dataset == "mnist"
+            && data_dir.join("train-images-idx3-ubyte").exists());
+    if real {
+        paper_alpha
+    } else {
+        0.9 / p.l_global
+    }
+}
+
+/// NN step size: the paper's α works at σ-activation scale; guard
+/// against stand-in curvature blowups (the NN's effective smoothness
+/// tracks the data Gram but with weight-dependent slack, so stay well
+/// inside 1/L).
+fn nn_alpha(p: &Problem, paper_alpha: f64) -> f64 {
+    paper_alpha.min(0.5 / p.l_global)
+}
+
+// ---------------------------------------------------------------------------
+// Table II suite: small UCI datasets, 3 workers (feeds Fig. 6/7)
+// ---------------------------------------------------------------------------
+
+/// §IV-B protocol: α = 1/L, ε₁ = 0.1/(α²M²), β = 0.4; stop at 1e-7;
+/// λ_logistic = 0.001, λ_lasso = 0.1; NN on adult: α = 0.01,
+/// ε₁ = 0.01, λ = 1/1605, 500 iterations.
+pub fn table2_suite(data_dir: &Path, quick: bool) -> Result<Vec<SuiteEntry>> {
+    let iters_cap = if quick { 4_000 } else { 40_000 };
+    let nn_iters = if quick { 300 } else { 500 };
+    let mut out = Vec::new();
+    for ds in ["housing", "bodyfat", "abalone"] {
+        let p = Problem::from_registry(TaskKind::LinReg, ds, data_dir, 0.0)?;
+        let f_star = p.f_star().unwrap();
+        let proto = Protocol::paper_default(1.0 / p.l_global, iters_cap)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-7 });
+        out.push(run_entry(&p, &proto));
+    }
+    for ds in ["ionosphere", "adult", "derm"] {
+        let p = Problem::from_registry(TaskKind::LogReg, ds, data_dir, 0.001)?;
+        let f_star = p.f_star().unwrap();
+        let proto = Protocol::paper_default(1.0 / p.l_global, iters_cap)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-7 });
+        out.push(run_entry(&p, &proto));
+    }
+    for ds in ["ionosphere", "adult", "derm"] {
+        let p = Problem::from_registry(TaskKind::Lasso, ds, data_dir, 0.1)?;
+        let f_star = p.f_star().unwrap();
+        let proto = Protocol::paper_default(1.0 / p.l_global, iters_cap)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-7 });
+        out.push(run_entry(&p, &proto));
+    }
+    {
+        let p =
+            registry_problem(TaskKind::Nn, "adult", data_dir, 1.0 / 1_605.0, None)?;
+        let alpha = nn_alpha(&p, 0.01);
+        let proto = Protocol::paper_default(alpha, nn_iters).with_eps_abs(0.01);
+        out.push(run_entry(&p, &proto));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table III suite: MNIST, fixed iteration budget (feeds Fig. 8/9)
+// ---------------------------------------------------------------------------
+
+/// §IV-B MNIST protocol: fixed 2000 iterations (regressions) / 500
+/// (NN); α = 1e-8 (lin/lasso), 1e-6 (logistic), 0.02 (NN);
+/// λ = 0.5 (lasso), 0.001 (logistic), 1/60000 (NN); ε₁ as usual.
+/// `quick` subsamples the stand-in (this is a 1-core image) — the
+/// comparison's shape is scale-free.
+pub fn table3_suite(data_dir: &Path, quick: bool) -> Result<Vec<SuiteEntry>> {
+    let cap = if quick { Some(4_500) } else { None };
+    let iters = if quick { 800 } else { 2_000 };
+    let nn_iters = if quick { 60 } else { 500 };
+    let mut out = Vec::new();
+
+    for (task, lam, paper_alpha) in [
+        (TaskKind::LinReg, 0.0, 1e-8),
+        (TaskKind::Lasso, 0.5, 1e-8),
+        (TaskKind::LogReg, 0.001, 1e-6),
+    ] {
+        let p = registry_problem(task, "mnist", data_dir, lam, cap)?;
+        let alpha = pick_alpha(&p, paper_alpha, data_dir);
+        let proto = Protocol::paper_default(alpha, iters);
+        out.push(run_entry(&p, &proto));
+    }
+    {
+        let p = registry_problem(
+            TaskKind::Nn,
+            "mnist",
+            data_dir,
+            1.0 / 60_000.0,
+            cap.map(|c| c / 2),
+        )?;
+        let alpha = nn_alpha(&p, 0.02);
+        let proto = Protocol::paper_default(alpha, nn_iters).with_eps_abs(0.01);
+        out.push(run_entry(&p, &proto));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// printing / writing
+// ---------------------------------------------------------------------------
+
+/// Print a paper-style table: one row per method.
+pub fn print_table(title: &str, entries: &[SuiteEntry], fixed_iters: bool) {
+    println!("\n=== {title} ===");
+    let header: Vec<String> = entries
+        .iter()
+        .map(|e| format!("{:^28}", format!("{}/{}", e.task.name(), e.dataset)))
+        .collect();
+    println!("{:<6} {}", "method", header.join(" | "));
+    for (mi, method) in ["CHB", "HB", "LAG", "GD"].iter().enumerate() {
+        let cells: Vec<String> = entries
+            .iter()
+            .map(|e| {
+                let t = &e.traces[mi];
+                if e.task == TaskKind::Nn {
+                    format!(
+                        "comm {:>6} ‖∇‖² {:>10.4e}",
+                        t.total_comms(),
+                        t.iters.last().map_or(f64::NAN, |s| s.agg_grad_sq)
+                    )
+                } else if fixed_iters {
+                    format!(
+                        "comm {:>6} err {:>11.4e}",
+                        t.total_comms(),
+                        t.final_loss() - e.f_star
+                    )
+                } else {
+                    format!(
+                        "comm {:>6} iter {:>11}",
+                        t.total_comms(),
+                        t.iterations()
+                    )
+                }
+            })
+            .collect();
+        println!("{:<6} {}", method, cells.join(" | "));
+    }
+}
+
+/// Write each entry's traces + a summary CSV under results/<id>/.
+pub fn write_suite(out_dir: &Path, id: &str, entries: &[SuiteEntry]) -> Result<()> {
+    let mut rows = Vec::new();
+    for e in entries {
+        for t in &e.traces {
+            let sub = format!("{}_{}", e.task.name(), e.dataset);
+            csv::write_trace(
+                &out_dir.join(id).join(&sub).join(format!("{}.csv", t.method)),
+                t,
+                if e.f_star.is_nan() { 0.0 } else { e.f_star },
+            )?;
+            rows.push(vec![
+                e.task.name().to_string(),
+                e.dataset.clone(),
+                t.method.clone(),
+                t.total_comms().to_string(),
+                t.iterations().to_string(),
+                format!("{:.6e}", t.final_loss() - e.f_star),
+                format!(
+                    "{:.6e}",
+                    t.iters.last().map_or(f64::NAN, |s| s.agg_grad_sq)
+                ),
+            ]);
+        }
+    }
+    csv::write_table(
+        &out_dir.join(id).join("summary.csv"),
+        &["task", "dataset", "method", "comms", "iters", "final_obj_err",
+          "final_agg_grad_sq"],
+        &rows,
+    )
+}
+
+/// Table I driver.
+pub fn table1(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
+    let entries = table1_suite(data_dir, quick)?;
+    print_table("Table I (ijcnn1)", &entries, false);
+    write_suite(out_dir, "table1", &entries)
+}
+
+/// Table II driver.
+pub fn table2(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
+    let entries = table2_suite(data_dir, quick)?;
+    print_table("Table II (small UCI)", &entries, false);
+    write_suite(out_dir, "table2", &entries)
+}
+
+/// Table III driver.
+pub fn table3(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
+    let entries = table3_suite(data_dir, quick)?;
+    print_table("Table III (MNIST, fixed iters)", &entries, true);
+    write_suite(out_dir, "table3", &entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn subsample_preserves_rows_and_is_deterministic() {
+        let mut rng = Xoshiro256::new(50);
+        let ds = synthetic::gaussian_pm1(&mut rng, 100, 4);
+        let a = subsample(&ds, 30, 1);
+        let b = subsample(&ds, 30, 1);
+        assert_eq!(a.n(), 30);
+        assert_eq!(a.x.data, b.x.data);
+        // every sampled row exists in the original
+        for i in 0..a.n() {
+            let found = (0..ds.n()).any(|j| ds.x.row(j) == a.x.row(i));
+            assert!(found, "row {i} not from source");
+        }
+        // no-op when already small enough
+        assert_eq!(subsample(&ds, 200, 1).n(), 100);
+    }
+
+    #[test]
+    fn registry_problem_subsamples_and_rebuilds_smoothness() {
+        let p = registry_problem(
+            TaskKind::LinReg,
+            "ijcnn1",
+            Path::new("/nonexistent"),
+            0.0,
+            Some(900),
+        )
+        .unwrap();
+        assert_eq!(p.m_workers(), 9);
+        assert!(p.shards[0].n_real <= 100);
+        assert!(p.l_global > 0.0);
+        assert_eq!(p.l_m.len(), 9);
+    }
+}

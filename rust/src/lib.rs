@@ -1,0 +1,33 @@
+//! # chb-fed — Communication-Efficient Federated Learning with Censored Heavy Ball
+//!
+//! Production-grade reproduction of Chen, Blum & Sadler,
+//! *"Communication-Efficient Federated Learning Using Censored Heavy
+//! Ball Descent"* (2022): a server–worker federated runtime in rust
+//! (Layer 3) whose per-worker gradients are AOT-compiled JAX/Pallas
+//! programs executed through PJRT (Layers 1–2), plus a pure-rust f64
+//! backend mirroring the same math.
+//!
+//! Quick tour (see README.md for the full map):
+//! * [`optim`] — GD / HB / LAG-WK / CHB update + censor rules (the
+//!   paper's Algorithm 1).
+//! * [`coordinator`] — the federated round engine and comm accounting.
+//! * [`runtime`] — PJRT artifact loading/execution.
+//! * [`experiments`] — one driver per paper figure/table.
+//! * [`theory`] — the paper's parameter conditions (10)–(12), rate
+//!   predictions, and Lemma 2 bounds as executable checks.
+
+pub mod bench;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod net;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod tasks;
+pub mod testing;
+pub mod theory;
+pub mod util;

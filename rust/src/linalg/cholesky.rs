@@ -1,0 +1,148 @@
+//! Cholesky factorization / SPD solve — used by the f* solvers
+//! (normal equations for linear regression, Newton steps for
+//! logistic regression).  Off the hot path.
+
+use anyhow::{bail, Result};
+
+use super::Matrix;
+
+/// Lower-triangular Cholesky factor of an SPD matrix (in place copy).
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor A = L·Lᵀ.  `ridge` is added to the diagonal first
+    /// (regularization / numerical floor).
+    pub fn factor(a: &Matrix, ridge: f64) -> Result<Cholesky> {
+        if a.rows != a.cols {
+            bail!("cholesky: non-square {}x{}", a.rows, a.cols);
+        }
+        let n = a.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a.get(i, j) + if i == j { ridge } else { 0.0 };
+                for k in 0..j {
+                    sum -= l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        bail!(
+                            "cholesky: matrix not positive definite \
+                             (pivot {i}: {sum:.3e}); increase ridge"
+                        );
+                    }
+                    l.set(i, j, sum.sqrt());
+                } else {
+                    l.set(i, j, sum / l.get(j, j));
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve A·x = b via forward/back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // L·z = b
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l.get(i, k) * z[k];
+            }
+            z[i] = sum / self.l.get(i, i);
+        }
+        // Lᵀ·x = z
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = z[i];
+            for k in i + 1..n {
+                sum -= self.l.get(k, i) * x[k];
+            }
+            x[i] = sum / self.l.get(i, i);
+        }
+        x
+    }
+}
+
+/// Gram matrix Σ_s X_sᵀX_s over shards (d × d).
+pub fn gram(shards: &[&Matrix]) -> Matrix {
+    let d = shards.first().map_or(0, |x| x.cols);
+    let mut g = Matrix::zeros(d, d);
+    for x in shards {
+        assert_eq!(x.cols, d);
+        for i in 0..x.rows {
+            let row = x.row(i);
+            for a in 0..d {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in 0..d {
+                    g.data[a * d + b] += ra * row[b];
+                }
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factors_and_solves_spd_system() {
+        // A = [[4,2],[2,3]], b = [1, 2] → x = [−1/8, 3/4]
+        let a = Matrix::from_rows(vec![vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let ch = Cholesky::factor(&a, 0.0).unwrap();
+        let x = ch.solve(&[1.0, 2.0]);
+        assert!((x[0] - (-0.125)).abs() < 1e-12);
+        assert!((x[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(Cholesky::factor(&a, 0.0).is_err());
+        // but a big enough ridge fixes it
+        assert!(Cholesky::factor(&a, 2.0).is_ok());
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let x = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let g = gram(&[&x]);
+        // XᵀX = [[10, 14], [14, 20]]
+        assert_eq!(g.data, vec![10.0, 14.0, 14.0, 20.0]);
+        let g2 = gram(&[&x, &x]);
+        assert_eq!(g2.get(0, 0), 20.0);
+    }
+
+    #[test]
+    fn random_spd_round_trip() {
+        use crate::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(31);
+        let n = 12;
+        let mut b_mat = Matrix::zeros(n, n);
+        for v in &mut b_mat.data {
+            *v = rng.next_gaussian();
+        }
+        let a = gram(&[&b_mat]); // BᵀB is PSD; ridge makes it PD
+        let ch = Cholesky::factor(&a, 1e-6).unwrap();
+        let x_true: Vec<f64> = rng.gaussian_vec(n);
+        let mut b = vec![0.0; n];
+        // b = A x_true (+ ridge·x_true to match the factored system)
+        for i in 0..n {
+            b[i] = (0..n).map(|j| a.get(i, j) * x_true[j]).sum::<f64>()
+                + 1e-6 * x_true[i];
+        }
+        let x = ch.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-6, "{i}");
+        }
+    }
+}

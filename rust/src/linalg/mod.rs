@@ -1,0 +1,134 @@
+//! Dense linear algebra substrate (BLAS-free, f64).
+//!
+//! This is the compute layer of the pure-rust gradient backend
+//! (`tasks/`), mirroring the L1 Pallas kernels: the same fused
+//! residual-gradient passes, expressed as cache-blocked loops instead
+//! of VMEM tiles.  All hot-path functions are allocation-free (writes
+//! go into caller-provided buffers) so the coordinator's steady-state
+//! round performs zero heap allocation — see EXPERIMENTS.md §Perf.
+
+pub mod cholesky;
+pub mod matrix;
+
+pub use cholesky::Cholesky;
+pub use matrix::Matrix;
+
+/// x·y
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled accumulation: keeps the FMA ports busy and gives
+    // deterministic results (fixed association order).
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let b = i * 4;
+        s0 += x[b] * y[b];
+        s1 += x[b + 1] * y[b + 1];
+        s2 += x[b + 2] * y[b + 2];
+        s3 += x[b + 3] * y[b + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// ‖x‖²
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// ‖x‖₂
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// ‖x − y‖²
+#[inline]
+pub fn dist2_sq(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// y ← y + a·x
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// out ← x − y
+#[inline]
+pub fn sub_into(x: &[f64], y: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// x ← a·x
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// Σ|x_i|
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..103).map(|i| i as f64 * 0.5).collect();
+        let y: Vec<f64> = (0..103).map(|i| (103 - i) as f64).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-9 * naive.abs());
+    }
+
+    #[test]
+    fn dot_handles_short_and_empty() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_and_sub() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        let mut out = vec![0.0; 3];
+        sub_into(&y, &x, &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = vec![3.0, -4.0];
+        assert_eq!(norm2_sq(&x), 25.0);
+        assert_eq!(norm2(&x), 5.0);
+        assert_eq!(norm1(&x), 7.0);
+        assert_eq!(dist2_sq(&x, &[0.0, 0.0]), 25.0);
+    }
+}

@@ -1,0 +1,282 @@
+//! chb-fed — CLI launcher for the CHB federated-learning runtime.
+//!
+//! ```text
+//! chb-fed exp <id>            regenerate one paper artifact
+//!                             (fig1…fig12, table1…table3, ablations, all)
+//! chb-fed run                 one federated run with explicit knobs
+//! chb-fed list                datasets, artifacts, experiments
+//! chb-fed check-theory        evaluate Lemma-1/Theorem-1 conditions
+//! ```
+//!
+//! Common options: --out results --data data --full (paper-scale
+//! iteration budgets; default is the quick profile sized for this
+//! 1-core image) --verbose
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use chb_fed::coordinator::{run_serial, run_threaded, RunConfig, StopRule};
+use chb_fed::experiments::{ablations, figures, tables, Problem};
+use chb_fed::optim::Method;
+use chb_fed::runtime::PjrtRuntime;
+use chb_fed::tasks::TaskKind;
+use chb_fed::util::cli::Args;
+use chb_fed::util::logging;
+
+const USAGE: &str = "\
+chb-fed — Censored Heavy Ball federated learning (paper reproduction)
+
+USAGE:
+  chb-fed exp <id> [--out DIR] [--data DIR] [--full]
+      ids: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11
+           fig12 table1 table2 table3 ablations all
+  chb-fed run --task T --dataset D [--method M] [--alpha A] [--beta B]
+              [--eps-c C | --eps-abs E] [--iters N] [--lambda L]
+              [--backend rust|pjrt] [--engine serial|threaded]
+              [--artifacts DIR] [--out DIR] [--data DIR]
+  chb-fed list [--data DIR] [--artifacts DIR]
+  chb-fed check-theory --l L --mu MU [--m M] [--delta D]
+
+FLAGS:
+  --full      paper-scale budgets (default: quick profile)
+  --verbose   debug logging
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv, &["full", "verbose", "help", "comm-map"])?;
+    if args.flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    if args.flag("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "exp" => cmd_exp(&args),
+        "run" => cmd_run(&args),
+        "list" => cmd_list(&args),
+        "check-theory" => cmd_theory(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .context("exp: missing experiment id")?
+        .as_str();
+    let out = Path::new(args.get_or("out", "results"));
+    let data = Path::new(args.get_or("data", "data"));
+    let quick = !args.flag("full");
+    let run_one = |id: &str| -> Result<()> {
+        let t = chb_fed::util::timer::Timer::quiet();
+        let r = match id {
+            "fig1" => figures::fig1(out, data, quick),
+            "fig2" => figures::fig2(out, data, quick),
+            "fig3" => figures::fig3(out, data, quick),
+            "fig4" => figures::fig4(out, data, quick),
+            "fig5" => figures::fig5(out, data, quick),
+            "fig6" => figures::fig6(out, data, quick),
+            "fig7" => figures::fig7(out, data, quick),
+            "fig8" => figures::fig8(out, data, quick),
+            "fig9" => figures::fig9(out, data, quick),
+            "fig10" => figures::fig10(out, data, quick),
+            "fig11" => figures::fig11(out, data, quick),
+            "fig12" => figures::fig12(out, data, quick),
+            "table1" => tables::table1(out, data, quick),
+            "table2" => tables::table2(out, data, quick),
+            "table3" => tables::table3(out, data, quick),
+            "ablations" => ablations::all(out, quick),
+            other => bail!("unknown experiment {other:?}"),
+        };
+        println!("[{id}: {:.1}s]", t.elapsed_secs());
+        r
+    };
+    if id == "all" {
+        for id in [
+            "fig1", "fig2", "fig3", "fig11", "fig12", "table1", "table2",
+            "fig4", "fig5", "fig6", "fig7", "table3", "fig8", "fig9",
+            "fig10", "ablations",
+        ] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(id)
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // --config file.toml provides defaults; explicit flags override.
+    let cfg_file = match args.get("config") {
+        Some(path) => chb_fed::util::config::Config::load(Path::new(path))?,
+        None => chb_fed::util::config::Config::default(),
+    };
+    let pick = |key: &str, dflt: &str| -> String {
+        args.get(key)
+            .map(str::to_string)
+            .or_else(|| cfg_file.str(&format!("run.{key}")).map(str::to_string))
+            .unwrap_or_else(|| dflt.to_string())
+    };
+    let pick_num = |key: &str| -> Option<f64> {
+        args.get(key)
+            .and_then(|s| s.parse().ok())
+            .or_else(|| cfg_file.num(&format!("run.{key}")))
+    };
+
+    let task = TaskKind::parse(&pick("task", "linreg"))
+        .context("bad task (linreg|logreg|lasso|nn)")?;
+    let dataset = pick("dataset", "synth");
+    let dataset = dataset.as_str();
+    let data_s = pick("data", "data");
+    let data = Path::new(&data_s);
+    let lam = pick_num("lambda").unwrap_or(0.001);
+    let problem = Problem::from_registry(task, dataset, data, lam)?;
+
+    let alpha = pick_num("alpha").unwrap_or(1.0 / problem.l_global);
+    let beta = pick_num("beta").unwrap_or(0.4);
+    let iters = pick_num("iters").unwrap_or(500.0) as usize;
+    let method = Method::parse(&pick("method", "chb"))
+        .context("bad method (gd|hb|lag|chb)")?;
+    let mut params = chb_fed::optim::MethodParams::new(alpha).with_beta(beta);
+    params = match pick_num("eps-abs") {
+        Some(e) => params.with_epsilon1(e),
+        None => params.with_epsilon1_scaled(
+            pick_num("eps-c").unwrap_or(0.1),
+            problem.m_workers(),
+        ),
+    };
+    let mut cfg = RunConfig::new(method, params, iters)
+        .with_stop(StopRule::MaxIters);
+    if args.flag("comm-map") {
+        cfg = cfg.with_comm_map();
+    }
+
+    println!(
+        "run: {} on {} — M={} d={} L={:.4e} α={alpha:.4e} β={beta} ε₁={:.4e} \
+         backend={} engine={}",
+        method.name(),
+        dataset,
+        problem.m_workers(),
+        problem.dim(),
+        problem.l_global,
+        params.epsilon1,
+        args.get_or("backend", "rust"),
+        args.get_or("engine", "serial"),
+    );
+
+    let trace = match args.get_or("backend", "rust") {
+        "rust" => {
+            let workers = problem.rust_workers();
+            match args.get_or("engine", "serial") {
+                "serial" => {
+                    let mut ws = workers;
+                    run_serial(&mut ws, &cfg, problem.theta0())
+                }
+                "threaded" => run_threaded(workers, &cfg, problem.theta0()),
+                other => bail!("bad --engine {other:?}"),
+            }
+        }
+        "pjrt" => {
+            let mut rt =
+                PjrtRuntime::new(Path::new(args.get_or("artifacts", "artifacts")))?;
+            println!("PJRT platform: {}", rt.platform());
+            let workers = problem.pjrt_workers(&mut rt)?;
+            match args.get_or("engine", "serial") {
+                "serial" => {
+                    let mut ws = workers;
+                    run_serial(&mut ws, &cfg, problem.theta0())
+                }
+                "threaded" => run_threaded(workers, &cfg, problem.theta0()),
+                other => bail!("bad --engine {other:?}"),
+            }
+        }
+        other => bail!("bad --backend {other:?}"),
+    };
+
+    let f_star = problem.f_star().unwrap_or(0.0);
+    let out = Path::new(args.get_or("out", "results"));
+    chb_fed::metrics::csv::write_trace(
+        &out.join("run").join(format!(
+            "{}_{}_{}.csv",
+            task.name(),
+            dataset,
+            trace.method
+        )),
+        &trace,
+        f_star,
+    )?;
+    let last = trace.iters.last().context("empty trace")?;
+    println!(
+        "done: {} iters, {} comms, final f−f* = {:.6e}, ‖∇‖² = {:.6e}",
+        trace.iterations(),
+        trace.total_comms(),
+        last.loss - f_star,
+        last.agg_grad_sq
+    );
+    println!("per-worker transmissions: {:?}", trace.per_worker_comms);
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    println!("datasets (data dir: {}):", args.get_or("data", "data"));
+    for s in chb_fed::data::registry::SPECS {
+        println!(
+            "  {:<12} n={:<6} d={:<4} workers={} ",
+            s.name, s.n, s.d, s.workers
+        );
+    }
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    match chb_fed::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!("\nartifacts ({}):", dir.display());
+            for a in &m.artifacts {
+                println!(
+                    "  {:<20} n_pad={:<6} d={:<4} θ-dim={}",
+                    a.name, a.n_pad, a.d, a.theta_dim
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    println!(
+        "\nexperiments: fig1..fig12, table1..table3, ablations, all \
+         (chb-fed exp <id>)"
+    );
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    let l = args.get_parse_or("l", 10.0)?;
+    let mu = args.get_parse_or("mu", 1.0)?;
+    let m = args.get_parse_or("m", 9usize)?;
+    let delta = args.get_parse_or("delta", 0.1)?;
+    let p = chb_fed::theory::ParamChoice::theorem1_setting(l, mu, delta, m);
+    println!("Theorem-1 setting (55) for L={l}, μ={mu}, M={m}, δ={delta}:");
+    println!("  α  = {:.6e}", p.alpha);
+    println!("  β  = {:.6e}", p.beta);
+    println!("  ε₁ = {:.6e}", p.epsilon1);
+    println!("  η₁ = {:.6e}", p.eta1);
+    let ok = p.satisfies_lemma1(l, m);
+    println!("  Lemma-1 conditions (10)–(12) with σ₀,σ₁ > 0: {ok}");
+    let c = p.contraction(l, mu, m);
+    println!(
+        "  contraction c = {c:.6e} (eq. 17 predicts {:.6e})",
+        chb_fed::theory::theorem1_rate(l, mu, delta)
+    );
+    println!(
+        "  iteration complexity to 1e-6: {:.1} (eq. 59)",
+        chb_fed::theory::chb_iteration_complexity(l, mu, delta, 1e-6)
+    );
+    Ok(())
+}

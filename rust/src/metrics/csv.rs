@@ -1,0 +1,114 @@
+//! CSV writers for traces and tables (no external crates).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::Trace;
+
+/// Write one trace: k, loss, obj_err, comms_round, comms_cum, …
+pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(
+        w,
+        "k,loss,obj_err,comms_round,comms_cum,agg_grad_sq,step_sq,bits_cum"
+    )?;
+    for s in &trace.iters {
+        writeln!(
+            w,
+            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{}",
+            s.k,
+            s.loss,
+            s.loss - f_star,
+            s.comms_round,
+            s.comms_cum,
+            s.agg_grad_sq,
+            s.step_sq,
+            s.bits_cum
+        )?;
+    }
+    Ok(())
+}
+
+/// Write the per-(iteration, worker) transmit map (Fig. 1).
+pub fn write_comm_map(path: &Path, trace: &Trace) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let m = trace.comm_map.first().map_or(0, |r| r.len());
+    let header: Vec<String> = (0..m).map(|i| format!("w{i}")).collect();
+    writeln!(w, "k,{}", header.join(","))?;
+    for (k, row) in trace.comm_map.iter().enumerate() {
+        let cells: Vec<&str> =
+            row.iter().map(|&b| if b { "1" } else { "0" }).collect();
+        writeln!(w, "{},{}", k + 1, cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Generic table writer: header + rows of strings.
+pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::IterStat;
+
+    #[test]
+    fn trace_csv_round_trips_basic_fields() {
+        let mut t = Trace::new("HB");
+        t.iters.push(IterStat {
+            k: 1,
+            loss: 2.5,
+            comms_round: 3,
+            comms_cum: 3,
+            agg_grad_sq: 1.0,
+            step_sq: 0.5,
+            bits_cum: 0,
+        });
+        let dir = std::env::temp_dir().join("chb_csv_test");
+        let path = dir.join("t.csv");
+        write_trace(&path, &t, 0.5).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert!(lines.next().unwrap().starts_with("k,loss"));
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("1,"));
+        assert!(row.contains(",3,3,"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn comm_map_encodes_bools() {
+        let mut t = Trace::new("CHB");
+        t.comm_map = vec![vec![true, false], vec![false, true]];
+        let dir = std::env::temp_dir().join("chb_csv_test2");
+        let path = dir.join("m.csv");
+        write_comm_map(&path, &t).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.contains("1,1,0"));
+        assert!(text.contains("2,0,1"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,108 @@
+//! Per-run instrumentation: the numbers every figure/table plots.
+
+pub mod csv;
+
+/// One iteration's record.
+#[derive(Clone, Debug)]
+pub struct IterStat {
+    pub k: usize,
+    /// f(θᵏ) = Σ_m f_m(θᵏ)
+    pub loss: f64,
+    /// uplink transmissions this iteration |Mᵏ|
+    pub comms_round: usize,
+    /// cumulative uplink transmissions through iteration k
+    pub comms_cum: usize,
+    /// ‖∇ᵏ‖² (the server's aggregate; the paper's NN figure of merit)
+    pub agg_grad_sq: f64,
+    /// ‖θ^{k+1} − θᵏ‖²
+    pub step_sq: f64,
+    /// cumulative uplink payload bits (compression-aware)
+    pub bits_cum: u64,
+}
+
+/// Full trace of a run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub method: String,
+    pub iters: Vec<IterStat>,
+    /// per-worker lifetime transmission counts S_m (Lemma 2)
+    pub per_worker_comms: Vec<usize>,
+    /// per-(iteration, worker) transmit map for Fig. 1-style plots;
+    /// only recorded when `record_comm_map` is on (it is O(K·M))
+    pub comm_map: Vec<Vec<bool>>,
+}
+
+impl Trace {
+    pub fn new(method: &str) -> Self {
+        Self { method: method.to_string(), ..Default::default() }
+    }
+
+    pub fn total_comms(&self) -> usize {
+        self.iters.last().map_or(0, |s| s.comms_cum)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.iters.last().map_or(f64::NAN, |s| s.loss)
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iters.len()
+    }
+
+    /// Objective error trajectory f(θᵏ) − f*.
+    pub fn obj_errors(&self, f_star: f64) -> Vec<f64> {
+        self.iters.iter().map(|s| s.loss - f_star).collect()
+    }
+
+    /// First iteration k with f(θᵏ) − f* < tol, with the cumulative
+    /// comms spent to get there — the numbers in Tables I/II.
+    pub fn first_below(&self, f_star: f64, tol: f64) -> Option<(usize, usize)> {
+        self.iters
+            .iter()
+            .find(|s| s.loss - f_star < tol)
+            .map(|s| (s.k, s.comms_cum))
+    }
+
+    /// Averaged per-communication descent (paper Fig. 12):
+    /// (f(θ⁰) − f(θᵏ)) / comms_cum(k), evaluated at iteration k.
+    pub fn per_comm_descent(&self, f_theta0: f64) -> Vec<(usize, f64, f64)> {
+        self.iters
+            .iter()
+            .filter(|s| s.comms_cum > 0)
+            .map(|s| (s.k, s.loss, (f_theta0 - s.loss) / s.comms_cum as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(k: usize, loss: f64, comms_round: usize, comms_cum: usize) -> IterStat {
+        IterStat { k, loss, comms_round, comms_cum, agg_grad_sq: 0.0, step_sq: 0.0, bits_cum: 0 }
+    }
+
+    #[test]
+    fn first_below_finds_threshold_crossing() {
+        let mut t = Trace::new("CHB");
+        t.iters = vec![
+            stat(1, 10.0, 9, 9),
+            stat(2, 1.0, 4, 13),
+            stat(3, 0.5, 2, 15),
+        ];
+        // f* = 0.4, tol = 1 ⇒ first loss−f* < 1 is k=2 (1.0−0.4=0.6)
+        assert_eq!(t.first_below(0.4, 1.0), Some((2, 13)));
+        assert_eq!(t.first_below(0.0, 0.1), None);
+        assert_eq!(t.total_comms(), 15);
+    }
+
+    #[test]
+    fn per_comm_descent_divides_by_cumulative() {
+        let mut t = Trace::new("CHB");
+        t.iters = vec![stat(1, 8.0, 2, 2), stat(2, 6.0, 1, 3)];
+        let d = t.per_comm_descent(10.0);
+        assert_eq!(d.len(), 2);
+        assert!((d[0].2 - 1.0).abs() < 1e-15); // (10−8)/2
+        assert!((d[1].2 - (4.0 / 3.0)).abs() < 1e-15);
+    }
+}

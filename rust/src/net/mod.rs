@@ -1,0 +1,170 @@
+//! Simulated network substrate.
+//!
+//! The paper counts *uplink transmissions* as its efficiency metric;
+//! this module counts exactly that, plus per-link bytes and an
+//! optional latency/drop model for the failure-injection tests (a
+//! capability the paper assumes away — dropped uplinks simply leave
+//! the server's aggregate stale, which eq. (5) tolerates by design,
+//! and the tests verify it).
+
+use crate::rng::Xoshiro256;
+
+/// Per-link accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkStats {
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+/// Directions from the server's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// server → worker (θ broadcast)
+    Down,
+    /// worker → server (δ∇ upload)
+    Up,
+}
+
+/// Latency model: fixed + per-byte cost (the "communication is ~2500×
+/// a memory access" premise from the paper's introduction).
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    pub fixed_us: f64,
+    pub per_kib_us: f64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        // LAN-ish defaults; experiments report counts, latency is for
+        // the simulated-wallclock columns only.
+        Self { fixed_us: 500.0, per_kib_us: 8.0 }
+    }
+}
+
+impl LatencyModel {
+    pub fn transfer_us(&self, bytes: u64) -> f64 {
+        self.fixed_us + self.per_kib_us * (bytes as f64 / 1024.0)
+    }
+}
+
+/// The simulated star network (server + M workers).
+pub struct SimNetwork {
+    pub up: Vec<LinkStats>,
+    pub down: Vec<LinkStats>,
+    pub latency: LatencyModel,
+    /// probability an *uplink* message is dropped (failure injection)
+    pub drop_prob: f64,
+    rng: Xoshiro256,
+    /// accumulated simulated wallclock (µs), taking the per-round max
+    /// across links (synchronous rounds)
+    pub sim_clock_us: f64,
+    dropped: u64,
+}
+
+impl SimNetwork {
+    pub fn new(m_workers: usize) -> Self {
+        Self {
+            up: vec![LinkStats::default(); m_workers],
+            down: vec![LinkStats::default(); m_workers],
+            latency: LatencyModel::default(),
+            drop_prob: 0.0,
+            rng: Xoshiro256::new(0x5EED_0002),
+            sim_clock_us: 0.0,
+            dropped: 0,
+        }
+    }
+
+    pub fn with_drops(mut self, prob: f64, seed: u64) -> Self {
+        self.drop_prob = prob;
+        self.rng = Xoshiro256::new(seed);
+        self
+    }
+
+    /// Record a message; returns false if it was dropped.
+    pub fn send(&mut self, dir: Direction, worker: usize, bytes: u64) -> bool {
+        let stats = match dir {
+            Direction::Down => &mut self.down[worker],
+            Direction::Up => &mut self.up[worker],
+        };
+        if dir == Direction::Up
+            && self.drop_prob > 0.0
+            && self.rng.next_f64() < self.drop_prob
+        {
+            self.dropped += 1;
+            return false;
+        }
+        stats.messages += 1;
+        stats.bytes += bytes;
+        true
+    }
+
+    /// Advance the synchronous-round clock: one broadcast down to all
+    /// M workers in parallel + the slowest uplink among transmitters.
+    pub fn advance_round(&mut self, down_bytes: u64, up_bytes_each: &[u64]) {
+        let down = self.latency.transfer_us(down_bytes);
+        let up = up_bytes_each
+            .iter()
+            .map(|&b| self.latency.transfer_us(b))
+            .fold(0.0, f64::max);
+        self.sim_clock_us += down + up;
+    }
+
+    pub fn total_up_messages(&self) -> u64 {
+        self.up.iter().map(|l| l.messages).sum()
+    }
+
+    pub fn total_up_bytes(&self) -> u64 {
+        self.up.iter().map(|l| l.bytes).sum()
+    }
+
+    pub fn total_down_messages(&self) -> u64 {
+        self.down.iter().map(|l| l.messages).sum()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_up_and_down_separately() {
+        let mut n = SimNetwork::new(2);
+        assert!(n.send(Direction::Down, 0, 100));
+        assert!(n.send(Direction::Up, 0, 50));
+        assert!(n.send(Direction::Up, 1, 50));
+        assert_eq!(n.total_down_messages(), 1);
+        assert_eq!(n.total_up_messages(), 2);
+        assert_eq!(n.total_up_bytes(), 100);
+    }
+
+    #[test]
+    fn drops_are_uplink_only_and_counted() {
+        let mut n = SimNetwork::new(1).with_drops(1.0, 7);
+        assert!(n.send(Direction::Down, 0, 10)); // downlink never drops
+        assert!(!n.send(Direction::Up, 0, 10));
+        assert_eq!(n.dropped(), 1);
+        assert_eq!(n.total_up_messages(), 0);
+    }
+
+    #[test]
+    fn round_clock_takes_max_uplink() {
+        let mut n = SimNetwork::new(3);
+        n.latency = LatencyModel { fixed_us: 100.0, per_kib_us: 0.0 };
+        n.advance_round(1024, &[10, 10, 10]);
+        // down 100 + slowest up 100
+        assert!((n.sim_clock_us - 200.0).abs() < 1e-9);
+        n.advance_round(0, &[]);
+        // no uplinks this round: just the broadcast
+        assert!((n.sim_clock_us - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_model_scales_with_bytes() {
+        let l = LatencyModel { fixed_us: 1.0, per_kib_us: 2.0 };
+        assert!((l.transfer_us(2048) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,238 @@
+//! Worker-side censor rules — when to *not* transmit.
+//!
+//! The paper's CHB-skip-transmission condition (eq. 8):
+//!
+//! ```text
+//! skip  ⟺  ‖δ∇_m^k‖² ≤ ε₁ ‖θ^k − θ^{k−1}‖²
+//! ```
+//!
+//! where δ∇_m^k = ∇f_m(θ^k) − ∇f_m(θ̂_m^{k−1}) is the change since the
+//! last *transmitted* gradient.  LAG-WK uses the identical rule (the
+//! paper: "choose the same skip-transmission condition (8) for CHB and
+//! censoring-based GD"), so one implementation serves both.
+//!
+//! Two beyond-paper variants are provided for the ablation benches:
+//! an absolute threshold and a value-censor (LAG-PS-flavored) rule.
+
+/// Verdict for one worker at one iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CensorDecision {
+    Transmit,
+    Skip,
+}
+
+/// Decide whether worker m transmits at iteration k.
+///
+/// Inputs are the *squared norms* so engines can reuse the values for
+/// metrics without recomputation; `k` lets rules warm up (everyone
+/// transmits at k = 1 where θ⁰ = θ¹ makes the RHS zero anyway).
+pub trait CensorRule: Send + Sync {
+    fn decide(
+        &self,
+        delta_grad_sq: f64,
+        theta_step_sq: f64,
+        k: usize,
+    ) -> CensorDecision;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Never skip — GD and classical HB.
+pub struct NeverCensor;
+
+impl CensorRule for NeverCensor {
+    fn decide(&self, _: f64, _: f64, _: usize) -> CensorDecision {
+        CensorDecision::Transmit
+    }
+
+    fn name(&self) -> &'static str {
+        "never"
+    }
+}
+
+/// The paper's rule (eq. 8) with threshold ε₁.
+pub struct GradDiffCensor {
+    pub epsilon1: f64,
+}
+
+impl CensorRule for GradDiffCensor {
+    fn decide(
+        &self,
+        delta_grad_sq: f64,
+        theta_step_sq: f64,
+        _k: usize,
+    ) -> CensorDecision {
+        if delta_grad_sq <= self.epsilon1 * theta_step_sq {
+            CensorDecision::Skip
+        } else {
+            CensorDecision::Transmit
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "grad-diff"
+    }
+}
+
+/// Ablation: absolute threshold ‖δ∇‖² ≤ τ (ignores the θ-step scale).
+/// Demonstrates why the paper's *relative* rule is the right one: a
+/// fixed τ either censors nothing early or everything late.
+pub struct AbsoluteCensor {
+    pub tau: f64,
+}
+
+impl CensorRule for AbsoluteCensor {
+    fn decide(&self, delta_grad_sq: f64, _: f64, _: usize) -> CensorDecision {
+        if delta_grad_sq <= self.tau {
+            CensorDecision::Skip
+        } else {
+            CensorDecision::Transmit
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "absolute"
+    }
+}
+
+/// Ablation: transmit at most every `period` iterations regardless of
+/// information content (round-robin style baseline).
+pub struct PeriodicCensor {
+    pub period: usize,
+}
+
+impl CensorRule for PeriodicCensor {
+    fn decide(&self, _: f64, _: f64, k: usize) -> CensorDecision {
+        if k % self.period.max(1) == 0 {
+            CensorDecision::Transmit
+        } else {
+            CensorDecision::Skip
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "periodic"
+    }
+}
+
+/// ε₁ = c / (α² M²) — the paper's standard threshold parameterization
+/// (used with c = 0.1 almost everywhere, swept in Fig. 11).
+pub fn epsilon1_scaled(c: f64, alpha: f64, m_workers: usize) -> f64 {
+    c / (alpha * alpha * (m_workers * m_workers) as f64)
+}
+
+/// Beyond-paper: adaptive ε₁ — the paper's conclusion leaves "finding
+/// an optimal approach to tune ε₁" open.  This rule anneals the
+/// threshold geometrically from `eps_hi` toward `eps_lo` over the
+/// first `horizon` iterations: aggressive censoring early (when the
+/// momentum direction is persistent and per-worker changes are
+/// redundant), conservative near convergence (when every residual
+/// delta matters for the final digits).
+///
+/// Interior mutability keeps the [`CensorRule`] trait object shared
+/// across workers without threading k through extra state — the rule
+/// is a pure function of the iteration index.
+pub struct AdaptiveCensor {
+    pub eps_hi: f64,
+    pub eps_lo: f64,
+    pub horizon: usize,
+}
+
+impl AdaptiveCensor {
+    /// Current threshold at iteration k.
+    pub fn epsilon_at(&self, k: usize) -> f64 {
+        if self.horizon == 0 || self.eps_hi <= 0.0 {
+            return self.eps_lo;
+        }
+        let t = (k.min(self.horizon) as f64) / self.horizon as f64;
+        // geometric interpolation hi → lo
+        self.eps_hi * (self.eps_lo.max(1e-300) / self.eps_hi).powf(t)
+    }
+}
+
+impl CensorRule for AdaptiveCensor {
+    fn decide(
+        &self,
+        delta_grad_sq: f64,
+        theta_step_sq: f64,
+        k: usize,
+    ) -> CensorDecision {
+        if delta_grad_sq <= self.epsilon_at(k) * theta_step_sq {
+            CensorDecision::Skip
+        } else {
+            CensorDecision::Transmit
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_diff_rule_matches_eq8() {
+        let r = GradDiffCensor { epsilon1: 0.5 };
+        // ‖δ∇‖² = 1, ε₁‖Δθ‖² = 0.5·4 = 2 → skip
+        assert_eq!(r.decide(1.0, 4.0, 3), CensorDecision::Skip);
+        // boundary: equal → skip (the paper's ≤)
+        assert_eq!(r.decide(2.0, 4.0, 3), CensorDecision::Skip);
+        // above → transmit
+        assert_eq!(r.decide(2.0 + 1e-12, 4.0, 3), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn zero_theta_step_transmits_unless_grad_unchanged() {
+        let r = GradDiffCensor { epsilon1: 10.0 };
+        // RHS = 0: any gradient change must be transmitted
+        assert_eq!(r.decide(1e-30, 0.0, 2), CensorDecision::Transmit);
+        // exactly unchanged gradient may be skipped
+        assert_eq!(r.decide(0.0, 0.0, 2), CensorDecision::Skip);
+    }
+
+    #[test]
+    fn epsilon_zero_reduces_to_classical_method() {
+        // ε₁ = 0 ⇒ CHB ≡ HB (paper §II): only exactly-zero δ∇ skips
+        let r = GradDiffCensor { epsilon1: 0.0 };
+        assert_eq!(r.decide(1e-300, 1e10, 5), CensorDecision::Transmit);
+        assert_eq!(r.decide(0.0, 1e10, 5), CensorDecision::Skip);
+    }
+
+    #[test]
+    fn never_censor_always_transmits() {
+        assert_eq!(NeverCensor.decide(0.0, 1e9, 1), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn periodic_and_absolute_behave() {
+        let p = PeriodicCensor { period: 3 };
+        assert_eq!(p.decide(9.9, 0.0, 3), CensorDecision::Transmit);
+        assert_eq!(p.decide(9.9, 0.0, 4), CensorDecision::Skip);
+        let a = AbsoluteCensor { tau: 1.0 };
+        assert_eq!(a.decide(0.5, 0.0, 1), CensorDecision::Skip);
+        assert_eq!(a.decide(1.5, 0.0, 1), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn adaptive_censor_anneals_geometrically() {
+        let a = AdaptiveCensor { eps_hi: 100.0, eps_lo: 1.0, horizon: 10 };
+        assert!((a.epsilon_at(0) - 100.0).abs() < 1e-12);
+        assert!((a.epsilon_at(10) - 1.0).abs() < 1e-12);
+        assert!((a.epsilon_at(5) - 10.0).abs() < 1e-9); // geometric midpoint
+        // clamps beyond the horizon
+        assert!((a.epsilon_at(99) - 1.0).abs() < 1e-12);
+        // decisions follow the instantaneous threshold
+        assert_eq!(a.decide(50.0, 1.0, 0), CensorDecision::Skip);
+        assert_eq!(a.decide(50.0, 1.0, 10), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn epsilon1_scaling_matches_paper() {
+        // ε₁ = 0.1/(α²M²) with α=0.5, M=9
+        let e = epsilon1_scaled(0.1, 0.5, 9);
+        assert!((e - 0.1 / (0.25 * 81.0)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,139 @@
+//! Method descriptors: the four paper algorithms as data.
+//!
+//! A [`Method`] plus [`MethodParams`] fully determines a run; the
+//! coordinator materializes the server rule and censor rule from them.
+
+use super::{
+    CensorRule, GdRule, GradDiffCensor, HeavyBallRule, NeverCensor, ServerRule,
+};
+
+/// The algorithms compared throughout §IV.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// gradient descent [58]
+    Gd,
+    /// classical heavy ball [57]
+    Hb,
+    /// LAG-WK, censoring-based GD [54]
+    Lag,
+    /// this paper
+    Chb,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] = [Method::Chb, Method::Hb, Method::Lag, Method::Gd];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Gd => "GD",
+            Method::Hb => "HB",
+            Method::Lag => "LAG",
+            Method::Chb => "CHB",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "gd" => Some(Method::Gd),
+            "hb" => Some(Method::Hb),
+            "lag" | "lag-wk" => Some(Method::Lag),
+            "chb" => Some(Method::Chb),
+            _ => None,
+        }
+    }
+
+    pub fn uses_momentum(self) -> bool {
+        matches!(self, Method::Hb | Method::Chb)
+    }
+
+    pub fn uses_censoring(self) -> bool {
+        matches!(self, Method::Lag | Method::Chb)
+    }
+}
+
+/// Hyperparameters shared by all four methods.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodParams {
+    /// step size α
+    pub alpha: f64,
+    /// momentum β (paper default 0.4; ignored by GD/LAG)
+    pub beta: f64,
+    /// censor threshold ε₁ (ignored by GD/HB)
+    pub epsilon1: f64,
+}
+
+impl MethodParams {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, beta: 0.4, epsilon1: 0.0 }
+    }
+
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    pub fn with_epsilon1(mut self, epsilon1: f64) -> Self {
+        self.epsilon1 = epsilon1;
+        self
+    }
+
+    /// Paper standard: ε₁ = c/(α²M²).
+    pub fn with_epsilon1_scaled(mut self, c: f64, m_workers: usize) -> Self {
+        self.epsilon1 =
+            super::censor::epsilon1_scaled(c, self.alpha, m_workers);
+        self
+    }
+}
+
+/// Materialize the server rule for (method, params).
+pub fn build_server_rule(
+    method: Method,
+    p: &MethodParams,
+    dim: usize,
+) -> Box<dyn ServerRule> {
+    if method.uses_momentum() {
+        Box::new(HeavyBallRule::new(p.alpha, p.beta, dim))
+    } else {
+        Box::new(GdRule { alpha: p.alpha })
+    }
+}
+
+/// Materialize the censor rule for (method, params).
+pub fn build_censor_rule(method: Method, p: &MethodParams) -> Box<dyn CensorRule> {
+    if method.uses_censoring() {
+        Box::new(GradDiffCensor { epsilon1: p.epsilon1 })
+    } else {
+        Box::new(NeverCensor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("lag-wk"), Some(Method::Lag));
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn composition_table_matches_paper() {
+        assert!(!Method::Gd.uses_momentum() && !Method::Gd.uses_censoring());
+        assert!(Method::Hb.uses_momentum() && !Method::Hb.uses_censoring());
+        assert!(!Method::Lag.uses_momentum() && Method::Lag.uses_censoring());
+        assert!(Method::Chb.uses_momentum() && Method::Chb.uses_censoring());
+    }
+
+    #[test]
+    fn builders_produce_right_rules() {
+        let p = MethodParams::new(0.1).with_epsilon1(1.0);
+        assert_eq!(build_server_rule(Method::Chb, &p, 3).name(), "hb");
+        assert_eq!(build_server_rule(Method::Lag, &p, 3).name(), "gd");
+        assert_eq!(build_censor_rule(Method::Chb, &p).name(), "grad-diff");
+        assert_eq!(build_censor_rule(Method::Hb, &p).name(), "never");
+    }
+}

@@ -1,0 +1,135 @@
+//! Optimizer layer: server update rules + worker censor rules.
+//!
+//! The four algorithms the paper evaluates are compositions of two
+//! orthogonal pieces:
+//!
+//! | algorithm | server update       | censor rule          |
+//! |-----------|---------------------|----------------------|
+//! | GD        | θ−α∇                | never skip           |
+//! | HB        | θ−α∇+β(θ−θ⁻)        | never skip           |
+//! | LAG-WK    | θ−α∇                | grad-diff rule (8)   |
+//! | CHB       | θ−α∇+β(θ−θ⁻)        | grad-diff rule (8)   |
+//!
+//! `∇` is always the server's *running aggregate* ∇ᵏ of eq. (5); with
+//! censoring off, ∇ᵏ equals the exact gradient and the classical
+//! methods fall out — this identity is property-tested.
+
+pub mod censor;
+pub mod method;
+pub mod nesterov;
+
+pub use censor::{
+    AdaptiveCensor, CensorDecision, CensorRule, GradDiffCensor, NeverCensor,
+};
+pub use method::{Method, MethodParams};
+pub use nesterov::NesterovRule;
+
+use crate::linalg;
+
+/// Server-side parameter update.  Implementations must be pure:
+/// everything they need arrives through the arguments so engines can
+/// replay rounds deterministically.
+pub trait ServerRule: Send {
+    /// In-place update of `theta` given the aggregate gradient and the
+    /// previous iterate; `theta_prev` is θ^{k-1} on entry and must hold
+    /// θ^k on exit (the rule handles the rotation).
+    fn step(&mut self, theta: &mut [f64], theta_prev: &mut [f64], agg_grad: &[f64]);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Plain gradient descent: θ ← θ − α∇.
+pub struct GdRule {
+    pub alpha: f64,
+}
+
+impl ServerRule for GdRule {
+    fn step(&mut self, theta: &mut [f64], theta_prev: &mut [f64], agg_grad: &[f64]) {
+        theta_prev.copy_from_slice(theta);
+        linalg::axpy(-self.alpha, agg_grad, theta);
+    }
+
+    fn name(&self) -> &'static str {
+        "gd"
+    }
+}
+
+/// Heavy ball: θ ← θ − α∇ + β(θ − θ⁻)   (paper eq. 2 / 4).
+pub struct HeavyBallRule {
+    pub alpha: f64,
+    pub beta: f64,
+    /// scratch for the momentum term (steady-state: no allocation)
+    momentum: Vec<f64>,
+}
+
+impl HeavyBallRule {
+    pub fn new(alpha: f64, beta: f64, dim: usize) -> Self {
+        Self { alpha, beta, momentum: vec![0.0; dim] }
+    }
+}
+
+impl ServerRule for HeavyBallRule {
+    fn step(&mut self, theta: &mut [f64], theta_prev: &mut [f64], agg_grad: &[f64]) {
+        // momentum = θ^k − θ^{k−1}
+        linalg::sub_into(theta, theta_prev, &mut self.momentum);
+        theta_prev.copy_from_slice(theta);
+        linalg::axpy(-self.alpha, agg_grad, theta);
+        linalg::axpy(self.beta, &self.momentum, theta);
+    }
+
+    fn name(&self) -> &'static str {
+        "hb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gd_step_is_theta_minus_alpha_grad() {
+        let mut rule = GdRule { alpha: 0.1 };
+        let mut theta = vec![1.0, 2.0];
+        let mut prev = vec![0.0, 0.0];
+        rule.step(&mut theta, &mut prev, &[10.0, -10.0]);
+        assert_eq!(theta, vec![0.0, 3.0]);
+        assert_eq!(prev, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn hb_with_beta_zero_equals_gd() {
+        let mut hb = HeavyBallRule::new(0.05, 0.0, 2);
+        let mut gd = GdRule { alpha: 0.05 };
+        let g = vec![3.0, -1.0];
+        let mut th = vec![1.0, 1.0];
+        let mut tp = vec![0.5, 0.5];
+        let mut th2 = th.clone();
+        let mut tp2 = tp.clone();
+        hb.step(&mut th, &mut tp, &g);
+        gd.step(&mut th2, &mut tp2, &g);
+        assert_eq!(th, th2);
+    }
+
+    #[test]
+    fn hb_momentum_uses_previous_iterate() {
+        // θ^k = 2, θ^{k-1} = 1, ∇ = 0, β = 0.4 → θ^{k+1} = 2 + 0.4(2−1)
+        let mut hb = HeavyBallRule::new(0.1, 0.4, 1);
+        let mut th = vec![2.0];
+        let mut tp = vec![1.0];
+        hb.step(&mut th, &mut tp, &[0.0]);
+        assert!((th[0] - 2.4).abs() < 1e-15);
+        assert_eq!(tp, vec![2.0]);
+    }
+
+    #[test]
+    fn hb_full_update_formula() {
+        let (a, b) = (0.2, 0.4);
+        let mut hb = HeavyBallRule::new(a, b, 1);
+        let (tk, tkm1, g) = (3.0, 2.5, 4.0);
+        let mut th = vec![tk];
+        let mut tp = vec![tkm1];
+        hb.step(&mut th, &mut tp, &[g]);
+        let want = tk - a * g + b * (tk - tkm1);
+        assert!((th[0] - want).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,149 @@
+//! artifacts/manifest.json reader (hand-rolled JSON, util::json).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tasks::TaskKind;
+use crate::util::json::Json;
+
+/// One lowered artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub task: TaskKind,
+    pub dataset: String,
+    pub file: PathBuf,
+    pub n_total: usize,
+    pub workers: usize,
+    /// padded per-worker rows (every worker shares this shape)
+    pub n_pad: usize,
+    pub d: usize,
+    pub theta_dim: usize,
+    /// ordered argument names: theta, x, y[, mask][, lam]
+    pub arg_names: Vec<String>,
+}
+
+impl ArtifactMeta {
+    pub fn needs_mask(&self) -> bool {
+        self.arg_names.iter().any(|a| a == "mask")
+    }
+
+    pub fn needs_lam(&self) -> bool {
+        self.arg_names.iter().any(|a| a == "lam")
+    }
+
+    pub fn needs_wscale(&self) -> bool {
+        self.arg_names.iter().any(|a| a == "wscale")
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub block_n: usize,
+    pub hidden: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parse manifest.json")?;
+        let block_n = j.usize_field("block_n")?;
+        let hidden = j.usize_field("hidden")?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: artifacts array")?
+        {
+            let task_name = a.str_field("task")?;
+            let task = TaskKind::parse(task_name)
+                .with_context(|| format!("unknown task {task_name:?}"))?;
+            let arg_names = a
+                .get("args")
+                .and_then(Json::as_arr)
+                .context("artifact args")?
+                .iter()
+                .map(|arg| Ok(arg.str_field("name")?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: a.str_field("name")?.to_string(),
+                task,
+                dataset: a.str_field("dataset")?.to_string(),
+                file: dir.join(a.str_field("file")?),
+                n_total: a.usize_field("n_total")?,
+                workers: a.usize_field("workers")?,
+                n_pad: a.usize_field("n_pad")?,
+                d: a.usize_field("d")?,
+                theta_dim: a.usize_field("theta_dim")?,
+                arg_names,
+            });
+        }
+        Ok(Manifest { block_n, hidden, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Find the artifact for (task, dataset).
+    pub fn find(&self, task: TaskKind, dataset: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.task == task && a.dataset == dataset)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for task={} dataset={dataset} \
+                     (have: {})",
+                    task.name(),
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "block_n": 256, "hidden": 30,
+        "artifacts": [{
+            "name": "logreg_synth", "task": "logreg", "dataset": "synth",
+            "file": "logreg_synth.hlo.txt", "n_total": 450, "workers": 9,
+            "n_pad": 50, "d": 50, "theta_dim": 50,
+            "args": [{"name": "theta", "shape": [50]},
+                     {"name": "x", "shape": [50, 50]},
+                     {"name": "y", "shape": [50]},
+                     {"name": "mask", "shape": [50]},
+                     {"name": "lam", "shape": [1]}],
+            "outputs": ["grad", "loss"], "sha256": "x"
+        }]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("chb_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.block_n, 256);
+        let a = m.find(TaskKind::LogReg, "synth").unwrap();
+        assert_eq!(a.n_pad, 50);
+        assert!(a.needs_mask());
+        assert!(a.needs_lam());
+        assert!(m.find(TaskKind::LinReg, "synth").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

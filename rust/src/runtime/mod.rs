@@ -1,0 +1,12 @@
+//! PJRT runtime — loads the AOT artifacts (HLO text lowered by
+//! python/compile/aot.py) and executes them on the request path.
+//!
+//! Python never runs here: the rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt` +
+//! `manifest.json`.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use pjrt::{PjrtBackend, PjrtRuntime};

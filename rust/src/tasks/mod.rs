@@ -1,0 +1,353 @@
+//! Objective definitions — the pure-rust gradient backend.
+//!
+//! Mirrors python/compile/kernels/ref.py exactly (same loss
+//! conventions, §IV of the paper), in f64 so objective errors down to
+//! 1e-7 are resolvable.  The PJRT backend (runtime/) computes the same
+//! functions from the AOT artifacts in f32; integration tests compare
+//! the two.
+//!
+//! Every implementation is allocation-free on the hot path: gradients
+//! are written into caller buffers through [`WorkerObjective::grad_loss_into`].
+
+pub mod nn;
+pub mod smoothness;
+
+use crate::data::Shard;
+use crate::linalg::{self, Matrix};
+
+pub use nn::NnTask;
+
+/// Which of the paper's four learning tasks is being solved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    LinReg,
+    LogReg,
+    Lasso,
+    Nn,
+}
+
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::LinReg => "linreg",
+            TaskKind::LogReg => "logreg",
+            TaskKind::Lasso => "lasso",
+            TaskKind::Nn => "nn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "linreg" => Some(TaskKind::LinReg),
+            "logreg" => Some(TaskKind::LogReg),
+            "lasso" => Some(TaskKind::Lasso),
+            "nn" => Some(TaskKind::Nn),
+            _ => None,
+        }
+    }
+
+    /// Flat parameter dimension for feature count d.
+    pub fn theta_dim(self, d: usize) -> usize {
+        match self {
+            TaskKind::Nn => nn::param_dim(d, nn::HIDDEN),
+            _ => d,
+        }
+    }
+}
+
+/// A worker-local objective f_m: value + (sub)gradient.
+///
+/// `grad_loss_into` writes ∇f_m(θ) into `grad` and returns f_m(θ).
+pub trait WorkerObjective: Send {
+    fn dim(&self) -> usize;
+    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64;
+
+    /// Objective value only (defaults to computing the gradient too;
+    /// overridden where a cheaper pass exists).
+    fn loss(&self, theta: &[f64]) -> f64 {
+        let mut g = vec![0.0; self.dim()];
+        self.grad_loss_into(theta, &mut g)
+    }
+}
+
+/// Numerically-stable σ(z).
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 + eᶻ) without overflow.
+#[inline]
+pub fn log1pexp(z: f64) -> f64 {
+    if z > 35.0 {
+        z
+    } else if z < -35.0 {
+        0.0
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// linear regression: ½‖Xθ − y‖²
+// ---------------------------------------------------------------------------
+
+/// Worker objective for ½‖Xθ − y‖² over a (possibly padded) shard.
+pub struct LinRegTask {
+    x: Matrix,
+    y: Vec<f64>,
+    /// scratch residual buffer (hot path is allocation-free)
+    resid: std::cell::RefCell<Vec<f64>>,
+}
+
+impl LinRegTask {
+    pub fn new(shard: &Shard) -> Self {
+        Self {
+            x: shard.x.clone(),
+            y: shard.y.clone(),
+            resid: std::cell::RefCell::new(vec![0.0; shard.x.rows]),
+        }
+    }
+}
+
+// RefCell scratch is only touched from the owning worker thread.
+unsafe impl Sync for LinRegTask {}
+
+impl WorkerObjective for LinRegTask {
+    fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        // single fused sweep over X (see Matrix::fused_residual_grad)
+        let mut r = self.resid.borrow_mut();
+        grad.fill(0.0);
+        self.x.fused_residual_grad(theta, &self.y, &mut r, grad)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ℓ2-regularized logistic regression
+// ---------------------------------------------------------------------------
+
+/// Σ log(1+exp(−y xᵀθ)) + ½λ_m‖θ‖² over a shard (mask-aware).
+pub struct LogRegTask {
+    x: Matrix,
+    y: Vec<f64>,
+    mask: Vec<f64>,
+    lam: f64,
+    coeff: std::cell::RefCell<Vec<f64>>,
+}
+
+impl LogRegTask {
+    pub fn new(shard: &Shard, lam: f64) -> Self {
+        Self {
+            x: shard.x.clone(),
+            y: shard.y.clone(),
+            mask: shard.mask.clone(),
+            lam,
+            coeff: std::cell::RefCell::new(vec![0.0; shard.x.rows]),
+        }
+    }
+}
+
+unsafe impl Sync for LogRegTask {}
+
+impl WorkerObjective for LogRegTask {
+    fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        // fused single sweep over X (same schedule as the Pallas
+        // logreg kernel): margin, loss term, coefficient, and the
+        // rank-1 gradient update all from one row visit
+        let _ = self.coeff.borrow_mut(); // keep scratch alive for API parity
+        grad.fill(0.0);
+        let mut loss = 0.0;
+        let d = self.x.cols;
+        for i in 0..self.x.rows {
+            if self.mask[i] == 0.0 {
+                continue;
+            }
+            let row = self.x.row(i);
+            let margin = self.y[i] * linalg::dot(row, theta);
+            loss += log1pexp(-margin);
+            let c = -self.y[i] * sigmoid(-margin);
+            if c != 0.0 {
+                for j in 0..d {
+                    grad[j] += c * row[j];
+                }
+            }
+        }
+        linalg::axpy(self.lam, theta, grad);
+        loss + 0.5 * self.lam * linalg::norm2_sq(theta)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lasso (subgradient)
+// ---------------------------------------------------------------------------
+
+/// ½‖Xθ − y‖² + λ_m‖θ‖₁; subgradient with sign(0) = 0 (paper §IV).
+pub struct LassoTask {
+    inner: LinRegTask,
+    lam: f64,
+}
+
+impl LassoTask {
+    pub fn new(shard: &Shard, lam: f64) -> Self {
+        Self { inner: LinRegTask::new(shard), lam }
+    }
+}
+
+impl WorkerObjective for LassoTask {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        let sq_loss = self.inner.grad_loss_into(theta, grad);
+        for (g, &t) in grad.iter_mut().zip(theta) {
+            *g += self.lam * t.signum() * f64::from(t != 0.0);
+        }
+        sq_loss + self.lam * linalg::norm1(theta)
+    }
+}
+
+/// Build the right objective for (task, shard, λ).
+pub fn build_objective(
+    task: TaskKind,
+    shard: &Shard,
+    lam: f64,
+) -> Box<dyn WorkerObjective> {
+    match task {
+        TaskKind::LinReg => Box::new(LinRegTask::new(shard)),
+        TaskKind::LogReg => Box::new(LogRegTask::new(shard, lam)),
+        TaskKind::Lasso => Box::new(LassoTask::new(shard, lam)),
+        TaskKind::Nn => Box::new(NnTask::new(shard, lam, nn::HIDDEN)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::shard_whole;
+    use crate::data::synthetic;
+    use crate::rng::Xoshiro256;
+
+    fn fixture(n: usize, d: usize, seed: u64) -> Shard {
+        let mut rng = Xoshiro256::new(seed);
+        let ds = synthetic::gaussian_pm1(&mut rng, n, d);
+        shard_whole(&ds)
+    }
+
+    /// Central-difference check: ∇f ≈ (f(θ+h e_i) − f(θ−h e_i)) / 2h.
+    fn check_gradient(obj: &dyn WorkerObjective, theta: &[f64], tol: f64) {
+        let p = theta.len();
+        let mut grad = vec![0.0; p];
+        obj.grad_loss_into(theta, &mut grad);
+        let h = 1e-5;
+        let mut tp = theta.to_vec();
+        for i in 0..p {
+            tp[i] = theta[i] + h;
+            let fp = obj.loss(&tp);
+            tp[i] = theta[i] - h;
+            let fm = obj.loss(&tp);
+            tp[i] = theta[i];
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (grad[i] - fd).abs() < tol * (1.0 + fd.abs()),
+                "coord {i}: analytic {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn linreg_gradient_matches_fd() {
+        let shard = fixture(40, 6, 1);
+        let obj = LinRegTask::new(&shard);
+        let theta = Xoshiro256::new(2).gaussian_vec(6);
+        check_gradient(&obj, &theta, 1e-4);
+    }
+
+    #[test]
+    fn logreg_gradient_matches_fd() {
+        let shard = fixture(40, 6, 3);
+        let obj = LogRegTask::new(&shard, 0.01);
+        let theta = Xoshiro256::new(4).gaussian_vec(6);
+        check_gradient(&obj, &theta, 1e-4);
+    }
+
+    #[test]
+    fn lasso_subgradient_matches_fd_away_from_zero() {
+        let shard = fixture(40, 6, 5);
+        let obj = LassoTask::new(&shard, 0.3);
+        // keep θ away from 0 so the subgradient is the gradient
+        let theta: Vec<f64> = Xoshiro256::new(6)
+            .gaussian_vec(6)
+            .iter()
+            .map(|v| v + 2.0 * v.signum() + f64::from(*v == 0.0))
+            .collect();
+        check_gradient(&obj, &theta, 1e-4);
+    }
+
+    #[test]
+    fn lasso_sign_zero_contributes_nothing() {
+        let shard = fixture(10, 4, 7);
+        let obj = LassoTask::new(&shard, 5.0);
+        let lin = LinRegTask::new(&shard);
+        let theta = vec![0.0; 4];
+        let mut g_lasso = vec![0.0; 4];
+        let mut g_lin = vec![0.0; 4];
+        obj.grad_loss_into(&theta, &mut g_lasso);
+        lin.grad_loss_into(&theta, &mut g_lin);
+        assert_eq!(g_lasso, g_lin);
+    }
+
+    #[test]
+    fn logreg_masked_rows_are_inert() {
+        let mut rng = Xoshiro256::new(8);
+        let ds = synthetic::gaussian_pm1(&mut rng, 16, 4);
+        let base = shard_whole(&ds);
+        // hand-pad with 8 zero rows
+        let mut padded = base.clone();
+        let mut x = Matrix::zeros(24, 4);
+        for i in 0..16 {
+            x.row_mut(i).copy_from_slice(base.x.row(i));
+        }
+        padded.x = x;
+        padded.y.extend(std::iter::repeat_n(0.0, 8));
+        padded.mask.extend(std::iter::repeat_n(0.0, 8));
+        let theta = Xoshiro256::new(9).gaussian_vec(4);
+        let (o1, o2) = (
+            LogRegTask::new(&base, 0.1),
+            LogRegTask::new(&padded, 0.1),
+        );
+        let mut g1 = vec![0.0; 4];
+        let mut g2 = vec![0.0; 4];
+        let l1 = o1.grad_loss_into(&theta, &mut g1);
+        let l2 = o2.grad_loss_into(&theta, &mut g2);
+        assert!((l1 - l2).abs() < 1e-12);
+        for i in 0..4 {
+            assert!((g1[i] - g2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sigmoid_stability() {
+        assert!(sigmoid(1000.0) <= 1.0);
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!((log1pexp(1000.0) - 1000.0).abs() < 1e-9);
+        assert_eq!(log1pexp(-1000.0), 0.0);
+        assert!((log1pexp(0.0) - 2f64.ln()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,246 @@
+//! The paper's nonconvex task: a 1-hidden-layer sigmoid network.
+//!
+//! pred = σ(X W1 + b1)·w2 + b2,  f_m = ½‖pred − y‖² + ½λ_m‖θ‖²
+//!
+//! θ packs (W1[d,h] row-major, b1[h], w2[h], b2) — identical layout to
+//! python/compile/kernels/ref.nn_pack, so PJRT artifacts and this
+//! backend are interchangeable.  Backprop is manual, matching the
+//! fused Pallas kernel step for step.
+
+use std::cell::RefCell;
+
+use crate::data::Shard;
+use crate::linalg::{self, Matrix};
+
+use super::{sigmoid, WorkerObjective};
+
+/// Paper: "one hidden layer with 30 nodes".
+pub const HIDDEN: usize = 30;
+
+/// Flat parameter count: d·h + h + h + 1.
+pub fn param_dim(d: usize, h: usize) -> usize {
+    d * h + 2 * h + 1
+}
+
+/// View into the flat parameter vector.
+pub struct Packed<'a> {
+    pub w1: &'a [f64], // (d*h) row-major
+    pub b1: &'a [f64],
+    pub w2: &'a [f64],
+    pub b2: f64,
+}
+
+pub fn unpack(theta: &[f64], d: usize, h: usize) -> Packed<'_> {
+    assert_eq!(theta.len(), param_dim(d, h));
+    let (w1, rest) = theta.split_at(d * h);
+    let (b1, rest) = rest.split_at(h);
+    let (w2, rest) = rest.split_at(h);
+    Packed { w1, b1, w2, b2: rest[0] }
+}
+
+struct Scratch {
+    z: Vec<f64>,    // (n, h) activations
+    r: Vec<f64>,    // (n,) residual
+    dz: Vec<f64>,   // (n, h) backprop term
+}
+
+/// Worker objective for the NN task.
+pub struct NnTask {
+    x: Matrix,
+    y: Vec<f64>,
+    mask: Vec<f64>,
+    lam: f64,
+    /// data-term multiplier; 1/N_m gives the paper's mean-loss NN
+    /// regime (gradients O(1) so α = 0.01…0.02 is stable)
+    wscale: f64,
+    h: usize,
+    scratch: RefCell<Scratch>,
+}
+
+impl NnTask {
+    pub fn new(shard: &Shard, lam: f64, h: usize) -> Self {
+        Self::with_scale(shard, lam, h, 1.0 / shard.n_real.max(1) as f64)
+    }
+
+    /// Explicit data-term scale (1.0 = plain sum loss).
+    pub fn with_scale(shard: &Shard, lam: f64, h: usize, wscale: f64) -> Self {
+        let n = shard.x.rows;
+        Self {
+            x: shard.x.clone(),
+            y: shard.y.clone(),
+            mask: shard.mask.clone(),
+            lam,
+            wscale,
+            h,
+            scratch: RefCell::new(Scratch {
+                z: vec![0.0; n * h],
+                r: vec![0.0; n],
+                dz: vec![0.0; n * h],
+            }),
+        }
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.h
+    }
+
+    pub fn wscale(&self) -> f64 {
+        self.wscale
+    }
+}
+
+// Scratch is only used from the owning worker thread.
+unsafe impl Sync for NnTask {}
+
+impl WorkerObjective for NnTask {
+    fn dim(&self) -> usize {
+        param_dim(self.x.cols, self.h)
+    }
+
+    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        let (n, d, h) = (self.x.rows, self.x.cols, self.h);
+        let p = unpack(theta, d, h);
+        let mut s = self.scratch.borrow_mut();
+        let Scratch { z, r, dz } = &mut *s;
+
+        // forward: z = σ(XW1 + b1), pred = z·w2 + b2, r = (pred − y)·mask
+        // k-outer / j-inner so every W1 access is stride-1 (W1 is
+        // row-major d×h); this is the cache layout the Pallas kernel's
+        // (bn,d)×(d,h) tile matmul uses, and it is ~2× over the naive
+        // j-outer loop at MNIST shapes (EXPERIMENTS.md §Perf).
+        for i in 0..n {
+            if self.mask[i] == 0.0 {
+                r[i] = 0.0;
+                continue;
+            }
+            let xrow = self.x.row(i);
+            let zrow = &mut z[i * h..(i + 1) * h];
+            zrow.copy_from_slice(p.b1);
+            for k in 0..d {
+                let xk = xrow[k];
+                if xk == 0.0 {
+                    continue;
+                }
+                let w1row = &p.w1[k * h..(k + 1) * h];
+                for j in 0..h {
+                    zrow[j] += xk * w1row[j];
+                }
+            }
+            for v in zrow.iter_mut() {
+                *v = sigmoid(*v);
+            }
+            let pred = linalg::dot(zrow, p.w2) + p.b2;
+            r[i] = pred - self.y[i];
+        }
+
+        // backward into the packed gradient layout
+        grad.fill(0.0);
+        let (gw1, rest) = grad.split_at_mut(d * h);
+        let (gb1, rest) = rest.split_at_mut(h);
+        let (gw2, gb2) = rest.split_at_mut(h);
+        let mut loss = 0.0;
+        for i in 0..n {
+            let ri = r[i];
+            if self.mask[i] == 0.0 {
+                continue;
+            }
+            loss += ri * ri;
+            let zrow = &z[i * h..(i + 1) * h];
+            let dzrow = &mut dz[i * h..(i + 1) * h];
+            for j in 0..h {
+                gw2[j] += ri * zrow[j];
+                dzrow[j] = ri * p.w2[j] * zrow[j] * (1.0 - zrow[j]);
+                gb1[j] += dzrow[j];
+            }
+            gb2[0] += ri;
+            let xrow = self.x.row(i);
+            for k in 0..d {
+                let xk = xrow[k];
+                if xk == 0.0 {
+                    continue;
+                }
+                let gw1row = &mut gw1[k * h..(k + 1) * h];
+                for j in 0..h {
+                    gw1row[j] += xk * dzrow[j];
+                }
+            }
+        }
+        // scale the data terms (mean-loss regime), then regularize
+        if self.wscale != 1.0 {
+            linalg::scale(self.wscale, grad);
+        }
+        linalg::axpy(self.lam, theta, grad);
+        0.5 * loss * self.wscale + 0.5 * self.lam * linalg::norm2_sq(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::shard_whole;
+    use crate::data::synthetic;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn param_dim_matches_paper_nn() {
+        // d=22 (ijcnn1), h=30 → 22·30 + 61 = 721
+        assert_eq!(param_dim(22, 30), 721);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut rng = Xoshiro256::new(10);
+        let ds = synthetic::gaussian_pm1(&mut rng, 20, 4);
+        let shard = shard_whole(&ds);
+        let h = 5;
+        let obj = NnTask::new(&shard, 0.01, h);
+        let theta: Vec<f64> = Xoshiro256::new(11)
+            .gaussian_vec(param_dim(4, h))
+            .iter()
+            .map(|v| 0.5 * v)
+            .collect();
+        let mut grad = vec![0.0; theta.len()];
+        obj.grad_loss_into(&theta, &mut grad);
+        let hstep = 1e-5;
+        let mut tp = theta.clone();
+        for i in 0..theta.len() {
+            tp[i] = theta[i] + hstep;
+            let fp = obj.loss(&tp);
+            tp[i] = theta[i] - hstep;
+            let fm = obj.loss(&tp);
+            tp[i] = theta[i];
+            let fd = (fp - fm) / (2.0 * hstep);
+            assert!(
+                (grad[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "coord {i}: analytic {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn masked_rows_are_inert() {
+        let mut rng = Xoshiro256::new(12);
+        let ds = synthetic::gaussian_pm1(&mut rng, 8, 3);
+        let base = shard_whole(&ds);
+        let mut padded = base.clone();
+        let mut x = Matrix::zeros(12, 3);
+        for i in 0..8 {
+            x.row_mut(i).copy_from_slice(base.x.row(i));
+        }
+        padded.x = x;
+        padded.y.extend([0.0; 4]);
+        padded.mask.extend([0.0; 4]);
+        let h = 4;
+        let theta = Xoshiro256::new(13).gaussian_vec(param_dim(3, h));
+        let (o1, o2) = (NnTask::new(&base, 0.1, h), NnTask::new(&padded, 0.1, h));
+        let mut g1 = vec![0.0; theta.len()];
+        let mut g2 = vec![0.0; theta.len()];
+        let l1 = o1.grad_loss_into(&theta, &mut g1);
+        let l2 = o2.grad_loss_into(&theta, &mut g2);
+        assert!((l1 - l2).abs() < 1e-12);
+        for i in 0..theta.len() {
+            assert!((g1[i] - g2[i]).abs() < 1e-12);
+        }
+    }
+}

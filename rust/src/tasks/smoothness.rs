@@ -1,0 +1,124 @@
+//! Smoothness-constant estimation (power iteration).
+//!
+//! The paper's step-size protocol is α = 1/L with L = Σ_m L_m (f = Σ f_m
+//! and each worker's Hessian bound adds).  For the quadratic tasks
+//! L_m = λ_max(X_mᵀX_m); for logistic L_m = ¼λ_max(X_mᵀX_m) + λ_m
+//! (since σ′ ≤ ¼).  Lemma 2's condition L_m² ≤ ε₁ is checked against
+//! these same estimates by `theory/`.
+
+use crate::linalg::Matrix;
+
+use super::TaskKind;
+
+/// λ_max(XᵀX) via power iteration on v ↦ Xᵀ(Xv), to relative
+/// tolerance 1e-10 (deterministic start vector, no RNG needed).
+pub fn lambda_max_xtx(x: &Matrix) -> f64 {
+    let d = x.cols;
+    if d == 0 || x.rows == 0 {
+        return 0.0;
+    }
+    // deterministic, dense start vector
+    let mut v: Vec<f64> = (0..d)
+        .map(|i| 1.0 + (i as f64 * 0.618_033_988_75).fract())
+        .collect();
+    let mut xv = vec![0.0; x.rows];
+    let mut w = vec![0.0; d];
+    let mut prev = 0.0;
+    for _ in 0..10_000 {
+        x.gemv(&v, &mut xv);
+        x.gemv_t_into(&xv, &mut w);
+        let norm = w.iter().map(|a| a * a).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        for i in 0..d {
+            v[i] = w[i] / norm;
+        }
+        // Rayleigh quotient = ‖Xv‖² after normalization step
+        x.gemv(&v, &mut xv);
+        let lam = xv.iter().map(|a| a * a).sum::<f64>();
+        if (lam - prev).abs() <= 1e-10 * lam.max(1.0) {
+            return lam;
+        }
+        prev = lam;
+    }
+    prev
+}
+
+/// Worker smoothness constant L_m for a task over shard features.
+/// `wscale` is the data-term multiplier (1/N_m for the mean-loss NN
+/// regime, 1.0 elsewhere) — curvature scales linearly with it.
+pub fn worker_smoothness_scaled(
+    task: TaskKind,
+    x: &Matrix,
+    lam: f64,
+    wscale: f64,
+) -> f64 {
+    let top = lambda_max_xtx(x);
+    match task {
+        TaskKind::LinReg | TaskKind::Lasso => top * wscale,
+        TaskKind::LogReg => 0.25 * top * wscale + lam,
+        // Nonconvex: no global Hessian bound; the paper uses hand-picked
+        // α for the NN task, so report the data curvature scale.
+        TaskKind::Nn => top * wscale,
+    }
+}
+
+/// Worker smoothness with the plain sum loss (wscale = 1).
+pub fn worker_smoothness(task: TaskKind, x: &Matrix, lam: f64) -> f64 {
+    worker_smoothness_scaled(task, x, lam, 1.0)
+}
+
+/// Global L = Σ_m L_m (f = Σ_m f_m).
+pub fn global_smoothness(task: TaskKind, shards: &[&Matrix], lam: f64) -> f64 {
+    shards.iter().map(|x| worker_smoothness(task, x, lam)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_iteration_on_known_spectrum() {
+        // X = diag(3, 2, 1) ⇒ λ_max(XᵀX) = 9
+        let x = Matrix::from_rows(vec![
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 2.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ]);
+        let lam = lambda_max_xtx(&x);
+        assert!((lam - 9.0).abs() < 1e-8, "λ={lam}");
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // X = u vᵀ with ‖u‖=√2, ‖v‖=√3 ⇒ λ_max = ‖u‖²‖v‖² = 6
+        let x = Matrix::from_rows(vec![
+            vec![1.0, 1.0, 1.0],
+            vec![1.0, 1.0, 1.0],
+        ]);
+        let lam = lambda_max_xtx(&x);
+        assert!((lam - 6.0).abs() < 1e-8, "λ={lam}");
+    }
+
+    #[test]
+    fn zero_matrix_is_zero() {
+        let x = Matrix::zeros(4, 3);
+        assert_eq!(lambda_max_xtx(&x), 0.0);
+    }
+
+    #[test]
+    fn logistic_smoothness_is_quarter_plus_reg() {
+        let x = Matrix::from_rows(vec![vec![2.0, 0.0], vec![0.0, 1.0]]);
+        let l = worker_smoothness(TaskKind::LogReg, &x, 0.5);
+        assert!((l - (0.25 * 4.0 + 0.5)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn global_sums_workers() {
+        let a = Matrix::from_rows(vec![vec![1.0]]);
+        let b = Matrix::from_rows(vec![vec![2.0]]);
+        let g = global_smoothness(TaskKind::LinReg, &[&a, &b], 0.0);
+        assert!((g - 5.0).abs() < 1e-10);
+    }
+}

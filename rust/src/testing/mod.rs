@@ -1,0 +1,4 @@
+//! Test substrates: a property-testing driver (proptest is not on
+//! this image) and shared fixtures.
+
+pub mod prop;

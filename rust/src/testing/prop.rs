@@ -1,0 +1,160 @@
+//! Minimal property-testing driver with shrinking (proptest is not
+//! available on this image).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG wrapper with
+//! value generators).  [`check`] runs N random cases; on failure it
+//! re-runs with the failing seed while halving integer sizes through
+//! [`Gen::shrunk`] to report a smaller counterexample seed.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check("aggregate telescopes", 200, |g| {
+//!     let dim = g.usize_in(1..=32);
+//!     …
+//!     prop::assert_prop!(cond, "message {}", detail);
+//!     Ok(())
+//! });
+//! ```
+
+use crate::rng::Xoshiro256;
+
+/// Outcome of a single case: Err carries the failure message.
+pub type CaseResult = Result<(), String>;
+
+/// Seeded value generator handed to each property case.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// size multiplier in (0, 1]; shrinking lowers it
+    size: f64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(seed), size: 1.0, seed }
+    }
+
+    fn shrunk(seed: u64, size: f64) -> Self {
+        Self { rng: Xoshiro256::new(seed), size, seed }
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        // shrinking pulls the upper end toward lo
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.next_below(span as u64 + 1) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64() * self.size
+            + if self.size < 1.0 { 0.0 } else { 0.0 }
+    }
+
+    pub fn f64_signed(&mut self, mag: f64) -> f64 {
+        (2.0 * self.rng.next_f64() - 1.0) * mag * self.size
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.next_gaussian()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, mag: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_signed(mag)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `cases` random cases of `prop`.  Panics with the smallest
+/// found counterexample's seed + message on failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    // fixed base seed → reproducible CI; derive per-case seeds
+    let mut seeder = crate::rng::SplitMix64::new(0xC4B_5EED ^ name.len() as u64);
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: same seed, smaller size
+            let mut best = (seed, 1.0f64, msg);
+            let mut size = 0.5;
+            while size > 0.01 {
+                let mut g = Gen::shrunk(seed, size);
+                if let Err(msg) = prop(&mut g) {
+                    best = (seed, size, msg);
+                    size *= 0.5;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (seed {:#x}, size {:.3}): {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+/// assert! that returns Err instead of panicking (so shrinking works).
+#[macro_export]
+macro_rules! assert_prop {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 100, |g| {
+            let a = g.f64_signed(1e6);
+            let b = g.f64_signed(1e6);
+            crate::assert_prop!(a + b == b + a, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails above", 50, |g| {
+            let v = g.usize_in(0..=100);
+            crate::assert_prop!(v < 5, "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let u = g.usize_in(3..=7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 2.0);
+            assert!((-1.0..=2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shrunk_gen_produces_smaller_values() {
+        let mut big = Gen::new(9);
+        let mut small = Gen::shrunk(9, 0.05);
+        let b: usize = (0..100).map(|_| big.usize_in(0..=1000)).sum();
+        let s: usize = (0..100).map(|_| small.usize_in(0..=1000)).sum();
+        assert!(s < b / 4, "shrunk {s} vs full {b}");
+    }
+}

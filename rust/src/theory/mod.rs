@@ -1,0 +1,267 @@
+//! The paper's theory as executable checks.
+//!
+//! * [`ParamChoice`] — the admissible (α, β, ε₁) regions of Lemma 1:
+//!   conditions (10)–(12) and the closed-form corollaries (14)/(43),
+//!   (44), and the Theorem-1 setting (55)/(17).
+//! * [`LyapunovTracker`] — 𝕃(θᵏ) of eq. (9) with the monotonicity
+//!   check of Lemma 1.
+//! * [`lemma2_bound`] — the S_m ≤ k/2 communication bound.
+//! * [`chb_iteration_complexity`] — eq. (59).
+
+/// σ₀, σ₁, γ of (10)–(12) for a given parameter setting.
+#[derive(Clone, Copy, Debug)]
+pub struct LemmaConstants {
+    pub sigma0: f64,
+    pub sigma1: f64,
+    pub gamma: f64,
+}
+
+/// A full CHB parameter choice to validate against Lemma 1.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamChoice {
+    pub alpha: f64,
+    pub beta: f64,
+    pub epsilon1: f64,
+    /// Lyapunov weight η₁ ≥ (1−αL)/(2α) (eq. 9 / Lemma 1 hypothesis)
+    pub eta1: f64,
+    /// Young's-inequality free parameters (ρ₁, ρ₂, ρ₃ > 0)
+    pub rho: (f64, f64, f64),
+}
+
+impl ParamChoice {
+    /// The closed-form family (43): η₁ = (1−αL)/(2α), ρ₃ free.
+    /// Given α ≤ 1/L and ρ₃, picks the largest admissible β and ε₁
+    /// scaled by `beta_frac`/`eps_frac` ∈ (0, 1].
+    pub fn closed_form_43(
+        l: f64,
+        alpha: f64,
+        rho3: f64,
+        beta_frac: f64,
+        eps_frac: f64,
+        m_c_max: usize,
+    ) -> ParamChoice {
+        assert!(alpha <= 1.0 / l, "need α ≤ 1/L");
+        let eta1 = (1.0 - alpha * l) / (2.0 * alpha);
+        let beta_max = ((1.0 - alpha * l) / (1.0 + 1.0 / rho3)).sqrt();
+        let beta = beta_frac * beta_max;
+        let eps_max = ((1.0 - alpha * l) - beta * beta * (1.0 + 1.0 / rho3))
+            / (alpha * alpha * (1.0 + rho3) * (m_c_max * m_c_max) as f64);
+        ParamChoice {
+            alpha,
+            beta,
+            epsilon1: eps_frac * eps_max.max(0.0),
+            eta1,
+            rho: (1.0, 1.0, rho3),
+        }
+    }
+
+    /// The Theorem-1 setting (55): ρ₃ = 1, α = (1−δ)/L,
+    /// ε₁ = (1−αL)(1−αμ)/(4α²M²), β = ½√((1−αL)(1−αμ)).
+    pub fn theorem1_setting(l: f64, mu: f64, delta: f64, m: usize) -> ParamChoice {
+        assert!((0.0..1.0).contains(&delta));
+        let alpha = (1.0 - delta) / l;
+        let a_l = alpha * l;
+        let a_mu = alpha * mu;
+        ParamChoice {
+            alpha,
+            beta: 0.5 * ((1.0 - a_l) * (1.0 - a_mu)).sqrt(),
+            epsilon1: (1.0 - a_l) * (1.0 - a_mu)
+                / (4.0 * alpha * alpha * (m * m) as f64),
+            eta1: (1.0 - a_l) / (2.0 * alpha),
+            rho: (1.0, 1.0, 1.0),
+        }
+    }
+
+    /// Evaluate σ₀ (10), σ₁ (11), γ (12) for worst-case |M_c| = m_c.
+    pub fn lemma1_constants(&self, l: f64, m_c: usize) -> LemmaConstants {
+        let (r1, r2, r3) = self.rho;
+        let a = self.alpha;
+        let excess = self.eta1 - (1.0 - a * l) / (2.0 * a); // η₁ − (1−αL)/(2α)
+        let gamma = a / 2.0 * (1.0 + r3)
+            + excess * a * a * (1.0 + r1) * (1.0 + 1.0 / r2);
+        let sigma0 = a / 2.0 - excess * a * a * (1.0 + r1) * (1.0 + r2);
+        let sigma1 = -gamma * ((m_c * m_c) as f64) * self.epsilon1
+            - self.beta * self.beta / (2.0 * a) * (1.0 + 1.0 / r3)
+            - excess * self.beta * self.beta * (1.0 + 1.0 / r1)
+            + self.eta1;
+        LemmaConstants { sigma0, sigma1, gamma }
+    }
+
+    /// Does this choice satisfy Lemma 1 with σ₀, σ₁ > 0 for every
+    /// possible censored-set size 0..=m (strict, as Theorems 1–3 need)?
+    pub fn satisfies_lemma1(&self, l: f64, m: usize) -> bool {
+        if self.eta1 < (1.0 - self.alpha * l) / (2.0 * self.alpha) {
+            return false; // Lemma 1's hypothesis η₁ − (1−αL)/(2α) ≥ 0
+        }
+        // σ₁ is decreasing in |M_c|, σ₀ is independent of it:
+        let worst = self.lemma1_constants(l, m);
+        worst.sigma0 > 0.0 && worst.sigma1 > 0.0
+    }
+
+    /// Theorem-1 contraction factor c(α, β, ε₁) = min{2σ₀μ, min_k σ₁/η₁}.
+    pub fn contraction(&self, l: f64, mu: f64, m: usize) -> f64 {
+        let worst = self.lemma1_constants(l, m);
+        let c = (2.0 * worst.sigma0 * mu).min(worst.sigma1 / self.eta1);
+        c.clamp(0.0, 1.0)
+    }
+}
+
+/// Theorem-1 corollary (17): with the (55) setting the rate is
+/// c = (1−δ)/(L/μ) = αμ.
+pub fn theorem1_rate(l: f64, mu: f64, delta: f64) -> f64 {
+    (1.0 - delta) / (l / mu)
+}
+
+/// Iteration complexity (59): 𝕀(ε) = (L/μ)/(1−δ) · log(1/ε).
+pub fn chb_iteration_complexity(l: f64, mu: f64, delta: f64, eps: f64) -> f64 {
+    (l / mu) / (1.0 - delta) * (1.0 / eps).ln()
+}
+
+/// Lemma 2: if L_m² ≤ ε₁ then S_m ≤ k/2 after k iterations.
+pub fn lemma2_applies(l_m: f64, epsilon1: f64) -> bool {
+    l_m * l_m <= epsilon1
+}
+
+/// The Lemma-2 bound on worker m's transmissions after k iterations.
+pub fn lemma2_bound(k: usize) -> usize {
+    k.div_ceil(2)
+}
+
+/// Lyapunov function 𝕃(θᵏ) = f(θᵏ) − f* + η₁‖θᵏ − θ^{k−1}‖² (eq. 9),
+/// tracked across a run to verify Lemma 1's monotone descent.
+pub struct LyapunovTracker {
+    pub eta1: f64,
+    pub f_star: f64,
+    values: Vec<f64>,
+}
+
+impl LyapunovTracker {
+    pub fn new(eta1: f64, f_star: f64) -> Self {
+        Self { eta1, f_star, values: Vec::new() }
+    }
+
+    /// Record iteration k from f(θᵏ) and ‖θᵏ − θ^{k−1}‖².
+    pub fn record(&mut self, loss: f64, step_sq_prev: f64) -> f64 {
+        let v = loss - self.f_star + self.eta1 * step_sq_prev;
+        self.values.push(v);
+        v
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Fraction of steps that increased 𝕃 beyond tolerance — Lemma 1
+    /// says this should be 0 under conditions (10)–(12).
+    pub fn violation_fraction(&self, rel_tol: f64) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        let violations = self
+            .values
+            .windows(2)
+            .filter(|w| w[1] > w[0] * (1.0 + rel_tol) + rel_tol)
+            .count();
+        violations as f64 / (self.values.len() - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_43_satisfies_lemma1() {
+        let l = 10.0;
+        for &af in &[0.3, 0.6, 0.9] {
+            let p = ParamChoice::closed_form_43(l, af / l, 1.0, 0.5, 0.5, 9);
+            assert!(
+                p.satisfies_lemma1(l, 9),
+                "α={af}/L: {:?}",
+                p.lemma1_constants(l, 9)
+            );
+        }
+    }
+
+    #[test]
+    fn theorem1_setting_satisfies_lemma1_and_rate() {
+        let (l, mu, m) = (8.0, 0.5, 9);
+        for &delta in &[0.1, 0.5, 0.9] {
+            let p = ParamChoice::theorem1_setting(l, mu, delta, m);
+            assert!(p.satisfies_lemma1(l, m), "δ={delta}");
+            // paper (56): with this setting c = αμ = (1−δ)μ/L
+            let c = p.contraction(l, mu, m);
+            let want = theorem1_rate(l, mu, delta);
+            assert!(
+                (c - want).abs() < 1e-9,
+                "δ={delta}: c={c} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn sigma1_decreases_with_censored_set_size() {
+        let l = 5.0;
+        let p = ParamChoice::closed_form_43(l, 0.5 / l, 1.0, 0.5, 0.5, 4);
+        let s_small = p.lemma1_constants(l, 1).sigma1;
+        let s_big = p.lemma1_constants(l, 4).sigma1;
+        assert!(s_small > s_big);
+    }
+
+    #[test]
+    fn too_large_epsilon_violates_lemma1() {
+        let l = 5.0;
+        let mut p = ParamChoice::closed_form_43(l, 0.5 / l, 1.0, 0.5, 1.0, 4);
+        p.epsilon1 *= 10.0;
+        assert!(!p.satisfies_lemma1(l, 4));
+    }
+
+    #[test]
+    fn beta_zero_epsilon_zero_always_admissible() {
+        // degenerates to GD: (14) with β = ε₁ = 0 and α ≤ 1/L
+        let l = 3.0;
+        let p = ParamChoice {
+            alpha: 1.0 / l,
+            beta: 0.0,
+            epsilon1: 0.0,
+            eta1: 0.0,
+            rho: (1.0, 1.0, 1.0),
+        };
+        // η₁ = (1−αL)/(2α) = 0 here, so hypothesis holds with equality
+        assert!(p.lemma1_constants(l, 9).sigma0 > 0.0);
+        assert!(p.lemma1_constants(l, 9).sigma1 >= 0.0);
+    }
+
+    #[test]
+    fn iteration_complexity_matches_eq59_shape() {
+        // doubling the condition number doubles the complexity
+        let a = chb_iteration_complexity(10.0, 1.0, 0.0, 1e-6);
+        let b = chb_iteration_complexity(20.0, 1.0, 0.0, 1e-6);
+        assert!((b / a - 2.0).abs() < 1e-12);
+        // tighter ε costs log(1/ε)
+        let c = chb_iteration_complexity(10.0, 1.0, 0.0, 1e-12);
+        assert!((c / a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lemma2_predicate_and_bound() {
+        assert!(lemma2_applies(0.3, 0.1)); // 0.09 ≤ 0.1
+        assert!(!lemma2_applies(0.4, 0.1));
+        assert_eq!(lemma2_bound(24), 12);
+        assert_eq!(lemma2_bound(25), 13);
+    }
+
+    #[test]
+    fn lyapunov_tracker_flags_increases() {
+        let mut t = LyapunovTracker::new(1.0, 0.0);
+        t.record(10.0, 0.0);
+        t.record(5.0, 0.1);
+        t.record(6.0, 0.0); // increase!
+        assert!(t.violation_fraction(1e-12) > 0.0);
+        let mut mono = LyapunovTracker::new(1.0, 0.0);
+        mono.record(10.0, 0.0);
+        mono.record(5.0, 0.0);
+        mono.record(2.0, 0.0);
+        assert_eq!(mono.violation_fraction(1e-12), 0.0);
+    }
+}

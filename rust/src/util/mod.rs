@@ -1,0 +1,9 @@
+//! Small substrates built from scratch (the image has no clap / serde
+//! / toml crates): CLI parsing, a TOML-subset config reader, a JSON
+//! parser (for artifacts/manifest.json), logging, and timing.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod timer;

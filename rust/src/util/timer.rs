@@ -1,0 +1,66 @@
+//! Wallclock timing helpers for the experiment drivers and benches.
+
+use std::time::Instant;
+
+/// Scoped timer: `let _t = Timer::new("phase");` prints on drop.
+pub struct Timer {
+    label: String,
+    start: Instant,
+    /// suppress printing (used when the caller only wants elapsed())
+    quiet: bool,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Self {
+        Self { label: label.to_string(), start: Instant::now(), quiet: false }
+    }
+
+    pub fn quiet() -> Self {
+        Self { label: String::new(), start: Instant::now(), quiet: true }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if !self.quiet {
+            crate::info!("{}: {:.3}s", self.label, self.elapsed_secs());
+        }
+    }
+}
+
+/// Format a count of seconds compactly (1.23s, 45ms, 12µs).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_nonnegative() {
+        let t = Timer::quiet();
+        assert!(t.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.50s");
+        assert_eq!(fmt_duration(0.0025), "2.50ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.50µs");
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: the PJRT backend (AOT Pallas artifacts) must compute
+//! the same gradients/losses as the pure-rust f64 backend, and a full
+//! federated run through PJRT must track the rust-backend run.
+//!
+//! Requires `make artifacts` (skips with a message otherwise —
+//! integration environments without jax still pass the rest).
+
+use std::path::Path;
+
+use chb_fed::coordinator::{run_serial, GradientBackend, RunConfig};
+use chb_fed::data::{partition, registry};
+use chb_fed::experiments::Problem;
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::runtime::PjrtRuntime;
+use chb_fed::tasks::{self, TaskKind};
+
+fn artifact_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn pjrt_gradients_match_rust_backend_on_synth() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = PjrtRuntime::new(dir).expect("pjrt runtime");
+    let ds = registry::load("synth", Path::new("data")).unwrap();
+    let shards = partition::split_even(&ds, 9);
+    let lam = 0.001 / 9.0;
+
+    for task in [TaskKind::LinReg, TaskKind::LogReg] {
+        let meta = rt.manifest().find(task, "synth").unwrap().clone();
+        for (i, shard) in shards.iter().enumerate().take(3) {
+            let mut pjrt = rt.worker_backend(&meta, shard, lam).unwrap();
+            let obj = tasks::build_objective(task, shard, lam);
+            let dim = obj.dim();
+            // a few distinct iterates, including non-trivial ones
+            for scale in [0.0, 0.1, -0.5] {
+                let theta: Vec<f64> =
+                    (0..dim).map(|j| scale * ((j % 7) as f64 - 3.0) / 3.0).collect();
+                let mut g_rust = vec![0.0; dim];
+                let l_rust = obj.grad_loss_into(&theta, &mut g_rust);
+                let mut g_pjrt = vec![0.0; dim];
+                let l_pjrt = pjrt.grad_loss_into(&theta, &mut g_pjrt);
+                let gscale = g_rust
+                    .iter()
+                    .fold(1.0f64, |m, v| m.max(v.abs()));
+                assert!(
+                    max_abs_diff(&g_rust, &g_pjrt) < 1e-4 * gscale,
+                    "{} worker {i} scale {scale}: grad mismatch {:.3e}",
+                    task.name(),
+                    max_abs_diff(&g_rust, &g_pjrt)
+                );
+                assert!(
+                    (l_rust - l_pjrt).abs() < 1e-3 * l_rust.abs().max(1.0),
+                    "{} worker {i}: loss {l_rust} vs {l_pjrt}",
+                    task.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_federated_run_tracks_rust_run() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = PjrtRuntime::new(dir).expect("pjrt runtime");
+    let problem =
+        Problem::from_registry(TaskKind::LinReg, "synth", Path::new("data"), 0.0)
+            .unwrap();
+    let proto_alpha = 1.0 / problem.l_global;
+    let params = MethodParams::new(proto_alpha)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, problem.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 40);
+
+    let mut rust_ws = problem.rust_workers();
+    let rust_trace = run_serial(&mut rust_ws, &cfg, problem.theta0());
+    let mut pjrt_ws = problem.pjrt_workers(&mut rt).unwrap();
+    let pjrt_trace = run_serial(&mut pjrt_ws, &cfg, problem.theta0());
+
+    assert_eq!(rust_trace.iterations(), pjrt_trace.iterations());
+    // f32 artifacts vs f64 backend: trajectories agree to f32 noise;
+    // after 40 iterations losses must still be within 0.1% relative
+    // and the comm pattern should be near-identical.
+    for (a, b) in rust_trace.iters.iter().zip(&pjrt_trace.iters) {
+        let rel = (a.loss - b.loss).abs() / a.loss.abs().max(1e-9);
+        assert!(rel < 1e-3, "k={}: rust {} vs pjrt {}", a.k, a.loss, b.loss);
+    }
+    let comm_gap = (rust_trace.total_comms() as i64
+        - pjrt_trace.total_comms() as i64)
+        .unsigned_abs() as usize;
+    assert!(
+        comm_gap <= rust_trace.total_comms() / 10 + 4,
+        "comm divergence: rust {} vs pjrt {}",
+        rust_trace.total_comms(),
+        pjrt_trace.total_comms()
+    );
+}

@@ -1,0 +1,226 @@
+//! Property-based invariants of the coordinator (testing::prop
+//! driver; proptest is not on this image).
+//!
+//! These pin the identities the paper's correctness rests on:
+//!   1. eq. (5) telescopes: the server aggregate always equals
+//!      Σ_m ∇f_m(θ̂_m) over the workers' last-transmitted state.
+//!   2. ε₁ = 0 ⇒ CHB ≡ HB and LAG ≡ GD, bit for bit.
+//!   3. comm accounting: comms_cum = Σ per-round; per-worker
+//!      S_m sums match; censored methods never transmit more than M·K.
+//!   4. serial and threaded engines agree bit-for-bit.
+//!   5. Lemma 1 (Lyapunov monotone descent) under the closed-form
+//!      (43) parameter choice, away from machine precision.
+
+use chb_fed::coordinator::{run_serial, run_threaded, RunConfig, StopRule};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::linalg;
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::tasks::TaskKind;
+use chb_fed::testing::prop::{self, Gen};
+use chb_fed::theory::{LyapunovTracker, ParamChoice};
+
+/// Random small linreg problem.
+fn gen_problem(g: &mut Gen) -> Problem {
+    let m = g.usize_in(2..=6);
+    let d = g.usize_in(2..=12);
+    let n = g.usize_in(4..=30);
+    let l_m: Vec<f64> = (0..m).map(|_| g.f64_in(0.5, 20.0)).collect();
+    let per_worker =
+        synthetic::per_worker_rescaled(g.seed ^ 0x9E37, m, n, d, &l_m);
+    Problem::from_worker_datasets(TaskKind::LinReg, "prop", &per_worker, 0.0)
+}
+
+#[test]
+fn aggregate_telescopes_to_sum_of_last_transmitted() {
+    prop::check("aggregate telescopes", 40, |g| {
+        let p = gen_problem(g);
+        let params = MethodParams::new(g.f64_in(0.1, 1.0) / p.l_global)
+            .with_beta(g.f64_in(0.0, 0.8))
+            .with_epsilon1_scaled(g.f64_in(0.01, 1.0), p.m_workers());
+        let iters = g.usize_in(1..=40);
+        // run manually so we can inspect worker state at the end
+        let censor = chb_fed::optim::method::build_censor_rule(Method::Chb, &params);
+        let mut server =
+            chb_fed::coordinator::Server::new(Method::Chb, &params, p.theta0());
+        let mut workers = p.rust_workers();
+        for k in 1..=iters {
+            let step_sq = server.theta_step_sq();
+            let theta = server.theta.clone();
+            let rounds: Vec<_> = workers
+                .iter_mut()
+                .map(|w| w.round(&theta, step_sq, censor.as_ref(), k))
+                .collect();
+            server.apply_round(&rounds);
+        }
+        // eq. (5) invariant: ∇ᵏ == Σ_m last_transmitted_m
+        let dim = server.dim();
+        let mut expect = vec![0.0; dim];
+        for w in &workers {
+            linalg::axpy(1.0, w.last_transmitted(), &mut expect);
+        }
+        let diff = expect
+            .iter()
+            .zip(&server.agg_grad)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let scale = linalg::norm2(&expect).max(1.0);
+        chb_fed::assert_prop!(
+            diff <= 1e-9 * scale,
+            "aggregate drifted from telescoped sum: {diff:.3e} (scale {scale:.3e})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn epsilon_zero_collapses_to_classical_methods() {
+    prop::check("ε₁=0 ⇒ CHB≡HB, LAG≡GD", 25, |g| {
+        let p = gen_problem(g);
+        let params = MethodParams::new(g.f64_in(0.1, 1.0) / p.l_global)
+            .with_beta(g.f64_in(0.1, 0.6))
+            .with_epsilon1(0.0);
+        let iters = g.usize_in(5..=30);
+        for (censored, classical) in [(Method::Chb, Method::Hb), (Method::Lag, Method::Gd)] {
+            let cfg_a = RunConfig::new(censored, params, iters);
+            let cfg_b = RunConfig::new(classical, params, iters);
+            let mut ws = p.rust_workers();
+            let a = run_serial(&mut ws, &cfg_a, p.theta0());
+            let mut ws = p.rust_workers();
+            let b = run_serial(&mut ws, &cfg_b, p.theta0());
+            for (x, y) in a.iters.iter().zip(&b.iters) {
+                chb_fed::assert_prop!(
+                    x.loss.to_bits() == y.loss.to_bits(),
+                    "{} vs {} diverged at k={}: {} vs {}",
+                    censored.name(),
+                    classical.name(),
+                    x.k,
+                    x.loss,
+                    y.loss
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn communication_accounting_is_consistent() {
+    prop::check("comm accounting", 30, |g| {
+        let p = gen_problem(g);
+        let m = p.m_workers();
+        let params = MethodParams::new(g.f64_in(0.2, 1.0) / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(g.f64_in(0.01, 2.0), m);
+        let iters = g.usize_in(2..=50);
+        let cfg = RunConfig::new(Method::Chb, params, iters).with_comm_map();
+        let mut ws = p.rust_workers();
+        let t = run_serial(&mut ws, &cfg, p.theta0());
+
+        // cumulative == running sum of per-round
+        let mut cum = 0;
+        for s in &t.iters {
+            cum += s.comms_round;
+            chb_fed::assert_prop!(
+                s.comms_cum == cum,
+                "k={}: comms_cum {} != running sum {cum}",
+                s.k,
+                s.comms_cum
+            );
+            chb_fed::assert_prop!(
+                s.comms_round <= m,
+                "k={}: {} transmissions from {m} workers",
+                s.k,
+                s.comms_round
+            );
+        }
+        // per-worker sums match the total
+        let by_worker: usize = t.per_worker_comms.iter().sum();
+        chb_fed::assert_prop!(
+            by_worker == t.total_comms(),
+            "per-worker sum {by_worker} != total {}",
+            t.total_comms()
+        );
+        // comm map agrees with both
+        let by_map: usize = t
+            .comm_map
+            .iter()
+            .map(|row| row.iter().filter(|&&b| b).count())
+            .sum();
+        chb_fed::assert_prop!(by_map == t.total_comms(), "map {} != total", by_map);
+        // everyone transmits at k=1 (θ̂⁰ = 0 convention)
+        chb_fed::assert_prop!(
+            t.iters[0].comms_round == m,
+            "k=1 transmitted {} != M={m}",
+            t.iters[0].comms_round
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn serial_and_threaded_engines_agree() {
+    prop::check("serial == threaded", 15, |g| {
+        let p = gen_problem(g);
+        let params = MethodParams::new(g.f64_in(0.2, 1.0) / p.l_global)
+            .with_beta(g.f64_in(0.0, 0.6))
+            .with_epsilon1_scaled(0.1, p.m_workers());
+        let iters = g.usize_in(2..=40);
+        let cfg = RunConfig::new(Method::Chb, params, iters).with_comm_map();
+        let mut ws = p.rust_workers();
+        let a = run_serial(&mut ws, &cfg, p.theta0());
+        let b = run_threaded(p.rust_workers(), &cfg, p.theta0());
+        chb_fed::assert_prop!(a.iterations() == b.iterations(), "iter count");
+        for (x, y) in a.iters.iter().zip(&b.iters) {
+            chb_fed::assert_prop!(
+                x.loss.to_bits() == y.loss.to_bits()
+                    && x.comms_cum == y.comms_cum,
+                "k={}: serial ({}, {}) vs threaded ({}, {})",
+                x.k,
+                x.loss,
+                x.comms_cum,
+                y.loss,
+                y.comms_cum
+            );
+        }
+        chb_fed::assert_prop!(a.comm_map == b.comm_map, "comm maps differ");
+        Ok(())
+    });
+}
+
+#[test]
+fn lemma1_lyapunov_descends_under_condition_43() {
+    prop::check("Lemma 1 descent", 15, |g| {
+        let p = gen_problem(g);
+        let m = p.m_workers();
+        let l = p.l_global;
+        // closed-form (43) choice with conservative fractions
+        let alpha = g.f64_in(0.3, 0.9) / l;
+        let choice = ParamChoice::closed_form_43(l, alpha, 1.0, 0.5, 0.5, m);
+        chb_fed::assert_prop!(choice.satisfies_lemma1(l, m), "choice inadmissible");
+        let params = MethodParams::new(choice.alpha)
+            .with_beta(choice.beta)
+            .with_epsilon1(choice.epsilon1);
+        let f_star = p.f_star().expect("convex");
+        // stop far from machine precision: Lemma 1 is exact-arithmetic
+        let cfg = RunConfig::new(Method::Chb, params, 300)
+            .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-8 });
+        let mut ws = p.rust_workers();
+        let t = run_serial(&mut ws, &cfg, p.theta0());
+
+        let mut tracker = LyapunovTracker::new(choice.eta1, f_star);
+        // 𝕃(θᵏ) uses ‖θᵏ − θ^{k−1}‖², which is step_sq of round k−1
+        let mut prev_step_sq = 0.0;
+        for s in &t.iters {
+            tracker.record(s.loss, prev_step_sq);
+            prev_step_sq = s.step_sq;
+        }
+        let viol = tracker.violation_fraction(1e-9);
+        chb_fed::assert_prop!(
+            viol == 0.0,
+            "Lyapunov increased on {:.1}% of steps",
+            viol * 100.0
+        );
+        Ok(())
+    });
+}
