@@ -5,7 +5,7 @@
 //! §Perf can separate coordinator overhead from gradient compute.
 
 use chb_fed::bench::{black_box, header, Bencher};
-use chb_fed::coordinator::{run_serial, RunConfig, Server, Worker};
+use chb_fed::coordinator::{run_rayon, run_serial, RunConfig, Server, Worker};
 use chb_fed::data::partition::shard_whole;
 use chb_fed::data::synthetic;
 use chb_fed::experiments::Problem;
@@ -96,4 +96,40 @@ fn main() {
         let mut ws = problem.rust_workers();
         black_box(run_serial(&mut ws, &cfg, problem.theta0()));
     });
+
+    // -- round-pipeline scaling: serial vs rayon pool ---------------------
+    // M ∈ {10, 100, 1000} simulated workers, small shards (10×20) so
+    // the pool dispatch — not the gradient math — dominates at large M.
+    // Worker construction is inside the timed body (fresh censor state
+    // per run); both pools pay it identically, so the serial/rayon
+    // *ratio* is the scaling signal reported in EXPERIMENTS.md §Perf.
+    let quick = Bencher::quick();
+    for m in [10usize, 100, 1000] {
+        let l_m: Vec<f64> =
+            (0..m).map(|i| 1.0 + (i % 7) as f64 * 0.5).collect();
+        let per_worker =
+            synthetic::per_worker_rescaled(0x5CA1E, m, 10, 20, &l_m);
+        let scale_problem = Problem::from_worker_datasets(
+            TaskKind::LinReg,
+            "scale",
+            &per_worker,
+            0.0,
+        );
+        let params = MethodParams::new(1.0 / scale_problem.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, params, 20);
+        let b = if m >= 1000 { &quick } else { &std };
+        b.run(&format!("20 CHB rounds M={m} d=20 (serial)"), |_| {
+            let mut ws = scale_problem.rust_workers();
+            black_box(run_serial(&mut ws, &cfg, scale_problem.theta0()));
+        });
+        b.run(&format!("20 CHB rounds M={m} d=20 (rayon)"), |_| {
+            black_box(run_rayon(
+                scale_problem.rust_workers(),
+                &cfg,
+                scale_problem.theta0(),
+            ));
+        });
+    }
 }

@@ -1,20 +1,27 @@
-//! Round engines: serial (deterministic reference) and threaded
-//! (one OS thread per worker, the deployment-shaped path).
+//! The round engine: one protocol loop, pluggable execution backends.
 //!
-//! Both engines run the identical protocol and produce identical
-//! traces — `tests/engine_equivalence.rs` pins this.  The serial
-//! engine is what the experiment sweeps use (no thread overhead at
-//! d = 50); the threaded engine is what `chb-fed run --engine
-//! threaded` and the e2e example use.
+//! [`RoundEngine`] owns the per-round pipeline (participation
+//! scheduling → broadcast accounting → worker dispatch → uplink
+//! accounting/failure injection → server fold → stop rule) and is
+//! generic over a [`WorkerPool`]: serial (deterministic reference),
+//! threaded (one OS thread per worker, the deployment-shaped path),
+//! or rayon (work-stealing, scales to thousands of simulated
+//! workers).  All pools run the identical protocol and produce
+//! identical traces — `tests/engine_equivalence.rs` pins this.
+//!
+//! [`run_serial`], [`run_threaded`], and [`run_rayon`] are thin
+//! wrappers kept for the sweeps/examples; there is exactly one round
+//! loop underneath all of them.
 
-use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::metrics::{IterStat, Trace};
 use crate::net::{Direction, SimNetwork};
-use crate::optim::{self, CensorDecision, Method, MethodParams};
+use crate::optim::{self, CensorDecision, CensorRule, Method, MethodParams};
 
-use super::protocol::{broadcast_bytes, Downlink, Uplink};
+use super::participation::{Participation, Schedule};
+use super::pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
+use super::protocol::broadcast_bytes;
 use super::server::Server;
 use super::worker::Worker;
 
@@ -36,6 +43,9 @@ pub struct RunConfig {
     pub params: MethodParams,
     pub max_iters: usize,
     pub stop: StopRule,
+    /// which workers join each round (default: the paper's full
+    /// participation)
+    pub participation: Participation,
     /// record the O(K·M) per-worker transmit map (Fig. 1)
     pub record_comm_map: bool,
     /// uplink drop probability (failure injection; 0 = paper setting)
@@ -50,6 +60,7 @@ impl RunConfig {
             params,
             max_iters,
             stop: StopRule::MaxIters,
+            participation: Participation::Full,
             record_comm_map: false,
             drop_prob: 0.0,
             drop_seed: 0,
@@ -58,6 +69,11 @@ impl RunConfig {
 
     pub fn with_stop(mut self, stop: StopRule) -> Self {
         self.stop = stop;
+        self
+    }
+
+    pub fn with_participation(mut self, p: Participation) -> Self {
+        self.participation = p;
         self
     }
 
@@ -81,12 +97,13 @@ impl RunConfig {
     }
 }
 
-/// Shared per-iteration bookkeeping for both engines.
+/// Per-iteration bookkeeping shared by every pool: uplink accounting +
+/// failure injection, comm-map recording, server fold.
 fn fold_round(
     server: &mut Server,
     net: &mut SimNetwork,
     cfg: &RunConfig,
-    rounds: &mut Vec<super::worker::WorkerRound>,
+    rounds: &mut [super::worker::WorkerRound],
     trace: &mut Trace,
 ) -> IterStat {
     let dim = server.dim();
@@ -135,119 +152,105 @@ fn fold_round(
     }
 }
 
-/// Deterministic single-threaded engine.
+/// The single round loop behind every engine flavor (dyn-dispatched so
+/// it is compiled once, not per pool type).  `server` and `censor`
+/// arrive pre-built, which is also the ablation entry point: inject a
+/// (server rule, censor) pair outside the Method composition table
+/// (censored Nesterov, non-paper censor rules, …) — `cfg.method` and
+/// `cfg.params` are then ignored, while scheduling, drop injection,
+/// comm accounting, and stop rules apply exactly as in a normal run.
+pub fn run_with_rules(
+    pool: &mut dyn WorkerPool,
+    cfg: &RunConfig,
+    mut server: Server,
+    censor: Arc<dyn CensorRule>,
+    label: &str,
+) -> Trace {
+    let m = pool.num_workers();
+    let mut net =
+        SimNetwork::new(m).with_drops(cfg.drop_prob, cfg.drop_seed);
+    let mut schedule = Schedule::new(cfg.participation);
+    let mut trace = Trace::new(label);
+    let dim = server.dim();
+
+    for k in 1..=cfg.max_iters {
+        let active = Arc::new(schedule.active_set(k, m));
+        let n_active = active.iter().filter(|&&a| a).count();
+        // θᵏ only goes down to the scheduled workers
+        net.broadcast(&active, broadcast_bytes(dim));
+        let input = RoundInput {
+            k,
+            theta: Arc::new(server.theta.clone()),
+            step_sq: server.theta_step_sq(),
+            active,
+            censor: Arc::clone(&censor),
+        };
+        let mut rounds = pool.run_round(&input);
+        debug_assert!(
+            rounds.len() == m
+                && rounds.iter().enumerate().all(|(i, r)| r.worker == i),
+            "pool must report every worker in id order"
+        );
+        let stat = fold_round(&mut server, &mut net, cfg, &mut rounds, &mut trace);
+        trace.participants.push(n_active);
+        let stop = cfg.should_stop(&stat);
+        trace.iters.push(stat);
+        if stop {
+            break;
+        }
+    }
+    trace.per_worker_comms = pool.per_worker_comms();
+    trace
+}
+
+/// The generic round engine: protocol loop over any [`WorkerPool`].
+pub struct RoundEngine<P: WorkerPool> {
+    pool: P,
+}
+
+impl<P: WorkerPool> RoundEngine<P> {
+    pub fn new(pool: P) -> Self {
+        Self { pool }
+    }
+
+    /// Execute the run.  Consumes the engine: pools are single-run
+    /// (worker censor state is spent, and a threaded pool's channels
+    /// are shut down when the run finishes).
+    pub fn run(mut self, cfg: &RunConfig, theta0: Vec<f64>) -> Trace {
+        let censor: Arc<dyn CensorRule> = Arc::from(
+            optim::method::build_censor_rule(cfg.method, &cfg.params),
+        );
+        let server = Server::new(cfg.method, &cfg.params, theta0);
+        run_with_rules(&mut self.pool, cfg, server, censor, cfg.method.name())
+    }
+}
+
+/// Deterministic single-threaded run (borrowed workers, so callers
+/// can inspect worker state afterwards).
 pub fn run_serial(
     workers: &mut [Worker],
     cfg: &RunConfig,
     theta0: Vec<f64>,
 ) -> Trace {
-    let censor = optim::method::build_censor_rule(cfg.method, &cfg.params);
-    let mut server = Server::new(cfg.method, &cfg.params, theta0);
-    let mut net =
-        SimNetwork::new(workers.len()).with_drops(cfg.drop_prob, cfg.drop_seed);
-    let mut trace = Trace::new(cfg.method.name());
-    let dim = server.dim();
-
-    for k in 1..=cfg.max_iters {
-        let step_sq = server.theta_step_sq();
-        let theta = server.theta.clone();
-        let mut rounds = Vec::with_capacity(workers.len());
-        for w in workers.iter_mut() {
-            net.send(Direction::Down, w.id, broadcast_bytes(dim));
-            rounds.push(w.round(&theta, step_sq, censor.as_ref(), k));
-        }
-        let stat = fold_round(&mut server, &mut net, cfg, &mut rounds, &mut trace);
-        let stop = cfg.should_stop(&stat);
-        trace.iters.push(stat);
-        if stop {
-            break;
-        }
-    }
-    trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
-    trace
+    RoundEngine::new(SerialPool::new(workers)).run(cfg, theta0)
 }
 
-/// Threaded engine: each worker runs on its own OS thread, speaking
-/// the `protocol::Downlink`/`Uplink` channel protocol with the server
-/// loop on the calling thread.
+/// One OS thread per worker, channel protocol.
 pub fn run_threaded(
     workers: Vec<Worker>,
     cfg: &RunConfig,
     theta0: Vec<f64>,
 ) -> Trace {
-    let m = workers.len();
-    let censor: Arc<dyn crate::optim::CensorRule> = Arc::from(
-        optim::method::build_censor_rule(cfg.method, &cfg.params),
-    );
-    let mut server = Server::new(cfg.method, &cfg.params, theta0);
-    let mut net =
-        SimNetwork::new(m).with_drops(cfg.drop_prob, cfg.drop_seed);
-    let mut trace = Trace::new(cfg.method.name());
-    let dim = server.dim();
+    RoundEngine::new(ThreadedPool::new(workers)).run(cfg, theta0)
+}
 
-    // spawn workers
-    let (up_tx, up_rx) = mpsc::channel::<Uplink>();
-    let mut down_txs = Vec::with_capacity(m);
-    let mut handles = Vec::with_capacity(m);
-    for mut w in workers {
-        let (down_tx, down_rx) = mpsc::channel::<Downlink>();
-        let up = up_tx.clone();
-        let censor = Arc::clone(&censor);
-        handles.push(std::thread::spawn(move || {
-            while let Ok(msg) = down_rx.recv() {
-                match msg {
-                    Downlink::Broadcast { k, theta, step_sq } => {
-                        let round =
-                            w.round(&theta, step_sq, censor.as_ref(), k);
-                        if up.send(Uplink { round }).is_err() {
-                            break;
-                        }
-                    }
-                    Downlink::Stop => break,
-                }
-            }
-            w // hand the worker back for per-worker stats
-        }));
-        down_txs.push(down_tx);
-    }
-    drop(up_tx);
-
-    for k in 1..=cfg.max_iters {
-        let step_sq = server.theta_step_sq();
-        let theta = Arc::new(server.theta.clone());
-        for (id, tx) in down_txs.iter().enumerate() {
-            net.send(Direction::Down, id, broadcast_bytes(dim));
-            tx.send(Downlink::Broadcast { k, theta: Arc::clone(&theta), step_sq })
-                .expect("worker thread died");
-        }
-        // collect all M reports, then order by worker id so the fold
-        // (and its f64 sums) is deterministic
-        let mut rounds: Vec<Option<super::worker::WorkerRound>> =
-            (0..m).map(|_| None).collect();
-        for _ in 0..m {
-            let up = up_rx.recv().expect("worker thread died");
-            let id = up.round.worker;
-            rounds[id] = Some(up.round);
-        }
-        let mut rounds: Vec<_> =
-            rounds.into_iter().map(|r| r.expect("missing worker")).collect();
-        let stat = fold_round(&mut server, &mut net, cfg, &mut rounds, &mut trace);
-        let stop = cfg.should_stop(&stat);
-        trace.iters.push(stat);
-        if stop {
-            break;
-        }
-    }
-    for tx in &down_txs {
-        let _ = tx.send(Downlink::Stop);
-    }
-    let mut per_worker = vec![0usize; m];
-    for h in handles {
-        let w = h.join().expect("worker panicked");
-        per_worker[w.id] = w.transmissions;
-    }
-    trace.per_worker_comms = per_worker;
-    trace
+/// Work-stealing pool sized to the machine; scales to M ≫ cores.
+pub fn run_rayon(
+    workers: Vec<Worker>,
+    cfg: &RunConfig,
+    theta0: Vec<f64>,
+) -> Trace {
+    RoundEngine::new(RayonPool::new(workers)).run(cfg, theta0)
 }
 
 #[cfg(test)]
@@ -315,6 +318,17 @@ mod tests {
                         .sum::<f64>()
             })
             .sum()
+    }
+
+    fn assert_traces_bitwise_equal(a: &Trace, b: &Trace, what: &str) {
+        assert_eq!(a.iterations(), b.iterations(), "{what}: iterations");
+        for (x, y) in a.iters.iter().zip(&b.iters) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what} loss k={}", x.k);
+            assert_eq!(x.comms_cum, y.comms_cum, "{what} comms k={}", x.k);
+        }
+        assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: per-worker");
+        assert_eq!(a.comm_map, b.comm_map, "{what}: comm map");
+        assert_eq!(a.participants, b.participants, "{what}: participants");
     }
 
     #[test]
@@ -386,13 +400,92 @@ mod tests {
         let mut ws = quad_workers(dim, m);
         let serial = run_serial(&mut ws, &cfg, vec![0.5; dim]);
         let threaded = run_threaded(quad_workers(dim, m), &cfg, vec![0.5; dim]);
-        assert_eq!(serial.iterations(), threaded.iterations());
-        for (a, b) in serial.iters.iter().zip(&threaded.iters) {
-            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss k={}", a.k);
-            assert_eq!(a.comms_cum, b.comms_cum, "comms k={}", a.k);
+        assert_traces_bitwise_equal(&serial, &threaded, "serial vs threaded");
+    }
+
+    #[test]
+    fn rayon_matches_serial_bit_for_bit() {
+        let (dim, m) = (5, 7);
+        let alpha = 0.8 / total_c(m);
+        let p = MethodParams::new(alpha)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, p, 120).with_comm_map();
+        let mut ws = quad_workers(dim, m);
+        let serial = run_serial(&mut ws, &cfg, vec![0.5; dim]);
+        let rayon = run_rayon(quad_workers(dim, m), &cfg, vec![0.5; dim]);
+        assert_traces_bitwise_equal(&serial, &rayon, "serial vs rayon(auto)");
+        // force real multi-threading regardless of the host's core count
+        let rayon3 = RoundEngine::new(super::RayonPool::with_threads(
+            quad_workers(dim, m),
+            3,
+        ))
+        .run(&cfg, vec![0.5; dim]);
+        assert_traces_bitwise_equal(&serial, &rayon3, "serial vs rayon(3)");
+    }
+
+    #[test]
+    fn full_participation_records_all_workers_every_round() {
+        let (dim, m) = (3, 4);
+        let mut ws = quad_workers(dim, m);
+        let cfg =
+            RunConfig::new(Method::Gd, MethodParams::new(0.1 / total_c(m)), 25);
+        let trace = run_serial(&mut ws, &cfg, vec![0.0; dim]);
+        assert_eq!(trace.participants, vec![m; 25]);
+    }
+
+    #[test]
+    fn seeded_sampling_is_reproducible_and_partial() {
+        let (dim, m) = (4, 6);
+        let alpha = 0.5 / total_c(m);
+        let p = MethodParams::new(alpha)
+            .with_beta(0.3)
+            .with_epsilon1_scaled(0.1, m);
+        let part = Participation::UniformSample { frac: 0.5, seed: 7 };
+        let cfg = RunConfig::new(Method::Chb, p, 80)
+            .with_comm_map()
+            .with_participation(part);
+        let mut ws = quad_workers(dim, m);
+        let a = run_serial(&mut ws, &cfg, vec![1.0; dim]);
+        let mut ws = quad_workers(dim, m);
+        let b = run_serial(&mut ws, &cfg, vec![1.0; dim]);
+        assert_traces_bitwise_equal(&a, &b, "same seed rerun");
+        // exactly round(0.5·6) = 3 participants per round, and only
+        // participants can transmit
+        assert!(a.participants.iter().all(|&n| n == 3));
+        for (s, &n) in a.iters.iter().zip(&a.participants) {
+            assert!(s.comms_round <= n, "k={}: {} > {n}", s.k, s.comms_round);
         }
-        assert_eq!(serial.per_worker_comms, threaded.per_worker_comms);
-        assert_eq!(serial.comm_map, threaded.comm_map);
+        // the same schedule drives every pool
+        let threaded = run_threaded(quad_workers(dim, m), &cfg, vec![1.0; dim]);
+        let rayon = run_rayon(quad_workers(dim, m), &cfg, vec![1.0; dim]);
+        assert_traces_bitwise_equal(&a, &threaded, "sampled serial vs threaded");
+        assert_traces_bitwise_equal(&a, &rayon, "sampled serial vs rayon");
+    }
+
+    #[test]
+    fn straggler_rounds_stay_consistent_and_converge() {
+        let (dim, m) = (4, 5);
+        // conservative α: stale aggregates (missed rounds) shrink the
+        // stability margin, IAG-style
+        let alpha = 0.3 / total_c(m);
+        let p = MethodParams::new(alpha)
+            .with_beta(0.2)
+            .with_epsilon1_scaled(0.1, m);
+        let part = Participation::Straggler { timeout: 1.2, seed: 11 };
+        let cfg = RunConfig::new(Method::Chb, p, 800).with_participation(part);
+        let mut ws = quad_workers(dim, m);
+        let trace = run_serial(&mut ws, &cfg, vec![2.0; dim]);
+        // rounds are never empty and never exceed M
+        assert!(trace.participants.iter().all(|&n| (1..=m).contains(&n)));
+        // Exp(1) with timeout 1.2 keeps ~70% — some rounds must be partial
+        assert!(trace.participants.iter().any(|&n| n < m));
+        // straggler-as-skip leaves the aggregate usable: the run still
+        // converges on the strongly convex problem
+        let f_star = quad_f_star(dim, m);
+        let first = trace.iters.first().unwrap().loss - f_star;
+        let last = trace.final_loss() - f_star;
+        assert!(last.is_finite() && last < first * 1e-2, "{first} → {last}");
     }
 
     #[test]

@@ -5,22 +5,33 @@
 //! *transmitted* gradient ∇f_m(θ̂_m), and a gradient backend (pure
 //! rust or PJRT).  A round is:
 //!
-//! 1. server broadcasts θᵏ (M downlink messages),
-//! 2. each worker computes ∇f_m(θᵏ), forms δ∇_m^k, applies the censor
-//!    rule (8), and either uploads δ∇_m^k or stays silent,
-//! 3. server folds received deltas into ∇ᵏ and steps θ via the
+//! 1. the [`Participation`] schedule picks this round's active set,
+//! 2. server broadcasts θᵏ to the scheduled workers,
+//! 3. each scheduled worker computes ∇f_m(θᵏ), forms δ∇_m^k, applies
+//!    the censor rule (8), and either uploads δ∇_m^k or stays silent
+//!    (unscheduled workers are treated as censored),
+//! 4. server folds received deltas into ∇ᵏ and steps θ via the
 //!    method's update rule (eq. 4).
 //!
-//! Engines: [`engine::run_serial`] (deterministic, used by the sweeps)
-//! and [`engine::run_threaded`] (one OS thread per worker, channel
-//! protocol — the deployment-shaped path).  Both produce identical
-//! traces; a property test pins that.
+//! One [`engine::RoundEngine`] runs that pipeline over any
+//! [`WorkerPool`]: [`SerialPool`] (deterministic reference),
+//! [`ThreadedPool`] (one OS thread per worker, channel protocol — the
+//! deployment-shaped path), or [`RayonPool`] (work-stealing, scales to
+//! thousands of simulated workers).  All pools produce bit-identical
+//! traces; `tests/engine_equivalence.rs` and a property test pin that.
 
 pub mod engine;
+pub mod participation;
+pub mod pool;
 pub mod protocol;
 pub mod server;
 pub mod worker;
 
-pub use engine::{run_serial, run_threaded, RunConfig, StopRule};
+pub use engine::{
+    run_rayon, run_serial, run_threaded, run_with_rules, RoundEngine,
+    RunConfig, StopRule,
+};
+pub use participation::{Participation, Schedule};
+pub use pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
 pub use server::Server;
 pub use worker::{GradientBackend, RustBackend, Worker, WorkerRound};

@@ -1,0 +1,208 @@
+//! Participation scheduling — which workers even join a round.
+//!
+//! The paper's protocol is full participation: every worker evaluates
+//! its gradient every round and only the *uplink* is censored.  Real
+//! federated deployments additionally select clients per round (the
+//! per-round worker selection of LAG-style schemes, or device
+//! availability at production scale).  This layer generates, per
+//! round, the *active set* of scheduled workers; workers outside the
+//! set behave exactly like censored workers from the server's point of
+//! view — eq. (5) simply carries their stale term, which the protocol
+//! tolerates by design.
+//!
+//! Scheduling is engine-side: the same seeded [`Schedule`] drives the
+//! serial, threaded, and rayon pools, so a `(policy, seed)` pair
+//! reproduces the identical participant sets — and therefore the
+//! identical trace — on every execution backend.  A property test
+//! pins this.
+
+use crate::rng::Xoshiro256;
+
+/// Per-round client-participation policy.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum Participation {
+    /// Every worker, every round — the paper's setting.
+    #[default]
+    Full,
+    /// Uniform random sampling without replacement: each round,
+    /// `round(frac·M)` workers (clamped to [1, M]) are drawn by a
+    /// seeded partial Fisher–Yates shuffle.
+    UniformSample { frac: f64, seed: u64 },
+    /// Deadline-based: each round every worker draws a simulated
+    /// compute time from Exp(1) (mean 1.0, i.e. `timeout` is in units
+    /// of the mean round time); workers slower than `timeout` miss
+    /// the round and are treated as censored.  If the whole cohort
+    /// misses, the single fastest worker still reports, so a round is
+    /// never empty.
+    Straggler { timeout: f64, seed: u64 },
+}
+
+impl Participation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Participation::Full => "full",
+            Participation::UniformSample { .. } => "sample",
+            Participation::Straggler { .. } => "straggler",
+        }
+    }
+}
+
+/// Stateful per-run schedule: owns the seeded RNG stream so successive
+/// rounds draw successive participant sets deterministically.
+pub struct Schedule {
+    policy: Participation,
+    rng: Xoshiro256,
+}
+
+impl Schedule {
+    pub fn new(policy: Participation) -> Self {
+        let seed = match policy {
+            Participation::Full => 0,
+            Participation::UniformSample { seed, .. }
+            | Participation::Straggler { seed, .. } => seed,
+        };
+        Self { policy, rng: Xoshiro256::new(seed) }
+    }
+
+    pub fn policy(&self) -> Participation {
+        self.policy
+    }
+
+    /// The active set for round `k` over `m` workers: `active[id]` is
+    /// true iff worker `id` is scheduled.  Always has ≥ 1 worker.
+    pub fn active_set(&mut self, _k: usize, m: usize) -> Vec<bool> {
+        match self.policy {
+            Participation::Full => vec![true; m],
+            Participation::UniformSample { frac, .. } => {
+                let count = ((frac * m as f64).round() as usize).clamp(1, m);
+                if count == m {
+                    return vec![true; m];
+                }
+                // partial Fisher–Yates: after `count` swaps the prefix
+                // is a uniform sample without replacement
+                let mut ids: Vec<usize> = (0..m).collect();
+                for i in 0..count {
+                    let j = i + self.rng.next_below((m - i) as u64) as usize;
+                    ids.swap(i, j);
+                }
+                let mut active = vec![false; m];
+                for &id in &ids[..count] {
+                    active[id] = true;
+                }
+                active
+            }
+            Participation::Straggler { timeout, .. } => {
+                let mut active = vec![false; m];
+                let mut fastest = (0usize, f64::INFINITY);
+                let mut any = false;
+                for (id, slot) in active.iter_mut().enumerate() {
+                    // Exp(1) compute time via inverse CDF
+                    let t = -(1.0 - self.rng.next_f64()).ln();
+                    if t < fastest.1 {
+                        fastest = (id, t);
+                    }
+                    if t <= timeout {
+                        *slot = true;
+                        any = true;
+                    }
+                }
+                if !any && m > 0 {
+                    active[fastest.0] = true;
+                }
+                active
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count(active: &[bool]) -> usize {
+        active.iter().filter(|&&a| a).count()
+    }
+
+    #[test]
+    fn full_schedules_everyone_every_round() {
+        let mut s = Schedule::new(Participation::Full);
+        for k in 1..=5 {
+            assert_eq!(s.active_set(k, 7), vec![true; 7]);
+        }
+    }
+
+    #[test]
+    fn uniform_sample_has_exact_count_and_is_seeded() {
+        let policy = Participation::UniformSample { frac: 0.5, seed: 42 };
+        let mut a = Schedule::new(policy);
+        let mut b = Schedule::new(policy);
+        let mut saw_different_rounds = false;
+        let mut prev: Option<Vec<bool>> = None;
+        for k in 1..=20 {
+            let sa = a.active_set(k, 8);
+            let sb = b.active_set(k, 8);
+            assert_eq!(sa, sb, "same seed must reproduce round {k}");
+            assert_eq!(count(&sa), 4, "round(0.5·8) workers");
+            if prev.as_ref().is_some_and(|p| p != &sa) {
+                saw_different_rounds = true;
+            }
+            prev = Some(sa);
+        }
+        assert!(saw_different_rounds, "sampling should vary across rounds");
+    }
+
+    #[test]
+    fn uniform_sample_clamps_to_at_least_one_and_at_most_m() {
+        let mut lo = Schedule::new(Participation::UniformSample {
+            frac: 0.0,
+            seed: 1,
+        });
+        assert_eq!(count(&lo.active_set(1, 5)), 1);
+        let mut hi = Schedule::new(Participation::UniformSample {
+            frac: 2.0,
+            seed: 1,
+        });
+        assert_eq!(count(&hi.active_set(1, 5)), 5);
+    }
+
+    #[test]
+    fn straggler_rounds_are_never_empty() {
+        // timeout 0: nobody makes the deadline, the fastest still reports
+        let mut s = Schedule::new(Participation::Straggler {
+            timeout: 0.0,
+            seed: 9,
+        });
+        for k in 1..=10 {
+            assert_eq!(count(&s.active_set(k, 6)), 1, "round {k}");
+        }
+    }
+
+    #[test]
+    fn straggler_timeout_monotone_in_expectation() {
+        let m = 16;
+        let rounds = 200;
+        let total = |timeout: f64| -> usize {
+            let mut s =
+                Schedule::new(Participation::Straggler { timeout, seed: 3 });
+            (1..=rounds).map(|k| count(&s.active_set(k, m))).sum()
+        };
+        let tight = total(0.2);
+        let loose = total(2.0);
+        assert!(
+            tight < loose,
+            "tight deadline {tight} should schedule fewer than loose {loose}"
+        );
+        // Exp(1): P(t ≤ 2) ≈ 0.86 — loose deadline keeps most workers
+        assert!(loose > rounds * m / 2);
+    }
+
+    #[test]
+    fn straggler_is_seeded_and_deterministic() {
+        let policy = Participation::Straggler { timeout: 0.8, seed: 77 };
+        let mut a = Schedule::new(policy);
+        let mut b = Schedule::new(policy);
+        for k in 1..=30 {
+            assert_eq!(a.active_set(k, 9), b.active_set(k, 9), "round {k}");
+        }
+    }
+}

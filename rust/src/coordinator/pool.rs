@@ -1,0 +1,416 @@
+//! Execution backends for one federated round — the [`WorkerPool`]
+//! trait and its three implementations.
+//!
+//! The [`engine::RoundEngine`](super::engine::RoundEngine) owns the
+//! protocol (scheduling, network accounting, server fold); a pool owns
+//! only *where the workers run*:
+//!
+//! * [`SerialPool`] — in-place on the calling thread, in worker-id
+//!   order.  The deterministic reference; what the experiment sweeps
+//!   use (no thread overhead at d = 50).
+//! * [`ThreadedPool`] — one OS thread per worker speaking the
+//!   [`protocol`](super::protocol) channel protocol.  The
+//!   deployment-shaped path; right for small M with expensive
+//!   gradients (e.g. PJRT backends).
+//! * [`RayonPool`] — a work-stealing pool: per round, a set of scoped
+//!   OS threads claim workers from a shared queue, so hundreds or
+//!   thousands of simulated workers share `available_parallelism()`
+//!   cores and a slow worker never idles the rest.  Implemented on
+//!   std only (the
+//!   external `rayon` crate is deliberately not a dependency — this
+//!   image builds hermetically), mirroring rayon's dynamic
+//!   load-balancing with an atomic claim counter.
+//!
+//! All three produce bit-identical [`WorkerRound`] sequences for the
+//! same [`RoundInput`]: each worker's computation is pure f64 and the
+//! results are re-ordered by worker id before the server folds them,
+//! so f64 summation order never depends on thread interleaving.
+//! `tests/engine_equivalence.rs` pins this across all four tasks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::optim::CensorRule;
+
+use super::protocol::{Downlink, Uplink};
+use super::worker::{Worker, WorkerRound};
+
+/// Everything a worker needs to execute round k (the broadcast,
+/// engine-side).  Cheap to clone: the iterate and active set are
+/// shared via `Arc` exactly as a real broadcast shares one payload.
+#[derive(Clone)]
+pub struct RoundInput {
+    pub k: usize,
+    /// θᵏ
+    pub theta: Arc<Vec<f64>>,
+    /// ‖θᵏ − θ^{k−1}‖², the censor rule's RHS scale
+    pub step_sq: f64,
+    /// `active[id]`: is worker `id` scheduled this round?
+    pub active: Arc<Vec<bool>>,
+    pub censor: Arc<dyn CensorRule>,
+}
+
+/// Execute one round for one worker: scheduled workers run the full
+/// Algorithm-1 round (gradient, censor rule, maybe transmit);
+/// unscheduled workers only report f_m(θᵏ) for the global-loss
+/// instrumentation and leave all censor state untouched.
+pub(crate) fn run_worker_round(w: &mut Worker, input: &RoundInput) -> WorkerRound {
+    if input.active[w.id] {
+        w.round(&input.theta, input.step_sq, input.censor.as_ref(), input.k)
+    } else {
+        w.observe(&input.theta)
+    }
+}
+
+/// Where the M workers execute.  Implementations must return one
+/// [`WorkerRound`] per worker, ordered by worker id, so the server
+/// fold (and its f64 sums) is deterministic across backends.
+pub trait WorkerPool {
+    fn num_workers(&self) -> usize;
+
+    /// Run round `input` on every worker.
+    fn run_round(&mut self, input: &RoundInput) -> Vec<WorkerRound>;
+
+    /// Per-worker lifetime transmission counts S_m (Lemma 2).
+    /// Engines call this once, after the last round; threaded pools
+    /// shut their workers down here.
+    fn per_worker_comms(&mut self) -> Vec<usize>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Deterministic single-threaded reference pool.
+pub struct SerialPool<'a> {
+    workers: &'a mut [Worker],
+}
+
+impl<'a> SerialPool<'a> {
+    pub fn new(workers: &'a mut [Worker]) -> Self {
+        Self { workers }
+    }
+}
+
+impl WorkerPool for SerialPool<'_> {
+    fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn run_round(&mut self, input: &RoundInput) -> Vec<WorkerRound> {
+        self.workers
+            .iter_mut()
+            .map(|w| run_worker_round(w, input))
+            .collect()
+    }
+
+    fn per_worker_comms(&mut self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.transmissions).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+}
+
+/// One OS thread per worker, channel protocol with the engine loop.
+pub struct ThreadedPool {
+    m: usize,
+    down_txs: Vec<mpsc::Sender<Downlink>>,
+    up_rx: mpsc::Receiver<Uplink>,
+    handles: Vec<JoinHandle<Worker>>,
+    /// cached after shutdown so `per_worker_comms` is idempotent
+    comms: Option<Vec<usize>>,
+}
+
+impl ThreadedPool {
+    pub fn new(workers: Vec<Worker>) -> Self {
+        let m = workers.len();
+        let (up_tx, up_rx) = mpsc::channel::<Uplink>();
+        let mut down_txs = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        for mut w in workers {
+            let (down_tx, down_rx) = mpsc::channel::<Downlink>();
+            let up = up_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(msg) = down_rx.recv() {
+                    match msg {
+                        Downlink::Round(input) => {
+                            let round = run_worker_round(&mut w, &input);
+                            if up.send(Uplink { round }).is_err() {
+                                break;
+                            }
+                        }
+                        Downlink::Stop => break,
+                    }
+                }
+                w // hand the worker back for per-worker stats
+            }));
+            down_txs.push(down_tx);
+        }
+        Self { m, down_txs, up_rx, handles, comms: None }
+    }
+
+    fn shutdown(&mut self) -> Vec<usize> {
+        if let Some(c) = &self.comms {
+            return c.clone();
+        }
+        for tx in &self.down_txs {
+            let _ = tx.send(Downlink::Stop);
+        }
+        let mut per = vec![0usize; self.m];
+        for h in self.handles.drain(..) {
+            let w = h.join().expect("worker thread panicked");
+            per[w.id] = w.transmissions;
+        }
+        self.comms = Some(per.clone());
+        per
+    }
+}
+
+impl WorkerPool for ThreadedPool {
+    fn num_workers(&self) -> usize {
+        self.m
+    }
+
+    fn run_round(&mut self, input: &RoundInput) -> Vec<WorkerRound> {
+        for tx in &self.down_txs {
+            tx.send(Downlink::Round(input.clone()))
+                .expect("worker thread died");
+        }
+        // collect all M reports, then order by worker id so the fold
+        // (and its f64 sums) is deterministic
+        let mut rounds: Vec<Option<WorkerRound>> =
+            (0..self.m).map(|_| None).collect();
+        for _ in 0..self.m {
+            let up = self.up_rx.recv().expect("worker thread died");
+            let id = up.round.worker;
+            rounds[id] = Some(up.round);
+        }
+        rounds
+            .into_iter()
+            .map(|r| r.expect("missing worker report"))
+            .collect()
+    }
+
+    fn per_worker_comms(&mut self) -> Vec<usize> {
+        self.shutdown()
+    }
+
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+}
+
+impl Drop for ThreadedPool {
+    fn drop(&mut self) {
+        if self.comms.is_none() {
+            let _ = self.shutdown();
+        }
+    }
+}
+
+/// Work-stealing pool: each round, `threads` scoped OS threads claim
+/// workers from a shared atomic queue, so M ≫ cores scales and uneven
+/// per-worker gradient costs balance dynamically.
+///
+/// Threads are scoped per round (`std::thread::scope`), not
+/// persistent: that costs one spawn/join cycle per thread per round
+/// (~tens of µs), which is noise once per-round gradient work is
+/// large (many workers or big shards — this pool's target regime) but
+/// means [`SerialPool`] stays the right choice for small-M sweeps.
+/// The simplicity buys something real: no channel shutdown protocol,
+/// no way to deadlock, and worker state is directly inspectable
+/// between rounds.
+pub struct RayonPool {
+    workers: Vec<Mutex<Worker>>,
+    threads: usize,
+}
+
+impl RayonPool {
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn new(workers: Vec<Worker>) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::with_threads(workers, threads)
+    }
+
+    pub fn with_threads(workers: Vec<Worker>, threads: usize) -> Self {
+        Self {
+            workers: workers.into_iter().map(Mutex::new).collect(),
+            threads: threads.max(1),
+        }
+    }
+}
+
+impl WorkerPool for RayonPool {
+    fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn run_round(&mut self, input: &RoundInput) -> Vec<WorkerRound> {
+        let m = self.workers.len();
+        let nthreads = self.threads.min(m).max(1);
+        if nthreads == 1 {
+            // 1-core images: skip the scope machinery entirely
+            return self
+                .workers
+                .iter_mut()
+                .map(|w| {
+                    run_worker_round(w.get_mut().expect("poisoned"), input)
+                })
+                .collect();
+        }
+        let next = AtomicUsize::new(0);
+        let workers = &self.workers;
+        let claimed = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nthreads)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut local = Vec::new();
+                        loop {
+                            // self-scheduling claim: whichever thread
+                            // is free takes the next worker
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= m {
+                                break;
+                            }
+                            let mut w =
+                                workers[i].lock().expect("poisoned");
+                            local.push((i, run_worker_round(&mut w, input)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("pool thread panicked"))
+                .collect::<Vec<_>>()
+        });
+        // scatter back into worker-id order
+        let mut out: Vec<Option<WorkerRound>> = (0..m).map(|_| None).collect();
+        for (i, r) in claimed {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|r| r.expect("worker never claimed"))
+            .collect()
+    }
+
+    fn per_worker_comms(&mut self) -> Vec<usize> {
+        self.workers
+            .iter_mut()
+            .map(|w| w.get_mut().expect("poisoned").transmissions)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rayon"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::GradientBackend;
+    use crate::optim::NeverCensor;
+
+    struct Lin {
+        slope: f64,
+    }
+
+    impl GradientBackend for Lin {
+        fn dim(&self) -> usize {
+            2
+        }
+
+        fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+            for (g, t) in grad.iter_mut().zip(theta) {
+                *g = self.slope * t;
+            }
+            theta.iter().map(|t| 0.5 * self.slope * t * t).sum()
+        }
+    }
+
+    fn workers(m: usize) -> Vec<Worker> {
+        (0..m)
+            .map(|i| {
+                Worker::new(i, Box::new(Lin { slope: 1.0 + i as f64 }))
+            })
+            .collect()
+    }
+
+    fn input(m: usize, active: Vec<bool>) -> RoundInput {
+        assert_eq!(active.len(), m);
+        RoundInput {
+            k: 1,
+            theta: Arc::new(vec![1.0, -1.0]),
+            step_sq: 0.0,
+            active: Arc::new(active),
+            censor: Arc::new(NeverCensor),
+        }
+    }
+
+    fn rounds_match(a: &[WorkerRound], b: &[WorkerRound]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.worker, y.worker);
+            assert_eq!(x.decision, y.decision);
+            assert_eq!(x.delta, y.delta);
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn all_pools_return_id_ordered_identical_rounds() {
+        let m = 5;
+        let inp = input(m, vec![true; m]);
+        let mut ws = workers(m);
+        let serial = SerialPool::new(&mut ws).run_round(&inp);
+        let mut threaded = ThreadedPool::new(workers(m));
+        let tr = threaded.run_round(&inp);
+        let mut rayon = RayonPool::with_threads(workers(m), 3);
+        let rr = rayon.run_round(&inp);
+        for (i, r) in serial.iter().enumerate() {
+            assert_eq!(r.worker, i);
+        }
+        rounds_match(&serial, &tr);
+        rounds_match(&serial, &rr);
+        assert_eq!(threaded.per_worker_comms(), vec![1; m]);
+        assert_eq!(rayon.per_worker_comms(), vec![1; m]);
+    }
+
+    #[test]
+    fn inactive_workers_observe_without_state_change() {
+        let m = 3;
+        let inp = input(m, vec![true, false, true]);
+        let mut ws = workers(m);
+        let rounds = SerialPool::new(&mut ws).run_round(&inp);
+        assert_eq!(rounds[1].decision, crate::optim::CensorDecision::Skip);
+        assert_eq!(rounds[1].bits, 0);
+        assert!(rounds[1].delta.is_empty());
+        // loss is still reported for global instrumentation
+        assert!(rounds[1].loss > 0.0);
+        // censor state untouched: no transmission recorded
+        assert_eq!(ws[1].transmissions, 0);
+        assert_eq!(ws[0].transmissions, 1);
+        assert_eq!(ws[1].last_transmitted(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn threaded_pool_drop_without_shutdown_does_not_hang() {
+        let pool = ThreadedPool::new(workers(4));
+        drop(pool);
+    }
+
+    #[test]
+    fn rayon_pool_handles_more_threads_than_workers() {
+        let inp = input(2, vec![true, true]);
+        let mut pool = RayonPool::with_threads(workers(2), 16);
+        let rounds = pool.run_round(&inp);
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(rounds[0].worker, 0);
+        assert_eq!(rounds[1].worker, 1);
+    }
+}

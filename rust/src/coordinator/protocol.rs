@@ -1,24 +1,18 @@
-//! Wire protocol for the threaded engine (and byte accounting for the
+//! Wire protocol for the threaded pool (and byte accounting for the
 //! network simulator).
 //!
-//! Rust channels carry these messages in-process; `wire_bytes` models
-//! what a real deployment would serialize, so the byte counters in
-//! `net/` stay meaningful.
+//! Rust channels carry these messages in-process; the `*_bytes`
+//! helpers model what a real deployment would serialize, so the byte
+//! counters in `net/` stay meaningful.
 
-use std::sync::Arc;
-
+use super::pool::RoundInput;
 use super::worker::WorkerRound;
 
 /// server → worker
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub enum Downlink {
-    /// start iteration k at iterate θᵏ
-    Broadcast {
-        k: usize,
-        theta: Arc<Vec<f64>>,
-        /// ‖θᵏ − θ^{k−1}‖², the censor rule's RHS scale
-        step_sq: f64,
-    },
+    /// start a round: θᵏ, the censor scale, and the active set
+    Round(RoundInput),
     /// shut the worker thread down
     Stop,
 }

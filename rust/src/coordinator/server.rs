@@ -42,12 +42,20 @@ pub struct Server {
 
 impl Server {
     pub fn new(method: Method, params: &MethodParams, theta0: Vec<f64>) -> Self {
+        let rule =
+            optim::method::build_server_rule(method, params, theta0.len());
+        Self::with_rule(rule, theta0)
+    }
+
+    /// Server with an injected update rule — the ablations compose
+    /// arbitrary (rule, censor) pairs outside the Method table.
+    pub fn with_rule(rule: Box<dyn ServerRule>, theta0: Vec<f64>) -> Self {
         let dim = theta0.len();
         Self {
             theta_prev: theta0.clone(),
             theta: theta0,
             agg_grad: vec![0.0; dim],
-            rule: optim::method::build_server_rule(method, params, dim),
+            rule,
             k: 0,
         }
     }

@@ -138,6 +138,24 @@ impl Worker {
         WorkerRound { worker: self.id, decision, delta, loss, delta_sq, bits }
     }
 
+    /// Measurement-only round for a worker outside the scheduled set
+    /// (partial participation): evaluates f_m(θᵏ) so the trace keeps
+    /// reporting the *global* loss, but never touches the censor state
+    /// — no δ∇ bookkeeping, no transmission, no bits on the wire.
+    /// From the server's perspective this is indistinguishable from a
+    /// censored worker, which eq. (5) tolerates by design.
+    pub fn observe(&mut self, theta: &[f64]) -> WorkerRound {
+        let loss = self.backend.grad_loss_into(theta, &mut self.grad);
+        WorkerRound {
+            worker: self.id,
+            decision: CensorDecision::Skip,
+            delta: Vec::new(),
+            loss,
+            delta_sq: 0.0,
+            bits: 0,
+        }
+    }
+
     /// Current gradient (for diagnostics; engine-side only).
     pub fn current_grad(&self) -> &[f64] {
         &self.grad

@@ -8,10 +8,13 @@
 //! * failure injection: CHB under lossy uplinks.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{run_serial, RunConfig};
+use crate::coordinator::{
+    run_serial, run_with_rules, Participation, RunConfig, SerialPool, Server,
+};
 use crate::metrics::csv;
 use crate::optim::censor::{AbsoluteCensor, PeriodicCensor};
 use crate::optim::{
@@ -23,41 +26,25 @@ use super::figures::synth_linreg_problem;
 use super::runner::{self, Protocol};
 use super::Problem;
 
-/// Run CHB but with an arbitrary censor rule (bypasses the Method
-/// composition table — this is exactly what the ablation varies).
+/// Run CHB but with an arbitrary censor rule — the engine's
+/// `run_with_rules` injection point (one round loop, no mirror).
 fn run_with_censor(
     problem: &Problem,
     params: MethodParams,
-    censor: &dyn CensorRule,
+    censor: Arc<dyn CensorRule>,
     iters: usize,
 ) -> crate::metrics::Trace {
-    // mirror engine::run_serial but with an injected censor rule
-    let mut server =
-        crate::coordinator::Server::new(Method::Chb, &params, problem.theta0());
     let mut workers = problem.rust_workers();
-    let mut trace = crate::metrics::Trace::new(censor.name());
-    for k in 1..=iters {
-        let step_sq = server.theta_step_sq();
-        let theta = server.theta.clone();
-        let rounds: Vec<_> = workers
-            .iter_mut()
-            .map(|w| w.round(&theta, step_sq, censor, k))
-            .collect();
-        let bits: u64 = rounds.iter().map(|r| r.bits).sum();
-        let out = server.apply_round(&rounds);
-        let prev = trace.iters.last();
-        trace.iters.push(crate::metrics::IterStat {
-            k: out.k,
-            loss: out.loss,
-            comms_round: out.transmitted,
-            comms_cum: prev.map_or(0, |s| s.comms_cum) + out.transmitted,
-            agg_grad_sq: out.agg_grad_sq,
-            step_sq: out.step_sq,
-            bits_cum: prev.map_or(0, |s| s.bits_cum) + bits,
-        });
-    }
-    trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
-    trace
+    let cfg = RunConfig::new(Method::Chb, params, iters);
+    let server = Server::new(Method::Chb, &params, problem.theta0());
+    let label = censor.name();
+    run_with_rules(
+        &mut SerialPool::new(&mut workers),
+        &cfg,
+        server,
+        censor,
+        label,
+    )
 }
 
 /// Ablation A: censor-rule shapes at matched comm budgets.
@@ -70,16 +57,16 @@ pub fn censor_rules(out_dir: &Path, quick: bool) -> Result<()> {
         .with_epsilon1_scaled(0.1, p.m_workers());
 
     println!("\n── ablation: censor rules (synthetic linreg), f*={f_star:.4e}");
-    let rules: Vec<Box<dyn CensorRule>> = vec![
-        Box::new(GradDiffCensor { epsilon1: params.epsilon1 }),
-        Box::new(AbsoluteCensor { tau: 1.0 }),
-        Box::new(AbsoluteCensor { tau: 100.0 }),
-        Box::new(PeriodicCensor { period: 2 }),
+    let rules: Vec<Arc<dyn CensorRule>> = vec![
+        Arc::new(GradDiffCensor { epsilon1: params.epsilon1 }),
+        Arc::new(AbsoluteCensor { tau: 1.0 }),
+        Arc::new(AbsoluteCensor { tau: 100.0 }),
+        Arc::new(PeriodicCensor { period: 2 }),
     ];
     let labels = ["grad-diff (paper)", "absolute τ=1", "absolute τ=100", "periodic /2"];
     let mut rows = Vec::new();
     for (rule, label) in rules.iter().zip(labels) {
-        let t = run_with_censor(&p, params, rule.as_ref(), iters);
+        let t = run_with_censor(&p, params, Arc::clone(rule), iters);
         println!(
             "  {label:<20} comms {:>6}  final err {:.4e}",
             t.total_comms(),
@@ -117,6 +104,7 @@ pub fn beta_sweep(out_dir: &Path, quick: bool) -> Result<()> {
                 f_star,
                 tol: 1e-10,
             },
+            participation: Participation::Full,
         };
         let t = runner::run_method(&p, Method::Chb, &proto, false);
         println!(
@@ -219,7 +207,6 @@ pub fn failure_injection(out_dir: &Path, quick: bool) -> Result<()> {
 /// multiply.
 pub fn compression(out_dir: &Path, quick: bool) -> Result<()> {
     use crate::compress::{Compressor, NoCompression, TopK, UniformQuantizer};
-    use std::sync::Arc;
 
     let p = synth_linreg_problem(0xAB5);
     let f_star = p.f_star().unwrap();
@@ -273,51 +260,33 @@ pub fn compression(out_dir: &Path, quick: bool) -> Result<()> {
 }
 
 /// Run one problem with an arbitrary (server rule, censor) pair —
-/// the generalized composition the extensions explore.
+/// the generalized composition the extensions explore, through the
+/// same engine pipeline as every normal run.
 fn run_custom(
     problem: &Problem,
-    mut rule: Box<dyn crate::optim::ServerRule>,
-    censor: &dyn CensorRule,
+    rule: Box<dyn crate::optim::ServerRule>,
+    censor: Arc<dyn CensorRule>,
     label: &str,
     iters: usize,
     stop_err: Option<(f64, f64)>,
 ) -> crate::metrics::Trace {
-    let mut theta = problem.theta0();
-    let mut theta_prev = theta.clone();
-    let mut agg = vec![0.0; problem.dim()];
     let mut workers = problem.rust_workers();
-    let mut trace = crate::metrics::Trace::new(label);
-    for k in 1..=iters {
-        let step_sq = crate::linalg::dist2_sq(&theta, &theta_prev);
-        let mut loss = 0.0;
-        let mut transmitted = 0;
-        for w in workers.iter_mut() {
-            let r = w.round(&theta, step_sq, censor, k);
-            loss += r.loss;
-            if r.decision == crate::optim::CensorDecision::Transmit {
-                crate::linalg::axpy(1.0, &r.delta, &mut agg);
-                transmitted += 1;
-            }
-        }
-        rule.step(&mut theta, &mut theta_prev, &agg);
-        let prev = trace.iters.last();
-        trace.iters.push(crate::metrics::IterStat {
-            k,
-            loss,
-            comms_round: transmitted,
-            comms_cum: prev.map_or(0, |s| s.comms_cum) + transmitted,
-            agg_grad_sq: crate::linalg::norm2_sq(&agg),
-            step_sq: crate::linalg::dist2_sq(&theta, &theta_prev),
-            bits_cum: 0,
+    // method/params in the config are placeholders: the injected
+    // (rule, censor) pair carries the actual algorithm
+    let mut cfg = RunConfig::new(Method::Chb, MethodParams::new(0.0), iters);
+    if let Some((f_star, tol)) = stop_err {
+        cfg = cfg.with_stop(crate::coordinator::StopRule::ObjErrBelow {
+            f_star,
+            tol,
         });
-        if let Some((f_star, tol)) = stop_err {
-            if loss - f_star < tol {
-                break;
-            }
-        }
     }
-    trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
-    trace
+    run_with_rules(
+        &mut SerialPool::new(&mut workers),
+        &cfg,
+        Server::with_rule(rule, problem.theta0()),
+        censor,
+        label,
+    )
 }
 
 /// Ablation F: censored Nesterov (CNAG) vs CHB vs censored GD — the
@@ -329,7 +298,8 @@ pub fn nesterov(out_dir: &Path, quick: bool) -> Result<()> {
     let iters = if quick { 800 } else { 3_000 };
     let alpha = 1.0 / p.l_global;
     let eps1 = crate::optim::censor::epsilon1_scaled(0.1, alpha, p.m_workers());
-    let censor = GradDiffCensor { epsilon1: eps1 };
+    let censor: Arc<dyn CensorRule> =
+        Arc::new(GradDiffCensor { epsilon1: eps1 });
     println!("\n── ablation: censored momentum family (synthetic linreg)");
     let rules: Vec<(&str, Box<dyn ServerRule>)> = vec![
         ("C-GD (LAG)", Box::new(GdRule { alpha })),
@@ -338,7 +308,7 @@ pub fn nesterov(out_dir: &Path, quick: bool) -> Result<()> {
     ];
     let mut rows = Vec::new();
     for (label, rule) in rules {
-        let t = run_custom(&p, rule, &censor, label, iters,
+        let t = run_custom(&p, rule, Arc::clone(&censor), label, iters,
                            Some((f_star, 1e-9)));
         println!(
             "  {label:<12} comms {:>6}  iters {:>5}  final err {:.3e}",
@@ -372,11 +342,11 @@ pub fn adaptive_epsilon(out_dir: &Path, quick: bool) -> Result<()> {
     let eps_ref = crate::optim::censor::epsilon1_scaled(0.1, alpha, m);
     println!("\n── ablation: adaptive ε₁ (anneal hi→lo) vs fixed");
     let mut rows = Vec::new();
-    let cases: Vec<(&str, Box<dyn CensorRule>)> = vec![
-        ("fixed 0.1", Box::new(GradDiffCensor { epsilon1: eps_ref })),
+    let cases: Vec<(&str, Arc<dyn CensorRule>)> = vec![
+        ("fixed 0.1", Arc::new(GradDiffCensor { epsilon1: eps_ref })),
         (
             "anneal 10→0.01",
-            Box::new(AdaptiveCensor {
+            Arc::new(AdaptiveCensor {
                 eps_hi: crate::optim::censor::epsilon1_scaled(10.0, alpha, m),
                 eps_lo: crate::optim::censor::epsilon1_scaled(0.01, alpha, m),
                 horizon: iters / 4,
@@ -384,7 +354,7 @@ pub fn adaptive_epsilon(out_dir: &Path, quick: bool) -> Result<()> {
         ),
         (
             "anneal 1→0.1",
-            Box::new(AdaptiveCensor {
+            Arc::new(AdaptiveCensor {
                 eps_hi: crate::optim::censor::epsilon1_scaled(1.0, alpha, m),
                 eps_lo: eps_ref,
                 horizon: iters / 4,
@@ -393,7 +363,7 @@ pub fn adaptive_epsilon(out_dir: &Path, quick: bool) -> Result<()> {
     ];
     for (label, censor) in cases {
         let rule = Box::new(HeavyBallRule::new(alpha, 0.4, p.dim()));
-        let t = run_custom(&p, rule, censor.as_ref(), label, iters,
+        let t = run_custom(&p, rule, censor, label, iters,
                            Some((f_star, 1e-9)));
         println!(
             "  {label:<16} comms {:>6}  iters {:>5}  final err {:.3e}",
@@ -415,6 +385,69 @@ pub fn adaptive_epsilon(out_dir: &Path, quick: bool) -> Result<()> {
     )
 }
 
+/// Ablation H: censoring ∘ partial participation — the scheduling
+/// axis the paper assumes away.  Sweeps sampling fraction × ε₁ on the
+/// synthetic linreg problem and shows the two mechanisms compose:
+/// sampling caps who is *asked*, censoring decides who *answers*, and
+/// total uplinks multiply down while the run still converges (at a
+/// conservative α, since unsampled workers carry stale terms).
+pub fn participation_sweep(out_dir: &Path, quick: bool) -> Result<()> {
+    let p = synth_linreg_problem(0xAB8);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 600 } else { 2_000 };
+    // stale aggregates shrink the stability margin — stay well inside
+    let alpha = 0.3 / p.l_global;
+    println!("\n── ablation: sampling fraction × ε₁ (CHB, synthetic linreg)");
+    let mut rows = Vec::new();
+    for frac in [0.2, 0.5, 1.0] {
+        for eps_c in [0.0, 0.1, 1.0] {
+            let participation = if frac >= 1.0 {
+                Participation::Full
+            } else {
+                Participation::UniformSample { frac, seed: 0xCAFE }
+            };
+            let proto = Protocol {
+                alpha,
+                beta: 0.4,
+                eps_c,
+                eps_abs: None,
+                max_iters: iters,
+                stop: crate::coordinator::StopRule::MaxIters,
+                participation,
+            };
+            let t = runner::run_method(&p, Method::Chb, &proto, false);
+            let err = t.final_loss() - f_star;
+            println!(
+                "  frac={frac:<4} ε₁c={eps_c:<4} comms {:>6}  \
+                 mean participants {:>5.1}  final err {:.4e}",
+                t.total_comms(),
+                t.mean_participants(),
+                err
+            );
+            rows.push(vec![
+                frac.to_string(),
+                eps_c.to_string(),
+                t.total_comms().to_string(),
+                format!("{:.2}", t.mean_participants()),
+                t.iterations().to_string(),
+                format!("{err:.8e}"),
+            ]);
+        }
+    }
+    csv::write_table(
+        &out_dir.join("ablation_participation").join("summary.csv"),
+        &[
+            "sample_frac",
+            "eps_c",
+            "comms",
+            "mean_participants",
+            "iters",
+            "final_obj_err",
+        ],
+        &rows,
+    )
+}
+
 /// Run every ablation.
 pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     censor_rules(out_dir, quick)?;
@@ -423,5 +456,6 @@ pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     failure_injection(out_dir, quick)?;
     compression(out_dir, quick)?;
     nesterov(out_dir, quick)?;
-    adaptive_epsilon(out_dir, quick)
+    adaptive_epsilon(out_dir, quick)?;
+    participation_sweep(out_dir, quick)
 }

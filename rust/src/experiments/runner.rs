@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::coordinator::{run_serial, RunConfig, StopRule};
+use crate::coordinator::{run_serial, Participation, RunConfig, StopRule};
 use crate::metrics::{csv, Trace};
 use crate::optim::{Method, MethodParams};
 
@@ -22,10 +22,12 @@ pub struct Protocol {
     pub eps_abs: Option<f64>,
     pub max_iters: usize,
     pub stop: StopRule,
+    /// per-round client scheduling (paper: full participation)
+    pub participation: Participation,
 }
 
 impl Protocol {
-    /// The §IV default: β = 0.4, ε₁ = 0.1/(α²M²).
+    /// The §IV default: β = 0.4, ε₁ = 0.1/(α²M²), full participation.
     pub fn paper_default(alpha: f64, max_iters: usize) -> Protocol {
         Protocol {
             alpha,
@@ -34,11 +36,17 @@ impl Protocol {
             eps_abs: None,
             max_iters,
             stop: StopRule::MaxIters,
+            participation: Participation::Full,
         }
     }
 
     pub fn with_stop(mut self, stop: StopRule) -> Protocol {
         self.stop = stop;
+        self
+    }
+
+    pub fn with_participation(mut self, p: Participation) -> Protocol {
+        self.participation = p;
         self
     }
 
@@ -65,7 +73,8 @@ pub fn run_method(
 ) -> Trace {
     let params = proto.params(problem.m_workers());
     let mut cfg = RunConfig::new(method, params, proto.max_iters)
-        .with_stop(proto.stop);
+        .with_stop(proto.stop)
+        .with_participation(proto.participation);
     if comm_map {
         cfg = cfg.with_comm_map();
     }

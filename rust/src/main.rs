@@ -16,7 +16,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use chb_fed::coordinator::{run_serial, run_threaded, RunConfig, StopRule};
+use chb_fed::coordinator::{
+    run_rayon, run_serial, run_threaded, Participation, RunConfig, StopRule,
+};
 use chb_fed::experiments::{ablations, figures, tables, Problem};
 use chb_fed::optim::Method;
 use chb_fed::runtime::PjrtRuntime;
@@ -33,7 +35,9 @@ USAGE:
            fig12 table1 table2 table3 ablations all
   chb-fed run --task T --dataset D [--method M] [--alpha A] [--beta B]
               [--eps-c C | --eps-abs E] [--iters N] [--lambda L]
-              [--backend rust|pjrt] [--engine serial|threaded]
+              [--backend rust|pjrt] [--engine serial|threaded|rayon]
+              [--participation full|sample|straggler] [--sample-frac F]
+              [--timeout T] [--part-seed S]
               [--artifacts DIR] [--out DIR] [--data DIR]
   chb-fed list [--data DIR] [--artifacts DIR]
   chb-fed check-theory --l L --mu MU [--m M] [--delta D]
@@ -156,15 +160,38 @@ fn cmd_run(args: &Args) -> Result<()> {
             problem.m_workers(),
         ),
     };
+    // config-file aware like every other run.* option
+    let part_seed = match args
+        .get("part-seed")
+        .or_else(|| cfg_file.str("run.part-seed"))
+    {
+        Some(s) => s
+            .parse::<u64>()
+            .with_context(|| format!("--part-seed {s:?}"))?,
+        None => 0x5EED,
+    };
+    let participation = match pick("participation", "full").as_str() {
+        "full" => Participation::Full,
+        "sample" => Participation::UniformSample {
+            frac: pick_num("sample-frac").unwrap_or(0.5),
+            seed: part_seed,
+        },
+        "straggler" => Participation::Straggler {
+            timeout: pick_num("timeout").unwrap_or(1.5),
+            seed: part_seed,
+        },
+        other => bail!("bad --participation {other:?} (full|sample|straggler)"),
+    };
     let mut cfg = RunConfig::new(method, params, iters)
-        .with_stop(StopRule::MaxIters);
+        .with_stop(StopRule::MaxIters)
+        .with_participation(participation);
     if args.flag("comm-map") {
         cfg = cfg.with_comm_map();
     }
 
     println!(
         "run: {} on {} — M={} d={} L={:.4e} α={alpha:.4e} β={beta} ε₁={:.4e} \
-         backend={} engine={}",
+         backend={} engine={} participation={}",
         method.name(),
         dataset,
         problem.m_workers(),
@@ -173,35 +200,29 @@ fn cmd_run(args: &Args) -> Result<()> {
         params.epsilon1,
         args.get_or("backend", "rust"),
         args.get_or("engine", "serial"),
+        participation.name(),
     );
 
-    let trace = match args.get_or("backend", "rust") {
-        "rust" => {
-            let workers = problem.rust_workers();
-            match args.get_or("engine", "serial") {
-                "serial" => {
-                    let mut ws = workers;
-                    run_serial(&mut ws, &cfg, problem.theta0())
-                }
-                "threaded" => run_threaded(workers, &cfg, problem.theta0()),
-                other => bail!("bad --engine {other:?}"),
-            }
-        }
+    // backend decides where gradients come from; engine decides where
+    // workers execute — one RoundEngine pipeline underneath either way
+    let workers = match args.get_or("backend", "rust") {
+        "rust" => problem.rust_workers(),
         "pjrt" => {
             let mut rt =
                 PjrtRuntime::new(Path::new(args.get_or("artifacts", "artifacts")))?;
             println!("PJRT platform: {}", rt.platform());
-            let workers = problem.pjrt_workers(&mut rt)?;
-            match args.get_or("engine", "serial") {
-                "serial" => {
-                    let mut ws = workers;
-                    run_serial(&mut ws, &cfg, problem.theta0())
-                }
-                "threaded" => run_threaded(workers, &cfg, problem.theta0()),
-                other => bail!("bad --engine {other:?}"),
-            }
+            problem.pjrt_workers(&mut rt)?
         }
         other => bail!("bad --backend {other:?}"),
+    };
+    let trace = match args.get_or("engine", "serial") {
+        "serial" => {
+            let mut ws = workers;
+            run_serial(&mut ws, &cfg, problem.theta0())
+        }
+        "threaded" => run_threaded(workers, &cfg, problem.theta0()),
+        "rayon" => run_rayon(workers, &cfg, problem.theta0()),
+        other => bail!("bad --engine {other:?} (serial|threaded|rayon)"),
     };
 
     let f_star = problem.f_star().unwrap_or(0.0);
@@ -218,9 +239,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     )?;
     let last = trace.iters.last().context("empty trace")?;
     println!(
-        "done: {} iters, {} comms, final f−f* = {:.6e}, ‖∇‖² = {:.6e}",
+        "done: {} iters, {} comms, mean participants {:.1}, \
+         final f−f* = {:.6e}, ‖∇‖² = {:.6e}",
         trace.iterations(),
         trace.total_comms(),
+        trace.mean_participants(),
         last.loss - f_star,
         last.agg_grad_sq
     );

@@ -18,12 +18,13 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
     let mut w = BufWriter::new(f);
     writeln!(
         w,
-        "k,loss,obj_err,comms_round,comms_cum,agg_grad_sq,step_sq,bits_cum"
+        "k,loss,obj_err,comms_round,comms_cum,agg_grad_sq,step_sq,bits_cum,\
+         participants"
     )?;
-    for s in &trace.iters {
+    for (i, s) in trace.iters.iter().enumerate() {
         writeln!(
             w,
-            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{}",
+            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{}",
             s.k,
             s.loss,
             s.loss - f_star,
@@ -31,7 +32,9 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
             s.comms_cum,
             s.agg_grad_sq,
             s.step_sq,
-            s.bits_cum
+            s.bits_cum,
+            // 0 = unrecorded (traces assembled outside the engine)
+            trace.participants.get(i).copied().unwrap_or(0)
         )?;
     }
     Ok(())

@@ -27,6 +27,9 @@ pub struct Trace {
     pub iters: Vec<IterStat>,
     /// per-worker lifetime transmission counts S_m (Lemma 2)
     pub per_worker_comms: Vec<usize>,
+    /// scheduled workers per round |Pᵏ| (== M under the paper's full
+    /// participation; smaller under sampling/straggler schedules)
+    pub participants: Vec<usize>,
     /// per-(iteration, worker) transmit map for Fig. 1-style plots;
     /// only recorded when `record_comm_map` is on (it is O(K·M))
     pub comm_map: Vec<Vec<bool>>,
@@ -47,6 +50,15 @@ impl Trace {
 
     pub fn iterations(&self) -> usize {
         self.iters.len()
+    }
+
+    /// Mean scheduled workers per round (NaN when unrecorded).
+    pub fn mean_participants(&self) -> f64 {
+        if self.participants.is_empty() {
+            return f64::NAN;
+        }
+        self.participants.iter().sum::<usize>() as f64
+            / self.participants.len() as f64
     }
 
     /// Objective error trajectory f(θᵏ) − f*.

@@ -98,6 +98,17 @@ impl SimNetwork {
         true
     }
 
+    /// Record one round's downlink broadcast: θᵏ goes only to the
+    /// scheduled workers (partial participation keeps unscheduled
+    /// links silent in both directions).
+    pub fn broadcast(&mut self, active: &[bool], bytes: u64) {
+        for (id, &scheduled) in active.iter().enumerate() {
+            if scheduled {
+                self.send(Direction::Down, id, bytes);
+            }
+        }
+    }
+
     /// Advance the synchronous-round clock: one broadcast down to all
     /// M workers in parallel + the slowest uplink among transmitters.
     pub fn advance_round(&mut self, down_bytes: u64, up_bytes_each: &[u64]) {
@@ -148,6 +159,16 @@ mod tests {
         assert!(!n.send(Direction::Up, 0, 10));
         assert_eq!(n.dropped(), 1);
         assert_eq!(n.total_up_messages(), 0);
+    }
+
+    #[test]
+    fn broadcast_skips_unscheduled_workers() {
+        let mut n = SimNetwork::new(3);
+        n.broadcast(&[true, false, true], 100);
+        assert_eq!(n.total_down_messages(), 2);
+        assert_eq!(n.down[0].bytes, 100);
+        assert_eq!(n.down[1].messages, 0);
+        assert_eq!(n.down[2].bytes, 100);
     }
 
     #[test]

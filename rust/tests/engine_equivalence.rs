@@ -1,0 +1,154 @@
+//! Integration: the three worker pools (serial / threaded / rayon)
+//! are interchangeable execution backends for the one `RoundEngine`
+//! pipeline — bit-identical traces on all four paper tasks under full
+//! participation, and a seeded sampling schedule reproduces exactly
+//! across engines.
+
+use chb_fed::coordinator::{
+    run_rayon, run_serial, run_threaded, Participation, RayonPool,
+    RoundEngine, RunConfig, StopRule,
+};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::metrics::Trace;
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::tasks::TaskKind;
+
+/// Small instance of one paper task: M = 4 workers, 12×8 shards.
+fn problem_for(task: TaskKind) -> Problem {
+    let (m, n, d) = (4usize, 12usize, 8usize);
+    let l_m: Vec<f64> = (0..m).map(|i| (1.0 + 0.4 * i as f64).powi(2)).collect();
+    let seed = 0xE0 + match task {
+        TaskKind::LinReg => 1,
+        TaskKind::LogReg => 2,
+        TaskKind::Lasso => 3,
+        TaskKind::Nn => 4,
+    }; // distinct data draw per task
+    let per_worker = synthetic::per_worker_rescaled(seed, m, n, d, &l_m);
+    let lam = match task {
+        TaskKind::Lasso => 0.05,
+        TaskKind::LogReg | TaskKind::Nn => 0.01,
+        TaskKind::LinReg => 0.0,
+    };
+    Problem::from_worker_datasets(task, "equiv", &per_worker, lam)
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{what}: loss differs at k={}",
+            x.k
+        );
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² differs at k={}",
+            x.k
+        );
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms at k={}", x.k);
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits at k={}", x.k);
+    }
+    assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: S_m");
+    assert_eq!(a.comm_map, b.comm_map, "{what}: comm map");
+    assert_eq!(a.participants, b.participants, "{what}: participants");
+}
+
+#[test]
+fn pools_are_bit_identical_on_all_four_tasks() {
+    for task in [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn] {
+        let p = problem_for(task);
+        let iters = if task == TaskKind::Nn { 15 } else { 30 };
+        let params = MethodParams::new(1.0 / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, p.m_workers());
+        let cfg = RunConfig::new(Method::Chb, params, iters).with_comm_map();
+
+        let mut ws = p.rust_workers();
+        let serial = run_serial(&mut ws, &cfg, p.theta0());
+        let threaded = run_threaded(p.rust_workers(), &cfg, p.theta0());
+        let rayon = run_rayon(p.rust_workers(), &cfg, p.theta0());
+        let name = task.name();
+        assert_traces_identical(&serial, &threaded, &format!("{name} threaded"));
+        assert_traces_identical(&serial, &rayon, &format!("{name} rayon"));
+
+        // force a genuinely multi-threaded rayon pool even on 1-core
+        // CI machines (available_parallelism there would give 1)
+        let rayon3 =
+            RoundEngine::new(RayonPool::with_threads(p.rust_workers(), 3))
+                .run(&cfg, p.theta0());
+        assert_traces_identical(&serial, &rayon3, &format!("{name} rayon×3"));
+    }
+}
+
+#[test]
+fn stop_rules_fire_identically_across_pools() {
+    let p = problem_for(TaskKind::LinReg);
+    let f_star = p.f_star().expect("convex");
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 5_000)
+        .with_stop(StopRule::ObjErrBelow { f_star, tol: 1e-8 });
+    let mut ws = p.rust_workers();
+    let serial = run_serial(&mut ws, &cfg, p.theta0());
+    assert!(serial.iterations() < 5_000, "stop rule never fired");
+    let threaded = run_threaded(p.rust_workers(), &cfg, p.theta0());
+    let rayon = run_rayon(p.rust_workers(), &cfg, p.theta0());
+    assert_traces_identical(&serial, &threaded, "early-stop threaded");
+    assert_traces_identical(&serial, &rayon, "early-stop rayon");
+}
+
+#[test]
+fn seeded_sampling_reproduces_exactly_across_engines() {
+    let p = problem_for(TaskKind::LinReg);
+    let m = p.m_workers();
+    let params = MethodParams::new(0.5 / p.l_global)
+        .with_beta(0.3)
+        .with_epsilon1_scaled(0.1, m);
+    let part = Participation::UniformSample { frac: 0.6, seed: 0xFEED };
+    let cfg = RunConfig::new(Method::Chb, params, 60)
+        .with_comm_map()
+        .with_participation(part);
+
+    let mut ws = p.rust_workers();
+    let serial = run_serial(&mut ws, &cfg, p.theta0());
+    let mut ws = p.rust_workers();
+    let serial2 = run_serial(&mut ws, &cfg, p.theta0());
+    assert_traces_identical(&serial, &serial2, "sampling rerun");
+
+    let threaded = run_threaded(p.rust_workers(), &cfg, p.theta0());
+    let rayon = run_rayon(p.rust_workers(), &cfg, p.theta0());
+    assert_traces_identical(&serial, &threaded, "sampling threaded");
+    assert_traces_identical(&serial, &rayon, "sampling rayon");
+
+    // the schedule itself: round(0.6·4) = 2 scheduled every round,
+    // and transmissions only ever come from scheduled workers
+    assert_eq!(serial.participants.len(), serial.iterations());
+    assert!(serial.participants.iter().all(|&n| n == 2));
+    for (s, &n) in serial.iters.iter().zip(&serial.participants) {
+        assert!(s.comms_round <= n, "k={}: {} > {n}", s.k, s.comms_round);
+    }
+}
+
+#[test]
+fn straggler_schedule_reproduces_exactly_across_engines() {
+    let p = problem_for(TaskKind::LinReg);
+    let params = MethodParams::new(0.3 / p.l_global)
+        .with_beta(0.2)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let part = Participation::Straggler { timeout: 1.0, seed: 42 };
+    let cfg = RunConfig::new(Method::Chb, params, 60)
+        .with_comm_map()
+        .with_participation(part);
+    let mut ws = p.rust_workers();
+    let serial = run_serial(&mut ws, &cfg, p.theta0());
+    let threaded = run_threaded(p.rust_workers(), &cfg, p.theta0());
+    let rayon = run_rayon(p.rust_workers(), &cfg, p.theta0());
+    assert_traces_identical(&serial, &threaded, "straggler threaded");
+    assert_traces_identical(&serial, &rayon, "straggler rayon");
+    let m = p.m_workers();
+    assert!(serial.participants.iter().all(|&n| (1..=m).contains(&n)));
+}

@@ -7,11 +7,17 @@
 //!   2. ε₁ = 0 ⇒ CHB ≡ HB and LAG ≡ GD, bit for bit.
 //!   3. comm accounting: comms_cum = Σ per-round; per-worker
 //!      S_m sums match; censored methods never transmit more than M·K.
-//!   4. serial and threaded engines agree bit-for-bit.
+//!   4. serial, threaded, and rayon engines agree bit-for-bit.
 //!   5. Lemma 1 (Lyapunov monotone descent) under the closed-form
 //!      (43) parameter choice, away from machine precision.
+//!   6. participation schedules are deterministic in (policy, seed)
+//!      and engine-independent; straggler-as-skip keeps the eq. (5)
+//!      telescope exact.
 
-use chb_fed::coordinator::{run_serial, run_threaded, RunConfig, StopRule};
+use chb_fed::coordinator::{
+    run_rayon, run_serial, run_threaded, Participation, RunConfig, Schedule,
+    StopRule,
+};
 use chb_fed::data::synthetic;
 use chb_fed::experiments::Problem;
 use chb_fed::linalg;
@@ -159,8 +165,8 @@ fn communication_accounting_is_consistent() {
 }
 
 #[test]
-fn serial_and_threaded_engines_agree() {
-    prop::check("serial == threaded", 15, |g| {
+fn serial_threaded_and_rayon_engines_agree() {
+    prop::check("serial == threaded == rayon", 12, |g| {
         let p = gen_problem(g);
         let params = MethodParams::new(g.f64_in(0.2, 1.0) / p.l_global)
             .with_beta(g.f64_in(0.0, 0.6))
@@ -169,21 +175,155 @@ fn serial_and_threaded_engines_agree() {
         let cfg = RunConfig::new(Method::Chb, params, iters).with_comm_map();
         let mut ws = p.rust_workers();
         let a = run_serial(&mut ws, &cfg, p.theta0());
-        let b = run_threaded(p.rust_workers(), &cfg, p.theta0());
-        chb_fed::assert_prop!(a.iterations() == b.iterations(), "iter count");
-        for (x, y) in a.iters.iter().zip(&b.iters) {
+        for (other, which) in [
+            (run_threaded(p.rust_workers(), &cfg, p.theta0()), "threaded"),
+            (run_rayon(p.rust_workers(), &cfg, p.theta0()), "rayon"),
+        ] {
             chb_fed::assert_prop!(
-                x.loss.to_bits() == y.loss.to_bits()
-                    && x.comms_cum == y.comms_cum,
-                "k={}: serial ({}, {}) vs threaded ({}, {})",
-                x.k,
-                x.loss,
-                x.comms_cum,
-                y.loss,
-                y.comms_cum
+                a.iterations() == other.iterations(),
+                "{which}: iter count"
+            );
+            for (x, y) in a.iters.iter().zip(&other.iters) {
+                chb_fed::assert_prop!(
+                    x.loss.to_bits() == y.loss.to_bits()
+                        && x.comms_cum == y.comms_cum,
+                    "k={}: serial ({}, {}) vs {which} ({}, {})",
+                    x.k,
+                    x.loss,
+                    x.comms_cum,
+                    y.loss,
+                    y.comms_cum
+                );
+            }
+            chb_fed::assert_prop!(
+                a.comm_map == other.comm_map,
+                "{which}: comm maps differ"
+            );
+            chb_fed::assert_prop!(
+                a.participants == other.participants,
+                "{which}: participant counts differ"
             );
         }
-        chb_fed::assert_prop!(a.comm_map == b.comm_map, "comm maps differ");
+        Ok(())
+    });
+}
+
+#[test]
+fn sampled_participation_is_deterministic_across_engines() {
+    prop::check("sampling determinism", 10, |g| {
+        let p = gen_problem(g);
+        let m = p.m_workers();
+        let frac = g.f64_in(0.25, 1.0);
+        let seed = g.usize_in(0..=1 << 30) as u64;
+        let params = MethodParams::new(g.f64_in(0.1, 0.4) / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let iters = g.usize_in(2..=30);
+        let cfg = RunConfig::new(Method::Chb, params, iters)
+            .with_comm_map()
+            .with_participation(Participation::UniformSample { frac, seed });
+        let mut ws = p.rust_workers();
+        let a = run_serial(&mut ws, &cfg, p.theta0());
+        let mut ws = p.rust_workers();
+        let a2 = run_serial(&mut ws, &cfg, p.theta0());
+        chb_fed::assert_prop!(
+            a.comm_map == a2.comm_map && a.participants == a2.participants,
+            "same (frac, seed) rerun produced a different schedule"
+        );
+        let b = run_threaded(p.rust_workers(), &cfg, p.theta0());
+        let c = run_rayon(p.rust_workers(), &cfg, p.theta0());
+        for (other, which) in [(&b, "threaded"), (&c, "rayon")] {
+            chb_fed::assert_prop!(
+                a.participants == other.participants
+                    && a.comm_map == other.comm_map,
+                "{which}: schedule differs from serial"
+            );
+            for (x, y) in a.iters.iter().zip(&other.iters) {
+                chb_fed::assert_prop!(
+                    x.loss.to_bits() == y.loss.to_bits(),
+                    "{which}: final θ path diverged at k={}",
+                    x.k
+                );
+            }
+        }
+        // schedule shape: exactly clamp(round(frac·M), 1, M) per round,
+        // and only scheduled workers ever transmit
+        let want = ((frac * m as f64).round() as usize).clamp(1, m);
+        chb_fed::assert_prop!(
+            a.participants.iter().all(|&n| n == want),
+            "expected {want} participants/round, got {:?}",
+            a.participants
+        );
+        for (s, &n) in a.iters.iter().zip(&a.participants) {
+            chb_fed::assert_prop!(
+                s.comms_round <= n,
+                "k={}: {} transmissions from {n} scheduled",
+                s.k,
+                s.comms_round
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn straggler_skip_preserves_aggregate_telescope() {
+    prop::check("straggler telescope", 15, |g| {
+        let p = gen_problem(g);
+        let m = p.m_workers();
+        let params = MethodParams::new(g.f64_in(0.1, 0.4) / p.l_global)
+            .with_beta(g.f64_in(0.0, 0.5))
+            .with_epsilon1_scaled(g.f64_in(0.01, 1.0), m);
+        let iters = g.usize_in(1..=30);
+        let timeout = g.f64_in(0.2, 2.5);
+        let seed = g.usize_in(0..=1 << 30) as u64;
+        // mirror the engine loop so server + worker state stay
+        // inspectable at the end
+        let censor =
+            chb_fed::optim::method::build_censor_rule(Method::Chb, &params);
+        let mut server =
+            chb_fed::coordinator::Server::new(Method::Chb, &params, p.theta0());
+        let mut schedule =
+            Schedule::new(Participation::Straggler { timeout, seed });
+        let mut workers = p.rust_workers();
+        for k in 1..=iters {
+            let active = schedule.active_set(k, m);
+            chb_fed::assert_prop!(
+                active.iter().any(|&a| a),
+                "k={k}: empty round"
+            );
+            let step_sq = server.theta_step_sq();
+            let theta = server.theta.clone();
+            let rounds: Vec<_> = workers
+                .iter_mut()
+                .map(|w| {
+                    if active[w.id] {
+                        w.round(&theta, step_sq, censor.as_ref(), k)
+                    } else {
+                        w.observe(&theta)
+                    }
+                })
+                .collect();
+            server.apply_round(&rounds);
+        }
+        // eq. (5) must telescope even when stragglers miss rounds:
+        // ∇ᵏ == Σ_m last_transmitted_m exactly as under full
+        // participation (a skipped round is just a carried stale term)
+        let dim = server.dim();
+        let mut expect = vec![0.0; dim];
+        for w in &workers {
+            linalg::axpy(1.0, w.last_transmitted(), &mut expect);
+        }
+        let diff = expect
+            .iter()
+            .zip(&server.agg_grad)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let scale = linalg::norm2(&expect).max(1.0);
+        chb_fed::assert_prop!(
+            diff <= 1e-9 * scale,
+            "straggler rounds broke the telescope: {diff:.3e} (scale {scale:.3e})"
+        );
         Ok(())
     });
 }
