@@ -11,17 +11,22 @@ use std::time::Instant;
 /// One benchmark's result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// benchmark label
     pub name: String,
+    /// timed samples taken
     pub samples: usize,
     /// per-iteration time, seconds
     pub median: f64,
     /// median absolute deviation
     pub mad: f64,
+    /// fastest sample (seconds per iteration)
     pub min: f64,
+    /// slowest sample (seconds per iteration)
     pub max: f64,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>12}/iter  (±{:>10}, n={}, min {}, max {})",
@@ -38,7 +43,9 @@ impl BenchResult {
 /// Harness configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Bencher {
+    /// untimed warmup iterations before sampling
     pub warmup_iters: usize,
+    /// timed samples to take
     pub samples: usize,
     /// iterations per timed sample (amortizes clock overhead)
     pub iters_per_sample: usize,
@@ -51,6 +58,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Low-sample profile for slow bodies (figure drivers, e2e runs).
     pub fn quick() -> Self {
         Self { warmup_iters: 1, samples: 5, iters_per_sample: 1 }
     }

@@ -24,8 +24,26 @@ pub struct Compressed {
 }
 
 /// Lossy uplink codec.
+///
+/// ```
+/// use chb_fed::compress::{Compressor, TopK, UniformQuantizer};
+///
+/// // top-k keeps the largest-magnitude coordinates…
+/// let out = TopK { k: 1 }.compress(&[0.1, -5.0, 0.2]);
+/// assert_eq!(out.decoded, vec![0.0, -5.0, 0.0]);
+/// assert_eq!(out.bits, 64); // 32-bit index + f32 value
+///
+/// // …while the quantizer keeps every coordinate at low precision
+/// let q = UniformQuantizer { bits: 8 }.compress(&[0.1, -5.0, 0.2]);
+/// assert_eq!(q.bits, 32 + 8 * 3);
+/// assert!((q.decoded[1] + 5.0).abs() < 1e-12); // max is exact
+/// ```
 pub trait Compressor: Send + Sync {
+    /// Encode-decode `delta`, returning the server-side values and the
+    /// simulated wire size.
     fn compress(&self, delta: &[f64]) -> Compressed;
+
+    /// Short label for logs and ablation tables.
     fn name(&self) -> &'static str;
 }
 
@@ -45,6 +63,7 @@ impl Compressor for NoCompression {
 /// Uniform symmetric quantizer: `bits`-bit signed levels scaled by
 /// max|δ|, plus one f32 scale on the wire.
 pub struct UniformQuantizer {
+    /// bits per coordinate (2..=32)
     pub bits: u32,
 }
 
@@ -74,6 +93,7 @@ impl Compressor for UniformQuantizer {
 
 /// Top-k magnitude sparsifier: k values + k indices on the wire.
 pub struct TopK {
+    /// number of coordinates kept (clamped to the vector length)
     pub k: usize,
 }
 
@@ -82,9 +102,11 @@ impl Compressor for TopK {
         let d = delta.len();
         let k = self.k.min(d);
         let mut idx: Vec<usize> = (0..d).collect();
-        idx.sort_by(|&a, &b| {
-            delta[b].abs().partial_cmp(&delta[a].abs()).unwrap()
-        });
+        // total_cmp, not partial_cmp().unwrap(): a NaN coordinate (a
+        // diverged worker) must not panic the whole simulation.  Under
+        // the total order NaN sorts as the largest magnitude, so it is
+        // kept and surfaces in the fold where the caller can see it.
+        idx.sort_by(|&a, &b| delta[b].abs().total_cmp(&delta[a].abs()));
         let mut decoded = vec![0.0; d];
         for &i in idx.iter().take(k) {
             decoded[i] = delta[i];
@@ -160,5 +182,22 @@ mod tests {
         // k ≥ d is lossless
         let all = TopK { k: 99 }.compress(&v);
         assert_eq!(all.decoded, v);
+    }
+
+    #[test]
+    fn topk_tolerates_nan_coordinates() {
+        // regression: the magnitude sort used partial_cmp().unwrap(),
+        // which panics the moment any coordinate is NaN
+        let v = vec![1.0, f64::NAN, 3.0, 0.5];
+        let out = TopK { k: 2 }.compress(&v);
+        // NaN sorts largest under total_cmp → kept alongside 3.0
+        assert!(out.decoded[1].is_nan());
+        assert_eq!(out.decoded[0], 0.0);
+        assert_eq!(out.decoded[2], 3.0);
+        assert_eq!(out.decoded[3], 0.0);
+        assert_eq!(out.bits, 128);
+        // all-NaN input must not panic either
+        let all_nan = TopK { k: 1 }.compress(&[f64::NAN, f64::NAN]);
+        assert!(all_nan.decoded.iter().any(|x| x.is_nan()));
     }
 }

@@ -1,0 +1,660 @@
+//! Asynchronous discrete-event CHB engine.
+//!
+//! The synchronous engines advance in lockstep rounds; this engine
+//! advances a **virtual clock**: every worker loops independently
+//! (receive θ → compute for a model-drawn time → censor → maybe
+//! upload), messages travel through the [`LatencyModel`] on an
+//! [`EventQueue`], and the server folds deltas **as they arrive**.
+//! Eq. (5) makes this sound by construction: the server aggregate
+//! telescopes over *transmitted* deltas, so a delta that arrives `s`
+//! server-steps late simply folds late — the aggregate still equals
+//! Σ_m ∇f_m(θ̂_m) over each worker's last-transmitted state (the
+//! repo's load-bearing invariant, see ARCHITECTURE.md), and the
+//! lateness is surfaced as per-worker staleness telemetry instead of
+//! being a correctness hazard.
+//!
+//! Server semantics: uplink reports that arrive at the **same virtual
+//! instant** fold as one batch followed by a single θ step (ties are
+//! processed in worker-id order, so f64 sums are deterministic).
+//! Under zero network latency and a uniform compute model every
+//! instant contains all M reports — the event order collapses to
+//! synchronous rounds and the engine reproduces [`run_serial`]
+//! bit-for-bit (`tests/async_engine.rs` pins this on all four paper
+//! tasks).  Under heterogeneous compute (the [`ComputeModel::Pareto`]
+//! regime) batches shrink toward single arrivals and the server steps
+//! per arrival, which is where censoring pays most: slow workers stop
+//! costing wallclock, they only add staleness.
+//!
+//! The optional staleness bound wraps each worker's censor rule in a
+//! [`StalenessBoundedCensor`] — the LAG-style "transmit at least every
+//! S rounds" guard that keeps every worker's contribution to the
+//! aggregate boundedly stale.
+//!
+//! [`run_serial`]: super::engine::run_serial
+
+use std::sync::Arc;
+
+use crate::linalg;
+use crate::metrics::{IterStat, StalenessStats, Trace};
+use crate::net::{
+    Direction, EventQueue, LatencyModel, SimNetwork,
+};
+use crate::optim::{
+    self, CensorDecision, CensorRule, StalenessBoundedCensor,
+};
+use crate::rng::{SplitMix64, Xoshiro256};
+
+use super::engine::RunConfig;
+use super::participation::Participation;
+use super::protocol::broadcast_bytes;
+use super::server::Server;
+use super::worker::{Worker, WorkerRound};
+
+/// Per-worker compute-time model (virtual µs per gradient round).
+#[derive(Clone, Copy, Debug)]
+pub enum ComputeModel {
+    /// Every worker takes exactly `us` per round — with a zero-latency
+    /// network this degenerates to synchronous rounds.
+    Uniform {
+        /// virtual µs per gradient evaluation (must be > 0)
+        us: f64,
+    },
+    /// Heavy-tailed heterogeneity: each (worker, round) draws
+    /// t = `scale_us`·(1−U)^(−1/`shape`) — a Pareto(shape) tail, the
+    /// classic straggler model.  Smaller `shape` ⇒ heavier tail
+    /// (shape ≤ 1 has infinite mean); draws come from per-worker
+    /// seeded streams so the schedule is reproducible.
+    Pareto {
+        /// Pareto scale x_m (minimum compute time, virtual µs)
+        scale_us: f64,
+        /// Pareto tail index a (smaller = more heterogeneous)
+        shape: f64,
+        /// master seed for the per-worker draw streams
+        seed: u64,
+    },
+}
+
+impl ComputeModel {
+    fn master_seed(&self) -> u64 {
+        match self {
+            ComputeModel::Uniform { .. } => 0,
+            ComputeModel::Pareto { seed, .. } => *seed,
+        }
+    }
+
+    fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+        match *self {
+            ComputeModel::Uniform { us } => {
+                assert!(us > 0.0, "uniform compute time must be > 0");
+                us
+            }
+            ComputeModel::Pareto { scale_us, shape, .. } => {
+                assert!(
+                    scale_us > 0.0 && shape > 0.0,
+                    "pareto scale and shape must be > 0"
+                );
+                // inverse CDF; 1−U ∈ (0, 1] keeps the draw finite
+                scale_us * (1.0 - rng.next_f64()).powf(-1.0 / shape)
+            }
+        }
+    }
+}
+
+/// Asynchronous-engine knobs (everything else comes from [`RunConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncConfig {
+    /// per-worker compute-time model
+    pub compute: ComputeModel,
+    /// transfer-time model ordering uplinks/downlinks on the event
+    /// queue ([`LatencyModel::zero`] degenerates to synchronous rounds)
+    pub latency: LatencyModel,
+    /// when Some(S): wrap every worker's censor rule in a
+    /// [`StalenessBoundedCensor`] allowing at most S consecutive
+    /// censored rounds (S = 0 disables censoring outright)
+    pub max_staleness: Option<usize>,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        Self {
+            compute: ComputeModel::Uniform { us: 1_000.0 },
+            latency: LatencyModel::default(),
+            max_staleness: None,
+        }
+    }
+}
+
+/// Everything the async engine can report beyond the [`Trace`] —
+/// the bookkeeping sums the telescoping property test audits.
+pub struct AsyncOutcome {
+    /// the standard per-step trace (staleness + vclock columns filled)
+    pub trace: Trace,
+    /// final server aggregate ∇ᵏ
+    pub agg_grad: Vec<f64>,
+    /// Σ of folded deltas, accumulated independently in fold order
+    /// (bit-identical to `agg_grad` by construction)
+    pub applied_sum: Vec<f64>,
+    /// Σ of transmitted deltas lost to uplink drops (the worker's θ̂
+    /// advanced but the server never folded)
+    pub dropped_sum: Vec<f64>,
+    /// Σ of transmitted deltas still in flight when the run stopped
+    pub inflight_sum: Vec<f64>,
+    /// final virtual-clock reading (µs)
+    pub vclock_us: f64,
+}
+
+/// Event payloads; ordering at one instant is Down → Compute → Up.
+enum Ev {
+    /// θ broadcast reaches a worker; it starts computing
+    Down,
+    /// a worker's gradient round finishes; it censors and maybe uploads
+    Compute,
+    /// a worker report reaches the server (version = server step count
+    /// when its θ was issued; skips arrive as zero-byte pings)
+    Up(WorkerRound, usize),
+}
+
+const RANK_DOWN: u8 = 0;
+const RANK_COMPUTE: u8 = 1;
+const RANK_UP: u8 = 2;
+
+/// What each worker is currently working against (snapshot taken when
+/// the server issued the broadcast — the payload is frozen at send).
+struct Station {
+    theta: Arc<Vec<f64>>,
+    step_sq: f64,
+    version: usize,
+}
+
+/// Run the asynchronous engine and return the full outcome.
+///
+/// `cfg.method` / `cfg.params` / `cfg.max_iters` (server steps) /
+/// `cfg.stop` / drop injection apply exactly as in the synchronous
+/// engines.  `cfg.participation` must be [`Participation::Full`]
+/// (asserted): every worker loops continuously, which is full
+/// participation by construction — a sampling/straggler config would
+/// otherwise run unsampled and mislabel its results.
+pub fn run_async_detailed(
+    workers: &mut [Worker],
+    cfg: &RunConfig,
+    acfg: &AsyncConfig,
+    theta0: Vec<f64>,
+) -> AsyncOutcome {
+    let censor: Arc<dyn CensorRule> = Arc::from(
+        optim::method::build_censor_rule(cfg.method, &cfg.params),
+    );
+    let server = Server::new(cfg.method, &cfg.params, theta0);
+    let label = format!("{}-async", cfg.method.name());
+    run_async_with_rules(workers, cfg, acfg, server, censor, &label)
+}
+
+/// [`run_async_detailed`] with an injected (server, censor) pair —
+/// the same ablation entry point as [`run_with_rules`] in the
+/// synchronous engine.
+///
+/// [`run_with_rules`]: super::engine::run_with_rules
+pub fn run_async_with_rules(
+    workers: &mut [Worker],
+    cfg: &RunConfig,
+    acfg: &AsyncConfig,
+    mut server: Server,
+    censor: Arc<dyn CensorRule>,
+    label: &str,
+) -> AsyncOutcome {
+    assert!(
+        cfg.participation == Participation::Full,
+        "the async engine runs full participation by construction; \
+         got {:?}",
+        cfg.participation
+    );
+    let m = workers.len();
+    let dim = server.dim();
+    let mut net = SimNetwork::new(m)
+        .with_drops(cfg.drop_prob, cfg.drop_seed)
+        .with_latency(acfg.latency);
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut trace = Trace::new(label);
+    trace.worker_staleness = vec![StalenessStats::default(); m];
+
+    // per-worker censor rules: the staleness bound carries a
+    // consecutive-skip counter, so it must not be shared across workers
+    let censors: Vec<Arc<dyn CensorRule>> = (0..m)
+        .map(|_| match acfg.max_staleness {
+            None => Arc::clone(&censor),
+            Some(s) => Arc::new(StalenessBoundedCensor::new(
+                Arc::clone(&censor),
+                s,
+            )) as Arc<dyn CensorRule>,
+        })
+        .collect();
+
+    // per-worker compute-time streams (independent of event order)
+    let mut seeder = SplitMix64::new(acfg.compute.master_seed() ^ 0xA51C);
+    let mut comp_rng: Vec<Xoshiro256> =
+        (0..m).map(|_| Xoshiro256::new(seeder.next_u64())).collect();
+
+    // latest known per-worker loss, so the trace keeps reporting a
+    // global-loss estimate even when only a subset reports per step
+    let theta0_arc = Arc::new(server.theta.clone());
+    let mut loss_cache: Vec<f64> =
+        workers.iter_mut().map(|w| w.observe(&theta0_arc).loss).collect();
+
+    let mut stations: Vec<Station> = (0..m)
+        .map(|_| Station {
+            theta: Arc::clone(&theta0_arc),
+            step_sq: 0.0,
+            version: 0,
+        })
+        .collect();
+
+    let mut applied_sum = vec![0.0; dim];
+    let mut dropped_sum = vec![0.0; dim];
+    let mut vclock_us = 0.0;
+
+    // initial broadcast at t = 0
+    let down_bytes = broadcast_bytes(dim);
+    if cfg.max_iters > 0 {
+        for w in 0..m {
+            net.send(Direction::Down, w, down_bytes);
+            q.push(
+                net.latency.transfer_us(down_bytes),
+                RANK_DOWN,
+                w,
+                Ev::Down,
+            );
+        }
+    }
+
+    // reports that arrived at the current instant, in worker-id order
+    // (two parallel vecs so apply_round gets &[WorkerRound] directly,
+    // without cloning dim-d deltas on the hot path)
+    let mut batch: Vec<WorkerRound> = Vec::with_capacity(m);
+    let mut batch_versions: Vec<usize> = Vec::with_capacity(m);
+
+    'event_loop: while let Some((key, ev)) = q.pop() {
+        let t = key.time_us;
+        let w = key.worker;
+        vclock_us = t;
+        match ev {
+            Ev::Down => {
+                let dt = acfg.compute.sample(&mut comp_rng[w]);
+                q.push(t + dt, RANK_COMPUTE, w, Ev::Compute);
+            }
+            Ev::Compute => {
+                let st = &stations[w];
+                let mut round = workers[w].round(
+                    &st.theta,
+                    st.step_sq,
+                    censors[w].as_ref(),
+                    st.version + 1,
+                );
+                let up_delay;
+                if round.decision == CensorDecision::Transmit {
+                    let nbytes = round.bits.div_ceil(8) + 8;
+                    up_delay = net.latency.transfer_us(nbytes);
+                    if !net.send(Direction::Up, w, nbytes) {
+                        // dropped uplink: θ̂_m advanced worker-side but
+                        // the server never folds — eq. (5) carries the
+                        // stale term, exactly as in the sync engine
+                        linalg::axpy(1.0, &round.delta, &mut dropped_sum);
+                        round.decision = CensorDecision::Skip;
+                        round.delta.clear();
+                    }
+                } else {
+                    // censored: a zero-byte completion ping still takes
+                    // the fixed link latency, but costs no counted
+                    // uplink message (the paper's comm metric)
+                    up_delay = net.latency.transfer_us(0);
+                }
+                q.push(t + up_delay, RANK_UP, w, Ev::Up(round, st.version));
+            }
+            Ev::Up(round, version) => {
+                batch.push(round);
+                batch_versions.push(version);
+                // same-instant reports fold as one batch: lower-rank
+                // events at t are already drained (heap order), so the
+                // only things left at t are sibling Ups
+                let more = q
+                    .peek()
+                    .is_some_and(|k| k.time_us == t && k.rank == RANK_UP);
+                if more {
+                    continue;
+                }
+                let stop = fold_batch(
+                    &mut server,
+                    cfg,
+                    &mut trace,
+                    &batch,
+                    &batch_versions,
+                    &mut loss_cache,
+                    &mut applied_sum,
+                    t,
+                );
+                if stop || server.iteration() >= cfg.max_iters {
+                    break 'event_loop;
+                }
+                // reply to every worker that just reported: fresh θ
+                let snapshot = Arc::new(server.theta.clone());
+                let step_sq = server.theta_step_sq();
+                let version = server.iteration();
+                batch_versions.clear();
+                for r in batch.drain(..) {
+                    let id = r.worker;
+                    stations[id] = Station {
+                        theta: Arc::clone(&snapshot),
+                        step_sq,
+                        version,
+                    };
+                    net.send(Direction::Down, id, down_bytes);
+                    q.push(
+                        t + net.latency.transfer_us(down_bytes),
+                        RANK_DOWN,
+                        id,
+                        Ev::Down,
+                    );
+                }
+            }
+        }
+    }
+
+    // account for transmitted deltas still on the wire at exit
+    let mut inflight_sum = vec![0.0; dim];
+    for (_, ev) in q.drain_ordered() {
+        if let Ev::Up(r, _) = ev {
+            if r.decision == CensorDecision::Transmit {
+                linalg::axpy(1.0, &r.delta, &mut inflight_sum);
+            }
+        }
+    }
+
+    trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
+    AsyncOutcome {
+        trace,
+        agg_grad: server.agg_grad.clone(),
+        applied_sum,
+        dropped_sum,
+        inflight_sum,
+        vclock_us,
+    }
+}
+
+/// Fold one same-instant batch of reports and take one server step;
+/// returns whether the stop rule fired.  The batch arrives in
+/// worker-id order (heap tie-breaking), so all f64 sums here are
+/// deterministic and — in the degenerate all-M case — identical to the
+/// synchronous fold.
+#[allow(clippy::too_many_arguments)]
+fn fold_batch(
+    server: &mut Server,
+    cfg: &RunConfig,
+    trace: &mut Trace,
+    batch: &[WorkerRound],
+    versions: &[usize],
+    loss_cache: &mut [f64],
+    applied_sum: &mut [f64],
+    t: f64,
+) -> bool {
+    debug_assert_eq!(batch.len(), versions.len());
+    let mut stale_max = 0usize;
+    let mut bits_round = 0u64;
+    let now = server.iteration();
+    for (r, version) in batch.iter().zip(versions) {
+        loss_cache[r.worker] = r.loss;
+        if r.decision == CensorDecision::Transmit {
+            let s = now - version;
+            stale_max = stale_max.max(s);
+            trace.worker_staleness[r.worker].record(s);
+            bits_round += r.bits;
+            linalg::axpy(1.0, &r.delta, applied_sum);
+        }
+    }
+    if cfg.record_comm_map {
+        let mut row = vec![false; loss_cache.len()];
+        for r in batch.iter() {
+            row[r.worker] = r.decision == CensorDecision::Transmit;
+        }
+        trace.comm_map.push(row);
+    }
+    let out = server.apply_round(batch);
+    // global loss: every worker's latest report, summed in id order
+    // (identical to the synchronous sum when all M are in the batch)
+    let mut global_loss = 0.0;
+    for &l in loss_cache.iter() {
+        global_loss += l;
+    }
+    let prev = trace.iters.last();
+    let stat = IterStat {
+        k: out.k,
+        loss: global_loss,
+        comms_round: out.transmitted,
+        comms_cum: prev.map_or(0, |s| s.comms_cum) + out.transmitted,
+        agg_grad_sq: out.agg_grad_sq,
+        step_sq: out.step_sq,
+        bits_cum: prev.map_or(0, |s| s.bits_cum) + bits_round,
+        vclock_us: t,
+        stale_max,
+    };
+    trace.participants.push(batch.len());
+    let stop = cfg.should_stop(&stat);
+    trace.iters.push(stat);
+    stop
+}
+
+/// Run the asynchronous engine and return the trace — the async
+/// sibling of [`run_serial`](super::engine::run_serial).  Workers are
+/// borrowed so callers can inspect censor state afterwards.
+///
+/// ```
+/// use chb_fed::coordinator::{run_async, AsyncConfig, RunConfig};
+/// use chb_fed::experiments::figures::synth_linreg_problem;
+/// use chb_fed::net::LatencyModel;
+/// use chb_fed::optim::{Method, MethodParams};
+///
+/// let p = synth_linreg_problem(7);
+/// let params = MethodParams::new(1.0 / p.l_global)
+///     .with_beta(0.4)
+///     .with_epsilon1_scaled(0.1, p.m_workers());
+/// let cfg = RunConfig::new(Method::Chb, params, 50);
+/// // uniform compute + zero latency = synchronous rounds, by theorem
+/// let acfg = AsyncConfig {
+///     latency: LatencyModel::zero(),
+///     ..AsyncConfig::default()
+/// };
+/// let mut ws = p.rust_workers();
+/// let trace = run_async(&mut ws, &cfg, &acfg, p.theta0());
+/// assert_eq!(trace.iterations(), 50);
+/// assert_eq!(trace.max_staleness(), 0);
+/// ```
+pub fn run_async(
+    workers: &mut [Worker],
+    cfg: &RunConfig,
+    acfg: &AsyncConfig,
+    theta0: Vec<f64>,
+) -> Trace {
+    run_async_detailed(workers, cfg, acfg, theta0).trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::run_serial;
+    use crate::coordinator::worker::GradientBackend;
+    use crate::optim::{Method, MethodParams};
+
+    /// f_m(θ) = ½ c_m ‖θ − t_m‖² toy backend (same as engine tests).
+    struct Quad {
+        c: f64,
+        t: Vec<f64>,
+    }
+
+    impl GradientBackend for Quad {
+        fn dim(&self) -> usize {
+            self.t.len()
+        }
+
+        fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+            let mut l = 0.0;
+            for i in 0..theta.len() {
+                let d = theta[i] - self.t[i];
+                grad[i] = self.c * d;
+                l += d * d;
+            }
+            0.5 * self.c * l
+        }
+    }
+
+    fn quad_workers(dim: usize, m: usize) -> Vec<Worker> {
+        (0..m)
+            .map(|i| {
+                let t: Vec<f64> =
+                    (0..dim).map(|j| ((i + j) % 5) as f64 - 2.0).collect();
+                Worker::new(i, Box::new(Quad { c: 1.0 + i as f64 * 0.3, t }))
+            })
+            .collect()
+    }
+
+    fn total_c(m: usize) -> f64 {
+        (0..m).map(|i| 1.0 + i as f64 * 0.3).sum()
+    }
+
+    fn degenerate() -> AsyncConfig {
+        AsyncConfig {
+            compute: ComputeModel::Uniform { us: 1_000.0 },
+            latency: LatencyModel::zero(),
+            max_staleness: None,
+        }
+    }
+
+    #[test]
+    fn degenerate_async_matches_serial_bitwise_on_quadratic() {
+        let (dim, m) = (5, 4);
+        let p = MethodParams::new(0.8 / total_c(m))
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, p, 120).with_comm_map();
+        let mut ws = quad_workers(dim, m);
+        let serial = run_serial(&mut ws, &cfg, vec![0.5; dim]);
+        let mut ws = quad_workers(dim, m);
+        let a = run_async(&mut ws, &cfg, &degenerate(), vec![0.5; dim]);
+        assert_eq!(serial.iterations(), a.iterations());
+        for (x, y) in serial.iters.iter().zip(&a.iters) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss k={}", x.k);
+            assert_eq!(x.comms_cum, y.comms_cum, "comms k={}", x.k);
+            assert_eq!(x.bits_cum, y.bits_cum, "bits k={}", x.k);
+            assert_eq!(y.stale_max, 0, "staleness k={}", x.k);
+        }
+        assert_eq!(serial.comm_map, a.comm_map);
+        assert_eq!(serial.per_worker_comms, a.per_worker_comms);
+        assert_eq!(serial.participants, a.participants);
+        assert_eq!(a.max_staleness(), 0);
+    }
+
+    #[test]
+    fn heterogeneous_compute_produces_partial_batches_and_staleness() {
+        let (dim, m) = (4, 5);
+        // conservative α: per-arrival steps mean each worker's gradient
+        // is ~M steps stale, and stability needs roughly α·L·τ ≲ 1
+        let p = MethodParams::new(0.1 / total_c(m))
+            .with_beta(0.2)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, p, 600);
+        let acfg = AsyncConfig {
+            compute: ComputeModel::Pareto {
+                scale_us: 1_000.0,
+                shape: 2.0,
+                seed: 0xA57,
+            },
+            latency: LatencyModel::default(),
+            max_staleness: None,
+        };
+        let mut ws = quad_workers(dim, m);
+        let trace = run_async(&mut ws, &cfg, &acfg, vec![2.0; dim]);
+        assert_eq!(trace.iterations(), 600);
+        // heavy-tailed compute must desynchronize the cohort
+        assert!(
+            trace.participants.iter().any(|&n| n < m),
+            "every batch was full — no asynchrony"
+        );
+        assert!(trace.max_staleness() > 0, "no staleness recorded");
+        // the virtual clock is strictly increasing
+        for w in trace.iters.windows(2) {
+            assert!(w[1].vclock_us >= w[0].vclock_us);
+        }
+        // still converges on the strongly convex problem (to within
+        // the bias any long-absent worker's stale term can leave)
+        let first = trace.iters.first().unwrap().loss;
+        let last = trace.final_loss();
+        assert!(last.is_finite() && last < first * 1e-1, "{first} → {last}");
+    }
+
+    #[test]
+    fn max_staleness_zero_disables_censoring() {
+        let (dim, m) = (3, 4);
+        let p = MethodParams::new(0.3 / total_c(m))
+            .with_beta(0.3)
+            .with_epsilon1_scaled(10.0, m); // aggressive censoring…
+        let cfg = RunConfig::new(Method::Chb, p, 60);
+        let acfg = AsyncConfig {
+            max_staleness: Some(0), // …overridden: transmit every round
+            ..degenerate()
+        };
+        let mut ws = quad_workers(dim, m);
+        let trace = run_async(&mut ws, &cfg, &acfg, vec![1.0; dim]);
+        // every completion transmitted: comms == Σ folds == participants
+        let folds: usize =
+            trace.worker_staleness.iter().map(|s| s.folds).sum();
+        assert_eq!(folds, trace.total_comms());
+        assert_eq!(
+            trace.participants.iter().sum::<usize>(),
+            trace.total_comms()
+        );
+    }
+
+    #[test]
+    fn detailed_outcome_bookkeeping_balances_under_drops() {
+        let (dim, m) = (4, 6);
+        // small α: the identity below is exact regardless of progress,
+        // but a divergent run would overflow the comparison to NaN
+        let p = MethodParams::new(0.05 / total_c(m))
+            .with_beta(0.2)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, p, 150).with_drops(0.25, 99);
+        let acfg = AsyncConfig {
+            compute: ComputeModel::Pareto {
+                scale_us: 500.0,
+                shape: 2.0,
+                seed: 7,
+            },
+            latency: LatencyModel::default(),
+            max_staleness: Some(10),
+        };
+        let mut ws = quad_workers(dim, m);
+        let out = run_async_detailed(&mut ws, &cfg, &acfg, vec![3.0; dim]);
+        // the server aggregate is exactly the independently-accumulated
+        // fold sum (same deltas, same order)
+        for i in 0..dim {
+            assert_eq!(
+                out.agg_grad[i].to_bits(),
+                out.applied_sum[i].to_bits()
+            );
+        }
+        // decoded-delta bookkeeping: Σ_m θ̂_m == folded + dropped +
+        // in-flight, under arbitrary arrival orderings and drops
+        let mut last_tx = vec![0.0; dim];
+        for w in ws.iter() {
+            linalg::axpy(1.0, w.last_transmitted(), &mut last_tx);
+        }
+        let mut rhs = out.agg_grad.clone();
+        linalg::axpy(1.0, &out.dropped_sum, &mut rhs);
+        linalg::axpy(1.0, &out.inflight_sum, &mut rhs);
+        let scale = crate::linalg::norm2(&last_tx).max(1.0);
+        for i in 0..dim {
+            assert!(
+                (last_tx[i] - rhs[i]).abs() <= 1e-9 * scale,
+                "telescope broke at coord {i}: {} vs {}",
+                last_tx[i],
+                rhs[i]
+            );
+        }
+    }
+}

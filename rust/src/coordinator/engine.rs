@@ -39,9 +39,13 @@ pub enum StopRule {
 /// Full description of one run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// which of the four paper algorithms to run
     pub method: Method,
+    /// (α, β, ε₁)
     pub params: MethodParams,
+    /// iteration budget (server steps, in every engine)
     pub max_iters: usize,
+    /// early-exit rule checked after every iteration
     pub stop: StopRule,
     /// which workers join each round (default: the paper's full
     /// participation)
@@ -50,10 +54,13 @@ pub struct RunConfig {
     pub record_comm_map: bool,
     /// uplink drop probability (failure injection; 0 = paper setting)
     pub drop_prob: f64,
+    /// seed for the drop stream
     pub drop_seed: u64,
 }
 
 impl RunConfig {
+    /// Paper defaults: run to `max_iters`, full participation, no
+    /// comm-map recording, no failure injection.
     pub fn new(method: Method, params: MethodParams, max_iters: usize) -> Self {
         Self {
             method,
@@ -67,28 +74,32 @@ impl RunConfig {
         }
     }
 
+    /// Replace the stop rule (builder form).
     pub fn with_stop(mut self, stop: StopRule) -> Self {
         self.stop = stop;
         self
     }
 
+    /// Replace the participation policy (builder form).
     pub fn with_participation(mut self, p: Participation) -> Self {
         self.participation = p;
         self
     }
 
+    /// Record the O(K·M) per-worker transmit map (Fig. 1).
     pub fn with_comm_map(mut self) -> Self {
         self.record_comm_map = true;
         self
     }
 
+    /// Inject seeded uplink drops with probability `prob`.
     pub fn with_drops(mut self, prob: f64, seed: u64) -> Self {
         self.drop_prob = prob;
         self.drop_seed = seed;
         self
     }
 
-    fn should_stop(&self, stat: &IterStat) -> bool {
+    pub(crate) fn should_stop(&self, stat: &IterStat) -> bool {
         match self.stop {
             StopRule::MaxIters => false,
             StopRule::ObjErrBelow { f_star, tol } => stat.loss - f_star < tol,
@@ -149,6 +160,10 @@ fn fold_round(
         agg_grad_sq: out.agg_grad_sq,
         step_sq: out.step_sq,
         bits_cum: prev.map_or(0, |s| s.bits_cum) + bits_round,
+        vclock_us: net.sim_clock_us,
+        // synchronous rounds fold every delta at the iterate it was
+        // computed on — arrival staleness is identically zero
+        stale_max: 0,
     }
 }
 
@@ -209,6 +224,7 @@ pub struct RoundEngine<P: WorkerPool> {
 }
 
 impl<P: WorkerPool> RoundEngine<P> {
+    /// Engine over an already-built pool.
     pub fn new(pool: P) -> Self {
         Self { pool }
     }

@@ -19,7 +19,16 @@
 //! deployment-shaped path), or [`RayonPool`] (work-stealing, scales to
 //! thousands of simulated workers).  All pools produce bit-identical
 //! traces; `tests/engine_equivalence.rs` and a property test pin that.
+//!
+//! Beside the synchronous round engines sits a second execution
+//! *regime*: the [`async_engine`] replaces lockstep rounds with a
+//! discrete-event virtual clock — per-worker compute-time models,
+//! latency-ordered message delivery, and a server that folds deltas
+//! as they arrive, stale by `s` steps.  With zero latency and uniform
+//! compute it reduces bit-identically to the serial engine
+//! (`tests/async_engine.rs`).
 
+pub mod async_engine;
 pub mod engine;
 pub mod participation;
 pub mod pool;
@@ -27,6 +36,10 @@ pub mod protocol;
 pub mod server;
 pub mod worker;
 
+pub use async_engine::{
+    run_async, run_async_detailed, run_async_with_rules, AsyncConfig,
+    AsyncOutcome, ComputeModel,
+};
 pub use engine::{
     run_rayon, run_serial, run_threaded, run_with_rules, RoundEngine,
     RunConfig, StopRule,

@@ -38,6 +38,7 @@ pub enum Participation {
 }
 
 impl Participation {
+    /// Short label for logs and CSV filenames.
     pub fn name(&self) -> &'static str {
         match self {
             Participation::Full => "full",
@@ -55,6 +56,7 @@ pub struct Schedule {
 }
 
 impl Schedule {
+    /// Schedule for one run of `policy` (seeds its own RNG stream).
     pub fn new(policy: Participation) -> Self {
         let seed = match policy {
             Participation::Full => 0,
@@ -64,6 +66,7 @@ impl Schedule {
         Self { policy, rng: Xoshiro256::new(seed) }
     }
 
+    /// The policy this schedule draws from.
     pub fn policy(&self) -> Participation {
         self.policy
     }

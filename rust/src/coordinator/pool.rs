@@ -41,6 +41,7 @@ use super::worker::{Worker, WorkerRound};
 /// shared via `Arc` exactly as a real broadcast shares one payload.
 #[derive(Clone)]
 pub struct RoundInput {
+    /// iteration index k (1-based)
     pub k: usize,
     /// θᵏ
     pub theta: Arc<Vec<f64>>,
@@ -48,6 +49,7 @@ pub struct RoundInput {
     pub step_sq: f64,
     /// `active[id]`: is worker `id` scheduled this round?
     pub active: Arc<Vec<bool>>,
+    /// the skip-transmission rule every worker applies
     pub censor: Arc<dyn CensorRule>,
 }
 
@@ -67,6 +69,7 @@ pub(crate) fn run_worker_round(w: &mut Worker, input: &RoundInput) -> WorkerRoun
 /// [`WorkerRound`] per worker, ordered by worker id, so the server
 /// fold (and its f64 sums) is deterministic across backends.
 pub trait WorkerPool {
+    /// Number of workers M this pool executes.
     fn num_workers(&self) -> usize;
 
     /// Run round `input` on every worker.
@@ -77,6 +80,7 @@ pub trait WorkerPool {
     /// shut their workers down here.
     fn per_worker_comms(&mut self) -> Vec<usize>;
 
+    /// Short label for logs and benches.
     fn name(&self) -> &'static str;
 }
 
@@ -86,6 +90,7 @@ pub struct SerialPool<'a> {
 }
 
 impl<'a> SerialPool<'a> {
+    /// Pool over borrowed workers (caller keeps post-run access).
     pub fn new(workers: &'a mut [Worker]) -> Self {
         Self { workers }
     }
@@ -123,6 +128,7 @@ pub struct ThreadedPool {
 }
 
 impl ThreadedPool {
+    /// Spawn one OS thread per worker, wired up with channels.
     pub fn new(workers: Vec<Worker>) -> Self {
         let m = workers.len();
         let (up_tx, up_rx) = mpsc::channel::<Uplink>();
@@ -235,6 +241,8 @@ impl RayonPool {
         Self::with_threads(workers, threads)
     }
 
+    /// Pool with an explicit thread count (tests force real
+    /// multi-threading on 1-core CI machines through this).
     pub fn with_threads(workers: Vec<Worker>, threads: usize) -> Self {
         Self {
             workers: workers.into_iter().map(Mutex::new).collect(),

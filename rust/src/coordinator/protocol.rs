@@ -20,6 +20,7 @@ pub enum Downlink {
 /// worker → server
 #[derive(Debug)]
 pub struct Uplink {
+    /// the worker's full round report
     pub round: WorkerRound,
 }
 

@@ -19,6 +19,7 @@ use crate::optim::CensorDecision;
 /// Aggregated outcome of one server round.
 #[derive(Clone, Debug)]
 pub struct RoundOutcome {
+    /// server iteration index after this round
     pub k: usize,
     /// number of uplink transmissions |Mᵏ| this round
     pub transmitted: usize,
@@ -32,7 +33,9 @@ pub struct RoundOutcome {
 
 /// The parameter server.
 pub struct Server {
+    /// current iterate θᵏ
     pub theta: Vec<f64>,
+    /// previous iterate θ^{k−1} (the momentum term's anchor)
     pub theta_prev: Vec<f64>,
     /// ∇ᵏ — running aggregate of eq. (5)
     pub agg_grad: Vec<f64>,
@@ -41,6 +44,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// Server for (method, params) starting at θ⁰ = `theta0`.
     pub fn new(method: Method, params: &MethodParams, theta0: Vec<f64>) -> Self {
         let rule =
             optim::method::build_server_rule(method, params, theta0.len());
@@ -60,10 +64,12 @@ impl Server {
         }
     }
 
+    /// Parameter dimension d.
     pub fn dim(&self) -> usize {
         self.theta.len()
     }
 
+    /// Server steps taken so far.
     pub fn iteration(&self) -> usize {
         self.k
     }

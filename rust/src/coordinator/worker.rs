@@ -11,6 +11,7 @@ use crate::tasks::WorkerObjective;
 /// a [`WorkerObjective`]; the PJRT backend (runtime/pjrt.rs) executes
 /// the AOT artifact.  Both must compute the *same* function.
 pub trait GradientBackend: Send {
+    /// Parameter dimension d this backend computes over.
     fn dim(&self) -> usize;
     /// Write ∇f_m(θ) into `grad`, return f_m(θ).
     fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64;
@@ -22,6 +23,7 @@ pub struct RustBackend {
 }
 
 impl RustBackend {
+    /// Wrap a task objective as a gradient backend.
     pub fn new(obj: Box<dyn WorkerObjective>) -> Self {
         Self { obj }
     }
@@ -41,7 +43,9 @@ impl GradientBackend for RustBackend {
 /// record that it stayed silent).
 #[derive(Clone, Debug)]
 pub struct WorkerRound {
+    /// reporting worker's id
     pub worker: usize,
+    /// did the censor rule allow a transmission?
     pub decision: CensorDecision,
     /// δ∇_m^k (codec-decoded when compression is on) — only
     /// meaningful when `decision == Transmit`
@@ -56,6 +60,7 @@ pub struct WorkerRound {
 
 /// One federated worker: shard + censor state.
 pub struct Worker {
+    /// worker id m ∈ 0..M
     pub id: usize,
     backend: Box<dyn GradientBackend>,
     /// ∇f_m(θ̂_m^{k−1}) — the last gradient this worker *transmitted*
@@ -71,6 +76,8 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// Fresh worker over a gradient backend, with the θ̂⁰ = 0
+    /// convention (first round always transmits the full gradient).
     pub fn new(id: usize, backend: Box<dyn GradientBackend>) -> Self {
         let dim = backend.dim();
         Self {
@@ -96,6 +103,7 @@ impl Worker {
         self
     }
 
+    /// Parameter dimension d.
     pub fn dim(&self) -> usize {
         self.backend.dim()
     }

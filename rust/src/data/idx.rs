@@ -14,7 +14,9 @@ use super::Dataset;
 
 /// Parsed IDX tensor of u8.
 pub struct IdxU8 {
+    /// tensor shape (dims[0] = item count)
     pub dims: Vec<usize>,
+    /// flattened payload bytes
     pub data: Vec<u8>,
 }
 

@@ -22,17 +22,21 @@ use crate::linalg::Matrix;
 /// A labelled dense dataset.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// (n × d) feature matrix
     pub x: Matrix,
+    /// n labels (±1 for classification, reals for regression)
     pub y: Vec<f64>,
     /// human-readable provenance ("synthetic ijcnn1 stand-in", file path…)
     pub source: String,
 }
 
 impl Dataset {
+    /// Sample count n.
     pub fn n(&self) -> usize {
         self.x.rows
     }
 
+    /// Feature count d.
     pub fn d(&self) -> usize {
         self.x.cols
     }
@@ -76,13 +80,18 @@ impl Dataset {
 /// is 1.0 for real rows and 0.0 for padding.
 #[derive(Clone, Debug)]
 pub struct Shard {
+    /// padded (n_pad × d) feature block
     pub x: Matrix,
+    /// padded labels (0.0 on padding rows)
     pub y: Vec<f64>,
+    /// 1.0 for real rows, 0.0 for padding
     pub mask: Vec<f64>,
+    /// genuine sample count before padding
     pub n_real: usize,
 }
 
 impl Shard {
+    /// Row count after padding (the artifact shape).
     pub fn n_pad(&self) -> usize {
         self.x.rows
     }

@@ -17,13 +17,16 @@ use super::{idx, libsvm, synthetic, Dataset};
 /// Static description of one registry entry (mirror of aot.py).
 #[derive(Clone, Copy, Debug)]
 pub struct DatasetSpec {
+    /// registry key ("synth", "ijcnn1", …)
     pub name: &'static str,
+    /// sample count
     pub n: usize,
     /// feature count used by the experiments (after the paper's
     /// min-feature truncation for the §IV-B small datasets)
     pub d: usize,
     /// native feature count of the real file, pre-truncation
     pub d_native: usize,
+    /// the paper's worker count M for this dataset
     pub workers: usize,
 }
 
@@ -40,6 +43,7 @@ pub const SPECS: &[DatasetSpec] = &[
     DatasetSpec { name: "derm", n: 366, d: 14, d_native: 34, workers: 3 },
 ];
 
+/// Look a dataset spec up by name.
 pub fn spec(name: &str) -> Result<&'static DatasetSpec> {
     SPECS
         .iter()

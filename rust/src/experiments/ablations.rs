@@ -13,8 +13,10 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::{
-    run_serial, run_with_rules, Participation, RunConfig, SerialPool, Server,
+    run_async_detailed, run_serial, run_with_rules, AsyncConfig,
+    ComputeModel, Participation, RunConfig, SerialPool, Server,
 };
+use crate::net::LatencyModel;
 use crate::metrics::csv;
 use crate::optim::censor::{AbsoluteCensor, PeriodicCensor};
 use crate::optim::{
@@ -448,6 +450,113 @@ pub fn participation_sweep(out_dir: &Path, quick: bool) -> Result<()> {
     )
 }
 
+/// Ablation I: async vs sync across worker-heterogeneity levels —
+/// the execution regime the paper assumes away.  The synchronous
+/// engine pays the slowest worker every round (its virtual round time
+/// is the max over the cohort), while the event-driven engine folds
+/// arrivals as they come: heterogeneity costs staleness instead of
+/// wallclock.  Sweeps Pareto tail indices from uniform (sync-like)
+/// to heavy-tailed and reports comms, accuracy, virtual time, and
+/// staleness; per-regime trace CSVs carry the staleness +
+/// virtual-clock columns.
+pub fn async_heterogeneity(out_dir: &Path, quick: bool) -> Result<()> {
+    let p = synth_linreg_problem(0xAB9);
+    let f_star = p.f_star().unwrap();
+    let iters = if quick { 600 } else { 2_000 };
+    // stale-gradient stability: per-arrival steps leave each worker's
+    // contribution ~M steps old, so keep α·L·staleness well below 1
+    let alpha = 0.1 / p.l_global;
+    let params = MethodParams::new(alpha)
+        .with_beta(0.2)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, iters);
+    let dir = out_dir.join("ablation_async");
+    println!("\n── ablation: async vs sync × heterogeneity (CHB, linreg)");
+    let mut rows = Vec::new();
+
+    // synchronous baseline: the round clock pays max-over-cohort
+    let mut ws = p.rust_workers();
+    let sync = run_serial(&mut ws, &cfg, p.theta0());
+    let sync_last = sync.iters.last().unwrap();
+    println!(
+        "  {:<16} comms {:>6}  final err {:.4e}  vclock {:>9.1} ms",
+        "sync (serial)",
+        sync.total_comms(),
+        sync.final_loss() - f_star,
+        sync_last.vclock_us / 1e3,
+    );
+    rows.push(vec![
+        "sync".into(),
+        "-".into(),
+        sync.total_comms().to_string(),
+        format!("{:.8e}", sync.final_loss() - f_star),
+        format!("{:.3}", sync_last.vclock_us / 1e3),
+        "0".into(),
+    ]);
+    csv::write_trace(&dir.join("sync.csv"), &sync, f_star)?;
+
+    // async at increasing heterogeneity (smaller shape = heavier tail)
+    let regimes: [(&str, ComputeModel); 4] = [
+        ("uniform", ComputeModel::Uniform { us: 1_000.0 }),
+        (
+            "pareto-4.0",
+            ComputeModel::Pareto { scale_us: 1_000.0, shape: 4.0, seed: 0xA59 },
+        ),
+        (
+            "pareto-2.0",
+            ComputeModel::Pareto { scale_us: 1_000.0, shape: 2.0, seed: 0xA59 },
+        ),
+        (
+            "pareto-1.3",
+            ComputeModel::Pareto { scale_us: 1_000.0, shape: 1.3, seed: 0xA59 },
+        ),
+    ];
+    for (label, compute) in regimes {
+        let acfg = AsyncConfig {
+            compute,
+            latency: LatencyModel::default(),
+            max_staleness: Some(20),
+        };
+        let mut ws = p.rust_workers();
+        let out = run_async_detailed(&mut ws, &cfg, &acfg, p.theta0());
+        let t = &out.trace;
+        println!(
+            "  async {:<10} comms {:>6}  final err {:.4e}  vclock \
+             {:>9.1} ms  stale≤{}",
+            label,
+            t.total_comms(),
+            t.final_loss() - f_star,
+            out.vclock_us / 1e3,
+            t.max_staleness(),
+        );
+        rows.push(vec![
+            "async".into(),
+            label.into(),
+            t.total_comms().to_string(),
+            format!("{:.8e}", t.final_loss() - f_star),
+            format!("{:.3}", out.vclock_us / 1e3),
+            t.max_staleness().to_string(),
+        ]);
+        csv::write_trace(&dir.join(format!("async_{label}.csv")), t, f_star)?;
+        csv::write_staleness(
+            &dir.join(format!("async_{label}_staleness.csv")),
+            t,
+        )?;
+    }
+    csv::write_table(
+        &dir.join("summary.csv"),
+        &[
+            "regime",
+            "compute_model",
+            "comms",
+            "final_obj_err",
+            "vclock_ms",
+            "stale_max",
+        ],
+        &rows,
+    )
+}
+
 /// Run every ablation.
 pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     censor_rules(out_dir, quick)?;
@@ -457,5 +566,6 @@ pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     compression(out_dir, quick)?;
     nesterov(out_dir, quick)?;
     adaptive_epsilon(out_dir, quick)?;
-    participation_sweep(out_dir, quick)
+    participation_sweep(out_dir, quick)?;
+    async_heterogeneity(out_dir, quick)
 }

@@ -51,6 +51,8 @@ pub fn synth_logreg_problem(seed: u64, lam_global: f64) -> Problem {
 // Fig. 1 — per-worker communication pattern, first 24 iterations
 // ---------------------------------------------------------------------------
 
+/// Fig. 1 — per-worker communication pattern over the first 24
+/// iterations (CHB vs HB) with the Lemma-2 bound check.
 pub fn fig1(out_dir: &Path, _data_dir: &Path, _quick: bool) -> Result<()> {
     let p = synth_linreg_problem(0xF1);
     let proto = Protocol::paper_default(1.0 / p.l_global, 24);
@@ -87,6 +89,7 @@ pub fn fig1(out_dir: &Path, _data_dir: &Path, _quick: bool) -> Result<()> {
 // Fig. 2 / Fig. 3 — objective error vs comms & iters (synthetic)
 // ---------------------------------------------------------------------------
 
+/// Fig. 2 — objective error vs comms/iters, synthetic linreg.
 pub fn fig2(out_dir: &Path, _data_dir: &Path, quick: bool) -> Result<()> {
     let p = synth_linreg_problem(0xF1);
     let f_star = p.f_star().unwrap();
@@ -99,6 +102,7 @@ pub fn fig2(out_dir: &Path, _data_dir: &Path, quick: bool) -> Result<()> {
     Ok(())
 }
 
+/// Fig. 3 — objective error vs comms/iters, synthetic logreg.
 pub fn fig3(out_dir: &Path, _data_dir: &Path, quick: bool) -> Result<()> {
     let p = synth_logreg_problem(0xF3, 0.001);
     let f_star = p.f_star().unwrap();
@@ -115,6 +119,7 @@ pub fn fig3(out_dir: &Path, _data_dir: &Path, quick: bool) -> Result<()> {
 // Fig. 4 / Fig. 5 — ijcnn1 (reuse the Table-I suite runs)
 // ---------------------------------------------------------------------------
 
+/// Fig. 4 — ijcnn1 linreg + logreg (Table-I suite subset).
 pub fn fig4(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     let entries: Vec<SuiteEntry> = tables::table1_suite(data_dir, quick)?
         .into_iter()
@@ -125,6 +130,7 @@ pub fn fig4(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     Ok(())
 }
 
+/// Fig. 5 — ijcnn1 lasso + NN (Table-I suite subset).
 pub fn fig5(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     let entries: Vec<SuiteEntry> = tables::table1_suite(data_dir, quick)?
         .into_iter()
@@ -139,6 +145,7 @@ pub fn fig5(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
 // Fig. 6 / Fig. 7 — small UCI (Table-II suite)
 // ---------------------------------------------------------------------------
 
+/// Fig. 6 — small-UCI linreg + logreg (Table-II suite subset).
 pub fn fig6(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     let entries: Vec<SuiteEntry> = tables::table2_suite(data_dir, quick)?
         .into_iter()
@@ -149,6 +156,7 @@ pub fn fig6(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     Ok(())
 }
 
+/// Fig. 7 — small-UCI lasso + NN (Table-II suite subset).
 pub fn fig7(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     let entries: Vec<SuiteEntry> = tables::table2_suite(data_dir, quick)?
         .into_iter()
@@ -163,6 +171,7 @@ pub fn fig7(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
 // Fig. 8 / Fig. 9 — MNIST (Table-III suite)
 // ---------------------------------------------------------------------------
 
+/// Fig. 8 — MNIST linreg + logreg (Table-III suite subset).
 pub fn fig8(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     let entries: Vec<SuiteEntry> = tables::table3_suite(data_dir, quick)?
         .into_iter()
@@ -173,6 +182,7 @@ pub fn fig8(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     Ok(())
 }
 
+/// Fig. 9 — MNIST lasso + NN (Table-III suite subset).
 pub fn fig9(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
     let entries: Vec<SuiteEntry> = tables::table3_suite(data_dir, quick)?
         .into_iter()
@@ -223,6 +233,7 @@ pub fn fig10(out_dir: &Path, data_dir: &Path, quick: bool) -> Result<()> {
 // Fig. 11 — ε₁ sweep (synthetic logreg)
 // ---------------------------------------------------------------------------
 
+/// Fig. 11 — the ε₁ comms/accuracy frontier on synthetic logreg.
 pub fn fig11(out_dir: &Path, _data_dir: &Path, quick: bool) -> Result<()> {
     let p = synth_logreg_problem(0xF3, 0.001);
     let f_star = p.f_star().unwrap();
@@ -263,6 +274,7 @@ pub fn fig11(out_dir: &Path, _data_dir: &Path, quick: bool) -> Result<()> {
 // Fig. 12 — averaged per-communication descent (synthetic logreg)
 // ---------------------------------------------------------------------------
 
+/// Fig. 12 — averaged per-communication descent, CHB vs LAG.
 pub fn fig12(out_dir: &Path, _data_dir: &Path, quick: bool) -> Result<()> {
     let p = synth_logreg_problem(0xF3, 0.001);
     let f_star = p.f_star().unwrap();

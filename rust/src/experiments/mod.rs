@@ -21,8 +21,11 @@ use crate::tasks::{self, smoothness, TaskKind};
 
 /// A fully-specified learning problem (one dataset × one task).
 pub struct Problem {
+    /// the learning task
     pub task: TaskKind,
+    /// dataset name (registry key or a driver-local label)
     pub dataset: String,
+    /// one padded shard per worker
     pub shards: Vec<Shard>,
     /// per-worker regularization λ_m = λ_global / M, so that
     /// Σ_m ½λ_m‖θ‖² = ½λ_global‖θ‖² (the paper's single global λ)
@@ -94,10 +97,12 @@ impl Problem {
         }
     }
 
+    /// Worker count M.
     pub fn m_workers(&self) -> usize {
         self.shards.len()
     }
 
+    /// Flat parameter dimension for this (task, dataset).
     pub fn dim(&self) -> usize {
         self.task.theta_dim(self.shards[0].x.cols)
     }

@@ -14,13 +14,18 @@ use super::Problem;
 /// Parameter protocol for one experiment (paper §IV defaults).
 #[derive(Clone, Copy, Debug)]
 pub struct Protocol {
+    /// step size α
     pub alpha: f64,
+    /// momentum coefficient β
     pub beta: f64,
     /// ε₁ = eps_c / (α²M²); `eps_abs` overrides when Some (NN runs use
     /// a raw ε₁ = 0.01)
     pub eps_c: f64,
+    /// raw ε₁ override (wins over `eps_c` when Some)
     pub eps_abs: Option<f64>,
+    /// iteration budget
     pub max_iters: usize,
+    /// early-exit rule
     pub stop: StopRule,
     /// per-round client scheduling (paper: full participation)
     pub participation: Participation,
@@ -40,21 +45,25 @@ impl Protocol {
         }
     }
 
+    /// Replace the stop rule (builder form).
     pub fn with_stop(mut self, stop: StopRule) -> Protocol {
         self.stop = stop;
         self
     }
 
+    /// Replace the participation policy (builder form).
     pub fn with_participation(mut self, p: Participation) -> Protocol {
         self.participation = p;
         self
     }
 
+    /// Use a raw ε₁ instead of the scaled parameterization.
     pub fn with_eps_abs(mut self, eps: f64) -> Protocol {
         self.eps_abs = Some(eps);
         self
     }
 
+    /// Materialize (α, β, ε₁) for a problem with `m_workers` workers.
     pub fn params(&self, m_workers: usize) -> MethodParams {
         let p = MethodParams::new(self.alpha).with_beta(self.beta);
         match self.eps_abs {

@@ -20,7 +20,9 @@ use super::Problem;
 
 /// One task's results within a suite.
 pub struct SuiteEntry {
+    /// the learning task
     pub task: TaskKind,
+    /// dataset name
     pub dataset: String,
     /// CHB, HB, LAG, GD (paper order)
     pub traces: Vec<Trace>,

@@ -7,14 +7,18 @@
 //! programs executed through PJRT (Layers 1–2), plus a pure-rust f64
 //! backend mirroring the same math.
 //!
-//! Quick tour (see README.md for the full map):
+//! Quick tour (see README.md for the full map, and ARCHITECTURE.md at
+//! the repository root for the paper-equation ↔ module correspondence):
 //! * [`optim`] — GD / HB / LAG-WK / CHB update + censor rules (the
 //!   paper's Algorithm 1).
-//! * [`coordinator`] — the federated round engine and comm accounting.
+//! * [`coordinator`] — the federated round engines (synchronous pools
+//!   and the asynchronous discrete-event engine) and comm accounting.
 //! * [`runtime`] — PJRT artifact loading/execution.
 //! * [`experiments`] — one driver per paper figure/table.
 //! * [`theory`] — the paper's parameter conditions (10)–(12), rate
 //!   predictions, and Lemma 2 bounds as executable checks.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod compress;

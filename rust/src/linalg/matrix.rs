@@ -11,16 +11,21 @@ use super::dot;
 /// Row-major (n × d) matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// row count n
     pub rows: usize,
+    /// column count d
     pub cols: usize,
+    /// row-major backing storage (`rows * cols` entries)
     pub data: Vec<f64>,
 }
 
 impl Matrix {
+    /// All-zero (rows × cols) matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Build from row vectors (must all share one length).
     pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -32,26 +37,31 @@ impl Matrix {
         Self { rows: r, cols: c, data }
     }
 
+    /// Wrap a row-major flat buffer (length must be rows·cols).
     pub fn from_flat(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Self { rows, cols, data }
     }
 
+    /// Row i as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row i as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Entry (i, j).
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.cols + j]
     }
 
+    /// Set entry (i, j) to `v`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         self.data[i * self.cols + j] = v;

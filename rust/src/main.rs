@@ -17,8 +17,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use chb_fed::coordinator::{
-    run_rayon, run_serial, run_threaded, Participation, RunConfig, StopRule,
+    run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
+    ComputeModel, Participation, RunConfig, StopRule,
 };
+use chb_fed::net::LatencyModel;
 use chb_fed::experiments::{ablations, figures, tables, Problem};
 use chb_fed::optim::Method;
 use chb_fed::runtime::PjrtRuntime;
@@ -35,10 +37,20 @@ USAGE:
            fig12 table1 table2 table3 ablations all
   chb-fed run --task T --dataset D [--method M] [--alpha A] [--beta B]
               [--eps-c C | --eps-abs E] [--iters N] [--lambda L]
-              [--backend rust|pjrt] [--engine serial|threaded|rayon]
+              [--backend rust|pjrt] [--engine serial|threaded|rayon|async]
               [--participation full|sample|straggler] [--sample-frac F]
               [--timeout T] [--part-seed S]
+              [--compute-model uniform|pareto] [--compute-us US]
+              [--pareto-shape A] [--compute-seed S] [--max-staleness S]
+              [--net-fixed-us F] [--net-per-kib-us P]
               [--artifacts DIR] [--out DIR] [--data DIR]
+      async engine: virtual-clock discrete-event simulation; workers
+      draw per-round compute times (uniform, or Pareto heavy tails),
+      messages order through the latency model, and the server folds
+      deltas as they arrive (stale).  --max-staleness S bounds each
+      worker's consecutive censored rounds; --iters counts server
+      steps.  Zero latency + uniform compute reproduces --engine
+      serial exactly.
   chb-fed list [--data DIR] [--artifacts DIR]
   chb-fed check-theory --l L --mu MU [--m M] [--delta D]
 
@@ -222,7 +234,64 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         "threaded" => run_threaded(workers, &cfg, problem.theta0()),
         "rayon" => run_rayon(workers, &cfg, problem.theta0()),
-        other => bail!("bad --engine {other:?} (serial|threaded|rayon)"),
+        "async" => {
+            if participation != Participation::Full {
+                bail!(
+                    "--engine async runs full participation by \
+                     construction; drop --participation"
+                );
+            }
+            let compute_us: f64 = args.get_parse_or("compute-us", 1_000.0)?;
+            if compute_us.is_nan() || compute_us <= 0.0 {
+                bail!("--compute-us must be > 0, got {compute_us}");
+            }
+            let compute = match args.get_or("compute-model", "uniform") {
+                "uniform" => ComputeModel::Uniform { us: compute_us },
+                "pareto" => {
+                    let shape: f64 = args.get_parse_or("pareto-shape", 2.0)?;
+                    if shape.is_nan() || shape <= 0.0 {
+                        bail!("--pareto-shape must be > 0, got {shape}");
+                    }
+                    ComputeModel::Pareto {
+                        scale_us: compute_us,
+                        shape,
+                        seed: args.get_parse_or("compute-seed", 0x0A57u64)?,
+                    }
+                }
+                other => bail!(
+                    "bad --compute-model {other:?} (uniform|pareto)"
+                ),
+            };
+            let default_lat = LatencyModel::default();
+            let fixed_us: f64 =
+                args.get_parse_or("net-fixed-us", default_lat.fixed_us)?;
+            let per_kib_us: f64 =
+                args.get_parse_or("net-per-kib-us", default_lat.per_kib_us)?;
+            if !fixed_us.is_finite()
+                || !per_kib_us.is_finite()
+                || fixed_us < 0.0
+                || per_kib_us < 0.0
+            {
+                bail!(
+                    "--net-fixed-us/--net-per-kib-us must be finite and \
+                     ≥ 0, got {fixed_us}/{per_kib_us}"
+                );
+            }
+            let acfg = AsyncConfig {
+                compute,
+                latency: LatencyModel { fixed_us, per_kib_us },
+                max_staleness: args.get_parse::<usize>("max-staleness")?,
+            };
+            let mut ws = workers;
+            let out = run_async_detailed(&mut ws, &cfg, &acfg, problem.theta0());
+            println!(
+                "async: virtual clock {:.1} ms, max staleness {}",
+                out.vclock_us / 1e3,
+                out.trace.max_staleness()
+            );
+            out.trace
+        }
+        other => bail!("bad --engine {other:?} (serial|threaded|rayon|async)"),
     };
 
     let f_star = problem.f_star().unwrap_or(0.0);
@@ -237,6 +306,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         &trace,
         f_star,
     )?;
+    if !trace.worker_staleness.is_empty() {
+        chb_fed::metrics::csv::write_staleness(
+            &out.join("run").join(format!(
+                "{}_{}_{}_staleness.csv",
+                task.name(),
+                dataset,
+                trace.method
+            )),
+            &trace,
+        )?;
+    }
     let last = trace.iters.last().context("empty trace")?;
     println!(
         "done: {} iters, {} comms, mean participants {:.1}, \

@@ -8,7 +8,10 @@ use anyhow::{Context, Result};
 
 use super::Trace;
 
-/// Write one trace: k, loss, obj_err, comms_round, comms_cum, …
+/// Write one trace: k, loss, obj_err, comms_round, comms_cum, …,
+/// plus the virtual-clock and staleness columns the async engine
+/// fills (synchronous engines write the accumulated round latency
+/// and stale_max = 0).
 pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
@@ -19,12 +22,12 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
     writeln!(
         w,
         "k,loss,obj_err,comms_round,comms_cum,agg_grad_sq,step_sq,bits_cum,\
-         participants"
+         participants,vclock_us,stale_max"
     )?;
     for (i, s) in trace.iters.iter().enumerate() {
         writeln!(
             w,
-            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{}",
+            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{},{:.6},{}",
             s.k,
             s.loss,
             s.loss - f_star,
@@ -34,8 +37,26 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
             s.step_sq,
             s.bits_cum,
             // 0 = unrecorded (traces assembled outside the engine)
-            trace.participants.get(i).copied().unwrap_or(0)
+            trace.participants.get(i).copied().unwrap_or(0),
+            s.vclock_us,
+            s.stale_max
         )?;
+    }
+    Ok(())
+}
+
+/// Write the per-worker staleness telemetry (async runs): one row per
+/// worker with its fold count, max and mean arrival staleness.
+pub fn write_staleness(path: &Path, trace: &Trace) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "worker,folds,stale_max,stale_mean")?;
+    for (id, s) in trace.worker_staleness.iter().enumerate() {
+        writeln!(w, "{},{},{},{:.6}", id, s.folds, s.max, s.mean())?;
     }
     Ok(())
 }
@@ -88,16 +109,40 @@ mod tests {
             agg_grad_sq: 1.0,
             step_sq: 0.5,
             bits_cum: 0,
+            vclock_us: 1234.5,
+            stale_max: 2,
         });
         let dir = std::env::temp_dir().join("chb_csv_test");
         let path = dir.join("t.csv");
         write_trace(&path, &t, 0.5).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let mut lines = text.lines();
-        assert!(lines.next().unwrap().starts_with("k,loss"));
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("k,loss"));
+        assert!(header.ends_with("vclock_us,stale_max"));
         let row = lines.next().unwrap();
         assert!(row.starts_with("1,"));
         assert!(row.contains(",3,3,"));
+        assert!(row.ends_with(",1234.500000,2"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn staleness_csv_has_one_row_per_worker() {
+        use crate::metrics::StalenessStats;
+        let mut t = Trace::new("CHB-async");
+        let mut s = StalenessStats::default();
+        s.record(3);
+        s.record(1);
+        t.worker_staleness = vec![StalenessStats::default(), s];
+        let dir = std::env::temp_dir().join("chb_csv_test3");
+        let path = dir.join("stale.csv");
+        write_staleness(&path, &t).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "worker,folds,stale_max,stale_mean");
+        assert!(lines[1].starts_with("0,0,0,"));
+        assert!(lines[2].starts_with("1,2,3,2.0"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

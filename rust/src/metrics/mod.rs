@@ -5,8 +5,10 @@ pub mod csv;
 /// One iteration's record.
 #[derive(Clone, Debug)]
 pub struct IterStat {
+    /// server iteration index (1-based)
     pub k: usize,
-    /// f(θᵏ) = Σ_m f_m(θᵏ)
+    /// f(θᵏ) = Σ_m f_m(θᵏ) (async engines: Σ of each worker's most
+    /// recently reported loss, evaluated at its own iterate copy)
     pub loss: f64,
     /// uplink transmissions this iteration |Mᵏ|
     pub comms_round: usize,
@@ -18,38 +20,92 @@ pub struct IterStat {
     pub step_sq: f64,
     /// cumulative uplink payload bits (compression-aware)
     pub bits_cum: u64,
+    /// virtual-clock time (µs) at which this server step completed —
+    /// event time in the async engine, accumulated [`LatencyModel`]
+    /// round time in the synchronous engines
+    ///
+    /// [`LatencyModel`]: crate::net::LatencyModel
+    pub vclock_us: f64,
+    /// largest arrival staleness (in server steps between the iterate
+    /// a delta was computed at and the fold) among this step's folded
+    /// deltas; always 0 under synchronous rounds
+    pub stale_max: usize,
+}
+
+/// Per-worker arrival-staleness telemetry (async engine).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StalenessStats {
+    /// deltas from this worker folded into the aggregate
+    pub folds: usize,
+    /// largest staleness (server steps) over those folds
+    pub max: usize,
+    /// summed staleness over those folds (for the mean)
+    pub sum: usize,
+}
+
+impl StalenessStats {
+    /// Record one fold with arrival staleness `s`.
+    pub fn record(&mut self, s: usize) {
+        self.folds += 1;
+        self.max = self.max.max(s);
+        self.sum += s;
+    }
+
+    /// Mean staleness over all folds (NaN when the worker never folded).
+    pub fn mean(&self) -> f64 {
+        if self.folds == 0 {
+            return f64::NAN;
+        }
+        self.sum as f64 / self.folds as f64
+    }
 }
 
 /// Full trace of a run.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
+    /// method label ("CHB", "HB", …, or a custom ablation label)
     pub method: String,
+    /// one record per server iteration
     pub iters: Vec<IterStat>,
     /// per-worker lifetime transmission counts S_m (Lemma 2)
     pub per_worker_comms: Vec<usize>,
     /// scheduled workers per round |Pᵏ| (== M under the paper's full
-    /// participation; smaller under sampling/straggler schedules)
+    /// participation; smaller under sampling/straggler schedules; the
+    /// async engine records reports folded per server step)
     pub participants: Vec<usize>,
     /// per-(iteration, worker) transmit map for Fig. 1-style plots;
     /// only recorded when `record_comm_map` is on (it is O(K·M))
     pub comm_map: Vec<Vec<bool>>,
+    /// per-worker arrival-staleness telemetry; empty for synchronous
+    /// runs (where staleness is identically zero)
+    pub worker_staleness: Vec<StalenessStats>,
 }
 
 impl Trace {
+    /// Empty trace labelled with the method's name.
     pub fn new(method: &str) -> Self {
         Self { method: method.to_string(), ..Default::default() }
     }
 
+    /// Total delivered uplink transmissions over the whole run.
     pub fn total_comms(&self) -> usize {
         self.iters.last().map_or(0, |s| s.comms_cum)
     }
 
+    /// f(θ) at the final iteration (NaN for an empty trace).
     pub fn final_loss(&self) -> f64 {
         self.iters.last().map_or(f64::NAN, |s| s.loss)
     }
 
+    /// Number of recorded server iterations.
     pub fn iterations(&self) -> usize {
         self.iters.len()
+    }
+
+    /// Largest arrival staleness seen anywhere in the run (0 for
+    /// synchronous runs).
+    pub fn max_staleness(&self) -> usize {
+        self.worker_staleness.iter().map(|s| s.max).max().unwrap_or(0)
     }
 
     /// Mean scheduled workers per round (NaN when unrecorded).
@@ -91,7 +147,17 @@ mod tests {
     use super::*;
 
     fn stat(k: usize, loss: f64, comms_round: usize, comms_cum: usize) -> IterStat {
-        IterStat { k, loss, comms_round, comms_cum, agg_grad_sq: 0.0, step_sq: 0.0, bits_cum: 0 }
+        IterStat {
+            k,
+            loss,
+            comms_round,
+            comms_cum,
+            agg_grad_sq: 0.0,
+            step_sq: 0.0,
+            bits_cum: 0,
+            vclock_us: 0.0,
+            stale_max: 0,
+        }
     }
 
     #[test]
@@ -106,6 +172,22 @@ mod tests {
         assert_eq!(t.first_below(0.4, 1.0), Some((2, 13)));
         assert_eq!(t.first_below(0.0, 0.1), None);
         assert_eq!(t.total_comms(), 15);
+    }
+
+    #[test]
+    fn staleness_stats_track_max_and_mean() {
+        let mut s = StalenessStats::default();
+        assert!(s.mean().is_nan());
+        s.record(0);
+        s.record(4);
+        s.record(2);
+        assert_eq!(s.folds, 3);
+        assert_eq!(s.max, 4);
+        assert!((s.mean() - 2.0).abs() < 1e-15);
+        let mut t = Trace::new("CHB-async");
+        t.worker_staleness = vec![StalenessStats::default(), s];
+        assert_eq!(t.max_staleness(), 4);
+        assert_eq!(Trace::new("CHB").max_staleness(), 0);
     }
 
     #[test]

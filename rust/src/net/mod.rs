@@ -6,13 +6,24 @@
 //! capability the paper assumes away — dropped uplinks simply leave
 //! the server's aggregate stale, which eq. (5) tolerates by design,
 //! and the tests verify it).
+//!
+//! Two engines consume this module differently: the synchronous
+//! [`coordinator`](crate::coordinator) engines use [`LatencyModel`]
+//! only for the simulated-wallclock columns, while the asynchronous
+//! engine ([`coordinator::async_engine`](crate::coordinator::async_engine))
+//! uses it to *order* message deliveries on the [`EventQueue`]'s
+//! virtual clock — a slow uplink arrives late and folds stale.
+
+use std::collections::BinaryHeap;
 
 use crate::rng::Xoshiro256;
 
 /// Per-link accounting.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LinkStats {
+    /// messages delivered on this link
     pub messages: u64,
+    /// payload bytes delivered on this link
     pub bytes: u64,
 }
 
@@ -29,28 +40,44 @@ pub enum Direction {
 /// a memory access" premise from the paper's introduction).
 #[derive(Clone, Copy, Debug)]
 pub struct LatencyModel {
+    /// per-message cost in virtual µs, independent of payload size
     pub fixed_us: f64,
+    /// additional virtual µs per KiB of payload
     pub per_kib_us: f64,
 }
 
 impl Default for LatencyModel {
     fn default() -> Self {
-        // LAN-ish defaults; experiments report counts, latency is for
-        // the simulated-wallclock columns only.
+        // LAN-ish defaults.  Sync engines use these only for the
+        // simulated-wallclock columns; the async engine additionally
+        // orders message delivery by them, so changing the defaults
+        // changes which deltas fold together in async traces.
         Self { fixed_us: 500.0, per_kib_us: 8.0 }
     }
 }
 
 impl LatencyModel {
+    /// Virtual transfer time (µs) for a `bytes`-sized message.
     pub fn transfer_us(&self, bytes: u64) -> f64 {
         self.fixed_us + self.per_kib_us * (bytes as f64 / 1024.0)
+    }
+
+    /// The degenerate model: every transfer takes zero virtual time.
+    /// Under it (plus uniform compute) the asynchronous engine's event
+    /// order collapses to synchronous rounds — the reduction the
+    /// equivalence tests pin.
+    pub fn zero() -> Self {
+        Self { fixed_us: 0.0, per_kib_us: 0.0 }
     }
 }
 
 /// The simulated star network (server + M workers).
 pub struct SimNetwork {
+    /// per-worker uplink (worker → server) counters
     pub up: Vec<LinkStats>,
+    /// per-worker downlink (server → worker) counters
     pub down: Vec<LinkStats>,
+    /// transfer-time model for the simulated wallclock / event clock
     pub latency: LatencyModel,
     /// probability an *uplink* message is dropped (failure injection)
     pub drop_prob: f64,
@@ -62,6 +89,7 @@ pub struct SimNetwork {
 }
 
 impl SimNetwork {
+    /// Fresh network for `m_workers` links, no drops, LAN-ish latency.
     pub fn new(m_workers: usize) -> Self {
         Self {
             up: vec![LinkStats::default(); m_workers],
@@ -74,9 +102,16 @@ impl SimNetwork {
         }
     }
 
+    /// Enable seeded uplink drops with probability `prob`.
     pub fn with_drops(mut self, prob: f64, seed: u64) -> Self {
         self.drop_prob = prob;
         self.rng = Xoshiro256::new(seed);
+        self
+    }
+
+    /// Replace the latency model (builder form).
+    pub fn with_latency(mut self, latency: LatencyModel) -> Self {
+        self.latency = latency;
         self
     }
 
@@ -120,20 +155,169 @@ impl SimNetwork {
         self.sim_clock_us += down + up;
     }
 
+    /// Total delivered uplink messages across all workers.
     pub fn total_up_messages(&self) -> u64 {
         self.up.iter().map(|l| l.messages).sum()
     }
 
+    /// Total delivered uplink payload bytes across all workers.
     pub fn total_up_bytes(&self) -> u64 {
         self.up.iter().map(|l| l.bytes).sum()
     }
 
+    /// Total delivered downlink messages across all workers.
     pub fn total_down_messages(&self) -> u64 {
         self.down.iter().map(|l| l.messages).sum()
     }
 
+    /// Uplink messages lost to failure injection.
     pub fn dropped(&self) -> u64 {
         self.dropped
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Discrete-event queue (virtual clock)
+// ---------------------------------------------------------------------------
+
+/// Priority key of one queued event.
+///
+/// Events are processed in ascending `(time_us, rank, worker, seq)`
+/// order.  `rank` lets a simulation phase deliveries at the *same*
+/// virtual instant deterministically (e.g. the async engine delivers
+/// broadcasts before compute completions before uplink arrivals), and
+/// `seq` is a push-order tiebreaker so the order is total — no f64
+/// comparison ever decides between two otherwise-equal events.
+#[derive(Clone, Copy, Debug)]
+pub struct EventKey {
+    /// virtual time of the event (µs)
+    pub time_us: f64,
+    /// same-instant phase: lower ranks are delivered first
+    pub rank: u8,
+    /// worker id the event concerns (same-instant, same-rank order)
+    pub worker: usize,
+    /// push-order sequence number (final tiebreaker)
+    seq: u64,
+}
+
+impl EventKey {
+    fn cmp_key(&self, other: &Self) -> std::cmp::Ordering {
+        self.time_us
+            .total_cmp(&other.time_us)
+            .then(self.rank.cmp(&other.rank))
+            .then(self.worker.cmp(&other.worker))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct Entry<T> {
+    key: EventKey,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key.cmp_key(&other.key) == std::cmp::Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the earliest key
+        other.key.cmp_key(&self.key)
+    }
+}
+
+/// Deterministic discrete-event queue over a virtual clock.
+///
+/// The substrate of the asynchronous engine: push events at future
+/// virtual times, pop them in deterministic `(time, rank, worker,
+/// push-order)` order.  Time never flows backwards — `pop` asserts
+/// monotonicity in debug builds.
+///
+/// ```
+/// use chb_fed::net::EventQueue;
+/// let mut q = EventQueue::new();
+/// q.push(2.0, 0, 7, "late");
+/// q.push(1.0, 1, 0, "early-low-priority");
+/// q.push(1.0, 0, 3, "early");
+/// assert_eq!(q.pop().unwrap().1, "early");
+/// assert_eq!(q.pop().unwrap().1, "early-low-priority");
+/// assert_eq!(q.pop().unwrap().1, "late");
+/// assert!(q.pop().is_none());
+/// ```
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    last_popped_us: f64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    /// Empty queue at virtual time 0.
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, last_popped_us: 0.0 }
+    }
+
+    /// Schedule `payload` at virtual time `time_us` with phase `rank`
+    /// for `worker`.  Times must be finite and non-negative.
+    pub fn push(&mut self, time_us: f64, rank: u8, worker: usize, payload: T) {
+        assert!(
+            time_us.is_finite() && time_us >= 0.0,
+            "event time must be finite and ≥ 0, got {time_us}"
+        );
+        let key = EventKey { time_us, rank, worker, seq: self.seq };
+        self.seq += 1;
+        self.heap.push(Entry { key, payload });
+    }
+
+    /// Remove and return the earliest event.
+    pub fn pop(&mut self) -> Option<(EventKey, T)> {
+        let e = self.heap.pop()?;
+        debug_assert!(
+            e.key.time_us >= self.last_popped_us,
+            "virtual clock went backwards"
+        );
+        self.last_popped_us = e.key.time_us;
+        Some((e.key, e.payload))
+    }
+
+    /// Key of the earliest event without removing it.
+    pub fn peek(&self) -> Option<&EventKey> {
+        self.heap.peek().map(|e| &e.key)
+    }
+
+    /// Number of queued events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain the queue, yielding remaining events in order (used by
+    /// the async engine to account for in-flight messages at exit).
+    pub fn drain_ordered(&mut self) -> Vec<(EventKey, T)> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        out
     }
 }
 
@@ -187,5 +371,52 @@ mod tests {
     fn latency_model_scales_with_bytes() {
         let l = LatencyModel { fixed_us: 1.0, per_kib_us: 2.0 };
         assert!((l.transfer_us(2048) - 5.0).abs() < 1e-12);
+        assert_eq!(LatencyModel::zero().transfer_us(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_rank_worker_seq() {
+        let mut q = EventQueue::new();
+        q.push(5.0, 0, 0, "t5");
+        q.push(1.0, 2, 9, "t1-rank2");
+        q.push(1.0, 0, 4, "t1-rank0-w4");
+        q.push(1.0, 0, 2, "t1-rank0-w2");
+        q.push(1.0, 0, 2, "t1-rank0-w2-later");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop())
+            .map(|(_, p)| p)
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                "t1-rank0-w2",
+                "t1-rank0-w2-later",
+                "t1-rank0-w4",
+                "t1-rank2",
+                "t5"
+            ]
+        );
+    }
+
+    #[test]
+    fn event_queue_peek_and_drain() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(3.0, 1, 0, 30);
+        q.push(2.0, 0, 1, 20);
+        assert_eq!(q.len(), 2);
+        let k = q.peek().unwrap();
+        assert_eq!((k.time_us, k.rank, k.worker), (2.0, 0, 1));
+        let drained = q.drain_ordered();
+        assert_eq!(
+            drained.iter().map(|(_, p)| *p).collect::<Vec<_>>(),
+            vec![20, 30]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn event_queue_rejects_nan_times() {
+        EventQueue::new().push(f64::NAN, 0, 0, ());
     }
 }

@@ -17,7 +17,9 @@
 /// Verdict for one worker at one iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CensorDecision {
+    /// upload δ∇_m^k this round
     Transmit,
+    /// stay silent; the server carries the stale term (eq. 5)
     Skip,
 }
 
@@ -26,7 +28,18 @@ pub enum CensorDecision {
 /// Inputs are the *squared norms* so engines can reuse the values for
 /// metrics without recomputation; `k` lets rules warm up (everyone
 /// transmits at k = 1 where θ⁰ = θ¹ makes the RHS zero anyway).
+///
+/// ```
+/// use chb_fed::optim::{CensorDecision, CensorRule, GradDiffCensor};
+///
+/// // the paper's rule (8): skip iff ‖δ∇‖² ≤ ε₁‖θᵏ − θ^{k−1}‖²
+/// let rule = GradDiffCensor { epsilon1: 0.5 };
+/// assert_eq!(rule.decide(1.0, 4.0, 3), CensorDecision::Skip);
+/// assert_eq!(rule.decide(3.0, 4.0, 3), CensorDecision::Transmit);
+/// ```
 pub trait CensorRule: Send + Sync {
+    /// Verdict for ‖δ∇_m^k‖² = `delta_grad_sq` against the broadcast
+    /// scale ‖θᵏ − θ^{k−1}‖² = `theta_step_sq` at iteration `k`.
     fn decide(
         &self,
         delta_grad_sq: f64,
@@ -34,6 +47,7 @@ pub trait CensorRule: Send + Sync {
         k: usize,
     ) -> CensorDecision;
 
+    /// Short label for logs and trace CSVs.
     fn name(&self) -> &'static str;
 }
 
@@ -52,6 +66,7 @@ impl CensorRule for NeverCensor {
 
 /// The paper's rule (eq. 8) with threshold ε₁.
 pub struct GradDiffCensor {
+    /// censor threshold ε₁ (paper standard: [`epsilon1_scaled`])
     pub epsilon1: f64,
 }
 
@@ -78,6 +93,7 @@ impl CensorRule for GradDiffCensor {
 /// Demonstrates why the paper's *relative* rule is the right one: a
 /// fixed τ either censors nothing early or everything late.
 pub struct AbsoluteCensor {
+    /// absolute squared-norm threshold τ
     pub tau: f64,
 }
 
@@ -98,6 +114,7 @@ impl CensorRule for AbsoluteCensor {
 /// Ablation: transmit at most every `period` iterations regardless of
 /// information content (round-robin style baseline).
 pub struct PeriodicCensor {
+    /// transmit whenever k is a multiple of this period
     pub period: usize,
 }
 
@@ -133,8 +150,11 @@ pub fn epsilon1_scaled(c: f64, alpha: f64, m_workers: usize) -> f64 {
 /// across workers without threading k through extra state — the rule
 /// is a pure function of the iteration index.
 pub struct AdaptiveCensor {
+    /// threshold at k = 0 (aggressive censoring)
     pub eps_hi: f64,
+    /// threshold at k ≥ `horizon` (conservative censoring)
     pub eps_lo: f64,
+    /// iterations over which the threshold anneals hi → lo
     pub horizon: usize,
 }
 
@@ -166,6 +186,73 @@ impl CensorRule for AdaptiveCensor {
 
     fn name(&self) -> &'static str {
         "adaptive"
+    }
+}
+
+/// Staleness-bounded wrapper: apply `inner`, but force a transmit once
+/// a worker has censored `max_skips` rounds in a row — the LAG-style
+/// "communicate at least every D rounds" bound that keeps every
+/// worker's contribution to the eq. (5) aggregate boundedly stale.
+/// The async engine builds one per worker when `--max-staleness` is
+/// set; with `max_skips = 0` censoring is disabled entirely.
+///
+/// The consecutive-skip counter is interior state, so **one instance
+/// serves exactly one worker** — sharing one instance across workers
+/// (e.g. as the single `RoundInput.censor` Arc of the sync engines)
+/// is a contract violation: the workers would pool one counter and
+/// the bound would fire once per ~S decisions *globally* instead of
+/// per worker.  The counter's read-modify-write is a single atomic
+/// `fetch_add`, so even misuse never loses updates, but the only
+/// supported pattern is per-worker instances (what the async engine
+/// builds).
+pub struct StalenessBoundedCensor {
+    inner: std::sync::Arc<dyn CensorRule>,
+    max_skips: usize,
+    skips: std::sync::atomic::AtomicUsize,
+}
+
+impl StalenessBoundedCensor {
+    /// Wrap `inner`, allowing at most `max_skips` consecutive skips.
+    pub fn new(
+        inner: std::sync::Arc<dyn CensorRule>,
+        max_skips: usize,
+    ) -> Self {
+        Self {
+            inner,
+            max_skips,
+            skips: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+}
+
+impl CensorRule for StalenessBoundedCensor {
+    fn decide(
+        &self,
+        delta_grad_sq: f64,
+        theta_step_sq: f64,
+        k: usize,
+    ) -> CensorDecision {
+        use std::sync::atomic::Ordering;
+        if self.inner.decide(delta_grad_sq, theta_step_sq, k)
+            == CensorDecision::Transmit
+        {
+            self.skips.store(0, Ordering::Relaxed);
+            return CensorDecision::Transmit;
+        }
+        // single atomic RMW: no update is ever lost, even if misused
+        // concurrently
+        let pending = self.skips.fetch_add(1, Ordering::Relaxed);
+        if pending >= self.max_skips {
+            // silence budget exhausted: forced refresh
+            self.skips.store(0, Ordering::Relaxed);
+            CensorDecision::Transmit
+        } else {
+            CensorDecision::Skip
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "staleness-bounded"
     }
 }
 
@@ -227,6 +314,44 @@ mod tests {
         // decisions follow the instantaneous threshold
         assert_eq!(a.decide(50.0, 1.0, 0), CensorDecision::Skip);
         assert_eq!(a.decide(50.0, 1.0, 10), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn staleness_bound_forces_transmit_after_max_skips() {
+        // inner rule that always censors
+        let always_skip = std::sync::Arc::new(AbsoluteCensor { tau: f64::MAX });
+        let r = StalenessBoundedCensor::new(always_skip, 2);
+        let d = |k| r.decide(1.0, 1.0, k);
+        // skip, skip, forced transmit, then the budget resets
+        assert_eq!(d(1), CensorDecision::Skip);
+        assert_eq!(d(2), CensorDecision::Skip);
+        assert_eq!(d(3), CensorDecision::Transmit);
+        assert_eq!(d(4), CensorDecision::Skip);
+        assert_eq!(d(5), CensorDecision::Skip);
+        assert_eq!(d(6), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn staleness_bound_zero_disables_censoring() {
+        let inner = std::sync::Arc::new(GradDiffCensor { epsilon1: 1e12 });
+        let r = StalenessBoundedCensor::new(inner, 0);
+        for k in 1..=5 {
+            assert_eq!(r.decide(0.5, 1.0, k), CensorDecision::Transmit);
+        }
+    }
+
+    #[test]
+    fn staleness_bound_resets_on_voluntary_transmit() {
+        let inner = std::sync::Arc::new(AbsoluteCensor { tau: 1.0 });
+        let r = StalenessBoundedCensor::new(inner, 3);
+        assert_eq!(r.decide(0.5, 0.0, 1), CensorDecision::Skip);
+        // inner says transmit → counter resets
+        assert_eq!(r.decide(2.0, 0.0, 2), CensorDecision::Transmit);
+        // full budget of 3 skips available again
+        assert_eq!(r.decide(0.5, 0.0, 3), CensorDecision::Skip);
+        assert_eq!(r.decide(0.5, 0.0, 4), CensorDecision::Skip);
+        assert_eq!(r.decide(0.5, 0.0, 5), CensorDecision::Skip);
+        assert_eq!(r.decide(0.5, 0.0, 6), CensorDecision::Transmit);
     }
 
     #[test]

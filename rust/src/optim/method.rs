@@ -21,8 +21,10 @@ pub enum Method {
 }
 
 impl Method {
+    /// The four methods in the paper's table order (CHB, HB, LAG, GD).
     pub const ALL: [Method; 4] = [Method::Chb, Method::Hb, Method::Lag, Method::Gd];
 
+    /// Paper-style label ("CHB", "HB", "LAG", "GD").
     pub fn name(self) -> &'static str {
         match self {
             Method::Gd => "GD",
@@ -32,6 +34,7 @@ impl Method {
         }
     }
 
+    /// Parse a CLI method name (case-insensitive; "lag-wk" = "lag").
     pub fn parse(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().as_str() {
             "gd" => Some(Method::Gd),
@@ -42,10 +45,12 @@ impl Method {
         }
     }
 
+    /// Does the server update carry a β(θᵏ − θ^{k−1}) term?
     pub fn uses_momentum(self) -> bool {
         matches!(self, Method::Hb | Method::Chb)
     }
 
+    /// Do workers apply the skip-transmission rule (8)?
     pub fn uses_censoring(self) -> bool {
         matches!(self, Method::Lag | Method::Chb)
     }
@@ -63,15 +68,18 @@ pub struct MethodParams {
 }
 
 impl MethodParams {
+    /// Step size `alpha` with the paper's defaults (β = 0.4, ε₁ = 0).
     pub fn new(alpha: f64) -> Self {
         Self { alpha, beta: 0.4, epsilon1: 0.0 }
     }
 
+    /// Replace the momentum coefficient (builder form).
     pub fn with_beta(mut self, beta: f64) -> Self {
         self.beta = beta;
         self
     }
 
+    /// Set a raw censor threshold ε₁ (builder form).
     pub fn with_epsilon1(mut self, epsilon1: f64) -> Self {
         self.epsilon1 = epsilon1;
         self

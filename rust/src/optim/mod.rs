@@ -20,6 +20,7 @@ pub mod nesterov;
 
 pub use censor::{
     AdaptiveCensor, CensorDecision, CensorRule, GradDiffCensor, NeverCensor,
+    StalenessBoundedCensor,
 };
 pub use method::{Method, MethodParams};
 pub use nesterov::NesterovRule;
@@ -35,11 +36,13 @@ pub trait ServerRule: Send {
     /// θ^k on exit (the rule handles the rotation).
     fn step(&mut self, theta: &mut [f64], theta_prev: &mut [f64], agg_grad: &[f64]);
 
+    /// Short label for logs and trace CSVs.
     fn name(&self) -> &'static str;
 }
 
 /// Plain gradient descent: θ ← θ − α∇.
 pub struct GdRule {
+    /// step size α
     pub alpha: f64,
 }
 
@@ -56,13 +59,16 @@ impl ServerRule for GdRule {
 
 /// Heavy ball: θ ← θ − α∇ + β(θ − θ⁻)   (paper eq. 2 / 4).
 pub struct HeavyBallRule {
+    /// step size α
     pub alpha: f64,
+    /// momentum coefficient β
     pub beta: f64,
     /// scratch for the momentum term (steady-state: no allocation)
     momentum: Vec<f64>,
 }
 
 impl HeavyBallRule {
+    /// Rule for a `dim`-dimensional iterate with step α, momentum β.
     pub fn new(alpha: f64, beta: f64, dim: usize) -> Self {
         Self { alpha, beta, momentum: vec![0.0; dim] }
     }

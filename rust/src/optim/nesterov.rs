@@ -20,7 +20,9 @@ use super::ServerRule;
 /// Server-side Nesterov accelerated gradient (gradient-correction
 /// form).
 pub struct NesterovRule {
+    /// step size α
     pub alpha: f64,
+    /// momentum coefficient β
     pub beta: f64,
     momentum: Vec<f64>,
     prev_agg: Vec<f64>,
@@ -28,6 +30,7 @@ pub struct NesterovRule {
 }
 
 impl NesterovRule {
+    /// Rule for a `dim`-dimensional iterate with step α, momentum β.
     pub fn new(alpha: f64, beta: f64, dim: usize) -> Self {
         Self {
             alpha,

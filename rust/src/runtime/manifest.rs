@@ -10,29 +10,40 @@ use crate::util::json::Json;
 /// One lowered artifact's metadata.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// artifact key ("linreg_synth", …)
     pub name: String,
+    /// the task this artifact computes
     pub task: TaskKind,
+    /// dataset the shapes were lowered for
     pub dataset: String,
+    /// path to the HLO text file
     pub file: PathBuf,
+    /// total sample count across workers
     pub n_total: usize,
+    /// worker count M the shapes assume
     pub workers: usize,
     /// padded per-worker rows (every worker shares this shape)
     pub n_pad: usize,
+    /// feature count
     pub d: usize,
+    /// flat parameter dimension
     pub theta_dim: usize,
     /// ordered argument names: theta, x, y[, mask][, lam]
     pub arg_names: Vec<String>,
 }
 
 impl ArtifactMeta {
+    /// Does the lowered program take a padding mask argument?
     pub fn needs_mask(&self) -> bool {
         self.arg_names.iter().any(|a| a == "mask")
     }
 
+    /// Does the lowered program take a λ argument?
     pub fn needs_lam(&self) -> bool {
         self.arg_names.iter().any(|a| a == "lam")
     }
 
+    /// Does the lowered program take a data-term scale argument?
     pub fn needs_wscale(&self) -> bool {
         self.arg_names.iter().any(|a| a == "wscale")
     }
@@ -41,13 +52,18 @@ impl ArtifactMeta {
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// kernel row-tile the shapes were padded to
     pub block_n: usize,
+    /// NN hidden width the nn artifacts assume
     pub hidden: usize,
+    /// every lowered artifact
     pub artifacts: Vec<ArtifactMeta>,
+    /// directory the manifest was loaded from
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -8,176 +8,273 @@
 //! Per-worker constants (X, y, mask, λ) are uploaded to device
 //! buffers once at construction; only θ moves per iteration, and the
 //! hot call is `execute_b` over pre-staged buffers.
+//!
+//! ## Feature gating
+//!
+//! The real implementation needs the external `xla` crate, which only
+//! exists on images built with the xla_extension toolchain.  The
+//! default build is hermetic: it compiles a stub whose constructor
+//! returns an error, so every caller (CLI `--backend pjrt`, the
+//! backends bench, the round-trip tests) degrades gracefully at
+//! runtime instead of breaking the build.  Enable the `pjrt` cargo
+//! feature **and** add the `xla` dependency on images that ship it to
+//! get the real backend.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
+    use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+    use anyhow::{bail, Context, Result};
 
-use crate::coordinator::GradientBackend;
-use crate::data::Shard;
+    use crate::coordinator::GradientBackend;
+    use crate::data::Shard;
 
-use super::manifest::{ArtifactMeta, Manifest};
+    use super::super::manifest::{ArtifactMeta, Manifest};
 
-/// Shared PJRT client + compiled-executable cache.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    /// compile once per artifact, share across the M workers
-    cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+    /// Shared PJRT client + compiled-executable cache.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        /// compile once per artifact, share across the M workers
+        cache: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+    }
+
+    impl PjrtRuntime {
+        /// CPU client over the artifacts directory.
+        pub fn new(artifact_dir: &std::path::Path) -> Result<Self> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+            Ok(Self { client, manifest, cache: HashMap::new() })
+        }
+
+        /// The parsed artifacts manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name ("Host" for the CPU client).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) the executable for an artifact.
+        pub fn executable(
+            &mut self,
+            meta: &ArtifactMeta,
+        ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.get(&meta.name) {
+                return Ok(Arc::clone(exe));
+            }
+            let path = meta
+                .file
+                .to_str()
+                .context("artifact path is not valid UTF-8")?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", meta.name))?;
+            let exe = Arc::new(exe);
+            self.cache.insert(meta.name.clone(), Arc::clone(&exe));
+            Ok(exe)
+        }
+
+        /// Build one worker's backend for (artifact, shard, λ).
+        pub fn worker_backend(
+            &mut self,
+            meta: &ArtifactMeta,
+            shard: &Shard,
+            lam: f64,
+        ) -> Result<PjrtBackend> {
+            if shard.x.rows != meta.n_pad || shard.x.cols != meta.d {
+                bail!(
+                    "shard shape {}x{} does not match artifact {} ({}x{})",
+                    shard.x.rows,
+                    shard.x.cols,
+                    meta.name,
+                    meta.n_pad,
+                    meta.d
+                );
+            }
+            let exe = self.executable(meta)?;
+            // stage the per-worker constants on device, f32
+            let xf: Vec<f32> = shard.x.data.iter().map(|&v| v as f32).collect();
+            let yf: Vec<f32> = shard.y.iter().map(|&v| v as f32).collect();
+            let mut args = Vec::new();
+            args.push(
+                self.client
+                    .buffer_from_host_buffer(&xf, &[meta.n_pad, meta.d], None)?,
+            );
+            args.push(
+                self.client.buffer_from_host_buffer(&yf, &[meta.n_pad], None)?,
+            );
+            if meta.needs_mask() {
+                let mf: Vec<f32> =
+                    shard.mask.iter().map(|&v| v as f32).collect();
+                args.push(
+                    self.client
+                        .buffer_from_host_buffer(&mf, &[meta.n_pad], None)?,
+                );
+            }
+            if meta.needs_lam() {
+                let lf = [lam as f32];
+                args.push(self.client.buffer_from_host_buffer(&lf, &[1], None)?);
+            }
+            if meta.needs_wscale() {
+                // mean-loss data-term scale, matching tasks::NnTask::new
+                let ws = [1.0f32 / shard.n_real.max(1) as f32];
+                args.push(self.client.buffer_from_host_buffer(&ws, &[1], None)?);
+            }
+            Ok(PjrtBackend {
+                client: self.client.clone(),
+                exe,
+                const_args: args,
+                theta_dim: meta.theta_dim,
+                theta_f32: vec![0.0; meta.theta_dim],
+                grad_f32: vec![0.0; meta.theta_dim],
+            })
+        }
+    }
+
+    /// GradientBackend that executes the AOT artifact through PJRT.
+    pub struct PjrtBackend {
+        client: xla::PjRtClient,
+        exe: Arc<xla::PjRtLoadedExecutable>,
+        /// staged device buffers: x, y [, mask][, lam]
+        const_args: Vec<xla::PjRtBuffer>,
+        theta_dim: usize,
+        /// reusable f32 staging buffers (hot path: no reallocation)
+        theta_f32: Vec<f32>,
+        grad_f32: Vec<f32>,
+    }
+
+    // SAFETY: the PJRT CPU client is thread-safe for buffer upload and
+    // execution; the xla crate just doesn't mark its pointer wrappers
+    // Send.  Each backend is owned by exactly one worker (possibly on
+    // its own thread); the shared executable is immutable after
+    // compile.
+    unsafe impl Send for PjrtBackend {}
+
+    impl PjrtBackend {
+        fn run(&mut self, theta: &[f64]) -> Result<f64> {
+            for (dst, &src) in self.theta_f32.iter_mut().zip(theta) {
+                *dst = src as f32;
+            }
+            let theta_buf = self.client.buffer_from_host_buffer(
+                &self.theta_f32,
+                &[self.theta_dim],
+                None,
+            )?;
+            // argument order: theta, x, y[, mask][, lam] (aot.py)
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(5);
+            args.push(&theta_buf);
+            args.extend(self.const_args.iter());
+            let result = self.exe.execute_b(&args)?;
+            let replica = &result[0];
+            // aot.py lowers with return_tuple=True: one tuple output of
+            // (grad, loss); some PJRT versions untuple into two buffers.
+            let (grad_lit, loss_lit) = if replica.len() == 2 {
+                (replica[0].to_literal_sync()?, replica[1].to_literal_sync()?)
+            } else {
+                let tup = replica[0].to_literal_sync()?;
+                let (g, l) = tup.to_tuple2()?;
+                (g, l)
+            };
+            grad_lit.copy_raw_to(&mut self.grad_f32)?;
+            let mut loss = [0f32];
+            loss_lit.copy_raw_to(&mut loss)?;
+            Ok(loss[0] as f64)
+        }
+    }
+
+    impl GradientBackend for PjrtBackend {
+        fn dim(&self) -> usize {
+            self.theta_dim
+        }
+
+        fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+            let loss = self
+                .run(theta)
+                .expect("PJRT execution failed on the hot path");
+            for (dst, &src) in grad.iter_mut().zip(self.grad_f32.iter()) {
+                *dst = src as f64;
+            }
+            loss
+        }
+    }
 }
 
-impl PjrtRuntime {
-    /// CPU client over the artifacts directory.
-    pub fn new(artifact_dir: &std::path::Path) -> Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
-        Ok(Self { client, manifest, cache: HashMap::new() })
+#[cfg(feature = "pjrt")]
+pub use real::{PjrtBackend, PjrtRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use anyhow::{bail, Result};
+
+    use crate::coordinator::GradientBackend;
+    use crate::data::Shard;
+
+    use super::super::manifest::{ArtifactMeta, Manifest};
+
+    /// Hermetic-build stand-in: construction always fails with a
+    /// pointer at the `pjrt` feature, so `--backend pjrt` degrades to
+    /// a clear runtime error instead of a broken build.
+    pub struct PjrtRuntime {
+        manifest: Manifest,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the executable for an artifact.
-    pub fn executable(
-        &mut self,
-        meta: &ArtifactMeta,
-    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.get(&meta.name) {
-            return Ok(Arc::clone(exe));
-        }
-        let path = meta
-            .file
-            .to_str()
-            .context("artifact path is not valid UTF-8")?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", meta.name))?;
-        let exe = Arc::new(exe);
-        self.cache.insert(meta.name.clone(), Arc::clone(&exe));
-        Ok(exe)
-    }
-
-    /// Build one worker's backend for (artifact, shard, λ).
-    pub fn worker_backend(
-        &mut self,
-        meta: &ArtifactMeta,
-        shard: &Shard,
-        lam: f64,
-    ) -> Result<PjrtBackend> {
-        if shard.x.rows != meta.n_pad || shard.x.cols != meta.d {
+    impl PjrtRuntime {
+        /// Always errors: this build has no PJRT support.
+        pub fn new(artifact_dir: &std::path::Path) -> Result<Self> {
             bail!(
-                "shard shape {}x{} does not match artifact {} ({}x{})",
-                shard.x.rows,
-                shard.x.cols,
-                meta.name,
-                meta.n_pad,
-                meta.d
+                "built without PJRT support (artifacts at {} ignored): \
+                 on an xla_extension image, add `xla` to \
+                 [dependencies] in rust/Cargo.toml and rebuild with \
+                 `--features pjrt`",
+                artifact_dir.display()
             );
         }
-        let exe = self.executable(meta)?;
-        // stage the per-worker constants on device, f32
-        let xf: Vec<f32> = shard.x.data.iter().map(|&v| v as f32).collect();
-        let yf: Vec<f32> = shard.y.iter().map(|&v| v as f32).collect();
-        let mut args = Vec::new();
-        args.push(
-            self.client
-                .buffer_from_host_buffer(&xf, &[meta.n_pad, meta.d], None)?,
-        );
-        args.push(self.client.buffer_from_host_buffer(&yf, &[meta.n_pad], None)?);
-        if meta.needs_mask() {
-            let mf: Vec<f32> = shard.mask.iter().map(|&v| v as f32).collect();
-            args.push(self.client.buffer_from_host_buffer(&mf, &[meta.n_pad], None)?);
+
+        /// The parsed artifacts manifest (unreachable: `new` errors).
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        if meta.needs_lam() {
-            let lf = [lam as f32];
-            args.push(self.client.buffer_from_host_buffer(&lf, &[1], None)?);
+
+        /// PJRT platform name (unreachable: `new` errors).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
         }
-        if meta.needs_wscale() {
-            // mean-loss data-term scale, matching tasks::NnTask::new
-            let ws = [1.0f32 / shard.n_real.max(1) as f32];
-            args.push(self.client.buffer_from_host_buffer(&ws, &[1], None)?);
+
+        /// Build one worker's backend (unreachable: `new` errors).
+        pub fn worker_backend(
+            &mut self,
+            _meta: &ArtifactMeta,
+            _shard: &Shard,
+            _lam: f64,
+        ) -> Result<PjrtBackend> {
+            bail!("built without PJRT support")
         }
-        Ok(PjrtBackend {
-            client: self.client.clone(),
-            exe,
-            const_args: args,
-            theta_dim: meta.theta_dim,
-            theta_f32: vec![0.0; meta.theta_dim],
-            grad_f32: vec![0.0; meta.theta_dim],
-        })
+    }
+
+    /// Uninhabitable in practice: no [`PjrtRuntime`] value exists to
+    /// construct one.
+    pub struct PjrtBackend {
+        _private: (),
+    }
+
+    impl GradientBackend for PjrtBackend {
+        fn dim(&self) -> usize {
+            unreachable!("stub PjrtBackend cannot be constructed")
+        }
+
+        fn grad_loss_into(&mut self, _: &[f64], _: &mut [f64]) -> f64 {
+            unreachable!("stub PjrtBackend cannot be constructed")
+        }
     }
 }
 
-/// GradientBackend that executes the AOT artifact through PJRT.
-pub struct PjrtBackend {
-    client: xla::PjRtClient,
-    exe: Arc<xla::PjRtLoadedExecutable>,
-    /// staged device buffers: x, y [, mask][, lam]
-    const_args: Vec<xla::PjRtBuffer>,
-    theta_dim: usize,
-    /// reusable f32 staging buffers (hot path: no reallocation)
-    theta_f32: Vec<f32>,
-    grad_f32: Vec<f32>,
-}
-
-// SAFETY: the PJRT CPU client is thread-safe for buffer upload and
-// execution; the xla crate just doesn't mark its pointer wrappers
-// Send.  Each backend is owned by exactly one worker (possibly on its
-// own thread); the shared executable is immutable after compile.
-unsafe impl Send for PjrtBackend {}
-
-impl PjrtBackend {
-    fn run(&mut self, theta: &[f64]) -> Result<f64> {
-        for (dst, &src) in self.theta_f32.iter_mut().zip(theta) {
-            *dst = src as f32;
-        }
-        let theta_buf = self
-            .client
-            .buffer_from_host_buffer(&self.theta_f32, &[self.theta_dim], None)?;
-        // argument order: theta, x, y[, mask][, lam] (aot.py)
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(5);
-        args.push(&theta_buf);
-        args.extend(self.const_args.iter());
-        let result = self.exe.execute_b(&args)?;
-        let replica = &result[0];
-        // aot.py lowers with return_tuple=True: one tuple output of
-        // (grad, loss); some PJRT versions untuple into two buffers.
-        let (grad_lit, loss_lit) = if replica.len() == 2 {
-            (replica[0].to_literal_sync()?, replica[1].to_literal_sync()?)
-        } else {
-            let tup = replica[0].to_literal_sync()?;
-            let (g, l) = tup.to_tuple2()?;
-            (g, l)
-        };
-        grad_lit.copy_raw_to(&mut self.grad_f32)?;
-        let mut loss = [0f32];
-        loss_lit.copy_raw_to(&mut loss)?;
-        Ok(loss[0] as f64)
-    }
-}
-
-impl GradientBackend for PjrtBackend {
-    fn dim(&self) -> usize {
-        self.theta_dim
-    }
-
-    fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
-        let loss = self
-            .run(theta)
-            .expect("PJRT execution failed on the hot path");
-        for (dst, &src) in grad.iter_mut().zip(self.grad_f32.iter()) {
-            *dst = src as f64;
-        }
-        loss
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtBackend, PjrtRuntime};

@@ -20,13 +20,18 @@ pub use nn::NnTask;
 /// Which of the paper's four learning tasks is being solved.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TaskKind {
+    /// linear regression ½‖Xθ − y‖²
     LinReg,
+    /// ℓ2-regularized logistic regression
     LogReg,
+    /// lasso (ℓ1-regularized least squares, subgradient)
     Lasso,
+    /// 1×30-sigmoid neural network (nonconvex)
     Nn,
 }
 
 impl TaskKind {
+    /// CLI name ("linreg", "logreg", "lasso", "nn").
     pub fn name(self) -> &'static str {
         match self {
             TaskKind::LinReg => "linreg",
@@ -36,6 +41,7 @@ impl TaskKind {
         }
     }
 
+    /// Parse a CLI task name.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "linreg" => Some(TaskKind::LinReg),
@@ -59,7 +65,9 @@ impl TaskKind {
 ///
 /// `grad_loss_into` writes ∇f_m(θ) into `grad` and returns f_m(θ).
 pub trait WorkerObjective: Send {
+    /// Parameter dimension d.
     fn dim(&self) -> usize;
+    /// Write ∇f_m(θ) into `grad`, return f_m(θ).
     fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64;
 
     /// Objective value only (defaults to computing the gradient too;
@@ -107,6 +115,7 @@ pub struct LinRegTask {
 }
 
 impl LinRegTask {
+    /// Objective over one worker's shard.
     pub fn new(shard: &Shard) -> Self {
         Self {
             x: shard.x.clone(),
@@ -146,6 +155,7 @@ pub struct LogRegTask {
 }
 
 impl LogRegTask {
+    /// Objective over one worker's shard with per-worker λ_m = `lam`.
     pub fn new(shard: &Shard, lam: f64) -> Self {
         Self {
             x: shard.x.clone(),
@@ -202,6 +212,7 @@ pub struct LassoTask {
 }
 
 impl LassoTask {
+    /// Objective over one worker's shard with per-worker λ_m = `lam`.
     pub fn new(shard: &Shard, lam: f64) -> Self {
         Self { inner: LinRegTask::new(shard), lam }
     }

@@ -24,12 +24,17 @@ pub fn param_dim(d: usize, h: usize) -> usize {
 
 /// View into the flat parameter vector.
 pub struct Packed<'a> {
-    pub w1: &'a [f64], // (d*h) row-major
+    /// hidden-layer weights, (d × h) row-major
+    pub w1: &'a [f64],
+    /// hidden-layer biases (h)
     pub b1: &'a [f64],
+    /// output weights (h)
     pub w2: &'a [f64],
+    /// output bias
     pub b2: f64,
 }
 
+/// Split a flat θ into the (W1, b1, w2, b2) views.
 pub fn unpack(theta: &[f64], d: usize, h: usize) -> Packed<'_> {
     assert_eq!(theta.len(), param_dim(d, h));
     let (w1, rest) = theta.split_at(d * h);
@@ -58,6 +63,7 @@ pub struct NnTask {
 }
 
 impl NnTask {
+    /// Mean-loss NN objective (the paper's regime) over one shard.
     pub fn new(shard: &Shard, lam: f64, h: usize) -> Self {
         Self::with_scale(shard, lam, h, 1.0 / shard.n_real.max(1) as f64)
     }
@@ -80,10 +86,12 @@ impl NnTask {
         }
     }
 
+    /// Hidden-layer width h.
     pub fn hidden(&self) -> usize {
         self.h
     }
 
+    /// Data-term multiplier (1/N_m in the mean-loss regime).
     pub fn wscale(&self) -> f64 {
         self.wscale
     }

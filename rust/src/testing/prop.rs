@@ -26,10 +26,12 @@ pub struct Gen {
     rng: Xoshiro256,
     /// size multiplier in (0, 1]; shrinking lowers it
     size: f64,
+    /// the case's seed (reported on failure for reproduction)
     pub seed: u64,
 }
 
 impl Gen {
+    /// Full-size generator for one case.
     pub fn new(seed: u64) -> Self {
         Self { rng: Xoshiro256::new(seed), size: 1.0, seed }
     }
@@ -38,6 +40,7 @@ impl Gen {
         Self { rng: Xoshiro256::new(seed), size, seed }
     }
 
+    /// Uniform integer in `range` (upper end shrinks toward the lower).
     pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
         let (lo, hi) = (*range.start(), *range.end());
         // shrinking pulls the upper end toward lo
@@ -45,27 +48,33 @@ impl Gen {
         lo + self.rng.next_below(span as u64 + 1) as usize
     }
 
+    /// Uniform f64 in [lo, hi) (span shrinks toward lo).
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + (hi - lo) * self.rng.next_f64() * self.size
             + if self.size < 1.0 { 0.0 } else { 0.0 }
     }
 
+    /// Uniform f64 in (−mag, mag), magnitude shrinking with size.
     pub fn f64_signed(&mut self, mag: f64) -> f64 {
         (2.0 * self.rng.next_f64() - 1.0) * mag * self.size
     }
 
+    /// Fair coin.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 0
     }
 
+    /// Standard normal draw.
     pub fn gaussian(&mut self) -> f64 {
         self.rng.next_gaussian()
     }
 
+    /// Vector of `len` draws from [`Gen::f64_signed`].
     pub fn vec_f64(&mut self, len: usize, mag: f64) -> Vec<f64> {
         (0..len).map(|_| self.f64_signed(mag)).collect()
     }
 
+    /// Uniformly pick one element of `xs`.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.next_below(xs.len() as u64) as usize]
     }

@@ -11,16 +11,22 @@
 /// σ₀, σ₁, γ of (10)–(12) for a given parameter setting.
 #[derive(Clone, Copy, Debug)]
 pub struct LemmaConstants {
+    /// σ₀ of condition (10) — must be > 0
     pub sigma0: f64,
+    /// σ₁ of condition (11) — must be > 0
     pub sigma1: f64,
+    /// γ of condition (12)
     pub gamma: f64,
 }
 
 /// A full CHB parameter choice to validate against Lemma 1.
 #[derive(Clone, Copy, Debug)]
 pub struct ParamChoice {
+    /// step size α
     pub alpha: f64,
+    /// momentum coefficient β
     pub beta: f64,
+    /// censor threshold ε₁
     pub epsilon1: f64,
     /// Lyapunov weight η₁ ≥ (1−αL)/(2α) (eq. 9 / Lemma 1 hypothesis)
     pub eta1: f64,
@@ -130,12 +136,15 @@ pub fn lemma2_bound(k: usize) -> usize {
 /// Lyapunov function 𝕃(θᵏ) = f(θᵏ) − f* + η₁‖θᵏ − θ^{k−1}‖² (eq. 9),
 /// tracked across a run to verify Lemma 1's monotone descent.
 pub struct LyapunovTracker {
+    /// Lyapunov weight η₁ on the ‖θᵏ − θ^{k−1}‖² term
     pub eta1: f64,
+    /// optimal objective value f*
     pub f_star: f64,
     values: Vec<f64>,
 }
 
 impl LyapunovTracker {
+    /// Tracker for 𝕃 with weight `eta1` against optimum `f_star`.
     pub fn new(eta1: f64, f_star: f64) -> Self {
         Self { eta1, f_star, values: Vec::new() }
     }
@@ -147,6 +156,7 @@ impl LyapunovTracker {
         v
     }
 
+    /// The recorded 𝕃(θᵏ) sequence.
     pub fn values(&self) -> &[f64] {
         &self.values
     }

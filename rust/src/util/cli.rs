@@ -11,6 +11,7 @@ use anyhow::{anyhow, bail, Context, Result};
 /// Parsed arguments.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// non-option arguments in order of appearance
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -51,18 +52,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Was the boolean flag `--name` given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of option `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Value of option `--key` with a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse option `--key` into T (None when absent, Err on bad input).
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::error::Error + Send + Sync + 'static,
@@ -75,6 +80,7 @@ impl Args {
         }
     }
 
+    /// Parse option `--key` into T with a default.
     pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
     where
         T::Err: std::error::Error + Send + Sync + 'static,

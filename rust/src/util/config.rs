@@ -13,9 +13,13 @@ use anyhow::{bail, Context, Result};
 /// A parsed config value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// quoted string
     Str(String),
+    /// integer or float literal (stored as f64)
     Num(f64),
+    /// `true` / `false`
     Bool(bool),
+    /// inline array of quoted strings
     StrArr(Vec<String>),
 }
 
@@ -26,6 +30,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse config text (see the module docs for the subset).
     pub fn parse(text: &str) -> Result<Config> {
         let mut map = BTreeMap::new();
         let mut section = String::new();
@@ -60,16 +65,19 @@ impl Config {
         Ok(Config { map })
     }
 
+    /// Parse a config file from disk.
     pub fn load(path: &Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
         Config::parse(&text)
     }
 
+    /// Raw value at `"section.key"`.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.map.get(key)
     }
 
+    /// String value at `key` (None on absence or type mismatch).
     pub fn str(&self, key: &str) -> Option<&str> {
         match self.get(key) {
             Some(Value::Str(s)) => Some(s),
@@ -77,6 +85,7 @@ impl Config {
         }
     }
 
+    /// Numeric value at `key` (None on absence or type mismatch).
     pub fn num(&self, key: &str) -> Option<f64> {
         match self.get(key) {
             Some(Value::Num(n)) => Some(*n),
@@ -84,6 +93,7 @@ impl Config {
         }
     }
 
+    /// Boolean value at `key` (None on absence or type mismatch).
     pub fn bool(&self, key: &str) -> Option<bool> {
         match self.get(key) {
             Some(Value::Bool(b)) => Some(*b),
@@ -91,14 +101,17 @@ impl Config {
         }
     }
 
+    /// Numeric value with a default.
     pub fn num_or(&self, key: &str, default: f64) -> f64 {
         self.num(key).unwrap_or(default)
     }
 
+    /// String value with a default.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.str(key).unwrap_or(default)
     }
 
+    /// All `"section.key"` keys in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
     }

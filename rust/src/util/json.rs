@@ -9,15 +9,22 @@ use anyhow::{bail, Result};
 /// Parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number (stored as f64)
     Num(f64),
+    /// string with escapes resolved
     Str(String),
+    /// array
     Arr(Vec<Json>),
+    /// object (sorted keys)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -29,6 +36,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member at `key` (None for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -36,6 +44,7 @@ impl Json {
         }
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -43,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -50,10 +60,12 @@ impl Json {
         }
     }
 
+    /// The numeric payload truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -68,6 +80,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing string field {key:?}"))
     }
 
+    /// Convenience: `obj.usize_field("n")?` with a contextual error.
     pub fn usize_field(&self, key: &str) -> Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)

@@ -4,24 +4,34 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, most severe first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// unrecoverable problems
     Error = 0,
+    /// suspicious but non-fatal conditions
     Warn = 1,
+    /// normal progress reporting (the default threshold)
     Info = 2,
+    /// verbose diagnostics (`--verbose`)
     Debug = 3,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
+/// Set the global threshold: messages above `level` are suppressed.
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Would a message at `level` currently be printed?
 pub fn enabled(level: Level) -> bool {
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Write one message to stderr if `level` passes the threshold
+/// (prefer the [`info!`](crate::info)/[`warn_log!`](crate::warn_log)/
+/// [`debug_log!`](crate::debug_log) macros).
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
         let tag = match level {
@@ -34,6 +44,7 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at Info level with `format!` syntax.
 #[macro_export]
 macro_rules! info {
     ($($t:tt)*) => {
@@ -44,6 +55,7 @@ macro_rules! info {
     };
 }
 
+/// Log at Warn level with `format!` syntax.
 #[macro_export]
 macro_rules! warn_log {
     ($($t:tt)*) => {
@@ -54,6 +66,7 @@ macro_rules! warn_log {
     };
 }
 
+/// Log at Debug level with `format!` syntax.
 #[macro_export]
 macro_rules! debug_log {
     ($($t:tt)*) => {

@@ -11,18 +11,22 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Timer that prints "`label`: N.NNNs" when dropped.
     pub fn new(label: &str) -> Self {
         Self { label: label.to_string(), start: Instant::now(), quiet: false }
     }
 
+    /// Timer that never prints (poll `elapsed_secs` instead).
     pub fn quiet() -> Self {
         Self { label: String::new(), start: Instant::now(), quiet: true }
     }
 
+    /// Seconds since construction.
     pub fn elapsed_secs(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since construction.
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_secs() * 1e3
     }

@@ -15,6 +15,12 @@ use chb_fed::runtime::PjrtRuntime;
 use chb_fed::tasks::{self, TaskKind};
 
 fn artifact_dir() -> Option<&'static Path> {
+    if !cfg!(feature = "pjrt") {
+        // the hermetic default build stubs PjrtRuntime (its constructor
+        // always errors), so these tests can only run with the feature
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)
