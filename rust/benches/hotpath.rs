@@ -2,31 +2,54 @@
 //!
 //! Measures the per-round cost components on the two shapes that
 //! matter (d = 50 synthetic; d = 784 MNIST-class) so EXPERIMENTS.md
-//! §Perf can separate coordinator overhead from gradient compute.
+//! §Perf can separate coordinator overhead from gradient compute, and
+//! pins the two PR-level perf claims directly:
+//!
+//! * fused single-pass gradient vs the two-pass gemv + gemv_t baseline
+//!   (`linreg grad fused` / `linreg grad two-pass` rows), and
+//! * sparse O(k) server folds vs dense O(d) folds
+//!   (`server fold … sparse` / `… dense` rows).
+//!
+//! Every result also lands in `BENCH_hotpath.json` (written to the
+//! working directory — `rust/` under cargo), machine-readable so the
+//! perf trajectory is tracked PR-over-PR.  Pass `-- --smoke` for the
+//! CI-sized profile: the same bench list minus the M = 1000 scaling
+//! rows, minimal sample counts.
 
-use chb_fed::bench::{black_box, header, Bencher};
+use std::sync::Arc;
+
+use chb_fed::bench::{black_box, header, BenchResult, Bencher};
+use chb_fed::compress::{Payload, TopK};
 use chb_fed::coordinator::{run_rayon, run_serial, RunConfig, Server, Worker};
 use chb_fed::data::partition::shard_whole;
 use chb_fed::data::synthetic;
 use chb_fed::experiments::Problem;
 use chb_fed::linalg::{self, Matrix};
-use chb_fed::optim::{GradDiffCensor, Method, MethodParams};
+use chb_fed::net::{dense_delta_bits, sparse_delta_bits};
+use chb_fed::optim::{GradDiffCensor, Method, MethodParams, NeverCensor};
 use chb_fed::rng::Xoshiro256;
 use chb_fed::tasks::{build_objective, TaskKind};
 
 fn main() {
-    header("hotpath");
-    let micro = Bencher::micro();
-    let std = Bencher::default();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    header(if smoke { "hotpath (smoke)" } else { "hotpath" });
+    let micro = if smoke {
+        Bencher { warmup_iters: 2, samples: 5, iters_per_sample: 20 }
+    } else {
+        Bencher::micro()
+    };
+    let std_b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let quick = Bencher::quick();
+    let mut all: Vec<BenchResult> = Vec::new();
 
     // -- linalg primitives ------------------------------------------------
     let mut rng = Xoshiro256::new(1);
     for d in [50usize, 784] {
         let x = rng.gaussian_vec(d);
         let y = rng.gaussian_vec(d);
-        micro.run(&format!("dot d={d}"), |_| {
+        all.push(micro.run(&format!("dot d={d}"), |_| {
             black_box(linalg::dot(black_box(&x), black_box(&y)));
-        });
+        }));
     }
     for (n, d) in [(50usize, 50usize), (768, 784)] {
         let mut m = Matrix::zeros(n, d);
@@ -34,18 +57,40 @@ fn main() {
             *v = rng.next_gaussian();
         }
         let theta = rng.gaussian_vec(d);
+        let y = rng.gaussian_vec(n);
         let mut out = vec![0.0; n];
         let mut g = vec![0.0; d];
-        micro.run(&format!("gemv {n}x{d}"), |_| {
+        all.push(micro.run(&format!("gemv {n}x{d}"), |_| {
             m.gemv(black_box(&theta), &mut out);
-        });
-        micro.run(&format!("gemv_t {n}x{d}"), |_| {
+        }));
+        all.push(micro.run(&format!("gemv_t {n}x{d}"), |_| {
             m.gemv_t_into(black_box(&out), &mut g);
-        });
+        }));
+        // the PR-level claim: one row sweep instead of two.  The
+        // two-pass body is exactly what the pre-fusion gradient did —
+        // gemv, subtract y, gemv_t — streaming X twice per round.
+        all.push(micro.run(&format!("linreg grad two-pass {n}x{d}"), |_| {
+            m.gemv(black_box(&theta), &mut out);
+            for (r, yv) in out.iter_mut().zip(&y) {
+                *r -= yv;
+            }
+            m.gemv_t_into(&out, &mut g);
+            black_box(&g);
+        }));
+        all.push(micro.run(&format!("linreg grad fused {n}x{d}"), |_| {
+            g.fill(0.0);
+            black_box(m.fused_residual_grad(
+                black_box(&theta),
+                &y,
+                &mut out,
+                &mut g,
+            ));
+        }));
     }
 
     // -- worker round (gradient + censor decision) ------------------------
-    for (name, n, d) in [("synth", 50usize, 50usize), ("mnist-class", 768, 784)] {
+    for (name, n, d) in [("synth", 50usize, 50usize), ("mnist-class", 768, 784)]
+    {
         let mut r = Xoshiro256::new(7);
         let ds = synthetic::gaussian_pm1(&mut r, n, d);
         let shard = shard_whole(&ds);
@@ -56,30 +101,99 @@ fn main() {
         );
         let censor = GradDiffCensor { epsilon1: 1.0 };
         let theta = r.gaussian_vec(d);
-        std.run(&format!("worker round linreg {name}"), |k| {
+        // θ is fixed, so this row censors from round 2 on — it times
+        // gradient + censor decision (the steady-state skip round)
+        all.push(std_b.run(&format!("worker round linreg {name}"), |k| {
             black_box(worker.round(black_box(&theta), 1.0, &censor, k + 1));
-        });
+        }));
+        // dense always-transmit row: the apples-to-apples partner of
+        // the top-32 row below (gradient + dense payload + arena)
+        let obj = build_objective(TaskKind::LinReg, &shard, 0.0);
+        let mut worker = Worker::new(
+            0,
+            Box::new(chb_fed::coordinator::RustBackend::new(obj)),
+        );
+        all.push(std_b.run(
+            &format!("worker round linreg dense-tx {name}"),
+            |k| {
+                black_box(worker.round(
+                    black_box(&theta),
+                    1.0,
+                    &NeverCensor,
+                    k + 1,
+                ));
+            },
+        ));
+        // same round through the sparse top-k uplink: compress_into
+        // writes into the worker's arena, no per-round allocation.
+        // NeverCensor, not the ε₁ rule: θ is fixed here, so once the
+        // decoded payloads telescope to the exact gradient the delta
+        // is zero and a censoring worker would skip — every timed
+        // round must actually run the compress path.
+        let obj = build_objective(TaskKind::LinReg, &shard, 0.0);
+        let mut worker = Worker::new(
+            0,
+            Box::new(chb_fed::coordinator::RustBackend::new(obj)),
+        )
+        .with_compressor(Arc::new(TopK { k: 32 }));
+        all.push(std_b.run(
+            &format!("worker round linreg top-32 {name}"),
+            |k| {
+                black_box(worker.round(
+                    black_box(&theta),
+                    1.0,
+                    &NeverCensor,
+                    k + 1,
+                ));
+            },
+        ));
     }
 
-    // -- server fold (aggregate + update), d = 784 ------------------------
+    // -- server fold (aggregate + update), d = 784: dense vs sparse -------
     {
         let d = 784;
+        let k_sparse = 32usize;
         let params = MethodParams::new(1e-3).with_beta(0.4);
-        let mut server = Server::new(Method::Chb, &params, vec![0.0; d]);
         let mut r = Xoshiro256::new(9);
-        let rounds: Vec<_> = (0..9)
+        let dense_rounds: Vec<_> = (0..9)
             .map(|w| chb_fed::coordinator::WorkerRound {
                 worker: w,
                 decision: chb_fed::optim::CensorDecision::Transmit,
-                delta: r.gaussian_vec(d),
+                delta: Arc::new(Payload::Dense(r.gaussian_vec(d))),
                 loss: 1.0,
                 delta_sq: 1.0,
-                bits: 64 * d as u64,
+                bits: dense_delta_bits(d),
             })
             .collect();
-        std.run("server fold M=9 d=784", |_| {
-            black_box(server.apply_round(black_box(&rounds)));
-        });
+        let sparse_rounds: Vec<_> = (0..9)
+            .map(|w| {
+                let idx: Vec<u32> = (0..k_sparse)
+                    .map(|j| (j * d / k_sparse) as u32)
+                    .collect();
+                chb_fed::coordinator::WorkerRound {
+                    worker: w,
+                    decision: chb_fed::optim::CensorDecision::Transmit,
+                    delta: Arc::new(Payload::Sparse {
+                        idx,
+                        val: r.gaussian_vec(k_sparse),
+                    }),
+                    loss: 1.0,
+                    delta_sq: 1.0,
+                    bits: sparse_delta_bits(k_sparse),
+                }
+            })
+            .collect();
+        let mut server = Server::new(Method::Chb, &params, vec![0.0; d]);
+        all.push(std_b.run("server fold M=9 d=784 dense", |_| {
+            black_box(server.apply_round(black_box(&dense_rounds)));
+        }));
+        let mut server = Server::new(Method::Chb, &params, vec![0.0; d]);
+        all.push(std_b.run(
+            &format!("server fold M=9 d=784 sparse k={k_sparse}"),
+            |_| {
+                black_box(server.apply_round(black_box(&sparse_rounds)));
+            },
+        ));
     }
 
     // -- end-to-end rounds ------------------------------------------------
@@ -91,11 +205,11 @@ fn main() {
     let params = MethodParams::new(1.0 / problem.l_global)
         .with_beta(0.4)
         .with_epsilon1_scaled(0.1, 9);
-    std.run("100 CHB rounds M=9 d=50 (serial)", |_| {
+    all.push(std_b.run("100 CHB rounds M=9 d=50 (serial)", |_| {
         let cfg = RunConfig::new(Method::Chb, params, 100);
         let mut ws = problem.rust_workers();
         black_box(run_serial(&mut ws, &cfg, problem.theta0()));
-    });
+    }));
 
     // -- round-pipeline scaling: serial vs rayon pool ---------------------
     // M ∈ {10, 100, 1000} simulated workers, small shards (10×20) so
@@ -103,8 +217,8 @@ fn main() {
     // Worker construction is inside the timed body (fresh censor state
     // per run); both pools pay it identically, so the serial/rayon
     // *ratio* is the scaling signal reported in EXPERIMENTS.md §Perf.
-    let quick = Bencher::quick();
-    for m in [10usize, 100, 1000] {
+    let m_list: &[usize] = if smoke { &[10, 100] } else { &[10, 100, 1000] };
+    for &m in m_list {
         let l_m: Vec<f64> =
             (0..m).map(|i| 1.0 + (i % 7) as f64 * 0.5).collect();
         let per_worker =
@@ -119,17 +233,22 @@ fn main() {
             .with_beta(0.4)
             .with_epsilon1_scaled(0.1, m);
         let cfg = RunConfig::new(Method::Chb, params, 20);
-        let b = if m >= 1000 { &quick } else { &std };
-        b.run(&format!("20 CHB rounds M={m} d=20 (serial)"), |_| {
+        let b = if smoke || m >= 1000 { &quick } else { &std_b };
+        all.push(b.run(&format!("20 CHB rounds M={m} d=20 (serial)"), |_| {
             let mut ws = scale_problem.rust_workers();
             black_box(run_serial(&mut ws, &cfg, scale_problem.theta0()));
-        });
-        b.run(&format!("20 CHB rounds M={m} d=20 (rayon)"), |_| {
+        }));
+        all.push(b.run(&format!("20 CHB rounds M={m} d=20 (rayon)"), |_| {
             black_box(run_rayon(
                 scale_problem.rust_workers(),
                 &cfg,
                 scale_problem.theta0(),
             ));
-        });
+        }));
     }
+
+    // -- machine-readable report ------------------------------------------
+    let out = std::path::Path::new("BENCH_hotpath.json");
+    chb_fed::bench::write_json(out, &all).expect("write BENCH_hotpath.json");
+    println!("\nwrote {} ({} entries)", out.display(), all.len());
 }

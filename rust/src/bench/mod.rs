@@ -5,7 +5,13 @@
 //! Method: warmup, then timed samples; report median and MAD with
 //! simple outlier rejection.  Deterministic sample counts so repeated
 //! `cargo bench` runs are comparable.
+//!
+//! Beyond the stdout report, [`write_json`] emits the machine-readable
+//! `BENCH_<target>.json` (name / median_ns / mad_ns / iters per entry)
+//! that pins the perf trajectory PR-over-PR — CI runs the `hotpath`
+//! target in `--smoke` mode and uploads the file as an artifact.
 
+use std::path::Path;
 use std::time::Instant;
 
 /// One benchmark's result.
@@ -15,6 +21,8 @@ pub struct BenchResult {
     pub name: String,
     /// timed samples taken
     pub samples: usize,
+    /// total timed iterations (samples × iterations per sample)
+    pub iters: usize,
     /// per-iteration time, seconds
     pub median: f64,
     /// median absolute deviation
@@ -26,6 +34,16 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Median per-iteration time in nanoseconds.
+    pub fn median_ns(&self) -> f64 {
+        self.median * 1e9
+    }
+
+    /// Median absolute deviation in nanoseconds.
+    pub fn mad_ns(&self) -> f64 {
+        self.mad * 1e9
+    }
+
     /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
@@ -86,7 +104,8 @@ impl Bencher {
                 t0.elapsed().as_secs_f64() / self.iters_per_sample as f64,
             );
         }
-        let result = summarize(name, &mut times);
+        let mut result = summarize(name, &mut times);
+        result.iters = self.samples * self.iters_per_sample;
         println!("{}", result.report());
         result
     }
@@ -101,6 +120,8 @@ fn summarize(name: &str, times: &mut [f64]) -> BenchResult {
     BenchResult {
         name: name.to_string(),
         samples: times.len(),
+        // callers with batched samples (Bencher::run) overwrite this
+        iters: times.len(),
         median,
         mad,
         min: times[0],
@@ -120,6 +141,35 @@ fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// Write results as a machine-readable JSON array — one object per
+/// bench with `name`, `median_ns`, `mad_ns`, `iters` (total timed
+/// iterations), `samples` (timed sample count), `min_ns`, and
+/// `max_ns`.  Parseable by `util::json` (round-trip tested), so the
+/// perf trajectory can be diffed PR-over-PR.
+pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    let mut out = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {:.1}, \"mad_ns\": {:.1}, \
+             \"iters\": {}, \"samples\": {}, \"min_ns\": {:.1}, \
+             \"max_ns\": {:.1}}}{}\n",
+            esc(&r.name),
+            r.median_ns(),
+            r.mad_ns(),
+            r.iters,
+            r.samples,
+            r.min * 1e9,
+            r.max * 1e9,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
 }
 
 /// Print the standard bench header (called by each bench target).
@@ -154,5 +204,55 @@ mod tests {
     fn percentile_degenerate() {
         assert!(percentile_sorted(&[], 0.5).is_nan());
         assert_eq!(percentile_sorted(&[7.0], 0.5), 7.0);
+    }
+
+    #[test]
+    fn json_report_round_trips_through_the_in_tree_parser() {
+        let results = vec![
+            BenchResult {
+                name: "dot d=784".into(),
+                samples: 25,
+                iters: 2500,
+                median: 1.25e-6,
+                mad: 5.0e-9,
+                min: 1.2e-6,
+                max: 2.0e-6,
+            },
+            BenchResult {
+                name: "server \"fold\" M=9".into(), // exercises escaping
+                samples: 15,
+                iters: 15,
+                median: 3.0e-3,
+                mad: 1.0e-4,
+                min: 2.9e-3,
+                max: 3.3e-3,
+            },
+        ];
+        let path = std::env::temp_dir().join(format!(
+            "BENCH_roundtrip_{}.json",
+            std::process::id()
+        ));
+        write_json(&path, &results).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].str_field("name").unwrap(), "dot d=784");
+        assert_eq!(arr[0].usize_field("iters").unwrap(), 2500);
+        assert_eq!(arr[0].usize_field("samples").unwrap(), 25);
+        assert!(
+            (arr[0].get("median_ns").unwrap().as_f64().unwrap() - 1250.0)
+                .abs()
+                < 0.1
+        );
+        assert_eq!(arr[1].str_field("name").unwrap(), "server \"fold\" M=9");
+        assert!(write_json(&path, &[]).is_ok());
+        let empty = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            crate::util::json::Json::parse(&empty).unwrap(),
+            crate::util::json::Json::Arr(vec![])
+        );
     }
 }

@@ -5,20 +5,164 @@
 //! bandwidth per communication as well as the number of
 //! communications."
 //!
-//! A [`Compressor`] maps the uplink payload δ∇ to a (decoded-value,
-//! bit-count) pair.  The engine keeps eq. (5) consistent by having
-//! the worker advance its θ̂ bookkeeping with the *decoded* delta —
-//! the server and worker always agree on Σ transmitted deltas, so the
-//! aggregate still telescopes exactly (the compression error shows up
-//! as gradient staleness, not divergence; property-tested).
+//! A [`Compressor`] encodes the uplink delta δ∇ into a [`Payload`]
+//! (dense values, or a sparse index/value pair) plus a simulated wire
+//! size.  The engine keeps eq. (5) consistent by having the worker
+//! advance its θ̂ bookkeeping with the *decoded* payload — the server
+//! and worker always agree on Σ transmitted deltas, so the aggregate
+//! still telescopes exactly (the compression error shows up as
+//! gradient staleness, not divergence; property-tested).
+//!
+//! The hot path is allocation-free: [`Compressor::compress_into`]
+//! writes into a caller-owned [`Payload`] slot (the worker's reusable
+//! transmit arena) using a caller-owned [`CodecScratch`] workspace, so
+//! a steady-state transmission touches no allocator.  Sparse payloads
+//! fold in O(nnz) via [`crate::linalg::axpy_sparse`].
 
 use crate::linalg;
+use crate::net::{dense_delta_bits, sparse_delta_bits};
 
-/// A compressed uplink payload.
+/// An uplink delta as the server folds it: either every coordinate
+/// (dense) or only the stored ones (sparse index/value pairs).
+///
+/// The load-bearing invariant (ARCHITECTURE.md): folding a payload
+/// into a vector adds exactly the decoded delta — `Dense` via
+/// [`linalg::axpy`], `Sparse` via [`linalg::axpy_sparse`] — so
+/// Σ folded payloads ≡ Σ worker-side decoded deltas, bit for bit on
+/// every stored coordinate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// all `d` coordinates, in order (the uncompressed / quantized form)
+    Dense(Vec<f64>),
+    /// only the stored coordinates: `idx[j]` holds `val[j]`, all other
+    /// coordinates are implicitly zero; indices are strictly ascending
+    Sparse {
+        /// stored coordinate indices (strictly ascending)
+        idx: Vec<u32>,
+        /// stored coordinate values (parallel to `idx`)
+        val: Vec<f64>,
+    },
+}
+
+impl Default for Payload {
+    /// An empty dense payload (what skip reports carry).
+    fn default() -> Self {
+        Payload::Dense(Vec::new())
+    }
+}
+
+impl Payload {
+    /// Number of coordinates materialized in the payload (`d` for
+    /// dense, nnz for sparse).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Sparse { val, .. } => val.len(),
+        }
+    }
+
+    /// Does the payload store nothing at all?
+    pub fn is_empty(&self) -> bool {
+        self.nnz() == 0
+    }
+
+    /// Can this payload fold into a dimension-`dim` vector?
+    pub fn fits(&self, dim: usize) -> bool {
+        match self {
+            Payload::Dense(v) => v.len() == dim,
+            Payload::Sparse { idx, .. } => {
+                idx.iter().all(|&i| (i as usize) < dim)
+            }
+        }
+    }
+
+    /// y ← y + payload (the server/engine fold primitive): O(d) dense,
+    /// O(nnz) sparse.
+    pub fn fold_into(&self, y: &mut [f64]) {
+        match self {
+            Payload::Dense(v) => linalg::axpy(1.0, v, y),
+            Payload::Sparse { idx, val } => {
+                linalg::axpy_sparse(1.0, idx, val, y)
+            }
+        }
+    }
+
+    /// Materialize the decoded dense vector of dimension `dim`
+    /// (diagnostics/tests; the hot path never needs this).
+    pub fn to_dense(&self, dim: usize) -> Vec<f64> {
+        let mut out = vec![0.0; dim];
+        self.fold_into(&mut out);
+        out
+    }
+
+    /// Convert a sparse payload to its dense decode in place (`dim`
+    /// coordinates); dense payloads are left untouched.
+    pub fn densify(&mut self, dim: usize) {
+        if let Payload::Sparse { .. } = self {
+            *self = Payload::Dense(self.to_dense(dim));
+        }
+    }
+
+    /// Overwrite with a dense copy of `src`, reusing the existing
+    /// buffer when the payload is already dense (no allocation once
+    /// the capacity is warm).
+    pub fn set_dense_from(&mut self, src: &[f64]) {
+        match self {
+            Payload::Dense(v) => {
+                v.clear();
+                v.extend_from_slice(src);
+            }
+            _ => *self = Payload::Dense(src.to_vec()),
+        }
+    }
+
+    /// Ensure the sparse variant and hand out its (cleared) index and
+    /// value buffers for in-place encoding.
+    fn sparse_bufs(&mut self) -> (&mut Vec<u32>, &mut Vec<f64>) {
+        if !matches!(self, Payload::Sparse { .. }) {
+            *self = Payload::Sparse { idx: Vec::new(), val: Vec::new() };
+        }
+        match self {
+            Payload::Sparse { idx, val } => {
+                idx.clear();
+                val.clear();
+                (idx, val)
+            }
+            _ => unreachable!("just ensured the sparse variant"),
+        }
+    }
+
+    /// Ensure the dense variant and hand out its (cleared) buffer.
+    fn dense_buf(&mut self) -> &mut Vec<f64> {
+        if !matches!(self, Payload::Dense(_)) {
+            *self = Payload::Dense(Vec::new());
+        }
+        match self {
+            Payload::Dense(v) => {
+                v.clear();
+                v
+            }
+            _ => unreachable!("just ensured the dense variant"),
+        }
+    }
+}
+
+/// Reusable per-worker codec workspace: scratch a codec may need
+/// beyond the output payload itself (top-k keeps its magnitude
+/// argsort here), owned by the caller so repeated compressions
+/// allocate nothing.
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    /// index permutation buffer (top-k magnitude argsort)
+    order: Vec<u32>,
+}
+
+/// A compressed uplink payload (the allocating convenience form; the
+/// hot path uses [`Compressor::compress_into`]).
 #[derive(Clone, Debug)]
 pub struct Compressed {
     /// the values the server will fold (decoder output)
-    pub decoded: Vec<f64>,
+    pub decoded: Payload,
     /// simulated wire size
     pub bits: u64,
 }
@@ -26,22 +170,39 @@ pub struct Compressed {
 /// Lossy uplink codec.
 ///
 /// ```
-/// use chb_fed::compress::{Compressor, TopK, UniformQuantizer};
+/// use chb_fed::compress::{Compressor, Payload, TopK, UniformQuantizer};
 ///
-/// // top-k keeps the largest-magnitude coordinates…
+/// // top-k keeps the largest-magnitude coordinates, sparsely…
 /// let out = TopK { k: 1 }.compress(&[0.1, -5.0, 0.2]);
-/// assert_eq!(out.decoded, vec![0.0, -5.0, 0.0]);
+/// assert_eq!(out.decoded, Payload::Sparse { idx: vec![1], val: vec![-5.0] });
+/// assert_eq!(out.decoded.to_dense(3), vec![0.0, -5.0, 0.0]);
 /// assert_eq!(out.bits, 64); // 32-bit index + f32 value
 ///
 /// // …while the quantizer keeps every coordinate at low precision
 /// let q = UniformQuantizer { bits: 8 }.compress(&[0.1, -5.0, 0.2]);
 /// assert_eq!(q.bits, 32 + 8 * 3);
-/// assert!((q.decoded[1] + 5.0).abs() < 1e-12); // max is exact
+/// assert!((q.decoded.to_dense(3)[1] + 5.0).abs() < 1e-12); // max is exact
 /// ```
 pub trait Compressor: Send + Sync {
-    /// Encode-decode `delta`, returning the server-side values and the
-    /// simulated wire size.
-    fn compress(&self, delta: &[f64]) -> Compressed;
+    /// Encode-decode `delta` into the caller's payload slot, returning
+    /// the simulated wire size in bits.  Allocation-free once `out`
+    /// and `scratch` have warm capacity — the worker calls this every
+    /// transmission with its own arena.
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64;
+
+    /// Allocating convenience wrapper around
+    /// [`Compressor::compress_into`] (tests, diagnostics).
+    fn compress(&self, delta: &[f64]) -> Compressed {
+        let mut out = Payload::default();
+        let bits =
+            self.compress_into(delta, &mut CodecScratch::default(), &mut out);
+        Compressed { decoded: out, bits }
+    }
 
     /// Short label for logs and ablation tables.
     fn name(&self) -> &'static str;
@@ -51,8 +212,14 @@ pub trait Compressor: Send + Sync {
 pub struct NoCompression;
 
 impl Compressor for NoCompression {
-    fn compress(&self, delta: &[f64]) -> Compressed {
-        Compressed { decoded: delta.to_vec(), bits: 64 * delta.len() as u64 }
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
+        out.set_dense_from(delta);
+        dense_delta_bits(delta.len())
     }
 
     fn name(&self) -> &'static str {
@@ -68,22 +235,27 @@ pub struct UniformQuantizer {
 }
 
 impl Compressor for UniformQuantizer {
-    fn compress(&self, delta: &[f64]) -> Compressed {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
         assert!((2..=32).contains(&self.bits), "need 2..=32 bits");
+        let buf = out.dense_buf();
         let maxabs = delta.iter().fold(0.0f64, |m, v| m.max(v.abs()));
         if maxabs == 0.0 {
-            return Compressed { decoded: vec![0.0; delta.len()], bits: 32 };
+            buf.resize(delta.len(), 0.0);
+            return 32;
         }
         let levels = ((1u64 << (self.bits - 1)) - 1) as f64;
         let scale = maxabs / levels;
-        let decoded = delta
-            .iter()
-            .map(|v| (v / scale).round().clamp(-levels, levels) * scale)
-            .collect();
-        Compressed {
-            decoded,
-            bits: 32 + u64::from(self.bits) * delta.len() as u64,
-        }
+        buf.extend(
+            delta
+                .iter()
+                .map(|v| (v / scale).round().clamp(-levels, levels) * scale),
+        );
+        32 + u64::from(self.bits) * delta.len() as u64
     }
 
     fn name(&self) -> &'static str {
@@ -91,28 +263,45 @@ impl Compressor for UniformQuantizer {
     }
 }
 
-/// Top-k magnitude sparsifier: k values + k indices on the wire.
+/// Top-k magnitude sparsifier: emits a [`Payload::Sparse`] directly —
+/// k values + k indices on the wire, and an O(k) server fold.
 pub struct TopK {
     /// number of coordinates kept (clamped to the vector length)
     pub k: usize,
 }
 
 impl Compressor for TopK {
-    fn compress(&self, delta: &[f64]) -> Compressed {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
         let d = delta.len();
+        assert!(d <= u32::MAX as usize, "sparse indices are u32");
         let k = self.k.min(d);
-        let mut idx: Vec<usize> = (0..d).collect();
+        let order = &mut scratch.order;
+        order.clear();
+        order.extend(0..d as u32);
         // total_cmp, not partial_cmp().unwrap(): a NaN coordinate (a
         // diverged worker) must not panic the whole simulation.  Under
         // the total order NaN sorts as the largest magnitude, so it is
         // kept and surfaces in the fold where the caller can see it.
-        idx.sort_by(|&a, &b| delta[b].abs().total_cmp(&delta[a].abs()));
-        let mut decoded = vec![0.0; d];
-        for &i in idx.iter().take(k) {
-            decoded[i] = delta[i];
-        }
-        // 32-bit index + f32 value per kept coordinate
-        Compressed { decoded, bits: (64 * k) as u64 }
+        // The index tiebreaker makes the order unique, so the unstable
+        // (allocation-free) sort is fully deterministic and matches
+        // what a stable magnitude sort over 0..d would pick.
+        order.sort_unstable_by(|&a, &b| {
+            delta[b as usize]
+                .abs()
+                .total_cmp(&delta[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let (idx, val) = out.sparse_bufs();
+        idx.extend_from_slice(&order[..k]);
+        // canonical form: ascending indices (fold order == index order)
+        idx.sort_unstable();
+        val.extend(idx.iter().map(|&i| delta[i as usize]));
+        sparse_delta_bits(k)
     }
 
     fn name(&self) -> &'static str {
@@ -120,11 +309,39 @@ impl Compressor for TopK {
     }
 }
 
+/// Wrapper that runs an inner codec and densifies its payload — same
+/// decoded values and wire bits, dense representation.  Exists to pin
+/// the sparse-fold invariant: a run with `TopK` must be bit-identical
+/// to the same run with `DenseDecoded(TopK)` (tests/
+/// sparse_dense_equivalence.rs).
+pub struct DenseDecoded<C>(
+    /// the inner codec whose decoded payload gets densified
+    pub C,
+);
+
+impl<C: Compressor> Compressor for DenseDecoded<C> {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
+        let bits = self.0.compress_into(delta, scratch, out);
+        out.densify(delta.len());
+        bits
+    }
+
+    fn name(&self) -> &'static str {
+        "dense-decoded"
+    }
+}
+
 /// Relative ℓ2 error of a codec on a vector (diagnostics/tests).
 pub fn relative_error(c: &dyn Compressor, v: &[f64]) -> f64 {
     let out = c.compress(v);
+    let decoded = out.decoded.to_dense(v.len());
     let mut diff = 0.0;
-    for (a, b) in v.iter().zip(&out.decoded) {
+    for (a, b) in v.iter().zip(&decoded) {
         diff += (a - b) * (a - b);
     }
     (diff / linalg::norm2_sq(v).max(1e-300)).sqrt()
@@ -142,7 +359,7 @@ mod tests {
     fn identity_codec_is_lossless() {
         let v = ramp(33);
         let c = NoCompression.compress(&v);
-        assert_eq!(c.decoded, v);
+        assert_eq!(c.decoded, Payload::Dense(v.clone()));
         assert_eq!(c.bits, 64 * 33);
     }
 
@@ -165,23 +382,41 @@ mod tests {
     fn quantizer_handles_zero_and_preserves_max() {
         let q = UniformQuantizer { bits: 8 };
         let z = q.compress(&[0.0; 5]);
-        assert_eq!(z.decoded, vec![0.0; 5]);
+        assert_eq!(z.decoded, Payload::Dense(vec![0.0; 5]));
+        assert_eq!(z.bits, 32);
         let v = vec![-3.0, 0.5, 3.0];
-        let out = q.compress(&v);
+        let out = q.compress(&v).decoded.to_dense(3);
         // endpoints land exactly on the extreme levels
-        assert!((out.decoded[0] + 3.0).abs() < 1e-12);
-        assert!((out.decoded[2] - 3.0).abs() < 1e-12);
+        assert!((out[0] + 3.0).abs() < 1e-12);
+        assert!((out[2] - 3.0).abs() < 1e-12);
     }
 
     #[test]
-    fn topk_keeps_largest_magnitudes() {
+    fn topk_keeps_largest_magnitudes_sparsely() {
         let v = vec![0.1, -5.0, 0.2, 3.0, -0.05];
         let out = TopK { k: 2 }.compress(&v);
-        assert_eq!(out.decoded, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+        // sparse payload in canonical ascending-index form
+        assert_eq!(
+            out.decoded,
+            Payload::Sparse { idx: vec![1, 3], val: vec![-5.0, 3.0] }
+        );
+        assert_eq!(out.decoded.to_dense(5), vec![0.0, -5.0, 0.0, 3.0, 0.0]);
         assert_eq!(out.bits, 128);
         // k ≥ d is lossless
         let all = TopK { k: 99 }.compress(&v);
-        assert_eq!(all.decoded, v);
+        assert_eq!(all.decoded.to_dense(5), v);
+        assert_eq!(all.decoded.nnz(), 5);
+    }
+
+    #[test]
+    fn topk_magnitude_ties_break_by_lowest_index() {
+        // |v| ties at 2.0 on indices 0, 2, 3 — stable-equivalent order
+        let v = vec![2.0, 1.0, -2.0, 2.0];
+        let out = TopK { k: 2 }.compress(&v);
+        assert_eq!(
+            out.decoded,
+            Payload::Sparse { idx: vec![0, 2], val: vec![2.0, -2.0] }
+        );
     }
 
     #[test]
@@ -189,15 +424,72 @@ mod tests {
         // regression: the magnitude sort used partial_cmp().unwrap(),
         // which panics the moment any coordinate is NaN
         let v = vec![1.0, f64::NAN, 3.0, 0.5];
-        let out = TopK { k: 2 }.compress(&v);
+        let out = TopK { k: 2 }.compress(&v).decoded.to_dense(4);
         // NaN sorts largest under total_cmp → kept alongside 3.0
-        assert!(out.decoded[1].is_nan());
-        assert_eq!(out.decoded[0], 0.0);
-        assert_eq!(out.decoded[2], 3.0);
-        assert_eq!(out.decoded[3], 0.0);
-        assert_eq!(out.bits, 128);
+        assert!(out[1].is_nan());
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[2], 3.0);
+        assert_eq!(out[3], 0.0);
         // all-NaN input must not panic either
         let all_nan = TopK { k: 1 }.compress(&[f64::NAN, f64::NAN]);
-        assert!(all_nan.decoded.iter().any(|x| x.is_nan()));
+        assert!(all_nan.decoded.to_dense(2).iter().any(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn compress_into_reuses_buffers_without_reallocating() {
+        let mut scratch = CodecScratch::default();
+        let mut out = Payload::default();
+        let v = ramp(64);
+        let c = TopK { k: 8 };
+        c.compress_into(&v, &mut scratch, &mut out);
+        let (cap_i, cap_v, cap_o) = match &out {
+            Payload::Sparse { idx, val } => {
+                (idx.capacity(), val.capacity(), scratch.order.capacity())
+            }
+            _ => panic!("top-k must emit sparse"),
+        };
+        // steady state: same shapes, capacities must not grow
+        for _ in 0..5 {
+            c.compress_into(&v, &mut scratch, &mut out);
+        }
+        match &out {
+            Payload::Sparse { idx, val } => {
+                assert_eq!(idx.capacity(), cap_i);
+                assert_eq!(val.capacity(), cap_v);
+                assert_eq!(scratch.order.capacity(), cap_o);
+                assert_eq!(idx.len(), 8);
+                assert_eq!(val.len(), 8);
+            }
+            _ => panic!("top-k must emit sparse"),
+        }
+    }
+
+    #[test]
+    fn dense_decoded_wrapper_matches_inner_codec_exactly() {
+        let v = ramp(40);
+        let sparse = TopK { k: 5 }.compress(&v);
+        let dense = DenseDecoded(TopK { k: 5 }).compress(&v);
+        assert_eq!(dense.bits, sparse.bits);
+        assert!(matches!(dense.decoded, Payload::Dense(_)));
+        let a = sparse.decoded.to_dense(v.len());
+        let b = dense.decoded.to_dense(v.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn payload_fold_and_fits() {
+        let p = Payload::Sparse { idx: vec![0, 3], val: vec![1.5, -2.0] };
+        assert_eq!(p.nnz(), 2);
+        assert!(!p.is_empty());
+        assert!(p.fits(4));
+        assert!(!p.fits(3));
+        let mut y = vec![1.0; 4];
+        p.fold_into(&mut y);
+        assert_eq!(y, vec![2.5, 1.0, 1.0, -1.0]);
+        let d = Payload::Dense(vec![0.5; 4]);
+        assert!(d.fits(4) && !d.fits(5));
+        assert!(Payload::default().is_empty());
     }
 }

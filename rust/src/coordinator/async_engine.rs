@@ -34,7 +34,6 @@
 
 use std::sync::Arc;
 
-use crate::linalg;
 use crate::metrics::{IterStat, StalenessStats, Trace};
 use crate::net::{
     Direction, EventQueue, LatencyModel, SimNetwork,
@@ -296,9 +295,9 @@ pub fn run_async_with_rules(
                         // dropped uplink: θ̂_m advanced worker-side but
                         // the server never folds — eq. (5) carries the
                         // stale term, exactly as in the sync engine
-                        linalg::axpy(1.0, &round.delta, &mut dropped_sum);
+                        // (the Skip decision guards every later fold)
+                        round.delta.fold_into(&mut dropped_sum);
                         round.decision = CensorDecision::Skip;
-                        round.delta.clear();
                     }
                 } else {
                     // censored: a zero-byte completion ping still takes
@@ -362,7 +361,7 @@ pub fn run_async_with_rules(
     for (_, ev) in q.drain_ordered() {
         if let Ev::Up(r, _) = ev {
             if r.decision == CensorDecision::Transmit {
-                linalg::axpy(1.0, &r.delta, &mut inflight_sum);
+                r.delta.fold_into(&mut inflight_sum);
             }
         }
     }
@@ -405,7 +404,7 @@ fn fold_batch(
             stale_max = stale_max.max(s);
             trace.worker_staleness[r.worker].record(s);
             bits_round += r.bits;
-            linalg::axpy(1.0, &r.delta, applied_sum);
+            r.delta.fold_into(applied_sum);
         }
     }
     if cfg.record_comm_map {
@@ -479,6 +478,7 @@ mod tests {
     use super::*;
     use crate::coordinator::engine::run_serial;
     use crate::coordinator::worker::GradientBackend;
+    use crate::linalg;
     use crate::optim::{Method, MethodParams};
 
     /// f_m(θ) = ½ c_m ‖θ − t_m‖² toy backend (same as engine tests).

@@ -129,9 +129,11 @@ fn fold_round(
             if !delivered {
                 // dropped uplink: the worker believes it transmitted
                 // (its θ̂_m advanced) but the server never folds the
-                // delta — eq. (5) simply carries the stale term.
+                // delta — eq. (5) simply carries the stale term.  The
+                // Skip decision alone guards every fold; the payload
+                // stays attached to the report (it is the worker's
+                // shared arena slot, not ours to mutate).
                 r.decision = CensorDecision::Skip;
-                r.delta.clear();
             }
         }
     }

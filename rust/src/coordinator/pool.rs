@@ -26,6 +26,12 @@
 //! results are re-ordered by worker id before the server folds them,
 //! so f64 summation order never depends on thread interleaving.
 //! `tests/engine_equivalence.rs` pins this across all four tasks.
+//!
+//! Every pool also preserves the worker's zero-allocation payload
+//! arena: a report's delta is an `Arc` clone of the worker's reusable
+//! transmit slot, and because the engine folds and drops each round's
+//! reports before the next `run_round` begins, the worker reclaims
+//! its buffer every round regardless of which pool carried it.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};

@@ -29,9 +29,14 @@ pub fn broadcast_bytes(dim: usize) -> u64 {
     (dim * 8 + 16) as u64
 }
 
-/// Serialized size of a gradient-delta upload: d·8 + 8 (worker id tag).
+/// Serialized size of a dense gradient-delta upload: d·8 + 8 (worker
+/// id tag).  Compression-aware uploads are charged from the payload
+/// itself instead ([`crate::net::dense_delta_bits`] /
+/// [`crate::net::sparse_delta_bits`] via `WorkerRound::bits`, +8 B
+/// framing in the engine), so this helper models only the
+/// uncompressed baseline.
 pub fn uplink_bytes(dim: usize) -> u64 {
-    (dim * 8 + 8) as u64
+    crate::net::dense_delta_bits(dim) / 8 + 8
 }
 
 /// Size of a "skip" — censored workers send nothing at all.

@@ -88,8 +88,15 @@ impl Server {
         for r in rounds {
             loss += r.loss;
             if r.decision == CensorDecision::Transmit {
-                debug_assert_eq!(r.delta.len(), self.agg_grad.len());
-                linalg::axpy(1.0, &r.delta, &mut self.agg_grad);
+                debug_assert!(
+                    r.delta.fits(self.agg_grad.len()),
+                    "payload shape mismatch from worker {}",
+                    r.worker
+                );
+                // O(d) dense, O(nnz) sparse — each stored coordinate
+                // folds exactly once, so Σ folded payloads stays equal
+                // to Σ worker-side decoded deltas (the eq. 5 telescope)
+                r.delta.fold_into(&mut self.agg_grad);
                 transmitted += 1;
             }
         }
@@ -108,7 +115,10 @@ impl Server {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
+    use crate::compress::Payload;
 
     fn tx(worker: usize, delta: Vec<f64>, loss: f64) -> WorkerRound {
         let delta_sq = delta.iter().map(|d| d * d).sum();
@@ -116,7 +126,7 @@ mod tests {
         WorkerRound {
             worker,
             decision: CensorDecision::Transmit,
-            delta,
+            delta: Arc::new(Payload::Dense(delta)),
             loss,
             delta_sq,
             bits,
@@ -127,7 +137,7 @@ mod tests {
         WorkerRound {
             worker,
             decision: CensorDecision::Skip,
-            delta: Vec::new(),
+            delta: Arc::new(Payload::default()),
             loss,
             delta_sq: 0.0,
             bits: 0,
@@ -147,6 +157,30 @@ mod tests {
         assert_eq!(s.agg_grad, vec![1.0, 2.0]);
         assert!((out.loss - 1.0).abs() < 1e-15);
         assert_eq!(s.theta, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_payloads_fold_identically_to_their_dense_decode() {
+        let p = MethodParams::new(0.0);
+        let sparse = WorkerRound {
+            worker: 0,
+            decision: CensorDecision::Transmit,
+            delta: Arc::new(Payload::Sparse {
+                idx: vec![1, 3],
+                val: vec![-2.5, 4.0],
+            }),
+            loss: 0.0,
+            delta_sq: 0.0,
+            bits: 128,
+        };
+        let dense = tx(0, vec![0.0, -2.5, 0.0, 4.0], 0.0);
+        let mut a = Server::new(Method::Gd, &p, vec![1.0; 4]);
+        let mut b = Server::new(Method::Gd, &p, vec![1.0; 4]);
+        a.apply_round(&[sparse]);
+        b.apply_round(&[dense]);
+        for (x, y) in a.agg_grad.iter().zip(&b.agg_grad) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

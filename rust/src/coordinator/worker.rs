@@ -2,8 +2,9 @@
 
 use std::sync::Arc;
 
-use crate::compress::Compressor;
+use crate::compress::{CodecScratch, Compressor, Payload};
 use crate::linalg;
+use crate::net::dense_delta_bits;
 use crate::optim::{CensorDecision, CensorRule};
 use crate::tasks::WorkerObjective;
 
@@ -47,9 +48,13 @@ pub struct WorkerRound {
     pub worker: usize,
     /// did the censor rule allow a transmission?
     pub decision: CensorDecision,
-    /// δ∇_m^k (codec-decoded when compression is on) — only
-    /// meaningful when `decision == Transmit`
-    pub delta: Vec<f64>,
+    /// δ∇_m^k as an uplink [`Payload`] (codec-decoded when compression
+    /// is on; sparse when the codec emits sparse) — only meaningful
+    /// when `decision == Transmit`.  Shared via `Arc` with the
+    /// worker's reusable transmit slot, so the steady-state round
+    /// allocates nothing: the worker reclaims the buffer as soon as
+    /// every engine-side clone of the report has been dropped.
+    pub delta: Arc<Payload>,
     /// f_m(θᵏ) — measurement-side only, costs no communication
     pub loss: f64,
     /// ‖δ∇_m^k‖² (recorded for Lemma-2 style diagnostics)
@@ -69,6 +74,16 @@ pub struct Worker {
     grad: Vec<f64>,
     /// scratch: δ∇ buffer reused across rounds
     delta: Vec<f64>,
+    /// the payload arena: the transmit slot handed (by `Arc` clone) to
+    /// the engine each round, reclaimed for in-place reuse once the
+    /// engine drops its clone — a still-in-flight payload (async
+    /// engine) simply forces one fresh buffer
+    tx_slot: Arc<Payload>,
+    /// shared zero-size payload carried by skip/observe reports
+    /// (cloning the `Arc` is a refcount bump, not an allocation)
+    empty: Arc<Payload>,
+    /// reusable codec workspace (top-k argsort etc.)
+    codec_scratch: CodecScratch,
     /// optional uplink codec (paper conclusion: CHB ∘ quantization)
     compressor: Option<Arc<dyn Compressor>>,
     /// lifetime transmit counter S_m (Lemma 2)
@@ -89,6 +104,9 @@ impl Worker {
             last_tx_grad: vec![0.0; dim],
             grad: vec![0.0; dim],
             delta: vec![0.0; dim],
+            tx_slot: Arc::new(Payload::default()),
+            empty: Arc::new(Payload::default()),
+            codec_scratch: CodecScratch::default(),
             compressor: None,
             transmissions: 0,
         }
@@ -125,23 +143,36 @@ impl Worker {
         let decision = censor.decide(delta_sq, theta_step_sq, k);
         let (delta, bits) = if decision == CensorDecision::Transmit {
             self.transmissions += 1;
-            match &self.compressor {
+            // reclaim the arena slot for in-place reuse; if an engine
+            // still holds the previous payload (async in-flight), that
+            // buffer is genuinely on the wire — start a fresh one
+            if Arc::get_mut(&mut self.tx_slot).is_none() {
+                self.tx_slot = Arc::new(Payload::default());
+            }
+            let slot =
+                Arc::get_mut(&mut self.tx_slot).expect("slot just freed");
+            let bits = match &self.compressor {
                 None => {
                     // Algorithm 1 line 5: transmit δ∇, update θ̂_m ← θᵏ
+                    slot.set_dense_from(&self.delta);
                     self.last_tx_grad.copy_from_slice(&self.grad);
-                    // payload allocation models the send
-                    (self.delta.clone(), 64 * self.delta.len() as u64)
+                    dense_delta_bits(self.delta.len())
                 }
                 Some(c) => {
-                    let out = c.compress(&self.delta);
+                    let bits = c.compress_into(
+                        &self.delta,
+                        &mut self.codec_scratch,
+                        slot,
+                    );
                     // bookkeeping uses the decoded payload — server
                     // and worker agree exactly on Σ transmitted deltas
-                    linalg::axpy(1.0, &out.decoded, &mut self.last_tx_grad);
-                    (out.decoded, out.bits)
+                    slot.fold_into(&mut self.last_tx_grad);
+                    bits
                 }
-            }
+            };
+            (Arc::clone(&self.tx_slot), bits)
         } else {
-            (Vec::new(), 0)
+            (Arc::clone(&self.empty), 0)
         };
         WorkerRound { worker: self.id, decision, delta, loss, delta_sq, bits }
     }
@@ -157,7 +188,7 @@ impl Worker {
         WorkerRound {
             worker: self.id,
             decision: CensorDecision::Skip,
-            delta: Vec::new(),
+            delta: Arc::clone(&self.empty),
             loss,
             delta_sq: 0.0,
             bits: 0,
@@ -205,7 +236,8 @@ mod tests {
         let mut w = Worker::new(0, Box::new(Toy { c: vec![1.0, 2.0] }));
         let r = w.round(&[0.0, 0.0], 0.0, &GradDiffCensor { epsilon1: 9e9 }, 1);
         assert_eq!(r.decision, CensorDecision::Transmit);
-        assert_eq!(r.delta, vec![-1.0, -2.0]);
+        assert_eq!(r.delta.to_dense(2), vec![-1.0, -2.0]);
+        assert_eq!(r.bits, 128);
         assert_eq!(w.transmissions, 1);
     }
 
@@ -245,7 +277,7 @@ mod tests {
         for (k, th) in thetas.iter().enumerate() {
             let r = w.round(th, 1.0, &NeverCensor, k + 1);
             assert_eq!(r.decision, CensorDecision::Transmit);
-            sum += r.delta[0];
+            sum += r.delta.to_dense(1)[0];
         }
         // Σδ telescopes to the latest gradient: (−1) − 5 = −6
         assert!((sum - (-6.0)).abs() < 1e-12);
@@ -265,7 +297,7 @@ mod tests {
             assert_eq!(r.decision, CensorDecision::Transmit);
             // 4-bit payload: 32-bit scale + 4 bits × 2 coords
             assert_eq!(r.bits, 32 + 8);
-            linalg::axpy(1.0, &r.delta, &mut agg);
+            r.delta.fold_into(&mut agg);
             // invariant: server aggregate == worker's θ̂ bookkeeping
             assert_eq!(agg, w.last_transmitted());
         }
@@ -275,6 +307,43 @@ mod tests {
         for i in 0..2 {
             assert!((w.last_transmitted()[i] - exact[i]).abs() < 4.0 / 7.0 * 3.0);
         }
+    }
+
+    #[test]
+    fn transmit_slot_is_reused_once_the_engine_drops_the_report() {
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![1.0, 2.0] }));
+        let r1 = w.round(&[0.0, 0.0], 0.0, &NeverCensor, 1);
+        let p1 = Arc::as_ptr(&r1.delta);
+        drop(r1); // engine folded and discarded the report
+        let r2 = w.round(&[1.0, 1.0], 1.0, &NeverCensor, 2);
+        // same allocation, reused in place — the zero-alloc steady state
+        assert_eq!(p1, Arc::as_ptr(&r2.delta));
+        assert_eq!(r2.delta.to_dense(2), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn in_flight_payload_forces_a_fresh_buffer_not_a_corruption() {
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![1.0] }));
+        let r1 = w.round(&[0.0], 0.0, &NeverCensor, 1);
+        // r1 still alive (async: on the wire) while round 2 runs
+        let r2 = w.round(&[3.0], 1.0, &NeverCensor, 2);
+        assert_ne!(Arc::as_ptr(&r1.delta), Arc::as_ptr(&r2.delta));
+        // the in-flight payload is untouched by the newer round
+        assert_eq!(r1.delta.to_dense(1), vec![-1.0]);
+        assert_eq!(r2.delta.to_dense(1), vec![3.0]);
+    }
+
+    #[test]
+    fn skip_reports_share_one_empty_payload() {
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![1.0] }));
+        let censor = GradDiffCensor { epsilon1: 1e12 };
+        let _ = w.round(&[0.5], 0.0, &censor, 1);
+        let s1 = w.round(&[0.5], 0.0, &censor, 2);
+        let s2 = w.observe(&[0.5]);
+        assert_eq!(s1.decision, CensorDecision::Skip);
+        assert!(s1.delta.is_empty() && s2.delta.is_empty());
+        // both are refcount bumps on the same zero-size payload
+        assert_eq!(Arc::as_ptr(&s1.delta), Arc::as_ptr(&s2.delta));
     }
 
     #[test]

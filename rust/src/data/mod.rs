@@ -17,6 +17,8 @@ pub mod partition;
 pub mod registry;
 pub mod synthetic;
 
+use std::sync::Arc;
+
 use crate::linalg::Matrix;
 
 /// A labelled dense dataset.
@@ -78,14 +80,21 @@ impl Dataset {
 
 /// One worker's shard: rows padded with zeros up to `n_pad`; `mask[i]`
 /// is 1.0 for real rows and 0.0 for padding.
+///
+/// Storage is `Arc`-shared: task objectives built over a shard
+/// (`tasks::build_objective`) reference the same allocation instead of
+/// copying it, so at M workers the resident dataset memory is
+/// O(Σ n_m·d) once — not once per live objective.  Cloning a `Shard`
+/// clones three `Arc`s; use [`Arc::make_mut`] for the rare
+/// mutate-a-copy case (tests).
 #[derive(Clone, Debug)]
 pub struct Shard {
     /// padded (n_pad × d) feature block
-    pub x: Matrix,
+    pub x: Arc<Matrix>,
     /// padded labels (0.0 on padding rows)
-    pub y: Vec<f64>,
+    pub y: Arc<Vec<f64>>,
     /// 1.0 for real rows, 0.0 for padding
-    pub mask: Vec<f64>,
+    pub mask: Arc<Vec<f64>>,
     /// genuine sample count before padding
     pub n_real: usize,
 }

@@ -4,6 +4,8 @@
 //! Each shard is padded to a single common row count so every worker
 //! shares one AOT artifact shape (aot.py's `per_worker_padded`).
 
+use std::sync::Arc;
+
 use crate::linalg::Matrix;
 
 use super::{padded_n, Dataset, Shard};
@@ -29,7 +31,12 @@ pub fn split_even(ds: &Dataset, m: usize) -> Vec<Shard> {
                 y[i] = ds.y[src];
                 mask[i] = 1.0;
             }
-            Shard { x, y, mask, n_real: rows.len() }
+            Shard {
+                x: Arc::new(x),
+                y: Arc::new(y),
+                mask: Arc::new(mask),
+                n_real: rows.len(),
+            }
         })
         .collect()
 }
@@ -37,9 +44,9 @@ pub fn split_even(ds: &Dataset, m: usize) -> Vec<Shard> {
 /// A single shard holding the whole dataset, unpadded (tests, M=1).
 pub fn shard_whole(ds: &Dataset) -> Shard {
     Shard {
-        x: ds.x.clone(),
-        y: ds.y.clone(),
-        mask: vec![1.0; ds.n()],
+        x: Arc::new(ds.x.clone()),
+        y: Arc::new(ds.y.clone()),
+        mask: Arc::new(vec![1.0; ds.n()]),
         n_real: ds.n(),
     }
 }
@@ -70,7 +77,7 @@ mod tests {
         // row-level reconstruction: sum of masked y equals sum of ds.y
         let got: f64 = shards
             .iter()
-            .flat_map(|s| s.y.iter().zip(&s.mask).map(|(y, m)| y * m))
+            .flat_map(|s| s.y.iter().zip(s.mask.iter()).map(|(y, m)| y * m))
             .sum();
         let want: f64 = ds.y.iter().sum();
         assert!((got - want).abs() < 1e-9);

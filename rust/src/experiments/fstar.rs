@@ -24,7 +24,7 @@ pub fn f_star(p: &Problem) -> Option<f64> {
 }
 
 fn masked_xs(p: &Problem) -> Vec<&Matrix> {
-    p.shards.iter().map(|s| &s.x).collect()
+    p.shards.iter().map(|s| s.x.as_ref()).collect()
 }
 
 /// Σ_m ½‖X_mθ − y_m‖² minimized exactly: (ΣXᵀX)θ = ΣXᵀy.

@@ -6,7 +6,7 @@
 //! plus a cache-blocked [`Matrix::matmul`] used by tests and the
 //! smoothness estimator.
 
-use super::dot;
+use super::{axpy, dot};
 
 /// Row-major (n × d) matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
@@ -129,6 +129,48 @@ impl Matrix {
         0.5 * loss
     }
 
+    /// Fused coefficient-gradient pass — the logistic/lasso sibling of
+    /// [`Matrix::fused_residual_grad`]: in ONE sweep over X computes
+    ///   z_i = x_iᵀθ
+    ///   (ℓ_i, c_i) = coeff(i, z_i)   (caller-supplied per-row map)
+    ///   g  += Σ_i c_i·x_i            (`grad` must be zeroed by the caller)
+    /// and returns Σ ℓ_i.  Rows with `mask[i] == 0` are skipped before
+    /// the dot product, so padding rows cost nothing and contribute
+    /// nothing (the loss map never sees them).  Row order and the
+    /// `c_i != 0` accumulation guard match [`Matrix::gemv_t_into`]
+    /// exactly, so traces stay bit-identical to the unfused
+    /// gemv + per-row-map + gemv_t composition.
+    pub fn fused_coeff_grad<F>(
+        &self,
+        theta: &[f64],
+        mask: &[f64],
+        mut coeff: F,
+        grad: &mut [f64],
+    ) -> f64
+    where
+        F: FnMut(usize, f64) -> (f64, f64),
+    {
+        assert_eq!(theta.len(), self.cols);
+        assert_eq!(mask.len(), self.rows);
+        assert_eq!(grad.len(), self.cols);
+        let mut loss = 0.0;
+        for i in 0..self.rows {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            let z = dot(row, theta);
+            let (li, ci) = coeff(i, z);
+            loss += li;
+            if ci != 0.0 {
+                // shared rank-1 kernel, same per-element op order as
+                // the hand-rolled loop
+                axpy(ci, row, grad);
+            }
+        }
+        loss
+    }
+
     /// Cache-blocked C = A·B (used off the hot path).
     pub fn matmul(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.rows);
@@ -213,6 +255,77 @@ mod tests {
         let mut expect = vec![0.0; 2];
         t.gemv(&r, &mut expect);
         assert_eq!(g, expect);
+    }
+
+    #[test]
+    fn fused_residual_grad_matches_two_pass_bitwise() {
+        let m = small();
+        let theta = [0.5, -1.25];
+        let y = [1.0, -2.0, 0.75];
+        // two-pass reference: gemv, subtract, gemv_t
+        let mut resid = vec![0.0; 3];
+        m.gemv(&theta, &mut resid);
+        for (r, yv) in resid.iter_mut().zip(&y) {
+            *r -= yv;
+        }
+        let mut g_ref = vec![0.0; 2];
+        m.gemv_t_into(&resid, &mut g_ref);
+        // fused pass
+        let mut r2 = vec![0.0; 3];
+        let mut g = vec![0.0; 2];
+        let loss = m.fused_residual_grad(&theta, &y, &mut r2, &mut g);
+        for (a, b) in resid.iter().zip(&r2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in g_ref.iter().zip(&g) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let want: f64 = resid.iter().map(|r| r * r).sum();
+        assert!((loss - 0.5 * want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fused_coeff_grad_matches_unfused_composition() {
+        let m = small();
+        let theta = [0.3, 0.7];
+        let mask = [1.0, 0.0, 1.0];
+        // reference: dot per unmasked row, c_i = 2·z_i + 1, ℓ_i = z_i²
+        let mut g_ref = vec![0.0; 2];
+        let mut loss_ref = 0.0;
+        for i in [0usize, 2] {
+            let z = super::dot(m.row(i), &theta);
+            loss_ref += z * z;
+            let c = 2.0 * z + 1.0;
+            for j in 0..2 {
+                g_ref[j] += c * m.row(i)[j];
+            }
+        }
+        let mut g = vec![0.0; 2];
+        let loss =
+            m.fused_coeff_grad(&theta, &mask, |_, z| (z * z, 2.0 * z + 1.0), &mut g);
+        assert_eq!(loss.to_bits(), loss_ref.to_bits());
+        for (a, b) in g_ref.iter().zip(&g) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_coeff_grad_skips_masked_rows_entirely() {
+        let m = small();
+        let mut seen = Vec::new();
+        let mut g = vec![0.0; 2];
+        let loss = m.fused_coeff_grad(
+            &[1.0, 1.0],
+            &[0.0, 1.0, 0.0],
+            |i, z| {
+                seen.push((i, z));
+                (1.0, 0.0)
+            },
+            &mut g,
+        );
+        assert_eq!(seen, vec![(1, 7.0)]);
+        assert_eq!(loss, 1.0);
+        assert_eq!(g, vec![0.0, 0.0]); // c = 0 ⇒ no accumulation
     }
 
     #[test]

@@ -69,6 +69,23 @@ pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// y[idx[j]] ← y[idx[j]] + a·val[j] — the sparse fold primitive.
+///
+/// O(nnz) instead of O(d): this is what lets the server fold a top-k
+/// payload without ever materializing the dense decode.  Each stored
+/// coordinate touches `y` exactly once, so the result matches a dense
+/// `axpy` over the decoded vector bit for bit on every stored
+/// coordinate; untouched coordinates are left alone instead of having
+/// an explicit 0.0 added (identical values — the only representational
+/// difference is that a −0.0 in `y` keeps its sign).
+#[inline]
+pub fn axpy_sparse(a: f64, idx: &[u32], val: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&i, &v) in idx.iter().zip(val) {
+        y[i as usize] += a * v;
+    }
+}
+
 /// out ← x − y
 #[inline]
 pub fn sub_into(x: &[f64], y: &[f64], out: &mut [f64]) {
@@ -110,6 +127,25 @@ mod tests {
         assert_eq!(dot(&[], &[]), 0.0);
         assert_eq!(dot(&[2.0], &[3.0]), 6.0);
         assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_sparse_matches_dense_axpy_bitwise() {
+        let decoded = vec![0.0, -5.0, 0.0, 3.0, 0.0];
+        let idx = vec![1u32, 3];
+        let val = vec![-5.0, 3.0];
+        let mut dense = vec![0.25, -1.5, 7.0, 0.125, -3.0];
+        let mut sparse = dense.clone();
+        axpy(1.0, &decoded, &mut dense);
+        axpy_sparse(1.0, &idx, &val, &mut sparse);
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // empty payload is a no-op
+        axpy_sparse(2.0, &[], &[], &mut sparse);
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -36,6 +36,24 @@ pub enum Direction {
     Up,
 }
 
+/// Wire size (bits) of a dense f64 delta of dimension `d`.
+///
+/// The canonical uplink bit-accounting for uncompressed payloads:
+/// 64 bits per coordinate.
+pub fn dense_delta_bits(d: usize) -> u64 {
+    64 * d as u64
+}
+
+/// Wire size (bits) of a sparse delta storing `nnz` coordinates.
+///
+/// Each kept coordinate is charged a 32-bit index plus a 32-bit (f32)
+/// value — the accounting the compressor baselines (top-k
+/// sparsification) use, so a sparse payload costs 64·nnz bits instead
+/// of 64·d.
+pub fn sparse_delta_bits(nnz: usize) -> u64 {
+    (32 + 32) * nnz as u64
+}
+
 /// Latency model: fixed + per-byte cost (the "communication is ~2500×
 /// a memory access" premise from the paper's introduction).
 #[derive(Clone, Copy, Debug)]
@@ -324,6 +342,15 @@ impl<T> EventQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn delta_bit_model_charges_index_plus_value_for_sparse() {
+        assert_eq!(dense_delta_bits(784), 64 * 784);
+        assert_eq!(sparse_delta_bits(25), 64 * 25);
+        assert_eq!(sparse_delta_bits(0), 0);
+        // sparse beats dense whenever fewer than d coordinates are kept
+        assert!(sparse_delta_bits(25) < dense_delta_bits(784));
+    }
 
     #[test]
     fn counts_up_and_down_separately() {

@@ -12,6 +12,8 @@
 pub mod nn;
 pub mod smoothness;
 
+use std::sync::Arc;
+
 use crate::data::Shard;
 use crate::linalg::{self, Matrix};
 
@@ -107,9 +109,13 @@ pub fn log1pexp(z: f64) -> f64 {
 // ---------------------------------------------------------------------------
 
 /// Worker objective for ½‖Xθ − y‖² over a (possibly padded) shard.
+///
+/// The shard's feature block and labels are `Arc`-shared with the
+/// owning [`Shard`], never copied — at M workers the objectives add
+/// O(1) resident memory on top of the dataset itself.
 pub struct LinRegTask {
-    x: Matrix,
-    y: Vec<f64>,
+    x: Arc<Matrix>,
+    y: Arc<Vec<f64>>,
     /// scratch residual buffer (hot path is allocation-free)
     resid: std::cell::RefCell<Vec<f64>>,
 }
@@ -118,8 +124,8 @@ impl LinRegTask {
     /// Objective over one worker's shard.
     pub fn new(shard: &Shard) -> Self {
         Self {
-            x: shard.x.clone(),
-            y: shard.y.clone(),
+            x: Arc::clone(&shard.x),
+            y: Arc::clone(&shard.y),
             resid: std::cell::RefCell::new(vec![0.0; shard.x.rows]),
         }
     }
@@ -146,28 +152,26 @@ impl WorkerObjective for LinRegTask {
 // ---------------------------------------------------------------------------
 
 /// Σ log(1+exp(−y xᵀθ)) + ½λ_m‖θ‖² over a shard (mask-aware).
+///
+/// Shard storage is `Arc`-shared (see [`LinRegTask`]).
 pub struct LogRegTask {
-    x: Matrix,
-    y: Vec<f64>,
-    mask: Vec<f64>,
+    x: Arc<Matrix>,
+    y: Arc<Vec<f64>>,
+    mask: Arc<Vec<f64>>,
     lam: f64,
-    coeff: std::cell::RefCell<Vec<f64>>,
 }
 
 impl LogRegTask {
     /// Objective over one worker's shard with per-worker λ_m = `lam`.
     pub fn new(shard: &Shard, lam: f64) -> Self {
         Self {
-            x: shard.x.clone(),
-            y: shard.y.clone(),
-            mask: shard.mask.clone(),
+            x: Arc::clone(&shard.x),
+            y: Arc::clone(&shard.y),
+            mask: Arc::clone(&shard.mask),
             lam,
-            coeff: std::cell::RefCell::new(vec![0.0; shard.x.rows]),
         }
     }
 }
-
-unsafe impl Sync for LogRegTask {}
 
 impl WorkerObjective for LogRegTask {
     fn dim(&self) -> usize {
@@ -175,29 +179,23 @@ impl WorkerObjective for LogRegTask {
     }
 
     fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
-        // fused single sweep over X (same schedule as the Pallas
-        // logreg kernel): margin, loss term, coefficient, and the
-        // rank-1 gradient update all from one row visit
-        let _ = self.coeff.borrow_mut(); // keep scratch alive for API parity
+        // fused single sweep over X via the shared coefficient kernel
+        // (the same schedule as the Pallas logreg kernel): margin,
+        // loss term, coefficient, and the rank-1 gradient update all
+        // from one row visit — see Matrix::fused_coeff_grad
         grad.fill(0.0);
-        let mut loss = 0.0;
-        let d = self.x.cols;
-        for i in 0..self.x.rows {
-            if self.mask[i] == 0.0 {
-                continue;
-            }
-            let row = self.x.row(i);
-            let margin = self.y[i] * linalg::dot(row, theta);
-            loss += log1pexp(-margin);
-            let c = -self.y[i] * sigmoid(-margin);
-            if c != 0.0 {
-                for j in 0..d {
-                    grad[j] += c * row[j];
-                }
-            }
-        }
-        linalg::axpy(self.lam, theta, grad);
-        loss + 0.5 * self.lam * linalg::norm2_sq(theta)
+        let (y, lam) = (&self.y, self.lam);
+        let loss = self.x.fused_coeff_grad(
+            theta,
+            &self.mask,
+            |i, z| {
+                let margin = y[i] * z;
+                (log1pexp(-margin), -y[i] * sigmoid(-margin))
+            },
+            grad,
+        );
+        linalg::axpy(lam, theta, grad);
+        loss + 0.5 * lam * linalg::norm2_sq(theta)
     }
 }
 
@@ -334,9 +332,9 @@ mod tests {
         for i in 0..16 {
             x.row_mut(i).copy_from_slice(base.x.row(i));
         }
-        padded.x = x;
-        padded.y.extend(std::iter::repeat_n(0.0, 8));
-        padded.mask.extend(std::iter::repeat_n(0.0, 8));
+        padded.x = Arc::new(x);
+        Arc::make_mut(&mut padded.y).extend(std::iter::repeat_n(0.0, 8));
+        Arc::make_mut(&mut padded.mask).extend(std::iter::repeat_n(0.0, 8));
         let theta = Xoshiro256::new(9).gaussian_vec(4);
         let (o1, o2) = (
             LogRegTask::new(&base, 0.1),
@@ -350,6 +348,18 @@ mod tests {
         for i in 0..4 {
             assert!((g1[i] - g2[i]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn objectives_share_shard_storage_instead_of_cloning() {
+        let shard = fixture(16, 4, 99);
+        let lin = LinRegTask::new(&shard);
+        let log = LogRegTask::new(&shard, 0.1);
+        // Arc-shared, not copied: same allocation as the shard's
+        assert!(Arc::ptr_eq(&lin.x, &shard.x));
+        assert!(Arc::ptr_eq(&lin.y, &shard.y));
+        assert!(Arc::ptr_eq(&log.x, &shard.x));
+        assert!(Arc::ptr_eq(&log.mask, &shard.mask));
     }
 
     #[test]

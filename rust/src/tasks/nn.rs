@@ -8,6 +8,7 @@
 //! fused Pallas kernel step for step.
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
 use crate::data::Shard;
 use crate::linalg::{self, Matrix};
@@ -50,10 +51,13 @@ struct Scratch {
 }
 
 /// Worker objective for the NN task.
+///
+/// Shard storage is `Arc`-shared with the owning [`Shard`] (see
+/// [`super::LinRegTask`]); only the activation scratch is per-object.
 pub struct NnTask {
-    x: Matrix,
-    y: Vec<f64>,
-    mask: Vec<f64>,
+    x: Arc<Matrix>,
+    y: Arc<Vec<f64>>,
+    mask: Arc<Vec<f64>>,
     lam: f64,
     /// data-term multiplier; 1/N_m gives the paper's mean-loss NN
     /// regime (gradients O(1) so α = 0.01…0.02 is stable)
@@ -72,9 +76,9 @@ impl NnTask {
     pub fn with_scale(shard: &Shard, lam: f64, h: usize, wscale: f64) -> Self {
         let n = shard.x.rows;
         Self {
-            x: shard.x.clone(),
-            y: shard.y.clone(),
-            mask: shard.mask.clone(),
+            x: Arc::clone(&shard.x),
+            y: Arc::clone(&shard.y),
+            mask: Arc::clone(&shard.mask),
             lam,
             wscale,
             h,
@@ -129,10 +133,9 @@ impl WorkerObjective for NnTask {
                 if xk == 0.0 {
                     continue;
                 }
-                let w1row = &p.w1[k * h..(k + 1) * h];
-                for j in 0..h {
-                    zrow[j] += xk * w1row[j];
-                }
+                // stride-1 rank-1 update through the shared kernel
+                // (identical op order to the hand-rolled loop)
+                linalg::axpy(xk, &p.w1[k * h..(k + 1) * h], zrow);
             }
             for v in zrow.iter_mut() {
                 *v = sigmoid(*v);
@@ -167,10 +170,8 @@ impl WorkerObjective for NnTask {
                 if xk == 0.0 {
                     continue;
                 }
-                let gw1row = &mut gw1[k * h..(k + 1) * h];
-                for j in 0..h {
-                    gw1row[j] += xk * dzrow[j];
-                }
+                // gw1[k,·] += x_k · dz — same shared rank-1 kernel
+                linalg::axpy(xk, dzrow, &mut gw1[k * h..(k + 1) * h]);
             }
         }
         // scale the data terms (mean-loss regime), then regularize
@@ -236,9 +237,9 @@ mod tests {
         for i in 0..8 {
             x.row_mut(i).copy_from_slice(base.x.row(i));
         }
-        padded.x = x;
-        padded.y.extend([0.0; 4]);
-        padded.mask.extend([0.0; 4]);
+        padded.x = Arc::new(x);
+        Arc::make_mut(&mut padded.y).extend([0.0; 4]);
+        Arc::make_mut(&mut padded.mask).extend([0.0; 4]);
         let h = 4;
         let theta = Xoshiro256::new(13).gaussian_vec(param_dim(3, h));
         let (o1, o2) = (NnTask::new(&base, 0.1, h), NnTask::new(&padded, 0.1, h));

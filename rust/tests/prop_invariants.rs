@@ -13,6 +13,9 @@
 //!   6. participation schedules are deterministic in (policy, seed)
 //!      and engine-independent; straggler-as-skip keeps the eq. (5)
 //!      telescope exact.
+//!   7. the fused single-pass gradient kernels are bit-identical to
+//!      the two-pass (gemv + gemv_t) composition they replace, over
+//!      random shapes.
 
 use chb_fed::coordinator::{
     run_rayon, run_serial, run_threaded, Participation, RunConfig, Schedule,
@@ -75,6 +78,128 @@ fn aggregate_telescopes_to_sum_of_last_transmitted() {
             diff <= 1e-9 * scale,
             "aggregate drifted from telescoped sum: {diff:.3e} (scale {scale:.3e})"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_residual_grad_is_bitwise_equal_to_two_pass_composition() {
+    prop::check("fused ≡ gemv∘sub∘gemv_t", 60, |g| {
+        let n = g.usize_in(1..=48);
+        let d = g.usize_in(1..=24);
+        let mut x = linalg::Matrix::zeros(n, d);
+        for v in &mut x.data {
+            *v = g.gaussian();
+        }
+        // exercise the r == 0 skip path: zero out some rows
+        for i in 0..n {
+            if g.bool() && g.bool() {
+                x.row_mut(i).fill(0.0);
+            }
+        }
+        let theta = g.vec_f64(d, 3.0);
+        let mut y = g.vec_f64(n, 3.0);
+        for (i, yv) in y.iter_mut().enumerate() {
+            if x.row(i).iter().all(|&v| v == 0.0) {
+                *yv = 0.0; // zero rows get zero labels → r = 0 exactly
+            }
+        }
+        // two-pass reference: stream X twice
+        let mut resid_ref = vec![0.0; n];
+        x.gemv(&theta, &mut resid_ref);
+        for (r, yv) in resid_ref.iter_mut().zip(&y) {
+            *r -= yv;
+        }
+        let mut grad_ref = vec![0.0; d];
+        x.gemv_t_into(&resid_ref, &mut grad_ref);
+        let loss_ref: f64 =
+            0.5 * resid_ref.iter().map(|r| r * r).sum::<f64>();
+        // fused: one sweep
+        let mut resid = vec![0.0; n];
+        let mut grad = vec![0.0; d];
+        let loss = x.fused_residual_grad(&theta, &y, &mut resid, &mut grad);
+        for i in 0..n {
+            chb_fed::assert_prop!(
+                resid[i].to_bits() == resid_ref[i].to_bits(),
+                "resid[{i}]: fused {} vs two-pass {}",
+                resid[i],
+                resid_ref[i]
+            );
+        }
+        for j in 0..d {
+            chb_fed::assert_prop!(
+                grad[j].to_bits() == grad_ref[j].to_bits(),
+                "grad[{j}]: fused {} vs two-pass {}",
+                grad[j],
+                grad_ref[j]
+            );
+        }
+        // loss accumulates in row order both ways (0.5·Σr² vs Σ½r²
+        // differ by one final multiply on the same sum)
+        chb_fed::assert_prop!(
+            loss.to_bits() == loss_ref.to_bits(),
+            "loss: fused {loss} vs two-pass {loss_ref}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_coeff_grad_is_bitwise_equal_to_unfused_sweep() {
+    prop::check("fused coeff ≡ per-row dot + rank-1", 40, |g| {
+        let n = g.usize_in(1..=40);
+        let d = g.usize_in(1..=16);
+        let mut x = linalg::Matrix::zeros(n, d);
+        for v in &mut x.data {
+            *v = g.gaussian();
+        }
+        let theta = g.vec_f64(d, 2.0);
+        let mask: Vec<f64> =
+            (0..n).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+        let y: Vec<f64> =
+            (0..n).map(|_| if g.bool() { 1.0 } else { -1.0 }).collect();
+        // unfused reference with the logistic coefficient map
+        let mut grad_ref = vec![0.0; d];
+        let mut loss_ref = 0.0;
+        for i in 0..n {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let z = linalg::dot(x.row(i), &theta);
+            let margin = y[i] * z;
+            loss_ref += chb_fed::tasks::log1pexp(-margin);
+            let c = -y[i] * chb_fed::tasks::sigmoid(-margin);
+            if c != 0.0 {
+                for j in 0..d {
+                    grad_ref[j] += c * x.row(i)[j];
+                }
+            }
+        }
+        let mut grad = vec![0.0; d];
+        let loss = x.fused_coeff_grad(
+            &theta,
+            &mask,
+            |i, z| {
+                let margin = y[i] * z;
+                (
+                    chb_fed::tasks::log1pexp(-margin),
+                    -y[i] * chb_fed::tasks::sigmoid(-margin),
+                )
+            },
+            &mut grad,
+        );
+        chb_fed::assert_prop!(
+            loss.to_bits() == loss_ref.to_bits(),
+            "loss: {loss} vs {loss_ref}"
+        );
+        for j in 0..d {
+            chb_fed::assert_prop!(
+                grad[j].to_bits() == grad_ref[j].to_bits(),
+                "grad[{j}]: {} vs {}",
+                grad[j],
+                grad_ref[j]
+            );
+        }
         Ok(())
     });
 }

@@ -1,0 +1,188 @@
+//! Integration: the sparse payload pipeline is an exact drop-in for
+//! the dense one.  A run whose workers uplink `TopK` (which emits
+//! `Payload::Sparse` and folds in O(k) via `linalg::axpy_sparse`) must
+//! be bit-identical to the same run with `DenseDecoded(TopK)` (same
+//! codec, dense O(d) decode + fold) — on all four paper tasks, across
+//! the serial / threaded / rayon pools, and through the async engine's
+//! degenerate (synchronous-equivalent) regime.  Also pins the eq. (5)
+//! telescope under sparse folds: server Σ folded payloads ≡ Σ worker
+//! decoded deltas.
+
+use std::sync::Arc;
+
+use chb_fed::compress::{Compressor, DenseDecoded, TopK};
+use chb_fed::coordinator::{
+    run_async, run_rayon, run_serial, run_threaded, AsyncConfig, RunConfig,
+    Server, Worker,
+};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::linalg;
+use chb_fed::metrics::Trace;
+use chb_fed::net::LatencyModel;
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::tasks::TaskKind;
+
+/// Small instance of one paper task: M = 4 workers, 12×8 shards.
+fn problem_for(task: TaskKind) -> Problem {
+    let (m, n, d) = (4usize, 12usize, 8usize);
+    let l_m: Vec<f64> =
+        (0..m).map(|i| (1.0 + 0.4 * i as f64).powi(2)).collect();
+    let seed = 0xF0 + match task {
+        TaskKind::LinReg => 1,
+        TaskKind::LogReg => 2,
+        TaskKind::Lasso => 3,
+        TaskKind::Nn => 4,
+    };
+    let per_worker = synthetic::per_worker_rescaled(seed, m, n, d, &l_m);
+    let lam = match task {
+        TaskKind::Lasso => 0.05,
+        TaskKind::LogReg | TaskKind::Nn => 0.01,
+        TaskKind::LinReg => 0.0,
+    };
+    Problem::from_worker_datasets(task, "sparse-equiv", &per_worker, lam)
+}
+
+fn workers_with(p: &Problem, codec: Arc<dyn Compressor>) -> Vec<Worker> {
+    p.rust_workers()
+        .into_iter()
+        .map(|w| w.with_compressor(Arc::clone(&codec)))
+        .collect()
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{what}: loss differs at k={}",
+            x.k
+        );
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² differs at k={}",
+            x.k
+        );
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms at k={}", x.k);
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits at k={}", x.k);
+    }
+    assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: S_m");
+    assert_eq!(a.participants, b.participants, "{what}: participants");
+}
+
+fn params_for(p: &Problem, task: TaskKind) -> (MethodParams, usize) {
+    let iters = if task == TaskKind::Nn { 15 } else { 40 };
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    (params, iters)
+}
+
+#[test]
+fn sparse_topk_matches_dense_decoded_topk_on_all_four_tasks() {
+    for task in
+        [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+    {
+        let p = problem_for(task);
+        let (params, iters) = params_for(&p, task);
+        let cfg = RunConfig::new(Method::Chb, params, iters);
+        // k < d so the sparsifier is genuinely lossy
+        let k = 3;
+        let mut sparse_ws = workers_with(&p, Arc::new(TopK { k }));
+        let sparse = run_serial(&mut sparse_ws, &cfg, p.theta0());
+        let mut dense_ws =
+            workers_with(&p, Arc::new(DenseDecoded(TopK { k })));
+        let dense = run_serial(&mut dense_ws, &cfg, p.theta0());
+        let name = task.name();
+        assert_traces_identical(&sparse, &dense, &format!("{name} s-vs-d"));
+        // worker θ̂ bookkeeping is also bit-identical across the two
+        // payload representations
+        for (a, b) in sparse_ws.iter().zip(&dense_ws) {
+            for (x, y) in
+                a.last_transmitted().iter().zip(b.last_transmitted())
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}: θ̂ drifted");
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_payloads_are_pool_independent() {
+    for task in [TaskKind::LinReg, TaskKind::Nn] {
+        let p = problem_for(task);
+        let (params, iters) = params_for(&p, task);
+        let cfg = RunConfig::new(Method::Chb, params, iters);
+        let codec: Arc<dyn Compressor> = Arc::new(TopK { k: 3 });
+        let mut ws = workers_with(&p, Arc::clone(&codec));
+        let serial = run_serial(&mut ws, &cfg, p.theta0());
+        let threaded =
+            run_threaded(workers_with(&p, Arc::clone(&codec)), &cfg, p.theta0());
+        let rayon =
+            run_rayon(workers_with(&p, Arc::clone(&codec)), &cfg, p.theta0());
+        let name = task.name();
+        assert_traces_identical(&serial, &threaded, &format!("{name} threaded"));
+        assert_traces_identical(&serial, &rayon, &format!("{name} rayon"));
+    }
+}
+
+#[test]
+fn degenerate_async_folds_sparse_payloads_identically_to_serial() {
+    let task = TaskKind::LinReg;
+    let p = problem_for(task);
+    let (params, iters) = params_for(&p, task);
+    let cfg = RunConfig::new(Method::Chb, params, iters);
+    let codec: Arc<dyn Compressor> = Arc::new(TopK { k: 3 });
+    let mut ws = workers_with(&p, Arc::clone(&codec));
+    let serial = run_serial(&mut ws, &cfg, p.theta0());
+    let acfg = AsyncConfig {
+        latency: LatencyModel::zero(),
+        ..AsyncConfig::default()
+    };
+    let mut ws = workers_with(&p, codec);
+    let a = run_async(&mut ws, &cfg, &acfg, p.theta0());
+    assert_traces_identical(&serial, &a, "async degenerate sparse");
+}
+
+#[test]
+fn sparse_folds_preserve_the_telescoping_aggregate() {
+    let p = problem_for(TaskKind::LinReg);
+    let m = p.m_workers();
+    let params = MethodParams::new(0.8 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, m);
+    let censor =
+        chb_fed::optim::method::build_censor_rule(Method::Chb, &params);
+    let mut server = Server::new(Method::Chb, &params, p.theta0());
+    let mut workers = workers_with(&p, Arc::new(TopK { k: 2 }));
+    for k in 1..=50 {
+        let step_sq = server.theta_step_sq();
+        let theta = server.theta.clone();
+        let rounds: Vec<_> = workers
+            .iter_mut()
+            .map(|w| w.round(&theta, step_sq, censor.as_ref(), k))
+            .collect();
+        server.apply_round(&rounds);
+    }
+    // eq. (5) with sparse payloads: the server aggregate still equals
+    // Σ_m (worker m's decoded-delta bookkeeping).  The two sides fold
+    // the identical additions in different orders (round-major vs
+    // worker-major), so the comparison is to f64 round-off — the same
+    // tolerance the dense telescope property test uses.
+    let dim = server.dim();
+    let mut expect = vec![0.0; dim];
+    for w in &workers {
+        linalg::axpy(1.0, w.last_transmitted(), &mut expect);
+    }
+    let scale = linalg::norm2(&expect).max(1.0);
+    for i in 0..dim {
+        assert!(
+            (expect[i] - server.agg_grad[i]).abs() <= 1e-9 * scale,
+            "telescope broke at coord {i}: {} vs {}",
+            expect[i],
+            server.agg_grad[i]
+        );
+    }
+}
