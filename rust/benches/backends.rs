@@ -39,9 +39,10 @@ fn main() {
         let obj = tasks::build_objective(task, shard, lam);
         let dim = obj.dim();
         let theta: Vec<f64> = (0..dim).map(|i| (i % 5) as f64 * 0.01).collect();
+        let mut ws = tasks::TaskWorkspace::default();
         let mut grad = vec![0.0; dim];
         b.run(&format!("rust {} {dataset}", task.name()), |_| {
-            black_box(obj.grad_loss_into(black_box(&theta), &mut grad));
+            black_box(obj.grad_loss_into(black_box(&theta), &mut ws, &mut grad));
         });
 
         let meta = rt.manifest().find(task, dataset).unwrap().clone();
@@ -57,8 +58,9 @@ fn bench_rust_only(b: &Bencher) {
     let shards = partition::split_even(&ds, 9);
     let obj = tasks::build_objective(TaskKind::LinReg, &shards[0], 0.0);
     let theta = vec![0.01; obj.dim()];
+    let mut ws = tasks::TaskWorkspace::default();
     let mut grad = vec![0.0; obj.dim()];
     b.run("rust linreg synth", |_| {
-        black_box(obj.grad_loss_into(black_box(&theta), &mut grad));
+        black_box(obj.grad_loss_into(black_box(&theta), &mut ws, &mut grad));
     });
 }

@@ -86,6 +86,34 @@ fn main() {
                 &mut g,
             ));
         }));
+        // minibatch-vs-full gradient kernel: the row-subset sweep the
+        // stochastic regime runs (data::batch draws, here a fixed
+        // quarter-shard set) against the full fused sweep above — the
+        // per-round compute saving censored SGD buys
+        {
+            use chb_fed::data::batch::{BatchSampler, BatchSchedule};
+            let b = (n / 4).max(1);
+            let sched = BatchSchedule::Minibatch {
+                size: b,
+                seed: 0xB47C,
+                replace: false,
+            };
+            let mut sampler = BatchSampler::new(sched, 0, n);
+            let rows: Vec<u32> = sampler.draw(1).unwrap().to_vec();
+            all.push(micro.run(
+                &format!("linreg grad minibatch b={b} {n}x{d}"),
+                |_| {
+                    g.fill(0.0);
+                    black_box(m.fused_residual_grad_rows(
+                        black_box(&theta),
+                        &y,
+                        &rows,
+                        &mut out,
+                        &mut g,
+                    ));
+                },
+            ));
+        }
     }
 
     // -- worker round (gradient + censor decision) ------------------------
@@ -124,6 +152,33 @@ fn main() {
                 ));
             },
         ));
+        // minibatch worker round: quarter-shard gradient subset plus
+        // the full-shard measurement-side loss pass — the steady-state
+        // stochastic-regime round, against the dense-tx row above
+        {
+            use chb_fed::data::batch::BatchSchedule;
+            let obj = build_objective(TaskKind::LinReg, &shard, 0.0);
+            let mut worker = Worker::new(
+                0,
+                Box::new(chb_fed::coordinator::RustBackend::new(obj)),
+            )
+            .with_batching(BatchSchedule::Minibatch {
+                size: (n / 4).max(1),
+                seed: 0xB47C,
+                replace: false,
+            });
+            all.push(std_b.run(
+                &format!("worker round linreg minibatch-tx {name}"),
+                |k| {
+                    black_box(worker.round(
+                        black_box(&theta),
+                        1.0,
+                        &NeverCensor,
+                        k + 1,
+                    ));
+                },
+            ));
+        }
         // same round through the sparse top-k uplink: compress_into
         // writes into the worker's arena, no per-round allocation.
         // NeverCensor, not the ε₁ rule: θ is fixed here, so once the
@@ -163,6 +218,7 @@ fn main() {
                 loss: 1.0,
                 delta_sq: 1.0,
                 bits: dense_delta_bits(d),
+                batch_frac: 1.0,
             })
             .collect();
         let sparse_rounds: Vec<_> = (0..9)
@@ -180,6 +236,7 @@ fn main() {
                     loss: 1.0,
                     delta_sq: 1.0,
                     bits: sparse_delta_bits(k_sparse),
+                    batch_frac: 1.0,
                 }
             })
             .collect();

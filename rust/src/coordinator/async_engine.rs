@@ -414,6 +414,14 @@ fn fold_batch(
         }
         trace.comm_map.push(row);
     }
+    // mean shard fraction over this batch's gradients (see the
+    // synchronous fold) — the epoch column accumulates it scaled by
+    // the batch's share of the cohort, so one epoch still means "one
+    // full pass over the global dataset" under per-arrival folds
+    let batch_frac = batch.iter().map(|r| r.batch_frac).sum::<f64>()
+        / batch.len().max(1) as f64;
+    let epoch_inc = batch.iter().map(|r| r.batch_frac).sum::<f64>()
+        / loss_cache.len().max(1) as f64;
     let out = server.apply_round(batch);
     // global loss: every worker's latest report, summed in id order
     // (identical to the synchronous sum when all M are in the batch)
@@ -432,6 +440,8 @@ fn fold_batch(
         bits_cum: prev.map_or(0, |s| s.bits_cum) + bits_round,
         vclock_us: t,
         stale_max,
+        batch_frac,
+        epoch: prev.map_or(0.0, |s| s.epoch) + epoch_inc,
     };
     trace.participants.push(batch.len());
     let stop = cfg.should_stop(&stat);

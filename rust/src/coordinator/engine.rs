@@ -152,6 +152,20 @@ fn fold_round(
         .filter(|r| r.decision == CensorDecision::Transmit)
         .map(|r| r.bits)
         .sum();
+    // batch_frac column: mean shard fraction over the workers that
+    // actually computed a gradient this round (observers report 0.0
+    // and are excluded, so partial participation does not dilute the
+    // schedule's fraction).  epoch column: Σ fractions / M ≈ global
+    // data passes consumed — it advances by < 1 when only part of the
+    // cohort computes, and by exactly 1 per round in the legacy
+    // full-batch full-participation regime.
+    let (frac_sum, computed) = rounds
+        .iter()
+        .filter(|r| r.batch_frac > 0.0)
+        .fold((0.0f64, 0usize), |(s, c), r| (s + r.batch_frac, c + 1));
+    let batch_frac =
+        if computed > 0 { frac_sum / computed as f64 } else { 1.0 };
+    let epoch_inc = frac_sum / rounds.len().max(1) as f64;
     let out = server.apply_round(rounds);
     let prev = trace.iters.last();
     IterStat {
@@ -166,6 +180,8 @@ fn fold_round(
         // synchronous rounds fold every delta at the iterate it was
         // computed on — arrival staleness is identically zero
         stale_max: 0,
+        batch_frac,
+        epoch: prev.map_or(0.0, |s| s.epoch) + epoch_inc,
     }
 }
 

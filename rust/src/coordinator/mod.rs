@@ -27,6 +27,14 @@
 //! as they arrive, stale by `s` steps.  With zero latency and uniform
 //! compute it reduces bit-identically to the serial engine
 //! (`tests/async_engine.rs`).
+//!
+//! Orthogonal to both axes is the *gradient-sampling* layer
+//! (`data::batch`): a [`Worker`] built with
+//! [`Worker::with_batching`] evaluates row-subset minibatch gradients
+//! per its `BatchSchedule` (full shard / fixed minibatch / growing
+//! batch), while still reporting the full-shard loss so traces stay
+//! comparable.  `BatchSchedule::Full` is bit-identical to the legacy
+//! path on every engine (`tests/batch_equivalence.rs`).
 
 pub mod async_engine;
 pub mod engine;

@@ -130,6 +130,7 @@ mod tests {
             loss,
             delta_sq,
             bits,
+            batch_frac: 1.0,
         }
     }
 
@@ -141,6 +142,7 @@ mod tests {
             loss,
             delta_sq: 0.0,
             bits: 0,
+            batch_frac: 1.0,
         }
     }
 
@@ -172,6 +174,7 @@ mod tests {
             loss: 0.0,
             delta_sq: 0.0,
             bits: 128,
+            batch_frac: 1.0,
         };
         let dense = tx(0, vec![0.0, -2.5, 0.0, 4.0], 0.0);
         let mut a = Server::new(Method::Gd, &p, vec![1.0; 4]);

@@ -3,10 +3,11 @@
 use std::sync::Arc;
 
 use crate::compress::{CodecScratch, Compressor, Payload};
+use crate::data::batch::{BatchSampler, BatchSchedule};
 use crate::linalg;
 use crate::net::dense_delta_bits;
 use crate::optim::{CensorDecision, CensorRule};
-use crate::tasks::WorkerObjective;
+use crate::tasks::{TaskWorkspace, WorkerObjective};
 
 /// Where a worker's gradient comes from.  The pure-rust backend wraps
 /// a [`WorkerObjective`]; the PJRT backend (runtime/pjrt.rs) executes
@@ -14,19 +15,52 @@ use crate::tasks::WorkerObjective;
 pub trait GradientBackend: Send {
     /// Parameter dimension d this backend computes over.
     fn dim(&self) -> usize;
+
+    /// Real (unpadded) shard rows — the universe minibatch schedules
+    /// draw from.  0 (the default) means "not row-indexed": such a
+    /// backend supports [`BatchSchedule::Full`] only.
+    fn num_rows(&self) -> usize {
+        0
+    }
+
     /// Write ∇f_m(θ) into `grad`, return f_m(θ).
     fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64;
+
+    /// Write the scaled minibatch gradient estimate over `rows` into
+    /// `grad` (see [`WorkerObjective::grad_loss_batch_into`]).  The
+    /// default panics: backends that never report rows are never
+    /// handed a batch schedule (enforced at sampler construction).
+    fn grad_loss_batch_into(
+        &mut self,
+        theta: &[f64],
+        rows: &[u32],
+        grad: &mut [f64],
+    ) -> f64 {
+        let _ = (theta, rows, grad);
+        unimplemented!("this gradient backend is not row-indexed")
+    }
+
+    /// Full-shard objective value only — the measurement-side pass a
+    /// batched round uses so traces keep reporting the global loss.
+    /// Default allocates; hot-path backends override.
+    fn loss(&mut self, theta: &[f64]) -> f64 {
+        let mut g = vec![0.0; self.dim()];
+        self.grad_loss_into(theta, &mut g)
+    }
 }
 
-/// f64 in-process backend.
+/// f64 in-process backend: one immutable objective + this worker's
+/// private evaluation workspace (the scratch that used to hide inside
+/// the objectives behind `RefCell` + `unsafe impl Sync`).
 pub struct RustBackend {
     obj: Box<dyn WorkerObjective>,
+    ws: TaskWorkspace,
 }
 
 impl RustBackend {
     /// Wrap a task objective as a gradient backend.
     pub fn new(obj: Box<dyn WorkerObjective>) -> Self {
-        Self { obj }
+        Self { obj, ws: TaskWorkspace::default() }
     }
 }
 
@@ -35,8 +69,25 @@ impl GradientBackend for RustBackend {
         self.obj.dim()
     }
 
+    fn num_rows(&self) -> usize {
+        self.obj.num_rows()
+    }
+
     fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
-        self.obj.grad_loss_into(theta, grad)
+        self.obj.grad_loss_into(theta, &mut self.ws, grad)
+    }
+
+    fn grad_loss_batch_into(
+        &mut self,
+        theta: &[f64],
+        rows: &[u32],
+        grad: &mut [f64],
+    ) -> f64 {
+        self.obj.grad_loss_batch_into(theta, rows, &mut self.ws, grad)
+    }
+
+    fn loss(&mut self, theta: &[f64]) -> f64 {
+        self.obj.loss(theta, &mut self.ws)
     }
 }
 
@@ -61,6 +112,11 @@ pub struct WorkerRound {
     pub delta_sq: f64,
     /// simulated wire size of the uplink payload (0 when skipping)
     pub bits: u64,
+    /// fraction of this worker's shard the gradient visited: 1.0 in
+    /// the full-batch regime, `|B|/n` under minibatch schedules (> 1
+    /// when a with-replacement draw oversamples the shard), and 0.0
+    /// for loss-only observations (no gradient was computed at all)
+    pub batch_frac: f64,
 }
 
 /// One federated worker: shard + censor state.
@@ -86,6 +142,9 @@ pub struct Worker {
     codec_scratch: CodecScratch,
     /// optional uplink codec (paper conclusion: CHB ∘ quantization)
     compressor: Option<Arc<dyn Compressor>>,
+    /// optional gradient-sampling stream; `None` = the legacy
+    /// full-batch path, bit-for-bit
+    sampler: Option<BatchSampler>,
     /// lifetime transmit counter S_m (Lemma 2)
     pub transmissions: usize,
 }
@@ -108,6 +167,7 @@ impl Worker {
             empty: Arc::new(Payload::default()),
             codec_scratch: CodecScratch::default(),
             compressor: None,
+            sampler: None,
             transmissions: 0,
         }
     }
@@ -118,6 +178,18 @@ impl Worker {
     /// appears only as bounded gradient staleness.
     pub fn with_compressor(mut self, c: Arc<dyn Compressor>) -> Self {
         self.compressor = Some(c);
+        self
+    }
+
+    /// Attach a gradient-sampling schedule.  [`BatchSchedule::Full`]
+    /// installs no sampler at all — the worker stays on the legacy
+    /// full-batch path, bit-for-bit.  Any other schedule requires a
+    /// row-indexed backend ([`GradientBackend::num_rows`] > 0).
+    pub fn with_batching(mut self, schedule: BatchSchedule) -> Self {
+        self.sampler = match schedule {
+            BatchSchedule::Full => None,
+            s => Some(BatchSampler::new(s, self.id, self.backend.num_rows())),
+        };
         self
     }
 
@@ -137,7 +209,34 @@ impl Worker {
         censor: &dyn CensorRule,
         k: usize,
     ) -> WorkerRound {
-        let loss = self.backend.grad_loss_into(theta, &mut self.grad);
+        // gradient flavor: full sweep (legacy, bit-pinned) unless the
+        // sampler draws a proper row subset for round k.  Batched
+        // rounds still report the FULL-shard loss (measurement side,
+        // zero communication) so traces stay comparable across
+        // schedules.
+        let (loss, batch_frac) = match &mut self.sampler {
+            None => {
+                (self.backend.grad_loss_into(theta, &mut self.grad), 1.0)
+            }
+            Some(s) => {
+                let n = s.n_rows() as f64;
+                match s.draw(k) {
+                    None => (
+                        self.backend.grad_loss_into(theta, &mut self.grad),
+                        1.0,
+                    ),
+                    Some(rows) => {
+                        let frac = rows.len() as f64 / n;
+                        self.backend.grad_loss_batch_into(
+                            theta,
+                            rows,
+                            &mut self.grad,
+                        );
+                        (self.backend.loss(theta), frac)
+                    }
+                }
+            }
+        };
         linalg::sub_into(&self.grad, &self.last_tx_grad, &mut self.delta);
         let delta_sq = linalg::norm2_sq(&self.delta);
         let decision = censor.decide(delta_sq, theta_step_sq, k);
@@ -174,7 +273,15 @@ impl Worker {
         } else {
             (Arc::clone(&self.empty), 0)
         };
-        WorkerRound { worker: self.id, decision, delta, loss, delta_sq, bits }
+        WorkerRound {
+            worker: self.id,
+            decision,
+            delta,
+            loss,
+            delta_sq,
+            bits,
+            batch_frac,
+        }
     }
 
     /// Measurement-only round for a worker outside the scheduled set
@@ -182,9 +289,12 @@ impl Worker {
     /// reporting the *global* loss, but never touches the censor state
     /// — no δ∇ bookkeeping, no transmission, no bits on the wire.
     /// From the server's perspective this is indistinguishable from a
-    /// censored worker, which eq. (5) tolerates by design.
+    /// censored worker, which eq. (5) tolerates by design.  Uses the
+    /// forward-only loss pass (bit-identical value to the gradient
+    /// pass — pinned by `tasks::tests`) so observers skip the
+    /// backward work entirely.
     pub fn observe(&mut self, theta: &[f64]) -> WorkerRound {
-        let loss = self.backend.grad_loss_into(theta, &mut self.grad);
+        let loss = self.backend.loss(theta);
         WorkerRound {
             worker: self.id,
             decision: CensorDecision::Skip,
@@ -192,6 +302,9 @@ impl Worker {
             loss,
             delta_sq: 0.0,
             bits: 0,
+            // no gradient computed: must not dilute the round's mean
+            // batch fraction or advance the epoch column
+            batch_frac: 0.0,
         }
     }
 
@@ -344,6 +457,84 @@ mod tests {
         assert!(s1.delta.is_empty() && s2.delta.is_empty());
         // both are refcount bumps on the same zero-size payload
         assert_eq!(Arc::as_ptr(&s1.delta), Arc::as_ptr(&s2.delta));
+    }
+
+    /// Row-indexed toy: f(θ) = Σ_i ½(θ − c_i)² over n scalar "rows".
+    struct RowToy {
+        c: Vec<f64>,
+    }
+
+    impl GradientBackend for RowToy {
+        fn dim(&self) -> usize {
+            1
+        }
+
+        fn num_rows(&self) -> usize {
+            self.c.len()
+        }
+
+        fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+            let mut l = 0.0;
+            grad[0] = 0.0;
+            for &c in &self.c {
+                let d = theta[0] - c;
+                grad[0] += d;
+                l += d * d;
+            }
+            0.5 * l
+        }
+
+        fn grad_loss_batch_into(
+            &mut self,
+            theta: &[f64],
+            rows: &[u32],
+            grad: &mut [f64],
+        ) -> f64 {
+            let s = self.c.len() as f64 / rows.len() as f64;
+            let mut l = 0.0;
+            grad[0] = 0.0;
+            for &i in rows {
+                let d = theta[0] - self.c[i as usize];
+                grad[0] += d;
+                l += d * d;
+            }
+            grad[0] *= s;
+            0.5 * l * s
+        }
+    }
+
+    #[test]
+    fn full_schedule_is_bitwise_the_unbatched_worker() {
+        use crate::data::batch::BatchSchedule;
+        let c = vec![1.0, 2.0, -3.0, 0.5];
+        let mut plain = Worker::new(0, Box::new(RowToy { c: c.clone() }));
+        let mut batched = Worker::new(0, Box::new(RowToy { c }))
+            .with_batching(BatchSchedule::Full);
+        for (k, th) in [[0.0], [0.7], [-0.2]].iter().enumerate() {
+            let a = plain.round(th, 1.0, &NeverCensor, k + 1);
+            let b = batched.round(th, 1.0, &NeverCensor, k + 1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.delta, b.delta);
+            assert_eq!(b.batch_frac, 1.0);
+        }
+    }
+
+    #[test]
+    fn minibatch_round_reports_fraction_and_full_shard_loss() {
+        use crate::data::batch::BatchSchedule;
+        let c = vec![1.0, 2.0, -3.0, 0.5];
+        let mut full = Worker::new(0, Box::new(RowToy { c: c.clone() }));
+        let mut mini =
+            Worker::new(0, Box::new(RowToy { c })).with_batching(
+                BatchSchedule::Minibatch { size: 2, seed: 7, replace: false },
+            );
+        let rf = full.round(&[0.3], 1.0, &NeverCensor, 1);
+        let rm = mini.round(&[0.3], 1.0, &NeverCensor, 1);
+        // the reported loss is the full-shard value either way …
+        assert_eq!(rf.loss.to_bits(), rm.loss.to_bits());
+        // … while the gradient visited half the rows
+        assert_eq!(rm.batch_frac, 0.5);
+        assert_eq!(rf.batch_frac, 1.0);
     }
 
     #[test]

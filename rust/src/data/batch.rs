@@ -1,0 +1,319 @@
+//! The gradient-sampling subsystem: which rows of its shard a worker
+//! visits at round k.
+//!
+//! The paper validates CHB on deterministic full-shard gradients; its
+//! nearest neighbors — CSGD (*Communication-Censored Distributed
+//! Stochastic Gradient Descent*, Li et al.) and LAG (Chen et al.) —
+//! show the censoring question changes character under stochastic
+//! gradients.  This module supplies the sampling side of that regime:
+//!
+//! * [`BatchSchedule`] — the policy (full shard, fixed-size minibatch
+//!   with or without replacement, or a CSGD-style geometrically
+//!   growing batch), shared by every worker of a run.
+//! * [`BatchSampler`] — one per worker: materializes the policy into
+//!   concrete row-index slices, deterministically per
+//!   `(worker, seed, k)` and **independent of any pool interleaving
+//!   or engine choice** (each draw re-seeds a fresh xoshiro stream
+//!   from a hash of the triple, so no sampler state leaks between
+//!   rounds).
+//!
+//! `BatchSchedule::Full` never draws at all — the worker takes the
+//! legacy full-shard kernel path, bit-for-bit
+//! (`tests/batch_equivalence.rs` pins this across all four tasks and
+//! all four engines).
+
+use crate::rng::{SplitMix64, Xoshiro256};
+
+/// Which rows of its shard a worker's gradient visits each round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchSchedule {
+    /// the paper's deterministic regime: every real row, every round
+    /// (bit-identical to the pre-batching code path)
+    Full,
+    /// fixed-size minibatch, redrawn every round from a per-worker
+    /// seeded stream
+    Minibatch {
+        /// rows per batch (clamped to `[1, n_real]`)
+        size: usize,
+        /// master seed for the per-(worker, round) draw streams
+        seed: u64,
+        /// true: i.i.d. draws (duplicates allowed); false: without
+        /// replacement (a uniform `size`-subset)
+        replace: bool,
+    },
+    /// CSGD-style variance control: batch size grows geometrically,
+    /// `⌈size₀·growth^(k−1)⌉`, saturating at the full shard (where the
+    /// worker falls back to the legacy full-batch kernel)
+    GrowingBatch {
+        /// batch size at k = 1
+        size0: usize,
+        /// per-round geometric growth factor (≥ 1)
+        growth: f64,
+        /// master seed for the per-(worker, round) draw streams
+        seed: u64,
+    },
+}
+
+impl BatchSchedule {
+    /// Short label for logs and CSV columns.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchSchedule::Full => "full",
+            BatchSchedule::Minibatch { .. } => "minibatch",
+            BatchSchedule::GrowingBatch { .. } => "growing",
+        }
+    }
+
+    /// Nominal batch size at round `k` over an `n`-row shard.  Capped
+    /// at `n` for without-replacement draws; an i.i.d.
+    /// (with-replacement) minibatch may oversample the shard.
+    pub fn size_at(&self, k: usize, n: usize) -> usize {
+        match *self {
+            BatchSchedule::Full => n,
+            BatchSchedule::Minibatch { size, replace: true, .. } => {
+                size.max(1)
+            }
+            BatchSchedule::Minibatch { size, replace: false, .. } => {
+                size.clamp(1, n.max(1))
+            }
+            BatchSchedule::GrowingBatch { size0, growth, .. } => {
+                let e = k.saturating_sub(1).min(i32::MAX as usize) as i32;
+                let s = (size0.max(1) as f64) * growth.powi(e);
+                if s >= n as f64 {
+                    n
+                } else {
+                    (s.ceil() as usize).clamp(1, n.max(1))
+                }
+            }
+        }
+    }
+
+    /// Fraction of the shard visited at round `k`, clamped to (0, 1]
+    /// — the variance proxy
+    /// [`crate::optim::censor::VarianceScaledCensor`] scales ε₁ by
+    /// (variance compensation saturates at the full batch, so an
+    /// oversampling with-replacement draw clamps here even though the
+    /// trace's `batch_frac` column reports the raw `|B|/n`).
+    pub fn fraction_at(&self, k: usize, n: usize) -> f64 {
+        if n == 0 {
+            return 1.0;
+        }
+        (self.size_at(k, n) as f64 / n as f64).min(1.0)
+    }
+}
+
+/// Hash of the `(seed, worker, k)` triple into one draw-stream seed —
+/// three chained SplitMix64 finalizers, so every coordinate fully
+/// avalanches and draws are a pure function of the triple.
+fn draw_seed(seed: u64, worker: usize, k: usize) -> u64 {
+    let a = SplitMix64::new(seed).next_u64();
+    let b = SplitMix64::new(a ^ worker as u64).next_u64();
+    SplitMix64::new(b ^ k as u64).next_u64()
+}
+
+/// One worker's materialized batch stream.
+///
+/// Owns two reusable index buffers, so steady-state draws allocate
+/// nothing.  Each [`BatchSampler::draw`] is deterministic per
+/// `(worker, schedule seed, k)` — no state carries between rounds, so
+/// an async engine that skips server versions, or a pool that
+/// interleaves workers arbitrarily, still reproduces the serial draws
+/// exactly.
+pub struct BatchSampler {
+    schedule: BatchSchedule,
+    worker: usize,
+    n_rows: usize,
+    /// partial-Fisher–Yates scratch (without-replacement draws)
+    perm: Vec<u32>,
+    /// the drawn batch, ascending (cache-friendly row sweeps)
+    idx: Vec<u32>,
+}
+
+impl BatchSampler {
+    /// Sampler for worker `worker` over an `n_rows`-row shard.
+    ///
+    /// Panics when a non-full schedule is paired with a backend that
+    /// reports no rows (`n_rows == 0`) — there is nothing to sample.
+    pub fn new(schedule: BatchSchedule, worker: usize, n_rows: usize) -> Self {
+        assert!(
+            n_rows > 0 || schedule == BatchSchedule::Full,
+            "worker {worker}: a {} schedule needs a row-indexed \
+             objective (backend reported 0 rows)",
+            schedule.name()
+        );
+        Self { schedule, worker, n_rows, perm: Vec::new(), idx: Vec::new() }
+    }
+
+    /// The schedule this sampler materializes.
+    pub fn schedule(&self) -> BatchSchedule {
+        self.schedule
+    }
+
+    /// Row universe size n_real.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Draw round k's row set.  `None` means "the full shard" — the
+    /// caller takes the legacy full-batch kernel path (this is what
+    /// makes `Full` bit-identical, and what a saturated
+    /// [`BatchSchedule::GrowingBatch`] degenerates to).
+    pub fn draw(&mut self, k: usize) -> Option<&[u32]> {
+        let (seed, replace) = match self.schedule {
+            BatchSchedule::Full => return None,
+            BatchSchedule::Minibatch { seed, replace, .. } => (seed, replace),
+            BatchSchedule::GrowingBatch { seed, .. } => (seed, false),
+        };
+        let n = self.n_rows;
+        let b = self.schedule.size_at(k, n);
+        if b >= n && !replace {
+            // a without-replacement draw of all n rows IS the full
+            // shard: use the (cheaper, bit-pinned) full kernel
+            return None;
+        }
+        let mut rng = Xoshiro256::new(draw_seed(seed, self.worker, k));
+        self.idx.clear();
+        if replace {
+            for _ in 0..b {
+                self.idx.push(rng.next_below(n as u64) as u32);
+            }
+        } else {
+            // identity-reset + partial Fisher–Yates: O(n) per draw,
+            // noise next to the O(b·d) gradient it feeds
+            self.perm.clear();
+            self.perm.extend(0..n as u32);
+            for i in 0..b {
+                let j = i + rng.next_below((n - i) as u64) as usize;
+                self.perm.swap(i, j);
+            }
+            self.idx.extend_from_slice(&self.perm[..b]);
+        }
+        self.idx.sort_unstable();
+        Some(&self.idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_schedule_never_draws() {
+        let mut s = BatchSampler::new(BatchSchedule::Full, 0, 100);
+        for k in 1..=5 {
+            assert!(s.draw(k).is_none());
+        }
+        // Full works even with an empty row universe (toy backends)
+        let mut s0 = BatchSampler::new(BatchSchedule::Full, 3, 0);
+        assert!(s0.draw(1).is_none());
+    }
+
+    #[test]
+    fn draws_are_a_pure_function_of_worker_seed_and_k() {
+        let sched =
+            BatchSchedule::Minibatch { size: 8, seed: 0xFEED, replace: false };
+        let mut a = BatchSampler::new(sched, 2, 40);
+        let mut b = BatchSampler::new(sched, 2, 40);
+        // draw in different round orders: results per k must match
+        let ka: Vec<Vec<u32>> = [1, 2, 3, 4, 5]
+            .iter()
+            .map(|&k| a.draw(k).unwrap().to_vec())
+            .collect();
+        let kb: Vec<Vec<u32>> = [5, 3, 1, 2, 4]
+            .iter()
+            .map(|&k| b.draw(k).unwrap().to_vec())
+            .collect();
+        assert_eq!(ka[0], kb[2]); // k = 1
+        assert_eq!(ka[1], kb[3]); // k = 2
+        assert_eq!(ka[2], kb[1]); // k = 3
+        assert_eq!(ka[3], kb[4]); // k = 4
+        assert_eq!(ka[4], kb[0]); // k = 5
+        // distinct rounds draw distinct sets (overwhelmingly)
+        assert_ne!(ka[0], ka[1]);
+    }
+
+    #[test]
+    fn workers_and_seeds_decorrelate_draws() {
+        let sched =
+            BatchSchedule::Minibatch { size: 8, seed: 7, replace: false };
+        let mut w0 = BatchSampler::new(sched, 0, 64);
+        let mut w1 = BatchSampler::new(sched, 1, 64);
+        assert_ne!(w0.draw(1).unwrap(), w1.draw(1).unwrap());
+        let sched2 =
+            BatchSchedule::Minibatch { size: 8, seed: 8, replace: false };
+        let mut s2 = BatchSampler::new(sched2, 0, 64);
+        let mut s7 = BatchSampler::new(sched, 0, 64);
+        assert_ne!(s7.draw(1).unwrap(), s2.draw(1).unwrap());
+    }
+
+    #[test]
+    fn without_replacement_draws_are_distinct_sorted_in_range() {
+        let sched =
+            BatchSchedule::Minibatch { size: 10, seed: 3, replace: false };
+        let mut s = BatchSampler::new(sched, 1, 25);
+        for k in 1..=50 {
+            let rows = s.draw(k).unwrap().to_vec();
+            assert_eq!(rows.len(), 10);
+            assert!(rows.windows(2).all(|w| w[0] < w[1]), "k={k}: {rows:?}");
+            assert!(rows.iter().all(|&i| (i as usize) < 25));
+        }
+    }
+
+    #[test]
+    fn with_replacement_allows_duplicates_and_stays_in_range() {
+        let sched =
+            BatchSchedule::Minibatch { size: 40, seed: 5, replace: true };
+        let mut s = BatchSampler::new(sched, 0, 6);
+        let mut saw_dup = false;
+        for k in 1..=20 {
+            let rows = s.draw(k).unwrap();
+            assert_eq!(rows.len(), 40);
+            assert!(rows.iter().all(|&i| (i as usize) < 6));
+            assert!(rows.windows(2).all(|w| w[0] <= w[1]));
+            saw_dup |= rows.windows(2).any(|w| w[0] == w[1]);
+        }
+        assert!(saw_dup, "40 draws from 6 rows never collided");
+    }
+
+    #[test]
+    fn oversized_minibatch_without_replacement_is_full_batch() {
+        let sched =
+            BatchSchedule::Minibatch { size: 99, seed: 1, replace: false };
+        let mut s = BatchSampler::new(sched, 0, 10);
+        assert!(s.draw(1).is_none());
+    }
+
+    #[test]
+    fn growing_batch_sizes_are_geometric_and_saturate() {
+        let sched =
+            BatchSchedule::GrowingBatch { size0: 2, growth: 2.0, seed: 9 };
+        assert_eq!(sched.size_at(1, 100), 2);
+        assert_eq!(sched.size_at(2, 100), 4);
+        assert_eq!(sched.size_at(3, 100), 8);
+        assert_eq!(sched.size_at(7, 100), 100); // 128 → clamp
+        let mut s = BatchSampler::new(sched, 0, 100);
+        assert_eq!(s.draw(1).unwrap().len(), 2);
+        assert_eq!(s.draw(4).unwrap().len(), 16);
+        // saturated: the full-batch kernel takes over
+        assert!(s.draw(7).is_none());
+        // fraction column tracks the size
+        assert!((sched.fraction_at(2, 100) - 0.04).abs() < 1e-15);
+        assert!((sched.fraction_at(50, 100) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn huge_growth_exponent_does_not_overflow() {
+        let sched =
+            BatchSchedule::GrowingBatch { size0: 1, growth: 1.5, seed: 0 };
+        // powi on a huge exponent gives +inf; size must clamp to n
+        assert_eq!(sched.size_at(usize::MAX, 1_000), 1_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "row-indexed")]
+    fn non_full_schedule_with_no_rows_panics() {
+        let sched =
+            BatchSchedule::Minibatch { size: 4, seed: 0, replace: false };
+        let _ = BatchSampler::new(sched, 0, 0);
+    }
+}

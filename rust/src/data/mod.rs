@@ -11,6 +11,7 @@
 //! an even split of N samples over M workers, each shard zero-padded to
 //! `padded_n(ceil(N/M))` rows so every worker shares one artifact shape.
 
+pub mod batch;
 pub mod idx;
 pub mod libsvm;
 pub mod partition;

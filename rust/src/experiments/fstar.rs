@@ -165,11 +165,12 @@ pub fn lasso_f_star(p: &Problem) -> f64 {
 
 /// f(θ) = Σ_m f_m(θ) evaluated with the rust objectives.
 pub fn objective(p: &Problem, theta: &[f64]) -> f64 {
+    let mut ws = crate::tasks::TaskWorkspace::default();
     p.shards
         .iter()
         .map(|s| {
             let obj = crate::tasks::build_objective(p.task, s, p.lam_m);
-            obj.loss(theta)
+            obj.loss(theta, &mut ws)
         })
         .sum()
 }

@@ -136,6 +136,19 @@ impl Problem {
             .collect()
     }
 
+    /// Pure-rust workers with a gradient-sampling schedule attached
+    /// ([`crate::data::batch::BatchSchedule::Full`] reproduces
+    /// [`Problem::rust_workers`] bit for bit).
+    pub fn rust_workers_batched(
+        &self,
+        schedule: crate::data::batch::BatchSchedule,
+    ) -> Vec<crate::coordinator::Worker> {
+        self.rust_workers()
+            .into_iter()
+            .map(|w| w.with_batching(schedule))
+            .collect()
+    }
+
     /// PJRT workers executing the AOT artifact for this problem.
     pub fn pjrt_workers(
         &self,

@@ -96,6 +96,43 @@ impl Matrix {
         }
     }
 
+    /// One generic body behind [`Matrix::fused_residual_grad`] and
+    /// [`Matrix::fused_residual_grad_rows`]: monomorphized over the
+    /// row iterator, so the full-sweep and row-subset instantiations
+    /// share the identical per-row schedule (dot, residual, guarded
+    /// rank-1 accumulate, ½Σr² loss) — the "over `0..n` bit-identical"
+    /// invariant holds by construction, not by keeping two loop bodies
+    /// in lockstep.  No batch-mode branching inside the loop.
+    fn fused_residual_grad_impl<I>(
+        &self,
+        theta: &[f64],
+        y: &[f64],
+        rows: I,
+        resid: &mut [f64],
+        grad: &mut [f64],
+    ) -> f64
+    where
+        I: Iterator<Item = usize>,
+    {
+        assert_eq!(theta.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(resid.len(), self.rows);
+        assert_eq!(grad.len(), self.cols);
+        let mut loss = 0.0;
+        for i in rows {
+            let row = self.row(i);
+            let r = dot(row, theta) - y[i];
+            resid[i] = r;
+            loss += r * r;
+            if r != 0.0 {
+                for j in 0..self.cols {
+                    grad[j] += r * row[j];
+                }
+            }
+        }
+        0.5 * loss
+    }
+
     /// Fused residual-gradient pass (the rust mirror of the L1 Pallas
     /// schedule): in ONE sweep over X computes
     ///   r_i = x_iᵀθ − y_i   (written to `resid`)
@@ -110,23 +147,32 @@ impl Matrix {
         resid: &mut [f64],
         grad: &mut [f64],
     ) -> f64 {
-        assert_eq!(theta.len(), self.cols);
-        assert_eq!(y.len(), self.rows);
-        assert_eq!(resid.len(), self.rows);
-        assert_eq!(grad.len(), self.cols);
-        let mut loss = 0.0;
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let r = dot(row, theta) - y[i];
-            resid[i] = r;
-            loss += r * r;
-            if r != 0.0 {
-                for j in 0..self.cols {
-                    grad[j] += r * row[j];
-                }
-            }
-        }
-        0.5 * loss
+        self.fused_residual_grad_impl(theta, y, 0..self.rows, resid, grad)
+    }
+
+    /// Row-subset variant of [`Matrix::fused_residual_grad`], the
+    /// minibatch kernel: the identical per-row schedule (one shared
+    /// generic body), but visiting only the rows named by `rows`, in
+    /// slice order.  `resid` is indexed by the *absolute* row index
+    /// (same layout as the full pass), so callers can reuse one n-row
+    /// buffer for any batch.  With `rows == 0..n` the result is
+    /// bit-identical to [`Matrix::fused_residual_grad`] — pinned by a
+    /// test below and by `tests/batch_equivalence.rs` end to end.
+    pub fn fused_residual_grad_rows(
+        &self,
+        theta: &[f64],
+        y: &[f64],
+        rows: &[u32],
+        resid: &mut [f64],
+        grad: &mut [f64],
+    ) -> f64 {
+        self.fused_residual_grad_impl(
+            theta,
+            y,
+            rows.iter().map(|&i| i as usize),
+            resid,
+            grad,
+        )
     }
 
     /// Fused coefficient-gradient pass — the logistic/lasso sibling of
@@ -144,17 +190,62 @@ impl Matrix {
         &self,
         theta: &[f64],
         mask: &[f64],
+        coeff: F,
+        grad: &mut [f64],
+    ) -> f64
+    where
+        F: FnMut(usize, f64) -> (f64, f64),
+    {
+        self.fused_coeff_grad_impl(theta, mask, 0..self.rows, coeff, grad)
+    }
+
+    /// Row-subset variant of [`Matrix::fused_coeff_grad`], the
+    /// minibatch kernel: identical per-row schedule (one shared
+    /// generic body) over only the rows named by `rows`, in slice
+    /// order.  With `rows == 0..n` results are bit-identical to the
+    /// full sweep.
+    pub fn fused_coeff_grad_rows<F>(
+        &self,
+        theta: &[f64],
+        mask: &[f64],
+        rows: &[u32],
+        coeff: F,
+        grad: &mut [f64],
+    ) -> f64
+    where
+        F: FnMut(usize, f64) -> (f64, f64),
+    {
+        self.fused_coeff_grad_impl(
+            theta,
+            mask,
+            rows.iter().map(|&i| i as usize),
+            coeff,
+            grad,
+        )
+    }
+
+    /// One generic body behind [`Matrix::fused_coeff_grad`] and
+    /// [`Matrix::fused_coeff_grad_rows`] (see
+    /// [`Matrix::fused_residual_grad_impl`] for the rationale): mask
+    /// skip, dot, caller-supplied (ℓ, c) map, `c != 0` guarded rank-1
+    /// accumulate — identical schedule for both instantiations.
+    fn fused_coeff_grad_impl<I, F>(
+        &self,
+        theta: &[f64],
+        mask: &[f64],
+        rows: I,
         mut coeff: F,
         grad: &mut [f64],
     ) -> f64
     where
+        I: Iterator<Item = usize>,
         F: FnMut(usize, f64) -> (f64, f64),
     {
         assert_eq!(theta.len(), self.cols);
         assert_eq!(mask.len(), self.rows);
         assert_eq!(grad.len(), self.cols);
         let mut loss = 0.0;
-        for i in 0..self.rows {
+        for i in rows {
             if mask[i] == 0.0 {
                 continue;
             }
@@ -326,6 +417,78 @@ mod tests {
         assert_eq!(seen, vec![(1, 7.0)]);
         assert_eq!(loss, 1.0);
         assert_eq!(g, vec![0.0, 0.0]); // c = 0 ⇒ no accumulation
+    }
+
+    #[test]
+    fn fused_residual_grad_rows_all_rows_is_bitwise_full_pass() {
+        let m = small();
+        let theta = [0.5, -1.25];
+        let y = [1.0, -2.0, 0.75];
+        let mut r_full = vec![0.0; 3];
+        let mut g_full = vec![0.0; 2];
+        let l_full = m.fused_residual_grad(&theta, &y, &mut r_full, &mut g_full);
+        let rows: Vec<u32> = (0..3).collect();
+        let mut r_sub = vec![0.0; 3];
+        let mut g_sub = vec![0.0; 2];
+        let l_sub =
+            m.fused_residual_grad_rows(&theta, &y, &rows, &mut r_sub, &mut g_sub);
+        assert_eq!(l_full.to_bits(), l_sub.to_bits());
+        for (a, b) in g_full.iter().zip(&g_sub) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in r_full.iter().zip(&r_sub) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_residual_grad_rows_subset_matches_manual_sum() {
+        let m = small();
+        let theta = [1.0, 0.5];
+        let y = [0.0, 1.0, -1.0];
+        let rows = [2u32, 0];
+        let mut resid = vec![0.0; 3];
+        let mut g = vec![0.0; 2];
+        let loss = m.fused_residual_grad_rows(&theta, &y, &rows, &mut resid, &mut g);
+        // manual: visit rows 2 then 0
+        let mut g_ref = vec![0.0; 2];
+        let mut l_ref = 0.0;
+        for &i in &[2usize, 0] {
+            let r = super::dot(m.row(i), &theta) - y[i];
+            l_ref += r * r;
+            for j in 0..2 {
+                g_ref[j] += r * m.row(i)[j];
+            }
+        }
+        assert_eq!(loss.to_bits(), (0.5 * l_ref).to_bits());
+        for (a, b) in g.iter().zip(&g_ref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // untouched row's resid slot stays zero
+        assert_eq!(resid[1], 0.0);
+    }
+
+    #[test]
+    fn fused_coeff_grad_rows_all_rows_is_bitwise_full_pass() {
+        let m = small();
+        let theta = [0.3, 0.7];
+        let mask = [1.0, 0.0, 1.0];
+        let mut g_full = vec![0.0; 2];
+        let l_full =
+            m.fused_coeff_grad(&theta, &mask, |_, z| (z * z, 2.0 * z + 1.0), &mut g_full);
+        let rows: Vec<u32> = (0..3).collect();
+        let mut g_sub = vec![0.0; 2];
+        let l_sub = m.fused_coeff_grad_rows(
+            &theta,
+            &mask,
+            &rows,
+            |_, z| (z * z, 2.0 * z + 1.0),
+            &mut g_sub,
+        );
+        assert_eq!(l_full.to_bits(), l_sub.to_bits());
+        for (a, b) in g_full.iter().zip(&g_sub) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@ use chb_fed::coordinator::{
     run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
     ComputeModel, Participation, RunConfig, StopRule,
 };
+use chb_fed::data::batch::BatchSchedule;
 use chb_fed::net::LatencyModel;
 use chb_fed::experiments::{ablations, figures, tables, Problem};
 use chb_fed::optim::Method;
@@ -40,10 +41,19 @@ USAGE:
               [--backend rust|pjrt] [--engine serial|threaded|rayon|async]
               [--participation full|sample|straggler] [--sample-frac F]
               [--timeout T] [--part-seed S]
+              [--batch-schedule full|minibatch|growing] [--batch-size B]
+              [--batch-seed S] [--batch-growth G] [--batch-replace]
               [--compute-model uniform|pareto] [--compute-us US]
               [--pareto-shape A] [--compute-seed S] [--max-staleness S]
               [--net-fixed-us F] [--net-per-kib-us P]
               [--artifacts DIR] [--out DIR] [--data DIR]
+      stochastic regime: --batch-schedule minibatch draws --batch-size
+      rows per worker per round (per-worker seeded streams, without
+      replacement unless --batch-replace); growing starts at
+      --batch-size and multiplies by --batch-growth each round until
+      the full shard (CSGD-style variance control).  Loss is still
+      reported over the full shard; the trace gains batch_frac and
+      epoch columns.  rust backend only.
       async engine: virtual-clock discrete-event simulation; workers
       draw per-round compute times (uniform, or Pareto heavy tails),
       messages order through the latency model, and the server folds
@@ -68,7 +78,10 @@ fn main() {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["full", "verbose", "help", "comm-map"])?;
+    let args = Args::parse(
+        argv,
+        &["full", "verbose", "help", "comm-map", "batch-replace"],
+    )?;
     if args.flag("verbose") {
         logging::set_level(logging::Level::Debug);
     }
@@ -201,9 +214,45 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg = cfg.with_comm_map();
     }
 
+    // gradient-sampling schedule (data::batch): full is the paper's
+    // deterministic regime and the bit-pinned default.  All four
+    // knobs are config-file aware like every other run.* option.
+    let batch_size = pick_num("batch-size").unwrap_or(32.0) as usize;
+    let batch_seed = match args
+        .get("batch-seed")
+        .or_else(|| cfg_file.str("run.batch-seed"))
+    {
+        Some(s) => s
+            .parse::<u64>()
+            .with_context(|| format!("--batch-seed {s:?}"))?,
+        None => 0xB47C,
+    };
+    let schedule = match pick("batch-schedule", "full").as_str() {
+        "full" => BatchSchedule::Full,
+        "minibatch" => BatchSchedule::Minibatch {
+            size: batch_size.max(1),
+            seed: batch_seed,
+            replace: args.flag("batch-replace"),
+        },
+        "growing" => {
+            let growth = pick_num("batch-growth").unwrap_or(1.05);
+            if !growth.is_finite() || growth < 1.0 {
+                bail!("--batch-growth must be ≥ 1, got {growth}");
+            }
+            BatchSchedule::GrowingBatch {
+                size0: batch_size.max(1),
+                growth,
+                seed: batch_seed,
+            }
+        }
+        other => bail!(
+            "bad --batch-schedule {other:?} (full|minibatch|growing)"
+        ),
+    };
+
     println!(
         "run: {} on {} — M={} d={} L={:.4e} α={alpha:.4e} β={beta} ε₁={:.4e} \
-         backend={} engine={} participation={}",
+         backend={} engine={} participation={} batch={}",
         method.name(),
         dataset,
         problem.m_workers(),
@@ -213,13 +262,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         args.get_or("backend", "rust"),
         args.get_or("engine", "serial"),
         participation.name(),
+        schedule.name(),
     );
 
     // backend decides where gradients come from; engine decides where
     // workers execute — one RoundEngine pipeline underneath either way
     let workers = match args.get_or("backend", "rust") {
-        "rust" => problem.rust_workers(),
+        "rust" => problem.rust_workers_batched(schedule),
         "pjrt" => {
+            if schedule != BatchSchedule::Full {
+                bail!(
+                    "--backend pjrt evaluates the full AOT shard per \
+                     round; minibatch schedules need --backend rust"
+                );
+            }
             let mut rt =
                 PjrtRuntime::new(Path::new(args.get_or("artifacts", "artifacts")))?;
             println!("PJRT platform: {}", rt.platform());

@@ -22,12 +22,12 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
     writeln!(
         w,
         "k,loss,obj_err,comms_round,comms_cum,agg_grad_sq,step_sq,bits_cum,\
-         participants,vclock_us,stale_max"
+         participants,vclock_us,stale_max,batch_frac,epoch"
     )?;
     for (i, s) in trace.iters.iter().enumerate() {
         writeln!(
             w,
-            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{},{:.6},{}",
+            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{},{:.6},{},{:.6},{:.6}",
             s.k,
             s.loss,
             s.loss - f_star,
@@ -39,7 +39,9 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
             // 0 = unrecorded (traces assembled outside the engine)
             trace.participants.get(i).copied().unwrap_or(0),
             s.vclock_us,
-            s.stale_max
+            s.stale_max,
+            s.batch_frac,
+            s.epoch
         )?;
     }
     Ok(())
@@ -111,6 +113,8 @@ mod tests {
             bits_cum: 0,
             vclock_us: 1234.5,
             stale_max: 2,
+            batch_frac: 0.25,
+            epoch: 0.25,
         });
         let dir = std::env::temp_dir().join("chb_csv_test");
         let path = dir.join("t.csv");
@@ -119,11 +123,11 @@ mod tests {
         let mut lines = text.lines();
         let header = lines.next().unwrap();
         assert!(header.starts_with("k,loss"));
-        assert!(header.ends_with("vclock_us,stale_max"));
+        assert!(header.ends_with("stale_max,batch_frac,epoch"));
         let row = lines.next().unwrap();
         assert!(row.starts_with("1,"));
         assert!(row.contains(",3,3,"));
-        assert!(row.ends_with(",1234.500000,2"));
+        assert!(row.ends_with(",1234.500000,2,0.250000,0.250000"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

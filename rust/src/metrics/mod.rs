@@ -30,6 +30,16 @@ pub struct IterStat {
     /// a delta was computed at and the fold) among this step's folded
     /// deltas; always 0 under synchronous rounds
     pub stale_max: usize,
+    /// mean shard fraction among the workers that computed a gradient
+    /// this step (loss-only observers are excluded): 1.0 in the
+    /// full-batch regime, |B|/n under minibatch schedules (> 1 when a
+    /// with-replacement draw oversamples the shard — see `data::batch`)
+    pub batch_frac: f64,
+    /// cumulative global data passes consumed through this step
+    /// (Σ per-worker shard fractions / M per round) — the x-axis
+    /// stochastic traces are read against; equals k in the legacy
+    /// full-batch full-participation regime
+    pub epoch: f64,
 }
 
 /// Per-worker arrival-staleness telemetry (async engine).
@@ -157,6 +167,8 @@ mod tests {
             bits_cum: 0,
             vclock_us: 0.0,
             stale_max: 0,
+            batch_frac: 1.0,
+            epoch: k as f64,
         }
     }
 

@@ -113,14 +113,31 @@ impl CensorRule for AbsoluteCensor {
 
 /// Ablation: transmit at most every `period` iterations regardless of
 /// information content (round-robin style baseline).
+///
+/// Construct through [`PeriodicCensor::new`], which normalizes the
+/// degenerate `period = 0` to 1 (transmit every round) once, instead
+/// of re-clamping on every [`CensorRule::decide`] call.
 pub struct PeriodicCensor {
-    /// transmit whenever k is a multiple of this period
-    pub period: usize,
+    period: usize,
+}
+
+impl PeriodicCensor {
+    /// Rule transmitting whenever k is a multiple of `period`.
+    /// `period = 0` is normalized to 1; `period = 1` therefore never
+    /// skips (every k is a multiple of 1).
+    pub fn new(period: usize) -> Self {
+        Self { period: period.max(1) }
+    }
+
+    /// The normalized period (≥ 1).
+    pub fn period(&self) -> usize {
+        self.period
+    }
 }
 
 impl CensorRule for PeriodicCensor {
     fn decide(&self, _: f64, _: f64, k: usize) -> CensorDecision {
-        if k % self.period.max(1) == 0 {
+        if k % self.period == 0 {
             CensorDecision::Transmit
         } else {
             CensorDecision::Skip
@@ -129,6 +146,95 @@ impl CensorRule for PeriodicCensor {
 
     fn name(&self) -> &'static str {
         "periodic"
+    }
+}
+
+/// CSGD-style decreasing threshold (Li et al., *Communication-Censored
+/// Distributed Stochastic Gradient Descent*): skip iff
+/// ‖δ∇_m^k‖² ≤ τ_k with τ_k = τ₀·ρᵏ, ρ ∈ (0, 1).
+///
+/// Under minibatch gradients the paper's relative rule (8) misfires: a
+/// noisy δ∇ has ‖δ∇‖² inflated by O(σ²/|B|) even at a stationary
+/// point, so comparing it against the (shrinking) iterate step either
+/// censors nothing or the noise floor triggers spurious uploads
+/// forever.  A *decreasing absolute* threshold instead dominates the
+/// noise floor early (aggressive censoring while gradients are large
+/// and redundant) and vanishes as k → ∞, so late-phase information is
+/// never suppressed — the schedule CSGD proves convergent for
+/// censored SGD.
+pub struct DecayingCensor {
+    /// initial threshold τ₀ (scale it to ‖∇f_m(θ⁰)‖² — see
+    /// `experiments::ablations::stochastic` for the recipe)
+    pub tau0: f64,
+    /// per-iteration decay ρ ∈ (0, 1)
+    pub rho: f64,
+}
+
+impl DecayingCensor {
+    /// Threshold τ_k = τ₀·ρᵏ at iteration k.
+    pub fn tau_at(&self, k: usize) -> f64 {
+        self.tau0 * self.rho.powi(k.min(i32::MAX as usize) as i32)
+    }
+}
+
+impl CensorRule for DecayingCensor {
+    fn decide(&self, delta_grad_sq: f64, _: f64, k: usize) -> CensorDecision {
+        if delta_grad_sq <= self.tau_at(k) {
+            CensorDecision::Skip
+        } else {
+            CensorDecision::Transmit
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "decaying"
+    }
+}
+
+/// Variance-compensated relative rule for minibatch runs: the paper's
+/// eq. (8) with an effective threshold ε₁/ϕ_k, where ϕ_k ∈ (0, 1] is
+/// the batch schedule's shard fraction at round k.
+///
+/// Rationale: with batch fraction ϕ the stochastic δ∇ carries an
+/// additive noise term of variance O(1/|B|) ∝ 1/ϕ, so ‖δ∇‖² is
+/// inflated by ≈ 1/ϕ relative to the deterministic quantity eq. (8)
+/// was designed for.  Dividing ε₁ by ϕ_k restores the intended
+/// skip region; at ϕ = 1 the rule reduces exactly to
+/// [`GradDiffCensor`].  Composable with
+/// [`super::StalenessBoundedCensor`] like any other rule.
+pub struct VarianceScaledCensor {
+    /// base threshold ε₁ (the full-batch value)
+    pub epsilon1: f64,
+    /// the run's batch schedule (must match the workers')
+    pub schedule: crate::data::batch::BatchSchedule,
+    /// reference shard size the fraction is evaluated against
+    pub n_rows: usize,
+}
+
+impl VarianceScaledCensor {
+    /// Effective threshold ε₁/ϕ_k at iteration k.
+    pub fn epsilon_at(&self, k: usize) -> f64 {
+        let frac = self.schedule.fraction_at(k, self.n_rows).max(1e-12);
+        self.epsilon1 / frac
+    }
+}
+
+impl CensorRule for VarianceScaledCensor {
+    fn decide(
+        &self,
+        delta_grad_sq: f64,
+        theta_step_sq: f64,
+        k: usize,
+    ) -> CensorDecision {
+        if delta_grad_sq <= self.epsilon_at(k) * theta_step_sq {
+            CensorDecision::Skip
+        } else {
+            CensorDecision::Transmit
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "variance-scaled"
     }
 }
 
@@ -295,12 +401,108 @@ mod tests {
 
     #[test]
     fn periodic_and_absolute_behave() {
-        let p = PeriodicCensor { period: 3 };
+        let p = PeriodicCensor::new(3);
         assert_eq!(p.decide(9.9, 0.0, 3), CensorDecision::Transmit);
         assert_eq!(p.decide(9.9, 0.0, 4), CensorDecision::Skip);
         let a = AbsoluteCensor { tau: 1.0 };
         assert_eq!(a.decide(0.5, 0.0, 1), CensorDecision::Skip);
         assert_eq!(a.decide(1.5, 0.0, 1), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn periodic_period_one_never_skips() {
+        // regression: period = 1 ⇒ every k is a multiple ⇒ no skips
+        let p = PeriodicCensor::new(1);
+        for k in 1..=100 {
+            assert_eq!(p.decide(9.9, 0.0, k), CensorDecision::Transmit, "k={k}");
+        }
+    }
+
+    #[test]
+    fn periodic_period_zero_normalizes_to_one_in_the_constructor() {
+        let p = PeriodicCensor::new(0);
+        assert_eq!(p.period(), 1);
+        for k in 1..=10 {
+            assert_eq!(p.decide(0.0, 0.0, k), CensorDecision::Transmit);
+        }
+    }
+
+    #[test]
+    fn decaying_censor_threshold_shrinks_geometrically() {
+        let r = DecayingCensor { tau0: 100.0, rho: 0.5 };
+        assert!((r.tau_at(0) - 100.0).abs() < 1e-12);
+        assert!((r.tau_at(1) - 50.0).abs() < 1e-12);
+        assert!((r.tau_at(5) - 3.125).abs() < 1e-12);
+        // same ‖δ∇‖² flips from censored to transmitted as τ decays
+        assert_eq!(r.decide(10.0, 0.0, 1), CensorDecision::Skip);
+        assert_eq!(r.decide(10.0, 0.0, 5), CensorDecision::Transmit);
+        // the θ-step scale is irrelevant (absolute rule)
+        assert_eq!(r.decide(10.0, 1e12, 5), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn decaying_censor_eventually_stops_censoring_noise() {
+        // any fixed noise floor survives only finitely many rounds
+        let r = DecayingCensor { tau0: 1.0, rho: 0.9 };
+        let noise = 1e-3;
+        let k_cross =
+            (noise.ln() / 0.9f64.ln()).ceil() as usize;
+        assert_eq!(r.decide(noise, 0.0, k_cross + 1), CensorDecision::Transmit);
+        assert_eq!(r.decide(noise, 0.0, 1), CensorDecision::Skip);
+    }
+
+    #[test]
+    fn variance_scaled_censor_reduces_to_grad_diff_at_full_batch() {
+        use crate::data::batch::BatchSchedule;
+        let v = VarianceScaledCensor {
+            epsilon1: 0.5,
+            schedule: BatchSchedule::Full,
+            n_rows: 100,
+        };
+        let g = GradDiffCensor { epsilon1: 0.5 };
+        for (dgs, tss, k) in
+            [(1.0, 4.0, 3), (2.0, 4.0, 3), (2.0 + 1e-12, 4.0, 7)]
+        {
+            assert_eq!(v.decide(dgs, tss, k), g.decide(dgs, tss, k));
+        }
+    }
+
+    #[test]
+    fn variance_scaled_censor_widens_skip_region_for_small_batches() {
+        use crate::data::batch::BatchSchedule;
+        let v = VarianceScaledCensor {
+            epsilon1: 0.5,
+            schedule: BatchSchedule::Minibatch {
+                size: 10,
+                seed: 0,
+                replace: false,
+            },
+            n_rows: 100,
+        };
+        // ϕ = 0.1 ⇒ ε_eff = 5: a δ∇ the full-batch rule would upload
+        // (2+ε > ε₁·4 = 2) is attributed to minibatch noise and skipped
+        assert!((v.epsilon_at(3) - 5.0).abs() < 1e-12);
+        assert_eq!(v.decide(2.0 + 1e-9, 4.0, 3), CensorDecision::Skip);
+        assert_eq!(v.decide(20.0 + 1e-9, 4.0, 3), CensorDecision::Transmit);
+    }
+
+    #[test]
+    fn variance_scaled_composes_with_staleness_bound() {
+        use crate::data::batch::BatchSchedule;
+        let inner = std::sync::Arc::new(VarianceScaledCensor {
+            epsilon1: 1e12, // censors everything …
+            schedule: BatchSchedule::Minibatch {
+                size: 5,
+                seed: 0,
+                replace: false,
+            },
+            n_rows: 50,
+        });
+        let r = StalenessBoundedCensor::new(inner, 2);
+        // … until the silence budget forces a refresh
+        assert_eq!(r.decide(1.0, 1.0, 1), CensorDecision::Skip);
+        assert_eq!(r.decide(1.0, 1.0, 2), CensorDecision::Skip);
+        assert_eq!(r.decide(1.0, 1.0, 3), CensorDecision::Transmit);
     }
 
     #[test]

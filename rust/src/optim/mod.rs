@@ -19,8 +19,9 @@ pub mod method;
 pub mod nesterov;
 
 pub use censor::{
-    AdaptiveCensor, CensorDecision, CensorRule, GradDiffCensor, NeverCensor,
-    StalenessBoundedCensor,
+    AdaptiveCensor, CensorDecision, CensorRule, DecayingCensor,
+    GradDiffCensor, NeverCensor, StalenessBoundedCensor,
+    VarianceScaledCensor,
 };
 pub use method::{Method, MethodParams};
 pub use nesterov::NesterovRule;

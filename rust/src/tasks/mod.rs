@@ -7,7 +7,21 @@
 //! the two.
 //!
 //! Every implementation is allocation-free on the hot path: gradients
-//! are written into caller buffers through [`WorkerObjective::grad_loss_into`].
+//! are written into caller buffers through
+//! [`WorkerObjective::grad_loss_into`], and all evaluation scratch
+//! (residuals, activations) lives in a caller-owned [`TaskWorkspace`]
+//! — objectives themselves are immutable shared state (`Send + Sync`,
+//! no interior mutability), which is what lets one objective be read
+//! from any pool thread without `unsafe`.
+//!
+//! Two gradient flavors per objective:
+//!
+//! * [`WorkerObjective::grad_loss_into`] — the full-shard sweep
+//!   (the paper's deterministic regime; bit-for-bit the legacy path).
+//! * [`WorkerObjective::grad_loss_batch_into`] — a row-subset sweep
+//!   driven by an index slice, scaled by `n_real / |B|` so the batch
+//!   gradient is an unbiased estimator of the full-shard gradient
+//!   (the CSGD-style stochastic regime; see `data::batch`).
 
 pub mod nn;
 pub mod smoothness;
@@ -63,20 +77,75 @@ impl TaskKind {
     }
 }
 
+/// Caller-owned evaluation scratch, one per worker.
+///
+/// Buffers are sized lazily on first use and reused across rounds, so
+/// the steady-state round stays allocation-free while the objectives
+/// themselves hold no mutable state (they are plain `Sync` shared
+/// data — no `RefCell`, no `unsafe impl Sync`).
+#[derive(Default)]
+pub struct TaskWorkspace {
+    /// residual r (linreg/lasso) / NN output residual — n rows
+    pub(crate) resid: Vec<f64>,
+    /// NN hidden activations z — n·h
+    pub(crate) z: Vec<f64>,
+    /// NN backprop term dz — n·h
+    pub(crate) dz: Vec<f64>,
+}
+
+/// Resize-and-borrow helper: a no-op in the steady state (the buffer
+/// keeps its length between rounds of one objective).
+#[inline]
+pub(crate) fn scratch(buf: &mut Vec<f64>, n: usize) -> &mut [f64] {
+    if buf.len() != n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..]
+}
+
 /// A worker-local objective f_m: value + (sub)gradient.
 ///
-/// `grad_loss_into` writes ∇f_m(θ) into `grad` and returns f_m(θ).
-pub trait WorkerObjective: Send {
+/// `grad_loss_into` writes ∇f_m(θ) into `grad` and returns f_m(θ);
+/// `grad_loss_batch_into` does the same over a row subset, scaled to
+/// an unbiased full-shard estimate.  All scratch lives in the
+/// caller-owned [`TaskWorkspace`], so implementations are immutable
+/// (`Send + Sync`) shared state.
+pub trait WorkerObjective: Send + Sync {
     /// Parameter dimension d.
     fn dim(&self) -> usize;
-    /// Write ∇f_m(θ) into `grad`, return f_m(θ).
-    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64;
+
+    /// Real (unpadded) sample count n_m — the row universe batch
+    /// schedules draw from.  Real rows always occupy the shard prefix
+    /// `0..num_rows()` (see `data::partition`).
+    fn num_rows(&self) -> usize;
+
+    /// Write ∇f_m(θ) into `grad`, return f_m(θ) — the full-shard
+    /// sweep (bit-for-bit the legacy deterministic path).
+    fn grad_loss_into(
+        &self,
+        theta: &[f64],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64;
+
+    /// Write the minibatch gradient estimate into `grad` and return
+    /// the matching loss estimate: data terms are summed over `rows`
+    /// (absolute row indices, each in `0..num_rows()`) and scaled by
+    /// `num_rows() / rows.len()`; regularizers enter once, unscaled.
+    /// `rows` must be non-empty.
+    fn grad_loss_batch_into(
+        &self,
+        theta: &[f64],
+        rows: &[u32],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64;
 
     /// Objective value only (defaults to computing the gradient too;
-    /// overridden where a cheaper pass exists).
-    fn loss(&self, theta: &[f64]) -> f64 {
+    /// overridden where a cheaper forward-only pass exists).
+    fn loss(&self, theta: &[f64], ws: &mut TaskWorkspace) -> f64 {
         let mut g = vec![0.0; self.dim()];
-        self.grad_loss_into(theta, &mut g)
+        self.grad_loss_into(theta, ws, &mut g)
     }
 }
 
@@ -104,6 +173,13 @@ pub fn log1pexp(z: f64) -> f64 {
     }
 }
 
+/// Unbiasedness scale `n_real / |B|` for a batch of `b` rows.
+#[inline]
+fn batch_scale(n_real: usize, b: usize) -> f64 {
+    debug_assert!(b > 0, "empty batch");
+    n_real as f64 / b as f64
+}
+
 // ---------------------------------------------------------------------------
 // linear regression: ½‖Xθ − y‖²
 // ---------------------------------------------------------------------------
@@ -116,8 +192,7 @@ pub fn log1pexp(z: f64) -> f64 {
 pub struct LinRegTask {
     x: Arc<Matrix>,
     y: Arc<Vec<f64>>,
-    /// scratch residual buffer (hot path is allocation-free)
-    resid: std::cell::RefCell<Vec<f64>>,
+    n_real: usize,
 }
 
 impl LinRegTask {
@@ -126,24 +201,58 @@ impl LinRegTask {
         Self {
             x: Arc::clone(&shard.x),
             y: Arc::clone(&shard.y),
-            resid: std::cell::RefCell::new(vec![0.0; shard.x.rows]),
+            n_real: shard.n_real,
         }
     }
 }
-
-// RefCell scratch is only touched from the owning worker thread.
-unsafe impl Sync for LinRegTask {}
 
 impl WorkerObjective for LinRegTask {
     fn dim(&self) -> usize {
         self.x.cols
     }
 
-    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+    fn num_rows(&self) -> usize {
+        self.n_real
+    }
+
+    fn grad_loss_into(
+        &self,
+        theta: &[f64],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
         // single fused sweep over X (see Matrix::fused_residual_grad)
-        let mut r = self.resid.borrow_mut();
+        let r = scratch(&mut ws.resid, self.x.rows);
         grad.fill(0.0);
-        self.x.fused_residual_grad(theta, &self.y, &mut r, grad)
+        self.x.fused_residual_grad(theta, &self.y, r, grad)
+    }
+
+    fn grad_loss_batch_into(
+        &self,
+        theta: &[f64],
+        rows: &[u32],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
+        let r = scratch(&mut ws.resid, self.x.rows);
+        grad.fill(0.0);
+        let loss =
+            self.x.fused_residual_grad_rows(theta, &self.y, rows, r, grad);
+        let s = batch_scale(self.n_real, rows.len());
+        if s != 1.0 {
+            linalg::scale(s, grad);
+        }
+        loss * s
+    }
+
+    fn loss(&self, theta: &[f64], _ws: &mut TaskWorkspace) -> f64 {
+        // forward-only pass, same accumulation order as the fused sweep
+        let mut loss = 0.0;
+        for i in 0..self.x.rows {
+            let r = linalg::dot(self.x.row(i), theta) - self.y[i];
+            loss += r * r;
+        }
+        0.5 * loss
     }
 }
 
@@ -159,6 +268,7 @@ pub struct LogRegTask {
     y: Arc<Vec<f64>>,
     mask: Arc<Vec<f64>>,
     lam: f64,
+    n_real: usize,
 }
 
 impl LogRegTask {
@@ -169,6 +279,7 @@ impl LogRegTask {
             y: Arc::clone(&shard.y),
             mask: Arc::clone(&shard.mask),
             lam,
+            n_real: shard.n_real,
         }
     }
 }
@@ -178,7 +289,16 @@ impl WorkerObjective for LogRegTask {
         self.x.cols
     }
 
-    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+    fn num_rows(&self) -> usize {
+        self.n_real
+    }
+
+    fn grad_loss_into(
+        &self,
+        theta: &[f64],
+        _ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
         // fused single sweep over X via the shared coefficient kernel
         // (the same schedule as the Pallas logreg kernel): margin,
         // loss term, coefficient, and the rank-1 gradient update all
@@ -197,6 +317,46 @@ impl WorkerObjective for LogRegTask {
         linalg::axpy(lam, theta, grad);
         loss + 0.5 * lam * linalg::norm2_sq(theta)
     }
+
+    fn grad_loss_batch_into(
+        &self,
+        theta: &[f64],
+        rows: &[u32],
+        _ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
+        grad.fill(0.0);
+        let y = &self.y;
+        let loss = self.x.fused_coeff_grad_rows(
+            theta,
+            &self.mask,
+            rows,
+            |i, z| {
+                let margin = y[i] * z;
+                (log1pexp(-margin), -y[i] * sigmoid(-margin))
+            },
+            grad,
+        );
+        let s = batch_scale(self.n_real, rows.len());
+        if s != 1.0 {
+            linalg::scale(s, grad);
+        }
+        linalg::axpy(self.lam, theta, grad);
+        loss * s + 0.5 * self.lam * linalg::norm2_sq(theta)
+    }
+
+    fn loss(&self, theta: &[f64], _ws: &mut TaskWorkspace) -> f64 {
+        // forward-only pass, same per-row op order as the fused sweep
+        let mut loss = 0.0;
+        for i in 0..self.x.rows {
+            if self.mask[i] == 0.0 {
+                continue;
+            }
+            let z = linalg::dot(self.x.row(i), theta);
+            loss += log1pexp(-(self.y[i] * z));
+        }
+        loss + 0.5 * self.lam * linalg::norm2_sq(theta)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -214,6 +374,12 @@ impl LassoTask {
     pub fn new(shard: &Shard, lam: f64) -> Self {
         Self { inner: LinRegTask::new(shard), lam }
     }
+
+    fn add_l1_subgrad(&self, theta: &[f64], grad: &mut [f64]) {
+        for (g, &t) in grad.iter_mut().zip(theta) {
+            *g += self.lam * t.signum() * f64::from(t != 0.0);
+        }
+    }
 }
 
 impl WorkerObjective for LassoTask {
@@ -221,12 +387,37 @@ impl WorkerObjective for LassoTask {
         self.inner.dim()
     }
 
-    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
-        let sq_loss = self.inner.grad_loss_into(theta, grad);
-        for (g, &t) in grad.iter_mut().zip(theta) {
-            *g += self.lam * t.signum() * f64::from(t != 0.0);
-        }
+    fn num_rows(&self) -> usize {
+        self.inner.num_rows()
+    }
+
+    fn grad_loss_into(
+        &self,
+        theta: &[f64],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
+        let sq_loss = self.inner.grad_loss_into(theta, ws, grad);
+        self.add_l1_subgrad(theta, grad);
         sq_loss + self.lam * linalg::norm1(theta)
+    }
+
+    fn grad_loss_batch_into(
+        &self,
+        theta: &[f64],
+        rows: &[u32],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
+        // data term scaled inside the inner batch pass; the ℓ1
+        // regularizer enters once, unscaled
+        let sq_loss = self.inner.grad_loss_batch_into(theta, rows, ws, grad);
+        self.add_l1_subgrad(theta, grad);
+        sq_loss + self.lam * linalg::norm1(theta)
+    }
+
+    fn loss(&self, theta: &[f64], ws: &mut TaskWorkspace) -> f64 {
+        self.inner.loss(theta, ws) + self.lam * linalg::norm1(theta)
     }
 }
 
@@ -260,15 +451,16 @@ mod tests {
     /// Central-difference check: ∇f ≈ (f(θ+h e_i) − f(θ−h e_i)) / 2h.
     fn check_gradient(obj: &dyn WorkerObjective, theta: &[f64], tol: f64) {
         let p = theta.len();
+        let mut ws = TaskWorkspace::default();
         let mut grad = vec![0.0; p];
-        obj.grad_loss_into(theta, &mut grad);
+        obj.grad_loss_into(theta, &mut ws, &mut grad);
         let h = 1e-5;
         let mut tp = theta.to_vec();
         for i in 0..p {
             tp[i] = theta[i] + h;
-            let fp = obj.loss(&tp);
+            let fp = obj.loss(&tp, &mut ws);
             tp[i] = theta[i] - h;
-            let fm = obj.loss(&tp);
+            let fm = obj.loss(&tp, &mut ws);
             tp[i] = theta[i];
             let fd = (fp - fm) / (2.0 * h);
             assert!(
@@ -314,10 +506,11 @@ mod tests {
         let obj = LassoTask::new(&shard, 5.0);
         let lin = LinRegTask::new(&shard);
         let theta = vec![0.0; 4];
+        let mut ws = TaskWorkspace::default();
         let mut g_lasso = vec![0.0; 4];
         let mut g_lin = vec![0.0; 4];
-        obj.grad_loss_into(&theta, &mut g_lasso);
-        lin.grad_loss_into(&theta, &mut g_lin);
+        obj.grad_loss_into(&theta, &mut ws, &mut g_lasso);
+        lin.grad_loss_into(&theta, &mut ws, &mut g_lin);
         assert_eq!(g_lasso, g_lin);
     }
 
@@ -340,10 +533,11 @@ mod tests {
             LogRegTask::new(&base, 0.1),
             LogRegTask::new(&padded, 0.1),
         );
+        let mut ws = TaskWorkspace::default();
         let mut g1 = vec![0.0; 4];
         let mut g2 = vec![0.0; 4];
-        let l1 = o1.grad_loss_into(&theta, &mut g1);
-        let l2 = o2.grad_loss_into(&theta, &mut g2);
+        let l1 = o1.grad_loss_into(&theta, &mut ws, &mut g1);
+        let l2 = o2.grad_loss_into(&theta, &mut ws, &mut g2);
         assert!((l1 - l2).abs() < 1e-12);
         for i in 0..4 {
             assert!((g1[i] - g2[i]).abs() < 1e-12);
@@ -360,6 +554,101 @@ mod tests {
         assert!(Arc::ptr_eq(&lin.y, &shard.y));
         assert!(Arc::ptr_eq(&log.x, &shard.x));
         assert!(Arc::ptr_eq(&log.mask, &shard.mask));
+    }
+
+    #[test]
+    fn loss_only_pass_matches_grad_pass_value_bitwise() {
+        for task in
+            [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+        {
+            let shard = fixture(20, 5, 31);
+            let obj = build_objective(task, &shard, 0.05);
+            let theta = Xoshiro256::new(32).gaussian_vec(obj.dim());
+            let mut ws = TaskWorkspace::default();
+            let mut g = vec![0.0; obj.dim()];
+            let via_grad = obj.grad_loss_into(&theta, &mut ws, &mut g);
+            let direct = obj.loss(&theta, &mut ws);
+            assert_eq!(
+                via_grad.to_bits(),
+                direct.to_bits(),
+                "{}: loss-only pass diverged",
+                task.name()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_over_all_rows_is_bitwise_the_full_gradient() {
+        for task in
+            [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+        {
+            let shard = fixture(18, 5, 41);
+            let obj = build_objective(task, &shard, 0.05);
+            let theta = Xoshiro256::new(42).gaussian_vec(obj.dim());
+            let mut ws = TaskWorkspace::default();
+            let mut g_full = vec![0.0; obj.dim()];
+            let l_full = obj.grad_loss_into(&theta, &mut ws, &mut g_full);
+            let rows: Vec<u32> = (0..obj.num_rows() as u32).collect();
+            let mut g_batch = vec![0.0; obj.dim()];
+            let l_batch =
+                obj.grad_loss_batch_into(&theta, &rows, &mut ws, &mut g_batch);
+            assert_eq!(
+                l_full.to_bits(),
+                l_batch.to_bits(),
+                "{}: loss diverged",
+                task.name()
+            );
+            for (a, b) in g_full.iter().zip(&g_batch) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: gradient diverged",
+                    task.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_gradient_is_scaled_to_an_unbiased_estimate() {
+        // averaging the scaled batch gradient over every singleton
+        // batch {i} recovers the full gradient exactly (linearity)
+        let shard = fixture(12, 4, 51);
+        let obj = LinRegTask::new(&shard);
+        let theta = Xoshiro256::new(52).gaussian_vec(4);
+        let mut ws = TaskWorkspace::default();
+        let mut g_full = vec![0.0; 4];
+        obj.grad_loss_into(&theta, &mut ws, &mut g_full);
+        let n = obj.num_rows();
+        let mut g_mean = vec![0.0; 4];
+        let mut g_i = vec![0.0; 4];
+        for i in 0..n as u32 {
+            obj.grad_loss_batch_into(&theta, &[i], &mut ws, &mut g_i);
+            linalg::axpy(1.0 / n as f64, &g_i, &mut g_mean);
+        }
+        for (a, b) in g_full.iter().zip(&g_mean) {
+            assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn regularizers_enter_the_batch_gradient_once_unscaled() {
+        let shard = fixture(10, 4, 61);
+        let theta = Xoshiro256::new(62).gaussian_vec(4);
+        let mut ws = TaskWorkspace::default();
+        // logreg: batch grad at λ vs λ=0 differs by exactly λθ
+        let (a, b) = (
+            LogRegTask::new(&shard, 0.5),
+            LogRegTask::new(&shard, 0.0),
+        );
+        let rows = [1u32, 3];
+        let mut ga = vec![0.0; 4];
+        let mut gb = vec![0.0; 4];
+        a.grad_loss_batch_into(&theta, &rows, &mut ws, &mut ga);
+        b.grad_loss_batch_into(&theta, &rows, &mut ws, &mut gb);
+        for i in 0..4 {
+            assert!((ga[i] - gb[i] - 0.5 * theta[i]).abs() < 1e-12);
+        }
     }
 
     #[test]

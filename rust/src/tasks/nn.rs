@@ -6,14 +6,18 @@
 //! python/compile/kernels/ref.nn_pack, so PJRT artifacts and this
 //! backend are interchangeable.  Backprop is manual, matching the
 //! fused Pallas kernel step for step.
+//!
+//! Both gradient flavors (full shard and row-subset minibatch) run
+//! through one generic pass monomorphized over the row iterator, so
+//! the full-batch instantiation compiles to exactly the legacy loop —
+//! no per-row branching on the batch mode, and bit-identical results.
 
-use std::cell::RefCell;
 use std::sync::Arc;
 
 use crate::data::Shard;
 use crate::linalg::{self, Matrix};
 
-use super::{sigmoid, WorkerObjective};
+use super::{batch_scale, scratch, sigmoid, TaskWorkspace, WorkerObjective};
 
 /// Paper: "one hidden layer with 30 nodes".
 pub const HIDDEN: usize = 30;
@@ -44,16 +48,12 @@ pub fn unpack(theta: &[f64], d: usize, h: usize) -> Packed<'_> {
     Packed { w1, b1, w2, b2: rest[0] }
 }
 
-struct Scratch {
-    z: Vec<f64>,    // (n, h) activations
-    r: Vec<f64>,    // (n,) residual
-    dz: Vec<f64>,   // (n, h) backprop term
-}
-
 /// Worker objective for the NN task.
 ///
 /// Shard storage is `Arc`-shared with the owning [`Shard`] (see
-/// [`super::LinRegTask`]); only the activation scratch is per-object.
+/// [`super::LinRegTask`]); activation scratch lives in the
+/// caller-owned [`TaskWorkspace`], so the objective itself is
+/// immutable shared state.
 pub struct NnTask {
     x: Arc<Matrix>,
     y: Arc<Vec<f64>>,
@@ -63,7 +63,7 @@ pub struct NnTask {
     /// regime (gradients O(1) so α = 0.01…0.02 is stable)
     wscale: f64,
     h: usize,
-    scratch: RefCell<Scratch>,
+    n_real: usize,
 }
 
 impl NnTask {
@@ -74,7 +74,6 @@ impl NnTask {
 
     /// Explicit data-term scale (1.0 = plain sum loss).
     pub fn with_scale(shard: &Shard, lam: f64, h: usize, wscale: f64) -> Self {
-        let n = shard.x.rows;
         Self {
             x: Arc::clone(&shard.x),
             y: Arc::clone(&shard.y),
@@ -82,11 +81,7 @@ impl NnTask {
             lam,
             wscale,
             h,
-            scratch: RefCell::new(Scratch {
-                z: vec![0.0; n * h],
-                r: vec![0.0; n],
-                dz: vec![0.0; n * h],
-            }),
+            n_real: shard.n_real,
         }
     }
 
@@ -99,28 +94,37 @@ impl NnTask {
     pub fn wscale(&self) -> f64 {
         self.wscale
     }
-}
 
-// Scratch is only used from the owning worker thread.
-unsafe impl Sync for NnTask {}
-
-impl WorkerObjective for NnTask {
-    fn dim(&self) -> usize {
-        param_dim(self.x.cols, self.h)
-    }
-
-    fn grad_loss_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+    /// One forward+backward pass over the rows yielded by `rows`, with
+    /// the data-term gradient and loss scaled by `data_scale`.  The
+    /// full-batch caller passes `0..n` and `wscale`; the minibatch
+    /// caller passes the drawn index set and `wscale · n_real/|B|`.
+    /// Monomorphization keeps each instantiation's inner loops free of
+    /// any batch-mode branching, and the `0..n` instantiation performs
+    /// exactly the legacy op sequence (bit-identical traces).
+    fn pass<I>(
+        &self,
+        theta: &[f64],
+        rows: I,
+        data_scale: f64,
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64
+    where
+        I: Iterator<Item = usize> + Clone,
+    {
         let (n, d, h) = (self.x.rows, self.x.cols, self.h);
         let p = unpack(theta, d, h);
-        let mut s = self.scratch.borrow_mut();
-        let Scratch { z, r, dz } = &mut *s;
+        let z = scratch(&mut ws.z, n * h);
+        let r = scratch(&mut ws.resid, n);
+        let dz = scratch(&mut ws.dz, n * h);
 
         // forward: z = σ(XW1 + b1), pred = z·w2 + b2, r = (pred − y)·mask
         // k-outer / j-inner so every W1 access is stride-1 (W1 is
         // row-major d×h); this is the cache layout the Pallas kernel's
         // (bn,d)×(d,h) tile matmul uses, and it is ~2× over the naive
         // j-outer loop at MNIST shapes (EXPERIMENTS.md §Perf).
-        for i in 0..n {
+        for i in rows.clone() {
             if self.mask[i] == 0.0 {
                 r[i] = 0.0;
                 continue;
@@ -150,7 +154,7 @@ impl WorkerObjective for NnTask {
         let (gb1, rest) = rest.split_at_mut(h);
         let (gw2, gb2) = rest.split_at_mut(h);
         let mut loss = 0.0;
-        for i in 0..n {
+        for i in rows {
             let ri = r[i];
             if self.mask[i] == 0.0 {
                 continue;
@@ -175,10 +179,81 @@ impl WorkerObjective for NnTask {
             }
         }
         // scale the data terms (mean-loss regime), then regularize
-        if self.wscale != 1.0 {
-            linalg::scale(self.wscale, grad);
+        if data_scale != 1.0 {
+            linalg::scale(data_scale, grad);
         }
         linalg::axpy(self.lam, theta, grad);
+        0.5 * loss * data_scale + 0.5 * self.lam * linalg::norm2_sq(theta)
+    }
+}
+
+impl WorkerObjective for NnTask {
+    fn dim(&self) -> usize {
+        param_dim(self.x.cols, self.h)
+    }
+
+    fn num_rows(&self) -> usize {
+        self.n_real
+    }
+
+    fn grad_loss_into(
+        &self,
+        theta: &[f64],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
+        self.pass(theta, 0..self.x.rows, self.wscale, ws, grad)
+    }
+
+    fn grad_loss_batch_into(
+        &self,
+        theta: &[f64],
+        rows: &[u32],
+        ws: &mut TaskWorkspace,
+        grad: &mut [f64],
+    ) -> f64 {
+        let scale = self.wscale * batch_scale(self.n_real, rows.len());
+        self.pass(
+            theta,
+            rows.iter().map(|&i| i as usize),
+            scale,
+            ws,
+            grad,
+        )
+    }
+
+    fn loss(&self, theta: &[f64], ws: &mut TaskWorkspace) -> f64 {
+        // forward-only pass: same per-row op order as the full pass,
+        // without touching the gradient buffers.  Reuses a prefix of
+        // the activation scratch (grow-only, so it never fights the
+        // n·h sizing of the gradient passes).
+        let (d, h) = (self.x.cols, self.h);
+        let p = unpack(theta, d, h);
+        if ws.z.len() < h {
+            ws.z.resize(h, 0.0);
+        }
+        let zrow = &mut ws.z[..h];
+        let mut loss = 0.0;
+        for i in 0..self.x.rows {
+            if self.mask[i] == 0.0 {
+                continue;
+            }
+            let xrow = self.x.row(i);
+            zrow.copy_from_slice(p.b1);
+            for k in 0..d {
+                let xk = xrow[k];
+                if xk == 0.0 {
+                    continue;
+                }
+                linalg::axpy(xk, &p.w1[k * h..(k + 1) * h], zrow);
+            }
+            for v in zrow.iter_mut() {
+                *v = sigmoid(*v);
+            }
+            let pred = linalg::dot(zrow, p.w2) + p.b2;
+            let ri = pred - self.y[i];
+            loss += ri * ri;
+        }
         0.5 * loss * self.wscale + 0.5 * self.lam * linalg::norm2_sq(theta)
     }
 }
@@ -208,15 +283,54 @@ mod tests {
             .iter()
             .map(|v| 0.5 * v)
             .collect();
+        let mut ws = TaskWorkspace::default();
         let mut grad = vec![0.0; theta.len()];
-        obj.grad_loss_into(&theta, &mut grad);
+        obj.grad_loss_into(&theta, &mut ws, &mut grad);
         let hstep = 1e-5;
         let mut tp = theta.clone();
         for i in 0..theta.len() {
             tp[i] = theta[i] + hstep;
-            let fp = obj.loss(&tp);
+            let fp = obj.loss(&tp, &mut ws);
             tp[i] = theta[i] - hstep;
-            let fm = obj.loss(&tp);
+            let fm = obj.loss(&tp, &mut ws);
+            tp[i] = theta[i];
+            let fd = (fp - fm) / (2.0 * hstep);
+            assert!(
+                (grad[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "coord {i}: analytic {} vs fd {fd}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn batch_gradient_matches_batch_finite_differences() {
+        // FD of the *batch* loss estimate against the batch gradient:
+        // pins the n/|B| scaling through the whole backprop
+        let mut rng = Xoshiro256::new(14);
+        let ds = synthetic::gaussian_pm1(&mut rng, 12, 3);
+        let shard = shard_whole(&ds);
+        let h = 4;
+        let obj = NnTask::new(&shard, 0.02, h);
+        let rows = [1u32, 4, 7, 10];
+        let theta: Vec<f64> = Xoshiro256::new(15)
+            .gaussian_vec(param_dim(3, h))
+            .iter()
+            .map(|v| 0.5 * v)
+            .collect();
+        let mut ws = TaskWorkspace::default();
+        let mut grad = vec![0.0; theta.len()];
+        obj.grad_loss_batch_into(&theta, &rows, &mut ws, &mut grad);
+        let hstep = 1e-5;
+        let mut tp = theta.clone();
+        let mut g_scratch = vec![0.0; theta.len()];
+        for i in 0..theta.len() {
+            tp[i] = theta[i] + hstep;
+            let fp =
+                obj.grad_loss_batch_into(&tp, &rows, &mut ws, &mut g_scratch);
+            tp[i] = theta[i] - hstep;
+            let fm =
+                obj.grad_loss_batch_into(&tp, &rows, &mut ws, &mut g_scratch);
             tp[i] = theta[i];
             let fd = (fp - fm) / (2.0 * hstep);
             assert!(
@@ -243,10 +357,11 @@ mod tests {
         let h = 4;
         let theta = Xoshiro256::new(13).gaussian_vec(param_dim(3, h));
         let (o1, o2) = (NnTask::new(&base, 0.1, h), NnTask::new(&padded, 0.1, h));
+        let mut ws = TaskWorkspace::default();
         let mut g1 = vec![0.0; theta.len()];
         let mut g2 = vec![0.0; theta.len()];
-        let l1 = o1.grad_loss_into(&theta, &mut g1);
-        let l2 = o2.grad_loss_into(&theta, &mut g2);
+        let l1 = o1.grad_loss_into(&theta, &mut ws, &mut g1);
+        let l2 = o2.grad_loss_into(&theta, &mut ws, &mut g2);
         assert!((l1 - l2).abs() < 1e-12);
         for i in 0..theta.len() {
             assert!((g1[i] - g2[i]).abs() < 1e-12);

@@ -1,0 +1,340 @@
+//! Integration: the gradient-sampling layer (`data::batch`).
+//!
+//! * `BatchSchedule::Full` is bit-identical to the legacy
+//!   (pre-batching) path on all four paper tasks across
+//!   serial / threaded / rayon / degenerate-async — pinning the seed
+//!   traces through the batch-indexed kernel refactor.
+//! * Minibatch index streams are a pure function of
+//!   (worker, seed, k): the same stochastic run reproduces exactly
+//!   across every pool and the degenerate async engine, regardless of
+//!   thread interleaving.
+//! * The stochastic regime's bookkeeping (batch_frac / epoch columns)
+//!   and its headline economics (censored minibatch CHB spends fewer
+//!   uplink bits to a fixed accuracy than uncensored minibatch SGD)
+//!   hold on a small synthetic instance.
+
+use std::sync::Arc;
+
+use chb_fed::coordinator::{
+    run_async, run_rayon, run_serial, run_threaded, run_with_rules,
+    AsyncConfig, Participation, RunConfig, SerialPool, Server,
+};
+use chb_fed::data::batch::{BatchSampler, BatchSchedule};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::metrics::Trace;
+use chb_fed::net::LatencyModel;
+use chb_fed::optim::{
+    CensorRule, DecayingCensor, GdRule, HeavyBallRule, Method, MethodParams,
+    NeverCensor,
+};
+use chb_fed::tasks::TaskKind;
+
+/// Small instance of one paper task: M = 4 workers, 12×8 shards.
+fn problem_for(task: TaskKind) -> Problem {
+    let (m, n, d) = (4usize, 12usize, 8usize);
+    let l_m: Vec<f64> = (0..m).map(|i| (1.0 + 0.4 * i as f64).powi(2)).collect();
+    let seed = 0xBA + match task {
+        TaskKind::LinReg => 1,
+        TaskKind::LogReg => 2,
+        TaskKind::Lasso => 3,
+        TaskKind::Nn => 4,
+    };
+    let per_worker = synthetic::per_worker_rescaled(seed, m, n, d, &l_m);
+    let lam = match task {
+        TaskKind::Lasso => 0.05,
+        TaskKind::LogReg | TaskKind::Nn => 0.01,
+        TaskKind::LinReg => 0.0,
+    };
+    Problem::from_worker_datasets(task, "batch-equiv", &per_worker, lam)
+}
+
+fn degenerate_async() -> AsyncConfig {
+    AsyncConfig { latency: LatencyModel::zero(), ..AsyncConfig::default() }
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{what}: loss differs at k={}",
+            x.k
+        );
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² differs at k={}",
+            x.k
+        );
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms at k={}", x.k);
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits at k={}", x.k);
+        assert_eq!(
+            x.batch_frac.to_bits(),
+            y.batch_frac.to_bits(),
+            "{what}: batch_frac at k={}",
+            x.k
+        );
+        assert_eq!(
+            x.epoch.to_bits(),
+            y.epoch.to_bits(),
+            "{what}: epoch at k={}",
+            x.k
+        );
+    }
+    assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: S_m");
+    assert_eq!(a.participants, b.participants, "{what}: participants");
+}
+
+#[test]
+fn full_schedule_is_bit_identical_to_legacy_on_all_tasks_and_engines() {
+    for task in
+        [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+    {
+        let p = problem_for(task);
+        let iters = if task == TaskKind::Nn { 12 } else { 25 };
+        let params = MethodParams::new(1.0 / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, p.m_workers());
+        let cfg = RunConfig::new(Method::Chb, params, iters);
+        let name = task.name();
+
+        // the legacy path: workers with no sampler at all
+        let mut ws = p.rust_workers();
+        let legacy = run_serial(&mut ws, &cfg, p.theta0());
+        // the full-batch *schedule* must be the same thing, bit for bit
+        let mut ws = p.rust_workers_batched(BatchSchedule::Full);
+        let full_serial = run_serial(&mut ws, &cfg, p.theta0());
+        assert_traces_identical(&legacy, &full_serial, &format!("{name} serial"));
+        let full_threaded = run_threaded(
+            p.rust_workers_batched(BatchSchedule::Full),
+            &cfg,
+            p.theta0(),
+        );
+        assert_traces_identical(&legacy, &full_threaded, &format!("{name} threaded"));
+        let full_rayon = run_rayon(
+            p.rust_workers_batched(BatchSchedule::Full),
+            &cfg,
+            p.theta0(),
+        );
+        assert_traces_identical(&legacy, &full_rayon, &format!("{name} rayon"));
+        let mut ws = p.rust_workers_batched(BatchSchedule::Full);
+        let full_async = run_async(&mut ws, &cfg, &degenerate_async(), p.theta0());
+        assert_traces_identical(&legacy, &full_async, &format!("{name} async"));
+
+        // and the new columns read as the deterministic regime
+        for (i, s) in legacy.iters.iter().enumerate() {
+            assert_eq!(s.batch_frac, 1.0, "{name}: batch_frac k={}", s.k);
+            assert!(
+                (s.epoch - (i + 1) as f64).abs() < 1e-12,
+                "{name}: epoch k={} is {}",
+                s.k,
+                s.epoch
+            );
+        }
+    }
+}
+
+#[test]
+fn minibatch_traces_reproduce_exactly_across_engines() {
+    // the property behind the reproducibility claim: index streams are
+    // a pure function of (worker, seed, k), so no pool interleaving —
+    // and not even the async engine's event order — can perturb them
+    let p = problem_for(TaskKind::LinReg);
+    let schedule =
+        BatchSchedule::Minibatch { size: 4, seed: 0xFEED, replace: false };
+    let params = MethodParams::new(0.5 / p.l_global)
+        .with_beta(0.3)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 40);
+
+    let mut ws = p.rust_workers_batched(schedule);
+    let serial = run_serial(&mut ws, &cfg, p.theta0());
+    let mut ws = p.rust_workers_batched(schedule);
+    let serial2 = run_serial(&mut ws, &cfg, p.theta0());
+    assert_traces_identical(&serial, &serial2, "minibatch rerun");
+
+    let threaded = run_threaded(p.rust_workers_batched(schedule), &cfg, p.theta0());
+    assert_traces_identical(&serial, &threaded, "minibatch threaded");
+    let rayon = run_rayon(p.rust_workers_batched(schedule), &cfg, p.theta0());
+    assert_traces_identical(&serial, &rayon, "minibatch rayon");
+    let mut ws = p.rust_workers_batched(schedule);
+    let degenerate = run_async(&mut ws, &cfg, &degenerate_async(), p.theta0());
+    assert_traces_identical(&serial, &degenerate, "minibatch degenerate-async");
+
+    // a different draw seed genuinely changes the run
+    let other = BatchSchedule::Minibatch { size: 4, seed: 0xFEE0, replace: false };
+    let mut ws = p.rust_workers_batched(other);
+    let reseeded = run_serial(&mut ws, &cfg, p.theta0());
+    assert!(
+        serial
+            .iters
+            .iter()
+            .zip(&reseeded.iters)
+            .any(|(a, b)| a.loss.to_bits() != b.loss.to_bits()),
+        "re-seeded minibatch run was bit-identical — sampler ignored the seed?"
+    );
+}
+
+#[test]
+fn minibatch_draws_ignore_sampler_history() {
+    // per-(worker, seed, k) purity, stated directly on the sampler:
+    // drawing rounds out of order (as async arrival patterns do)
+    // yields the same index set per k as drawing them in order
+    let schedule =
+        BatchSchedule::Minibatch { size: 5, seed: 0xD1CE, replace: false };
+    let mut in_order = BatchSampler::new(schedule, 3, 24);
+    let mut shuffled = BatchSampler::new(schedule, 3, 24);
+    let forward: Vec<Vec<u32>> =
+        (1..=8).map(|k| in_order.draw(k).unwrap().to_vec()).collect();
+    for k in [8usize, 2, 5, 1, 7, 3, 6, 4] {
+        assert_eq!(
+            shuffled.draw(k).unwrap(),
+            &forward[k - 1][..],
+            "draw at k={k} depended on draw order"
+        );
+    }
+}
+
+#[test]
+fn batch_frac_and_epoch_columns_track_the_schedule() {
+    let p = problem_for(TaskKind::LinReg);
+    let params = MethodParams::new(0.5 / p.l_global)
+        .with_beta(0.3)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 30);
+    // fixed minibatch: 4 of 12 rows ⇒ frac 1/3 every round
+    let mini = BatchSchedule::Minibatch { size: 4, seed: 1, replace: false };
+    let mut ws = p.rust_workers_batched(mini);
+    let t = run_serial(&mut ws, &cfg, p.theta0());
+    for (i, s) in t.iters.iter().enumerate() {
+        assert!((s.batch_frac - 1.0 / 3.0).abs() < 1e-12, "k={}", s.k);
+        assert!(
+            (s.epoch - (i + 1) as f64 / 3.0).abs() < 1e-9,
+            "epoch k={} is {}",
+            s.k,
+            s.epoch
+        );
+    }
+    // growing batch: fraction is non-decreasing and saturates at 1
+    let grow = BatchSchedule::GrowingBatch { size0: 2, growth: 1.5, seed: 2 };
+    let mut ws = p.rust_workers_batched(grow);
+    let t = run_serial(&mut ws, &cfg, p.theta0());
+    for w in t.iters.windows(2) {
+        assert!(w[1].batch_frac >= w[0].batch_frac - 1e-12);
+    }
+    assert_eq!(t.iters.last().unwrap().batch_frac, 1.0, "never saturated");
+}
+
+#[test]
+fn observers_do_not_dilute_batch_frac_or_epoch() {
+    // partial participation: unscheduled workers observe (no gradient)
+    // and must be excluded from the batch_frac mean, while the epoch
+    // column advances by Σ fractions / M
+    let p = problem_for(TaskKind::LinReg);
+    let mini = BatchSchedule::Minibatch { size: 4, seed: 3, replace: false };
+    let params = MethodParams::new(0.3 / p.l_global)
+        .with_beta(0.2)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let part = Participation::UniformSample { frac: 0.5, seed: 9 };
+    let cfg = RunConfig::new(Method::Chb, params, 20)
+        .with_participation(part);
+    let mut ws = p.rust_workers_batched(mini);
+    let t = run_serial(&mut ws, &cfg, p.theta0());
+    // M = 4, frac 0.5 ⇒ 2 scheduled per round, each visiting 4 of 12
+    // rows: batch_frac reads the schedule's 1/3, epoch advances by
+    // 2·(1/3)/4 = 1/6 per round
+    for (i, s) in t.iters.iter().enumerate() {
+        assert!(
+            (s.batch_frac - 1.0 / 3.0).abs() < 1e-12,
+            "k={}: batch_frac {} diluted by observers",
+            s.k,
+            s.batch_frac
+        );
+        assert!(
+            (s.epoch - (i + 1) as f64 / 6.0).abs() < 1e-9,
+            "k={}: epoch {}",
+            s.k,
+            s.epoch
+        );
+    }
+}
+
+#[test]
+fn minibatch_loss_column_reports_the_full_shard() {
+    // at k = 1 every regime evaluates the same θ⁰, so the reported
+    // global loss must agree bitwise between full-batch and minibatch
+    // runs even though their gradients differ
+    let p = problem_for(TaskKind::LogReg);
+    let params = MethodParams::new(0.5 / p.l_global)
+        .with_beta(0.3)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 1);
+    let mut ws = p.rust_workers();
+    let full = run_serial(&mut ws, &cfg, p.theta0());
+    let mini = BatchSchedule::Minibatch { size: 3, seed: 9, replace: false };
+    let mut ws = p.rust_workers_batched(mini);
+    let batched = run_serial(&mut ws, &cfg, p.theta0());
+    assert_eq!(
+        full.iters[0].loss.to_bits(),
+        batched.iters[0].loss.to_bits(),
+        "batched round must report the full-shard loss"
+    );
+}
+
+#[test]
+fn censored_minibatch_chb_beats_uncensored_minibatch_sgd_on_bits() {
+    // the ablation_stochastic headline, pinned small: same batch size,
+    // same step size — momentum + the CSGD decreasing threshold reach
+    // the accuracy target with fewer uplink bits than plain SGD
+    let p = problem_for(TaskKind::LinReg);
+    let f_star = p.f_star().expect("convex");
+    let theta0 = p.theta0();
+    let f0 = chb_fed::experiments::fstar::objective(&p, &theta0);
+    let target = f_star + 0.1 * (f0 - f_star);
+    let alpha = 0.5 / p.l_global;
+    let iters = 400;
+    let rho = 1e-6f64.powf(1.0 / iters as f64);
+    let schedule =
+        BatchSchedule::Minibatch { size: 4, seed: 0xB47C, replace: false };
+
+    // τ₀ anchored to the initial gradient energy, as in the ablation
+    let tau0 = 0.1 * (f0 - f_star) * p.l_global;
+
+    let bits_to_target = |rule: Box<dyn chb_fed::optim::ServerRule>,
+                          censor: Arc<dyn CensorRule>,
+                          label: &str|
+     -> (u64, bool) {
+        let mut workers = p.rust_workers_batched(schedule);
+        let cfg = RunConfig::new(Method::Chb, MethodParams::new(0.0), iters);
+        let t = run_with_rules(
+            &mut SerialPool::new(&mut workers),
+            &cfg,
+            Server::with_rule(rule, theta0.clone()),
+            censor,
+            label,
+        );
+        match t.iters.iter().find(|s| s.loss <= target) {
+            Some(s) => (s.bits_cum, true),
+            None => (t.iters.last().map_or(u64::MAX, |s| s.bits_cum), false),
+        }
+    };
+
+    let (sgd_bits, sgd_hit) = bits_to_target(
+        Box::new(GdRule { alpha }),
+        Arc::new(NeverCensor),
+        "sgd-mini",
+    );
+    let (chb_bits, chb_hit) = bits_to_target(
+        Box::new(HeavyBallRule::new(alpha, 0.4, p.dim())),
+        Arc::new(DecayingCensor { tau0, rho }),
+        "chb-mini",
+    );
+    assert!(chb_hit, "censored minibatch CHB never reached the target");
+    assert!(sgd_hit, "uncensored minibatch SGD never reached the target");
+    assert!(
+        chb_bits < sgd_bits,
+        "censored CHB spent {chb_bits} bits vs SGD's {sgd_bits}"
+    );
+}

@@ -47,13 +47,14 @@ fn pjrt_gradients_match_rust_backend_on_synth() {
         for (i, shard) in shards.iter().enumerate().take(3) {
             let mut pjrt = rt.worker_backend(&meta, shard, lam).unwrap();
             let obj = tasks::build_objective(task, shard, lam);
+            let mut ws = tasks::TaskWorkspace::default();
             let dim = obj.dim();
             // a few distinct iterates, including non-trivial ones
             for scale in [0.0, 0.1, -0.5] {
                 let theta: Vec<f64> =
                     (0..dim).map(|j| scale * ((j % 7) as f64 - 3.0) / 3.0).collect();
                 let mut g_rust = vec![0.0; dim];
-                let l_rust = obj.grad_loss_into(&theta, &mut g_rust);
+                let l_rust = obj.grad_loss_into(&theta, &mut ws, &mut g_rust);
                 let mut g_pjrt = vec![0.0; dim];
                 let l_pjrt = pjrt.grad_loss_into(&theta, &mut g_pjrt);
                 let gscale = g_rust
