@@ -43,14 +43,14 @@ use crate::optim::{
 };
 use crate::rng::{SplitMix64, Xoshiro256};
 
-use super::engine::RunConfig;
+use super::engine::{AsyncSummary, RunConfig};
 use super::participation::Participation;
 use super::protocol::broadcast_bytes;
 use super::server::Server;
 use super::worker::{Worker, WorkerRound};
 
 /// Per-worker compute-time model (virtual µs per gradient round).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ComputeModel {
     /// Every worker takes exactly `us` per round — with a zero-latency
     /// network this degenerates to synchronous rounds.
@@ -100,7 +100,7 @@ impl ComputeModel {
 }
 
 /// Asynchronous-engine knobs (everything else comes from [`RunConfig`]).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AsyncConfig {
     /// per-worker compute-time model
     pub compute: ComputeModel,
@@ -142,6 +142,25 @@ pub struct AsyncOutcome {
     pub vclock_us: f64,
 }
 
+impl AsyncOutcome {
+    /// Split into the trace and the engine-level [`AsyncSummary`] —
+    /// the one conversion point the [`super::engine::run_engine`]
+    /// dispatch (and therefore `spec::Session`) uses, so new telemetry
+    /// fields are threaded here and nowhere else.
+    pub fn split(self) -> (Trace, AsyncSummary) {
+        (
+            self.trace,
+            AsyncSummary {
+                vclock_us: self.vclock_us,
+                agg_grad: self.agg_grad,
+                applied_sum: self.applied_sum,
+                dropped_sum: self.dropped_sum,
+                inflight_sum: self.inflight_sum,
+            },
+        )
+    }
+}
+
 /// Event payloads; ordering at one instant is Down → Compute → Up.
 enum Ev {
     /// θ broadcast reaches a worker; it starts computing
@@ -173,6 +192,28 @@ struct Station {
 /// (asserted): every worker loops continuously, which is full
 /// participation by construction — a sampling/straggler config would
 /// otherwise run unsampled and mislabel its results.
+///
+/// ```
+/// use chb_fed::coordinator::{run_async_detailed, AsyncConfig, RunConfig};
+/// use chb_fed::experiments::figures::synth_linreg_problem;
+/// use chb_fed::net::LatencyModel;
+/// use chb_fed::optim::{Method, MethodParams};
+///
+/// let p = synth_linreg_problem(7);
+/// let params = MethodParams::new(1.0 / p.l_global)
+///     .with_beta(0.4)
+///     .with_epsilon1_scaled(0.1, p.m_workers());
+/// let cfg = RunConfig::new(Method::Chb, params, 50);
+/// // uniform compute + zero latency = synchronous rounds, by theorem
+/// let acfg = AsyncConfig {
+///     latency: LatencyModel::zero(),
+///     ..AsyncConfig::default()
+/// };
+/// let mut ws = p.rust_workers();
+/// let out = run_async_detailed(&mut ws, &cfg, &acfg, p.theta0());
+/// assert_eq!(out.trace.iterations(), 50);
+/// assert_eq!(out.trace.max_staleness(), 0);
+/// ```
 pub fn run_async_detailed(
     workers: &mut [Worker],
     cfg: &RunConfig,
@@ -449,31 +490,18 @@ fn fold_batch(
     stop
 }
 
-/// Run the asynchronous engine and return the trace — the async
-/// sibling of [`run_serial`](super::engine::run_serial).  Workers are
-/// borrowed so callers can inspect censor state afterwards.
-///
-/// ```
-/// use chb_fed::coordinator::{run_async, AsyncConfig, RunConfig};
-/// use chb_fed::experiments::figures::synth_linreg_problem;
-/// use chb_fed::net::LatencyModel;
-/// use chb_fed::optim::{Method, MethodParams};
-///
-/// let p = synth_linreg_problem(7);
-/// let params = MethodParams::new(1.0 / p.l_global)
-///     .with_beta(0.4)
-///     .with_epsilon1_scaled(0.1, p.m_workers());
-/// let cfg = RunConfig::new(Method::Chb, params, 50);
-/// // uniform compute + zero latency = synchronous rounds, by theorem
-/// let acfg = AsyncConfig {
-///     latency: LatencyModel::zero(),
-///     ..AsyncConfig::default()
-/// };
-/// let mut ws = p.rust_workers();
-/// let trace = run_async(&mut ws, &cfg, &acfg, p.theta0());
-/// assert_eq!(trace.iterations(), 50);
-/// assert_eq!(trace.max_staleness(), 0);
-/// ```
+/// Deprecated trace-only shim kept for source compatibility — it was
+/// a near-duplicate of [`run_async_detailed`] that silently discarded
+/// the telescoping bookkeeping.  Describe the run as a
+/// [`crate::spec::RunSpec`] and go through [`crate::spec::Session`]
+/// (or [`super::engine::run_engine`] with
+/// [`super::engine::EngineKind::Async`]); for the raw trace,
+/// `run_async_detailed(..).trace` is the same one-liner this wraps.
+#[deprecated(
+    since = "0.2.0",
+    note = "route through spec::Session / coordinator::run_engine \
+            (or use run_async_detailed(..).trace)"
+)]
 pub fn run_async(
     workers: &mut [Worker],
     cfg: &RunConfig,
@@ -545,7 +573,8 @@ mod tests {
         let mut ws = quad_workers(dim, m);
         let serial = run_serial(&mut ws, &cfg, vec![0.5; dim]);
         let mut ws = quad_workers(dim, m);
-        let a = run_async(&mut ws, &cfg, &degenerate(), vec![0.5; dim]);
+        let a = run_async_detailed(&mut ws, &cfg, &degenerate(), vec![0.5; dim])
+            .trace;
         assert_eq!(serial.iterations(), a.iterations());
         for (x, y) in serial.iters.iter().zip(&a.iters) {
             assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss k={}", x.k);
@@ -578,7 +607,8 @@ mod tests {
             max_staleness: None,
         };
         let mut ws = quad_workers(dim, m);
-        let trace = run_async(&mut ws, &cfg, &acfg, vec![2.0; dim]);
+        let trace =
+            run_async_detailed(&mut ws, &cfg, &acfg, vec![2.0; dim]).trace;
         assert_eq!(trace.iterations(), 600);
         // heavy-tailed compute must desynchronize the cohort
         assert!(
@@ -609,7 +639,8 @@ mod tests {
             ..degenerate()
         };
         let mut ws = quad_workers(dim, m);
-        let trace = run_async(&mut ws, &cfg, &acfg, vec![1.0; dim]);
+        let trace =
+            run_async_detailed(&mut ws, &cfg, &acfg, vec![1.0; dim]).trace;
         // every completion transmitted: comms == Σ folds == participants
         let folds: usize =
             trace.worker_staleness.iter().map(|s| s.folds).sum();

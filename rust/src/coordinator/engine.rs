@@ -9,9 +9,11 @@
 //! workers).  All pools run the identical protocol and produce
 //! identical traces — `tests/engine_equivalence.rs` pins this.
 //!
-//! [`run_serial`], [`run_threaded`], and [`run_rayon`] are thin
-//! wrappers kept for the sweeps/examples; there is exactly one round
-//! loop underneath all of them.
+//! The four historical entry points ([`run_serial`], [`run_threaded`],
+//! [`run_rayon`], and the async engine's `run_async_detailed`) are
+//! thin wrappers over one [`EngineKind`] dispatch ([`run_engine`]);
+//! new code should describe a run as a [`crate::spec::RunSpec`] and
+//! go through [`crate::spec::Session`], which routes here.
 
 use std::sync::Arc;
 
@@ -19,6 +21,7 @@ use crate::metrics::{IterStat, Trace};
 use crate::net::{Direction, SimNetwork};
 use crate::optim::{self, CensorDecision, CensorRule, Method, MethodParams};
 
+use super::async_engine::{run_async_with_rules, AsyncConfig};
 use super::participation::{Participation, Schedule};
 use super::pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
 use super::protocol::broadcast_bytes;
@@ -257,6 +260,146 @@ impl<P: WorkerPool> RoundEngine<P> {
         let server = Server::new(cfg.method, &cfg.params, theta0);
         run_with_rules(&mut self.pool, cfg, server, censor, cfg.method.name())
     }
+}
+
+/// Which execution backend runs the protocol loop — the one axis the
+/// four historical `run_*` entry points used to hard-code.  All four
+/// kinds execute the identical protocol; with zero latency and
+/// uniform compute even [`EngineKind::Async`] reduces bit-identically
+/// to [`EngineKind::Serial`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineKind {
+    /// deterministic single-threaded reference
+    Serial,
+    /// one OS thread per worker (channel protocol)
+    Threaded,
+    /// in-tree work-stealing pool; `threads = 0` sizes to the machine
+    Rayon {
+        /// worker-thread count (0 = `available_parallelism`)
+        threads: usize,
+    },
+    /// discrete-event virtual-clock engine with per-worker compute and
+    /// latency models
+    Async(AsyncConfig),
+}
+
+impl EngineKind {
+    /// CLI / log label ("serial", "threaded", "rayon", "async").
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Serial => "serial",
+            EngineKind::Threaded => "threaded",
+            EngineKind::Rayon { .. } => "rayon",
+            EngineKind::Async(_) => "async",
+        }
+    }
+}
+
+/// Async-engine bookkeeping beyond the trace (what
+/// [`super::async_engine::AsyncOutcome`] reports next to it); `None`
+/// for the synchronous kinds.
+#[derive(Clone, Debug)]
+pub struct AsyncSummary {
+    /// final virtual-clock reading (µs)
+    pub vclock_us: f64,
+    /// final server aggregate ∇ᵏ
+    pub agg_grad: Vec<f64>,
+    /// Σ folded deltas (bit-identical to `agg_grad` by construction)
+    pub applied_sum: Vec<f64>,
+    /// Σ transmitted deltas lost to uplink drops
+    pub dropped_sum: Vec<f64>,
+    /// Σ transmitted deltas still in flight at exit
+    pub inflight_sum: Vec<f64>,
+}
+
+/// What one engine run produces: the trace, plus the async engine's
+/// extra bookkeeping when that backend ran.
+#[derive(Clone, Debug)]
+pub struct EngineRun {
+    /// the standard per-iteration trace
+    pub trace: Trace,
+    /// async-only telemetry (`None` for synchronous kinds)
+    pub async_summary: Option<AsyncSummary>,
+}
+
+/// The one dispatch every engine flavor routes through: run `cfg` on
+/// `workers` under the chosen [`EngineKind`] with an injected
+/// (server, censor) pair — the superset of [`run_with_rules`] and
+/// [`super::async_engine::run_async_with_rules`].
+pub fn run_engine_with_rules(
+    kind: &EngineKind,
+    mut workers: Vec<Worker>,
+    cfg: &RunConfig,
+    server: Server,
+    censor: Arc<dyn CensorRule>,
+    label: &str,
+) -> EngineRun {
+    match kind {
+        EngineKind::Serial => EngineRun {
+            trace: run_with_rules(
+                &mut SerialPool::new(&mut workers),
+                cfg,
+                server,
+                censor,
+                label,
+            ),
+            async_summary: None,
+        },
+        EngineKind::Threaded => EngineRun {
+            trace: run_with_rules(
+                &mut ThreadedPool::new(workers),
+                cfg,
+                server,
+                censor,
+                label,
+            ),
+            async_summary: None,
+        },
+        EngineKind::Rayon { threads } => {
+            let mut pool = if *threads == 0 {
+                RayonPool::new(workers)
+            } else {
+                RayonPool::with_threads(workers, *threads)
+            };
+            EngineRun {
+                trace: run_with_rules(&mut pool, cfg, server, censor, label),
+                async_summary: None,
+            }
+        }
+        EngineKind::Async(acfg) => {
+            let out = run_async_with_rules(
+                &mut workers,
+                cfg,
+                acfg,
+                server,
+                censor,
+                label,
+            );
+            let (trace, summary) = out.split();
+            EngineRun { trace, async_summary: Some(summary) }
+        }
+    }
+}
+
+/// Run `(cfg.method, cfg.params)` on any [`EngineKind`] — the unified
+/// form of the four `run_*` entry points.  Labels match the legacy
+/// wrappers (`"CHB"` sync, `"CHB-async"` async), so traces are
+/// drop-in comparable.
+pub fn run_engine(
+    kind: &EngineKind,
+    workers: Vec<Worker>,
+    cfg: &RunConfig,
+    theta0: Vec<f64>,
+) -> EngineRun {
+    let censor: Arc<dyn CensorRule> = Arc::from(
+        optim::method::build_censor_rule(cfg.method, &cfg.params),
+    );
+    let server = Server::new(cfg.method, &cfg.params, theta0);
+    let label = match kind {
+        EngineKind::Async(_) => format!("{}-async", cfg.method.name()),
+        _ => cfg.method.name().to_string(),
+    };
+    run_engine_with_rules(kind, workers, cfg, server, censor, &label)
 }
 
 /// Deterministic single-threaded run (borrowed workers, so callers
@@ -520,6 +663,49 @@ mod tests {
         let first = trace.iters.first().unwrap().loss - f_star;
         let last = trace.final_loss() - f_star;
         assert!(last.is_finite() && last < first * 1e-2, "{first} → {last}");
+    }
+
+    #[test]
+    fn run_engine_dispatch_matches_the_legacy_wrappers() {
+        let (dim, m) = (5, 6);
+        let p = MethodParams::new(0.8 / total_c(m))
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, p, 80).with_comm_map();
+        let mut ws = quad_workers(dim, m);
+        let serial = run_serial(&mut ws, &cfg, vec![0.5; dim]);
+        for kind in [
+            EngineKind::Serial,
+            EngineKind::Threaded,
+            EngineKind::Rayon { threads: 0 },
+            EngineKind::Rayon { threads: 3 },
+        ] {
+            let run =
+                run_engine(&kind, quad_workers(dim, m), &cfg, vec![0.5; dim]);
+            assert!(run.async_summary.is_none());
+            assert_traces_bitwise_equal(
+                &serial,
+                &run.trace,
+                &format!("run_engine {}", kind.name()),
+            );
+            assert_eq!(run.trace.method, "CHB");
+        }
+        // degenerate async through the same dispatch: identical trace,
+        // plus the async bookkeeping
+        let acfg = AsyncConfig {
+            latency: crate::net::LatencyModel::zero(),
+            ..AsyncConfig::default()
+        };
+        let run = run_engine(
+            &EngineKind::Async(acfg),
+            quad_workers(dim, m),
+            &cfg,
+            vec![0.5; dim],
+        );
+        assert_eq!(run.trace.method, "CHB-async");
+        let summary = run.async_summary.expect("async summary");
+        assert_eq!(summary.agg_grad.len(), dim);
+        assert_traces_bitwise_equal(&serial, &run.trace, "run_engine async");
     }
 
     #[test]

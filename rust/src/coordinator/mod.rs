@@ -44,12 +44,15 @@ pub mod protocol;
 pub mod server;
 pub mod worker;
 
+#[allow(deprecated)] // the shim stays importable from its old path
+pub use async_engine::run_async;
 pub use async_engine::{
-    run_async, run_async_detailed, run_async_with_rules, AsyncConfig,
-    AsyncOutcome, ComputeModel,
+    run_async_detailed, run_async_with_rules, AsyncConfig, AsyncOutcome,
+    ComputeModel,
 };
 pub use engine::{
-    run_rayon, run_serial, run_threaded, run_with_rules, RoundEngine,
+    run_engine, run_engine_with_rules, run_rayon, run_serial, run_threaded,
+    run_with_rules, AsyncSummary, EngineKind, EngineRun, RoundEngine,
     RunConfig, StopRule,
 };
 pub use participation::{Participation, Schedule};

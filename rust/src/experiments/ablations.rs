@@ -13,14 +13,18 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::{
-    run_async_detailed, run_serial, run_with_rules, AsyncConfig,
-    ComputeModel, Participation, RunConfig, SerialPool, Server,
+    run_with_rules, AsyncConfig, ComputeModel, EngineKind, Participation,
+    RunConfig, SerialPool, Server,
 };
 use crate::net::LatencyModel;
 use crate::metrics::csv;
 use crate::optim::censor::{AbsoluteCensor, PeriodicCensor};
 use crate::optim::{
     CensorRule, GradDiffCensor, Method, MethodParams,
+};
+use crate::spec::{
+    CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec, RunSpec,
+    Session,
 };
 use crate::tasks::TaskKind;
 
@@ -107,6 +111,7 @@ pub fn beta_sweep(out_dir: &Path, quick: bool) -> Result<()> {
                 tol: 1e-10,
             },
             participation: Participation::Full,
+            engine: EngineKind::Serial,
         };
         let t = runner::run_method(&p, Method::Chb, &proto, false);
         println!(
@@ -172,6 +177,7 @@ pub fn worker_scaling(out_dir: &Path, quick: bool) -> Result<()> {
 }
 
 /// Ablation D: lossy uplinks — CHB's stale-aggregate tolerance.
+/// Each run is one `RunSpec` (the drop axis is a spec field).
 pub fn failure_injection(out_dir: &Path, quick: bool) -> Result<()> {
     let p = synth_linreg_problem(0xAB4);
     let f_star = p.f_star().unwrap();
@@ -179,12 +185,20 @@ pub fn failure_injection(out_dir: &Path, quick: bool) -> Result<()> {
     println!("\n── ablation: uplink drop probability (CHB)");
     let mut rows = Vec::new();
     for drop in [0.0, 0.01, 0.05, 0.1] {
-        let params = MethodParams::new(1.0 / p.l_global)
-            .with_beta(0.4)
-            .with_epsilon1_scaled(0.1, p.m_workers());
-        let cfg = RunConfig::new(Method::Chb, params, iters).with_drops(drop, 0xD20);
-        let mut ws = p.rust_workers();
-        let t = run_serial(&mut ws, &cfg, p.theta0());
+        let spec = RunSpec {
+            params: ParamSpec {
+                alpha: Some(1.0 / p.l_global),
+                beta: 0.4,
+                epsilon: EpsilonSpec::Scaled { c: 0.1 },
+            },
+            iters,
+            drops: DropSpec { prob: drop, seed: 0xD20 },
+            ..RunSpec::new(p.task, &p.dataset)
+        };
+        let t = Session::from_parts(spec, p.clone())
+            .expect("valid ablation spec")
+            .run()
+            .trace;
         println!(
             "  drop={drop:<5} comms {:>6}  final err {:.4e}",
             t.total_comms(),
@@ -208,35 +222,36 @@ pub fn failure_injection(out_dir: &Path, quick: bool) -> Result<()> {
 /// quantization / top-k cut the *bits per uplink*; together they
 /// multiply.
 pub fn compression(out_dir: &Path, quick: bool) -> Result<()> {
-    use crate::compress::{Compressor, NoCompression, TopK, UniformQuantizer};
-
     let p = synth_linreg_problem(0xAB5);
     let f_star = p.f_star().unwrap();
     let iters = if quick { 400 } else { 1_500 };
-    let params = MethodParams::new(1.0 / p.l_global)
-        .with_beta(0.4)
-        .with_epsilon1_scaled(0.1, p.m_workers());
     println!("\n── ablation: CHB ∘ uplink compression (synthetic linreg)");
-    let codecs: Vec<(&str, Option<Arc<dyn Compressor>>)> = vec![
-        ("f64 (none)", None),
-        ("none-explicit", Some(Arc::new(NoCompression))),
-        ("quant-8bit", Some(Arc::new(UniformQuantizer { bits: 8 }))),
-        ("quant-4bit", Some(Arc::new(UniformQuantizer { bits: 4 }))),
-        ("top-25", Some(Arc::new(TopK { k: 25 }))),
+    let codecs: [(&str, CodecSpec); 4] = [
+        ("f64 (none)", CodecSpec::None),
+        ("quant-8bit", CodecSpec::Quantizer { bits: 8 }),
+        ("quant-4bit", CodecSpec::Quantizer { bits: 4 }),
+        ("top-25", CodecSpec::TopK { k: 25 }),
     ];
     let mut rows = Vec::new();
     for (label, codec) in codecs {
-        let cfg = RunConfig::new(Method::Chb, params, iters).with_stop(
-            crate::coordinator::StopRule::ObjErrBelow { f_star, tol: 1e-9 },
-        );
-        let mut ws = p.rust_workers();
-        if let Some(c) = codec {
-            ws = ws
-                .into_iter()
-                .map(|w| w.with_compressor(Arc::clone(&c)))
-                .collect();
-        }
-        let t = run_serial(&mut ws, &cfg, p.theta0());
+        let spec = RunSpec {
+            params: ParamSpec {
+                alpha: Some(1.0 / p.l_global),
+                beta: 0.4,
+                epsilon: EpsilonSpec::Scaled { c: 0.1 },
+            },
+            iters,
+            codec,
+            stop: crate::spec::StopSpec::ObjErr {
+                tol: 1e-9,
+                f_star: Some(f_star),
+            },
+            ..RunSpec::new(p.task, &p.dataset)
+        };
+        let t = Session::from_parts(spec, p.clone())
+            .expect("valid ablation spec")
+            .run()
+            .trace;
         let bits = t.iters.last().map_or(0, |s| s.bits_cum);
         println!(
             "  {label:<14} comms {:>6}  uplink {:>8.1} KiB  iters {:>5}  \
@@ -416,6 +431,7 @@ pub fn participation_sweep(out_dir: &Path, quick: bool) -> Result<()> {
                 max_iters: iters,
                 stop: crate::coordinator::StopRule::MaxIters,
                 participation,
+                engine: EngineKind::Serial,
             };
             let t = runner::run_method(&p, Method::Chb, &proto, false);
             let err = t.final_loss() - f_star;
@@ -466,17 +482,24 @@ pub fn async_heterogeneity(out_dir: &Path, quick: bool) -> Result<()> {
     // stale-gradient stability: per-arrival steps leave each worker's
     // contribution ~M steps old, so keep α·L·staleness well below 1
     let alpha = 0.1 / p.l_global;
-    let params = MethodParams::new(alpha)
-        .with_beta(0.2)
-        .with_epsilon1_scaled(0.1, p.m_workers());
-    let cfg = RunConfig::new(Method::Chb, params, iters);
+    let base_spec = RunSpec {
+        params: ParamSpec {
+            alpha: Some(alpha),
+            beta: 0.2,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        iters,
+        ..RunSpec::new(p.task, &p.dataset)
+    };
     let dir = out_dir.join("ablation_async");
     println!("\n── ablation: async vs sync × heterogeneity (CHB, linreg)");
     let mut rows = Vec::new();
 
     // synchronous baseline: the round clock pays max-over-cohort
-    let mut ws = p.rust_workers();
-    let sync = run_serial(&mut ws, &cfg, p.theta0());
+    let sync = Session::from_parts(base_spec.clone(), p.clone())
+        .expect("valid ablation spec")
+        .run()
+        .trace;
     let sync_last = sync.iters.last().unwrap();
     println!(
         "  {:<16} comms {:>6}  final err {:.4e}  vclock {:>9.1} ms",
@@ -512,21 +535,27 @@ pub fn async_heterogeneity(out_dir: &Path, quick: bool) -> Result<()> {
         ),
     ];
     for (label, compute) in regimes {
-        let acfg = AsyncConfig {
-            compute,
-            latency: LatencyModel::default(),
-            max_staleness: Some(20),
+        let spec = RunSpec {
+            engine: EngineKind::Async(AsyncConfig {
+                compute,
+                latency: LatencyModel::default(),
+                max_staleness: Some(20),
+            }),
+            ..base_spec.clone()
         };
-        let mut ws = p.rust_workers();
-        let out = run_async_detailed(&mut ws, &cfg, &acfg, p.theta0());
-        let t = &out.trace;
+        let report = Session::from_parts(spec, p.clone())
+            .expect("valid ablation spec")
+            .run();
+        let vclock_us =
+            report.async_summary.as_ref().expect("async run").vclock_us;
+        let t = &report.trace;
         println!(
             "  async {:<10} comms {:>6}  final err {:.4e}  vclock \
              {:>9.1} ms  stale≤{}",
             label,
             t.total_comms(),
             t.final_loss() - f_star,
-            out.vclock_us / 1e3,
+            vclock_us / 1e3,
             t.max_staleness(),
         );
         rows.push(vec![
@@ -534,7 +563,7 @@ pub fn async_heterogeneity(out_dir: &Path, quick: bool) -> Result<()> {
             label.into(),
             t.total_comms().to_string(),
             format!("{:.8e}", t.final_loss() - f_star),
-            format!("{:.3}", out.vclock_us / 1e3),
+            format!("{:.3}", vclock_us / 1e3),
             t.max_staleness().to_string(),
         ]);
         csv::write_trace(&dir.join(format!("async_{label}.csv")), t, f_star)?;
@@ -576,8 +605,9 @@ fn initial_grad_sq_mean(p: &Problem, theta0: &[f64]) -> f64 {
 /// Ablation J: the stochastic (minibatch) regime — censored-SGD
 /// communication-per-accuracy on all four tasks.
 ///
-/// Five regimes per task, all through the one `run_with_rules`
-/// pipeline (serial pool, fixed minibatch schedule where stochastic):
+/// Five regimes per task, each one a [`RunSpec`] (method × censor ×
+/// batch axes) through the one [`Session`] pipeline (serial engine,
+/// fixed minibatch schedule where stochastic):
 ///
 /// * `full-chb`     — the paper's deterministic CHB baseline
 /// * `sgd-mini`     — uncensored minibatch SGD (every worker uploads
@@ -596,10 +626,6 @@ fn initial_grad_sq_mean(p: &Problem, theta0: &[f64]) -> f64 {
 /// `sgd-mini` at equal batch size and step size.
 pub fn stochastic(out_dir: &Path, quick: bool) -> Result<()> {
     use crate::data::batch::BatchSchedule;
-    use crate::optim::{
-        DecayingCensor, GdRule, HeavyBallRule, NeverCensor, ServerRule,
-        VarianceScaledCensor,
-    };
 
     let iters = if quick { 500 } else { 2_000 };
     // τ decays six orders of magnitude over the run, so late-phase
@@ -638,73 +664,64 @@ pub fn stochastic(out_dir: &Path, quick: bool) -> Result<()> {
         // conservative step: minibatch noise + (for CHB) momentum both
         // shrink the stability margin
         let alpha = 0.5 / p.l_global;
-        let eps1 =
-            crate::optim::censor::epsilon1_scaled(0.1, alpha, p.m_workers());
         let tau0 = 0.1 * initial_grad_sq_mean(&p, &theta0);
         let schedule =
             BatchSchedule::Minibatch { size: 16, seed: 0xB47C, replace: false };
-        let n_ref = p.shards[0].n_real;
         let f0 = super::fstar::objective(&p, &theta0);
         let target = match f_star {
             Some(fs) => fs + 0.1 * (f0 - fs),
             None => 0.5 * f0,
         };
 
-        let regimes: Vec<(&str, bool, Box<dyn ServerRule>, Arc<dyn CensorRule>)> = vec![
+        // each regime is one RunSpec: the method picks the server rule
+        // (Gd ⇒ plain descent, Chb ⇒ heavy ball), the censor field
+        // picks the rule, the batch field picks the sampling schedule
+        let regimes: [(&str, Method, CensorSpec, BatchSchedule); 5] = [
             (
                 "full-chb",
-                false,
-                Box::new(HeavyBallRule::new(alpha, 0.4, p.dim())),
-                Arc::new(GradDiffCensor { epsilon1: eps1 }),
+                Method::Chb,
+                CensorSpec::MethodDefault,
+                BatchSchedule::Full,
             ),
-            (
-                "sgd-mini",
-                true,
-                Box::new(GdRule { alpha }),
-                Arc::new(NeverCensor),
-            ),
+            ("sgd-mini", Method::Gd, CensorSpec::MethodDefault, schedule),
             (
                 "csgd-mini",
-                true,
-                Box::new(GdRule { alpha }),
-                Arc::new(DecayingCensor { tau0, rho }),
+                Method::Gd,
+                CensorSpec::Decaying { tau0, rho },
+                schedule,
             ),
             (
                 "chb-mini",
-                true,
-                Box::new(HeavyBallRule::new(alpha, 0.4, p.dim())),
-                Arc::new(DecayingCensor { tau0, rho }),
+                Method::Chb,
+                CensorSpec::Decaying { tau0, rho },
+                schedule,
             ),
             (
                 "chb-mini-var",
-                true,
-                Box::new(HeavyBallRule::new(alpha, 0.4, p.dim())),
-                Arc::new(VarianceScaledCensor {
-                    epsilon1: eps1,
-                    schedule,
-                    n_rows: n_ref,
-                }),
+                Method::Chb,
+                CensorSpec::VarianceScaled,
+                schedule,
             ),
         ];
-        for (label, mini, rule, censor) in regimes {
-            let mut workers = if mini {
-                p.rust_workers_batched(schedule)
-            } else {
-                p.rust_workers()
-            };
-            // method/params placeholders: the injected pair is the run
-            let cfg = RunConfig::new(
-                Method::Chb,
-                MethodParams::new(0.0),
-                iters,
-            );
-            let t = run_with_rules(
-                &mut SerialPool::new(&mut workers),
-                &cfg,
-                Server::with_rule(rule, theta0.clone()),
+        for (label, method, censor, batch) in regimes {
+            let spec = RunSpec {
+                label: Some(label.to_string()),
+                method,
+                params: ParamSpec {
+                    alpha: Some(alpha),
+                    beta: 0.4,
+                    epsilon: EpsilonSpec::Scaled { c: 0.1 },
+                },
                 censor,
-                label,
-            );
+                batch,
+                iters,
+                lambda: p.lambda_global(),
+                ..RunSpec::new(task, &p.dataset)
+            };
+            let t = Session::from_parts(spec, p.clone())
+                .expect("valid ablation spec")
+                .run()
+                .trace;
             let bits_total = t.iters.last().map_or(0, |s| s.bits_cum);
             let hit = t.iters.iter().find(|s| s.loss <= target);
             let (k_hit, bits_hit) = hit

@@ -179,7 +179,9 @@ pub fn objective(p: &Problem, theta: &[f64]) -> f64 {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::optim::Method;
     use crate::rng::Xoshiro256;
+    use crate::spec::{ParamSpec, RunSpec, Session};
 
     fn toy_problem(task: TaskKind, lam: f64) -> Problem {
         let mut rng = Xoshiro256::new(40);
@@ -189,19 +191,31 @@ mod tests {
         Problem::from_worker_datasets(task, "toy", &per_worker, lam)
     }
 
+    /// Run `method` at α = 1/L for `iters` through the spec layer.
+    fn reference_run(p: &Problem, method: Method, iters: usize) -> f64 {
+        let spec = RunSpec {
+            method,
+            params: ParamSpec {
+                alpha: Some(1.0 / p.l_global),
+                ..ParamSpec::default()
+            },
+            iters,
+            lambda: p.lambda_global(),
+            ..RunSpec::new(p.task, &p.dataset)
+        };
+        Session::from_parts(spec, p.clone())
+            .expect("valid reference spec")
+            .run()
+            .trace
+            .final_loss()
+    }
+
     #[test]
     fn linreg_fstar_is_a_lower_bound_near_gd_limit() {
         let p = toy_problem(TaskKind::LinReg, 0.0);
         let fs = linreg_f_star(&p);
         // run plain GD for a long time; must approach but not beat f*
-        let mut ws = p.rust_workers();
-        let cfg = crate::coordinator::RunConfig::new(
-            crate::optim::Method::Gd,
-            crate::optim::MethodParams::new(1.0 / p.l_global),
-            4000,
-        );
-        let trace = crate::coordinator::run_serial(&mut ws, &cfg, p.theta0());
-        let gd_final = trace.final_loss();
+        let gd_final = reference_run(&p, Method::Gd, 4000);
         assert!(gd_final >= fs - 1e-9, "GD {gd_final} below f* {fs}");
         assert!(gd_final - fs < 1e-6, "GD didn't approach f*: {gd_final} vs {fs}");
     }
@@ -211,33 +225,20 @@ mod tests {
         let p = toy_problem(TaskKind::LogReg, 0.01);
         let fs = logreg_f_star(&p);
         // perturbing θ* in any direction should not decrease f below f*
-        // (weak test: GD from zero can't beat it either)
-        let mut ws = p.rust_workers();
-        let cfg = crate::coordinator::RunConfig::new(
-            crate::optim::Method::Hb,
-            crate::optim::MethodParams::new(1.0 / p.l_global).with_beta(0.4),
-            6000,
-        );
-        let trace = crate::coordinator::run_serial(&mut ws, &cfg, p.theta0());
-        assert!(trace.final_loss() >= fs - 1e-9);
-        assert!(trace.final_loss() - fs < 1e-5);
+        // (weak test: HB from zero can't beat it either)
+        let final_loss = reference_run(&p, Method::Hb, 6000);
+        assert!(final_loss >= fs - 1e-9);
+        assert!(final_loss - fs < 1e-5);
     }
 
     #[test]
     fn lasso_fstar_beats_subgradient_runs() {
         let p = toy_problem(TaskKind::Lasso, 0.1);
         let fs = lasso_f_star(&p);
-        let mut ws = p.rust_workers();
-        let cfg = crate::coordinator::RunConfig::new(
-            crate::optim::Method::Hb,
-            crate::optim::MethodParams::new(1.0 / p.l_global).with_beta(0.4),
-            4000,
-        );
-        let trace = crate::coordinator::run_serial(&mut ws, &cfg, p.theta0());
+        let final_loss = reference_run(&p, Method::Hb, 4000);
         assert!(
-            trace.final_loss() >= fs - 1e-9,
-            "subgradient {} below FISTA f* {fs}",
-            trace.final_loss()
+            final_loss >= fs - 1e-9,
+            "subgradient {final_loss} below FISTA f* {fs}"
         );
     }
 

@@ -20,6 +20,12 @@ use crate::data::{partition, registry, Dataset, Shard};
 use crate::tasks::{self, smoothness, TaskKind};
 
 /// A fully-specified learning problem (one dataset × one task).
+///
+/// Cloning is cheap: shard storage is `Arc`-shared, so a clone bumps
+/// refcounts instead of copying the dataset — which is how the
+/// experiment drivers hand the same problem to a
+/// [`crate::spec::Session`] per run.
+#[derive(Clone)]
 pub struct Problem {
     /// the learning task
     pub task: TaskKind,
@@ -100,6 +106,12 @@ impl Problem {
     /// Worker count M.
     pub fn m_workers(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The global regularization λ this problem was built with
+    /// (λ_m · M — the spec-level parameterization).
+    pub fn lambda_global(&self) -> f64 {
+        self.lam_m * self.m_workers() as f64
     }
 
     /// Flat parameter dimension for this (task, dataset).

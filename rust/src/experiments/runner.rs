@@ -1,13 +1,22 @@
 //! Shared run orchestration: execute the four methods on one problem
 //! with the paper's parameter protocol, collect traces.
+//!
+//! [`Protocol`] is a preset constructor for [`crate::spec::RunSpec`]:
+//! [`Protocol::spec`] materializes the §IV parameter protocol as a
+//! spec, and [`run_method`] executes it through
+//! [`crate::spec::Session`] — so the experiment drivers run on the
+//! same unified engine dispatch as the CLI (the engine axis used to
+//! be silently ignored here: `run_method` hard-coded the serial
+//! engine regardless of configuration).
 
 use std::path::Path;
 
 use anyhow::Result;
 
-use crate::coordinator::{run_serial, Participation, RunConfig, StopRule};
+use crate::coordinator::{EngineKind, Participation, StopRule};
 use crate::metrics::{csv, Trace};
 use crate::optim::{Method, MethodParams};
+use crate::spec::{EpsilonSpec, ParamSpec, RunSpec, Session, StopSpec};
 
 use super::Problem;
 
@@ -29,10 +38,13 @@ pub struct Protocol {
     pub stop: StopRule,
     /// per-round client scheduling (paper: full participation)
     pub participation: Participation,
+    /// execution backend (paper: serial reference engine)
+    pub engine: EngineKind,
 }
 
 impl Protocol {
-    /// The §IV default: β = 0.4, ε₁ = 0.1/(α²M²), full participation.
+    /// The §IV default: β = 0.4, ε₁ = 0.1/(α²M²), full participation,
+    /// serial engine.
     pub fn paper_default(alpha: f64, max_iters: usize) -> Protocol {
         Protocol {
             alpha,
@@ -42,6 +54,7 @@ impl Protocol {
             max_iters,
             stop: StopRule::MaxIters,
             participation: Participation::Full,
+            engine: EngineKind::Serial,
         }
     }
 
@@ -54,6 +67,12 @@ impl Protocol {
     /// Replace the participation policy (builder form).
     pub fn with_participation(mut self, p: Participation) -> Protocol {
         self.participation = p;
+        self
+    }
+
+    /// Replace the execution engine (builder form).
+    pub fn with_engine(mut self, engine: EngineKind) -> Protocol {
+        self.engine = engine;
         self
     }
 
@@ -71,24 +90,56 @@ impl Protocol {
             None => p.with_epsilon1_scaled(self.eps_c, m_workers),
         }
     }
+
+    /// Materialize the protocol as a [`RunSpec`] preset for `method`
+    /// on `problem` — the §IV grid as one serializable value.
+    pub fn spec(
+        &self,
+        method: Method,
+        problem: &Problem,
+        comm_map: bool,
+    ) -> RunSpec {
+        RunSpec {
+            lambda: problem.lambda_global(),
+            method,
+            params: ParamSpec {
+                alpha: Some(self.alpha),
+                beta: self.beta,
+                epsilon: match self.eps_abs {
+                    Some(eps) => EpsilonSpec::Absolute { eps },
+                    None => EpsilonSpec::Scaled { c: self.eps_c },
+                },
+            },
+            engine: self.engine,
+            participation: self.participation,
+            iters: self.max_iters,
+            stop: match self.stop {
+                StopRule::MaxIters => StopSpec::MaxIters,
+                StopRule::ObjErrBelow { f_star, tol } => {
+                    StopSpec::ObjErr { tol, f_star: Some(f_star) }
+                }
+                StopRule::AggGradBelow { tol } => StopSpec::AggGrad { tol },
+            },
+            record_comm_map: comm_map,
+            ..RunSpec::new(problem.task, &problem.dataset)
+        }
+    }
 }
 
-/// Run one method on a problem; fresh workers each time.
+/// Run one method on a problem; fresh workers each time.  Routed
+/// through [`Session`], so the protocol's engine axis is honored
+/// (previously this hard-coded the serial engine).
 pub fn run_method(
     problem: &Problem,
     method: Method,
     proto: &Protocol,
     comm_map: bool,
 ) -> Trace {
-    let params = proto.params(problem.m_workers());
-    let mut cfg = RunConfig::new(method, params, proto.max_iters)
-        .with_stop(proto.stop)
-        .with_participation(proto.participation);
-    if comm_map {
-        cfg = cfg.with_comm_map();
-    }
-    let mut workers = problem.rust_workers();
-    run_serial(&mut workers, &cfg, problem.theta0())
+    let spec = proto.spec(method, problem, comm_map);
+    Session::from_parts(spec, problem.clone())
+        .expect("protocol presets always validate")
+        .run()
+        .trace
 }
 
 /// Run all four methods; returns traces in Method::ALL order

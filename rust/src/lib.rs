@@ -9,10 +9,16 @@
 //!
 //! Quick tour (see README.md for the full map, and ARCHITECTURE.md at
 //! the repository root for the paper-equation ↔ module correspondence):
+//! * [`spec`] — the declarative run layer: one serializable
+//!   [`spec::RunSpec`] describes a complete run (method, censor,
+//!   engine, participation, batching, compression, drops, stop rule),
+//!   one [`spec::Session`] executes it; every run writes a rerunnable
+//!   `manifest.json`.
 //! * [`optim`] — GD / HB / LAG-WK / CHB update + censor rules (the
 //!   paper's Algorithm 1).
 //! * [`coordinator`] — the federated round engines (synchronous pools
-//!   and the asynchronous discrete-event engine) and comm accounting.
+//!   and the asynchronous discrete-event engine) behind one
+//!   [`coordinator::EngineKind`] dispatch, and comm accounting.
 //! * [`runtime`] — PJRT artifact loading/execution.
 //! * [`experiments`] — one driver per paper figure/table.
 //! * [`theory`] — the paper's parameter conditions (10)–(12), rate
@@ -31,6 +37,7 @@ pub mod net;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod spec;
 pub mod tasks;
 pub mod testing;
 pub mod theory;

@@ -3,10 +3,17 @@
 //! ```text
 //! chb-fed exp <id>            regenerate one paper artifact
 //!                             (fig1…fig12, table1…table3, ablations, all)
-//! chb-fed run                 one federated run with explicit knobs
+//! chb-fed run                 one federated run (flags → RunSpec → Session)
+//! chb-fed run --spec FILE     replay a run from a manifest
 //! chb-fed list                datasets, artifacts, experiments
 //! chb-fed check-theory        evaluate Lemma-1/Theorem-1 conditions
 //! ```
+//!
+//! Every `run` is described by a `spec::RunSpec`: flags assemble one,
+//! `--spec FILE` loads one, `--dump-spec` prints the resolved spec
+//! instead of running, and every completed run writes `manifest.json`
+//! next to its trace CSVs — so any result directory is rerunnable
+//! from a single file.
 //!
 //! Common options: --out results --data data --full (paper-scale
 //! iteration budgets; default is the quick profile sized for this
@@ -17,14 +24,16 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use chb_fed::coordinator::{
-    run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
-    ComputeModel, Participation, RunConfig, StopRule,
+    AsyncConfig, ComputeModel, EngineKind, Participation,
 };
 use chb_fed::data::batch::BatchSchedule;
+use chb_fed::experiments::{ablations, figures, tables};
 use chb_fed::net::LatencyModel;
-use chb_fed::experiments::{ablations, figures, tables, Problem};
 use chb_fed::optim::Method;
-use chb_fed::runtime::PjrtRuntime;
+use chb_fed::spec::{
+    BackendKind, CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec,
+    Registry, RunSpec, Session,
+};
 use chb_fed::tasks::TaskKind;
 use chb_fed::util::cli::Args;
 use chb_fed::util::logging;
@@ -36,17 +45,31 @@ USAGE:
   chb-fed exp <id> [--out DIR] [--data DIR] [--full]
       ids: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11
            fig12 table1 table2 table3 ablations all
-  chb-fed run --task T --dataset D [--method M] [--alpha A] [--beta B]
+  chb-fed run [--spec FILE] [--dump-spec]
+              [--task T] [--dataset D] [--method M] [--alpha A] [--beta B]
               [--eps-c C | --eps-abs E] [--iters N] [--lambda L]
-              [--backend rust|pjrt] [--engine serial|threaded|rayon|async]
+              [--backend rust|pjrt]
+              [--engine serial|threaded|rayon|async] [--threads N]
               [--participation full|sample|straggler] [--sample-frac F]
               [--timeout T] [--part-seed S]
               [--batch-schedule full|minibatch|growing] [--batch-size B]
               [--batch-seed S] [--batch-growth G] [--batch-replace]
+              [--censor method-default|never|absolute|periodic|decaying|
+                        variance-scaled]
+              [--censor-tau T] [--censor-period P] [--censor-tau0 T]
+              [--censor-rho R]
+              [--compress none|quant|topk] [--quant-bits B] [--topk-k K]
+              [--drop-prob P] [--drop-seed S] [--label NAME] [--comm-map]
               [--compute-model uniform|pareto] [--compute-us US]
               [--pareto-shape A] [--compute-seed S] [--max-staleness S]
               [--net-fixed-us F] [--net-per-kib-us P]
               [--artifacts DIR] [--out DIR] [--data DIR]
+      Flags assemble a RunSpec (the typed, serializable run
+      description); --spec FILE loads one instead (combining --spec
+      with run flags is an error), and --dump-spec validates + prints
+      the spec JSON without running.  Every run writes manifest.json
+      next to its trace CSVs: rerun any result directory with
+      `chb-fed run --spec <dir>/manifest.json`.
       stochastic regime: --batch-schedule minibatch draws --batch-size
       rows per worker per round (per-worker seeded streams, without
       replacement unless --batch-replace); growing starts at
@@ -80,7 +103,14 @@ fn main() {
 fn dispatch(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["full", "verbose", "help", "comm-map", "batch-replace"],
+        &[
+            "full",
+            "verbose",
+            "help",
+            "comm-map",
+            "batch-replace",
+            "dump-spec",
+        ],
     )?;
     if args.flag("verbose") {
         logging::set_level(logging::Level::Debug);
@@ -95,7 +125,10 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "list" => cmd_list(&args),
         "check-theory" => cmd_theory(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
-    }
+    }?;
+    // strict accounting: anything not consumed above is a typo or an
+    // option that does not apply to the chosen command/engine
+    args.finish()
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {
@@ -107,6 +140,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let out = Path::new(args.get_or("out", "results"));
     let data = Path::new(args.get_or("data", "data"));
     let quick = !args.flag("full");
+    // all options are read by now — reject typos *before* hour-scale
+    // driver runs, not after
+    args.finish()?;
     let run_one = |id: &str| -> Result<()> {
         let t = chb_fed::util::timer::Timer::quiet();
         let r = match id {
@@ -145,7 +181,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
+/// Assemble a [`RunSpec`] from CLI flags (with `--config` file
+/// defaults) — the flags→spec half of `cmd_run`.
+fn spec_from_flags(args: &Args) -> Result<RunSpec> {
     // --config file.toml provides defaults; explicit flags override.
     let cfg_file = match args.get("config") {
         Some(path) => chb_fed::util::config::Config::load(Path::new(path))?,
@@ -157,222 +195,234 @@ fn cmd_run(args: &Args) -> Result<()> {
             .or_else(|| cfg_file.str(&format!("run.{key}")).map(str::to_string))
             .unwrap_or_else(|| dflt.to_string())
     };
-    let pick_num = |key: &str| -> Option<f64> {
+    // malformed numbers are hard errors, never silent defaults (the
+    // strict-CLI rule: a typo must not change the run)
+    let pick_num = |key: &str| -> Result<Option<f64>> {
+        match args.get(key) {
+            Some(s) => Ok(Some(
+                s.parse::<f64>().with_context(|| format!("--{key} {s:?}"))?,
+            )),
+            None => Ok(cfg_file.num(&format!("run.{key}"))),
+        }
+    };
+    let pick_opt = |key: &str| -> Option<String> {
         args.get(key)
-            .and_then(|s| s.parse().ok())
-            .or_else(|| cfg_file.num(&format!("run.{key}")))
+            .map(str::to_string)
+            .or_else(|| cfg_file.str(&format!("run.{key}")).map(str::to_string))
+    };
+    let pick_seed = |key: &str, dflt: u64| -> Result<u64> {
+        match args.get(key).or_else(|| cfg_file.str(&format!("run.{key}"))) {
+            Some(s) => {
+                s.parse::<u64>().with_context(|| format!("--{key} {s:?}"))
+            }
+            None => Ok(dflt),
+        }
     };
 
     let task = TaskKind::parse(&pick("task", "linreg"))
         .context("bad task (linreg|logreg|lasso|nn)")?;
-    let dataset = pick("dataset", "synth");
-    let dataset = dataset.as_str();
-    let data_s = pick("data", "data");
-    let data = Path::new(&data_s);
-    let lam = pick_num("lambda").unwrap_or(0.001);
-    let problem = Problem::from_registry(task, dataset, data, lam)?;
-
-    let alpha = pick_num("alpha").unwrap_or(1.0 / problem.l_global);
-    let beta = pick_num("beta").unwrap_or(0.4);
-    let iters = pick_num("iters").unwrap_or(500.0) as usize;
     let method = Method::parse(&pick("method", "chb"))
         .context("bad method (gd|hb|lag|chb)")?;
-    let mut params = chb_fed::optim::MethodParams::new(alpha).with_beta(beta);
-    params = match pick_num("eps-abs") {
-        Some(e) => params.with_epsilon1(e),
-        None => params.with_epsilon1_scaled(
-            pick_num("eps-c").unwrap_or(0.1),
-            problem.m_workers(),
-        ),
+    let params = ParamSpec {
+        alpha: pick_num("alpha")?,
+        beta: pick_num("beta")?.unwrap_or(0.4),
+        epsilon: match pick_num("eps-abs")? {
+            Some(eps) => EpsilonSpec::Absolute { eps },
+            None => EpsilonSpec::Scaled { c: pick_num("eps-c")?.unwrap_or(0.1) },
+        },
     };
-    // config-file aware like every other run.* option
-    let part_seed = match args
-        .get("part-seed")
-        .or_else(|| cfg_file.str("run.part-seed"))
-    {
-        Some(s) => s
-            .parse::<u64>()
-            .with_context(|| format!("--part-seed {s:?}"))?,
-        None => 0x5EED,
-    };
+
+    let part_seed = pick_seed("part-seed", 0x5EED)?;
     let participation = match pick("participation", "full").as_str() {
         "full" => Participation::Full,
         "sample" => Participation::UniformSample {
-            frac: pick_num("sample-frac").unwrap_or(0.5),
+            frac: pick_num("sample-frac")?.unwrap_or(0.5),
             seed: part_seed,
         },
         "straggler" => Participation::Straggler {
-            timeout: pick_num("timeout").unwrap_or(1.5),
+            timeout: pick_num("timeout")?.unwrap_or(1.5),
             seed: part_seed,
         },
         other => bail!("bad --participation {other:?} (full|sample|straggler)"),
     };
-    let mut cfg = RunConfig::new(method, params, iters)
-        .with_stop(StopRule::MaxIters)
-        .with_participation(participation);
-    if args.flag("comm-map") {
-        cfg = cfg.with_comm_map();
-    }
 
     // gradient-sampling schedule (data::batch): full is the paper's
-    // deterministic regime and the bit-pinned default.  All four
-    // knobs are config-file aware like every other run.* option.
-    let batch_size = pick_num("batch-size").unwrap_or(32.0) as usize;
-    let batch_seed = match args
-        .get("batch-seed")
-        .or_else(|| cfg_file.str("run.batch-seed"))
-    {
-        Some(s) => s
-            .parse::<u64>()
-            .with_context(|| format!("--batch-seed {s:?}"))?,
-        None => 0xB47C,
-    };
-    let schedule = match pick("batch-schedule", "full").as_str() {
+    // deterministic regime and the bit-pinned default
+    let batch_size = pick_num("batch-size")?.unwrap_or(32.0) as usize;
+    let batch_seed = pick_seed("batch-seed", 0xB47C)?;
+    let batch = match pick("batch-schedule", "full").as_str() {
         "full" => BatchSchedule::Full,
         "minibatch" => BatchSchedule::Minibatch {
             size: batch_size.max(1),
             seed: batch_seed,
             replace: args.flag("batch-replace"),
         },
-        "growing" => {
-            let growth = pick_num("batch-growth").unwrap_or(1.05);
-            if !growth.is_finite() || growth < 1.0 {
-                bail!("--batch-growth must be ≥ 1, got {growth}");
-            }
-            BatchSchedule::GrowingBatch {
-                size0: batch_size.max(1),
-                growth,
-                seed: batch_seed,
-            }
+        "growing" => BatchSchedule::GrowingBatch {
+            size0: batch_size.max(1),
+            growth: pick_num("batch-growth")?.unwrap_or(1.05),
+            seed: batch_seed,
+        },
+        other => {
+            bail!("bad --batch-schedule {other:?} (full|minibatch|growing)")
         }
+    };
+
+    let censor = match pick("censor", "method-default").as_str() {
+        "method-default" => CensorSpec::MethodDefault,
+        "never" => CensorSpec::Never,
+        "absolute" => CensorSpec::Absolute {
+            tau: pick_num("censor-tau")?.unwrap_or(1.0),
+        },
+        "periodic" => CensorSpec::Periodic {
+            period: pick_num("censor-period")?.unwrap_or(2.0) as usize,
+        },
+        "decaying" => CensorSpec::Decaying {
+            tau0: pick_num("censor-tau0")?.unwrap_or(1.0),
+            rho: pick_num("censor-rho")?.unwrap_or(0.99),
+        },
+        "variance-scaled" => CensorSpec::VarianceScaled,
         other => bail!(
-            "bad --batch-schedule {other:?} (full|minibatch|growing)"
+            "bad --censor {other:?} (method-default|never|absolute|\
+             periodic|decaying|variance-scaled)"
         ),
     };
 
-    println!(
-        "run: {} on {} — M={} d={} L={:.4e} α={alpha:.4e} β={beta} ε₁={:.4e} \
-         backend={} engine={} participation={} batch={}",
-        method.name(),
-        dataset,
-        problem.m_workers(),
-        problem.dim(),
-        problem.l_global,
-        params.epsilon1,
-        args.get_or("backend", "rust"),
-        args.get_or("engine", "serial"),
-        participation.name(),
-        schedule.name(),
-    );
-
-    // backend decides where gradients come from; engine decides where
-    // workers execute — one RoundEngine pipeline underneath either way
-    let workers = match args.get_or("backend", "rust") {
-        "rust" => problem.rust_workers_batched(schedule),
-        "pjrt" => {
-            if schedule != BatchSchedule::Full {
-                bail!(
-                    "--backend pjrt evaluates the full AOT shard per \
-                     round; minibatch schedules need --backend rust"
-                );
-            }
-            let mut rt =
-                PjrtRuntime::new(Path::new(args.get_or("artifacts", "artifacts")))?;
-            println!("PJRT platform: {}", rt.platform());
-            problem.pjrt_workers(&mut rt)?
+    let codec = match pick("compress", "none").as_str() {
+        "none" => CodecSpec::None,
+        "quant" => CodecSpec::Quantizer {
+            bits: pick_num("quant-bits")?.unwrap_or(8.0) as u32,
+        },
+        "topk" => {
+            CodecSpec::TopK { k: pick_num("topk-k")?.unwrap_or(25.0) as usize }
         }
-        other => bail!("bad --backend {other:?}"),
+        other => bail!("bad --compress {other:?} (none|quant|topk)"),
     };
-    let trace = match args.get_or("engine", "serial") {
-        "serial" => {
-            let mut ws = workers;
-            run_serial(&mut ws, &cfg, problem.theta0())
-        }
-        "threaded" => run_threaded(workers, &cfg, problem.theta0()),
-        "rayon" => run_rayon(workers, &cfg, problem.theta0()),
+
+    let engine = match pick("engine", "serial").as_str() {
+        "serial" => EngineKind::Serial,
+        "threaded" => EngineKind::Threaded,
+        "rayon" => EngineKind::Rayon {
+            threads: pick_num("threads")?.unwrap_or(0.0) as usize,
+        },
         "async" => {
-            if participation != Participation::Full {
-                bail!(
-                    "--engine async runs full participation by \
-                     construction; drop --participation"
-                );
-            }
-            let compute_us: f64 = args.get_parse_or("compute-us", 1_000.0)?;
-            if compute_us.is_nan() || compute_us <= 0.0 {
-                bail!("--compute-us must be > 0, got {compute_us}");
-            }
-            let compute = match args.get_or("compute-model", "uniform") {
+            let compute_us = pick_num("compute-us")?.unwrap_or(1_000.0);
+            let compute = match pick("compute-model", "uniform").as_str() {
                 "uniform" => ComputeModel::Uniform { us: compute_us },
-                "pareto" => {
-                    let shape: f64 = args.get_parse_or("pareto-shape", 2.0)?;
-                    if shape.is_nan() || shape <= 0.0 {
-                        bail!("--pareto-shape must be > 0, got {shape}");
-                    }
-                    ComputeModel::Pareto {
-                        scale_us: compute_us,
-                        shape,
-                        seed: args.get_parse_or("compute-seed", 0x0A57u64)?,
-                    }
+                "pareto" => ComputeModel::Pareto {
+                    scale_us: compute_us,
+                    shape: pick_num("pareto-shape")?.unwrap_or(2.0),
+                    seed: pick_seed("compute-seed", 0x0A57)?,
+                },
+                other => {
+                    bail!("bad --compute-model {other:?} (uniform|pareto)")
                 }
-                other => bail!(
-                    "bad --compute-model {other:?} (uniform|pareto)"
-                ),
             };
             let default_lat = LatencyModel::default();
-            let fixed_us: f64 =
-                args.get_parse_or("net-fixed-us", default_lat.fixed_us)?;
-            let per_kib_us: f64 =
-                args.get_parse_or("net-per-kib-us", default_lat.per_kib_us)?;
-            if !fixed_us.is_finite()
-                || !per_kib_us.is_finite()
-                || fixed_us < 0.0
-                || per_kib_us < 0.0
-            {
-                bail!(
-                    "--net-fixed-us/--net-per-kib-us must be finite and \
-                     ≥ 0, got {fixed_us}/{per_kib_us}"
-                );
-            }
-            let acfg = AsyncConfig {
+            EngineKind::Async(AsyncConfig {
                 compute,
-                latency: LatencyModel { fixed_us, per_kib_us },
-                max_staleness: args.get_parse::<usize>("max-staleness")?,
-            };
-            let mut ws = workers;
-            let out = run_async_detailed(&mut ws, &cfg, &acfg, problem.theta0());
-            println!(
-                "async: virtual clock {:.1} ms, max staleness {}",
-                out.vclock_us / 1e3,
-                out.trace.max_staleness()
-            );
-            out.trace
+                latency: LatencyModel {
+                    fixed_us: pick_num("net-fixed-us")?
+                        .unwrap_or(default_lat.fixed_us),
+                    per_kib_us: pick_num("net-per-kib-us")?
+                        .unwrap_or(default_lat.per_kib_us),
+                },
+                max_staleness: args
+                    .get_parse::<usize>("max-staleness")?
+                    .or_else(|| {
+                        cfg_file.num("run.max-staleness").map(|v| v as usize)
+                    }),
+            })
         }
         other => bail!("bad --engine {other:?} (serial|threaded|rayon|async)"),
     };
 
-    let f_star = problem.f_star().unwrap_or(0.0);
-    let out = Path::new(args.get_or("out", "results"));
-    chb_fed::metrics::csv::write_trace(
-        &out.join("run").join(format!(
-            "{}_{}_{}.csv",
-            task.name(),
-            dataset,
-            trace.method
-        )),
-        &trace,
-        f_star,
-    )?;
-    if !trace.worker_staleness.is_empty() {
-        chb_fed::metrics::csv::write_staleness(
-            &out.join("run").join(format!(
-                "{}_{}_{}_staleness.csv",
-                task.name(),
-                dataset,
-                trace.method
-            )),
-            &trace,
-        )?;
+    let backend = match pick("backend", "rust").as_str() {
+        "rust" => BackendKind::Rust,
+        "pjrt" => BackendKind::Pjrt,
+        other => bail!("bad --backend {other:?} (rust|pjrt)"),
+    };
+
+    Ok(RunSpec {
+        label: pick_opt("label"),
+        lambda: pick_num("lambda")?.unwrap_or(0.001),
+        method,
+        params,
+        censor,
+        engine,
+        participation,
+        batch,
+        codec,
+        backend,
+        iters: pick_num("iters")?.unwrap_or(500.0) as usize,
+        drops: DropSpec {
+            prob: pick_num("drop-prob")?.unwrap_or(0.0),
+            seed: pick_seed("drop-seed", 0)?,
+        },
+        record_comm_map: args.flag("comm-map"),
+        ..RunSpec::new(task, &pick("dataset", "synth"))
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let out = Path::new(args.get_or("out", "results")).join("run");
+    let registry = Registry::new(
+        Path::new(args.get_or("data", "data")),
+        Path::new(args.get_or("artifacts", "artifacts")),
+    );
+    let spec = match args.get("spec") {
+        // --spec replays a manifest verbatim; run flags next to it are
+        // rejected by the strict accounting in dispatch()
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read spec {path}"))?;
+            RunSpec::from_json_str(&text)
+                .with_context(|| format!("decode spec {path}"))?
+        }
+        None => spec_from_flags(args)?,
+    };
+    spec.validate()?;
+    if args.flag("dump-spec") {
+        println!("{}", spec.to_json_string());
+        return Ok(());
     }
+    // every option has been consumed by now — fail on typo'd or
+    // inapplicable flags *before* the run executes and writes artifacts
+    args.finish()?;
+
+    let session = Session::from_spec(&spec, &registry)?;
+    let params = session.params();
+    println!(
+        "run: {} on {} — M={} d={} L={:.4e} α={:.4e} β={} ε₁={:.4e} \
+         backend={} engine={} participation={} batch={} censor={} codec={}",
+        spec.method.name(),
+        spec.dataset,
+        session.problem().m_workers(),
+        session.problem().dim(),
+        session.problem().l_global,
+        params.alpha,
+        params.beta,
+        params.epsilon1,
+        spec.backend.name(),
+        spec.engine.name(),
+        spec.participation.name(),
+        spec.batch.name(),
+        spec.censor.name(),
+        spec.codec.name(),
+    );
+    // resolve f* before the session consumes the problem (obj-err
+    // column of the trace CSV; 0 for the nonconvex NN)
+    let f_star = session.problem().f_star().unwrap_or(0.0);
+
+    let report = session.run();
+    if let Some(a) = &report.async_summary {
+        println!(
+            "async: virtual clock {:.1} ms, max staleness {}",
+            a.vclock_us / 1e3,
+            report.trace.max_staleness()
+        );
+    }
+    report.write_artifacts(&out, f_star)?;
+    let trace = &report.trace;
     let last = trace.iters.last().context("empty trace")?;
     println!(
         "done: {} iters, {} comms, mean participants {:.1}, \
@@ -384,6 +434,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         last.agg_grad_sq
     );
     println!("per-worker transmissions: {:?}", trace.per_worker_comms);
+    println!(
+        "manifest: {} (rerun with: chb-fed run --spec <that file>)",
+        out.join("manifest.json").display()
+    );
     Ok(())
 }
 

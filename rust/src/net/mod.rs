@@ -56,7 +56,7 @@ pub fn sparse_delta_bits(nnz: usize) -> u64 {
 
 /// Latency model: fixed + per-byte cost (the "communication is ~2500×
 /// a memory access" premise from the paper's introduction).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LatencyModel {
     /// per-message cost in virtual µs, independent of payload size
     pub fixed_us: f64,

@@ -1,0 +1,837 @@
+//! [`RunSpec`] ⇄ JSON through the in-tree [`crate::util::json`].
+//!
+//! The encoding is the `manifest.json` schema: one object per axis,
+//! each tagged with a `"kind"` field; unknown keys are rejected
+//! (mirroring the strict CLI), required fields produce a
+//! [`SpecError::Json`] naming the field.  `to_json_string` →
+//! `from_json_str` is exact (a property test pins it); integer seeds
+//! survive up to 2^53 (JSON numbers are f64).
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{
+    AsyncConfig, ComputeModel, EngineKind, Participation,
+};
+use crate::data::batch::BatchSchedule;
+use crate::net::LatencyModel;
+use crate::optim::Method;
+use crate::tasks::TaskKind;
+use crate::util::json::Json;
+
+use super::{
+    BackendKind, CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec,
+    RunSpec, SpecError, StopSpec, SPEC_VERSION,
+};
+
+type Obj = BTreeMap<String, Json>;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn unum(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+impl RunSpec {
+    /// Encode as a [`Json`] value (the `manifest.json` schema).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", unum(SPEC_VERSION)),
+            ("task", s(self.task.name())),
+            ("dataset", s(&self.dataset)),
+            (
+                "label",
+                match &self.label {
+                    Some(l) => s(l),
+                    None => Json::Null,
+                },
+            ),
+            ("lambda", num(self.lambda)),
+            ("method", s(&self.method.name().to_ascii_lowercase())),
+            ("params", params_to_json(&self.params)),
+            ("censor", censor_to_json(&self.censor)),
+            ("engine", engine_to_json(&self.engine)),
+            ("participation", participation_to_json(&self.participation)),
+            ("batch", batch_to_json(&self.batch)),
+            ("codec", codec_to_json(&self.codec)),
+            ("backend", s(self.backend.name())),
+            ("iters", unum(self.iters as u64)),
+            ("stop", stop_to_json(&self.stop)),
+            (
+                "drops",
+                obj(vec![
+                    ("prob", num(self.drops.prob)),
+                    ("seed", unum(self.drops.seed)),
+                ]),
+            ),
+            ("record_comm_map", Json::Bool(self.record_comm_map)),
+        ])
+    }
+
+    /// The pretty-printed manifest text (what `manifest.json` holds).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().dump_pretty()
+    }
+
+    /// Decode from a [`Json`] value; strict about unknown keys and
+    /// field types (a typo'd key in a hand-written spec errors
+    /// instead of silently falling back to a default).
+    pub fn from_json(j: &Json) -> Result<RunSpec, SpecError> {
+        let map = as_obj(j, "spec")?;
+        check_keys(
+            map,
+            "spec",
+            &[
+                "version",
+                "task",
+                "dataset",
+                "label",
+                "lambda",
+                "method",
+                "params",
+                "censor",
+                "engine",
+                "participation",
+                "batch",
+                "codec",
+                "backend",
+                "iters",
+                "stop",
+                "drops",
+                "record_comm_map",
+            ],
+        )?;
+        let version = req_u64(map, "version")?;
+        if version != SPEC_VERSION {
+            return Err(SpecError::Json {
+                detail: format!(
+                    "unsupported version {version} (this build reads \
+                     {SPEC_VERSION})"
+                ),
+            });
+        }
+        let task_name = req_str(map, "task")?;
+        let task = TaskKind::parse(task_name).ok_or_else(|| {
+            SpecError::UnknownName {
+                field: "task",
+                name: task_name.to_string(),
+            }
+        })?;
+        let method_name = req_str(map, "method")?;
+        let method = Method::parse(method_name).ok_or_else(|| {
+            SpecError::UnknownName {
+                field: "method",
+                name: method_name.to_string(),
+            }
+        })?;
+        Ok(RunSpec {
+            task,
+            dataset: req_str(map, "dataset")?.to_string(),
+            label: match map.get("label") {
+                None | Some(Json::Null) => None,
+                Some(Json::Str(l)) => Some(l.clone()),
+                Some(other) => {
+                    return Err(bad("label", "string or null", other))
+                }
+            },
+            lambda: opt_f64(map, "lambda")?.unwrap_or(0.001),
+            method,
+            params: match map.get("params") {
+                None => ParamSpec::default(),
+                Some(v) => params_from_json(v)?,
+            },
+            censor: match map.get("censor") {
+                None => CensorSpec::MethodDefault,
+                Some(v) => censor_from_json(v)?,
+            },
+            engine: match map.get("engine") {
+                None => EngineKind::Serial,
+                Some(v) => engine_from_json(v)?,
+            },
+            participation: match map.get("participation") {
+                None => Participation::Full,
+                Some(v) => participation_from_json(v)?,
+            },
+            batch: match map.get("batch") {
+                None => BatchSchedule::Full,
+                Some(v) => batch_from_json(v)?,
+            },
+            codec: match map.get("codec") {
+                None => CodecSpec::None,
+                Some(v) => codec_from_json(v)?,
+            },
+            backend: match map.get("backend") {
+                None => BackendKind::Rust,
+                Some(v) => match as_str(v, "backend")? {
+                    "rust" => BackendKind::Rust,
+                    "pjrt" => BackendKind::Pjrt,
+                    other => {
+                        return Err(SpecError::UnknownName {
+                            field: "backend",
+                            name: other.to_string(),
+                        })
+                    }
+                },
+            },
+            iters: req_u64(map, "iters")? as usize,
+            stop: match map.get("stop") {
+                None => StopSpec::MaxIters,
+                Some(v) => stop_from_json(v)?,
+            },
+            drops: match map.get("drops") {
+                None => DropSpec::default(),
+                Some(v) => {
+                    let m = as_obj(v, "drops")?;
+                    check_keys(m, "drops", &["prob", "seed"])?;
+                    DropSpec {
+                        prob: req_f64(m, "prob")?,
+                        seed: req_u64(m, "seed")?,
+                    }
+                }
+            },
+            record_comm_map: match map.get("record_comm_map") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(other) => {
+                    return Err(bad("record_comm_map", "bool", other))
+                }
+            },
+        })
+    }
+
+    /// Decode from manifest text (see [`RunSpec::from_json`]).
+    pub fn from_json_str(text: &str) -> Result<RunSpec, SpecError> {
+        let j = Json::parse(text).map_err(|e| SpecError::Json {
+            detail: format!("parse: {e}"),
+        })?;
+        RunSpec::from_json(&j)
+    }
+}
+
+fn params_to_json(p: &ParamSpec) -> Json {
+    obj(vec![
+        (
+            "alpha",
+            match p.alpha {
+                Some(a) => num(a),
+                None => Json::Null,
+            },
+        ),
+        ("beta", num(p.beta)),
+        (
+            "epsilon",
+            match p.epsilon {
+                EpsilonSpec::Scaled { c } => {
+                    obj(vec![("kind", s("scaled")), ("c", num(c))])
+                }
+                EpsilonSpec::Absolute { eps } => {
+                    obj(vec![("kind", s("absolute")), ("eps", num(eps))])
+                }
+            },
+        ),
+    ])
+}
+
+fn params_from_json(j: &Json) -> Result<ParamSpec, SpecError> {
+    let m = as_obj(j, "params")?;
+    check_keys(m, "params", &["alpha", "beta", "epsilon"])?;
+    let alpha = match m.get("alpha") {
+        None | Some(Json::Null) => None,
+        Some(Json::Num(a)) => Some(*a),
+        Some(other) => return Err(bad("params.alpha", "number or null", other)),
+    };
+    let epsilon = match m.get("epsilon") {
+        None => EpsilonSpec::Scaled { c: 0.1 },
+        Some(v) => {
+            let em = as_obj(v, "params.epsilon")?;
+            match kind(em, "params.epsilon")? {
+                "scaled" => {
+                    check_keys(em, "params.epsilon", &["kind", "c"])?;
+                    EpsilonSpec::Scaled { c: req_f64(em, "c")? }
+                }
+                "absolute" => {
+                    check_keys(em, "params.epsilon", &["kind", "eps"])?;
+                    EpsilonSpec::Absolute { eps: req_f64(em, "eps")? }
+                }
+                other => {
+                    return Err(SpecError::UnknownName {
+                        field: "params.epsilon.kind",
+                        name: other.to_string(),
+                    })
+                }
+            }
+        }
+    };
+    Ok(ParamSpec {
+        alpha,
+        beta: opt_f64(m, "beta")?.unwrap_or(0.4),
+        epsilon,
+    })
+}
+
+fn censor_to_json(c: &CensorSpec) -> Json {
+    let mut pairs = vec![("kind", s(c.name()))];
+    match *c {
+        CensorSpec::Absolute { tau } => pairs.push(("tau", num(tau))),
+        CensorSpec::Periodic { period } => {
+            pairs.push(("period", unum(period as u64)))
+        }
+        CensorSpec::Decaying { tau0, rho } => {
+            pairs.push(("tau0", num(tau0)));
+            pairs.push(("rho", num(rho)));
+        }
+        CensorSpec::MethodDefault
+        | CensorSpec::Never
+        | CensorSpec::VarianceScaled => {}
+    }
+    obj(pairs)
+}
+
+fn censor_from_json(j: &Json) -> Result<CensorSpec, SpecError> {
+    let m = as_obj(j, "censor")?;
+    match kind(m, "censor")? {
+        "method-default" => {
+            check_keys(m, "censor", &["kind"])?;
+            Ok(CensorSpec::MethodDefault)
+        }
+        "never" => {
+            check_keys(m, "censor", &["kind"])?;
+            Ok(CensorSpec::Never)
+        }
+        "absolute" => {
+            check_keys(m, "censor", &["kind", "tau"])?;
+            Ok(CensorSpec::Absolute { tau: req_f64(m, "tau")? })
+        }
+        "periodic" => {
+            check_keys(m, "censor", &["kind", "period"])?;
+            Ok(CensorSpec::Periodic { period: req_u64(m, "period")? as usize })
+        }
+        "decaying" => {
+            check_keys(m, "censor", &["kind", "tau0", "rho"])?;
+            Ok(CensorSpec::Decaying {
+                tau0: req_f64(m, "tau0")?,
+                rho: req_f64(m, "rho")?,
+            })
+        }
+        "variance-scaled" => {
+            check_keys(m, "censor", &["kind"])?;
+            Ok(CensorSpec::VarianceScaled)
+        }
+        other => Err(SpecError::UnknownName {
+            field: "censor.kind",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn engine_to_json(e: &EngineKind) -> Json {
+    match e {
+        EngineKind::Serial | EngineKind::Threaded => {
+            obj(vec![("kind", s(e.name()))])
+        }
+        EngineKind::Rayon { threads } => obj(vec![
+            ("kind", s("rayon")),
+            ("threads", unum(*threads as u64)),
+        ]),
+        EngineKind::Async(acfg) => obj(vec![
+            ("kind", s("async")),
+            (
+                "compute",
+                match acfg.compute {
+                    ComputeModel::Uniform { us } => obj(vec![
+                        ("kind", s("uniform")),
+                        ("us", num(us)),
+                    ]),
+                    ComputeModel::Pareto { scale_us, shape, seed } => {
+                        obj(vec![
+                            ("kind", s("pareto")),
+                            ("scale_us", num(scale_us)),
+                            ("shape", num(shape)),
+                            ("seed", unum(seed)),
+                        ])
+                    }
+                },
+            ),
+            (
+                "latency",
+                obj(vec![
+                    ("fixed_us", num(acfg.latency.fixed_us)),
+                    ("per_kib_us", num(acfg.latency.per_kib_us)),
+                ]),
+            ),
+            (
+                "max_staleness",
+                match acfg.max_staleness {
+                    Some(v) => unum(v as u64),
+                    None => Json::Null,
+                },
+            ),
+        ]),
+    }
+}
+
+fn engine_from_json(j: &Json) -> Result<EngineKind, SpecError> {
+    let m = as_obj(j, "engine")?;
+    match kind(m, "engine")? {
+        "serial" => {
+            check_keys(m, "engine", &["kind"])?;
+            Ok(EngineKind::Serial)
+        }
+        "threaded" => {
+            check_keys(m, "engine", &["kind"])?;
+            Ok(EngineKind::Threaded)
+        }
+        "rayon" => {
+            check_keys(m, "engine", &["kind", "threads"])?;
+            Ok(EngineKind::Rayon {
+                threads: match m.get("threads") {
+                    None => 0,
+                    Some(v) => as_u64(v, "engine.threads")? as usize,
+                },
+            })
+        }
+        "async" => {
+            check_keys(
+                m,
+                "engine",
+                &["kind", "compute", "latency", "max_staleness"],
+            )?;
+            let compute = match m.get("compute") {
+                None => ComputeModel::Uniform { us: 1_000.0 },
+                Some(v) => {
+                    let cm = as_obj(v, "engine.compute")?;
+                    match kind(cm, "engine.compute")? {
+                        "uniform" => {
+                            check_keys(cm, "engine.compute", &["kind", "us"])?;
+                            ComputeModel::Uniform { us: req_f64(cm, "us")? }
+                        }
+                        "pareto" => {
+                            check_keys(
+                                cm,
+                                "engine.compute",
+                                &["kind", "scale_us", "shape", "seed"],
+                            )?;
+                            ComputeModel::Pareto {
+                                scale_us: req_f64(cm, "scale_us")?,
+                                shape: req_f64(cm, "shape")?,
+                                seed: req_u64(cm, "seed")?,
+                            }
+                        }
+                        other => {
+                            return Err(SpecError::UnknownName {
+                                field: "engine.compute.kind",
+                                name: other.to_string(),
+                            })
+                        }
+                    }
+                }
+            };
+            let latency = match m.get("latency") {
+                None => LatencyModel::default(),
+                Some(v) => {
+                    let lm = as_obj(v, "engine.latency")?;
+                    check_keys(
+                        lm,
+                        "engine.latency",
+                        &["fixed_us", "per_kib_us"],
+                    )?;
+                    LatencyModel {
+                        fixed_us: req_f64(lm, "fixed_us")?,
+                        per_kib_us: req_f64(lm, "per_kib_us")?,
+                    }
+                }
+            };
+            let max_staleness = match m.get("max_staleness") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(as_u64(v, "engine.max_staleness")? as usize),
+            };
+            Ok(EngineKind::Async(AsyncConfig {
+                compute,
+                latency,
+                max_staleness,
+            }))
+        }
+        other => Err(SpecError::UnknownName {
+            field: "engine.kind",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn participation_to_json(p: &Participation) -> Json {
+    match *p {
+        Participation::Full => obj(vec![("kind", s("full"))]),
+        Participation::UniformSample { frac, seed } => obj(vec![
+            ("kind", s("sample")),
+            ("frac", num(frac)),
+            ("seed", unum(seed)),
+        ]),
+        Participation::Straggler { timeout, seed } => obj(vec![
+            ("kind", s("straggler")),
+            ("timeout", num(timeout)),
+            ("seed", unum(seed)),
+        ]),
+    }
+}
+
+fn participation_from_json(j: &Json) -> Result<Participation, SpecError> {
+    let m = as_obj(j, "participation")?;
+    match kind(m, "participation")? {
+        "full" => {
+            check_keys(m, "participation", &["kind"])?;
+            Ok(Participation::Full)
+        }
+        "sample" => {
+            check_keys(m, "participation", &["kind", "frac", "seed"])?;
+            Ok(Participation::UniformSample {
+                frac: req_f64(m, "frac")?,
+                seed: req_u64(m, "seed")?,
+            })
+        }
+        "straggler" => {
+            check_keys(m, "participation", &["kind", "timeout", "seed"])?;
+            Ok(Participation::Straggler {
+                timeout: req_f64(m, "timeout")?,
+                seed: req_u64(m, "seed")?,
+            })
+        }
+        other => Err(SpecError::UnknownName {
+            field: "participation.kind",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn batch_to_json(b: &BatchSchedule) -> Json {
+    match *b {
+        BatchSchedule::Full => obj(vec![("kind", s("full"))]),
+        BatchSchedule::Minibatch { size, seed, replace } => obj(vec![
+            ("kind", s("minibatch")),
+            ("size", unum(size as u64)),
+            ("seed", unum(seed)),
+            ("replace", Json::Bool(replace)),
+        ]),
+        BatchSchedule::GrowingBatch { size0, growth, seed } => obj(vec![
+            ("kind", s("growing")),
+            ("size0", unum(size0 as u64)),
+            ("growth", num(growth)),
+            ("seed", unum(seed)),
+        ]),
+    }
+}
+
+fn batch_from_json(j: &Json) -> Result<BatchSchedule, SpecError> {
+    let m = as_obj(j, "batch")?;
+    match kind(m, "batch")? {
+        "full" => {
+            check_keys(m, "batch", &["kind"])?;
+            Ok(BatchSchedule::Full)
+        }
+        "minibatch" => {
+            check_keys(m, "batch", &["kind", "size", "seed", "replace"])?;
+            Ok(BatchSchedule::Minibatch {
+                size: req_u64(m, "size")? as usize,
+                seed: req_u64(m, "seed")?,
+                replace: match m.get("replace") {
+                    None => false,
+                    Some(Json::Bool(b)) => *b,
+                    Some(other) => {
+                        return Err(bad("batch.replace", "bool", other))
+                    }
+                },
+            })
+        }
+        "growing" => {
+            check_keys(m, "batch", &["kind", "size0", "growth", "seed"])?;
+            Ok(BatchSchedule::GrowingBatch {
+                size0: req_u64(m, "size0")? as usize,
+                growth: req_f64(m, "growth")?,
+                seed: req_u64(m, "seed")?,
+            })
+        }
+        other => Err(SpecError::UnknownName {
+            field: "batch.kind",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn codec_to_json(c: &CodecSpec) -> Json {
+    match *c {
+        CodecSpec::None => obj(vec![("kind", s("none"))]),
+        CodecSpec::Quantizer { bits } => obj(vec![
+            ("kind", s("quantizer")),
+            ("bits", unum(bits as u64)),
+        ]),
+        CodecSpec::TopK { k } => {
+            obj(vec![("kind", s("top-k")), ("k", unum(k as u64))])
+        }
+    }
+}
+
+fn codec_from_json(j: &Json) -> Result<CodecSpec, SpecError> {
+    let m = as_obj(j, "codec")?;
+    match kind(m, "codec")? {
+        "none" => {
+            check_keys(m, "codec", &["kind"])?;
+            Ok(CodecSpec::None)
+        }
+        "quantizer" => {
+            check_keys(m, "codec", &["kind", "bits"])?;
+            Ok(CodecSpec::Quantizer { bits: req_u64(m, "bits")? as u32 })
+        }
+        "top-k" => {
+            check_keys(m, "codec", &["kind", "k"])?;
+            Ok(CodecSpec::TopK { k: req_u64(m, "k")? as usize })
+        }
+        other => Err(SpecError::UnknownName {
+            field: "codec.kind",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn stop_to_json(st: &StopSpec) -> Json {
+    match *st {
+        StopSpec::MaxIters => obj(vec![("kind", s("max-iters"))]),
+        StopSpec::ObjErr { tol, f_star } => obj(vec![
+            ("kind", s("obj-err")),
+            ("tol", num(tol)),
+            (
+                "f_star",
+                match f_star {
+                    Some(v) => num(v),
+                    None => Json::Null,
+                },
+            ),
+        ]),
+        StopSpec::AggGrad { tol } => {
+            obj(vec![("kind", s("agg-grad")), ("tol", num(tol))])
+        }
+    }
+}
+
+fn stop_from_json(j: &Json) -> Result<StopSpec, SpecError> {
+    let m = as_obj(j, "stop")?;
+    match kind(m, "stop")? {
+        "max-iters" => {
+            check_keys(m, "stop", &["kind"])?;
+            Ok(StopSpec::MaxIters)
+        }
+        "obj-err" => {
+            check_keys(m, "stop", &["kind", "tol", "f_star"])?;
+            Ok(StopSpec::ObjErr {
+                tol: req_f64(m, "tol")?,
+                f_star: match m.get("f_star") {
+                    None | Some(Json::Null) => None,
+                    Some(Json::Num(v)) => Some(*v),
+                    Some(other) => {
+                        return Err(bad("stop.f_star", "number or null", other))
+                    }
+                },
+            })
+        }
+        "agg-grad" => {
+            check_keys(m, "stop", &["kind", "tol"])?;
+            Ok(StopSpec::AggGrad { tol: req_f64(m, "tol")? })
+        }
+        other => Err(SpecError::UnknownName {
+            field: "stop.kind",
+            name: other.to_string(),
+        }),
+    }
+}
+
+// ── decoding helpers ────────────────────────────────────────────────
+
+fn bad(field: &str, want: &str, got: &Json) -> SpecError {
+    SpecError::Json {
+        detail: format!("{field}: expected {want}, got {got:?}"),
+    }
+}
+
+fn as_obj<'a>(j: &'a Json, field: &str) -> Result<&'a Obj, SpecError> {
+    match j {
+        Json::Obj(m) => Ok(m),
+        other => Err(bad(field, "object", other)),
+    }
+}
+
+fn as_str<'a>(j: &'a Json, field: &str) -> Result<&'a str, SpecError> {
+    j.as_str().ok_or_else(|| bad(field, "string", j))
+}
+
+fn as_f64(j: &Json, field: &str) -> Result<f64, SpecError> {
+    j.as_f64().ok_or_else(|| bad(field, "number", j))
+}
+
+fn as_u64(j: &Json, field: &str) -> Result<u64, SpecError> {
+    let v = as_f64(j, field)?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(SpecError::Json {
+            detail: format!(
+                "{field}: expected a non-negative integer, got {v}"
+            ),
+        });
+    }
+    Ok(v as u64)
+}
+
+fn req<'a>(m: &'a Obj, key: &str) -> Result<&'a Json, SpecError> {
+    m.get(key).ok_or_else(|| SpecError::Json {
+        detail: format!("missing required field {key:?}"),
+    })
+}
+
+fn req_str<'a>(m: &'a Obj, key: &str) -> Result<&'a str, SpecError> {
+    as_str(req(m, key)?, key)
+}
+
+fn req_f64(m: &Obj, key: &str) -> Result<f64, SpecError> {
+    as_f64(req(m, key)?, key)
+}
+
+fn req_u64(m: &Obj, key: &str) -> Result<u64, SpecError> {
+    as_u64(req(m, key)?, key)
+}
+
+fn opt_f64(m: &Obj, key: &str) -> Result<Option<f64>, SpecError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(as_f64(v, key)?)),
+    }
+}
+
+fn kind<'a>(m: &'a Obj, field: &str) -> Result<&'a str, SpecError> {
+    match m.get("kind") {
+        Some(v) => as_str(v, field),
+        None => Err(SpecError::Json {
+            detail: format!("{field}: missing \"kind\" tag"),
+        }),
+    }
+}
+
+fn check_keys(
+    m: &Obj,
+    context: &str,
+    allowed: &[&str],
+) -> Result<(), SpecError> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(SpecError::Json {
+                detail: format!(
+                    "{context}: unknown key {k:?} (allowed: {allowed:?})"
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_round_trips() {
+        let spec = RunSpec::new(TaskKind::LinReg, "synth");
+        let text = spec.to_json_string();
+        assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+    }
+
+    #[test]
+    fn every_axis_round_trips() {
+        let spec = RunSpec {
+            label: Some("ablate".into()),
+            method: Method::Gd,
+            params: ParamSpec {
+                alpha: Some(0.015625),
+                beta: 0.25,
+                epsilon: EpsilonSpec::Absolute { eps: 0.01 },
+            },
+            censor: CensorSpec::Decaying { tau0: 2.5, rho: 0.5 },
+            engine: EngineKind::Async(AsyncConfig {
+                compute: ComputeModel::Pareto {
+                    scale_us: 1_000.0,
+                    shape: 1.5,
+                    seed: 0xA57,
+                },
+                latency: LatencyModel { fixed_us: 250.0, per_kib_us: 4.0 },
+                max_staleness: Some(12),
+            }),
+            batch: BatchSchedule::Minibatch {
+                size: 16,
+                seed: 0xB47C,
+                replace: true,
+            },
+            codec: CodecSpec::TopK { k: 25 },
+            stop: StopSpec::ObjErr { tol: 1e-9, f_star: Some(1.25) },
+            drops: DropSpec { prob: 0.25, seed: 99 },
+            record_comm_map: true,
+            ..RunSpec::new(TaskKind::Lasso, "housing")
+        };
+        let text = spec.to_json_string();
+        assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+    }
+
+    #[test]
+    fn minimal_hand_written_spec_gets_defaults() {
+        let text = r#"{
+            "version": 1,
+            "task": "logreg",
+            "dataset": "ijcnn1",
+            "method": "chb",
+            "iters": 100
+        }"#;
+        let spec = RunSpec::from_json_str(text).unwrap();
+        assert_eq!(spec.params, ParamSpec::default());
+        assert_eq!(spec.engine, EngineKind::Serial);
+        assert_eq!(spec.codec, CodecSpec::None);
+        assert_eq!(spec.stop, StopSpec::MaxIters);
+        assert!(!spec.record_comm_map);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_keys_and_kinds_are_rejected() {
+        let text = r#"{"version": 1, "task": "linreg", "dataset": "synth",
+                       "method": "chb", "iters": 10, "itres": 20}"#;
+        let err = RunSpec::from_json_str(text).unwrap_err();
+        assert!(err.to_string().contains("itres"), "{err}");
+        let text = r#"{"version": 1, "task": "linreg", "dataset": "synth",
+                       "method": "chb", "iters": 10,
+                       "engine": {"kind": "gpu"}}"#;
+        assert!(matches!(
+            RunSpec::from_json_str(text),
+            Err(SpecError::UnknownName { field: "engine.kind", .. })
+        ));
+    }
+
+    #[test]
+    fn version_and_required_fields_are_enforced() {
+        assert!(RunSpec::from_json_str("{}").is_err());
+        let text = r#"{"version": 99, "task": "linreg", "dataset": "synth",
+                       "method": "chb", "iters": 10}"#;
+        let err = RunSpec::from_json_str(text).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn negative_or_fractional_integers_are_rejected() {
+        let text = r#"{"version": 1, "task": "linreg", "dataset": "synth",
+                       "method": "chb", "iters": 10.5}"#;
+        assert!(RunSpec::from_json_str(text).is_err());
+        let text = r#"{"version": 1, "task": "linreg", "dataset": "synth",
+                       "method": "chb", "iters": -3}"#;
+        assert!(RunSpec::from_json_str(text).is_err());
+    }
+}

@@ -1,0 +1,887 @@
+//! The declarative run layer: one serializable [`RunSpec`] describes
+//! a complete run, one [`Session`] executes it.
+//!
+//! The paper's experiment grid is methods × censor rules × engines ×
+//! participation × batching × compression × failure models.  Before
+//! this layer the grid was assembled by hand at every call site —
+//! four parallel `run_*` entry points, three overlapping config types
+//! (`RunConfig`, `AsyncConfig`, `experiments::Protocol`), and a CLI
+//! that wired ~30 flags straight into them; invalid combinations
+//! (PJRT × minibatch, async knobs on a sync engine) failed late or
+//! not at all.  A [`RunSpec`] is the whole description in one typed
+//! value:
+//!
+//! * cross-field validation up front — [`RunSpec::validate`] returns
+//!   a typed [`SpecError`] before anything is built;
+//! * JSON round-trip through the in-tree [`crate::util::json`] —
+//!   [`RunSpec::to_json_string`] / [`RunSpec::from_json_str`] are
+//!   exact inverses (property-tested), so every run can be written as
+//!   a `manifest.json` next to its trace CSVs and replayed
+//!   bit-for-bit with `chb-fed run --spec manifest.json`;
+//! * one execution path — [`Session::from_spec`] resolves the spec
+//!   against a [`Registry`] (data + artifact directories), and
+//!   [`Session::run`] dispatches through
+//!   [`crate::coordinator::EngineKind`] to the single round loop.
+//!
+//! Integer seeds survive the JSON round trip exactly up to 2^53
+//! (numbers are carried as f64, like every JSON implementation
+//! without bignum support); [`RunSpec::validate`] rejects larger
+//! seeds ([`SpecError::SeedTooLarge`]) so a manifest can never be a
+//! silently rounded record of the run it describes.
+//!
+//! ```
+//! use chb_fed::spec::RunSpec;
+//! use chb_fed::tasks::TaskKind;
+//!
+//! let spec = RunSpec::new(TaskKind::LinReg, "synth");
+//! spec.validate().unwrap();
+//! let replayed = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+//! assert_eq!(spec, replayed);
+//! ```
+
+mod json;
+mod session;
+
+pub use session::{Registry, RunReport, Session};
+
+use crate::coordinator::{EngineKind, Participation};
+use crate::data::batch::BatchSchedule;
+use crate::optim::Method;
+use crate::tasks::TaskKind;
+
+/// Manifest schema version written by [`RunSpec::to_json_string`].
+pub const SPEC_VERSION: u64 = 1;
+
+/// Largest seed value that survives the JSON round trip exactly
+/// (2^53 — manifests carry numbers as f64).  [`RunSpec::validate`]
+/// rejects larger seeds so a written manifest is never a silently
+/// unfaithful record of the run.
+pub const MAX_EXACT_SEED: u64 = 1 << 53;
+
+/// Typed validation / decoding error for a [`RunSpec`].
+///
+/// Every variant names the offending field, so CLI users and spec
+/// files get actionable messages instead of a late panic (the old
+/// failure mode for e.g. async knobs combined with a sync engine).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// a numeric field is NaN/∞
+    NonFinite {
+        /// offending field (dotted path)
+        field: &'static str,
+        /// the value given
+        value: f64,
+    },
+    /// a field that must be strictly positive is not
+    NonPositive {
+        /// offending field (dotted path)
+        field: &'static str,
+        /// the value given
+        value: f64,
+    },
+    /// a numeric field is outside its closed range
+    OutOfRange {
+        /// offending field (dotted path)
+        field: &'static str,
+        /// the value given
+        value: f64,
+        /// inclusive lower bound
+        lo: f64,
+        /// inclusive upper bound
+        hi: f64,
+    },
+    /// `iters` is 0 — the run would record nothing
+    ZeroIters,
+    /// a count field (batch size, top-k k, …) is 0
+    ZeroSize {
+        /// offending field (dotted path)
+        field: &'static str,
+    },
+    /// quantizer bit width outside 2..=32
+    QuantBits {
+        /// the width given
+        bits: u32,
+    },
+    /// PJRT evaluates the full AOT shard per round — minibatch /
+    /// growing batch schedules need the rust backend
+    PjrtBatching,
+    /// the async engine is full-participation by construction; a
+    /// sampling/straggler policy would run unsampled and mislabel its
+    /// results
+    AsyncParticipation {
+        /// the rejected policy's name
+        participation: &'static str,
+    },
+    /// an `obj-err` stop rule without an explicit `f_star` on a task
+    /// with no computable minimum (the nonconvex NN)
+    NoFStar,
+    /// a seed above [`MAX_EXACT_SEED`] — it would be rounded when the
+    /// manifest is written, so the replay would not be bit-identical
+    SeedTooLarge {
+        /// offending field (dotted path)
+        field: &'static str,
+        /// the seed given
+        seed: u64,
+    },
+    /// the PJRT backend needs artifact files — build the session with
+    /// [`Session::from_spec`] and a [`Registry`], not from a bare
+    /// problem
+    PjrtNeedsRegistry,
+    /// an enum-coded field carries an unknown name
+    UnknownName {
+        /// offending field (dotted path)
+        field: &'static str,
+        /// the name given
+        name: String,
+    },
+    /// malformed manifest JSON (missing/ill-typed field, unknown key,
+    /// bad version, parse failure)
+    Json {
+        /// human-readable description with field context
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::NonFinite { field, value } => {
+                write!(f, "spec.{field}: must be finite, got {value}")
+            }
+            SpecError::NonPositive { field, value } => {
+                write!(f, "spec.{field}: must be > 0, got {value}")
+            }
+            SpecError::OutOfRange { field, value, lo, hi } => {
+                write!(f, "spec.{field}: {value} outside [{lo}, {hi}]")
+            }
+            SpecError::ZeroIters => write!(
+                f,
+                "spec.iters: must be ≥ 1 (a 0-iteration run records nothing)"
+            ),
+            SpecError::ZeroSize { field } => {
+                write!(f, "spec.{field}: must be ≥ 1")
+            }
+            SpecError::QuantBits { bits } => write!(
+                f,
+                "spec.codec.bits: quantizer needs 2..=32 bits, got {bits}"
+            ),
+            SpecError::PjrtBatching => write!(
+                f,
+                "spec: backend \"pjrt\" evaluates the full AOT shard per \
+                 round; minibatch/growing batch schedules need backend \
+                 \"rust\""
+            ),
+            SpecError::AsyncParticipation { participation } => write!(
+                f,
+                "spec: the async engine runs full participation by \
+                 construction; drop participation {participation:?}"
+            ),
+            SpecError::NoFStar => write!(
+                f,
+                "spec.stop: obj-err without an explicit f_star is not \
+                 computable for the nonconvex nn task"
+            ),
+            SpecError::SeedTooLarge { field, seed } => write!(
+                f,
+                "spec.{field}: seed {seed} exceeds 2^53 and would be \
+                 rounded in manifest.json (replay would diverge); use a \
+                 seed ≤ {MAX_EXACT_SEED}"
+            ),
+            SpecError::PjrtNeedsRegistry => write!(
+                f,
+                "spec: backend \"pjrt\" needs artifact files — build the \
+                 session via Session::from_spec with a Registry"
+            ),
+            SpecError::UnknownName { field, name } => {
+                write!(f, "spec.{field}: unknown name {name:?}")
+            }
+            SpecError::Json { detail } => write!(f, "spec json: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// ε₁ parameterization: the paper's scaled form or a raw value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EpsilonSpec {
+    /// ε₁ = c/(α²M²) — the §IV protocol (resolved against the
+    /// problem's worker count at session build)
+    Scaled {
+        /// the paper's c (0.1 throughout §IV)
+        c: f64,
+    },
+    /// a raw ε₁ (the NN runs use ε₁ = 0.01)
+    Absolute {
+        /// the threshold itself
+        eps: f64,
+    },
+}
+
+/// Hyperparameters as written in a spec; `alpha: None` means "1/L of
+/// the resolved problem" (the paper's default step size).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParamSpec {
+    /// step size α (None = 1/L, resolved at session build)
+    pub alpha: Option<f64>,
+    /// momentum coefficient β (ignored by GD/LAG)
+    pub beta: f64,
+    /// censor-threshold parameterization (ignored by GD/HB)
+    pub epsilon: EpsilonSpec,
+}
+
+impl Default for ParamSpec {
+    /// Paper defaults: α = 1/L, β = 0.4, ε₁ = 0.1/(α²M²).
+    fn default() -> Self {
+        Self {
+            alpha: None,
+            beta: 0.4,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        }
+    }
+}
+
+/// Which censor rule workers apply — `MethodDefault` reproduces the
+/// method's own rule (the paper's composition table); the others are
+/// the ablation/related-work rules, now first-class run axes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CensorSpec {
+    /// the method's own rule: grad-diff (8) for LAG/CHB, never for
+    /// GD/HB
+    MethodDefault,
+    /// transmit every round regardless of method
+    Never,
+    /// fixed energy threshold: transmit iff ‖δ∇‖² > τ
+    Absolute {
+        /// the threshold τ
+        tau: f64,
+    },
+    /// transmit every `period`-th round (period 0 is normalized to 1,
+    /// i.e. never skip)
+    Periodic {
+        /// the period
+        period: usize,
+    },
+    /// CSGD's decreasing threshold τ_k = τ₀·ρᵏ
+    Decaying {
+        /// threshold at k = 0
+        tau0: f64,
+        /// per-round decay ρ ∈ (0, 1]
+        rho: f64,
+    },
+    /// eq. (8) with ε₁/ϕ_k batch-fraction compensation (equal to the
+    /// method rule at ϕ = 1); ε₁ and the shard size resolve at session
+    /// build from `params.epsilon` and the problem
+    VarianceScaled,
+}
+
+impl CensorSpec {
+    /// Spec-file name of the variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CensorSpec::MethodDefault => "method-default",
+            CensorSpec::Never => "never",
+            CensorSpec::Absolute { .. } => "absolute",
+            CensorSpec::Periodic { .. } => "periodic",
+            CensorSpec::Decaying { .. } => "decaying",
+            CensorSpec::VarianceScaled => "variance-scaled",
+        }
+    }
+}
+
+/// Uplink codec — the compression axis the paper's conclusion
+/// proposes composing with censoring.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecSpec {
+    /// full-precision f64 payloads
+    None,
+    /// uniform symmetric quantizer at `bits` per coordinate
+    Quantizer {
+        /// bits per coordinate (2..=32)
+        bits: u32,
+    },
+    /// top-k magnitude sparsification (sparse wire format)
+    TopK {
+        /// coordinates kept per uplink
+        k: usize,
+    },
+}
+
+impl CodecSpec {
+    /// Spec-file name of the variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecSpec::None => "none",
+            CodecSpec::Quantizer { .. } => "quantizer",
+            CodecSpec::TopK { .. } => "top-k",
+        }
+    }
+}
+
+/// Where gradients come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// the in-process f64 objectives (default)
+    Rust,
+    /// AOT-compiled Pallas artifacts through PJRT
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Spec-file name ("rust" / "pjrt").
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Rust => "rust",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// When to stop, in spec form.  Unlike
+/// [`crate::coordinator::StopRule`], `obj-err` may leave `f_star`
+/// unset — the session resolves it from the problem's high-accuracy
+/// minimizer (an error for the nonconvex NN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopSpec {
+    /// run exactly `iters`
+    MaxIters,
+    /// stop once f(θᵏ) − f* < tol
+    ObjErr {
+        /// the tolerance
+        tol: f64,
+        /// explicit f* (None = resolve from the problem)
+        f_star: Option<f64>,
+    },
+    /// stop once ‖∇ᵏ‖² < tol (nonconvex runs)
+    AggGrad {
+        /// the tolerance
+        tol: f64,
+    },
+}
+
+/// Uplink failure injection (default: no drops).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DropSpec {
+    /// per-message drop probability ∈ [0, 1]
+    pub prob: f64,
+    /// seed for the drop stream
+    pub seed: u64,
+}
+
+/// One complete, serializable description of a run — every axis the
+/// codebase exposes, in one value.  See the module docs for the
+/// JSON manifest workflow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// learning task
+    pub task: TaskKind,
+    /// dataset name ([`crate::data::registry`] key for
+    /// [`Session::from_spec`]; a free label when the problem is
+    /// supplied directly via [`Session::from_parts`])
+    pub dataset: String,
+    /// optional trace label override (None = the method's name, with
+    /// an `-async` suffix under the async engine)
+    pub label: Option<String>,
+    /// global regularization λ (split λ/M per worker)
+    pub lambda: f64,
+    /// which of the four paper algorithms drives the server update
+    pub method: Method,
+    /// (α, β, ε₁) in spec form
+    pub params: ParamSpec,
+    /// worker-side censor rule
+    pub censor: CensorSpec,
+    /// execution backend, including the async engine's compute /
+    /// latency / staleness knobs
+    pub engine: EngineKind,
+    /// per-round client scheduling
+    pub participation: Participation,
+    /// gradient-sampling schedule
+    pub batch: BatchSchedule,
+    /// uplink compression codec
+    pub codec: CodecSpec,
+    /// gradient backend
+    pub backend: BackendKind,
+    /// iteration budget (server steps in every engine)
+    pub iters: usize,
+    /// early-exit rule
+    pub stop: StopSpec,
+    /// uplink failure injection
+    pub drops: DropSpec,
+    /// record the O(K·M) per-worker transmit map
+    pub record_comm_map: bool,
+}
+
+impl RunSpec {
+    /// The paper-default run of `task` on `dataset`: CHB, α = 1/L,
+    /// β = 0.4, ε₁ = 0.1/(α²M²), serial engine, full participation,
+    /// full batches, no compression, no drops, 500 iterations.
+    pub fn new(task: TaskKind, dataset: &str) -> RunSpec {
+        RunSpec {
+            task,
+            dataset: dataset.to_string(),
+            label: None,
+            lambda: 0.001,
+            method: Method::Chb,
+            params: ParamSpec::default(),
+            censor: CensorSpec::MethodDefault,
+            engine: EngineKind::Serial,
+            participation: Participation::Full,
+            batch: BatchSchedule::Full,
+            codec: CodecSpec::None,
+            backend: BackendKind::Rust,
+            iters: 500,
+            stop: StopSpec::MaxIters,
+            drops: DropSpec::default(),
+            record_comm_map: false,
+        }
+    }
+
+    /// Check every field and cross-field constraint; the first
+    /// violation is returned as a typed [`SpecError`].
+    pub fn validate(&self) -> Result<(), SpecError> {
+        finite("lambda", self.lambda)?;
+        if self.lambda < 0.0 {
+            return Err(SpecError::OutOfRange {
+                field: "lambda",
+                value: self.lambda,
+                lo: 0.0,
+                hi: f64::INFINITY,
+            });
+        }
+        if self.iters == 0 {
+            return Err(SpecError::ZeroIters);
+        }
+        self.validate_params()?;
+        self.validate_censor()?;
+        self.validate_engine()?;
+        self.validate_participation()?;
+        self.validate_batch()?;
+        self.validate_codec()?;
+        self.validate_stop()?;
+        self.validate_seeds()?;
+        finite("drops.prob", self.drops.prob)?;
+        if !(0.0..=1.0).contains(&self.drops.prob) {
+            return Err(SpecError::OutOfRange {
+                field: "drops.prob",
+                value: self.drops.prob,
+                lo: 0.0,
+                hi: 1.0,
+            });
+        }
+        // cross-field: PJRT evaluates the full AOT shard per round
+        if self.backend == BackendKind::Pjrt
+            && self.batch != BatchSchedule::Full
+        {
+            return Err(SpecError::PjrtBatching);
+        }
+        // cross-field: the async engine is full-participation by
+        // construction (this used to be a runtime assert, hit only
+        // after datasets were loaded and workers built)
+        if matches!(self.engine, EngineKind::Async(_))
+            && self.participation != Participation::Full
+        {
+            return Err(SpecError::AsyncParticipation {
+                participation: self.participation.name(),
+            });
+        }
+        Ok(())
+    }
+
+    fn validate_params(&self) -> Result<(), SpecError> {
+        if let Some(a) = self.params.alpha {
+            positive("params.alpha", a)?;
+        }
+        finite("params.beta", self.params.beta)?;
+        if self.params.beta < 0.0 {
+            return Err(SpecError::OutOfRange {
+                field: "params.beta",
+                value: self.params.beta,
+                lo: 0.0,
+                hi: f64::INFINITY,
+            });
+        }
+        let (field, v) = match self.params.epsilon {
+            EpsilonSpec::Scaled { c } => ("params.epsilon.c", c),
+            EpsilonSpec::Absolute { eps } => ("params.epsilon.eps", eps),
+        };
+        finite(field, v)?;
+        if v < 0.0 {
+            return Err(SpecError::OutOfRange {
+                field,
+                value: v,
+                lo: 0.0,
+                hi: f64::INFINITY,
+            });
+        }
+        Ok(())
+    }
+
+    fn validate_censor(&self) -> Result<(), SpecError> {
+        match self.censor {
+            CensorSpec::Absolute { tau } => {
+                finite("censor.tau", tau)?;
+                if tau < 0.0 {
+                    return Err(SpecError::OutOfRange {
+                        field: "censor.tau",
+                        value: tau,
+                        lo: 0.0,
+                        hi: f64::INFINITY,
+                    });
+                }
+            }
+            CensorSpec::Decaying { tau0, rho } => {
+                finite("censor.tau0", tau0)?;
+                if tau0 < 0.0 {
+                    return Err(SpecError::OutOfRange {
+                        field: "censor.tau0",
+                        value: tau0,
+                        lo: 0.0,
+                        hi: f64::INFINITY,
+                    });
+                }
+                finite("censor.rho", rho)?;
+                if !(rho > 0.0 && rho <= 1.0) {
+                    return Err(SpecError::OutOfRange {
+                        field: "censor.rho",
+                        value: rho,
+                        lo: 0.0,
+                        hi: 1.0,
+                    });
+                }
+            }
+            CensorSpec::MethodDefault
+            | CensorSpec::Never
+            | CensorSpec::Periodic { .. }
+            | CensorSpec::VarianceScaled => {}
+        }
+        Ok(())
+    }
+
+    fn validate_engine(&self) -> Result<(), SpecError> {
+        use crate::coordinator::ComputeModel;
+        let EngineKind::Async(acfg) = &self.engine else {
+            return Ok(());
+        };
+        match acfg.compute {
+            ComputeModel::Uniform { us } => {
+                positive("engine.compute.us", us)?;
+            }
+            ComputeModel::Pareto { scale_us, shape, .. } => {
+                positive("engine.compute.scale_us", scale_us)?;
+                positive("engine.compute.shape", shape)?;
+            }
+        }
+        for (field, v) in [
+            ("engine.latency.fixed_us", acfg.latency.fixed_us),
+            ("engine.latency.per_kib_us", acfg.latency.per_kib_us),
+        ] {
+            finite(field, v)?;
+            if v < 0.0 {
+                return Err(SpecError::OutOfRange {
+                    field,
+                    value: v,
+                    lo: 0.0,
+                    hi: f64::INFINITY,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_participation(&self) -> Result<(), SpecError> {
+        match self.participation {
+            Participation::Full => Ok(()),
+            Participation::UniformSample { frac, .. } => {
+                finite("participation.frac", frac)?;
+                if !(frac > 0.0 && frac <= 1.0) {
+                    return Err(SpecError::OutOfRange {
+                        field: "participation.frac",
+                        value: frac,
+                        lo: 0.0,
+                        hi: 1.0,
+                    });
+                }
+                Ok(())
+            }
+            Participation::Straggler { timeout, .. } => {
+                finite("participation.timeout", timeout)?;
+                if timeout < 0.0 {
+                    return Err(SpecError::OutOfRange {
+                        field: "participation.timeout",
+                        value: timeout,
+                        lo: 0.0,
+                        hi: f64::INFINITY,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn validate_batch(&self) -> Result<(), SpecError> {
+        match self.batch {
+            BatchSchedule::Full => Ok(()),
+            BatchSchedule::Minibatch { size, .. } => {
+                if size == 0 {
+                    return Err(SpecError::ZeroSize { field: "batch.size" });
+                }
+                Ok(())
+            }
+            BatchSchedule::GrowingBatch { size0, growth, .. } => {
+                if size0 == 0 {
+                    return Err(SpecError::ZeroSize { field: "batch.size0" });
+                }
+                finite("batch.growth", growth)?;
+                if growth < 1.0 {
+                    return Err(SpecError::OutOfRange {
+                        field: "batch.growth",
+                        value: growth,
+                        lo: 1.0,
+                        hi: f64::INFINITY,
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn validate_codec(&self) -> Result<(), SpecError> {
+        match self.codec {
+            CodecSpec::None => Ok(()),
+            CodecSpec::Quantizer { bits } => {
+                if !(2..=32).contains(&bits) {
+                    return Err(SpecError::QuantBits { bits });
+                }
+                Ok(())
+            }
+            CodecSpec::TopK { k } => {
+                if k == 0 {
+                    return Err(SpecError::ZeroSize { field: "codec.k" });
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Every seed in the spec must survive the f64-carried JSON round
+    /// trip exactly, or the written manifest would replay a different
+    /// stream than the run it records.
+    fn validate_seeds(&self) -> Result<(), SpecError> {
+        use crate::coordinator::ComputeModel;
+        seed_ok("drops.seed", self.drops.seed)?;
+        match self.participation {
+            Participation::UniformSample { seed, .. }
+            | Participation::Straggler { seed, .. } => {
+                seed_ok("participation.seed", seed)?
+            }
+            Participation::Full => {}
+        }
+        match self.batch {
+            BatchSchedule::Minibatch { seed, .. }
+            | BatchSchedule::GrowingBatch { seed, .. } => {
+                seed_ok("batch.seed", seed)?
+            }
+            BatchSchedule::Full => {}
+        }
+        if let EngineKind::Async(acfg) = &self.engine {
+            if let ComputeModel::Pareto { seed, .. } = acfg.compute {
+                seed_ok("engine.compute.seed", seed)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_stop(&self) -> Result<(), SpecError> {
+        match self.stop {
+            StopSpec::MaxIters => Ok(()),
+            StopSpec::ObjErr { tol, f_star } => {
+                finite("stop.tol", tol)?;
+                if let Some(fs) = f_star {
+                    finite("stop.f_star", fs)?;
+                } else if self.task == TaskKind::Nn {
+                    return Err(SpecError::NoFStar);
+                }
+                Ok(())
+            }
+            StopSpec::AggGrad { tol } => finite("stop.tol", tol),
+        }
+    }
+}
+
+fn finite(field: &'static str, value: f64) -> Result<(), SpecError> {
+    if value.is_finite() {
+        Ok(())
+    } else {
+        Err(SpecError::NonFinite { field, value })
+    }
+}
+
+fn positive(field: &'static str, value: f64) -> Result<(), SpecError> {
+    finite(field, value)?;
+    if value > 0.0 {
+        Ok(())
+    } else {
+        Err(SpecError::NonPositive { field, value })
+    }
+}
+
+fn seed_ok(field: &'static str, seed: u64) -> Result<(), SpecError> {
+    if seed <= MAX_EXACT_SEED {
+        Ok(())
+    } else {
+        Err(SpecError::SeedTooLarge { field, seed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AsyncConfig, ComputeModel};
+
+    fn base() -> RunSpec {
+        RunSpec::new(TaskKind::LinReg, "synth")
+    }
+
+    #[test]
+    fn default_spec_validates() {
+        base().validate().unwrap();
+    }
+
+    #[test]
+    fn pjrt_rejects_minibatch_schedules() {
+        let spec = RunSpec {
+            backend: BackendKind::Pjrt,
+            batch: BatchSchedule::Minibatch {
+                size: 16,
+                seed: 1,
+                replace: false,
+            },
+            ..base()
+        };
+        assert_eq!(spec.validate(), Err(SpecError::PjrtBatching));
+        // full batches on pjrt are fine
+        let spec = RunSpec { backend: BackendKind::Pjrt, ..base() };
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn async_rejects_partial_participation() {
+        let spec = RunSpec {
+            engine: EngineKind::Async(AsyncConfig::default()),
+            participation: Participation::UniformSample { frac: 0.5, seed: 1 },
+            ..base()
+        };
+        assert_eq!(
+            spec.validate(),
+            Err(SpecError::AsyncParticipation { participation: "sample" })
+        );
+    }
+
+    #[test]
+    fn async_compute_knobs_are_checked() {
+        let spec = RunSpec {
+            engine: EngineKind::Async(AsyncConfig {
+                compute: ComputeModel::Uniform { us: 0.0 },
+                ..AsyncConfig::default()
+            }),
+            ..base()
+        };
+        assert_eq!(
+            spec.validate(),
+            Err(SpecError::NonPositive {
+                field: "engine.compute.us",
+                value: 0.0
+            })
+        );
+        let spec = RunSpec {
+            engine: EngineKind::Async(AsyncConfig {
+                compute: ComputeModel::Pareto {
+                    scale_us: 100.0,
+                    shape: -1.0,
+                    seed: 0,
+                },
+                ..AsyncConfig::default()
+            }),
+            ..base()
+        };
+        assert!(matches!(
+            spec.validate(),
+            Err(SpecError::NonPositive { field: "engine.compute.shape", .. })
+        ));
+    }
+
+    #[test]
+    fn numeric_bounds_are_enforced() {
+        let mut s = base();
+        s.iters = 0;
+        assert_eq!(s.validate(), Err(SpecError::ZeroIters));
+        let mut s = base();
+        s.params.alpha = Some(-0.1);
+        assert!(matches!(s.validate(), Err(SpecError::NonPositive { .. })));
+        let mut s = base();
+        s.params.beta = f64::NAN;
+        assert!(matches!(s.validate(), Err(SpecError::NonFinite { .. })));
+        let mut s = base();
+        s.drops.prob = 1.5;
+        assert!(matches!(s.validate(), Err(SpecError::OutOfRange { .. })));
+        let mut s = base();
+        s.codec = CodecSpec::Quantizer { bits: 1 };
+        assert_eq!(s.validate(), Err(SpecError::QuantBits { bits: 1 }));
+        let mut s = base();
+        s.codec = CodecSpec::TopK { k: 0 };
+        assert_eq!(s.validate(), Err(SpecError::ZeroSize { field: "codec.k" }));
+        let mut s = base();
+        s.batch =
+            BatchSchedule::GrowingBatch { size0: 8, growth: 0.9, seed: 1 };
+        assert!(matches!(s.validate(), Err(SpecError::OutOfRange { .. })));
+        let mut s = base();
+        s.censor = CensorSpec::Decaying { tau0: 1.0, rho: 0.0 };
+        assert!(matches!(s.validate(), Err(SpecError::OutOfRange { .. })));
+    }
+
+    #[test]
+    fn seeds_beyond_exact_f64_range_are_rejected() {
+        let big = MAX_EXACT_SEED + 1;
+        let mut s = base();
+        s.drops.seed = big;
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::SeedTooLarge { field: "drops.seed", seed: big })
+        );
+        let mut s = base();
+        s.participation = Participation::UniformSample { frac: 0.5, seed: big };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::SeedTooLarge { field: "participation.seed", .. })
+        ));
+        let mut s = base();
+        s.batch =
+            BatchSchedule::Minibatch { size: 8, seed: big, replace: false };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::SeedTooLarge { field: "batch.seed", .. })
+        ));
+        // the boundary itself is exact and accepted
+        let mut s = base();
+        s.drops.seed = MAX_EXACT_SEED;
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn nn_obj_err_needs_explicit_f_star() {
+        let mut s = RunSpec::new(TaskKind::Nn, "synth");
+        s.stop = StopSpec::ObjErr { tol: 1e-6, f_star: None };
+        assert_eq!(s.validate(), Err(SpecError::NoFStar));
+        s.stop = StopSpec::ObjErr { tol: 1e-6, f_star: Some(0.5) };
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn spec_errors_display_their_field() {
+        let msg = SpecError::NonPositive { field: "params.alpha", value: -1.0 }
+            .to_string();
+        assert!(msg.contains("params.alpha"), "{msg}");
+        let msg = SpecError::PjrtBatching.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

@@ -1,0 +1,372 @@
+//! [`Session`]: resolve a [`RunSpec`] against a problem and execute
+//! it through the one [`EngineKind`] dispatch.
+//!
+//! `Session::from_spec(&spec, &registry)?.run()` is the whole
+//! lifecycle: validate → load the dataset → build workers (backend,
+//! batch schedule, codec) → materialize (server, censor) → dispatch.
+//! Every legacy entry point (`run_serial`/`run_threaded`/`run_rayon`/
+//! `run_async_detailed`, `experiments::Protocol`, `main.rs::cmd_run`)
+//! routes through here or is a thin wrapper beside it, so a spec run
+//! is bit-identical to the hand-assembled path it replaced
+//! (`tests/spec_session.rs` pins this on all four tasks × all four
+//! engines).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::compress::{Compressor, TopK, UniformQuantizer};
+use crate::coordinator::{
+    run_engine_with_rules, AsyncSummary, EngineKind, RunConfig, Server,
+    StopRule, Worker,
+};
+use crate::experiments::Problem;
+use crate::metrics::{csv, Trace};
+use crate::optim::censor::{
+    AbsoluteCensor, DecayingCensor, NeverCensor, PeriodicCensor,
+    VarianceScaledCensor,
+};
+use crate::optim::{self, CensorRule, MethodParams};
+
+use super::{
+    BackendKind, CensorSpec, CodecSpec, EpsilonSpec, RunSpec, SpecError,
+    StopSpec,
+};
+
+/// Where a session finds external inputs: the dataset directory (real
+/// files, with deterministic synthetic stand-ins otherwise) and the
+/// AOT artifact directory for the PJRT backend.  Everything
+/// *environmental* lives here so a [`RunSpec`] stays portable across
+/// machines.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    /// dataset directory (default `data`)
+    pub data_dir: PathBuf,
+    /// PJRT artifact directory (default `artifacts`)
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self {
+            data_dir: PathBuf::from("data"),
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl Registry {
+    /// Registry over explicit directories.
+    pub fn new(data_dir: &Path, artifacts_dir: &Path) -> Self {
+        Self {
+            data_dir: data_dir.to_path_buf(),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        }
+    }
+}
+
+/// What a finished run hands back: the trace, the async engine's
+/// extra bookkeeping when that engine ran, and the spec it came from
+/// (so result directories are self-describing).
+pub struct RunReport {
+    /// the spec this run executed (written out as `manifest.json`)
+    pub spec: RunSpec,
+    /// the standard per-iteration trace
+    pub trace: Trace,
+    /// async-only telemetry (`None` under synchronous engines)
+    pub async_summary: Option<AsyncSummary>,
+}
+
+impl RunReport {
+    /// Total uplink payload bits spent over the run (the
+    /// communication currency of Figs. 4–12).
+    pub fn uplink_bits(&self) -> u64 {
+        self.trace.iters.last().map_or(0, |s| s.bits_cum)
+    }
+
+    /// The trace CSV filename this report writes
+    /// (`<task>_<dataset>_<label>.csv`).
+    pub fn trace_filename(&self) -> String {
+        format!(
+            "{}_{}_{}.csv",
+            self.spec.task.name(),
+            self.spec.dataset,
+            self.trace.method
+        )
+    }
+
+    /// Write the run's artifacts into `dir`: the trace CSV, the
+    /// per-worker staleness CSV (async runs), and `manifest.json` —
+    /// the exact spec, so the directory is rerunnable with
+    /// `chb-fed run --spec <dir>/manifest.json`.
+    pub fn write_artifacts(&self, dir: &Path, f_star: f64) -> Result<()> {
+        let trace_path = dir.join(self.trace_filename());
+        csv::write_trace(&trace_path, &self.trace, f_star)?;
+        if !self.trace.worker_staleness.is_empty() {
+            let name = format!(
+                "{}_{}_{}_staleness.csv",
+                self.spec.task.name(),
+                self.spec.dataset,
+                self.trace.method
+            );
+            csv::write_staleness(&dir.join(name), &self.trace)?;
+        }
+        let manifest = dir.join("manifest.json");
+        std::fs::write(&manifest, self.spec.to_json_string() + "\n")
+            .with_context(|| format!("write {}", manifest.display()))?;
+        Ok(())
+    }
+}
+
+/// A validated, fully-resolved run, ready to execute.
+pub struct Session {
+    spec: RunSpec,
+    problem: Problem,
+    workers: Vec<Worker>,
+    cfg: RunConfig,
+    engine: EngineKind,
+    censor: Arc<dyn CensorRule>,
+    label: String,
+}
+
+impl Session {
+    /// Resolve `spec` against `registry`: validate, load the dataset
+    /// by its registry name, and build the workers (including PJRT
+    /// artifact loading when `backend` is `"pjrt"`).
+    pub fn from_spec(spec: &RunSpec, registry: &Registry) -> Result<Session> {
+        spec.validate()?;
+        let problem = Problem::from_registry(
+            spec.task,
+            &spec.dataset,
+            &registry.data_dir,
+            spec.lambda,
+        )?;
+        let workers = match spec.backend {
+            BackendKind::Rust => problem.rust_workers_batched(spec.batch),
+            BackendKind::Pjrt => {
+                let mut rt =
+                    crate::runtime::PjrtRuntime::new(&registry.artifacts_dir)?;
+                problem.pjrt_workers(&mut rt)?
+            }
+        };
+        Ok(Session::assemble(spec.clone(), problem, workers)?)
+    }
+
+    /// Resolve `spec` against an already-built [`Problem`] — the path
+    /// the experiment drivers use (their problems are synthetic, not
+    /// registry datasets; `spec.dataset` is then just a label).
+    /// Restricted to the rust backend: PJRT needs a [`Registry`].
+    pub fn from_parts(
+        spec: RunSpec,
+        problem: Problem,
+    ) -> Result<Session, SpecError> {
+        spec.validate()?;
+        if spec.backend == BackendKind::Pjrt {
+            return Err(SpecError::PjrtNeedsRegistry);
+        }
+        let workers = problem.rust_workers_batched(spec.batch);
+        Session::assemble(spec, problem, workers)
+    }
+
+    /// Shared tail of the two constructors: resolve parameters, stop
+    /// rule, censor, codec, and label against the problem.
+    fn assemble(
+        spec: RunSpec,
+        problem: Problem,
+        mut workers: Vec<Worker>,
+    ) -> Result<Session, SpecError> {
+        let m = problem.m_workers();
+        let alpha =
+            spec.params.alpha.unwrap_or(1.0 / problem.l_global);
+        let mut params = MethodParams::new(alpha).with_beta(spec.params.beta);
+        params = match spec.params.epsilon {
+            EpsilonSpec::Scaled { c } => params.with_epsilon1_scaled(c, m),
+            EpsilonSpec::Absolute { eps } => params.with_epsilon1(eps),
+        };
+        let stop = match spec.stop {
+            StopSpec::MaxIters => StopRule::MaxIters,
+            StopSpec::ObjErr { tol, f_star } => {
+                let f_star = match f_star {
+                    Some(v) => v,
+                    // validate() already rejected NN here
+                    None => problem.f_star().ok_or(SpecError::NoFStar)?,
+                };
+                StopRule::ObjErrBelow { f_star, tol }
+            }
+            StopSpec::AggGrad { tol } => StopRule::AggGradBelow { tol },
+        };
+        let mut cfg = RunConfig::new(spec.method, params, spec.iters)
+            .with_stop(stop)
+            .with_participation(spec.participation)
+            .with_drops(spec.drops.prob, spec.drops.seed);
+        if spec.record_comm_map {
+            cfg = cfg.with_comm_map();
+        }
+        let censor: Arc<dyn CensorRule> = match spec.censor {
+            CensorSpec::MethodDefault => Arc::from(
+                optim::method::build_censor_rule(spec.method, &params),
+            ),
+            CensorSpec::Never => Arc::new(NeverCensor),
+            CensorSpec::Absolute { tau } => Arc::new(AbsoluteCensor { tau }),
+            CensorSpec::Periodic { period } => {
+                Arc::new(PeriodicCensor::new(period))
+            }
+            CensorSpec::Decaying { tau0, rho } => {
+                Arc::new(DecayingCensor { tau0, rho })
+            }
+            CensorSpec::VarianceScaled => Arc::new(VarianceScaledCensor {
+                epsilon1: params.epsilon1,
+                schedule: spec.batch,
+                n_rows: problem.shards[0].n_real,
+            }),
+        };
+        let compressor: Option<Arc<dyn Compressor>> = match spec.codec {
+            CodecSpec::None => None,
+            CodecSpec::Quantizer { bits } => {
+                Some(Arc::new(UniformQuantizer { bits }))
+            }
+            CodecSpec::TopK { k } => Some(Arc::new(TopK { k })),
+        };
+        if let Some(c) = compressor {
+            workers = workers
+                .into_iter()
+                .map(|w| w.with_compressor(Arc::clone(&c)))
+                .collect();
+        }
+        let label = spec.label.clone().unwrap_or_else(|| match spec.engine {
+            EngineKind::Async(_) => format!("{}-async", spec.method.name()),
+            _ => spec.method.name().to_string(),
+        });
+        Ok(Session {
+            engine: spec.engine,
+            spec,
+            problem,
+            workers,
+            cfg,
+            censor,
+            label,
+        })
+    }
+
+    /// The resolved problem (dataset shards, L constants, θ⁰, f*).
+    pub fn problem(&self) -> &Problem {
+        &self.problem
+    }
+
+    /// The resolved (α, β, ε₁) — spec defaults filled in against the
+    /// problem.
+    pub fn params(&self) -> MethodParams {
+        self.cfg.params
+    }
+
+    /// The engine this session will dispatch to.
+    pub fn engine(&self) -> &EngineKind {
+        &self.engine
+    }
+
+    /// Execute the run.  Consumes the session (workers are spent) and
+    /// cannot fail: everything fallible happened at construction.
+    pub fn run(self) -> RunReport {
+        let theta0 = self.problem.theta0();
+        let server = Server::new(self.cfg.method, &self.cfg.params, theta0);
+        let out = run_engine_with_rules(
+            &self.engine,
+            self.workers,
+            &self.cfg,
+            server,
+            self.censor,
+            &self.label,
+        );
+        RunReport {
+            spec: self.spec,
+            trace: out.trace,
+            async_summary: out.async_summary,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_serial;
+    use crate::data::synthetic;
+    use crate::optim::Method;
+    use crate::spec::ParamSpec;
+    use crate::tasks::TaskKind;
+
+    fn problem() -> Problem {
+        let l_m = synthetic::increasing_l(3);
+        let per_worker = synthetic::per_worker_rescaled(7, 3, 20, 10, &l_m);
+        Problem::from_worker_datasets(
+            TaskKind::LinReg,
+            "sess",
+            &per_worker,
+            0.0,
+        )
+    }
+
+    #[test]
+    fn session_reproduces_the_legacy_serial_path() {
+        let p = problem();
+        let spec = RunSpec {
+            params: ParamSpec {
+                alpha: Some(1.0 / p.l_global),
+                ..ParamSpec::default()
+            },
+            iters: 40,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        let report = Session::from_parts(spec, p.clone()).unwrap().run();
+        let cfg = RunConfig::new(
+            Method::Chb,
+            MethodParams::new(1.0 / p.l_global)
+                .with_beta(0.4)
+                .with_epsilon1_scaled(0.1, p.m_workers()),
+            40,
+        );
+        let mut ws = p.rust_workers();
+        let legacy = run_serial(&mut ws, &cfg, p.theta0());
+        assert_eq!(report.trace.iterations(), legacy.iterations());
+        for (a, b) in report.trace.iters.iter().zip(&legacy.iters) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "k={}", a.k);
+        }
+        assert_eq!(report.trace.method, "CHB");
+        assert!(report.async_summary.is_none());
+        assert_eq!(report.uplink_bits(), legacy.iters.last().unwrap().bits_cum);
+    }
+
+    #[test]
+    fn default_alpha_resolves_to_one_over_l() {
+        let p = problem();
+        let spec =
+            RunSpec { iters: 5, ..RunSpec::new(TaskKind::LinReg, "sess") };
+        let session = Session::from_parts(spec, p.clone()).unwrap();
+        assert_eq!(session.params().alpha, 1.0 / p.l_global);
+    }
+
+    #[test]
+    fn pjrt_backend_needs_a_registry() {
+        let spec = RunSpec {
+            backend: BackendKind::Pjrt,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        assert_eq!(
+            Session::from_parts(spec, problem()).err(),
+            Some(SpecError::PjrtNeedsRegistry)
+        );
+    }
+
+    #[test]
+    fn custom_label_overrides_the_method_name() {
+        let p = problem();
+        let spec = RunSpec {
+            label: Some("my-regime".into()),
+            iters: 3,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        let report = Session::from_parts(spec, p).unwrap().run();
+        assert_eq!(report.trace.method, "my-regime");
+        assert_eq!(report.trace_filename(), "linreg_sess_my-regime.csv");
+    }
+}

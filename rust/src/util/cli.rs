@@ -1,10 +1,17 @@
 //! Minimal CLI argument parser (clap is not available on this image).
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional
-//! arguments, with typed getters and an automatically assembled
-//! usage/help string.
+//! arguments, with typed getters and strict option accounting: every
+//! option read through a getter is marked *consumed*, and
+//! [`Args::finish`] errors on anything left over.  Historically a
+//! typo'd flag (`--itres 500`) was silently treated as a value-taking
+//! option — it swallowed the next argument and was then ignored; now
+//! it survives parsing but fails `finish()` with a clear message, and
+//! a value that itself looks like an option (`--alpha --beta`) is
+//! rejected at parse time.
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -15,6 +22,8 @@ pub struct Args {
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// option/flag names a getter has read — `finish()` reports the rest
+    consumed: RefCell<BTreeSet<String>>,
 }
 
 impl Args {
@@ -41,6 +50,13 @@ impl Args {
                     let v = it
                         .next()
                         .ok_or_else(|| anyhow!("--{body} needs a value"))?;
+                    if v.starts_with("--") {
+                        bail!(
+                            "--{body} needs a value, got option-like {v:?} \
+                             (use --{body}={v} if the value really starts \
+                             with --)"
+                        );
+                    }
                     out.options.insert(body.to_string(), v);
                 }
             } else if arg.starts_with('-') && arg.len() > 1 {
@@ -52,14 +68,26 @@ impl Args {
         Ok(out)
     }
 
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().insert(name.to_string());
+    }
+
     /// Was the boolean flag `--name` given?
     pub fn flag(&self, name: &str) -> bool {
-        self.flags.iter().any(|f| f == name)
+        let hit = self.flags.iter().any(|f| f == name);
+        if hit {
+            self.mark(name);
+        }
+        hit
     }
 
     /// Value of option `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.options.get(key).map(|s| s.as_str())
+        let v = self.options.get(key).map(|s| s.as_str());
+        if v.is_some() {
+            self.mark(key);
+        }
+        v
     }
 
     /// Value of option `--key` with a default.
@@ -87,6 +115,31 @@ impl Args {
     {
         Ok(self.get_parse(key)?.unwrap_or(default))
     }
+
+    /// Error unless every given option and flag was consumed by a
+    /// getter.  Commands call this after dispatch, so an unknown
+    /// option — or a real one that does not apply to the chosen
+    /// command/engine (async knobs on `--engine serial`, run flags
+    /// next to `--spec`) — fails loudly instead of being ignored.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unused: Vec<String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k.as_str()))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if unused.is_empty() {
+            return Ok(());
+        }
+        bail!(
+            "unknown or unused option(s): {} (unknown options swallow the \
+             following argument; check spelling, and check the option \
+             applies to this command/engine — see --help)",
+            unused.join(", ")
+        )
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +162,7 @@ mod tests {
         assert_eq!(a.get("beta"), Some("0.4"));
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
+        a.finish().unwrap();
     }
 
     #[test]
@@ -131,5 +185,69 @@ mod tests {
     fn double_dash_stops_parsing() {
         let a = Args::parse(argv("-- --not-an-option"), &[]).unwrap();
         assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn unknown_option_fails_finish() {
+        // the historical bug: a typo'd flag swallowed the next token
+        // and the run proceeded as if nothing happened
+        let a = Args::parse(argv("run --itres 500"), &[]).unwrap();
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--itres"), "{err}");
+    }
+
+    #[test]
+    fn typod_boolean_flag_fails_finish_instead_of_eating_args() {
+        // `--comm-mpa` is not in flag_names, so it grabs "--task"? no:
+        // option-like values are rejected at parse time
+        assert!(Args::parse(argv("run --comm-mpa --task linreg"), &[
+            "comm-map"
+        ])
+        .is_err());
+        // with a non-option token following, it parses but finish()
+        // reports it
+        let a =
+            Args::parse(argv("run --comm-mpa x --task linreg"), &["comm-map"])
+                .unwrap();
+        assert_eq!(a.get("task"), Some("linreg"));
+        assert!(a.finish().unwrap_err().to_string().contains("--comm-mpa"));
+    }
+
+    #[test]
+    fn unused_declared_option_fails_finish() {
+        // a real option that the chosen code path never reads (e.g.
+        // async knobs on a sync engine) is reported, not ignored
+        let a = Args::parse(argv("run --compute-us 50"), &[]).unwrap();
+        assert!(a
+            .finish()
+            .unwrap_err()
+            .to_string()
+            .contains("--compute-us"));
+    }
+
+    #[test]
+    fn unused_flag_fails_finish() {
+        let a = Args::parse(argv("run --full"), &["full"]).unwrap();
+        assert!(a.finish().unwrap_err().to_string().contains("--full"));
+        assert!(a.flag("full"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn option_like_value_rejected_but_eq_form_allowed() {
+        assert!(Args::parse(argv("--alpha --beta 3"), &[]).is_err());
+        let a = Args::parse(argv("--alpha=--beta"), &[]).unwrap();
+        assert_eq!(a.get("alpha"), Some("--beta"));
+    }
+
+    #[test]
+    fn defaults_do_not_mark_missing_options() {
+        let a = Args::parse(argv("--task linreg"), &[]).unwrap();
+        // reading an *absent* option with a default must not hide the
+        // unused real option
+        assert_eq!(a.get_or("dataset", "synth"), "synth");
+        assert!(a.finish().is_err());
+        assert_eq!(a.get("task"), Some("linreg"));
+        a.finish().unwrap();
     }
 }

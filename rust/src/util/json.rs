@@ -1,8 +1,16 @@
-//! Minimal JSON parser (serde is not on this image) — enough for
-//! artifacts/manifest.json and result files: objects, arrays, strings,
+//! Minimal JSON parser **and serializer** (serde is not on this
+//! image) — enough for artifacts/manifest.json, run manifests
+//! (`spec::RunSpec`), and result files: objects, arrays, strings,
 //! numbers, booleans, null, with full escape handling.
+//!
+//! [`Json::dump`] / [`Json::dump_pretty`] emit text that
+//! [`Json::parse`] reads back to an identical value (round-trip
+//! tested): object keys are sorted (`BTreeMap`), numbers use the
+//! shortest representation that parses back to the same f64, and
+//! non-finite numbers serialize as `null` (JSON has no NaN/∞).
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 use anyhow::{bail, Result};
 
@@ -86,6 +94,113 @@ impl Json {
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))
     }
+
+    /// Serialize compactly (no whitespace).  Output parses back to an
+    /// identical value via [`Json::parse`].
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Serialize with 2-space indentation — the form the run
+    /// manifests are written in, stable enough to diff and to pin as
+    /// a golden fixture (keys are sorted, formatting is canonical).
+    pub fn dump_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let (nl, pad, pad_in) = match indent {
+            Some(w) => {
+                ("\n", " ".repeat(w * depth), " ".repeat(w * (depth + 1)))
+            }
+            None => ("", String::new(), String::new()),
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => out.push_str(&dump_number(*n)),
+            Json::Str(s) => dump_string(s, out),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    item.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                if map.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    dump_string(k, out);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Shortest decimal form that parses back to the same f64.  Integral
+/// values inside the f64-exact range print without a fraction part
+/// (`500`, not `500.0`); non-finite values become `null` (JSON has no
+/// NaN/∞ literals).
+fn dump_number(n: f64) -> String {
+    if !n.is_finite() {
+        return "null".to_string();
+    }
+    if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+        // 2^53: integers below this are exact in f64
+        return format!("{}", n as i64);
+    }
+    // Rust's {:?} prints the shortest string that round-trips
+    format!("{n:?}")
+}
+
+fn dump_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -312,5 +427,50 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn dump_round_trips_every_variant() {
+        let text = r#"{
+            "arr": [1, 2.5, "x", null, true, {"nested": []}],
+            "neg": -1.5e-3,
+            "int": 500,
+            "big": 9e300,
+            "esc": "a\n\"b\"\t\\c",
+            "empty_obj": {}
+        }"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+        assert_eq!(Json::parse(&v.dump_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_number_forms() {
+        assert_eq!(dump_number(500.0), "500");
+        assert_eq!(dump_number(-3.0), "-3");
+        assert_eq!(dump_number(0.1), "0.1");
+        assert_eq!(dump_number(f64::NAN), "null");
+        assert_eq!(dump_number(f64::INFINITY), "null");
+        // shortest-round-trip: parse(dump(x)) == x bitwise
+        for x in [1.0 / 3.0, 1e-300, 2.0f64.powi(60), 0.30000000000000004] {
+            let parsed = Json::parse(&dump_number(x)).unwrap();
+            assert_eq!(parsed.as_f64().unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn dump_pretty_is_stable_and_sorted() {
+        let v = Json::parse(r#"{"b": 1, "a": {"z": [1, 2]}}"#).unwrap();
+        assert_eq!(
+            v.dump_pretty(),
+            "{\n  \"a\": {\n    \"z\": [\n      1,\n      2\n    ]\n  },\n  \"b\": 1\n}"
+        );
+    }
+
+    #[test]
+    fn dump_escapes_control_chars() {
+        let v = Json::Str("a\u{1}b".into());
+        assert_eq!(v.dump(), "\"a\\u0001b\"");
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
     }
 }

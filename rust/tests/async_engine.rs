@@ -11,7 +11,7 @@
 //!    uplink drops.
 
 use chb_fed::coordinator::{
-    run_async, run_async_detailed, run_serial, AsyncConfig, ComputeModel,
+    run_async_detailed, run_serial, AsyncConfig, ComputeModel,
     RunConfig, StopRule,
 };
 use chb_fed::data::synthetic;
@@ -97,7 +97,8 @@ fn degenerate_async_is_bit_identical_to_serial_on_all_four_tasks() {
         let mut ws = p.rust_workers();
         let serial = run_serial(&mut ws, &cfg, p.theta0());
         let mut ws = p.rust_workers();
-        let a = run_async(&mut ws, &cfg, &degenerate(), p.theta0());
+        let a = run_async_detailed(&mut ws, &cfg, &degenerate(), p.theta0())
+            .trace;
         assert_trajectories_identical(&serial, &a, task.name());
         // and zero staleness everywhere, by degeneracy
         assert_eq!(a.max_staleness(), 0, "{}: staleness", task.name());
@@ -117,7 +118,7 @@ fn degenerate_async_stop_rule_fires_identically() {
     let serial = run_serial(&mut ws, &cfg, p.theta0());
     assert!(serial.iterations() < 5_000, "stop rule never fired");
     let mut ws = p.rust_workers();
-    let a = run_async(&mut ws, &cfg, &degenerate(), p.theta0());
+    let a = run_async_detailed(&mut ws, &cfg, &degenerate(), p.theta0()).trace;
     assert_trajectories_identical(&serial, &a, "early-stop async");
 }
 
@@ -136,7 +137,7 @@ fn degenerate_async_matches_serial_under_drops_too() {
     let mut ws = p.rust_workers();
     let serial = run_serial(&mut ws, &cfg, p.theta0());
     let mut ws = p.rust_workers();
-    let a = run_async(&mut ws, &cfg, &degenerate(), p.theta0());
+    let a = run_async_detailed(&mut ws, &cfg, &degenerate(), p.theta0()).trace;
     assert_trajectories_identical(&serial, &a, "drops async");
 }
 
@@ -248,7 +249,7 @@ fn max_staleness_bounds_consecutive_censored_rounds() {
         max_staleness: Some(s),
     };
     let mut ws = p.rust_workers();
-    let trace = run_async(&mut ws, &cfg, &acfg, p.theta0());
+    let trace = run_async_detailed(&mut ws, &cfg, &acfg, p.theta0()).trace;
     // degenerate schedule: every worker completes once per server step
     for (id, (&attempts, stats)) in trace
         .per_worker_comms

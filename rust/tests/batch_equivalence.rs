@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use chb_fed::coordinator::{
-    run_async, run_rayon, run_serial, run_threaded, run_with_rules,
+    run_async_detailed, run_rayon, run_serial, run_threaded, run_with_rules,
     AsyncConfig, Participation, RunConfig, SerialPool, Server,
 };
 use chb_fed::data::batch::{BatchSampler, BatchSchedule};
@@ -120,7 +120,9 @@ fn full_schedule_is_bit_identical_to_legacy_on_all_tasks_and_engines() {
         );
         assert_traces_identical(&legacy, &full_rayon, &format!("{name} rayon"));
         let mut ws = p.rust_workers_batched(BatchSchedule::Full);
-        let full_async = run_async(&mut ws, &cfg, &degenerate_async(), p.theta0());
+        let full_async =
+            run_async_detailed(&mut ws, &cfg, &degenerate_async(), p.theta0())
+                .trace;
         assert_traces_identical(&legacy, &full_async, &format!("{name} async"));
 
         // and the new columns read as the deterministic regime
@@ -160,7 +162,9 @@ fn minibatch_traces_reproduce_exactly_across_engines() {
     let rayon = run_rayon(p.rust_workers_batched(schedule), &cfg, p.theta0());
     assert_traces_identical(&serial, &rayon, "minibatch rayon");
     let mut ws = p.rust_workers_batched(schedule);
-    let degenerate = run_async(&mut ws, &cfg, &degenerate_async(), p.theta0());
+    let degenerate =
+        run_async_detailed(&mut ws, &cfg, &degenerate_async(), p.theta0())
+            .trace;
     assert_traces_identical(&serial, &degenerate, "minibatch degenerate-async");
 
     // a different draw seed genuinely changes the run

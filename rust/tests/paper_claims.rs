@@ -131,6 +131,7 @@ fn theorem1_rate_bounds_measured_rate() {
         max_iters: 400,
         stop: StopRule::ObjErrBelow { f_star, tol: 1e-9 },
         participation: chb_fed::coordinator::Participation::Full,
+        engine: chb_fed::coordinator::EngineKind::Serial,
     };
     let t = run_method(&problem, Method::Chb, &proto, false);
     // measured contraction over the run must beat (1 − c)

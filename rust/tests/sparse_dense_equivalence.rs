@@ -12,7 +12,8 @@ use std::sync::Arc;
 
 use chb_fed::compress::{Compressor, DenseDecoded, TopK};
 use chb_fed::coordinator::{
-    run_async, run_rayon, run_serial, run_threaded, AsyncConfig, RunConfig,
+    run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
+    RunConfig,
     Server, Worker,
 };
 use chb_fed::data::synthetic;
@@ -142,7 +143,7 @@ fn degenerate_async_folds_sparse_payloads_identically_to_serial() {
         ..AsyncConfig::default()
     };
     let mut ws = workers_with(&p, codec);
-    let a = run_async(&mut ws, &cfg, &acfg, p.theta0());
+    let a = run_async_detailed(&mut ws, &cfg, &acfg, p.theta0()).trace;
     assert_traces_identical(&serial, &a, "async degenerate sparse");
 }
 

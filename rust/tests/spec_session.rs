@@ -1,0 +1,451 @@
+//! Integration: the declarative spec layer is a lossless façade over
+//! the legacy builder paths.
+//!
+//! * spec-built runs are bit-identical to direct
+//!   `RunConfig`/`AsyncConfig` assembly on all four paper tasks ×
+//!   all four engines (the equivalence-test pattern);
+//! * `RunSpec → json → RunSpec` is exact (property test over random
+//!   specs);
+//! * the manifest format is pinned by a golden fixture;
+//! * a run replayed from its emitted `manifest.json` reproduces the
+//!   original trace bit-for-bit.
+
+use chb_fed::coordinator::{
+    run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
+    ComputeModel, EngineKind, Participation, RunConfig,
+};
+use chb_fed::data::batch::BatchSchedule;
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::metrics::Trace;
+use chb_fed::net::LatencyModel;
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::spec::{
+    CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec, Registry,
+    RunSpec, Session, StopSpec,
+};
+use chb_fed::tasks::TaskKind;
+use chb_fed::testing::prop;
+
+/// Small instance of one paper task: M = 4 workers, 12×8 shards
+/// (the `engine_equivalence` pattern).
+fn problem_for(task: TaskKind) -> Problem {
+    let (m, n, d) = (4usize, 12usize, 8usize);
+    let l_m: Vec<f64> = (0..m).map(|i| (1.0 + 0.4 * i as f64).powi(2)).collect();
+    let seed = 0x5EC + match task {
+        TaskKind::LinReg => 1,
+        TaskKind::LogReg => 2,
+        TaskKind::Lasso => 3,
+        TaskKind::Nn => 4,
+    };
+    let per_worker = synthetic::per_worker_rescaled(seed, m, n, d, &l_m);
+    let lam = match task {
+        TaskKind::Lasso => 0.05,
+        TaskKind::LogReg | TaskKind::Nn => 0.01,
+        TaskKind::LinReg => 0.0,
+    };
+    Problem::from_worker_datasets(task, "spec-equiv", &per_worker, lam)
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{what}: loss differs at k={}",
+            x.k
+        );
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² differs at k={}",
+            x.k
+        );
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms at k={}", x.k);
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits at k={}", x.k);
+    }
+    assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: S_m");
+    assert_eq!(a.comm_map, b.comm_map, "{what}: comm map");
+    assert_eq!(a.participants, b.participants, "{what}: participants");
+}
+
+fn degenerate_async() -> AsyncConfig {
+    AsyncConfig {
+        compute: ComputeModel::Uniform { us: 1_000.0 },
+        latency: LatencyModel::zero(),
+        max_staleness: None,
+    }
+}
+
+/// One spec per (task, engine); the legacy trace assembled by hand.
+#[test]
+fn spec_runs_are_bit_identical_to_legacy_builders() {
+    for task in [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn] {
+        let p = problem_for(task);
+        let iters = if task == TaskKind::Nn { 12 } else { 25 };
+        let alpha = 1.0 / p.l_global;
+        let params = MethodParams::new(alpha)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, p.m_workers());
+        let cfg = RunConfig::new(Method::Chb, params, iters).with_comm_map();
+        let spec = RunSpec {
+            params: ParamSpec {
+                alpha: Some(alpha),
+                beta: 0.4,
+                epsilon: EpsilonSpec::Scaled { c: 0.1 },
+            },
+            iters,
+            record_comm_map: true,
+            lambda: p.lambda_global(),
+            ..RunSpec::new(task, "spec-equiv")
+        };
+        let name = task.name();
+
+        let mut ws = p.rust_workers();
+        let legacy = run_serial(&mut ws, &cfg, p.theta0());
+        let by_spec = Session::from_parts(spec.clone(), p.clone())
+            .unwrap()
+            .run()
+            .trace;
+        assert_traces_identical(&legacy, &by_spec, &format!("{name} serial"));
+        assert_eq!(by_spec.method, "CHB");
+
+        let legacy = run_threaded(p.rust_workers(), &cfg, p.theta0());
+        let by_spec = Session::from_parts(
+            RunSpec { engine: EngineKind::Threaded, ..spec.clone() },
+            p.clone(),
+        )
+        .unwrap()
+        .run()
+        .trace;
+        assert_traces_identical(&legacy, &by_spec, &format!("{name} threaded"));
+
+        let legacy = run_rayon(p.rust_workers(), &cfg, p.theta0());
+        let by_spec = Session::from_parts(
+            RunSpec {
+                engine: EngineKind::Rayon { threads: 0 },
+                ..spec.clone()
+            },
+            p.clone(),
+        )
+        .unwrap()
+        .run()
+        .trace;
+        assert_traces_identical(&legacy, &by_spec, &format!("{name} rayon"));
+
+        let mut ws = p.rust_workers();
+        let legacy =
+            run_async_detailed(&mut ws, &cfg, &degenerate_async(), p.theta0());
+        let report = Session::from_parts(
+            RunSpec {
+                engine: EngineKind::Async(degenerate_async()),
+                ..spec.clone()
+            },
+            p.clone(),
+        )
+        .unwrap()
+        .run();
+        assert_traces_identical(
+            &legacy.trace,
+            &report.trace,
+            &format!("{name} async"),
+        );
+        assert_eq!(report.trace.method, "CHB-async");
+        let summary = report.async_summary.expect("async bookkeeping");
+        for i in 0..summary.agg_grad.len() {
+            assert_eq!(
+                summary.agg_grad[i].to_bits(),
+                legacy.agg_grad[i].to_bits(),
+                "{name} async agg_grad[{i}]"
+            );
+        }
+    }
+}
+
+/// Sampling + drops + stop rule through the spec path: the remaining
+/// RunConfig axes match the hand-assembled run exactly.
+#[test]
+fn spec_covers_sampling_drops_and_stop_rules() {
+    let p = problem_for(TaskKind::LinReg);
+    let alpha = 0.5 / p.l_global;
+    let f_star = p.f_star().unwrap();
+    let part = Participation::UniformSample { frac: 0.6, seed: 0xFEED };
+    let params = MethodParams::new(alpha)
+        .with_beta(0.3)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 400)
+        .with_comm_map()
+        .with_participation(part)
+        .with_drops(0.1, 0xD20)
+        .with_stop(chb_fed::coordinator::StopRule::ObjErrBelow {
+            f_star,
+            tol: 1e-7,
+        });
+    let mut ws = p.rust_workers();
+    let legacy = run_serial(&mut ws, &cfg, p.theta0());
+    let spec = RunSpec {
+        params: ParamSpec {
+            alpha: Some(alpha),
+            beta: 0.3,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        iters: 400,
+        participation: part,
+        drops: DropSpec { prob: 0.1, seed: 0xD20 },
+        stop: StopSpec::ObjErr { tol: 1e-7, f_star: Some(f_star) },
+        record_comm_map: true,
+        ..RunSpec::new(TaskKind::LinReg, "spec-equiv")
+    };
+    let by_spec = Session::from_parts(spec, p.clone()).unwrap().run().trace;
+    assert_traces_identical(&legacy, &by_spec, "sampling+drops+stop");
+}
+
+/// A stop rule with `f_star: None` resolves against the problem's
+/// high-accuracy minimizer — same trace as passing it explicitly.
+#[test]
+fn stop_rule_f_star_resolves_from_the_problem() {
+    let p = problem_for(TaskKind::LinReg);
+    let f_star = p.f_star().unwrap();
+    let base = RunSpec {
+        iters: 2_000,
+        stop: StopSpec::ObjErr { tol: 1e-8, f_star: None },
+        ..RunSpec::new(TaskKind::LinReg, "spec-equiv")
+    };
+    let auto =
+        Session::from_parts(base.clone(), p.clone()).unwrap().run().trace;
+    let explicit = Session::from_parts(
+        RunSpec {
+            stop: StopSpec::ObjErr { tol: 1e-8, f_star: Some(f_star) },
+            ..base
+        },
+        p.clone(),
+    )
+    .unwrap()
+    .run()
+    .trace;
+    assert!(auto.iterations() < 2_000, "stop rule never fired");
+    assert_traces_identical(&auto, &explicit, "resolved f*");
+}
+
+fn random_spec(g: &mut prop::Gen) -> RunSpec {
+    let seed_cap = 1u64 << 40; // well inside the 2^53-exact range
+    let seed = |g: &mut prop::Gen| g.usize_in(0..=seed_cap as usize) as u64;
+    let task = *g.choose(&[
+        TaskKind::LinReg,
+        TaskKind::LogReg,
+        TaskKind::Lasso,
+        TaskKind::Nn,
+    ]);
+    let method = *g.choose(&[Method::Chb, Method::Hb, Method::Lag, Method::Gd]);
+    let engine = match g.usize_in(0..=3) {
+        0 => EngineKind::Serial,
+        1 => EngineKind::Threaded,
+        2 => EngineKind::Rayon { threads: g.usize_in(0..=8) },
+        _ => EngineKind::Async(AsyncConfig {
+            compute: if g.bool() {
+                ComputeModel::Uniform { us: g.f64_in(1.0, 5_000.0) }
+            } else {
+                ComputeModel::Pareto {
+                    scale_us: g.f64_in(1.0, 5_000.0),
+                    shape: g.f64_in(0.5, 4.0),
+                    seed: seed(g),
+                }
+            },
+            latency: LatencyModel {
+                fixed_us: g.f64_in(0.0, 1_000.0),
+                per_kib_us: g.f64_in(0.0, 64.0),
+            },
+            max_staleness: if g.bool() {
+                Some(g.usize_in(0..=64))
+            } else {
+                None
+            },
+        }),
+    };
+    RunSpec {
+        label: if g.bool() {
+            Some(format!("label-{}", g.usize_in(0..=9_999)))
+        } else {
+            None
+        },
+        lambda: g.f64_in(0.0, 1.0),
+        method,
+        params: ParamSpec {
+            alpha: if g.bool() { Some(g.f64_in(1e-6, 2.0)) } else { None },
+            beta: g.f64_in(0.0, 1.0),
+            epsilon: if g.bool() {
+                EpsilonSpec::Scaled { c: g.f64_in(0.0, 10.0) }
+            } else {
+                EpsilonSpec::Absolute { eps: g.f64_in(0.0, 10.0) }
+            },
+        },
+        censor: match g.usize_in(0..=5) {
+            0 => CensorSpec::MethodDefault,
+            1 => CensorSpec::Never,
+            2 => CensorSpec::Absolute { tau: g.f64_in(0.0, 100.0) },
+            3 => CensorSpec::Periodic { period: g.usize_in(0..=16) },
+            4 => CensorSpec::Decaying {
+                tau0: g.f64_in(0.0, 100.0),
+                rho: g.f64_in(0.01, 1.0),
+            },
+            _ => CensorSpec::VarianceScaled,
+        },
+        engine,
+        participation: match g.usize_in(0..=2) {
+            0 => Participation::Full,
+            1 => Participation::UniformSample {
+                frac: g.f64_in(0.01, 1.0),
+                seed: seed(g),
+            },
+            _ => Participation::Straggler {
+                timeout: g.f64_in(0.0, 4.0),
+                seed: seed(g),
+            },
+        },
+        batch: match g.usize_in(0..=2) {
+            0 => BatchSchedule::Full,
+            1 => BatchSchedule::Minibatch {
+                size: g.usize_in(1..=256),
+                seed: seed(g),
+                replace: g.bool(),
+            },
+            _ => BatchSchedule::GrowingBatch {
+                size0: g.usize_in(1..=64),
+                growth: g.f64_in(1.0, 2.0),
+                seed: seed(g),
+            },
+        },
+        codec: match g.usize_in(0..=2) {
+            0 => CodecSpec::None,
+            1 => CodecSpec::Quantizer { bits: g.usize_in(2..=32) as u32 },
+            _ => CodecSpec::TopK { k: g.usize_in(1..=512) },
+        },
+        iters: g.usize_in(1..=100_000),
+        stop: match g.usize_in(0..=2) {
+            0 => StopSpec::MaxIters,
+            1 => StopSpec::ObjErr {
+                tol: g.f64_in(1e-12, 1.0),
+                f_star: if g.bool() {
+                    Some(g.f64_signed(100.0))
+                } else {
+                    None
+                },
+            },
+            _ => StopSpec::AggGrad { tol: g.f64_in(1e-12, 1.0) },
+        },
+        drops: DropSpec { prob: g.f64_in(0.0, 1.0), seed: seed(g) },
+        record_comm_map: g.bool(),
+        ..RunSpec::new(task, "prop")
+    }
+}
+
+/// `spec → json → spec` is exact for arbitrary (even invalid) specs —
+/// serialization must not depend on validity.
+#[test]
+fn json_round_trip_is_exact() {
+    prop::check("spec json round trip", 300, |g| {
+        let spec = random_spec(g);
+        let text = spec.to_json_string();
+        let back = RunSpec::from_json_str(&text)
+            .map_err(|e| format!("decode failed: {e}\n{text}"))?;
+        chb_fed::assert_prop!(
+            back == spec,
+            "round trip changed the spec:\n{spec:?}\nvs\n{back:?}"
+        );
+        // and the serialized form is a fixed point
+        chb_fed::assert_prop!(
+            back.to_json_string() == text,
+            "second serialization differs"
+        );
+        Ok(())
+    });
+}
+
+/// The manifest format itself is pinned: the default spec must encode
+/// to exactly the checked-in fixture (key order, indentation, number
+/// formatting), and the fixture must decode back to the same spec.
+#[test]
+fn golden_manifest_fixture() {
+    let golden = include_str!("fixtures/manifest_golden.json");
+    let spec = RunSpec::new(TaskKind::LinReg, "synth");
+    assert_eq!(
+        spec.to_json_string() + "\n",
+        golden,
+        "manifest encoding drifted — if intentional, bump SPEC_VERSION \
+         and regenerate the fixture"
+    );
+    assert_eq!(RunSpec::from_json_str(golden).unwrap(), spec);
+}
+
+/// End to end: run from a spec against the registry, write the result
+/// directory, reread its manifest.json, rerun — bit-identical traces
+/// on all four tasks.  (The "synth"-named registry entries fall back
+/// to deterministic stand-ins, so no data files are needed.)
+#[test]
+fn manifest_replay_reproduces_the_trace() {
+    let tmp = std::env::temp_dir().join(format!(
+        "chb_spec_replay_{}",
+        std::process::id()
+    ));
+    let registry = Registry::new(&tmp.join("data"), &tmp.join("artifacts"));
+    for task in [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn] {
+        let spec = RunSpec {
+            iters: 8,
+            record_comm_map: true,
+            ..RunSpec::new(task, "synth")
+        };
+        let report = Session::from_spec(&spec, &registry).unwrap().run();
+        let dir = tmp.join("run").join(task.name());
+        std::fs::create_dir_all(&dir).unwrap();
+        report.write_artifacts(&dir, 0.0).unwrap();
+
+        let manifest =
+            std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let replayed_spec = RunSpec::from_json_str(&manifest).unwrap();
+        assert_eq!(replayed_spec, spec, "{}: manifest drift", task.name());
+        let replay =
+            Session::from_spec(&replayed_spec, &registry).unwrap().run();
+        assert_traces_identical(
+            &report.trace,
+            &replay.trace,
+            &format!("{} replay", task.name()),
+        );
+        // the emitted trace CSV exists under the documented name
+        assert!(dir.join(report.trace_filename()).exists());
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+/// The codec axis through the spec layer matches hand-attached
+/// compressors (uplink bits included).
+#[test]
+fn spec_codec_matches_hand_attached_compressor() {
+    use chb_fed::compress::TopK;
+    use std::sync::Arc;
+    let p = problem_for(TaskKind::LinReg);
+    let alpha = 1.0 / p.l_global;
+    let params = MethodParams::new(alpha)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 30);
+    let codec = Arc::new(TopK { k: 3 });
+    let mut ws: Vec<_> = p
+        .rust_workers()
+        .into_iter()
+        .map(|w| w.with_compressor(codec.clone()))
+        .collect();
+    let legacy = run_serial(&mut ws, &cfg, p.theta0());
+    let spec = RunSpec {
+        params: ParamSpec {
+            alpha: Some(alpha),
+            beta: 0.4,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        codec: CodecSpec::TopK { k: 3 },
+        iters: 30,
+        ..RunSpec::new(TaskKind::LinReg, "spec-equiv")
+    };
+    let by_spec = Session::from_parts(spec, p.clone()).unwrap().run().trace;
+    assert_traces_identical(&legacy, &by_spec, "top-k codec");
+}
