@@ -204,6 +204,131 @@ fn main() {
         ));
     }
 
+    // -- SIMD dispatch: detected backend vs forced scalar -----------------
+    // Same kernel, same inputs, only the dispatch table differs — the
+    // [avx2]/[neon] vs [scalar] row pairs are the SIMD speedup claim
+    // (bit-identical results, pinned by tests/simd_equivalence.rs).
+    {
+        use chb_fed::compress::{CodecScratch, Compressor, PackedInt};
+        use chb_fed::linalg::simd::{self, Backend};
+
+        let detected = simd::active();
+        let backends: Vec<Backend> = if detected == Backend::Scalar {
+            vec![Backend::Scalar]
+        } else {
+            vec![detected, Backend::Scalar]
+        };
+        let (n, d) = (768usize, 784usize);
+        let mut r = Xoshiro256::new(21);
+        let mut mx = Matrix::zeros(n, d);
+        for v in &mut mx.data {
+            *v = r.next_gaussian();
+        }
+        let theta = r.gaussian_vec(d);
+        let yv = r.gaussian_vec(n);
+        let mask = vec![1.0; n];
+        let mut resid = vec![0.0; n];
+        let mut grad = vec![0.0; d];
+        let xvec = r.gaussian_vec(d);
+        let sparse_idx: Vec<u32> =
+            (0..32u32).map(|j| j * (d as u32 / 32)).collect();
+        let sparse_val = r.gaussian_vec(32);
+        let mut fold = vec![0.0; d];
+        let delta = r.gaussian_vec(d);
+        let int8 = PackedInt { bits: 8 };
+        let mut scratch = CodecScratch::default();
+        let mut slot = Payload::default();
+        for backend in backends {
+            simd::set_active(backend);
+            let tag = backend.label();
+            all.push(micro.run(
+                &format!("fused_residual_grad {n}x{d} [{tag}]"),
+                |_| {
+                    grad.fill(0.0);
+                    black_box(mx.fused_residual_grad(
+                        black_box(&theta),
+                        &yv,
+                        &mut resid,
+                        &mut grad,
+                    ));
+                },
+            ));
+            all.push(micro.run(
+                &format!("fused_coeff_grad {n}x{d} [{tag}]"),
+                |_| {
+                    grad.fill(0.0);
+                    black_box(mx.fused_coeff_grad(
+                        black_box(&theta),
+                        &mask,
+                        |_, z| (z * z, z),
+                        &mut grad,
+                    ));
+                },
+            ));
+            all.push(micro.run(&format!("axpy fold d={d} [{tag}]"), |_| {
+                linalg::axpy(black_box(0.125), &xvec, &mut fold);
+            }));
+            all.push(micro.run(
+                &format!("axpy_sparse fold k=32 d={d} [{tag}]"),
+                |_| {
+                    linalg::axpy_sparse(
+                        black_box(0.125),
+                        &sparse_idx,
+                        &sparse_val,
+                        &mut fold,
+                    );
+                },
+            ));
+            all.push(micro.run(&format!("int8 pack d={d} [{tag}]"), |_| {
+                black_box(int8.compress_into(
+                    black_box(&delta),
+                    &mut scratch,
+                    &mut slot,
+                ));
+            }));
+            int8.compress_into(&delta, &mut scratch, &mut slot);
+            all.push(micro.run(&format!("int8 unpack d={d} [{tag}]"), |_| {
+                slot.fold_into(black_box(&mut fold));
+            }));
+        }
+        simd::set_active(detected);
+    }
+
+    // -- codec pack/unpack ladder, d = 784 --------------------------------
+    // One row pair per ladder rung (the wire-bits column is what the
+    // ladder ablation's bits-to-target divides by).
+    {
+        use chb_fed::compress::{
+            CodecScratch, Compressor, ErrorFeedback, NoCompression,
+            PackedFp16, PackedFp32, PackedInt,
+        };
+        let mut r = Xoshiro256::new(33);
+        let delta = r.gaussian_vec(784);
+        let mut y = vec![0.0; 784];
+        let codecs: [(&str, Box<dyn Compressor>); 5] = [
+            ("f64", Box::new(NoCompression)),
+            ("fp32", Box::new(PackedFp32)),
+            ("fp16", Box::new(PackedFp16)),
+            ("int8", Box::new(PackedInt { bits: 8 })),
+            ("int8-ef", Box::new(ErrorFeedback(PackedInt { bits: 8 }))),
+        ];
+        for (label, codec) in &codecs {
+            let mut scratch = CodecScratch::default();
+            let mut slot = Payload::default();
+            all.push(micro.run(&format!("codec pack {label} d=784"), |_| {
+                black_box(codec.compress_into(
+                    black_box(&delta),
+                    &mut scratch,
+                    &mut slot,
+                ));
+            }));
+            codec.compress_into(&delta, &mut scratch, &mut slot);
+            all.push(micro.run(&format!("codec unpack {label} d=784"), |_| {
+                slot.fold_into(black_box(&mut y));
+            }));
+        }
+    }
+
     // -- server fold (aggregate + update), d = 784: dense vs sparse -------
     {
         let d = 784;

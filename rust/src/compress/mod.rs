@@ -6,8 +6,9 @@
 //! communications."
 //!
 //! A [`Compressor`] encodes the uplink delta δ∇ into a [`Payload`]
-//! (dense values, or a sparse index/value pair) plus a simulated wire
-//! size.  The engine keeps eq. (5) consistent by having the worker
+//! (dense values, a sparse index/value pair, or a bit-packed
+//! quantized buffer — see [`packed`]) plus a simulated wire size.
+//! The engine keeps eq. (5) consistent by having the worker
 //! advance its θ̂ bookkeeping with the *decoded* payload — the server
 //! and worker always agree on Σ transmitted deltas, so the aggregate
 //! still telescopes exactly (the compression error shows up as
@@ -22,14 +23,21 @@
 use crate::linalg;
 use crate::net::{dense_delta_bits, sparse_delta_bits};
 
+pub mod packed;
+
+pub use packed::{
+    ErrorFeedback, PackScheme, PackedBuf, PackedFp16, PackedFp32, PackedInt,
+};
+
 /// An uplink delta as the server folds it: either every coordinate
 /// (dense) or only the stored ones (sparse index/value pairs).
 ///
 /// The load-bearing invariant (ARCHITECTURE.md): folding a payload
 /// into a vector adds exactly the decoded delta — `Dense` via
-/// [`linalg::axpy`], `Sparse` via [`linalg::axpy_sparse`] — so
-/// Σ folded payloads ≡ Σ worker-side decoded deltas, bit for bit on
-/// every stored coordinate.
+/// [`linalg::axpy`], `Sparse` via [`linalg::axpy_sparse`], `Packed`
+/// via [`PackedBuf::decode_axpy`] — so Σ folded payloads ≡ Σ
+/// worker-side decoded deltas, bit for bit on every stored
+/// coordinate.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// all `d` coordinates, in order (the uncompressed / quantized form)
@@ -42,6 +50,9 @@ pub enum Payload {
         /// stored coordinate values (parallel to `idx`)
         val: Vec<f64>,
     },
+    /// all `d` coordinates bit-packed into `u64` words (fp32 / fp16 /
+    /// n-bit integer fields), decoded on the fly during the fold
+    Packed(PackedBuf),
 }
 
 impl Default for Payload {
@@ -58,6 +69,7 @@ impl Payload {
         match self {
             Payload::Dense(v) => v.len(),
             Payload::Sparse { val, .. } => val.len(),
+            Payload::Packed(p) => p.len as usize,
         }
     }
 
@@ -73,17 +85,25 @@ impl Payload {
             Payload::Sparse { idx, .. } => {
                 idx.iter().all(|&i| (i as usize) < dim)
             }
+            Payload::Packed(p) => p.len as usize == dim,
         }
     }
 
     /// y ← y + payload (the server/engine fold primitive): O(d) dense,
-    /// O(nnz) sparse.
+    /// O(nnz) sparse, O(d) with in-flight decode for packed.
     pub fn fold_into(&self, y: &mut [f64]) {
+        self.axpy_into(1.0, y)
+    }
+
+    /// y ← y + a·payload — the scaled fold ([`Payload::fold_into`]
+    /// with a = 1; error feedback subtracts the decode with a = −1).
+    pub fn axpy_into(&self, a: f64, y: &mut [f64]) {
         match self {
-            Payload::Dense(v) => linalg::axpy(1.0, v, y),
+            Payload::Dense(v) => linalg::axpy(a, v, y),
             Payload::Sparse { idx, val } => {
-                linalg::axpy_sparse(1.0, idx, val, y)
+                linalg::axpy_sparse(a, idx, val, y)
             }
+            Payload::Packed(p) => p.decode_axpy(a, y),
         }
     }
 
@@ -95,10 +115,10 @@ impl Payload {
         out
     }
 
-    /// Convert a sparse payload to its dense decode in place (`dim`
-    /// coordinates); dense payloads are left untouched.
+    /// Convert a sparse or packed payload to its dense decode in place
+    /// (`dim` coordinates); dense payloads are left untouched.
     pub fn densify(&mut self, dim: usize) {
-        if let Payload::Sparse { .. } = self {
+        if !matches!(self, Payload::Dense(_)) {
             *self = Payload::Dense(self.to_dense(dim));
         }
     }
@@ -145,16 +165,50 @@ impl Payload {
             _ => unreachable!("just ensured the dense variant"),
         }
     }
+
+    /// Ensure the packed variant and hand out its buffer for in-place
+    /// encoding (the encoders reset it themselves, preserving word
+    /// capacity).
+    fn packed_buf(&mut self) -> &mut PackedBuf {
+        if !matches!(self, Payload::Packed(_)) {
+            *self = Payload::Packed(PackedBuf::empty());
+        }
+        match self {
+            Payload::Packed(p) => p,
+            _ => unreachable!("just ensured the packed variant"),
+        }
+    }
 }
 
 /// Reusable per-worker codec workspace: scratch a codec may need
 /// beyond the output payload itself (top-k keeps its magnitude
-/// argsort here), owned by the caller so repeated compressions
-/// allocate nothing.
+/// argsort here, the packed quantizer its level buffer), owned by the
+/// caller so repeated compressions allocate nothing.
+///
+/// This is also where per-worker codec *state* lives: the codec
+/// object itself is one `Arc<dyn Compressor>` shared across workers,
+/// so anything that must differ per worker — the [`ErrorFeedback`]
+/// residual above all — belongs here, in the scratch each `Worker`
+/// owns.
 #[derive(Debug, Default)]
 pub struct CodecScratch {
     /// index permutation buffer (top-k magnitude argsort)
     order: Vec<u32>,
+    /// error-feedback working buffer: delta + residual
+    corrected: Vec<f64>,
+    /// error-feedback carry: quantization error awaiting the next round
+    residual: Vec<f64>,
+    /// quantization level buffer ([`PackedInt`]'s pre-pack stage)
+    quant: Vec<f64>,
+}
+
+impl CodecScratch {
+    /// The current error-feedback residual (empty until an
+    /// [`ErrorFeedback`] codec has run) — diagnostics and the
+    /// telescope property test.
+    pub fn residual(&self) -> &[f64] {
+        &self.residual
+    }
 }
 
 /// A compressed uplink payload (the allocating convenience form; the
@@ -228,9 +282,13 @@ impl Compressor for NoCompression {
 }
 
 /// Uniform symmetric quantizer: `bits`-bit signed levels scaled by
-/// max|δ|, plus one f32 scale on the wire.
+/// max|δ|, plus one f32 scale on the wire.  Emits a *dense f64*
+/// payload — the historical reference codec; [`PackedInt`] is the
+/// bit-packed successor with the same level grid.
 pub struct UniformQuantizer {
-    /// bits per coordinate (2..=32)
+    /// bits per coordinate (2..=32; range-checked by `RunSpec`
+    /// validation — `SpecError::QuantBits` — before any round runs,
+    /// so the hot path only debug-asserts)
     pub bits: u32,
 }
 
@@ -238,23 +296,34 @@ impl Compressor for UniformQuantizer {
     fn compress_into(
         &self,
         delta: &[f64],
-        _scratch: &mut CodecScratch,
+        scratch: &mut CodecScratch,
         out: &mut Payload,
     ) -> u64 {
-        assert!((2..=32).contains(&self.bits), "need 2..=32 bits");
-        let buf = out.dense_buf();
+        debug_assert!(
+            (2..=32).contains(&self.bits),
+            "validated at the spec layer"
+        );
         let maxabs = delta.iter().fold(0.0f64, |m, v| m.max(v.abs()));
         if maxabs == 0.0 {
+            let buf = out.dense_buf();
             buf.resize(delta.len(), 0.0);
             return 32;
         }
         let levels = ((1u64 << (self.bits - 1)) - 1) as f64;
         let scale = maxabs / levels;
-        buf.extend(
-            delta
-                .iter()
-                .map(|v| (v / scale).round().clamp(-levels, levels) * scale),
+        // quantize through the shared scratch so the dequantized copy
+        // is built without touching the allocator in steady state
+        let q = &mut scratch.quant;
+        q.clear();
+        q.resize(delta.len(), 0.0);
+        linalg::simd::kernels().quantize_clamped(
+            delta,
+            scale.recip(),
+            levels,
+            q,
         );
+        let buf = out.dense_buf();
+        buf.extend(q.iter().map(|&lv| lv * scale));
         32 + u64::from(self.bits) * delta.len() as u64
     }
 

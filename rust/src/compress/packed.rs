@@ -1,0 +1,661 @@
+//! Bit-packed quantized uplink codecs: fp32, fp16, and n-bit uniform
+//! integer fields packed into `u64` words, with an optional
+//! per-worker error-feedback wrapper.
+//!
+//! Wire format ([`PackedBuf`]): coordinate `j` occupies the
+//! `width`-bit field starting at bit `j·width`, little-endian within
+//! and across words.  The charged wire size is exactly the packed
+//! field bits plus the codec's header ([`crate::net::packed_delta_bits`])
+//! — not 64 bits per coordinate — so the bits-to-accuracy ledger
+//! reflects what packing actually buys.  Decoding happens on the fly
+//! inside [`super::Payload::fold_into`] in O(nnz) = O(d): no dense
+//! f64 materialization on either side of the wire.
+//!
+//! Like every codec here, the *decoded* payload is what both the
+//! server fold and the worker's θ̂ bookkeeping consume, so eq. (5)'s
+//! telescoping aggregate stays exact and quantization error surfaces
+//! as gradient staleness — or, with [`ErrorFeedback`], as a residual
+//! carried into the next round instead of lost.
+//!
+//! Integer schemes keep the dequantization scale as f64 in the
+//! simulation while charging a 32-bit (f32) header on the wire — the
+//! same convention [`super::UniformQuantizer`] established.
+
+use crate::linalg::{self, simd};
+use crate::net::packed_delta_bits;
+
+use super::{CodecScratch, Compressor, Payload};
+
+/// Per-coordinate encoding of a [`PackedBuf`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackScheme {
+    /// IEEE 754 binary32 bit patterns — exact for f32-representable
+    /// values, 32 bits/coordinate, no header
+    Fp32,
+    /// IEEE 754 binary16 (half precision), 16 bits/coordinate
+    Fp16,
+    /// two's-complement uniform levels q ∈ [−(2^(bits−1)−1),
+    /// 2^(bits−1)−1], decoded as q·scale; 32-bit scale header
+    Int {
+        /// field width in bits (2..=32)
+        bits: u32,
+    },
+}
+
+impl PackScheme {
+    /// Wire bits per coordinate.
+    pub fn width(self) -> u32 {
+        match self {
+            PackScheme::Fp32 => 32,
+            PackScheme::Fp16 => 16,
+            PackScheme::Int { bits } => bits,
+        }
+    }
+
+    /// Header bits (the f32 scale integer payloads carry).
+    pub fn header_bits(self) -> u64 {
+        match self {
+            PackScheme::Int { .. } => 32,
+            _ => 0,
+        }
+    }
+}
+
+/// A bit-packed uplink delta: `len` fields of `scheme.width()` bits
+/// each, packed into `words`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedBuf {
+    /// per-coordinate encoding
+    pub scheme: PackScheme,
+    /// number of coordinates (the full dimension d)
+    pub len: u32,
+    /// dequantization scale (integer schemes; 1.0 for fp schemes)
+    pub scale: f64,
+    /// ceil(len·width/64) packed words
+    pub words: Vec<u64>,
+}
+
+fn words_for(len: usize, width: u32) -> usize {
+    ((len as u64 * u64::from(width) + 63) / 64) as usize
+}
+
+/// Read a `width`-bit field at absolute bit offset `bit`.
+#[inline]
+fn read_bits(words: &[u64], bit: usize, width: u32) -> u64 {
+    let w = bit / 64;
+    let off = (bit % 64) as u32;
+    let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+    let lo = words[w] >> off;
+    let got = 64 - off;
+    let v = if got >= width { lo } else { lo | (words[w + 1] << got) };
+    v & mask
+}
+
+/// Write a `width`-bit field (value pre-masked to `width`) at absolute
+/// bit offset `bit`; `words` must be zeroed beforehand.
+#[inline]
+fn write_bits(words: &mut [u64], bit: usize, width: u32, v: u64) {
+    let w = bit / 64;
+    let off = (bit % 64) as u32;
+    words[w] |= v << off;
+    let got = 64 - off;
+    if got < width {
+        words[w + 1] |= v >> got;
+    }
+}
+
+#[cfg(target_endian = "little")]
+fn words_u32(words: &[u64], len: usize) -> &[u32] {
+    debug_assert!(len <= words.len() * 2);
+    // SAFETY: u64 alignment covers u32; `len` u32s fit inside the
+    // words allocation (checked above); on little-endian targets the
+    // u32 view is exactly the low/high word halves in field order
+    unsafe { core::slice::from_raw_parts(words.as_ptr() as *const u32, len) }
+}
+
+#[cfg(target_endian = "little")]
+fn words_u32_mut(words: &mut [u64], len: usize) -> &mut [u32] {
+    debug_assert!(len <= words.len() * 2);
+    // SAFETY: as above, and the borrow is exclusive
+    unsafe {
+        core::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u32, len)
+    }
+}
+
+impl PackedBuf {
+    /// An empty buffer (what [`super::Payload::default`]-style slots
+    /// start from before the first encode).
+    pub fn empty() -> PackedBuf {
+        PackedBuf {
+            scheme: PackScheme::Fp32,
+            len: 0,
+            scale: 1.0,
+            words: Vec::new(),
+        }
+    }
+
+    fn reset(&mut self, scheme: PackScheme, len: usize) {
+        debug_assert!(len <= u32::MAX as usize, "packed coordinates are u32");
+        self.scheme = scheme;
+        self.len = len as u32;
+        self.scale = 1.0;
+        let nw = words_for(len, scheme.width());
+        self.words.clear();
+        self.words.resize(nw, 0);
+    }
+
+    /// Encode `src` as f32 bit patterns (SIMD-dispatched narrowing).
+    pub fn encode_fp32(&mut self, src: &[f64]) {
+        self.reset(PackScheme::Fp32, src.len());
+        #[cfg(target_endian = "little")]
+        {
+            let dst = words_u32_mut(&mut self.words, src.len());
+            simd::kernels().cvt_f64_to_f32_bits(src, dst);
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            for (j, &v) in src.iter().enumerate() {
+                let b = u64::from((v as f32).to_bits());
+                self.words[j / 2] |= b << ((j % 2) * 32);
+            }
+        }
+    }
+
+    /// Encode `src` as IEEE half-precision fields.
+    pub fn encode_fp16(&mut self, src: &[f64]) {
+        self.reset(PackScheme::Fp16, src.len());
+        for (j, &v) in src.iter().enumerate() {
+            let h = u64::from(f16_bits_from_f64(v));
+            self.words[j / 4] |= h << ((j % 4) * 16);
+        }
+    }
+
+    /// Encode `src` as `bits`-wide uniform levels scaled by max|src|;
+    /// `qbuf` is the caller's scratch for the quantized levels (the
+    /// SIMD-dispatched front half of the pack).
+    pub fn encode_int(&mut self, src: &[f64], bits: u32, qbuf: &mut Vec<f64>) {
+        debug_assert!((2..=32).contains(&bits), "validated at the spec layer");
+        self.reset(PackScheme::Int { bits }, src.len());
+        self.scale = 0.0;
+        // NaN-tolerant max: f64::max ignores NaN, so a diverged
+        // coordinate can't poison the scale
+        let maxabs = src.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if maxabs == 0.0 {
+            return; // all-zero: level 0 everywhere, scale 0
+        }
+        let levels = ((1u64 << (bits - 1)) - 1) as f64;
+        let scale = maxabs / levels;
+        self.scale = scale;
+        qbuf.clear();
+        qbuf.resize(src.len(), 0.0);
+        simd::kernels().quantize_clamped(src, scale.recip(), levels, qbuf);
+        let mask =
+            if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        for (j, &q) in qbuf.iter().enumerate() {
+            // NaN casts to 0 — the level a diverged coordinate packs as
+            let t = (q as i64) as u64 & mask;
+            write_bits(&mut self.words, j * bits as usize, bits, t);
+        }
+    }
+
+    /// y ← y + a·decode(self), decoding each field on the fly — the
+    /// O(nnz) fold primitive [`super::Payload::fold_into`] dispatches
+    /// to.  Both wire ends call exactly this, so server and worker
+    /// bookkeeping agree bit for bit.
+    pub fn decode_axpy(&self, a: f64, y: &mut [f64]) {
+        let len = self.len as usize;
+        debug_assert!(y.len() >= len);
+        match self.scheme {
+            PackScheme::Fp32 => {
+                #[cfg(target_endian = "little")]
+                {
+                    let bits = words_u32(&self.words, len);
+                    simd::kernels().cvt_f32_bits_axpy(a, bits, &mut y[..len]);
+                }
+                #[cfg(not(target_endian = "little"))]
+                {
+                    for j in 0..len {
+                        let b = (self.words[j / 2] >> ((j % 2) * 32)) as u32;
+                        y[j] += a * f64::from(f32::from_bits(b));
+                    }
+                }
+            }
+            PackScheme::Fp16 => {
+                for (j, v) in y.iter_mut().enumerate().take(len) {
+                    let h = (self.words[j / 4] >> ((j % 4) * 16)) as u16;
+                    *v += a * f64_from_f16_bits(h);
+                }
+            }
+            PackScheme::Int { bits } => {
+                let shift = 64 - bits;
+                for (j, v) in y.iter_mut().enumerate().take(len) {
+                    let raw = read_bits(&self.words, j * bits as usize, bits);
+                    let q = ((raw << shift) as i64) >> shift;
+                    *v += a * (q as f64 * self.scale);
+                }
+            }
+        }
+    }
+}
+
+/// Lossy-cast codec: every coordinate as an IEEE binary32 bit pattern
+/// (32 bits on the wire — half of f64, exact whenever the delta is
+/// f32-representable).
+pub struct PackedFp32;
+
+impl Compressor for PackedFp32 {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
+        out.packed_buf().encode_fp32(delta);
+        packed_delta_bits(32, 0, delta.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+}
+
+/// Half-precision codec: every coordinate as an IEEE binary16 field
+/// (16 bits on the wire, ~3 decimal digits).
+pub struct PackedFp16;
+
+impl Compressor for PackedFp16 {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        _scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
+        out.packed_buf().encode_fp16(delta);
+        packed_delta_bits(16, 0, delta.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+}
+
+/// n-bit uniform quantizer emitting genuinely bit-packed fields
+/// (`bits` per coordinate + 32-bit scale header), the packed
+/// successor to the dense-f64 [`super::UniformQuantizer`].
+/// `PackedInt { bits: 8 }` is the paper-ladder "int8" rung.
+pub struct PackedInt {
+    /// field width in bits (2..=32; range-checked by `RunSpec`
+    /// validation before any round runs)
+    pub bits: u32,
+}
+
+impl Compressor for PackedInt {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
+        out.packed_buf().encode_int(delta, self.bits, &mut scratch.quant);
+        packed_delta_bits(self.bits, 32, delta.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "int"
+    }
+}
+
+/// Error-feedback wrapper: compresses `delta + residual` through the
+/// inner codec and carries the quantization remainder into the next
+/// round, so codec error accumulates in a local buffer instead of
+/// being forgotten.
+///
+/// The residual lives in the caller's [`CodecScratch`] — per-worker
+/// state, matching the per-worker `Arc`-shared-codec split the engine
+/// uses.  Telescope invariant (property-tested):
+/// Σ decoded + final residual ≡ Σ true deltas, up to f64 rounding of
+/// the residual update.
+pub struct ErrorFeedback<C>(
+    /// the inner (lossy) codec
+    pub C,
+);
+
+impl<C: Compressor> Compressor for ErrorFeedback<C> {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
+        // corrected = delta + residual (residual starts at zero on the
+        // first round or a dimension change); take the buffer out so
+        // the inner codec can borrow the scratch
+        let mut corrected = std::mem::take(&mut scratch.corrected);
+        corrected.clear();
+        corrected.extend_from_slice(delta);
+        if scratch.residual.len() == delta.len() {
+            linalg::axpy(1.0, &scratch.residual, &mut corrected);
+        } else {
+            scratch.residual.clear();
+            scratch.residual.resize(delta.len(), 0.0);
+        }
+        let bits = self.0.compress_into(&corrected, scratch, out);
+        // residual ← corrected − decoded
+        scratch.residual.copy_from_slice(&corrected);
+        out.axpy_into(-1.0, &mut scratch.residual);
+        scratch.corrected = corrected;
+        bits
+    }
+
+    fn name(&self) -> &'static str {
+        "error-feedback"
+    }
+}
+
+/// f64 → IEEE binary16 bits, via f32 with round-to-nearest-even at
+/// each narrowing (the standard double-rounding-tolerant path; a
+/// lossy codec doesn't chase the composed-rounding ulp).
+pub fn f16_bits_from_f64(v: f64) -> u16 {
+    f16_bits_from_f32(v as f32)
+}
+
+/// IEEE binary16 bits → f64 (exact: every half value is a double).
+pub fn f64_from_f16_bits(h: u16) -> f64 {
+    f64::from(f32_from_f16_bits(h))
+}
+
+fn f16_bits_from_f32(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = x & 0x8000_0000;
+    let exp = x & 0x7F80_0000;
+    let man = x & 0x007F_FFFF;
+    if exp == 0x7F80_0000 {
+        // Inf / NaN: keep the top payload bits, force quiet
+        let nan_bit = if man == 0 { 0 } else { 0x0200 };
+        return ((sign >> 16) | 0x7C00 | nan_bit | (man >> 13)) as u16;
+    }
+    let half_sign = sign >> 16;
+    let half_exp = ((exp >> 23) as i32) - 127 + 15;
+    if half_exp >= 0x1F {
+        return (half_sign | 0x7C00) as u16; // overflow → ±inf
+    }
+    if half_exp <= 0 {
+        if 14 - half_exp > 24 {
+            return half_sign as u16; // underflows past half subnormals
+        }
+        // subnormal half: shift in the implicit bit, round to nearest
+        // even on the truncated tail
+        let man = man | 0x0080_0000;
+        let mut half_man = man >> (14 - half_exp);
+        let round_bit = 1 << (13 - half_exp);
+        if (man & round_bit) != 0 && (man & (3 * round_bit - 1)) != 0 {
+            half_man += 1;
+        }
+        return (half_sign | half_man) as u16;
+    }
+    let half_exp = (half_exp as u32) << 10;
+    let half_man = man >> 13;
+    let round_bit = 0x0000_1000;
+    if (man & round_bit) != 0 && (man & (3 * round_bit - 1)) != 0 {
+        // round up; a mantissa carry correctly bumps the exponent
+        // (and can legitimately round up to infinity)
+        ((half_sign | half_exp | half_man) + 1) as u16
+    } else {
+        (half_sign | half_exp | half_man) as u16
+    }
+}
+
+fn f32_from_f16_bits(i: u16) -> f32 {
+    if i & 0x7FFF == 0 {
+        return f32::from_bits(u32::from(i) << 16); // ±0
+    }
+    let half_sign = u32::from(i & 0x8000);
+    let half_exp = u32::from(i & 0x7C00);
+    let half_man = u32::from(i & 0x03FF);
+    if half_exp == 0x7C00 {
+        if half_man == 0 {
+            return f32::from_bits((half_sign << 16) | 0x7F80_0000); // ±inf
+        }
+        // NaN: set the quiet bit, keep the payload
+        return f32::from_bits(
+            (half_sign << 16) | 0x7FC0_0000 | (half_man << 13),
+        );
+    }
+    let sign = half_sign << 16;
+    if half_exp == 0 {
+        // subnormal half → normalized f32
+        let e = (half_man as u16).leading_zeros() - 6;
+        let exp = (127 - 15 - e) << 23;
+        let man = (half_man << (14 + e)) & 0x007F_FFFF;
+        return f32::from_bits(sign | exp | man);
+    }
+    let unbiased_exp = ((half_exp >> 10) as i32) - 15;
+    let exp = ((unbiased_exp + 127) as u32) << 23;
+    f32::from_bits(sign | exp | (half_man << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::relative_error;
+    use super::*;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::rng::Xoshiro256::new(seed);
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn fp32_roundtrip_is_exact_for_f32_values() {
+        let v: Vec<f64> =
+            gauss(97, 0xF32).iter().map(|&x| f64::from(x as f32)).collect();
+        let out = PackedFp32.compress(&v);
+        assert_eq!(out.bits, 32 * 97);
+        let dec = out.decoded.to_dense(97);
+        for (a, b) in v.iter().zip(&dec) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fp16_roundtrip_is_exact_for_half_values() {
+        // every decodable half bit pattern (skipping NaNs) must
+        // re-encode to itself
+        for h in (0u16..=0xFFFF).step_by(7) {
+            if h & 0x7C00 == 0x7C00 && h & 0x03FF != 0 {
+                continue; // NaN patterns don't round-trip bitwise
+            }
+            let v = f64_from_f16_bits(h);
+            let back = f16_bits_from_f64(v);
+            // ±0 collapse is the only tolerated alias
+            assert_eq!(back, h, "h={h:#06x} v={v}");
+        }
+        let v: Vec<f64> = vec![1.0, -2.5, 0.09375, 65504.0, -0.25];
+        let out = PackedFp16.compress(&v);
+        assert_eq!(out.bits, 16 * 5);
+        assert_eq!(out.decoded.to_dense(5), v);
+    }
+
+    #[test]
+    fn fp16_saturates_and_rounds() {
+        assert_eq!(f64_from_f16_bits(f16_bits_from_f64(1e6)), f64::INFINITY);
+        assert_eq!(
+            f64_from_f16_bits(f16_bits_from_f64(-1e6)),
+            f64::NEG_INFINITY
+        );
+        // 2^-25 is the 0 / 2^-24 tie → even (0)
+        assert_eq!(f64_from_f16_bits(f16_bits_from_f64(2.0f64.powi(-25))), 0.0);
+        assert_eq!(
+            f64_from_f16_bits(f16_bits_from_f64(2.0f64.powi(-24))),
+            2.0f64.powi(-24)
+        );
+        assert!(f64_from_f16_bits(f16_bits_from_f64(f64::NAN)).is_nan());
+    }
+
+    #[test]
+    fn int_pack_respects_quantization_bound() {
+        for bits in [2u32, 4, 8, 13, 16, 32] {
+            let v = gauss(131, 0x1A7 + u64::from(bits));
+            let c = PackedInt { bits };
+            let out = c.compress(&v);
+            assert_eq!(out.bits, 32 + u64::from(bits) * 131);
+            let dec = out.decoded.to_dense(131);
+            let maxabs = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+            let levels = ((1u64 << (bits - 1)) - 1) as f64;
+            let bound = maxabs / levels; // one full level, reciprocal-safe
+            for (a, b) in v.iter().zip(&dec) {
+                assert!(
+                    (a - b).abs() <= bound * (1.0 + 1e-12),
+                    "bits={bits} a={a} b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int_pack_handles_zero_and_nan() {
+        let z = PackedInt { bits: 8 }.compress(&[0.0; 9]);
+        assert_eq!(z.decoded.to_dense(9), vec![0.0; 9]);
+        // NaN coordinate packs as level 0 without panicking, and the
+        // finite coordinates survive
+        let out = PackedInt { bits: 8 }.compress(&[1.0, f64::NAN, -1.0]);
+        let dec = out.decoded.to_dense(3);
+        assert!((dec[0] - 1.0).abs() < 1e-2);
+        assert_eq!(dec[1], 0.0);
+        assert!((dec[2] + 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn packed_error_shrinks_with_width() {
+        let v = gauss(257, 0xE44);
+        let e8 = relative_error(&PackedInt { bits: 8 }, &v);
+        let e16 = relative_error(&PackedFp16, &v);
+        let e32 = relative_error(&PackedFp32, &v);
+        assert!(e8 > e16 && e16 > e32, "{e8} {e16} {e32}");
+        assert!(e32 < 1e-7);
+    }
+
+    #[test]
+    fn odd_widths_cross_word_boundaries_correctly() {
+        // width 13 guarantees fields straddling u64 boundaries
+        let mut words = vec![0u64; words_for(40, 13)];
+        for j in 0..40 {
+            write_bits(&mut words, j * 13, 13, (j as u64 * 211) & 0x1FFF);
+        }
+        for j in 0..40 {
+            let want = (j as u64 * 211) & 0x1FFF;
+            assert_eq!(read_bits(&words, j * 13, 13), want);
+        }
+    }
+
+    #[test]
+    fn compress_into_reuses_packed_buffers() {
+        let mut scratch = CodecScratch::default();
+        let mut out = Payload::default();
+        let v = gauss(64, 0xBEEF);
+        let c = PackedInt { bits: 8 };
+        c.compress_into(&v, &mut scratch, &mut out);
+        let cap = match &out {
+            Payload::Packed(p) => p.words.capacity(),
+            _ => panic!("packed codec must emit Packed"),
+        };
+        for _ in 0..5 {
+            c.compress_into(&v, &mut scratch, &mut out);
+        }
+        match &out {
+            Payload::Packed(p) => {
+                assert_eq!(p.words.capacity(), cap);
+                assert_eq!(p.len, 64);
+            }
+            _ => panic!("packed codec must emit Packed"),
+        }
+    }
+
+    #[test]
+    fn dense_decoded_pins_packed_codecs() {
+        // ARCHITECTURE.md invariant 3 extended: densifying a packed
+        // payload changes the representation, never the decoded values
+        let v = gauss(50, 0xD15C);
+        let cases: Vec<Box<dyn Compressor>> = vec![
+            Box::new(PackedFp32),
+            Box::new(PackedFp16),
+            Box::new(PackedInt { bits: 8 }),
+        ];
+        for c in &cases {
+            let packed = c.compress(&v);
+            let mut densified = packed.decoded.clone();
+            densified.densify(50);
+            assert!(matches!(densified, Payload::Dense(_)));
+            let a = packed.decoded.to_dense(50);
+            let b = densified.to_dense(50);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", c.name());
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_telescopes() {
+        let d = 33;
+        let mut scratch = CodecScratch::default();
+        let mut out = Payload::default();
+        let c = ErrorFeedback(PackedInt { bits: 4 });
+        let mut sum_true = vec![0.0; d];
+        let mut sum_dec = vec![0.0; d];
+        for round in 0..40 {
+            let delta = gauss(d, 0xEF0 + round);
+            linalg::axpy(1.0, &delta, &mut sum_true);
+            c.compress_into(&delta, &mut scratch, &mut out);
+            out.fold_into(&mut sum_dec);
+        }
+        // Σ decoded + final residual ≡ Σ true deltas (up to f64
+        // rounding of the running sums)
+        let res = scratch.residual();
+        for j in 0..d {
+            let lhs = sum_dec[j] + res[j];
+            assert!(
+                (lhs - sum_true[j]).abs() < 1e-9,
+                "j={j}: {lhs} vs {}",
+                sum_true[j]
+            );
+        }
+        // and the residual is genuinely bounded (error feedback does
+        // not blow up): one quantization level of the last round
+        assert!(res.iter().all(|r| r.abs() < 2.0));
+    }
+
+    #[test]
+    fn error_feedback_improves_int4_on_repeated_delta() {
+        // with a constant delta the EF residual makes the *sum* of
+        // decodes track k·delta far better than k independent decodes
+        let d = 20;
+        let delta = gauss(d, 0x5EED);
+        let rounds = 50;
+        let mut ef_scr = CodecScratch::default();
+        let mut ef_out = Payload::default();
+        let ef = ErrorFeedback(PackedInt { bits: 4 });
+        let raw = PackedInt { bits: 4 };
+        let mut raw_scr = CodecScratch::default();
+        let mut raw_out = Payload::default();
+        let mut ef_sum = vec![0.0; d];
+        let mut raw_sum = vec![0.0; d];
+        for _ in 0..rounds {
+            ef.compress_into(&delta, &mut ef_scr, &mut ef_out);
+            ef_out.fold_into(&mut ef_sum);
+            raw.compress_into(&delta, &mut raw_scr, &mut raw_out);
+            raw_out.fold_into(&mut raw_sum);
+        }
+        let err = |sum: &[f64]| -> f64 {
+            sum.iter()
+                .zip(&delta)
+                .map(|(s, t)| (s - t * rounds as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(
+            err(&ef_sum) < err(&raw_sum) / 4.0,
+            "ef {} raw {}",
+            err(&ef_sum),
+            err(&raw_sum)
+        );
+    }
+}

@@ -276,6 +276,131 @@ pub fn compression(out_dir: &Path, quick: bool) -> Result<()> {
     )
 }
 
+/// Ablation E2: the compression ladder — none / top-k / int8+EF /
+/// fp16 on all four tasks, each with censoring on (CHB's default
+/// rule) and off ([`CensorSpec::Never`]).
+///
+/// This is the bits-to-accuracy grid for the packed codecs: for every
+/// (task, rung, censor) cell the summary records the cumulative
+/// uplink bits spent to first reach the accuracy target (90 % of the
+/// initial objective error eliminated; half the initial loss for the
+/// nonconvex NN).  The headline row pair is `int8-ef` vs `f64`: the
+/// packed 8-bit quantizer with error feedback reaches the same target
+/// at ≤ ¼ of the uplink bits (8 + ε bits per coordinate instead of
+/// 64), while censoring multiplies orthogonally on top by cutting the
+/// *number* of uplinks.
+pub fn ladder(out_dir: &Path, quick: bool) -> Result<()> {
+    let iters = if quick { 500 } else { 2_000 };
+    let dir = out_dir.join("ablation_ladder");
+    println!("\n── ablation: compression ladder × censoring (all tasks)");
+    let rungs: [(&str, CodecSpec); 4] = [
+        ("f64", CodecSpec::None),
+        ("top-25", CodecSpec::TopK { k: 25 }),
+        ("int8-ef", CodecSpec::Int { bits: 8, error_feedback: true }),
+        ("fp16", CodecSpec::Fp16 { error_feedback: false }),
+    ];
+    let mut rows = Vec::new();
+    for (ti, task) in [
+        TaskKind::LinReg,
+        TaskKind::LogReg,
+        TaskKind::Lasso,
+        TaskKind::Nn,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let m = 4usize;
+        let l_m: Vec<f64> =
+            (0..m).map(|i| (1.0 + 0.5 * i as f64).powi(2)).collect();
+        let per_worker = crate::data::synthetic::per_worker_rescaled(
+            0xAB20 + ti as u64,
+            m,
+            96,
+            10,
+            &l_m,
+        );
+        let lam = match task {
+            TaskKind::Lasso => 0.05,
+            TaskKind::LogReg | TaskKind::Nn => 0.01,
+            TaskKind::LinReg => 0.0,
+        };
+        let p = Problem::from_worker_datasets(task, "ladder", &per_worker, lam);
+        let f_star = p.f_star();
+        let f0 = super::fstar::objective(&p, &p.theta0());
+        let target = match f_star {
+            Some(fs) => fs + 0.1 * (f0 - fs),
+            None => 0.5 * f0,
+        };
+        for (rung, codec) in rungs {
+            for censor_on in [true, false] {
+                let censor = if censor_on {
+                    CensorSpec::MethodDefault
+                } else {
+                    CensorSpec::Never
+                };
+                let spec = RunSpec {
+                    label: Some(format!("{rung}-{}", censor.name())),
+                    params: ParamSpec {
+                        alpha: Some(0.5 / p.l_global),
+                        beta: 0.4,
+                        epsilon: EpsilonSpec::Scaled { c: 0.1 },
+                    },
+                    censor,
+                    codec,
+                    iters,
+                    lambda: p.lambda_global(),
+                    ..RunSpec::new(task, &p.dataset)
+                };
+                let t = Session::from_parts(spec, p.clone())
+                    .expect("valid ablation spec")
+                    .run()
+                    .trace;
+                let bits_total = t.iters.last().map_or(0, |s| s.bits_cum);
+                let hit = t.iters.iter().find(|s| s.loss <= target);
+                let (k_hit, bits_hit) = hit
+                    .map(|s| (s.k.to_string(), s.bits_cum.to_string()))
+                    .unwrap_or_else(|| ("-".into(), "-".into()));
+                println!(
+                    "  {:<7} {rung:<8} censor={:<3} comms {:>6}  \
+                     bits→target {:>10}  k→target {:>5}  final f {:.4e}",
+                    task.name(),
+                    if censor_on { "on" } else { "off" },
+                    t.total_comms(),
+                    bits_hit,
+                    k_hit,
+                    t.final_loss(),
+                );
+                rows.push(vec![
+                    task.name().to_string(),
+                    rung.to_string(),
+                    (if censor_on { "on" } else { "off" }).to_string(),
+                    t.total_comms().to_string(),
+                    bits_total.to_string(),
+                    k_hit,
+                    bits_hit,
+                    format!("{:.8e}", t.final_loss()),
+                    format!("{target:.8e}"),
+                ]);
+            }
+        }
+    }
+    csv::write_table(
+        &dir.join("summary.csv"),
+        &[
+            "task",
+            "rung",
+            "censor",
+            "comms",
+            "uplink_bits_total",
+            "k_to_target",
+            "uplink_bits_to_target",
+            "final_loss",
+            "target_loss",
+        ],
+        &rows,
+    )
+}
+
 /// Run one problem with an arbitrary (server rule, censor) pair —
 /// the generalized composition the extensions explore, through the
 /// same engine pipeline as every normal run.
@@ -781,6 +906,7 @@ pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     worker_scaling(out_dir, quick)?;
     failure_injection(out_dir, quick)?;
     compression(out_dir, quick)?;
+    ladder(out_dir, quick)?;
     nesterov(out_dir, quick)?;
     adaptive_epsilon(out_dir, quick)?;
     participation_sweep(out_dir, quick)?;

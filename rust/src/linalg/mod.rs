@@ -9,31 +9,18 @@
 
 pub mod cholesky;
 pub mod matrix;
+pub mod simd;
 
 pub use cholesky::Cholesky;
 pub use matrix::Matrix;
 
-/// x·y
+/// x·y — runtime-dispatched to the active [`simd`] backend; every
+/// backend reproduces the scalar reference's fixed 4-way association
+/// order, so the result is deterministic and backend-independent.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    // 4-way unrolled accumulation: keeps the FMA ports busy and gives
-    // deterministic results (fixed association order).
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let b = i * 4;
-        s0 += x[b] * y[b];
-        s1 += x[b + 1] * y[b + 1];
-        s2 += x[b + 2] * y[b + 2];
-        s3 += x[b + 3] * y[b + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += x[i] * y[i];
-    }
-    s
+    simd::kernels().dot(x, y)
 }
 
 /// ‖x‖²
@@ -60,13 +47,12 @@ pub fn dist2_sq(x: &[f64], y: &[f64]) -> f64 {
     s
 }
 
-/// y ← y + a·x
+/// y ← y + a·x (runtime-dispatched to the active [`simd`] backend;
+/// element-wise, so every lane width is bit-identical).
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += a * x[i];
-    }
+    simd::kernels().axpy(a, x, y)
 }
 
 /// y[idx[j]] ← y[idx[j]] + a·val[j] — the sparse fold primitive.
@@ -81,9 +67,7 @@ pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
 #[inline]
 pub fn axpy_sparse(a: f64, idx: &[u32], val: &[f64], y: &mut [f64]) {
     debug_assert_eq!(idx.len(), val.len());
-    for (&i, &v) in idx.iter().zip(val) {
-        y[i as usize] += a * v;
-    }
+    simd::kernels().axpy_sparse(a, idx, val, y)
 }
 
 /// out ← x − y

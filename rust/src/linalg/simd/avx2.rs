@@ -1,0 +1,175 @@
+//! AVX2 (256-bit, 4 × f64) kernel backend — x86_64 only.
+//!
+//! Every kernel reproduces the scalar reference's exact operation
+//! sequence: one vector lane per scalar unroll slot, separate
+//! multiply and add (intrinsics are never FMA-contracted), and the
+//! same `(s0+s1)+(s2+s3)` reduction — so results are bit-identical to
+//! [`super::scalar`], which `tests/simd_equivalence.rs` pins.
+//!
+//! Safety: the `#[target_feature(enable = "avx2")]` functions are
+//! only reachable through [`Avx2Kernels`], and the dispatch layer
+//! only hands that table out after `is_x86_feature_detected!("avx2")`
+//! succeeded.
+
+use core::arch::x86_64::*;
+
+use super::{scalar, SimdKernels};
+
+/// The AVX2 kernel table (constructed by the dispatcher after runtime
+/// feature detection).
+pub struct Avx2Kernels;
+
+impl SimdKernels for Avx2Kernels {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn dot(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: table handed out only after avx2 detection
+        unsafe { dot_avx2(x, y) }
+    }
+
+    fn axpy(&self, a: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: as above
+        unsafe { axpy_avx2(a, x, y) }
+    }
+
+    fn cvt_f64_to_f32_bits(&self, src: &[f64], dst: &mut [u32]) {
+        debug_assert_eq!(src.len(), dst.len());
+        // SAFETY: as above
+        unsafe { cvt_f64_to_f32_bits_avx2(src, dst) }
+    }
+
+    fn cvt_f32_bits_axpy(&self, a: f64, bits: &[u32], y: &mut [f64]) {
+        debug_assert_eq!(bits.len(), y.len());
+        // SAFETY: as above
+        unsafe { cvt_f32_bits_axpy_avx2(a, bits, y) }
+    }
+
+    fn quantize_clamped(
+        &self,
+        src: &[f64],
+        inv_scale: f64,
+        levels: f64,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(src.len(), out.len());
+        // SAFETY: as above
+        unsafe { quantize_clamped_avx2(src, inv_scale, levels, out) }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let o = i * 4;
+        let a = _mm256_loadu_pd(xp.add(o));
+        let b = _mm256_loadu_pd(yp.add(o));
+        // mul then add — lane j is exactly the scalar s_j accumulator
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(a, b));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for i in chunks * 4..n {
+        s += *xp.add(i) * *yp.add(i);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(a: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(a);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 4;
+        let vx = _mm256_loadu_pd(xp.add(o));
+        let vy = _mm256_loadu_pd(yp.add(o));
+        _mm256_storeu_pd(yp.add(o), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+    }
+    for i in chunks * 4..n {
+        *yp.add(i) += a * *xp.add(i);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn cvt_f64_to_f32_bits_avx2(src: &[f64], dst: &mut [u32]) {
+    let n = src.len();
+    let chunks = n / 4;
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 4;
+        // hardware narrowing convert uses the same round-to-nearest-
+        // even as Rust's `as f32`
+        let f = _mm256_cvtpd_ps(_mm256_loadu_pd(sp.add(o)));
+        _mm_storeu_ps(dp.add(o) as *mut f32, f);
+    }
+    for i in chunks * 4..n {
+        *dp.add(i) = (*sp.add(i) as f32).to_bits();
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn cvt_f32_bits_axpy_avx2(a: f64, bits: &[u32], y: &mut [f64]) {
+    let n = bits.len();
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(a);
+    let bp = bits.as_ptr();
+    let yp = y.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 4;
+        // widening convert is exact, so this matches the scalar
+        // f32 → f64 promotion bit for bit
+        let v = _mm256_cvtps_pd(_mm_loadu_ps(bp.add(o) as *const f32));
+        let vy = _mm256_loadu_pd(yp.add(o));
+        _mm256_storeu_pd(yp.add(o), _mm256_add_pd(vy, _mm256_mul_pd(va, v)));
+    }
+    for i in chunks * 4..n {
+        *yp.add(i) += a * f64::from(f32::from_bits(*bp.add(i)));
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn quantize_clamped_avx2(
+    src: &[f64],
+    inv_scale: f64,
+    levels: f64,
+    out: &mut [f64],
+) {
+    let n = src.len();
+    let chunks = n / 4;
+    let vs = _mm256_set1_pd(inv_scale);
+    let vhalf = _mm256_set1_pd(0.5);
+    let vsign = _mm256_set1_pd(-0.0);
+    let vlo = _mm256_set1_pd(-levels);
+    let vhi = _mm256_set1_pd(levels);
+    let sp = src.as_ptr();
+    let op = out.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 4;
+        let t = _mm256_mul_pd(_mm256_loadu_pd(sp.add(o)), vs);
+        // copysign(0.5, t) as pure bit ops — identical to the scalar
+        let h = _mm256_or_pd(_mm256_and_pd(vsign, t), vhalf);
+        let r = _mm256_round_pd::<{ _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC }>(
+            _mm256_add_pd(t, h),
+        );
+        // maxpd/minpd resolve NaN and ties to the second operand —
+        // the semantics scalar::quantize_one spells out
+        let q = _mm256_min_pd(vhi, _mm256_max_pd(vlo, r));
+        _mm256_storeu_pd(op.add(o), q);
+    }
+    for i in chunks * 4..n {
+        *op.add(i) = scalar::quantize_one(*sp.add(i), inv_scale, levels);
+    }
+}

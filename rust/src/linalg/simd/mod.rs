@@ -1,0 +1,420 @@
+//! Runtime-dispatched SIMD kernels for the four hottest loops.
+//!
+//! The fused gradient kernels ([`crate::linalg::Matrix`]), the server
+//! fold primitives ([`crate::linalg::axpy`] /
+//! [`crate::linalg::axpy_sparse`]), and the packed-codec
+//! quantize/convert loops ([`crate::compress::packed`]) all route
+//! through one [`SimdKernels`] table, selected **once** per process:
+//!
+//! * `x86_64` — AVX2 (256-bit, 4 × f64 lanes) when
+//!   `is_x86_feature_detected!("avx2")` says so.  AVX-512-capable
+//!   hosts also report AVX2 and run this backend: the 512-bit f64
+//!   intrinsics were stabilized after our 1.73 MSRV, so a dedicated
+//!   `Backend::Avx512` slot is left to a future MSRV bump — the trait
+//!   and dispatch below are already shaped for it.
+//! * `aarch64` — NEON (128-bit, 2 × f64 lanes × 2 accumulators; NEON
+//!   is architecturally mandatory, no runtime probe needed).
+//! * everywhere — the portable scalar reference, also forced by
+//!   `CHB_FORCE_SCALAR=1` in the environment (the CI fallback leg).
+//!
+//! **The load-bearing invariant: every backend is bit-identical to
+//! scalar.**  The scalar [`scalar::dot`] is 4-way unrolled with a
+//! fixed `(s0+s1)+(s2+s3)` association order, and the vector backends
+//! reproduce exactly that shape (one lane per unroll slot, separate
+//! multiply and add — never FMA-contracted, which intrinsics forbid),
+//! so switching backends never perturbs a pinned trace.
+//! `tests/simd_equivalence.rs` property-pins every available backend
+//! against scalar on random shapes and alignments.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// Environment variable that forces the scalar backend when set to
+/// `1` (or `true`) — the CI matrix leg that keeps the fallback tested.
+pub const FORCE_SCALAR_ENV: &str = "CHB_FORCE_SCALAR";
+
+/// One backend's kernel table.
+///
+/// Default methods delegate to the scalar reference, so a backend
+/// overrides exactly the loops it accelerates and everything else
+/// stays on the (always-correct) fallback.  All implementations must
+/// be bit-identical to [`scalar`] — the dispatch may legally switch
+/// backend mid-process (benches do), so any numeric divergence would
+/// break trace pinning.
+pub trait SimdKernels: Send + Sync {
+    /// Backend label for logs and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// x·y in the scalar reference's fixed association order.
+    fn dot(&self, x: &[f64], y: &[f64]) -> f64 {
+        scalar::dot(x, y)
+    }
+
+    /// y ← y + a·x (dense fold / rank-1 accumulate).
+    fn axpy(&self, a: f64, x: &[f64], y: &mut [f64]) {
+        scalar::axpy(a, x, y)
+    }
+
+    /// y[idx[j]] ← y[idx[j]] + a·val[j] (sparse fold).
+    ///
+    /// Stays scalar on every backend: a gather/scatter over
+    /// potentially duplicate indices needs conflict detection to
+    /// vectorize safely, and payload nnz is small by construction —
+    /// the bench row exists to document the parity.
+    fn axpy_sparse(&self, a: f64, idx: &[u32], val: &[f64], y: &mut [f64]) {
+        scalar::axpy_sparse(a, idx, val, y)
+    }
+
+    /// dst[i] ← bits of `src[i] as f32` (fp32 codec pack).
+    fn cvt_f64_to_f32_bits(&self, src: &[f64], dst: &mut [u32]) {
+        scalar::cvt_f64_to_f32_bits(src, dst)
+    }
+
+    /// y[i] ← y[i] + a·f64::from(f32::from_bits(bits[i])) — the fp32
+    /// codec's decode-and-fold in one pass.
+    fn cvt_f32_bits_axpy(&self, a: f64, bits: &[u32], y: &mut [f64]) {
+        scalar::cvt_f32_bits_axpy(a, bits, y)
+    }
+
+    /// out[i] ← clamp(round_half_away(src[i]·inv_scale), ±levels)
+    /// (uniform-quantizer pack front half; see
+    /// [`scalar::quantize_one`] for the exact op sequence backends
+    /// must reproduce).
+    fn quantize_clamped(
+        &self,
+        src: &[f64],
+        inv_scale: f64,
+        levels: f64,
+        out: &mut [f64],
+    ) {
+        scalar::quantize_clamped(src, inv_scale, levels, out)
+    }
+}
+
+/// The portable scalar reference kernels — always available, and the
+/// semantics every vector backend is pinned against.
+pub mod scalar {
+    /// x·y, 4-way unrolled with the fixed `(s0+s1)+(s2+s3)`
+    /// association order (keeps the FMA ports busy *and* makes the
+    /// result deterministic and backend-independent).
+    #[inline]
+    pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        for i in 0..chunks {
+            let b = i * 4;
+            s0 += x[b] * y[b];
+            s1 += x[b + 1] * y[b + 1];
+            s2 += x[b + 2] * y[b + 2];
+            s3 += x[b + 3] * y[b + 3];
+        }
+        let mut s = (s0 + s1) + (s2 + s3);
+        for i in chunks * 4..n {
+            s += x[i] * y[i];
+        }
+        s
+    }
+
+    /// y ← y + a·x (element-wise: separate multiply then add, which
+    /// any lane width reproduces exactly).
+    #[inline]
+    pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        for i in 0..x.len() {
+            y[i] += a * x[i];
+        }
+    }
+
+    /// y[idx[j]] ← y[idx[j]] + a·val[j] — each stored coordinate
+    /// touches `y` exactly once, in index order.
+    #[inline]
+    pub fn axpy_sparse(a: f64, idx: &[u32], val: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(idx.len(), val.len());
+        for (&i, &v) in idx.iter().zip(val) {
+            y[i as usize] += a * v;
+        }
+    }
+
+    /// dst[i] ← (src[i] as f32).to_bits() — IEEE round-to-nearest-even
+    /// narrowing, exactly what the hardware converts do.
+    #[inline]
+    pub fn cvt_f64_to_f32_bits(src: &[f64], dst: &mut [u32]) {
+        debug_assert_eq!(src.len(), dst.len());
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = (v as f32).to_bits();
+        }
+    }
+
+    /// y[i] += a · (f32::from_bits(bits[i]) as f64) — widening is
+    /// exact, so this matches the vector converts bit for bit.
+    #[inline]
+    pub fn cvt_f32_bits_axpy(a: f64, bits: &[u32], y: &mut [f64]) {
+        debug_assert_eq!(bits.len(), y.len());
+        for (v, &b) in y.iter_mut().zip(bits) {
+            *v += a * f64::from(f32::from_bits(b));
+        }
+    }
+
+    /// One quantizer step: t = v·inv_scale, round half away from zero
+    /// via `trunc(t + copysign(0.5, t))`, clamp to ±levels.
+    ///
+    /// The clamp is written with the x86 `maxpd`/`minpd` operand
+    /// semantics (NaN and ties resolve to the *second* operand) so
+    /// the vector backends are bit-identical, NaN propagation
+    /// included.  The add-half-then-truncate rounding differs from
+    /// `f64::round` only on the one double just below 0.5 — an
+    /// off-by-one-level knife edge a lossy quantizer doesn't care
+    /// about, in exchange for an exactly vectorizable op sequence.
+    #[inline]
+    pub fn quantize_one(v: f64, inv_scale: f64, levels: f64) -> f64 {
+        let t = v * inv_scale;
+        let r = (t + 0.5f64.copysign(t)).trunc();
+        let m = if -levels > r { -levels } else { r };
+        if levels < m {
+            levels
+        } else {
+            m
+        }
+    }
+
+    /// out[i] ← [`quantize_one`] (src[i]).
+    #[inline]
+    pub fn quantize_clamped(
+        src: &[f64],
+        inv_scale: f64,
+        levels: f64,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(src.len(), out.len());
+        for (o, &v) in out.iter_mut().zip(src) {
+            *o = quantize_one(v, inv_scale, levels);
+        }
+    }
+}
+
+/// The scalar backend as a [`SimdKernels`] table.
+pub struct ScalarKernels;
+
+impl SimdKernels for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+static SCALAR: ScalarKernels = ScalarKernels;
+#[cfg(target_arch = "x86_64")]
+static AVX2: avx2::Avx2Kernels = avx2::Avx2Kernels;
+#[cfg(target_arch = "aarch64")]
+static NEON: neon::NeonKernels = neon::NeonKernels;
+
+/// A selectable kernel backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// portable scalar reference (always available)
+    Scalar,
+    /// 256-bit AVX2 (x86_64, runtime-detected)
+    Avx2,
+    /// 128-bit NEON (aarch64 baseline)
+    Neon,
+}
+
+impl Backend {
+    /// Stable label ("scalar" / "avx2" / "neon").
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// This backend's kernel table.  Selecting a backend that is not
+    /// compiled for the current architecture falls back to scalar
+    /// (`available()` never lists such a backend).
+    pub fn kernels(self) -> &'static dyn SimdKernels {
+        match self {
+            Backend::Scalar => &SCALAR,
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => &AVX2,
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => &NEON,
+            _ => &SCALAR,
+        }
+    }
+
+    fn index(self) -> u8 {
+        match self {
+            Backend::Scalar => 0,
+            Backend::Avx2 => 1,
+            Backend::Neon => 2,
+        }
+    }
+
+    fn from_index(i: u8) -> Backend {
+        match i {
+            1 => Backend::Avx2,
+            2 => Backend::Neon,
+            _ => Backend::Scalar,
+        }
+    }
+}
+
+/// Backends usable on this machine, scalar first.
+pub fn available() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            v.push(Backend::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(Backend::Neon);
+    }
+    v
+}
+
+const SEL_UNSET: u8 = u8::MAX;
+static SELECTED: AtomicU8 = AtomicU8::new(SEL_UNSET);
+
+fn detect() -> Backend {
+    let forced = match std::env::var(FORCE_SCALAR_ENV) {
+        Ok(v) => v == "1" || v.eq_ignore_ascii_case("true"),
+        Err(_) => false,
+    };
+    if forced {
+        Backend::Scalar
+    } else {
+        detect_arch()
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Backend {
+    if std::is_x86_feature_detected!("avx2") {
+        Backend::Avx2
+    } else {
+        Backend::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Backend {
+    Backend::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Backend {
+    Backend::Scalar
+}
+
+/// The active backend (feature detection + `CHB_FORCE_SCALAR`
+/// override, computed once on first use).
+pub fn active() -> Backend {
+    let i = SELECTED.load(Ordering::Relaxed);
+    if i != SEL_UNSET {
+        return Backend::from_index(i);
+    }
+    let b = detect();
+    SELECTED.store(b.index(), Ordering::Relaxed);
+    b
+}
+
+/// The active backend's kernel table — what [`crate::linalg::dot`]
+/// and friends dispatch through.
+#[inline]
+pub fn kernels() -> &'static dyn SimdKernels {
+    active().kernels()
+}
+
+/// Override the active backend (benches and the cross-backend
+/// equivalence test; both single-threaded).  Safe in the numeric
+/// sense regardless — every backend is pinned bit-identical — but
+/// concurrent benchmark timing would be meaningless, so keep this out
+/// of parallel code.
+pub fn set_active(b: Backend) {
+    SELECTED.store(b.index(), Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::rng::Xoshiro256::new(seed);
+        (0..n).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn scalar_backend_is_always_available_and_first() {
+        let av = available();
+        assert_eq!(av[0], Backend::Scalar);
+        assert!(av.contains(&active()) || active() == Backend::Scalar);
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_bitwise() {
+        for &b in &available() {
+            let k = b.kernels();
+            for n in [0usize, 1, 3, 4, 7, 16, 33, 257] {
+                let x = mk(n, 0x51AD + n as u64);
+                let y = mk(n, 0xB0B + n as u64);
+                assert_eq!(
+                    k.dot(&x, &y).to_bits(),
+                    scalar::dot(&x, &y).to_bits(),
+                    "dot {} n={n}",
+                    b.label()
+                );
+                let mut ya = y.clone();
+                let mut yb = y.clone();
+                k.axpy(0.37, &x, &mut ya);
+                scalar::axpy(0.37, &x, &mut yb);
+                for (a, c) in ya.iter().zip(&yb) {
+                    assert_eq!(a.to_bits(), c.to_bits(), "axpy {}", b.label());
+                }
+                let mut da = vec![0u32; n];
+                let mut db = vec![0u32; n];
+                k.cvt_f64_to_f32_bits(&x, &mut da);
+                scalar::cvt_f64_to_f32_bits(&x, &mut db);
+                assert_eq!(da, db, "cvt pack {}", b.label());
+                let mut fa = y.clone();
+                let mut fb = y.clone();
+                k.cvt_f32_bits_axpy(1.0, &da, &mut fa);
+                scalar::cvt_f32_bits_axpy(1.0, &db, &mut fb);
+                for (a, c) in fa.iter().zip(&fb) {
+                    assert_eq!(
+                        a.to_bits(),
+                        c.to_bits(),
+                        "cvt fold {}",
+                        b.label()
+                    );
+                }
+                let mut qa = vec![0.0; n];
+                let mut qb = vec![0.0; n];
+                k.quantize_clamped(&x, 42.5, 127.0, &mut qa);
+                scalar::quantize_clamped(&x, 42.5, 127.0, &mut qb);
+                for (a, c) in qa.iter().zip(&qb) {
+                    assert_eq!(a.to_bits(), c.to_bits(), "quant {}", b.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_one_rounds_half_away_and_clamps() {
+        assert_eq!(scalar::quantize_one(2.5, 1.0, 7.0), 3.0);
+        assert_eq!(scalar::quantize_one(-2.5, 1.0, 7.0), -3.0);
+        assert_eq!(scalar::quantize_one(100.0, 1.0, 7.0), 7.0);
+        assert_eq!(scalar::quantize_one(-100.0, 1.0, 7.0), -7.0);
+        assert_eq!(scalar::quantize_one(0.0, 2.0, 7.0), 0.0);
+        // NaN propagates (and later packs as level 0)
+        assert!(scalar::quantize_one(f64::NAN, 1.0, 7.0).is_nan());
+    }
+}

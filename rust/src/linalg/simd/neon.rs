@@ -1,0 +1,80 @@
+//! NEON (128-bit, 2 × f64) kernel backend — aarch64 only, where NEON
+//! is architecturally mandatory (no runtime probe needed).
+//!
+//! Two 2-lane accumulators stand in for the scalar reference's four
+//! unroll slots — `acc01` carries (s0, s1), `acc23` carries (s2, s3)
+//! — and the reduction is the same `(s0+s1)+(s2+s3)`, so results are
+//! bit-identical to [`super::scalar`].  The convert/quantize loops
+//! stay on the scalar fallback: they auto-vectorize well on aarch64
+//! and the reduction-order-sensitive kernels are the ones that need
+//! hand pinning.
+
+use core::arch::aarch64::*;
+
+use super::SimdKernels;
+
+/// The NEON kernel table.
+pub struct NeonKernels;
+
+impl SimdKernels for NeonKernels {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn dot(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: NEON is baseline on aarch64
+        unsafe { dot_neon(x, y) }
+    }
+
+    fn axpy(&self, a: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: as above
+        unsafe { axpy_neon(a, x, y) }
+    }
+}
+
+unsafe fn dot_neon(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for i in 0..chunks {
+        let o = i * 4;
+        // mul then add (no fused multiply-add): lane k is exactly the
+        // scalar s_k accumulator
+        acc01 = vaddq_f64(
+            acc01,
+            vmulq_f64(vld1q_f64(xp.add(o)), vld1q_f64(yp.add(o))),
+        );
+        acc23 = vaddq_f64(
+            acc23,
+            vmulq_f64(vld1q_f64(xp.add(o + 2)), vld1q_f64(yp.add(o + 2))),
+        );
+    }
+    let mut s = (vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01))
+        + (vgetq_lane_f64::<0>(acc23) + vgetq_lane_f64::<1>(acc23));
+    for i in chunks * 4..n {
+        s += *xp.add(i) * *yp.add(i);
+    }
+    s
+}
+
+unsafe fn axpy_neon(a: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 2;
+    let va = vdupq_n_f64(a);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for i in 0..chunks {
+        let o = i * 2;
+        let vx = vld1q_f64(xp.add(o));
+        let vy = vld1q_f64(yp.add(o));
+        vst1q_f64(yp.add(o), vaddq_f64(vy, vmulq_f64(va, vx)));
+    }
+    for i in chunks * 2..n {
+        *yp.add(i) += a * *xp.add(i);
+    }
+}

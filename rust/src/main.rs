@@ -58,7 +58,8 @@ USAGE:
                         variance-scaled]
               [--censor-tau T] [--censor-period P] [--censor-tau0 T]
               [--censor-rho R]
-              [--compress none|quant|topk] [--quant-bits B] [--topk-k K]
+              [--compress none|quant|topk|fp32|fp16|int] [--quant-bits B]
+              [--topk-k K] [--error-feedback]
               [--drop-prob P] [--drop-seed S] [--label NAME] [--comm-map]
               [--compute-model uniform|pareto] [--compute-us US]
               [--pareto-shape A] [--compute-seed S] [--max-staleness S]
@@ -77,6 +78,12 @@ USAGE:
       the full shard (CSGD-style variance control).  Loss is still
       reported over the full shard; the trace gains batch_frac and
       epoch columns.  rust backend only.
+      packed codecs: fp32/fp16 uplink bit-packed narrowed fields
+      (32/16 bits per coordinate); int uplinks --quant-bits-wide
+      integer levels plus one f32 scale header.  --error-feedback
+      carries each round's rounding error into the next uplink
+      (per-worker residual), recovering target accuracy at a fraction
+      of the bits — see EXPERIMENTS.md §Codecs.
       async engine: virtual-clock discrete-event simulation; workers
       draw per-round compute times (uniform, or Pareto heavy tails),
       messages order through the latency model, and the server folds
@@ -110,6 +117,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             "comm-map",
             "batch-replace",
             "dump-spec",
+            "error-feedback",
         ],
     )?;
     if args.flag("verbose") {
@@ -287,6 +295,7 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
         ),
     };
 
+    let error_feedback = args.flag("error-feedback");
     let codec = match pick("compress", "none").as_str() {
         "none" => CodecSpec::None,
         "quant" => CodecSpec::Quantizer {
@@ -295,7 +304,15 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
         "topk" => {
             CodecSpec::TopK { k: pick_num("topk-k")?.unwrap_or(25.0) as usize }
         }
-        other => bail!("bad --compress {other:?} (none|quant|topk)"),
+        "fp32" => CodecSpec::Fp32 { error_feedback },
+        "fp16" => CodecSpec::Fp16 { error_feedback },
+        "int" => CodecSpec::Int {
+            bits: pick_num("quant-bits")?.unwrap_or(8.0) as u32,
+            error_feedback,
+        },
+        other => bail!(
+            "bad --compress {other:?} (none|quant|topk|fp32|fp16|int)"
+        ),
     };
 
     let engine = match pick("engine", "serial").as_str() {

@@ -54,6 +54,17 @@ pub fn sparse_delta_bits(nnz: usize) -> u64 {
     (32 + 32) * nnz as u64
 }
 
+/// Wire size (bits) of a bit-packed delta: `width` bits per
+/// coordinate plus a per-message `header` (the f32 scale an integer
+/// scheme carries; 0 for raw fp32/fp16 fields).
+///
+/// This charges what the packing actually costs — `width·d`, not
+/// `64·d` — so the bits-to-accuracy ledger honestly reflects a
+/// packed codec's advantage.
+pub fn packed_delta_bits(width: u32, header: u64, d: usize) -> u64 {
+    header + u64::from(width) * d as u64
+}
+
 /// Latency model: fixed + per-byte cost (the "communication is ~2500×
 /// a memory access" premise from the paper's introduction).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -350,6 +361,16 @@ mod tests {
         assert_eq!(sparse_delta_bits(0), 0);
         // sparse beats dense whenever fewer than d coordinates are kept
         assert!(sparse_delta_bits(25) < dense_delta_bits(784));
+    }
+
+    #[test]
+    fn packed_bits_charge_width_plus_header() {
+        assert_eq!(packed_delta_bits(32, 0, 784), 32 * 784); // fp32
+        assert_eq!(packed_delta_bits(16, 0, 784), 16 * 784); // fp16
+        assert_eq!(packed_delta_bits(8, 32, 784), 32 + 8 * 784); // int8
+        // int8 with its scale header stays ≤ 1/4 of the dense cost at
+        // realistic dimensions — the ladder's headline ratio
+        assert!(4 * packed_delta_bits(8, 32, 784) <= dense_delta_bits(784));
     }
 
     #[test]

@@ -575,6 +575,27 @@ fn codec_to_json(c: &CodecSpec) -> Json {
         CodecSpec::TopK { k } => {
             obj(vec![("kind", s("top-k")), ("k", unum(k as u64))])
         }
+        CodecSpec::Fp32 { error_feedback } => obj(vec![
+            ("kind", s("fp32")),
+            ("error_feedback", Json::Bool(error_feedback)),
+        ]),
+        CodecSpec::Fp16 { error_feedback } => obj(vec![
+            ("kind", s("fp16")),
+            ("error_feedback", Json::Bool(error_feedback)),
+        ]),
+        CodecSpec::Int { bits, error_feedback } => obj(vec![
+            ("kind", s("int")),
+            ("bits", unum(bits as u64)),
+            ("error_feedback", Json::Bool(error_feedback)),
+        ]),
+    }
+}
+
+fn codec_ef(m: &Obj) -> Result<bool, SpecError> {
+    match m.get("error_feedback") {
+        None => Ok(false),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => Err(bad("codec.error_feedback", "bool", other)),
     }
 }
 
@@ -592,6 +613,21 @@ fn codec_from_json(j: &Json) -> Result<CodecSpec, SpecError> {
         "top-k" => {
             check_keys(m, "codec", &["kind", "k"])?;
             Ok(CodecSpec::TopK { k: req_u64(m, "k")? as usize })
+        }
+        "fp32" => {
+            check_keys(m, "codec", &["kind", "error_feedback"])?;
+            Ok(CodecSpec::Fp32 { error_feedback: codec_ef(m)? })
+        }
+        "fp16" => {
+            check_keys(m, "codec", &["kind", "error_feedback"])?;
+            Ok(CodecSpec::Fp16 { error_feedback: codec_ef(m)? })
+        }
+        "int" => {
+            check_keys(m, "codec", &["kind", "bits", "error_feedback"])?;
+            Ok(CodecSpec::Int {
+                bits: req_u64(m, "bits")? as u32,
+                error_feedback: codec_ef(m)?,
+            })
         }
         other => Err(SpecError::UnknownName {
             field: "codec.kind",
@@ -781,6 +817,31 @@ mod tests {
         };
         let text = spec.to_json_string();
         assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+    }
+
+    #[test]
+    fn packed_codecs_round_trip() {
+        for codec in [
+            CodecSpec::Fp32 { error_feedback: false },
+            CodecSpec::Fp16 { error_feedback: true },
+            CodecSpec::Int { bits: 8, error_feedback: true },
+            CodecSpec::Int { bits: 4, error_feedback: false },
+        ] {
+            let spec = RunSpec {
+                codec,
+                ..RunSpec::new(TaskKind::LinReg, "synth")
+            };
+            let text = spec.to_json_string();
+            assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec, "{text}");
+        }
+        // error_feedback defaults to false when the key is omitted
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": "chb", "iters": 10,
+            "codec": {"kind": "fp16"}
+        }"#;
+        let spec = RunSpec::from_json_str(text).unwrap();
+        assert_eq!(spec.codec, CodecSpec::Fp16 { error_feedback: false });
     }
 
     #[test]

@@ -305,6 +305,24 @@ pub enum CodecSpec {
         /// coordinates kept per uplink
         k: usize,
     },
+    /// bit-packed f32 fields (32 bits/coordinate on the wire)
+    Fp32 {
+        /// carry the narrowing error into the next round
+        error_feedback: bool,
+    },
+    /// bit-packed IEEE half-precision fields (16 bits/coordinate)
+    Fp16 {
+        /// carry the rounding error into the next round
+        error_feedback: bool,
+    },
+    /// bit-packed `bits`-wide uniform integer levels + f32 scale
+    /// header (`bits: 8` is the ladder's int8 rung)
+    Int {
+        /// bits per coordinate (2..=32)
+        bits: u32,
+        /// carry the quantization error into the next round
+        error_feedback: bool,
+    },
 }
 
 impl CodecSpec {
@@ -314,6 +332,9 @@ impl CodecSpec {
             CodecSpec::None => "none",
             CodecSpec::Quantizer { .. } => "quantizer",
             CodecSpec::TopK { .. } => "top-k",
+            CodecSpec::Fp32 { .. } => "fp32",
+            CodecSpec::Fp16 { .. } => "fp16",
+            CodecSpec::Int { .. } => "int",
         }
     }
 }
@@ -660,6 +681,15 @@ impl RunSpec {
                 }
                 Ok(())
             }
+            CodecSpec::Fp32 { .. } | CodecSpec::Fp16 { .. } => Ok(()),
+            // the spec layer owns the quantizer range check (the codec
+            // hot path only debug-asserts it)
+            CodecSpec::Int { bits, .. } => {
+                if !(2..=32).contains(&bits) {
+                    return Err(SpecError::QuantBits { bits });
+                }
+                Ok(())
+            }
         }
     }
 
@@ -830,6 +860,17 @@ mod tests {
         let mut s = base();
         s.codec = CodecSpec::TopK { k: 0 };
         assert_eq!(s.validate(), Err(SpecError::ZeroSize { field: "codec.k" }));
+        // the packed-int range check lives here, not in the codec hot
+        // path (which only debug-asserts)
+        let mut s = base();
+        s.codec = CodecSpec::Int { bits: 1, error_feedback: true };
+        assert_eq!(s.validate(), Err(SpecError::QuantBits { bits: 1 }));
+        let mut s = base();
+        s.codec = CodecSpec::Int { bits: 33, error_feedback: false };
+        assert_eq!(s.validate(), Err(SpecError::QuantBits { bits: 33 }));
+        let mut s = base();
+        s.codec = CodecSpec::Fp16 { error_feedback: true };
+        assert!(s.validate().is_ok());
         let mut s = base();
         s.batch =
             BatchSchedule::GrowingBatch { size0: 8, growth: 0.9, seed: 1 };

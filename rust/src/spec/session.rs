@@ -16,7 +16,10 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::compress::{Compressor, TopK, UniformQuantizer};
+use crate::compress::{
+    Compressor, ErrorFeedback, PackedFp16, PackedFp32, PackedInt, TopK,
+    UniformQuantizer,
+};
 use crate::coordinator::{
     run_engine_with_rules, AsyncSummary, EngineKind, RunConfig, Server,
     StopRule, Worker,
@@ -221,12 +224,34 @@ impl Session {
                 n_rows: problem.shards[0].n_real,
             }),
         };
+        // error-feedback wrapping: the wrapper object is still one
+        // shared Arc — its residual state lives in each worker's
+        // CodecScratch, so sharing stays sound
+        fn ef<C: Compressor + 'static>(
+            inner: C,
+            on: bool,
+        ) -> Arc<dyn Compressor> {
+            if on {
+                Arc::new(ErrorFeedback(inner))
+            } else {
+                Arc::new(inner)
+            }
+        }
         let compressor: Option<Arc<dyn Compressor>> = match spec.codec {
             CodecSpec::None => None,
             CodecSpec::Quantizer { bits } => {
                 Some(Arc::new(UniformQuantizer { bits }))
             }
             CodecSpec::TopK { k } => Some(Arc::new(TopK { k })),
+            CodecSpec::Fp32 { error_feedback } => {
+                Some(ef(PackedFp32, error_feedback))
+            }
+            CodecSpec::Fp16 { error_feedback } => {
+                Some(ef(PackedFp16, error_feedback))
+            }
+            CodecSpec::Int { bits, error_feedback } => {
+                Some(ef(PackedInt { bits }, error_feedback))
+            }
         };
         if let Some(c) = compressor {
             workers = workers

@@ -1,0 +1,167 @@
+//! Property tests for the bit-packed codecs (`compress::packed`):
+//!
+//! 1. fp32 pack→unpack is *exact* on f32-representable inputs; fp16
+//!    likewise on half-representable inputs.
+//! 2. the n-bit integer pack stays within one quantization level of
+//!    the input on every coordinate, for every width.
+//! 3. error feedback telescopes: over any round sequence,
+//!    Σ decoded + final residual ≡ Σ true deltas (up to f64 rounding
+//!    of the running sums).
+//! 4. wire-bit accounting matches `net::packed_delta_bits` for every
+//!    scheme and dimension.
+
+use chb_fed::compress::{
+    CodecScratch, Compressor, ErrorFeedback, PackedFp16, PackedFp32,
+    PackedInt, Payload,
+};
+use chb_fed::linalg;
+use chb_fed::net::packed_delta_bits;
+use chb_fed::testing::prop;
+
+fn f16_snap(v: f64) -> f64 {
+    // round-trip through the codec itself to land exactly on a half
+    // value; the property then demands the second trip is lossless
+    let one = PackedFp16.compress(&[v]);
+    one.decoded.to_dense(1)[0]
+}
+
+#[test]
+fn fp32_pack_unpack_is_exact_on_f32_values() {
+    prop::check("fp32 roundtrip exact", 60, |g| {
+        let d = g.usize_in(1..=300);
+        let v: Vec<f64> = (0..d)
+            .map(|_| f64::from((g.f64_signed(1e6)) as f32))
+            .collect();
+        let out = PackedFp32.compress(&v);
+        chb_fed::assert_prop!(
+            out.bits == packed_delta_bits(32, 0, d),
+            "bits {} for d={d}",
+            out.bits
+        );
+        let dec = out.decoded.to_dense(d);
+        for (j, (a, b)) in v.iter().zip(&dec).enumerate() {
+            chb_fed::assert_prop!(
+                a.to_bits() == b.to_bits(),
+                "coord {j}: {a} vs {b}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fp16_pack_unpack_is_exact_on_half_values() {
+    prop::check("fp16 roundtrip exact", 60, |g| {
+        let d = g.usize_in(1..=300);
+        let v: Vec<f64> =
+            (0..d).map(|_| f16_snap(g.f64_signed(100.0))).collect();
+        let out = PackedFp16.compress(&v);
+        chb_fed::assert_prop!(
+            out.bits == packed_delta_bits(16, 0, d),
+            "bits {} for d={d}",
+            out.bits
+        );
+        let dec = out.decoded.to_dense(d);
+        for (j, (a, b)) in v.iter().zip(&dec).enumerate() {
+            chb_fed::assert_prop!(
+                a.to_bits() == b.to_bits(),
+                "coord {j}: {a} vs {b}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int_pack_stays_within_one_level_everywhere() {
+    prop::check("int pack bound", 60, |g| {
+        let d = g.usize_in(1..=300);
+        let bits = g.usize_in(2..=32) as u32;
+        let v = g.vec_f64(d, 10.0);
+        let c = PackedInt { bits };
+        let out = c.compress(&v);
+        chb_fed::assert_prop!(
+            out.bits == packed_delta_bits(bits, 32, d),
+            "bits {} for bits={bits} d={d}",
+            out.bits
+        );
+        let dec = out.decoded.to_dense(d);
+        let maxabs = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let levels = ((1u64 << (bits - 1)) - 1) as f64;
+        // one full level of slack, plus headroom for the reciprocal-
+        // multiply rounding at high widths
+        let bound = (maxabs / levels) * (1.0 + 1e-9) + 1e-300;
+        for (j, (a, b)) in v.iter().zip(&dec).enumerate() {
+            chb_fed::assert_prop!(
+                (a - b).abs() <= bound,
+                "coord {j}: |{a} - {b}| > {bound} (bits={bits})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn error_feedback_telescopes_for_every_inner_codec() {
+    prop::check("EF telescope", 40, |g| {
+        let d = g.usize_in(1..=64);
+        let rounds = g.usize_in(1..=30);
+        let which = g.usize_in(0..=2);
+        let codec: Box<dyn Compressor> = match which {
+            0 => Box::new(ErrorFeedback(PackedFp32)),
+            1 => Box::new(ErrorFeedback(PackedFp16)),
+            _ => Box::new(ErrorFeedback(PackedInt {
+                bits: g.usize_in(2..=16) as u32,
+            })),
+        };
+        let mut scratch = CodecScratch::default();
+        let mut out = Payload::default();
+        let mut sum_true = vec![0.0; d];
+        let mut sum_dec = vec![0.0; d];
+        let mut mag = 0.0f64;
+        for _ in 0..rounds {
+            let delta = g.vec_f64(d, 5.0);
+            mag = mag.max(delta.iter().fold(0.0f64, |m, v| m.max(v.abs())));
+            linalg::axpy(1.0, &delta, &mut sum_true);
+            codec.compress_into(&delta, &mut scratch, &mut out);
+            out.fold_into(&mut sum_dec);
+        }
+        let res = scratch.residual();
+        let scale = (mag * rounds as f64).max(1.0);
+        for j in 0..d {
+            let lhs = sum_dec[j] + res[j];
+            chb_fed::assert_prop!(
+                (lhs - sum_true[j]).abs() <= 1e-9 * scale,
+                "codec {which} coord {j}: {lhs} vs {} (scale {scale})",
+                sum_true[j]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_payload_shape_survives_dimension_changes() {
+    // the same scratch + slot reused across different dimensions must
+    // stay correct (capacity reuse may not leak stale words)
+    let c = ErrorFeedback(PackedInt { bits: 6 });
+    let mut scratch = CodecScratch::default();
+    let mut out = Payload::default();
+    for &d in &[64usize, 5, 130, 1, 64] {
+        let v: Vec<f64> = (0..d).map(|j| (j as f64) - d as f64 / 3.0).collect();
+        c.compress_into(&v, &mut scratch, &mut out);
+        assert_eq!(out.nnz(), d);
+        assert!(out.fits(d));
+        assert!(!out.fits(d + 1));
+        let dec = out.to_dense(d);
+        let maxabs = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        for (a, b) in v.iter().zip(&dec) {
+            // EF residual is bounded by one level of the *corrected*
+            // vector, whose magnitude ≤ 2·maxabs in steady state
+            assert!(
+                (a - b).abs() <= 3.0 * maxabs / 31.0 + 1e-12,
+                "d={d}: {a} vs {b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! The SIMD dispatch layer's load-bearing invariant: **every backend
+//! is bit-identical to the scalar reference** — on random shapes,
+//! random values, and misaligned subslices — so runtime dispatch can
+//! never perturb a pinned trace.
+//!
+//! Two layers of pinning:
+//!
+//! * property tests against explicit `Backend::kernels()` handles
+//!   (no global state touched → safe under the parallel test runner);
+//! * one end-to-end test that *forces* each available backend via
+//!   `simd::set_active` and re-runs a full CHB trace, asserting the
+//!   whole trace is bitwise unchanged.  Forcing the global mid-test
+//!   is safe precisely because of the invariant the other tests pin.
+
+use chb_fed::coordinator::{run_serial, RunConfig};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::linalg::simd::{self, scalar, Backend};
+use chb_fed::linalg::Matrix;
+use chb_fed::metrics::Trace;
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::tasks::TaskKind;
+use chb_fed::testing::prop::{self, Gen};
+
+fn gen_vec(g: &mut Gen, n: usize) -> Vec<f64> {
+    (0..n).map(|_| g.gaussian() * 3.0).collect()
+}
+
+#[test]
+fn dot_and_axpy_match_scalar_bitwise_on_random_shapes() {
+    let backends = simd::available();
+    prop::check("simd dot/axpy ≡ scalar", 120, |g| {
+        // random length AND random offset: exercises every lane-tail
+        // split and every alignment the loadu/storeu paths can see
+        let n = g.usize_in(0..=257);
+        let off = g.usize_in(0..=3).min(n);
+        let x_full = gen_vec(g, n);
+        let y_full = gen_vec(g, n);
+        let a = g.f64_signed(4.0);
+        let (x, y) = (&x_full[off..], &y_full[off..]);
+        for &b in &backends {
+            let k = b.kernels();
+            chb_fed::assert_prop!(
+                k.dot(x, y).to_bits() == scalar::dot(x, y).to_bits(),
+                "dot {} n={n} off={off}",
+                b.label()
+            );
+            let mut ya = y.to_vec();
+            let mut yb = y.to_vec();
+            k.axpy(a, x, &mut ya);
+            scalar::axpy(a, x, &mut yb);
+            for (u, v) in ya.iter().zip(&yb) {
+                chb_fed::assert_prop!(
+                    u.to_bits() == v.to_bits(),
+                    "axpy {} n={n} off={off}",
+                    b.label()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn converts_and_quantize_match_scalar_bitwise() {
+    let backends = simd::available();
+    prop::check("simd cvt/quant ≡ scalar", 120, |g| {
+        let n = g.usize_in(0..=257);
+        let off = g.usize_in(0..=3).min(n);
+        let src_full = gen_vec(g, n);
+        let src = &src_full[off..];
+        let m = src.len();
+        let inv_scale = g.f64_in(0.1, 100.0);
+        let levels = ((1u64 << g.usize_in(1..=31)) - 1) as f64;
+        for &b in &backends {
+            let k = b.kernels();
+            let mut da = vec![0u32; m];
+            let mut db = vec![0u32; m];
+            k.cvt_f64_to_f32_bits(src, &mut da);
+            scalar::cvt_f64_to_f32_bits(src, &mut db);
+            chb_fed::assert_prop!(
+                da == db,
+                "cvt pack {} n={m}",
+                b.label()
+            );
+            let mut fa = gen_vec(g, m);
+            let mut fb = fa.clone();
+            let a = g.f64_signed(2.0);
+            k.cvt_f32_bits_axpy(a, &da, &mut fa);
+            scalar::cvt_f32_bits_axpy(a, &db, &mut fb);
+            for (u, v) in fa.iter().zip(&fb) {
+                chb_fed::assert_prop!(
+                    u.to_bits() == v.to_bits(),
+                    "cvt fold {} n={m}",
+                    b.label()
+                );
+            }
+            let mut qa = vec![0.0; m];
+            let mut qb = vec![0.0; m];
+            k.quantize_clamped(src, inv_scale, levels, &mut qa);
+            scalar::quantize_clamped(src, inv_scale, levels, &mut qb);
+            for (u, v) in qa.iter().zip(&qb) {
+                chb_fed::assert_prop!(
+                    u.to_bits() == v.to_bits(),
+                    "quant {} n={m} levels={levels}",
+                    b.label()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantize_handles_nonfinite_identically_across_backends() {
+    // NaN/±inf coordinates (a diverged worker) must produce the same
+    // bit patterns on every backend — maxpd/minpd second-operand
+    // semantics are part of the pinned contract
+    let src = vec![
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        2.5,
+        -2.5,
+        1e308,
+    ];
+    for &b in &simd::available() {
+        let k = b.kernels();
+        let mut qa = vec![0.0; src.len()];
+        let mut qb = vec![0.0; src.len()];
+        k.quantize_clamped(&src, 1.0, 7.0, &mut qa);
+        scalar::quantize_clamped(&src, 1.0, 7.0, &mut qb);
+        for (j, (u, v)) in qa.iter().zip(&qb).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{} coord {j}: {u} vs {v}",
+                b.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_gradient_kernels_are_backend_independent() {
+    let backends = simd::available();
+    prop::check("fused kernels ≡ across backends", 30, |g| {
+        let n = g.usize_in(1..=40);
+        let d = g.usize_in(1..=24);
+        let mut x = Matrix::zeros(n, d);
+        for v in &mut x.data {
+            *v = g.gaussian();
+        }
+        let theta = gen_vec(g, d);
+        let y = gen_vec(g, n);
+        let prev = simd::active();
+        let mut reference: Option<(f64, Vec<f64>)> = None;
+        for &b in &backends {
+            simd::set_active(b);
+            let mut resid = vec![0.0; n];
+            let mut grad = vec![0.0; d];
+            let loss = x.fused_residual_grad(&theta, &y, &mut resid, &mut grad);
+            match &reference {
+                None => reference = Some((loss, grad)),
+                Some((l0, g0)) => {
+                    chb_fed::assert_prop!(
+                        loss.to_bits() == l0.to_bits(),
+                        "loss differs on {}",
+                        b.label()
+                    );
+                    for (u, v) in grad.iter().zip(g0) {
+                        chb_fed::assert_prop!(
+                            u.to_bits() == v.to_bits(),
+                            "grad differs on {}",
+                            b.label()
+                        );
+                    }
+                }
+            }
+        }
+        simd::set_active(prev);
+        Ok(())
+    });
+}
+
+fn assert_traces_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{what}: loss differs at k={}",
+            x.k
+        );
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² differs at k={}",
+            x.k
+        );
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms at k={}", x.k);
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits at k={}", x.k);
+    }
+}
+
+/// End-to-end: the same CHB run, re-executed with each available
+/// backend forced, produces the identical trace bit for bit — the
+/// invariant that lets `CHB_FORCE_SCALAR=1` CI legs share every pinned
+/// expectation with the SIMD legs.
+#[test]
+fn full_chb_trace_is_bitwise_backend_independent() {
+    let m = 4usize;
+    let l_m: Vec<f64> =
+        (0..m).map(|i| (1.0 + 0.4 * i as f64).powi(2)).collect();
+    let per_worker = synthetic::per_worker_rescaled(0x51D3, m, 12, 8, &l_m);
+    let p = Problem::from_worker_datasets(
+        TaskKind::LinReg,
+        "simd-equiv",
+        &per_worker,
+        0.0,
+    );
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, m);
+    let cfg = RunConfig::new(Method::Chb, params, 40);
+    let prev = simd::active();
+    let mut reference: Option<(Backend, Trace)> = None;
+    for &b in &simd::available() {
+        simd::set_active(b);
+        let mut ws = p.rust_workers();
+        let t = run_serial(&mut ws, &cfg, p.theta0());
+        match &reference {
+            None => reference = Some((b, t)),
+            Some((b0, t0)) => assert_traces_identical(
+                t0,
+                &t,
+                &format!("{} vs {}", b0.label(), b.label()),
+            ),
+        }
+    }
+    simd::set_active(prev);
+}

@@ -10,7 +10,10 @@
 
 use std::sync::Arc;
 
-use chb_fed::compress::{Compressor, DenseDecoded, TopK};
+use chb_fed::compress::{
+    Compressor, DenseDecoded, ErrorFeedback, PackedFp16, PackedFp32,
+    PackedInt, TopK,
+};
 use chb_fed::coordinator::{
     run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
     RunConfig,
@@ -105,6 +108,64 @@ fn sparse_topk_matches_dense_decoded_topk_on_all_four_tasks() {
                 a.last_transmitted().iter().zip(b.last_transmitted())
             {
                 assert_eq!(x.to_bits(), y.to_bits(), "{name}: θ̂ drifted");
+            }
+        }
+    }
+}
+
+/// ARCHITECTURE.md invariant 3, extended to the packed codecs: a run
+/// whose workers uplink `Payload::Packed` (decoded on the fly inside
+/// the fold) must be bit-identical to the same run through
+/// `DenseDecoded<C>` (materialized dense decode, O(d) fold) — for
+/// every packed scheme, including the error-feedback wrapper, on all
+/// four paper tasks.
+#[test]
+fn packed_codecs_match_dense_decoded_on_all_four_tasks() {
+    let codecs: Vec<(
+        &str,
+        Arc<dyn Compressor>,
+        Arc<dyn Compressor>,
+    )> = vec![
+        (
+            "fp32",
+            Arc::new(PackedFp32),
+            Arc::new(DenseDecoded(PackedFp32)),
+        ),
+        (
+            "fp16",
+            Arc::new(PackedFp16),
+            Arc::new(DenseDecoded(PackedFp16)),
+        ),
+        (
+            "int8",
+            Arc::new(PackedInt { bits: 8 }),
+            Arc::new(DenseDecoded(PackedInt { bits: 8 })),
+        ),
+        (
+            "int8-ef",
+            Arc::new(ErrorFeedback(PackedInt { bits: 8 })),
+            Arc::new(DenseDecoded(ErrorFeedback(PackedInt { bits: 8 }))),
+        ),
+    ];
+    for task in
+        [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+    {
+        let p = problem_for(task);
+        let (params, iters) = params_for(&p, task);
+        let cfg = RunConfig::new(Method::Chb, params, iters);
+        for (label, packed, densified) in &codecs {
+            let mut packed_ws = workers_with(&p, Arc::clone(packed));
+            let a = run_serial(&mut packed_ws, &cfg, p.theta0());
+            let mut dense_ws = workers_with(&p, Arc::clone(densified));
+            let b = run_serial(&mut dense_ws, &cfg, p.theta0());
+            let what = format!("{} {label} packed-vs-dense", task.name());
+            assert_traces_identical(&a, &b, &what);
+            for (wa, wb) in packed_ws.iter().zip(&dense_ws) {
+                for (x, y) in
+                    wa.last_transmitted().iter().zip(wb.last_transmitted())
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{what}: θ̂ drifted");
+                }
             }
         }
     }

@@ -316,10 +316,16 @@ fn random_spec(g: &mut prop::Gen) -> RunSpec {
                 seed: seed(g),
             },
         },
-        codec: match g.usize_in(0..=2) {
+        codec: match g.usize_in(0..=5) {
             0 => CodecSpec::None,
             1 => CodecSpec::Quantizer { bits: g.usize_in(2..=32) as u32 },
-            _ => CodecSpec::TopK { k: g.usize_in(1..=512) },
+            2 => CodecSpec::TopK { k: g.usize_in(1..=512) },
+            3 => CodecSpec::Fp32 { error_feedback: g.bool() },
+            4 => CodecSpec::Fp16 { error_feedback: g.bool() },
+            _ => CodecSpec::Int {
+                bits: g.usize_in(2..=32) as u32,
+                error_feedback: g.bool(),
+            },
         },
         iters: g.usize_in(1..=100_000),
         stop: match g.usize_in(0..=2) {

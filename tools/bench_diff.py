@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_<target>.json files (see rust/src/bench/mod.rs).
+
+Usage: bench_diff.py BASELINE.json CURRENT.json
+
+Compares median_ns on every row the two files share and prints a
+markdown table (suitable for $GITHUB_STEP_SUMMARY).  Rows whose
+current median exceeds 2x the baseline are flagged loudly; rows
+present in only one file are listed but never flagged.
+
+Always exits 0: shared-runner noise makes a hard gate flaky, so this
+is a warn-only step -- the signal is the table in the CI summary, not
+the exit code.
+"""
+
+import json
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            rows = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: could not read {path}: {e}")
+        return None
+    return {r["name"]: float(r["median_ns"]) for r in rows}
+
+
+def fmt_ns(ns):
+    if ns >= 1e6:
+        return f"{ns / 1e6:.2f} ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.2f} us"
+    return f"{ns:.0f} ns"
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip())
+        return 0
+    base = load(argv[1])
+    cur = load(argv[2])
+    if base is None or cur is None:
+        print("bench_diff: skipping comparison (see above)")
+        return 0
+
+    shared = [n for n in cur if n in base]
+    regressions = []
+    print("### Bench diff vs baseline")
+    print()
+    print("| bench | baseline | current | ratio | |")
+    print("|---|---:|---:|---:|---|")
+    for name in shared:
+        b, c = base[name], cur[name]
+        ratio = c / b if b > 0 else float("inf")
+        flag = ""
+        if ratio > REGRESSION_FACTOR:
+            flag = f"**>{REGRESSION_FACTOR:g}x REGRESSION**"
+            regressions.append((name, ratio))
+        print(
+            f"| {name} | {fmt_ns(b)} | {fmt_ns(c)} "
+            f"| {ratio:.2f}x | {flag} |"
+        )
+    print()
+
+    only_base = sorted(n for n in base if n not in cur)
+    only_cur = sorted(n for n in cur if n not in base)
+    if only_base:
+        print(f"rows only in baseline ({len(only_base)}): "
+              + ", ".join(only_base))
+    if only_cur:
+        print(f"rows only in current ({len(only_cur)}): "
+              + ", ".join(only_cur))
+
+    if regressions:
+        print()
+        print(f"WARNING: {len(regressions)} row(s) regressed "
+              f">{REGRESSION_FACTOR:g}x vs the checked-in baseline:")
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x")
+        print("(warn-only: update BENCH_hotpath.json at the repo root "
+              "if the new cost is intentional)")
+    else:
+        print(f"\nno >{REGRESSION_FACTOR:g}x regressions on "
+              f"{len(shared)} shared rows")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
