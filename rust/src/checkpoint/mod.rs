@@ -1,0 +1,1723 @@
+//! Versioned, self-describing checkpoints with **bit-identical**
+//! resume.
+//!
+//! A [`Checkpoint`] captures everything a run's future depends on —
+//! the server iterate pair (θ, θ_prev) and eq. (5) aggregate ∇ᵏ, every
+//! worker's censor reference θ̂ (its last-transmitted gradient),
+//! error-feedback residuals, the participation and drop RNG streams,
+//! the network byte/clock counters, the full trace so far, and (for
+//! the asynchronous engine) the pending event queue, per-worker
+//! stations, and compute-time streams.  What it deliberately does
+//! *not* capture is anything recomputable from the manifest: the
+//! update rule (HB/CHB momentum is a pure function of θ − θ_prev),
+//! batch-sampler cursors (draws are pure functions of `(worker, seed,
+//! k)`), and the fault schedule (a pure function of `(seed, worker,
+//! round)`).  Resuming therefore needs the checkpoint **plus** the
+//! run's manifest — [`crate::spec::Session::resume`] enforces the
+//! pairing through the manifest hash.
+//!
+//! ## Encoding
+//!
+//! JSON (via the in-tree [`crate::util::json`] writer), with one
+//! deliberate twist: every `f64` is stored as the 16-hex-digit
+//! IEEE-754 bit pattern (vectors concatenate, 16 digits per element),
+//! and every `u64` likewise.  Decimal shortest-round-trip printing
+//! would also be exact, but bit patterns make the bit-identity
+//! contract *visible* in the artifact and make corruption detection
+//! trivial (length % 16, hex alphabet).  Counters that are small by
+//! construction (iteration indices, worker counts) stay plain JSON
+//! numbers for readability.
+//!
+//! Writes are atomic: serialize to `<path>.tmp`, then `rename` over
+//! the destination, so a crash mid-write can never leave a torn
+//! checkpoint behind — the previous complete one survives.
+//!
+//! Decoding is strict and total: unknown or missing keys, truncated
+//! hex, wrong-arity arrays, and version skew all yield a typed
+//! [`CheckpointError`] (never a panic), and a checkpoint value is
+//! fully decoded and validated before any engine state is touched, so
+//! a corrupt file can never leave a half-mutated run behind.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::compress::{PackScheme, PackedBuf, Payload};
+use crate::coordinator::worker::WorkerRound;
+use crate::metrics::{IterStat, StalenessStats, Trace};
+use crate::optim::CensorDecision;
+use crate::util::json::Json;
+
+/// Format version stamped into every checkpoint file.  Bump on any
+/// incompatible layout change; loaders reject mismatches with
+/// [`CheckpointError::Version`].
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// Everything that can go wrong writing, reading, or applying a
+/// checkpoint.  Every failure is typed — corruption is an error
+/// value, never a panic.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// filesystem failure (open/read/write/rename)
+    Io(std::io::Error),
+    /// the file is not syntactically valid JSON
+    Parse(String),
+    /// the file's format version differs from this build's
+    Version {
+        /// version stamped in the file
+        found: u64,
+        /// version this build writes ([`CHECKPOINT_VERSION`])
+        expected: u64,
+    },
+    /// the checkpoint was taken under a different run manifest
+    SpecMismatch {
+        /// manifest hash stamped in the file
+        found: u64,
+        /// manifest hash of the resuming session
+        expected: u64,
+    },
+    /// the checkpoint was taken by a different engine kind
+    Engine {
+        /// engine name stamped in the file
+        found: String,
+        /// engine the resuming session would run
+        expected: String,
+    },
+    /// the checkpoint's parameter dimension differs from the session's
+    Dimension {
+        /// dimension stamped in the file
+        found: usize,
+        /// dimension of the resuming session
+        expected: usize,
+    },
+    /// structurally valid JSON that is not a well-formed checkpoint
+    /// (missing/unknown keys, bad hex, internally inconsistent shapes)
+    Corrupt(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint I/O: {e}"),
+            CheckpointError::Parse(d) => {
+                write!(f, "checkpoint is not valid JSON: {d}")
+            }
+            CheckpointError::Version { found, expected } => write!(
+                f,
+                "checkpoint format version {found} (this build reads {expected})"
+            ),
+            CheckpointError::SpecMismatch { found, expected } => write!(
+                f,
+                "checkpoint belongs to a different manifest \
+                 (hash {found:016x}, session manifest {expected:016x})"
+            ),
+            CheckpointError::Engine { found, expected } => write!(
+                f,
+                "checkpoint was taken by the {found:?} engine; \
+                 session runs {expected:?}"
+            ),
+            CheckpointError::Dimension { found, expected } => write!(
+                f,
+                "checkpoint dimension {found} != session dimension {expected}"
+            ),
+            CheckpointError::Corrupt(d) => {
+                write!(f, "corrupt checkpoint: {d}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// FNV-1a 64-bit hash of `text` — stable, dependency-free content
+/// address for manifests: checkpoints stamp the manifest they belong
+/// to with it, and the artifact store names result directories by it.
+pub fn fnv1a64(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in text.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// When and where to write checkpoints.  Environmental (a property of
+/// *this execution*, like the artifacts directory), so it lives
+/// outside [`crate::spec::RunSpec`] — two runs of one manifest with
+/// different checkpoint cadences must stay bit-identical, and do,
+/// because writing a checkpoint never draws from any run RNG.
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// write a checkpoint every `every` server steps (0 = never)
+    pub every: usize,
+    /// directory the checkpoint file lives in
+    pub dir: PathBuf,
+}
+
+impl CheckpointPolicy {
+    /// Checkpoint every `every` steps into `dir`.
+    pub fn new(every: usize, dir: impl Into<PathBuf>) -> Self {
+        Self { every, dir: dir.into() }
+    }
+
+    /// The checkpoint file path (a single file, atomically replaced).
+    pub fn path(&self) -> PathBuf {
+        self.dir.join("checkpoint.json")
+    }
+
+    /// Is a checkpoint due after server step `k`?
+    pub fn due(&self, k: usize) -> bool {
+        self.every > 0 && k % self.every == 0
+    }
+}
+
+/// Server-side state: the iterate pair, the eq. (5) aggregate, and
+/// the step counter.  The update rule itself is rebuilt from the
+/// manifest (momentum is a pure function of θ − θ_prev).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerState {
+    /// current iterate θᵏ
+    pub theta: Vec<f64>,
+    /// previous iterate θ^{k−1}
+    pub theta_prev: Vec<f64>,
+    /// running aggregate ∇ᵏ
+    pub agg_grad: Vec<f64>,
+    /// server steps taken
+    pub k: usize,
+}
+
+/// One worker's censor-relevant state: its reference θ̂ (the
+/// last-transmitted gradient), lifetime transmission count, and the
+/// error-feedback residual (empty when no EF compressor is attached).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerState {
+    /// worker id (0-based, dense)
+    pub id: usize,
+    /// last-transmitted gradient ∇f_m(θ̂_m)
+    pub last_tx: Vec<f64>,
+    /// lifetime uplink transmissions S_m
+    pub transmissions: usize,
+    /// error-feedback residual carried by the codec scratch
+    pub residual: Vec<f64>,
+}
+
+/// One link's delivered-message counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkState {
+    /// messages delivered
+    pub messages: u64,
+    /// payload bytes delivered
+    pub bytes: u64,
+}
+
+/// The simulated network's full state: drop-stream RNG, counters, and
+/// per-link accounting in both directions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetState {
+    /// drop-stream RNG (Xoshiro256** raw state)
+    pub rng: [u64; 4],
+    /// uplink messages lost to failure injection so far
+    pub dropped: u64,
+    /// accumulated simulated wallclock (µs)
+    pub sim_clock_us: f64,
+    /// per-worker uplink counters
+    pub up: Vec<LinkState>,
+    /// per-worker downlink counters
+    pub down: Vec<LinkState>,
+}
+
+/// What a worker is computing against in the async engine (the θ
+/// snapshot frozen when the server issued its broadcast).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StationState {
+    /// the broadcast iterate
+    pub theta: Vec<f64>,
+    /// ‖θ − θ_prev‖² at broadcast time
+    pub step_sq: f64,
+    /// server step count when the broadcast was issued
+    pub version: usize,
+}
+
+/// Serializable form of one pending async event's payload.
+#[derive(Clone, Debug)]
+pub enum EvSnap {
+    /// θ broadcast in flight toward a worker
+    Down,
+    /// a worker's gradient round in progress
+    Compute,
+    /// a worker report in flight toward the server
+    Up {
+        /// the full report (decision, payload, loss, …)
+        round: WorkerRound,
+        /// server step count its θ was issued at
+        version: usize,
+    },
+}
+
+/// One pending event with its exact queue key, so a restored queue
+/// pops in exactly the order the original would have.
+#[derive(Clone, Debug)]
+pub struct QueuedEv {
+    /// virtual delivery time (µs)
+    pub time_us: f64,
+    /// same-instant phase rank
+    pub rank: u8,
+    /// worker the event concerns
+    pub worker: usize,
+    /// push-order tiebreaker
+    pub seq: u64,
+    /// the event payload
+    pub ev: EvSnap,
+}
+
+/// The asynchronous engine's extra state: the event queue, per-worker
+/// stations, compute-time streams, loss cache, staleness-censor
+/// counters, and the telescoping bookkeeping sums.
+#[derive(Clone, Debug)]
+pub struct AsyncState {
+    /// pending events, sorted by the queue's total order
+    pub queue: Vec<QueuedEv>,
+    /// the queue's next push sequence number
+    pub seq: u64,
+    /// the queue's last popped virtual time (µs)
+    pub last_popped_us: f64,
+    /// per-worker broadcast snapshots
+    pub stations: Vec<StationState>,
+    /// latest known per-worker loss (global-loss instrumentation)
+    pub loss_cache: Vec<f64>,
+    /// per-worker compute-time RNG streams (Xoshiro256** raw state)
+    pub comp_rng: Vec<[u64; 4]>,
+    /// per-worker consecutive-skip counters of the staleness-bounded
+    /// censor wrappers (empty when no staleness bound is configured)
+    pub censor_skips: Vec<usize>,
+    /// per-worker completed local gradient rounds (the fault plan's
+    /// per-worker round key in the async regime)
+    pub local_rounds: Vec<usize>,
+    /// Σ folded deltas (telescope bookkeeping)
+    pub applied_sum: Vec<f64>,
+    /// Σ transmitted deltas lost to drops
+    pub dropped_sum: Vec<f64>,
+    /// virtual clock at capture (µs)
+    pub vclock_us: f64,
+}
+
+/// A complete, self-describing snapshot of a run at server step `k`.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// format version ([`CHECKPOINT_VERSION`])
+    pub version: u64,
+    /// FNV-1a hash of the run's `manifest.json` text, when the run
+    /// came from a [`crate::spec::Session`] (None for raw engine runs)
+    pub spec_hash: Option<u64>,
+    /// engine kind name ("serial", "threaded", "rayon", "async")
+    pub engine: String,
+    /// server step the snapshot was taken after
+    pub k: usize,
+    /// parameter dimension d
+    pub dim: usize,
+    /// server state
+    pub server: ServerState,
+    /// per-worker state, ordered by id
+    pub workers: Vec<WorkerState>,
+    /// participation-schedule RNG (None for the async engine, which
+    /// is full-participation by construction)
+    pub schedule_rng: Option<[u64; 4]>,
+    /// network counters and drop stream
+    pub net: NetState,
+    /// the trace accumulated so far (resume appends to it)
+    pub trace: Trace,
+    /// async-engine state (None for the synchronous engines)
+    pub async_state: Option<AsyncState>,
+}
+
+impl Checkpoint {
+    /// Number of workers M.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Validate this checkpoint against a resuming session's
+    /// identity.  `spec_hash` is compared only when both sides carry
+    /// one, so raw engine runs interoperate.
+    pub fn check_compat(
+        &self,
+        spec_hash: Option<u64>,
+        engine: &str,
+        dim: usize,
+        m: usize,
+    ) -> Result<(), CheckpointError> {
+        if let (Some(found), Some(expected)) = (self.spec_hash, spec_hash) {
+            if found != expected {
+                return Err(CheckpointError::SpecMismatch { found, expected });
+            }
+        }
+        if self.engine != engine {
+            return Err(CheckpointError::Engine {
+                found: self.engine.clone(),
+                expected: engine.to_string(),
+            });
+        }
+        if self.dim != dim {
+            return Err(CheckpointError::Dimension {
+                found: self.dim,
+                expected: dim,
+            });
+        }
+        if self.workers.len() != m {
+            return Err(CheckpointError::Corrupt(format!(
+                "checkpoint has {} workers, session has {m}",
+                self.workers.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize to the canonical pretty JSON text (trailing newline).
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().dump_pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Parse and fully validate checkpoint text.
+    pub fn from_json_str(text: &str) -> Result<Checkpoint, CheckpointError> {
+        let v = Json::parse(text)
+            .map_err(|e| CheckpointError::Parse(e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    /// Atomically write to `path`: serialize to `<path>.tmp`, then
+    /// rename over the destination, so a crash mid-write leaves the
+    /// previous complete checkpoint intact.
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json_string())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and fully validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("version".into(), Json::Num(self.version as f64));
+        if let Some(h) = self.spec_hash {
+            o.insert("spec_hash".into(), Json::Str(hex_u64(h)));
+        }
+        o.insert("engine".into(), Json::Str(self.engine.clone()));
+        o.insert("k".into(), Json::Num(self.k as f64));
+        o.insert("dim".into(), Json::Num(self.dim as f64));
+        o.insert("server".into(), {
+            let mut s = BTreeMap::new();
+            s.insert("theta".into(), hex_f64_vec(&self.server.theta));
+            s.insert("theta_prev".into(), hex_f64_vec(&self.server.theta_prev));
+            s.insert("agg_grad".into(), hex_f64_vec(&self.server.agg_grad));
+            s.insert("k".into(), Json::Num(self.server.k as f64));
+            Json::Obj(s)
+        });
+        o.insert(
+            "workers".into(),
+            Json::Arr(
+                self.workers
+                    .iter()
+                    .map(|w| {
+                        let mut m = BTreeMap::new();
+                        m.insert("id".into(), Json::Num(w.id as f64));
+                        m.insert("last_tx".into(), hex_f64_vec(&w.last_tx));
+                        m.insert(
+                            "transmissions".into(),
+                            Json::Num(w.transmissions as f64),
+                        );
+                        m.insert("residual".into(), hex_f64_vec(&w.residual));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "schedule_rng".into(),
+            match &self.schedule_rng {
+                Some(s) => rng_to_json(s),
+                None => Json::Null,
+            },
+        );
+        o.insert("net".into(), {
+            let mut n = BTreeMap::new();
+            n.insert("rng".into(), rng_to_json(&self.net.rng));
+            n.insert("dropped".into(), Json::Str(hex_u64(self.net.dropped)));
+            n.insert(
+                "sim_clock_us".into(),
+                Json::Str(hex_f64(self.net.sim_clock_us)),
+            );
+            n.insert("up".into(), links_to_json(&self.net.up));
+            n.insert("down".into(), links_to_json(&self.net.down));
+            Json::Obj(n)
+        });
+        o.insert("trace".into(), trace_to_json(&self.trace));
+        if let Some(a) = &self.async_state {
+            o.insert("async".into(), async_to_json(a));
+        }
+        Json::Obj(o)
+    }
+
+    fn from_json(v: &Json) -> Result<Checkpoint, CheckpointError> {
+        let o = as_obj(v, "checkpoint")?;
+        // version gate first: a bumped version changes layout freely,
+        // so nothing else is decoded before this check
+        let version = num_field(o, "version", "checkpoint")?;
+        if version != CHECKPOINT_VERSION {
+            return Err(CheckpointError::Version {
+                found: version,
+                expected: CHECKPOINT_VERSION,
+            });
+        }
+        check_keys(
+            o,
+            &[
+                "version", "engine", "k", "dim", "server", "workers",
+                "schedule_rng", "net", "trace",
+            ],
+            &["spec_hash", "async"],
+            "checkpoint",
+        )?;
+        let spec_hash = match o.get("spec_hash") {
+            None => None,
+            Some(j) => Some(u64_from_json(j, "spec_hash")?),
+        };
+        let engine = str_field(o, "engine", "checkpoint")?.to_string();
+        let k = num_field(o, "k", "checkpoint")? as usize;
+        let dim = num_field(o, "dim", "checkpoint")? as usize;
+
+        let so = as_obj(req(o, "server", "checkpoint")?, "server")?;
+        check_keys(so, &["theta", "theta_prev", "agg_grad", "k"], &[], "server")?;
+        let server = ServerState {
+            theta: f64_vec_field(so, "theta", "server")?,
+            theta_prev: f64_vec_field(so, "theta_prev", "server")?,
+            agg_grad: f64_vec_field(so, "agg_grad", "server")?,
+            k: num_field(so, "k", "server")? as usize,
+        };
+        for (name, v) in [
+            ("theta", &server.theta),
+            ("theta_prev", &server.theta_prev),
+            ("agg_grad", &server.agg_grad),
+        ] {
+            if v.len() != dim {
+                return Err(CheckpointError::Corrupt(format!(
+                    "server.{name} has {} elements, dim is {dim}",
+                    v.len()
+                )));
+            }
+        }
+        if server.k != k {
+            return Err(CheckpointError::Corrupt(format!(
+                "server.k {} != checkpoint k {k}",
+                server.k
+            )));
+        }
+
+        let warr = arr_field(o, "workers", "checkpoint")?;
+        let mut workers = Vec::with_capacity(warr.len());
+        for (i, wj) in warr.iter().enumerate() {
+            let wo = as_obj(wj, "worker")?;
+            check_keys(
+                wo,
+                &["id", "last_tx", "transmissions", "residual"],
+                &[],
+                "worker",
+            )?;
+            let w = WorkerState {
+                id: num_field(wo, "id", "worker")? as usize,
+                last_tx: f64_vec_field(wo, "last_tx", "worker")?,
+                transmissions: num_field(wo, "transmissions", "worker")?
+                    as usize,
+                residual: f64_vec_field(wo, "residual", "worker")?,
+            };
+            if w.id != i {
+                return Err(CheckpointError::Corrupt(format!(
+                    "worker {i} carries id {}",
+                    w.id
+                )));
+            }
+            if w.last_tx.len() != dim {
+                return Err(CheckpointError::Corrupt(format!(
+                    "worker {i} last_tx has {} elements, dim is {dim}",
+                    w.last_tx.len()
+                )));
+            }
+            if !w.residual.is_empty() && w.residual.len() != dim {
+                return Err(CheckpointError::Corrupt(format!(
+                    "worker {i} residual has {} elements, dim is {dim}",
+                    w.residual.len()
+                )));
+            }
+            workers.push(w);
+        }
+
+        let schedule_rng = match req(o, "schedule_rng", "checkpoint")? {
+            Json::Null => None,
+            j => Some(rng_from_json(j, "schedule_rng")?),
+        };
+
+        let no = as_obj(req(o, "net", "checkpoint")?, "net")?;
+        check_keys(
+            no,
+            &["rng", "dropped", "sim_clock_us", "up", "down"],
+            &[],
+            "net",
+        )?;
+        let net = NetState {
+            rng: rng_from_json(req(no, "rng", "net")?, "net.rng")?,
+            dropped: u64_from_json(req(no, "dropped", "net")?, "net.dropped")?,
+            sim_clock_us: f64_from_json(
+                req(no, "sim_clock_us", "net")?,
+                "net.sim_clock_us",
+            )?,
+            up: links_from_json(req(no, "up", "net")?, "net.up")?,
+            down: links_from_json(req(no, "down", "net")?, "net.down")?,
+        };
+        if net.up.len() != workers.len() || net.down.len() != workers.len() {
+            return Err(CheckpointError::Corrupt(format!(
+                "net has {}/{} links for {} workers",
+                net.up.len(),
+                net.down.len(),
+                workers.len()
+            )));
+        }
+
+        let trace = trace_from_json(req(o, "trace", "checkpoint")?)?;
+        let async_state = match o.get("async") {
+            None => None,
+            Some(j) => Some(async_from_json(j, dim, workers.len())?),
+        };
+        Ok(Checkpoint {
+            version,
+            spec_hash,
+            engine,
+            k,
+            dim,
+            server,
+            workers,
+            schedule_rng,
+            net,
+            trace,
+            async_state,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hex codecs — every f64/u64 is a 16-hex-digit bit pattern
+// ---------------------------------------------------------------------------
+
+fn hex_f64(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn hex_u64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+fn hex_f64_vec(v: &[f64]) -> Json {
+    let mut s = String::with_capacity(v.len() * 16);
+    for x in v {
+        s.push_str(&hex_f64(*x));
+    }
+    Json::Str(s)
+}
+
+fn hex_u64_vec(v: &[u64]) -> Json {
+    let mut s = String::with_capacity(v.len() * 16);
+    for x in v {
+        s.push_str(&hex_u64(*x));
+    }
+    Json::Str(s)
+}
+
+fn u64_from_hex(s: &str, what: &str) -> Result<u64, CheckpointError> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(CheckpointError::Corrupt(format!(
+            "{what}: {s:?} is not a 16-hex-digit word"
+        )));
+    }
+    u64::from_str_radix(s, 16)
+        .map_err(|e| CheckpointError::Corrupt(format!("{what}: {e}")))
+}
+
+fn u64_vec_from_hex(s: &str, what: &str) -> Result<Vec<u64>, CheckpointError> {
+    if s.len() % 16 != 0 {
+        return Err(CheckpointError::Corrupt(format!(
+            "{what}: hex length {} is not a multiple of 16",
+            s.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(s.len() / 16);
+    for i in (0..s.len()).step_by(16) {
+        out.push(u64_from_hex(&s[i..i + 16], what)?);
+    }
+    Ok(out)
+}
+
+fn f64_vec_from_hex(s: &str, what: &str) -> Result<Vec<f64>, CheckpointError> {
+    Ok(u64_vec_from_hex(s, what)?
+        .into_iter()
+        .map(f64::from_bits)
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// strict JSON accessors
+// ---------------------------------------------------------------------------
+
+fn as_obj<'a>(
+    v: &'a Json,
+    what: &str,
+) -> Result<&'a BTreeMap<String, Json>, CheckpointError> {
+    match v {
+        Json::Obj(m) => Ok(m),
+        _ => Err(CheckpointError::Corrupt(format!("{what} is not an object"))),
+    }
+}
+
+fn req<'a>(
+    o: &'a BTreeMap<String, Json>,
+    key: &str,
+    what: &str,
+) -> Result<&'a Json, CheckpointError> {
+    o.get(key).ok_or_else(|| {
+        CheckpointError::Corrupt(format!("{what} is missing key {key:?}"))
+    })
+}
+
+fn check_keys(
+    o: &BTreeMap<String, Json>,
+    required: &[&str],
+    optional: &[&str],
+    what: &str,
+) -> Result<(), CheckpointError> {
+    for key in required {
+        if !o.contains_key(*key) {
+            return Err(CheckpointError::Corrupt(format!(
+                "{what} is missing key {key:?}"
+            )));
+        }
+    }
+    for key in o.keys() {
+        if !required.contains(&key.as_str())
+            && !optional.contains(&key.as_str())
+        {
+            return Err(CheckpointError::Corrupt(format!(
+                "{what} has unknown key {key:?}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn num_field(
+    o: &BTreeMap<String, Json>,
+    key: &str,
+    what: &str,
+) -> Result<u64, CheckpointError> {
+    match req(o, key, what)? {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9.1e15 => {
+            Ok(*n as u64)
+        }
+        other => Err(CheckpointError::Corrupt(format!(
+            "{what}.{key} is not a non-negative integer (got {other:?})"
+        ))),
+    }
+}
+
+fn str_field<'a>(
+    o: &'a BTreeMap<String, Json>,
+    key: &str,
+    what: &str,
+) -> Result<&'a str, CheckpointError> {
+    req(o, key, what)?.as_str().ok_or_else(|| {
+        CheckpointError::Corrupt(format!("{what}.{key} is not a string"))
+    })
+}
+
+fn arr_field<'a>(
+    o: &'a BTreeMap<String, Json>,
+    key: &str,
+    what: &str,
+) -> Result<&'a [Json], CheckpointError> {
+    req(o, key, what)?.as_arr().ok_or_else(|| {
+        CheckpointError::Corrupt(format!("{what}.{key} is not an array"))
+    })
+}
+
+fn f64_from_json(v: &Json, what: &str) -> Result<f64, CheckpointError> {
+    match v {
+        Json::Str(s) => Ok(f64::from_bits(u64_from_hex(s, what)?)),
+        _ => Err(CheckpointError::Corrupt(format!(
+            "{what} is not a hex-f64 string"
+        ))),
+    }
+}
+
+fn u64_from_json(v: &Json, what: &str) -> Result<u64, CheckpointError> {
+    match v {
+        Json::Str(s) => u64_from_hex(s, what),
+        _ => Err(CheckpointError::Corrupt(format!(
+            "{what} is not a hex-u64 string"
+        ))),
+    }
+}
+
+fn f64_vec_field(
+    o: &BTreeMap<String, Json>,
+    key: &str,
+    what: &str,
+) -> Result<Vec<f64>, CheckpointError> {
+    match req(o, key, what)? {
+        Json::Str(s) => f64_vec_from_hex(s, &format!("{what}.{key}")),
+        _ => Err(CheckpointError::Corrupt(format!(
+            "{what}.{key} is not a hex-vector string"
+        ))),
+    }
+}
+
+fn usize_arr(v: &Json, what: &str) -> Result<Vec<usize>, CheckpointError> {
+    let arr = v.as_arr().ok_or_else(|| {
+        CheckpointError::Corrupt(format!("{what} is not an array"))
+    })?;
+    arr.iter()
+        .map(|j| match j {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9.1e15 => {
+                Ok(*n as usize)
+            }
+            other => Err(CheckpointError::Corrupt(format!(
+                "{what} element is not a non-negative integer (got {other:?})"
+            ))),
+        })
+        .collect()
+}
+
+fn usize_arr_json(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn rng_to_json(s: &[u64; 4]) -> Json {
+    Json::Arr(s.iter().map(|&w| Json::Str(hex_u64(w))).collect())
+}
+
+fn rng_from_json(v: &Json, what: &str) -> Result<[u64; 4], CheckpointError> {
+    let arr = v.as_arr().ok_or_else(|| {
+        CheckpointError::Corrupt(format!("{what} is not an array"))
+    })?;
+    if arr.len() != 4 {
+        return Err(CheckpointError::Corrupt(format!(
+            "{what} has {} words, expected 4",
+            arr.len()
+        )));
+    }
+    let mut out = [0u64; 4];
+    for (i, j) in arr.iter().enumerate() {
+        out[i] = u64_from_json(j, what)?;
+    }
+    Ok(out)
+}
+
+fn links_to_json(links: &[LinkState]) -> Json {
+    // two parallel hex vectors — compact, strict, and shape-checkable
+    let mut o = BTreeMap::new();
+    o.insert(
+        "messages".into(),
+        hex_u64_vec(&links.iter().map(|l| l.messages).collect::<Vec<_>>()),
+    );
+    o.insert(
+        "bytes".into(),
+        hex_u64_vec(&links.iter().map(|l| l.bytes).collect::<Vec<_>>()),
+    );
+    Json::Obj(o)
+}
+
+fn links_from_json(
+    v: &Json,
+    what: &str,
+) -> Result<Vec<LinkState>, CheckpointError> {
+    let o = as_obj(v, what)?;
+    check_keys(o, &["messages", "bytes"], &[], what)?;
+    let messages = match req(o, "messages", what)? {
+        Json::Str(s) => u64_vec_from_hex(s, what)?,
+        _ => {
+            return Err(CheckpointError::Corrupt(format!(
+                "{what}.messages is not a hex-vector string"
+            )))
+        }
+    };
+    let bytes = match req(o, "bytes", what)? {
+        Json::Str(s) => u64_vec_from_hex(s, what)?,
+        _ => {
+            return Err(CheckpointError::Corrupt(format!(
+                "{what}.bytes is not a hex-vector string"
+            )))
+        }
+    };
+    if messages.len() != bytes.len() {
+        return Err(CheckpointError::Corrupt(format!(
+            "{what}: {} message counters vs {} byte counters",
+            messages.len(),
+            bytes.len()
+        )));
+    }
+    Ok(messages
+        .into_iter()
+        .zip(bytes)
+        .map(|(messages, bytes)| LinkState { messages, bytes })
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Trace codec (columnar iters, bitmap comm rows)
+// ---------------------------------------------------------------------------
+
+fn trace_to_json(t: &Trace) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("method".into(), Json::Str(t.method.clone()));
+    let mut it = BTreeMap::new();
+    it.insert(
+        "k".into(),
+        usize_arr_json(&t.iters.iter().map(|s| s.k).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "loss".into(),
+        hex_f64_vec(&t.iters.iter().map(|s| s.loss).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "comms_round".into(),
+        usize_arr_json(
+            &t.iters.iter().map(|s| s.comms_round).collect::<Vec<_>>(),
+        ),
+    );
+    it.insert(
+        "comms_cum".into(),
+        usize_arr_json(&t.iters.iter().map(|s| s.comms_cum).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "agg_grad_sq".into(),
+        hex_f64_vec(&t.iters.iter().map(|s| s.agg_grad_sq).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "step_sq".into(),
+        hex_f64_vec(&t.iters.iter().map(|s| s.step_sq).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "bits_cum".into(),
+        hex_u64_vec(&t.iters.iter().map(|s| s.bits_cum).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "vclock_us".into(),
+        hex_f64_vec(&t.iters.iter().map(|s| s.vclock_us).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "stale_max".into(),
+        usize_arr_json(&t.iters.iter().map(|s| s.stale_max).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "batch_frac".into(),
+        hex_f64_vec(&t.iters.iter().map(|s| s.batch_frac).collect::<Vec<_>>()),
+    );
+    it.insert(
+        "epoch".into(),
+        hex_f64_vec(&t.iters.iter().map(|s| s.epoch).collect::<Vec<_>>()),
+    );
+    o.insert("iters".into(), Json::Obj(it));
+    o.insert("per_worker_comms".into(), usize_arr_json(&t.per_worker_comms));
+    o.insert("participants".into(), usize_arr_json(&t.participants));
+    o.insert(
+        "comm_map".into(),
+        Json::Arr(
+            t.comm_map
+                .iter()
+                .map(|row| {
+                    Json::Str(
+                        row.iter().map(|&b| if b { '1' } else { '0' }).collect(),
+                    )
+                })
+                .collect(),
+        ),
+    );
+    let mut st = BTreeMap::new();
+    st.insert(
+        "folds".into(),
+        usize_arr_json(
+            &t.worker_staleness.iter().map(|s| s.folds).collect::<Vec<_>>(),
+        ),
+    );
+    st.insert(
+        "max".into(),
+        usize_arr_json(
+            &t.worker_staleness.iter().map(|s| s.max).collect::<Vec<_>>(),
+        ),
+    );
+    st.insert(
+        "sum".into(),
+        usize_arr_json(
+            &t.worker_staleness.iter().map(|s| s.sum).collect::<Vec<_>>(),
+        ),
+    );
+    o.insert("worker_staleness".into(), Json::Obj(st));
+    o.insert("fault_downs".into(), Json::Num(t.fault_downs as f64));
+    o.insert("fault_rejoins".into(), Json::Num(t.fault_rejoins as f64));
+    Json::Obj(o)
+}
+
+fn trace_from_json(v: &Json) -> Result<Trace, CheckpointError> {
+    let o = as_obj(v, "trace")?;
+    check_keys(
+        o,
+        &[
+            "method", "iters", "per_worker_comms", "participants", "comm_map",
+            "worker_staleness", "fault_downs", "fault_rejoins",
+        ],
+        &[],
+        "trace",
+    )?;
+    let it = as_obj(req(o, "iters", "trace")?, "trace.iters")?;
+    check_keys(
+        it,
+        &[
+            "k", "loss", "comms_round", "comms_cum", "agg_grad_sq", "step_sq",
+            "bits_cum", "vclock_us", "stale_max", "batch_frac", "epoch",
+        ],
+        &[],
+        "trace.iters",
+    )?;
+    let ks = usize_arr(req(it, "k", "trace.iters")?, "trace.iters.k")?;
+    let loss = f64_vec_field(it, "loss", "trace.iters")?;
+    let comms_round =
+        usize_arr(req(it, "comms_round", "trace.iters")?, "comms_round")?;
+    let comms_cum =
+        usize_arr(req(it, "comms_cum", "trace.iters")?, "comms_cum")?;
+    let agg_grad_sq = f64_vec_field(it, "agg_grad_sq", "trace.iters")?;
+    let step_sq = f64_vec_field(it, "step_sq", "trace.iters")?;
+    let bits_cum = match req(it, "bits_cum", "trace.iters")? {
+        Json::Str(s) => u64_vec_from_hex(s, "trace.iters.bits_cum")?,
+        _ => {
+            return Err(CheckpointError::Corrupt(
+                "trace.iters.bits_cum is not a hex-vector string".into(),
+            ))
+        }
+    };
+    let vclock_us = f64_vec_field(it, "vclock_us", "trace.iters")?;
+    let stale_max = usize_arr(req(it, "stale_max", "trace.iters")?, "stale_max")?;
+    let batch_frac = f64_vec_field(it, "batch_frac", "trace.iters")?;
+    let epoch = f64_vec_field(it, "epoch", "trace.iters")?;
+    let n = ks.len();
+    for (name, len) in [
+        ("loss", loss.len()),
+        ("comms_round", comms_round.len()),
+        ("comms_cum", comms_cum.len()),
+        ("agg_grad_sq", agg_grad_sq.len()),
+        ("step_sq", step_sq.len()),
+        ("bits_cum", bits_cum.len()),
+        ("vclock_us", vclock_us.len()),
+        ("stale_max", stale_max.len()),
+        ("batch_frac", batch_frac.len()),
+        ("epoch", epoch.len()),
+    ] {
+        if len != n {
+            return Err(CheckpointError::Corrupt(format!(
+                "trace.iters.{name} has {len} rows, k has {n}"
+            )));
+        }
+    }
+    let iters = (0..n)
+        .map(|i| IterStat {
+            k: ks[i],
+            loss: loss[i],
+            comms_round: comms_round[i],
+            comms_cum: comms_cum[i],
+            agg_grad_sq: agg_grad_sq[i],
+            step_sq: step_sq[i],
+            bits_cum: bits_cum[i],
+            vclock_us: vclock_us[i],
+            stale_max: stale_max[i],
+            batch_frac: batch_frac[i],
+            epoch: epoch[i],
+        })
+        .collect();
+    let comm_map = arr_field(o, "comm_map", "trace")?
+        .iter()
+        .map(|row| {
+            let s = row.as_str().ok_or_else(|| {
+                CheckpointError::Corrupt(
+                    "trace.comm_map row is not a string".into(),
+                )
+            })?;
+            s.chars()
+                .map(|c| match c {
+                    '0' => Ok(false),
+                    '1' => Ok(true),
+                    other => Err(CheckpointError::Corrupt(format!(
+                        "trace.comm_map row has non-bit char {other:?}"
+                    ))),
+                })
+                .collect::<Result<Vec<bool>, _>>()
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    let sto = as_obj(req(o, "worker_staleness", "trace")?, "worker_staleness")?;
+    check_keys(sto, &["folds", "max", "sum"], &[], "trace.worker_staleness")?;
+    let folds = usize_arr(req(sto, "folds", "worker_staleness")?, "folds")?;
+    let maxs = usize_arr(req(sto, "max", "worker_staleness")?, "max")?;
+    let sums = usize_arr(req(sto, "sum", "worker_staleness")?, "sum")?;
+    if folds.len() != maxs.len() || folds.len() != sums.len() {
+        return Err(CheckpointError::Corrupt(
+            "trace.worker_staleness columns disagree in length".into(),
+        ));
+    }
+    let worker_staleness = (0..folds.len())
+        .map(|i| StalenessStats { folds: folds[i], max: maxs[i], sum: sums[i] })
+        .collect();
+    Ok(Trace {
+        method: str_field(o, "method", "trace")?.to_string(),
+        iters,
+        per_worker_comms: usize_arr(
+            req(o, "per_worker_comms", "trace")?,
+            "per_worker_comms",
+        )?,
+        participants: usize_arr(
+            req(o, "participants", "trace")?,
+            "participants",
+        )?,
+        comm_map,
+        worker_staleness,
+        fault_downs: num_field(o, "fault_downs", "trace")? as usize,
+        fault_rejoins: num_field(o, "fault_rejoins", "trace")? as usize,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Payload / WorkerRound / async-state codecs
+// ---------------------------------------------------------------------------
+
+fn payload_to_json(p: &Payload) -> Json {
+    let mut o = BTreeMap::new();
+    match p {
+        Payload::Dense(v) => {
+            o.insert("kind".into(), Json::Str("dense".into()));
+            o.insert("data".into(), hex_f64_vec(v));
+        }
+        Payload::Sparse { idx, val } => {
+            o.insert("kind".into(), Json::Str("sparse".into()));
+            o.insert(
+                "idx".into(),
+                usize_arr_json(
+                    &idx.iter().map(|&i| i as usize).collect::<Vec<_>>(),
+                ),
+            );
+            o.insert("val".into(), hex_f64_vec(val));
+        }
+        Payload::Packed(buf) => {
+            o.insert("kind".into(), Json::Str("packed".into()));
+            o.insert(
+                "scheme".into(),
+                Json::Str(match buf.scheme {
+                    PackScheme::Fp32 => "fp32".to_string(),
+                    PackScheme::Fp16 => "fp16".to_string(),
+                    PackScheme::Int { bits } => format!("int:{bits}"),
+                }),
+            );
+            o.insert("len".into(), Json::Num(f64::from(buf.len)));
+            o.insert("scale".into(), Json::Str(hex_f64(buf.scale)));
+            o.insert("words".into(), hex_u64_vec(&buf.words));
+        }
+    }
+    Json::Obj(o)
+}
+
+fn payload_from_json(v: &Json) -> Result<Payload, CheckpointError> {
+    let o = as_obj(v, "payload")?;
+    match str_field(o, "kind", "payload")? {
+        "dense" => {
+            check_keys(o, &["kind", "data"], &[], "payload")?;
+            Ok(Payload::Dense(f64_vec_field(o, "data", "payload")?))
+        }
+        "sparse" => {
+            check_keys(o, &["kind", "idx", "val"], &[], "payload")?;
+            let idx = usize_arr(req(o, "idx", "payload")?, "payload.idx")?
+                .into_iter()
+                .map(|i| {
+                    u32::try_from(i).map_err(|_| {
+                        CheckpointError::Corrupt(format!(
+                            "payload.idx {i} exceeds u32"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let val = f64_vec_field(o, "val", "payload")?;
+            if idx.len() != val.len() {
+                return Err(CheckpointError::Corrupt(format!(
+                    "sparse payload has {} indices and {} values",
+                    idx.len(),
+                    val.len()
+                )));
+            }
+            Ok(Payload::Sparse { idx, val })
+        }
+        "packed" => {
+            check_keys(
+                o,
+                &["kind", "scheme", "len", "scale", "words"],
+                &[],
+                "payload",
+            )?;
+            let scheme = match str_field(o, "scheme", "payload")? {
+                "fp32" => PackScheme::Fp32,
+                "fp16" => PackScheme::Fp16,
+                s if s.starts_with("int:") => {
+                    let bits = s["int:".len()..].parse::<u32>().map_err(
+                        |e| {
+                            CheckpointError::Corrupt(format!(
+                                "packed scheme {s:?}: {e}"
+                            ))
+                        },
+                    )?;
+                    PackScheme::Int { bits }
+                }
+                other => {
+                    return Err(CheckpointError::Corrupt(format!(
+                        "unknown pack scheme {other:?}"
+                    )))
+                }
+            };
+            let len = num_field(o, "len", "payload")? as u32;
+            let scale = f64_from_json(req(o, "scale", "payload")?, "scale")?;
+            let words = match req(o, "words", "payload")? {
+                Json::Str(s) => u64_vec_from_hex(s, "payload.words")?,
+                _ => {
+                    return Err(CheckpointError::Corrupt(
+                        "payload.words is not a hex-vector string".into(),
+                    ))
+                }
+            };
+            Ok(Payload::Packed(PackedBuf { scheme, len, scale, words }))
+        }
+        other => Err(CheckpointError::Corrupt(format!(
+            "unknown payload kind {other:?}"
+        ))),
+    }
+}
+
+fn round_to_json(r: &WorkerRound) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("worker".into(), Json::Num(r.worker as f64));
+    o.insert(
+        "decision".into(),
+        Json::Str(
+            match r.decision {
+                CensorDecision::Transmit => "transmit",
+                CensorDecision::Skip => "skip",
+            }
+            .into(),
+        ),
+    );
+    o.insert("delta".into(), payload_to_json(&r.delta));
+    o.insert("loss".into(), Json::Str(hex_f64(r.loss)));
+    o.insert("delta_sq".into(), Json::Str(hex_f64(r.delta_sq)));
+    o.insert("bits".into(), Json::Str(hex_u64(r.bits)));
+    o.insert("batch_frac".into(), Json::Str(hex_f64(r.batch_frac)));
+    Json::Obj(o)
+}
+
+fn round_from_json(v: &Json) -> Result<WorkerRound, CheckpointError> {
+    let o = as_obj(v, "round")?;
+    check_keys(
+        o,
+        &["worker", "decision", "delta", "loss", "delta_sq", "bits",
+          "batch_frac"],
+        &[],
+        "round",
+    )?;
+    let decision = match str_field(o, "decision", "round")? {
+        "transmit" => CensorDecision::Transmit,
+        "skip" => CensorDecision::Skip,
+        other => {
+            return Err(CheckpointError::Corrupt(format!(
+                "unknown censor decision {other:?}"
+            )))
+        }
+    };
+    Ok(WorkerRound {
+        worker: num_field(o, "worker", "round")? as usize,
+        decision,
+        delta: Arc::new(payload_from_json(req(o, "delta", "round")?)?),
+        loss: f64_from_json(req(o, "loss", "round")?, "round.loss")?,
+        delta_sq: f64_from_json(req(o, "delta_sq", "round")?, "round.delta_sq")?,
+        bits: u64_from_json(req(o, "bits", "round")?, "round.bits")?,
+        batch_frac: f64_from_json(
+            req(o, "batch_frac", "round")?,
+            "round.batch_frac",
+        )?,
+    })
+}
+
+fn async_to_json(a: &AsyncState) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "queue".into(),
+        Json::Arr(
+            a.queue
+                .iter()
+                .map(|e| {
+                    let mut q = BTreeMap::new();
+                    q.insert("time_us".into(), Json::Str(hex_f64(e.time_us)));
+                    q.insert("rank".into(), Json::Num(f64::from(e.rank)));
+                    q.insert("worker".into(), Json::Num(e.worker as f64));
+                    q.insert("seq".into(), Json::Str(hex_u64(e.seq)));
+                    let mut ev = BTreeMap::new();
+                    match &e.ev {
+                        EvSnap::Down => {
+                            ev.insert("type".into(), Json::Str("down".into()));
+                        }
+                        EvSnap::Compute => {
+                            ev.insert(
+                                "type".into(),
+                                Json::Str("compute".into()),
+                            );
+                        }
+                        EvSnap::Up { round, version } => {
+                            ev.insert("type".into(), Json::Str("up".into()));
+                            ev.insert("round".into(), round_to_json(round));
+                            ev.insert(
+                                "version".into(),
+                                Json::Num(*version as f64),
+                            );
+                        }
+                    }
+                    q.insert("ev".into(), Json::Obj(ev));
+                    Json::Obj(q)
+                })
+                .collect(),
+        ),
+    );
+    o.insert("seq".into(), Json::Str(hex_u64(a.seq)));
+    o.insert("last_popped_us".into(), Json::Str(hex_f64(a.last_popped_us)));
+    o.insert(
+        "stations".into(),
+        Json::Arr(
+            a.stations
+                .iter()
+                .map(|s| {
+                    let mut m = BTreeMap::new();
+                    m.insert("theta".into(), hex_f64_vec(&s.theta));
+                    m.insert("step_sq".into(), Json::Str(hex_f64(s.step_sq)));
+                    m.insert("version".into(), Json::Num(s.version as f64));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    o.insert("loss_cache".into(), hex_f64_vec(&a.loss_cache));
+    o.insert(
+        "comp_rng".into(),
+        Json::Arr(a.comp_rng.iter().map(rng_to_json).collect()),
+    );
+    o.insert("censor_skips".into(), usize_arr_json(&a.censor_skips));
+    o.insert("local_rounds".into(), usize_arr_json(&a.local_rounds));
+    o.insert("applied_sum".into(), hex_f64_vec(&a.applied_sum));
+    o.insert("dropped_sum".into(), hex_f64_vec(&a.dropped_sum));
+    o.insert("vclock_us".into(), Json::Str(hex_f64(a.vclock_us)));
+    Json::Obj(o)
+}
+
+fn async_from_json(
+    v: &Json,
+    dim: usize,
+    m: usize,
+) -> Result<AsyncState, CheckpointError> {
+    let o = as_obj(v, "async")?;
+    check_keys(
+        o,
+        &[
+            "queue", "seq", "last_popped_us", "stations", "loss_cache",
+            "comp_rng", "censor_skips", "local_rounds", "applied_sum",
+            "dropped_sum", "vclock_us",
+        ],
+        &[],
+        "async",
+    )?;
+    let queue = arr_field(o, "queue", "async")?
+        .iter()
+        .map(|qj| {
+            let q = as_obj(qj, "async.queue entry")?;
+            check_keys(
+                q,
+                &["time_us", "rank", "worker", "seq", "ev"],
+                &[],
+                "async.queue entry",
+            )?;
+            let evo = as_obj(req(q, "ev", "async.queue entry")?, "async ev")?;
+            let ev = match str_field(evo, "type", "async ev")? {
+                "down" => {
+                    check_keys(evo, &["type"], &[], "async ev")?;
+                    EvSnap::Down
+                }
+                "compute" => {
+                    check_keys(evo, &["type"], &[], "async ev")?;
+                    EvSnap::Compute
+                }
+                "up" => {
+                    check_keys(
+                        evo,
+                        &["type", "round", "version"],
+                        &[],
+                        "async ev",
+                    )?;
+                    EvSnap::Up {
+                        round: round_from_json(req(evo, "round", "async ev")?)?,
+                        version: num_field(evo, "version", "async ev")? as usize,
+                    }
+                }
+                other => {
+                    return Err(CheckpointError::Corrupt(format!(
+                        "unknown async event type {other:?}"
+                    )))
+                }
+            };
+            Ok(QueuedEv {
+                time_us: f64_from_json(
+                    req(q, "time_us", "async.queue entry")?,
+                    "time_us",
+                )?,
+                rank: num_field(q, "rank", "async.queue entry")? as u8,
+                worker: num_field(q, "worker", "async.queue entry")? as usize,
+                seq: u64_from_json(req(q, "seq", "async.queue entry")?, "seq")?,
+                ev,
+            })
+        })
+        .collect::<Result<Vec<_>, CheckpointError>>()?;
+    let stations = arr_field(o, "stations", "async")?
+        .iter()
+        .map(|sj| {
+            let s = as_obj(sj, "station")?;
+            check_keys(s, &["theta", "step_sq", "version"], &[], "station")?;
+            let st = StationState {
+                theta: f64_vec_field(s, "theta", "station")?,
+                step_sq: f64_from_json(
+                    req(s, "step_sq", "station")?,
+                    "station.step_sq",
+                )?,
+                version: num_field(s, "version", "station")? as usize,
+            };
+            if st.theta.len() != dim {
+                return Err(CheckpointError::Corrupt(format!(
+                    "station theta has {} elements, dim is {dim}",
+                    st.theta.len()
+                )));
+            }
+            Ok(st)
+        })
+        .collect::<Result<Vec<_>, CheckpointError>>()?;
+    let a = AsyncState {
+        queue,
+        seq: u64_from_json(req(o, "seq", "async")?, "async.seq")?,
+        last_popped_us: f64_from_json(
+            req(o, "last_popped_us", "async")?,
+            "async.last_popped_us",
+        )?,
+        stations,
+        loss_cache: f64_vec_field(o, "loss_cache", "async")?,
+        comp_rng: arr_field(o, "comp_rng", "async")?
+            .iter()
+            .map(|j| rng_from_json(j, "async.comp_rng"))
+            .collect::<Result<Vec<_>, _>>()?,
+        censor_skips: usize_arr(
+            req(o, "censor_skips", "async")?,
+            "async.censor_skips",
+        )?,
+        local_rounds: usize_arr(
+            req(o, "local_rounds", "async")?,
+            "async.local_rounds",
+        )?,
+        applied_sum: f64_vec_field(o, "applied_sum", "async")?,
+        dropped_sum: f64_vec_field(o, "dropped_sum", "async")?,
+        vclock_us: f64_from_json(
+            req(o, "vclock_us", "async")?,
+            "async.vclock_us",
+        )?,
+    };
+    for (name, len) in [
+        ("stations", a.stations.len()),
+        ("loss_cache", a.loss_cache.len()),
+        ("comp_rng", a.comp_rng.len()),
+        ("local_rounds", a.local_rounds.len()),
+    ] {
+        if len != m {
+            return Err(CheckpointError::Corrupt(format!(
+                "async.{name} has {len} entries for {m} workers"
+            )));
+        }
+    }
+    if !a.censor_skips.is_empty() && a.censor_skips.len() != m {
+        return Err(CheckpointError::Corrupt(format!(
+            "async.censor_skips has {} entries for {m} workers",
+            a.censor_skips.len()
+        )));
+    }
+    for (name, len) in
+        [("applied_sum", a.applied_sum.len()), ("dropped_sum", a.dropped_sum.len())]
+    {
+        if len != dim {
+            return Err(CheckpointError::Corrupt(format!(
+                "async.{name} has {len} elements, dim is {dim}"
+            )));
+        }
+    }
+    Ok(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint() -> Checkpoint {
+        let dim = 3;
+        let mut trace = Trace::new("CHB");
+        trace.iters.push(IterStat {
+            k: 1,
+            loss: 1.5,
+            comms_round: 2,
+            comms_cum: 2,
+            agg_grad_sq: 0.25,
+            step_sq: 1e-3,
+            bits_cum: 384,
+            vclock_us: 1000.0,
+            stale_max: 0,
+            batch_frac: 1.0,
+            epoch: 1.0,
+        });
+        trace.participants.push(2);
+        trace.per_worker_comms = vec![1, 1];
+        trace.comm_map.push(vec![true, false]);
+        Checkpoint {
+            version: CHECKPOINT_VERSION,
+            spec_hash: Some(fnv1a64("{}")),
+            engine: "serial".into(),
+            k: 1,
+            dim,
+            server: ServerState {
+                theta: vec![0.1, -0.2, 3.0e-7],
+                theta_prev: vec![0.0; 3],
+                agg_grad: vec![1.0 / 3.0, 0.0, -5.5],
+                k: 1,
+            },
+            workers: vec![
+                WorkerState {
+                    id: 0,
+                    last_tx: vec![1.0, 2.0, 3.0],
+                    transmissions: 1,
+                    residual: vec![],
+                },
+                WorkerState {
+                    id: 1,
+                    last_tx: vec![0.0; 3],
+                    transmissions: 1,
+                    residual: vec![0.5, -0.25, 0.0],
+                },
+            ],
+            schedule_rng: Some([1, 2, 3, u64::MAX]),
+            net: NetState {
+                rng: [9, 8, 7, 6],
+                dropped: 4,
+                sim_clock_us: 1234.5,
+                up: vec![LinkState { messages: 1, bytes: 32 }; 2],
+                down: vec![LinkState { messages: 1, bytes: 40 }; 2],
+            },
+            trace,
+            async_state: None,
+        }
+    }
+
+    #[test]
+    fn hex_codec_is_bit_exact_for_awkward_values() {
+        for x in [
+            0.0,
+            -0.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::MIN_POSITIVE,
+            1.0 / 3.0,
+            -1e308,
+        ] {
+            let back =
+                f64_vec_from_hex(&hex_f64(x), "t").unwrap()[0];
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        assert!(u64_from_hex("zz", "t").is_err());
+        assert!(f64_vec_from_hex("0123456789abcde", "t").is_err());
+    }
+
+    #[test]
+    fn checkpoint_round_trips_through_json() {
+        let cp = sample_checkpoint();
+        let text = cp.to_json_string();
+        let back = Checkpoint::from_json_str(&text).unwrap();
+        assert_eq!(back.spec_hash, cp.spec_hash);
+        assert_eq!(back.engine, cp.engine);
+        assert_eq!(back.k, cp.k);
+        assert_eq!(back.server, cp.server);
+        assert_eq!(back.workers, cp.workers);
+        assert_eq!(back.schedule_rng, cp.schedule_rng);
+        assert_eq!(back.net, cp.net);
+        assert_eq!(back.trace.iters.len(), 1);
+        assert_eq!(
+            back.trace.iters[0].loss.to_bits(),
+            cp.trace.iters[0].loss.to_bits()
+        );
+        assert_eq!(back.trace.comm_map, cp.trace.comm_map);
+        // and the round trip is textually stable
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn payload_variants_round_trip() {
+        for p in [
+            Payload::Dense(vec![1.5, -2.5]),
+            Payload::Sparse { idx: vec![0, 7], val: vec![3.25, -1.0] },
+            Payload::Packed(PackedBuf {
+                scheme: PackScheme::Int { bits: 8 },
+                len: 3,
+                scale: 0.125,
+                words: vec![0xDEAD_BEEF],
+            }),
+            Payload::Packed(PackedBuf {
+                scheme: PackScheme::Fp16,
+                len: 2,
+                scale: 1.0,
+                words: vec![42],
+            }),
+        ] {
+            let back = payload_from_json(&payload_to_json(&p)).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+
+    #[test]
+    fn version_skew_is_a_typed_error() {
+        let text = sample_checkpoint()
+            .to_json_string()
+            .replace("\"version\": 1", "\"version\": 2");
+        match Checkpoint::from_json_str(&text) {
+            Err(CheckpointError::Version { found: 2, expected: 1 }) => {}
+            other => panic!("expected Version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_and_unknown_keys_are_typed_errors() {
+        let text = sample_checkpoint().to_json_string();
+        match Checkpoint::from_json_str(&text[..text.len() / 2]) {
+            Err(CheckpointError::Parse(_)) => {}
+            other => panic!("expected Parse error, got {other:?}"),
+        }
+        let poisoned = text.replace("\"engine\"", "\"enigne\"");
+        match Checkpoint::from_json_str(&poisoned) {
+            Err(CheckpointError::Corrupt(_)) => {}
+            other => panic!("expected Corrupt error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compat_check_distinguishes_failure_modes() {
+        let cp = sample_checkpoint();
+        assert!(cp.check_compat(cp.spec_hash, "serial", 3, 2).is_ok());
+        // raw runs without a hash interoperate
+        assert!(cp.check_compat(None, "serial", 3, 2).is_ok());
+        assert!(matches!(
+            cp.check_compat(Some(1), "serial", 3, 2),
+            Err(CheckpointError::SpecMismatch { .. })
+        ));
+        assert!(matches!(
+            cp.check_compat(cp.spec_hash, "rayon", 3, 2),
+            Err(CheckpointError::Engine { .. })
+        ));
+        assert!(matches!(
+            cp.check_compat(cp.spec_hash, "serial", 4, 2),
+            Err(CheckpointError::Dimension { found: 3, expected: 4 })
+        ));
+        assert!(matches!(
+            cp.check_compat(cp.spec_hash, "serial", 3, 5),
+            Err(CheckpointError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn save_is_atomic_and_load_round_trips() {
+        let dir = std::env::temp_dir().join(format!(
+            "chb_ckpt_test_{}_{}",
+            std::process::id(),
+            fnv1a64("save_is_atomic")
+        ));
+        let path = dir.join("nested").join("checkpoint.json");
+        let cp = sample_checkpoint();
+        cp.save(&path).unwrap();
+        // the temp file must be gone after the rename
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        assert!(!PathBuf::from(tmp).exists());
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.server, cp.server);
+        // overwrite in place succeeds (the resume loop's steady state)
+        cp.save(&path).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_an_io_error() {
+        let err = Checkpoint::load(Path::new(
+            "/nonexistent/chb/checkpoint.json",
+        ))
+        .unwrap_err();
+        assert!(matches!(err, CheckpointError::Io(_)));
+    }
+
+    #[test]
+    fn policy_cadence_and_path() {
+        let p = CheckpointPolicy::new(10, "/tmp/ckpts");
+        assert!(!p.due(5));
+        assert!(p.due(10));
+        assert!(p.due(20));
+        assert!(!p.due(0) || p.every == 0);
+        assert_eq!(p.path(), PathBuf::from("/tmp/ckpts/checkpoint.json"));
+        let never = CheckpointPolicy::new(0, "/tmp");
+        assert!(!never.due(10));
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x85944171f73967e8);
+        assert_ne!(fnv1a64("{\"a\":1}"), fnv1a64("{\"a\":2}"));
+    }
+}

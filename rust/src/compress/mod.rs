@@ -209,6 +209,13 @@ impl CodecScratch {
     pub fn residual(&self) -> &[f64] {
         &self.residual
     }
+
+    /// Restore the error-feedback residual from a checkpoint (an
+    /// empty slice restores the pre-first-compress state).
+    pub fn set_residual(&mut self, r: &[f64]) {
+        self.residual.clear();
+        self.residual.extend_from_slice(r);
+    }
 }
 
 /// A compressed uplink payload (the allocating convenience form; the

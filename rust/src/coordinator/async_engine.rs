@@ -34,20 +34,24 @@
 
 use std::sync::Arc;
 
+use crate::checkpoint::{
+    AsyncState, Checkpoint, CheckpointError, EvSnap, QueuedEv, ServerState,
+    StationState, WorkerState, CHECKPOINT_VERSION,
+};
 use crate::metrics::{IterStat, StalenessStats, Trace};
 use crate::net::{
-    Direction, EventQueue, LatencyModel, SimNetwork,
+    Direction, EventKey, EventQueue, LatencyModel, SimNetwork,
 };
 use crate::optim::{
     self, CensorDecision, CensorRule, StalenessBoundedCensor,
 };
 use crate::rng::{SplitMix64, Xoshiro256};
 
-use super::engine::{AsyncSummary, RunConfig};
+use super::engine::{net_state, restore_net, AsyncSummary, RunConfig, RunContext};
 use super::participation::Participation;
 use super::protocol::broadcast_bytes;
 use super::server::Server;
-use super::worker::{Worker, WorkerRound};
+use super::worker::{Worker, WorkerRound, WorkerSnapshot};
 
 /// Per-worker compute-time model (virtual µs per gradient round).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -237,10 +241,44 @@ pub fn run_async_with_rules(
     workers: &mut [Worker],
     cfg: &RunConfig,
     acfg: &AsyncConfig,
-    mut server: Server,
+    server: Server,
     censor: Arc<dyn CensorRule>,
     label: &str,
 ) -> AsyncOutcome {
+    run_async_with_rules_ctx(
+        workers,
+        cfg,
+        acfg,
+        server,
+        censor,
+        label,
+        &RunContext::default(),
+    )
+    .expect("checkpoint-free run cannot fail")
+}
+
+/// [`run_async_with_rules`] with a checkpoint/resume environment —
+/// the asynchronous counterpart of
+/// [`run_with_rules_ctx`](super::engine::run_with_rules_ctx).
+///
+/// Checkpoints are taken at server-step boundaries (right after a fold
+/// and its re-broadcasts), capturing the entire virtual world: the
+/// pending event queue with exact keys, per-worker stations,
+/// compute-time RNG streams, staleness-censor counters, and the
+/// telescoping bookkeeping sums.  Fault-plan worker crashes are keyed
+/// on each worker's *local* round count (there are no global rounds
+/// here); server kills are keyed on server steps, exactly as in the
+/// synchronous engines.
+#[allow(clippy::too_many_arguments)]
+pub fn run_async_with_rules_ctx(
+    workers: &mut [Worker],
+    cfg: &RunConfig,
+    acfg: &AsyncConfig,
+    mut server: Server,
+    censor: Arc<dyn CensorRule>,
+    label: &str,
+    ctx: &RunContext,
+) -> Result<AsyncOutcome, CheckpointError> {
     assert!(
         cfg.participation == Participation::Full,
         "the async engine runs full participation by construction; \
@@ -255,16 +293,22 @@ pub fn run_async_with_rules(
     let mut q: EventQueue<Ev> = EventQueue::new();
     let mut trace = Trace::new(label);
     trace.worker_staleness = vec![StalenessStats::default(); m];
+    let faults = &cfg.faults;
 
     // per-worker censor rules: the staleness bound carries a
-    // consecutive-skip counter, so it must not be shared across workers
+    // consecutive-skip counter, so it must not be shared across
+    // workers (and the checkpoint layer captures each counter through
+    // the `wrappers` handles)
+    let mut wrappers: Vec<Arc<StalenessBoundedCensor>> = Vec::new();
     let censors: Vec<Arc<dyn CensorRule>> = (0..m)
         .map(|_| match acfg.max_staleness {
             None => Arc::clone(&censor),
-            Some(s) => Arc::new(StalenessBoundedCensor::new(
-                Arc::clone(&censor),
-                s,
-            )) as Arc<dyn CensorRule>,
+            Some(s) => {
+                let w =
+                    Arc::new(StalenessBoundedCensor::new(Arc::clone(&censor), s));
+                wrappers.push(Arc::clone(&w));
+                w as Arc<dyn CensorRule>
+            }
         })
         .collect();
 
@@ -287,13 +331,49 @@ pub fn run_async_with_rules(
         })
         .collect();
 
+    // per-worker completed gradient rounds — the fault plan's round
+    // key in this engine
+    let mut local_rounds = vec![0usize; m];
+
     let mut applied_sum = vec![0.0; dim];
     let mut dropped_sum = vec![0.0; dim];
     let mut vclock_us = 0.0;
 
-    // initial broadcast at t = 0
     let down_bytes = broadcast_bytes(dim);
-    if cfg.max_iters > 0 {
+    if let Some(cp) = &ctx.resume {
+        cp.check_compat(ctx.spec_hash, "async", dim, m)?;
+        let astate = cp.async_state.as_ref().ok_or_else(|| {
+            CheckpointError::Corrupt(
+                "async checkpoint is missing its \"async\" section".into(),
+            )
+        })?;
+        if astate.censor_skips.len() != wrappers.len() {
+            return Err(CheckpointError::Corrupt(format!(
+                "checkpoint carries {} staleness-censor counters, \
+                 this run has {}",
+                astate.censor_skips.len(),
+                wrappers.len()
+            )));
+        }
+        apply_async(
+            cp,
+            astate,
+            &mut server,
+            workers,
+            &mut net,
+            &mut q,
+            &mut stations,
+            &mut loss_cache,
+            &mut comp_rng,
+            &wrappers,
+            &mut local_rounds,
+            &mut applied_sum,
+            &mut dropped_sum,
+            &mut vclock_us,
+            &mut trace,
+        );
+    } else if cfg.max_iters > 0 {
+        // initial broadcast at t = 0
         for w in 0..m {
             net.send(Direction::Down, w, down_bytes);
             q.push(
@@ -304,6 +384,33 @@ pub fn run_async_with_rules(
             );
         }
     }
+
+    // the server-kill recovery image: the most recent checkpoint, or
+    // the starting state when none has been taken yet
+    let mut recovery = if faults.server_kills.is_empty() {
+        None
+    } else {
+        Some(capture_async(
+            ctx.spec_hash,
+            &server,
+            workers,
+            &net,
+            &q,
+            &stations,
+            &loss_cache,
+            &comp_rng,
+            &wrappers,
+            &local_rounds,
+            &applied_sum,
+            &dropped_sum,
+            vclock_us,
+            &trace,
+        ))
+    };
+    // next kill point to fire (sorted; replay must not re-kill)
+    let mut kill_idx = faults
+        .server_kills
+        .partition_point(|&kk| kk <= server.iteration());
 
     // reports that arrived at the current instant, in worker-id order
     // (two parallel vecs so apply_round gets &[WorkerRound] directly,
@@ -322,12 +429,33 @@ pub fn run_async_with_rules(
             }
             Ev::Compute => {
                 let st = &stations[w];
-                let mut round = workers[w].round(
-                    &st.theta,
-                    st.step_sq,
-                    censors[w].as_ref(),
-                    st.version + 1,
-                );
+                local_rounds[w] += 1;
+                let lr = local_rounds[w];
+                let mut round = if faults.enabled() && faults.down(w, lr) {
+                    // crashed mid-loop: no gradient, no censor-state
+                    // change — eq. (5) carries the stale term, and the
+                    // zero-byte completion ping keeps the worker's
+                    // event loop alive for its eventual rejoin
+                    trace.fault_downs += 1;
+                    workers[w].observe(&st.theta)
+                } else if faults.enabled() && faults.rejoin(w, lr) {
+                    // first completed round back: transmit uncensored
+                    // to re-sync θ̂ before censored reporting restarts
+                    trace.fault_rejoins += 1;
+                    workers[w].round_forced(
+                        &st.theta,
+                        st.step_sq,
+                        censors[w].as_ref(),
+                        st.version + 1,
+                    )
+                } else {
+                    workers[w].round(
+                        &st.theta,
+                        st.step_sq,
+                        censors[w].as_ref(),
+                        st.version + 1,
+                    )
+                };
                 let up_delay;
                 if round.decision == CensorDecision::Transmit {
                     let nbytes = round.bits.div_ceil(8) + 8;
@@ -393,6 +521,63 @@ pub fn run_async_with_rules(
                         Ev::Down,
                     );
                 }
+                // a server-step boundary: the state now says "after
+                // step k, replies issued" — the checkpointable instant
+                let k_now = server.iteration();
+                if let Some(policy) = &ctx.checkpoint {
+                    if policy.due(k_now) {
+                        let cp = capture_async(
+                            ctx.spec_hash,
+                            &server,
+                            workers,
+                            &net,
+                            &q,
+                            &stations,
+                            &loss_cache,
+                            &comp_rng,
+                            &wrappers,
+                            &local_rounds,
+                            &applied_sum,
+                            &dropped_sum,
+                            vclock_us,
+                            &trace,
+                        );
+                        cp.save(&policy.path())?;
+                        if recovery.is_some() {
+                            recovery = Some(cp);
+                        }
+                    }
+                }
+                if kill_idx < faults.server_kills.len()
+                    && faults.server_kills[kill_idx] == k_now
+                {
+                    kill_idx += 1;
+                    // the server dies after step k_now and comes back
+                    // from its last checkpoint; the deterministic
+                    // replay reproduces the kill-free run bit for bit
+                    let cp = recovery.clone().expect("recovery image exists");
+                    let astate =
+                        cp.async_state.as_ref().expect("captured async state");
+                    apply_async(
+                        &cp,
+                        astate,
+                        &mut server,
+                        workers,
+                        &mut net,
+                        &mut q,
+                        &mut stations,
+                        &mut loss_cache,
+                        &mut comp_rng,
+                        &wrappers,
+                        &mut local_rounds,
+                        &mut applied_sum,
+                        &mut dropped_sum,
+                        &mut vclock_us,
+                        &mut trace,
+                    );
+                    batch.clear();
+                    batch_versions.clear();
+                }
             }
         }
     }
@@ -408,14 +593,181 @@ pub fn run_async_with_rules(
     }
 
     trace.per_worker_comms = workers.iter().map(|w| w.transmissions).collect();
-    AsyncOutcome {
+    Ok(AsyncOutcome {
         trace,
         agg_grad: server.agg_grad.clone(),
         applied_sum,
         dropped_sum,
         inflight_sum,
         vclock_us,
+    })
+}
+
+/// Snapshot the complete asynchronous world at a server-step boundary.
+#[allow(clippy::too_many_arguments)]
+fn capture_async(
+    spec_hash: Option<u64>,
+    server: &Server,
+    workers: &[Worker],
+    net: &SimNetwork,
+    q: &EventQueue<Ev>,
+    stations: &[Station],
+    loss_cache: &[f64],
+    comp_rng: &[Xoshiro256],
+    wrappers: &[Arc<StalenessBoundedCensor>],
+    local_rounds: &[usize],
+    applied_sum: &[f64],
+    dropped_sum: &[f64],
+    vclock_us: f64,
+    trace: &Trace,
+) -> Checkpoint {
+    let (seq, last_popped_us) = q.counters();
+    let queue = q
+        .entries_ordered()
+        .into_iter()
+        .map(|(key, ev)| QueuedEv {
+            time_us: key.time_us,
+            rank: key.rank,
+            worker: key.worker,
+            seq: key.seq(),
+            ev: match ev {
+                Ev::Down => EvSnap::Down,
+                Ev::Compute => EvSnap::Compute,
+                Ev::Up(round, version) => EvSnap::Up {
+                    round: round.clone(),
+                    version: *version,
+                },
+            },
+        })
+        .collect();
+    Checkpoint {
+        version: CHECKPOINT_VERSION,
+        spec_hash,
+        engine: "async".into(),
+        k: server.iteration(),
+        dim: server.dim(),
+        server: ServerState {
+            theta: server.theta.clone(),
+            theta_prev: server.theta_prev.clone(),
+            agg_grad: server.agg_grad.clone(),
+            k: server.iteration(),
+        },
+        workers: workers
+            .iter()
+            .map(|w| {
+                let s = w.snapshot();
+                WorkerState {
+                    id: s.id,
+                    last_tx: s.last_tx,
+                    transmissions: s.transmissions,
+                    residual: s.residual,
+                }
+            })
+            .collect(),
+        schedule_rng: None,
+        net: net_state(net),
+        trace: trace.clone(),
+        async_state: Some(AsyncState {
+            queue,
+            seq,
+            last_popped_us,
+            stations: stations
+                .iter()
+                .map(|s| StationState {
+                    theta: s.theta.as_ref().clone(),
+                    step_sq: s.step_sq,
+                    version: s.version,
+                })
+                .collect(),
+            loss_cache: loss_cache.to_vec(),
+            comp_rng: comp_rng.iter().map(|r| r.state()).collect(),
+            censor_skips: wrappers.iter().map(|w| w.pending_skips()).collect(),
+            local_rounds: local_rounds.to_vec(),
+            applied_sum: applied_sum.to_vec(),
+            dropped_sum: dropped_sum.to_vec(),
+            vclock_us,
+        }),
     }
+}
+
+/// Overwrite every piece of asynchronous run state from a checkpoint.
+/// Callers validate compatibility (and the presence of `astate`) first,
+/// so this function cannot fail part-way through a mutation.
+#[allow(clippy::too_many_arguments)]
+fn apply_async(
+    cp: &Checkpoint,
+    astate: &AsyncState,
+    server: &mut Server,
+    workers: &mut [Worker],
+    net: &mut SimNetwork,
+    q: &mut EventQueue<Ev>,
+    stations: &mut Vec<Station>,
+    loss_cache: &mut [f64],
+    comp_rng: &mut [Xoshiro256],
+    wrappers: &[Arc<StalenessBoundedCensor>],
+    local_rounds: &mut [usize],
+    applied_sum: &mut [f64],
+    dropped_sum: &mut [f64],
+    vclock_us: &mut f64,
+    trace: &mut Trace,
+) {
+    server.restore_state(
+        cp.server.theta.clone(),
+        cp.server.theta_prev.clone(),
+        cp.server.agg_grad.clone(),
+        cp.server.k,
+    );
+    for (w, ws) in workers.iter_mut().zip(&cp.workers) {
+        w.restore(&WorkerSnapshot {
+            id: ws.id,
+            last_tx: ws.last_tx.clone(),
+            transmissions: ws.transmissions,
+            residual: ws.residual.clone(),
+        });
+    }
+    restore_net(net, &cp.net);
+    let entries = astate
+        .queue
+        .iter()
+        .map(|e| {
+            let key = EventKey {
+                time_us: e.time_us,
+                rank: e.rank,
+                worker: e.worker,
+                seq: e.seq,
+            };
+            let ev = match &e.ev {
+                EvSnap::Down => Ev::Down,
+                EvSnap::Compute => Ev::Compute,
+                EvSnap::Up { round, version } => {
+                    Ev::Up(round.clone(), *version)
+                }
+            };
+            (key, ev)
+        })
+        .collect();
+    *q = EventQueue::restore(entries, astate.seq, astate.last_popped_us);
+    *stations = astate
+        .stations
+        .iter()
+        .map(|s| Station {
+            theta: Arc::new(s.theta.clone()),
+            step_sq: s.step_sq,
+            version: s.version,
+        })
+        .collect();
+    loss_cache.copy_from_slice(&astate.loss_cache);
+    for (r, s) in comp_rng.iter_mut().zip(&astate.comp_rng) {
+        *r = Xoshiro256::from_state(*s);
+    }
+    for (w, &n) in wrappers.iter().zip(&astate.censor_skips) {
+        w.set_pending_skips(n);
+    }
+    local_rounds.copy_from_slice(&astate.local_rounds);
+    applied_sum.copy_from_slice(&astate.applied_sum);
+    dropped_sum.copy_from_slice(&astate.dropped_sum);
+    *vclock_us = astate.vclock_us;
+    *trace = cp.trace.clone();
 }
 
 /// Fold one same-instant batch of reports and take one server step;

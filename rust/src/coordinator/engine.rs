@@ -17,16 +17,21 @@
 
 use std::sync::Arc;
 
+use crate::checkpoint::{
+    Checkpoint, CheckpointError, CheckpointPolicy, LinkState, NetState,
+    ServerState, WorkerState, CHECKPOINT_VERSION,
+};
 use crate::metrics::{IterStat, Trace};
-use crate::net::{Direction, SimNetwork};
+use crate::net::{Direction, LinkStats, SimNetwork};
 use crate::optim::{self, CensorDecision, CensorRule, Method, MethodParams};
 
-use super::async_engine::{run_async_with_rules, AsyncConfig};
+use super::async_engine::{run_async_with_rules_ctx, AsyncConfig};
+use super::fault::FaultPlan;
 use super::participation::{Participation, Schedule};
 use super::pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
 use super::protocol::broadcast_bytes;
 use super::server::Server;
-use super::worker::Worker;
+use super::worker::{Worker, WorkerSnapshot};
 
 /// When to stop a run (checked after every iteration).
 #[derive(Clone, Copy, Debug)]
@@ -59,6 +64,9 @@ pub struct RunConfig {
     pub drop_prob: f64,
     /// seed for the drop stream
     pub drop_seed: u64,
+    /// seeded worker crash/rejoin + server-kill schedule (default:
+    /// none — the paper setting)
+    pub faults: FaultPlan,
 }
 
 impl RunConfig {
@@ -74,6 +82,7 @@ impl RunConfig {
             record_comm_map: false,
             drop_prob: 0.0,
             drop_seed: 0,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -99,6 +108,12 @@ impl RunConfig {
     pub fn with_drops(mut self, prob: f64, seed: u64) -> Self {
         self.drop_prob = prob;
         self.drop_seed = seed;
+        self
+    }
+
+    /// Inject a seeded worker crash/rejoin + server-kill schedule.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -188,6 +203,121 @@ fn fold_round(
     }
 }
 
+/// Execution-environment options for one run: checkpoint cadence,
+/// resume source, and the manifest identity stamped into checkpoints.
+/// The default (`None` everywhere) reproduces the historical behavior
+/// exactly — and because writing a checkpoint never draws from any run
+/// RNG, a checkpointed run and an un-checkpointed run of the same
+/// config are bit-identical too.
+#[derive(Clone, Debug, Default)]
+pub struct RunContext {
+    /// write a checkpoint every `policy.every` server steps
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// resume from this snapshot instead of starting at round 1
+    pub resume: Option<Checkpoint>,
+    /// FNV-1a hash of the owning `manifest.json` (stamped into
+    /// checkpoints, verified on resume)
+    pub spec_hash: Option<u64>,
+}
+
+/// Capture the network simulator into its checkpoint form.
+pub(crate) fn net_state(net: &SimNetwork) -> NetState {
+    let link = |l: &LinkStats| LinkState { messages: l.messages, bytes: l.bytes };
+    NetState {
+        rng: net.rng_state(),
+        dropped: net.dropped(),
+        sim_clock_us: net.sim_clock_us,
+        up: net.up.iter().map(link).collect(),
+        down: net.down.iter().map(link).collect(),
+    }
+}
+
+/// Restore the network simulator from its checkpoint form (shape was
+/// validated at decode time).
+pub(crate) fn restore_net(net: &mut SimNetwork, state: &NetState) {
+    net.restore_state(state.rng, state.dropped);
+    net.sim_clock_us = state.sim_clock_us;
+    for (l, s) in net.up.iter_mut().zip(&state.up) {
+        *l = LinkStats { messages: s.messages, bytes: s.bytes };
+    }
+    for (l, s) in net.down.iter_mut().zip(&state.down) {
+        *l = LinkStats { messages: s.messages, bytes: s.bytes };
+    }
+}
+
+fn capture_sync(
+    engine: &str,
+    spec_hash: Option<u64>,
+    server: &Server,
+    pool: &mut dyn WorkerPool,
+    schedule: &Schedule,
+    net: &SimNetwork,
+    trace: &Trace,
+) -> Checkpoint {
+    Checkpoint {
+        version: CHECKPOINT_VERSION,
+        spec_hash,
+        engine: engine.to_string(),
+        k: server.iteration(),
+        dim: server.dim(),
+        server: ServerState {
+            theta: server.theta.clone(),
+            theta_prev: server.theta_prev.clone(),
+            agg_grad: server.agg_grad.clone(),
+            k: server.iteration(),
+        },
+        workers: pool
+            .snapshots()
+            .into_iter()
+            .map(|s| WorkerState {
+                id: s.id,
+                last_tx: s.last_tx,
+                transmissions: s.transmissions,
+                residual: s.residual,
+            })
+            .collect(),
+        schedule_rng: Some(schedule.rng_state()),
+        net: net_state(net),
+        trace: trace.clone(),
+        async_state: None,
+    }
+}
+
+/// Apply a captured (or loaded) checkpoint to the live sync-engine
+/// state.  Only called with a fully decoded, shape-validated
+/// [`Checkpoint`], so a corrupt file can never half-mutate a run.
+fn restore_sync(
+    cp: &Checkpoint,
+    server: &mut Server,
+    pool: &mut dyn WorkerPool,
+    schedule: &mut Schedule,
+    net: &mut SimNetwork,
+    trace: &mut Trace,
+) {
+    server.restore_state(
+        cp.server.theta.clone(),
+        cp.server.theta_prev.clone(),
+        cp.server.agg_grad.clone(),
+        cp.server.k,
+    );
+    let snaps: Vec<WorkerSnapshot> = cp
+        .workers
+        .iter()
+        .map(|w| WorkerSnapshot {
+            id: w.id,
+            last_tx: w.last_tx.clone(),
+            transmissions: w.transmissions,
+            residual: w.residual.clone(),
+        })
+        .collect();
+    pool.restore(&snaps);
+    if let Some(s) = cp.schedule_rng {
+        schedule.set_rng_state(s);
+    }
+    restore_net(net, &cp.net);
+    *trace = cp.trace.clone();
+}
+
 /// The single round loop behind every engine flavor (dyn-dispatched so
 /// it is compiled once, not per pool type).  `server` and `censor`
 /// arrive pre-built, which is also the ablation entry point: inject a
@@ -195,22 +325,77 @@ fn fold_round(
 /// (censored Nesterov, non-paper censor rules, …) — `cfg.method` and
 /// `cfg.params` are then ignored, while scheduling, drop injection,
 /// comm accounting, and stop rules apply exactly as in a normal run.
-pub fn run_with_rules(
+///
+/// `engine_name` labels checkpoints ("serial"/"threaded"/"rayon") and
+/// is what a resume is validated against; `ctx` carries the
+/// checkpoint/resume environment.  Errors are all checkpoint-layer
+/// (resume incompatibility, I/O) — a checkpoint-free run cannot fail.
+pub fn run_with_rules_ctx(
     pool: &mut dyn WorkerPool,
     cfg: &RunConfig,
     mut server: Server,
     censor: Arc<dyn CensorRule>,
     label: &str,
-) -> Trace {
+    engine_name: &str,
+    ctx: &RunContext,
+) -> Result<Trace, CheckpointError> {
     let m = pool.num_workers();
     let mut net =
         SimNetwork::new(m).with_drops(cfg.drop_prob, cfg.drop_seed);
     let mut schedule = Schedule::new(cfg.participation);
     let mut trace = Trace::new(label);
     let dim = server.dim();
+    let faults = &cfg.faults;
 
-    for k in 1..=cfg.max_iters {
-        let active = Arc::new(schedule.active_set(k, m));
+    let mut start_k = 1;
+    if let Some(cp) = &ctx.resume {
+        cp.check_compat(ctx.spec_hash, engine_name, dim, m)?;
+        restore_sync(cp, &mut server, pool, &mut schedule, &mut net, &mut trace);
+        start_k = cp.k + 1;
+    }
+    // the server-kill recovery image: the most recent checkpoint, or
+    // the pre-loop state when none has been taken yet
+    let mut recovery = if faults.server_kills.is_empty() {
+        None
+    } else {
+        Some(capture_sync(
+            engine_name,
+            ctx.spec_hash,
+            &server,
+            pool,
+            &schedule,
+            &net,
+            &trace,
+        ))
+    };
+    // next kill point to fire (the list is sorted): killing,
+    // restoring, and replaying back through the same round must not
+    // re-kill, so fired points are left behind the index
+    let mut kill_idx =
+        faults.server_kills.partition_point(|&kk| kk < start_k);
+
+    let mut k = start_k;
+    while k <= cfg.max_iters {
+        let mut active_vec = schedule.active_set(k, m);
+        let mut force = Vec::new();
+        if faults.enabled() {
+            force = vec![false; m];
+            for (w, f) in force.iter_mut().enumerate() {
+                if faults.down(w, k) {
+                    // crashed: forced inactive — observes only, exactly
+                    // like a censored worker, so eq. (5) carries its
+                    // stale term undisturbed
+                    active_vec[w] = false;
+                    trace.fault_downs += 1;
+                } else if active_vec[w] && faults.rejoin(w, k) {
+                    // first round back: transmit uncensored to re-sync
+                    // θ̂ before censored reporting restarts
+                    *f = true;
+                    trace.fault_rejoins += 1;
+                }
+            }
+        }
+        let active = Arc::new(active_vec);
         let n_active = active.iter().filter(|&&a| a).count();
         // θᵏ only goes down to the scheduled workers
         net.broadcast(&active, broadcast_bytes(dim));
@@ -219,6 +404,7 @@ pub fn run_with_rules(
             theta: Arc::new(server.theta.clone()),
             step_sq: server.theta_step_sq(),
             active,
+            force: Arc::new(force),
             censor: Arc::clone(&censor),
         };
         let mut rounds = pool.run_round(&input);
@@ -234,9 +420,69 @@ pub fn run_with_rules(
         if stop {
             break;
         }
+        if let Some(policy) = &ctx.checkpoint {
+            if policy.due(k) {
+                let cp = capture_sync(
+                    engine_name,
+                    ctx.spec_hash,
+                    &server,
+                    pool,
+                    &schedule,
+                    &net,
+                    &trace,
+                );
+                cp.save(&policy.path())?;
+                if recovery.is_some() {
+                    recovery = Some(cp);
+                }
+            }
+        }
+        if kill_idx < faults.server_kills.len()
+            && faults.server_kills[kill_idx] == k
+        {
+            kill_idx += 1;
+            // the server dies after round k and comes back from its
+            // last checkpoint; determinism makes the replay, and thus
+            // the final trace, bit-identical to the kill-free run
+            let cp = recovery.as_ref().expect("recovery image exists");
+            restore_sync(
+                cp,
+                &mut server,
+                pool,
+                &mut schedule,
+                &mut net,
+                &mut trace,
+            );
+            k = cp.k + 1;
+            continue;
+        }
+        k += 1;
     }
     trace.per_worker_comms = pool.per_worker_comms();
-    trace
+    Ok(trace)
+}
+
+/// [`run_with_rules_ctx`] without a checkpoint/resume environment —
+/// the historical signature, kept for the legacy entry points and
+/// direct engine users.
+pub fn run_with_rules(
+    pool: &mut dyn WorkerPool,
+    cfg: &RunConfig,
+    server: Server,
+    censor: Arc<dyn CensorRule>,
+    label: &str,
+) -> Trace {
+    let name = pool.name();
+    run_with_rules_ctx(
+        pool,
+        cfg,
+        server,
+        censor,
+        label,
+        name,
+        &RunContext::default(),
+    )
+    .expect("checkpoint-free run cannot fail")
 }
 
 /// The generic round engine: protocol loop over any [`WorkerPool`].
@@ -324,61 +570,93 @@ pub struct EngineRun {
 
 /// The one dispatch every engine flavor routes through: run `cfg` on
 /// `workers` under the chosen [`EngineKind`] with an injected
-/// (server, censor) pair — the superset of [`run_with_rules`] and
-/// [`super::async_engine::run_async_with_rules`].
-pub fn run_engine_with_rules(
+/// (server, censor) pair and a checkpoint/resume environment — the
+/// superset of [`run_with_rules_ctx`] and
+/// [`super::async_engine::run_async_with_rules_ctx`].
+pub fn run_engine_with_rules_ctx(
     kind: &EngineKind,
     mut workers: Vec<Worker>,
     cfg: &RunConfig,
     server: Server,
     censor: Arc<dyn CensorRule>,
     label: &str,
-) -> EngineRun {
+    ctx: &RunContext,
+) -> Result<EngineRun, CheckpointError> {
+    let name = kind.name();
     match kind {
-        EngineKind::Serial => EngineRun {
-            trace: run_with_rules(
+        EngineKind::Serial => Ok(EngineRun {
+            trace: run_with_rules_ctx(
                 &mut SerialPool::new(&mut workers),
                 cfg,
                 server,
                 censor,
                 label,
-            ),
+                name,
+                ctx,
+            )?,
             async_summary: None,
-        },
-        EngineKind::Threaded => EngineRun {
-            trace: run_with_rules(
+        }),
+        EngineKind::Threaded => Ok(EngineRun {
+            trace: run_with_rules_ctx(
                 &mut ThreadedPool::new(workers),
                 cfg,
                 server,
                 censor,
                 label,
-            ),
+                name,
+                ctx,
+            )?,
             async_summary: None,
-        },
+        }),
         EngineKind::Rayon { threads } => {
             let mut pool = if *threads == 0 {
                 RayonPool::new(workers)
             } else {
                 RayonPool::with_threads(workers, *threads)
             };
-            EngineRun {
-                trace: run_with_rules(&mut pool, cfg, server, censor, label),
+            Ok(EngineRun {
+                trace: run_with_rules_ctx(
+                    &mut pool, cfg, server, censor, label, name, ctx,
+                )?,
                 async_summary: None,
-            }
+            })
         }
         EngineKind::Async(acfg) => {
-            let out = run_async_with_rules(
+            let out = run_async_with_rules_ctx(
                 &mut workers,
                 cfg,
                 acfg,
                 server,
                 censor,
                 label,
-            );
+                ctx,
+            )?;
             let (trace, summary) = out.split();
-            EngineRun { trace, async_summary: Some(summary) }
+            Ok(EngineRun { trace, async_summary: Some(summary) })
         }
     }
+}
+
+/// [`run_engine_with_rules_ctx`] without a checkpoint/resume
+/// environment — the historical signature.
+pub fn run_engine_with_rules(
+    kind: &EngineKind,
+    workers: Vec<Worker>,
+    cfg: &RunConfig,
+    server: Server,
+    censor: Arc<dyn CensorRule>,
+    label: &str,
+) -> EngineRun {
+    run_engine_with_rules_ctx(
+        kind,
+        workers,
+        cfg,
+        server,
+        censor,
+        label,
+        &RunContext::default(),
+    )
+    .expect("checkpoint-free run cannot fail")
 }
 
 /// Run `(cfg.method, cfg.params)` on any [`EngineKind`] — the unified

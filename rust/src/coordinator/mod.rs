@@ -35,9 +35,17 @@
 //! batch), while still reporting the full-shard loss so traces stay
 //! comparable.  `BatchSchedule::Full` is bit-identical to the legacy
 //! path on every engine (`tests/batch_equivalence.rs`).
+//!
+//! Fault tolerance cuts across every engine: a seeded [`FaultPlan`]
+//! forces workers down (observe-only rounds — telescope-safe by
+//! eq. 5) and back up (a forced uncensored transmit re-syncs θ̂), and
+//! kills/restores the server at chosen steps; the `_ctx` engine
+//! variants take an [`engine::RunContext`] that adds periodic atomic
+//! checkpoints and bit-identical resume (`tests/checkpoint_resume.rs`).
 
 pub mod async_engine;
 pub mod engine;
+pub mod fault;
 pub mod participation;
 pub mod pool;
 pub mod protocol;
@@ -47,15 +55,19 @@ pub mod worker;
 #[allow(deprecated)] // the shim stays importable from its old path
 pub use async_engine::run_async;
 pub use async_engine::{
-    run_async_detailed, run_async_with_rules, AsyncConfig, AsyncOutcome,
-    ComputeModel,
+    run_async_detailed, run_async_with_rules, run_async_with_rules_ctx,
+    AsyncConfig, AsyncOutcome, ComputeModel,
 };
 pub use engine::{
-    run_engine, run_engine_with_rules, run_rayon, run_serial, run_threaded,
-    run_with_rules, AsyncSummary, EngineKind, EngineRun, RoundEngine,
-    RunConfig, StopRule,
+    run_engine, run_engine_with_rules, run_engine_with_rules_ctx, run_rayon,
+    run_serial, run_threaded, run_with_rules, run_with_rules_ctx,
+    AsyncSummary, EngineKind, EngineRun, RoundEngine, RunConfig, RunContext,
+    StopRule,
 };
+pub use fault::FaultPlan;
 pub use participation::{Participation, Schedule};
 pub use pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
 pub use server::Server;
-pub use worker::{GradientBackend, RustBackend, Worker, WorkerRound};
+pub use worker::{
+    GradientBackend, RustBackend, Worker, WorkerRound, WorkerSnapshot,
+};

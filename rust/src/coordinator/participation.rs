@@ -71,6 +71,17 @@ impl Schedule {
         self.policy
     }
 
+    /// Raw RNG state (checkpoint capture).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the RNG stream from a captured [`Schedule::rng_state`]
+    /// so the next `active_set` draw continues bit-identically.
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Xoshiro256::from_state(s);
+    }
+
     /// The active set for round `k` over `m` workers: `active[id]` is
     /// true iff worker `id` is scheduled.  Always has ≥ 1 worker.
     pub fn active_set(&mut self, _k: usize, m: usize) -> Vec<bool> {

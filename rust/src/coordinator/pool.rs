@@ -40,7 +40,7 @@ use std::thread::JoinHandle;
 use crate::optim::CensorRule;
 
 use super::protocol::{Downlink, Uplink};
-use super::worker::{Worker, WorkerRound};
+use super::worker::{Worker, WorkerRound, WorkerSnapshot};
 
 /// Everything a worker needs to execute round k (the broadcast,
 /// engine-side).  Cheap to clone: the iterate and active set are
@@ -55,6 +55,9 @@ pub struct RoundInput {
     pub step_sq: f64,
     /// `active[id]`: is worker `id` scheduled this round?
     pub active: Arc<Vec<bool>>,
+    /// `force[id]`: must worker `id` transmit uncensored this round?
+    /// (fault-plan rejoins re-sync θ̂ through this; empty ⇒ nobody)
+    pub force: Arc<Vec<bool>>,
     /// the skip-transmission rule every worker applies
     pub censor: Arc<dyn CensorRule>,
 }
@@ -65,7 +68,11 @@ pub struct RoundInput {
 /// instrumentation and leave all censor state untouched.
 pub(crate) fn run_worker_round(w: &mut Worker, input: &RoundInput) -> WorkerRound {
     if input.active[w.id] {
-        w.round(&input.theta, input.step_sq, input.censor.as_ref(), input.k)
+        if !input.force.is_empty() && input.force[w.id] {
+            w.round_forced(&input.theta, input.step_sq, input.censor.as_ref(), input.k)
+        } else {
+            w.round(&input.theta, input.step_sq, input.censor.as_ref(), input.k)
+        }
     } else {
         w.observe(&input.theta)
     }
@@ -85,6 +92,16 @@ pub trait WorkerPool {
     /// Engines call this once, after the last round; threaded pools
     /// shut their workers down here.
     fn per_worker_comms(&mut self) -> Vec<usize>;
+
+    /// Capture every worker's censor-relevant state (ordered by
+    /// worker id) for a checkpoint.  Non-destructive: the pool keeps
+    /// running afterwards.
+    fn snapshots(&mut self) -> Vec<WorkerSnapshot>;
+
+    /// Restore every worker from `snaps` (one per worker, ordered by
+    /// worker id) — the inverse of [`WorkerPool::snapshots`], used on
+    /// resume and server-kill replay.
+    fn restore(&mut self, snaps: &[WorkerSnapshot]);
 
     /// Short label for logs and benches.
     fn name(&self) -> &'static str;
@@ -118,6 +135,17 @@ impl WorkerPool for SerialPool<'_> {
         self.workers.iter().map(|w| w.transmissions).collect()
     }
 
+    fn snapshots(&mut self) -> Vec<WorkerSnapshot> {
+        self.workers.iter().map(|w| w.snapshot()).collect()
+    }
+
+    fn restore(&mut self, snaps: &[WorkerSnapshot]) {
+        assert_eq!(snaps.len(), self.workers.len(), "snapshot count");
+        for (w, s) in self.workers.iter_mut().zip(snaps) {
+            w.restore(s);
+        }
+    }
+
     fn name(&self) -> &'static str {
         "serial"
     }
@@ -149,6 +177,17 @@ impl ThreadedPool {
                         Downlink::Round(input) => {
                             let round = run_worker_round(&mut w, &input);
                             if up.send(Uplink { round }).is_err() {
+                                break;
+                            }
+                        }
+                        Downlink::Snapshot(tx) => {
+                            if tx.send(w.snapshot()).is_err() {
+                                break;
+                            }
+                        }
+                        Downlink::Restore(snap, ack) => {
+                            w.restore(&snap);
+                            if ack.send(()).is_err() {
                                 break;
                             }
                         }
@@ -206,6 +245,35 @@ impl WorkerPool for ThreadedPool {
 
     fn per_worker_comms(&mut self) -> Vec<usize> {
         self.shutdown()
+    }
+
+    fn snapshots(&mut self) -> Vec<WorkerSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        for down in &self.down_txs {
+            down.send(Downlink::Snapshot(tx.clone()))
+                .expect("worker thread died");
+        }
+        let mut out: Vec<Option<WorkerSnapshot>> =
+            (0..self.m).map(|_| None).collect();
+        for _ in 0..self.m {
+            let s = rx.recv().expect("worker thread died");
+            let id = s.id;
+            out[id] = Some(s);
+        }
+        out.into_iter().map(|s| s.expect("missing snapshot")).collect()
+    }
+
+    fn restore(&mut self, snaps: &[WorkerSnapshot]) {
+        assert_eq!(snaps.len(), self.m, "snapshot count");
+        let (ack_tx, ack_rx) = mpsc::channel();
+        for s in snaps {
+            self.down_txs[s.id]
+                .send(Downlink::Restore(s.clone(), ack_tx.clone()))
+                .expect("worker thread died");
+        }
+        for _ in 0..self.m {
+            ack_rx.recv().expect("worker thread died");
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -319,6 +387,20 @@ impl WorkerPool for RayonPool {
             .collect()
     }
 
+    fn snapshots(&mut self) -> Vec<WorkerSnapshot> {
+        self.workers
+            .iter_mut()
+            .map(|w| w.get_mut().expect("poisoned").snapshot())
+            .collect()
+    }
+
+    fn restore(&mut self, snaps: &[WorkerSnapshot]) {
+        assert_eq!(snaps.len(), self.workers.len(), "snapshot count");
+        for (w, s) in self.workers.iter_mut().zip(snaps) {
+            w.get_mut().expect("poisoned").restore(s);
+        }
+    }
+
     fn name(&self) -> &'static str {
         "rayon"
     }
@@ -362,6 +444,7 @@ mod tests {
             theta: Arc::new(vec![1.0, -1.0]),
             step_sq: 0.0,
             active: Arc::new(active),
+            force: Arc::new(Vec::new()),
             censor: Arc::new(NeverCensor),
         }
     }

@@ -5,14 +5,21 @@
 //! helpers model what a real deployment would serialize, so the byte
 //! counters in `net/` stay meaningful.
 
+use std::sync::mpsc::Sender;
+
 use super::pool::RoundInput;
-use super::worker::WorkerRound;
+use super::worker::{WorkerRound, WorkerSnapshot};
 
 /// server → worker
 #[derive(Clone)]
 pub enum Downlink {
     /// start a round: θᵏ, the censor scale, and the active set
     Round(RoundInput),
+    /// report censor-relevant state for a checkpoint
+    Snapshot(Sender<WorkerSnapshot>),
+    /// restore censor-relevant state (resume / server-kill replay);
+    /// the worker acks so the engine can block until all M are reset
+    Restore(WorkerSnapshot, Sender<()>),
     /// shut the worker thread down
     Stop,
 }

@@ -80,6 +80,27 @@ impl Server {
         linalg::dist2_sq(&self.theta, &self.theta_prev)
     }
 
+    /// Overwrite (θ, θ_prev, ∇, k) from a checkpoint.  The update rule
+    /// is *not* serialized: HB/CHB momentum is recomputed from
+    /// `theta − theta_prev` each step, so rebuilding the rule from the
+    /// manifest's (method, params) plus this state resumes
+    /// bit-identically.
+    pub fn restore_state(
+        &mut self,
+        theta: Vec<f64>,
+        theta_prev: Vec<f64>,
+        agg_grad: Vec<f64>,
+        k: usize,
+    ) {
+        assert_eq!(theta.len(), self.theta.len(), "dimension mismatch");
+        assert_eq!(theta_prev.len(), self.theta.len(), "dimension mismatch");
+        assert_eq!(agg_grad.len(), self.theta.len(), "dimension mismatch");
+        self.theta = theta;
+        self.theta_prev = theta_prev;
+        self.agg_grad = agg_grad;
+        self.k = k;
+    }
+
     /// Fold one round of worker reports and advance θ (eq. 4 + 5).
     pub fn apply_round(&mut self, rounds: &[WorkerRound]) -> RoundOutcome {
         self.k += 1;

@@ -119,6 +119,25 @@ pub struct WorkerRound {
     pub batch_frac: f64,
 }
 
+/// The persistent (checkpoint-worthy) slice of a [`Worker`]: the
+/// censor reference state θ̂ (as the last-transmitted gradient), the
+/// lifetime transmit counter, and the error-feedback residual.  The
+/// gradient/delta/payload buffers are per-round scratch and are
+/// deliberately absent — restoring a snapshot and replaying the next
+/// round reproduces them bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSnapshot {
+    /// worker id m ∈ 0..M
+    pub id: usize,
+    /// ∇f_m(θ̂_m) — the censor reference (decoded-payload bookkeeping
+    /// under compression)
+    pub last_tx: Vec<f64>,
+    /// lifetime transmit counter S_m
+    pub transmissions: usize,
+    /// error-feedback residual (empty when no EF codec has run)
+    pub residual: Vec<f64>,
+}
+
 /// One federated worker: shard + censor state.
 pub struct Worker {
     /// worker id m ∈ 0..M
@@ -209,6 +228,31 @@ impl Worker {
         censor: &dyn CensorRule,
         k: usize,
     ) -> WorkerRound {
+        self.round_inner(theta, theta_step_sq, censor, k, false)
+    }
+
+    /// Forced-transmission round (fault-plan rejoin): identical to
+    /// [`Worker::round`] except the censor is bypassed — the worker
+    /// transmits unconditionally, re-syncing its reference state θ̂ to
+    /// the current gradient before censored reporting resumes.
+    pub fn round_forced(
+        &mut self,
+        theta: &[f64],
+        theta_step_sq: f64,
+        censor: &dyn CensorRule,
+        k: usize,
+    ) -> WorkerRound {
+        self.round_inner(theta, theta_step_sq, censor, k, true)
+    }
+
+    fn round_inner(
+        &mut self,
+        theta: &[f64],
+        theta_step_sq: f64,
+        censor: &dyn CensorRule,
+        k: usize,
+        force: bool,
+    ) -> WorkerRound {
         // gradient flavor: full sweep (legacy, bit-pinned) unless the
         // sampler draws a proper row subset for round k.  Batched
         // rounds still report the FULL-shard loss (measurement side,
@@ -239,7 +283,11 @@ impl Worker {
         };
         linalg::sub_into(&self.grad, &self.last_tx_grad, &mut self.delta);
         let delta_sq = linalg::norm2_sq(&self.delta);
-        let decision = censor.decide(delta_sq, theta_step_sq, k);
+        let decision = if force {
+            CensorDecision::Transmit
+        } else {
+            censor.decide(delta_sq, theta_step_sq, k)
+        };
         let (delta, bits) = if decision == CensorDecision::Transmit {
             self.transmissions += 1;
             // reclaim the arena slot for in-place reuse; if an engine
@@ -316,6 +364,31 @@ impl Worker {
     /// Last transmitted gradient (for invariant checks).
     pub fn last_transmitted(&self) -> &[f64] {
         &self.last_tx_grad
+    }
+
+    /// Capture the persistent state (checkpointing).
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            id: self.id,
+            last_tx: self.last_tx_grad.clone(),
+            transmissions: self.transmissions,
+            residual: self.codec_scratch.residual().to_vec(),
+        }
+    }
+
+    /// Restore the persistent state from a snapshot.  The next round
+    /// this worker runs is bit-identical to the round the snapshotted
+    /// worker would have run.
+    pub fn restore(&mut self, s: &WorkerSnapshot) {
+        assert_eq!(self.id, s.id, "snapshot/worker id mismatch");
+        assert_eq!(
+            self.last_tx_grad.len(),
+            s.last_tx.len(),
+            "snapshot dimension mismatch"
+        );
+        self.last_tx_grad.copy_from_slice(&s.last_tx);
+        self.transmissions = s.transmissions;
+        self.codec_scratch.set_residual(&s.residual);
     }
 }
 

@@ -19,6 +19,9 @@
 //! * [`coordinator`] — the federated round engines (synchronous pools
 //!   and the asynchronous discrete-event engine) behind one
 //!   [`coordinator::EngineKind`] dispatch, and comm accounting.
+//! * [`checkpoint`] — versioned, atomically-written run snapshots
+//!   with bit-identical resume, plus the fault-injection plan
+//!   ([`coordinator::FaultPlan`]) they are tested against.
 //! * [`runtime`] — PJRT artifact loading/execution.
 //! * [`experiments`] — one driver per paper figure/table.
 //! * [`theory`] — the paper's parameter conditions (10)–(12), rate
@@ -27,6 +30,7 @@
 #![warn(missing_docs)]
 
 pub mod bench;
+pub mod checkpoint;
 pub mod compress;
 pub mod coordinator;
 pub mod data;

@@ -5,6 +5,8 @@
 //!                             (fig1…fig12, table1…table3, ablations, all)
 //! chb-fed run                 one federated run (flags → RunSpec → Session)
 //! chb-fed run --spec FILE     replay a run from a manifest
+//! chb-fed artifact            kick-tires pipeline: run every example
+//!                             spec, index results by manifest hash
 //! chb-fed list                datasets, artifacts, experiments
 //! chb-fed check-theory        evaluate Lemma-1/Theorem-1 conditions
 //! ```
@@ -19,12 +21,13 @@
 //! iteration budgets; default is the quick profile sized for this
 //! 1-core image) --verbose
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use chb_fed::checkpoint::{fnv1a64, Checkpoint, CheckpointPolicy};
 use chb_fed::coordinator::{
-    AsyncConfig, ComputeModel, EngineKind, Participation,
+    AsyncConfig, ComputeModel, EngineKind, FaultPlan, Participation,
 };
 use chb_fed::data::batch::BatchSchedule;
 use chb_fed::experiments::{ablations, figures, tables};
@@ -64,6 +67,10 @@ USAGE:
               [--compute-model uniform|pareto] [--compute-us US]
               [--pareto-shape A] [--compute-seed S] [--max-staleness S]
               [--net-fixed-us F] [--net-per-kib-us P]
+              [--checkpoint-every N] [--checkpoint-dir DIR]
+              [--resume FILE]
+              [--fault-prob P] [--fault-down R] [--fault-seed S]
+              [--server-kill K1,K2,...]
               [--artifacts DIR] [--out DIR] [--data DIR]
       Flags assemble a RunSpec (the typed, serializable run
       description); --spec FILE loads one instead (combining --spec
@@ -91,6 +98,26 @@ USAGE:
       worker's consecutive censored rounds; --iters counts server
       steps.  Zero latency + uniform compute reproduces --engine
       serial exactly.
+      checkpointing: --checkpoint-every N atomically writes
+      checkpoint.json every N server steps (into --checkpoint-dir,
+      default the run's output directory); --resume FILE restores a
+      run from a checkpoint and continues it bit-identically to the
+      uninterrupted run.  Checkpointing never changes the trace.
+      fault injection: --fault-prob P crashes each (worker, round)
+      with seeded probability P for --fault-down rounds (down workers
+      observe only; their first round back transmits uncensored to
+      re-sync the censor reference); --server-kill kills the server
+      after the listed rounds and restores it from its latest
+      checkpoint — the replayed trace is bit-identical to the
+      kill-free run.  The plan serializes into manifest.json.
+  chb-fed artifact [--smoke] [--specs DIR] [--out DIR] [--data DIR]
+                   [--artifacts DIR] [--full]
+      the kick-tires pipeline: runs every spec in examples/specs/
+      (or --specs DIR), indexes each result directory by its manifest
+      hash into <out>/store/<hash>/, and writes store/index.json,
+      store/summary.csv, and store/REPORT.md.  --smoke clamps every
+      spec to ≤ 25 iterations (the CI profile); --full additionally
+      regenerates the paper figures/tables at paper-scale budgets.
   chb-fed list [--data DIR] [--artifacts DIR]
   chb-fed check-theory --l L --mu MU [--m M] [--delta D]
 
@@ -118,6 +145,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             "batch-replace",
             "dump-spec",
             "error-feedback",
+            "smoke",
         ],
     )?;
     if args.flag("verbose") {
@@ -130,6 +158,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match args.positional[0].as_str() {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
+        "artifact" => cmd_artifact(&args),
         "list" => cmd_list(&args),
         "check-theory" => cmd_theory(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
@@ -151,42 +180,53 @@ fn cmd_exp(args: &Args) -> Result<()> {
     // all options are read by now — reject typos *before* hour-scale
     // driver runs, not after
     args.finish()?;
-    let run_one = |id: &str| -> Result<()> {
-        let t = chb_fed::util::timer::Timer::quiet();
-        let r = match id {
-            "fig1" => figures::fig1(out, data, quick),
-            "fig2" => figures::fig2(out, data, quick),
-            "fig3" => figures::fig3(out, data, quick),
-            "fig4" => figures::fig4(out, data, quick),
-            "fig5" => figures::fig5(out, data, quick),
-            "fig6" => figures::fig6(out, data, quick),
-            "fig7" => figures::fig7(out, data, quick),
-            "fig8" => figures::fig8(out, data, quick),
-            "fig9" => figures::fig9(out, data, quick),
-            "fig10" => figures::fig10(out, data, quick),
-            "fig11" => figures::fig11(out, data, quick),
-            "fig12" => figures::fig12(out, data, quick),
-            "table1" => tables::table1(out, data, quick),
-            "table2" => tables::table2(out, data, quick),
-            "table3" => tables::table3(out, data, quick),
-            "ablations" => ablations::all(out, quick),
-            other => bail!("unknown experiment {other:?}"),
-        };
-        println!("[{id}: {:.1}s]", t.elapsed_secs());
-        r
-    };
     if id == "all" {
-        for id in [
-            "fig1", "fig2", "fig3", "fig11", "fig12", "table1", "table2",
-            "fig4", "fig5", "fig6", "fig7", "table3", "fig8", "fig9",
-            "fig10", "ablations",
-        ] {
-            run_one(id)?;
+        for id in ALL_EXPERIMENTS {
+            run_experiment(id, out, data, quick)?;
         }
         Ok(())
     } else {
-        run_one(id)
+        run_experiment(id, out, data, quick)
     }
+}
+
+/// Every paper artifact, in dependency-friendly order (the `exp all`
+/// and `artifact --full` sweep).
+const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig11", "fig12", "table1", "table2", "fig4",
+    "fig5", "fig6", "fig7", "table3", "fig8", "fig9", "fig10", "ablations",
+];
+
+/// Run one paper figure/table driver (shared by `exp` and the full
+/// `artifact` profile).
+fn run_experiment(
+    id: &str,
+    out: &Path,
+    data: &Path,
+    quick: bool,
+) -> Result<()> {
+    let t = chb_fed::util::timer::Timer::quiet();
+    let r = match id {
+        "fig1" => figures::fig1(out, data, quick),
+        "fig2" => figures::fig2(out, data, quick),
+        "fig3" => figures::fig3(out, data, quick),
+        "fig4" => figures::fig4(out, data, quick),
+        "fig5" => figures::fig5(out, data, quick),
+        "fig6" => figures::fig6(out, data, quick),
+        "fig7" => figures::fig7(out, data, quick),
+        "fig8" => figures::fig8(out, data, quick),
+        "fig9" => figures::fig9(out, data, quick),
+        "fig10" => figures::fig10(out, data, quick),
+        "fig11" => figures::fig11(out, data, quick),
+        "fig12" => figures::fig12(out, data, quick),
+        "table1" => tables::table1(out, data, quick),
+        "table2" => tables::table2(out, data, quick),
+        "table3" => tables::table3(out, data, quick),
+        "ablations" => ablations::all(out, quick),
+        other => bail!("unknown experiment {other:?}"),
+    };
+    println!("[{id}: {:.1}s]", t.elapsed_secs());
+    r
 }
 
 /// Assemble a [`RunSpec`] from CLI flags (with `--config` file
@@ -359,6 +399,27 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
         other => bail!("bad --backend {other:?} (rust|pjrt)"),
     };
 
+    // fault injection (spec semantics, serialized into manifest.json;
+    // default = no faults, in which case the key is omitted entirely)
+    let server_kills = match pick_opt("server-kill") {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.parse::<usize>()
+                    .with_context(|| format!("--server-kill {t:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let faults = FaultPlan {
+        crash_prob: pick_num("fault-prob")?.unwrap_or(0.0),
+        down_rounds: pick_num("fault-down")?.unwrap_or(1.0) as usize,
+        seed: pick_seed("fault-seed", 0xFA17)?,
+        server_kills,
+    };
+
     Ok(RunSpec {
         label: pick_opt("label"),
         lambda: pick_num("lambda")?.unwrap_or(0.001),
@@ -375,6 +436,7 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
             prob: pick_num("drop-prob")?.unwrap_or(0.0),
             seed: pick_seed("drop-seed", 0)?,
         },
+        faults,
         record_comm_map: args.flag("comm-map"),
         ..RunSpec::new(task, &pick("dataset", "synth"))
     })
@@ -402,11 +464,29 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("{}", spec.to_json_string());
         return Ok(());
     }
+    // checkpoint/resume are environmental (they never change the
+    // trace), so they are flags, not spec fields
+    let ckpt_every = args.get_parse::<usize>("checkpoint-every")?;
+    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
+    let resume_path = args.get("resume").map(str::to_string);
+    if ckpt_dir.is_some() && ckpt_every.is_none() {
+        bail!("--checkpoint-dir needs --checkpoint-every");
+    }
     // every option has been consumed by now — fail on typo'd or
     // inapplicable flags *before* the run executes and writes artifacts
     args.finish()?;
 
-    let session = Session::from_spec(&spec, &registry)?;
+    let mut session = Session::from_spec(&spec, &registry)?;
+    if let Some(every) = ckpt_every {
+        let dir = ckpt_dir.unwrap_or_else(|| out.clone());
+        session = session.with_checkpoints(CheckpointPolicy::new(every, dir));
+    }
+    if let Some(path) = resume_path {
+        let cp = Checkpoint::load(Path::new(&path))
+            .with_context(|| format!("load checkpoint {path}"))?;
+        println!("resume: {} from round {} ({})", path, cp.k, cp.engine);
+        session = session.resuming_from(cp);
+    }
     let params = session.params();
     println!(
         "run: {} on {} — M={} d={} L={:.4e} α={:.4e} β={} ε₁={:.4e} \
@@ -430,7 +510,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     // column of the trace CSV; 0 for the nonconvex NN)
     let f_star = session.problem().f_star().unwrap_or(0.0);
 
-    let report = session.run();
+    let report = session.run_checked()?;
     if let Some(a) = &report.async_summary {
         println!(
             "async: virtual clock {:.1} ms, max staleness {}",
@@ -455,6 +535,157 @@ fn cmd_run(args: &Args) -> Result<()> {
         "manifest: {} (rerun with: chb-fed run --spec <that file>)",
         out.join("manifest.json").display()
     );
+    Ok(())
+}
+
+/// The kick-tires artifact pipeline: run every spec in the examples
+/// directory, index each result by its manifest hash, and (in the
+/// full profile) regenerate the paper figures/tables.
+fn cmd_artifact(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let data = PathBuf::from(args.get_or("data", "data"));
+    let specs_dir = PathBuf::from(args.get_or("specs", "examples/specs"));
+    let registry = Registry::new(
+        &data,
+        Path::new(args.get_or("artifacts", "artifacts")),
+    );
+    let smoke = args.flag("smoke");
+    let full = args.flag("full");
+    args.finish()?;
+    if smoke && full {
+        bail!("--smoke and --full are mutually exclusive profiles");
+    }
+
+    let mut spec_files: Vec<PathBuf> = std::fs::read_dir(&specs_dir)
+        .with_context(|| format!("read specs dir {}", specs_dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    spec_files.sort();
+    if spec_files.is_empty() {
+        bail!("no *.json specs in {}", specs_dir.display());
+    }
+
+    let store = out.join("store");
+    std::fs::create_dir_all(&store)
+        .with_context(|| format!("create {}", store.display()))?;
+
+    use chb_fed::util::json::Json;
+    let mut index = Vec::new();
+    let mut summary = String::from(
+        "spec,hash,task,dataset,method,engine,iters,comms,bits_cum,\
+         final_loss,seconds\n",
+    );
+    let mut report_md = String::from(
+        "# Artifact store\n\nOne row per example spec; every result \
+         directory is keyed by the FNV-1a hash of its exact manifest \
+         and rerunnable with `chb-fed run --spec \
+         store/<hash>/manifest.json`.\n\n\
+         | spec | hash | task | method | engine | iters | comms | bits \
+         | final loss |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for path in &spec_files {
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("spec")
+            .to_string();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let mut spec = RunSpec::from_json_str(&text)
+            .with_context(|| format!("decode {}", path.display()))?;
+        if smoke {
+            // the CI profile: same specs, clamped budgets — the hash
+            // keys the clamped manifest, so smoke and full results
+            // never collide in the store
+            spec.iters = spec.iters.min(25);
+        }
+        spec.validate()?;
+        let hash = fnv1a64(&spec.to_json_string());
+        let dir = store.join(format!("{hash:016x}"));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        let session = Session::from_spec(&spec, &registry)?;
+        let f_star = session.problem().f_star().unwrap_or(0.0);
+        let t = chb_fed::util::timer::Timer::quiet();
+        let report = session
+            .run_checked()
+            .with_context(|| format!("run {}", path.display()))?;
+        let secs = t.elapsed_secs();
+        report.write_artifacts(&dir, f_star)?;
+        let trace = &report.trace;
+        let last = trace.iters.last().context("empty trace")?;
+        println!(
+            "[{stem}: {} iters, {} comms, {} bits, {secs:.1}s → \
+             store/{hash:016x}]",
+            trace.iterations(),
+            trace.total_comms(),
+            last.bits_cum,
+        );
+        summary.push_str(&format!(
+            "{stem},{hash:016x},{},{},{},{},{},{},{},{:.17e},{secs:.3}\n",
+            spec.task.name(),
+            spec.dataset,
+            spec.method.name(),
+            spec.engine.name(),
+            trace.iterations(),
+            trace.total_comms(),
+            last.bits_cum,
+            last.loss,
+        ));
+        report_md.push_str(&format!(
+            "| {stem} | `{hash:016x}` | {} | {} | {} | {} | {} | {} | \
+             {:.6e} |\n",
+            spec.task.name(),
+            spec.method.name(),
+            spec.engine.name(),
+            trace.iterations(),
+            trace.total_comms(),
+            last.bits_cum,
+            last.loss,
+        ));
+        let entry: std::collections::BTreeMap<String, Json> = [
+            ("spec".to_string(), Json::Str(stem)),
+            ("hash".to_string(), Json::Str(format!("{hash:016x}"))),
+            ("dir".to_string(), Json::Str(format!("store/{hash:016x}"))),
+            ("task".to_string(), Json::Str(spec.task.name().to_string())),
+            ("dataset".to_string(), Json::Str(spec.dataset.clone())),
+            (
+                "method".to_string(),
+                Json::Str(spec.method.name().to_string()),
+            ),
+            (
+                "engine".to_string(),
+                Json::Str(spec.engine.name().to_string()),
+            ),
+            ("iters".to_string(), Json::Num(trace.iterations() as f64)),
+            ("comms".to_string(), Json::Num(trace.total_comms() as f64)),
+            ("bits_cum".to_string(), Json::Num(last.bits_cum as f64)),
+            ("final_loss".to_string(), Json::Num(last.loss)),
+        ]
+        .into_iter()
+        .collect();
+        index.push(Json::Obj(entry));
+    }
+    let index_path = store.join("index.json");
+    std::fs::write(&index_path, Json::Arr(index).dump_pretty() + "\n")
+        .with_context(|| format!("write {}", index_path.display()))?;
+    std::fs::write(store.join("summary.csv"), summary)?;
+    std::fs::write(store.join("REPORT.md"), report_md)?;
+    println!(
+        "store: {} specs indexed under {}",
+        spec_files.len(),
+        store.display()
+    );
+
+    if full {
+        // the real artifact: every paper figure/table at paper-scale
+        // budgets, beside the example-spec store
+        for id in ALL_EXPERIMENTS {
+            run_experiment(id, &out, &data, false)?;
+        }
+    }
     Ok(())
 }
 

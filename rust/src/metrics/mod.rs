@@ -89,6 +89,12 @@ pub struct Trace {
     /// per-worker arrival-staleness telemetry; empty for synchronous
     /// runs (where staleness is identically zero)
     pub worker_staleness: Vec<StalenessStats>,
+    /// worker-round crash events injected by the fault plan (a worker
+    /// counted once per round it was forced down); 0 without faults
+    pub fault_downs: usize,
+    /// forced rejoin transmissions injected by the fault plan (each
+    /// one re-synced a worker's censor reference θ̂ before reporting)
+    pub fault_rejoins: usize,
 }
 
 impl Trace {

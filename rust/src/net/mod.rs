@@ -203,6 +203,18 @@ impl SimNetwork {
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
+
+    /// Raw drop-stream RNG state (checkpoint capture).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the drop stream and the dropped-message counter from a
+    /// checkpoint so the next `send` continues bit-identically.
+    pub fn restore_state(&mut self, rng: [u64; 4], dropped: u64) {
+        self.rng = Xoshiro256::from_state(rng);
+        self.dropped = dropped;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -226,7 +238,14 @@ pub struct EventKey {
     /// worker id the event concerns (same-instant, same-rank order)
     pub worker: usize,
     /// push-order sequence number (final tiebreaker)
-    seq: u64,
+    pub(crate) seq: u64,
+}
+
+impl EventKey {
+    /// The push-order sequence number (checkpoint capture).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
 }
 
 impl EventKey {
@@ -347,6 +366,38 @@ impl<T> EventQueue<T> {
             out.push(e);
         }
         out
+    }
+
+    /// Non-destructive ordered view of every queued event (checkpoint
+    /// capture): entries sorted by the total `(time, rank, worker,
+    /// seq)` order, with their exact keys.
+    pub fn entries_ordered(&self) -> Vec<(EventKey, &T)> {
+        let mut out: Vec<(EventKey, &T)> =
+            self.heap.iter().map(|e| (e.key, &e.payload)).collect();
+        out.sort_by(|a, b| a.0.cmp_key(&b.0));
+        out
+    }
+
+    /// Internal counters `(next seq, last popped time)` — captured
+    /// alongside [`EventQueue::entries_ordered`] so a restored queue
+    /// assigns the same tiebreaker sequence to future pushes.
+    pub fn counters(&self) -> (u64, f64) {
+        (self.seq, self.last_popped_us)
+    }
+
+    /// Rebuild a queue from captured entries (with their original
+    /// keys, including `seq`) and counters.  The restored queue pops
+    /// in exactly the order the original would have.
+    pub fn restore(
+        entries: Vec<(EventKey, T)>,
+        seq: u64,
+        last_popped_us: f64,
+    ) -> Self {
+        let mut heap = BinaryHeap::with_capacity(entries.len());
+        for (key, payload) in entries {
+            heap.push(Entry { key, payload });
+        }
+        Self { heap, seq, last_popped_us }
     }
 }
 

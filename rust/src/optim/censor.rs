@@ -329,6 +329,17 @@ impl StalenessBoundedCensor {
             skips: std::sync::atomic::AtomicUsize::new(0),
         }
     }
+
+    /// Consecutive skips since the last transmission (checkpoint
+    /// capture — this counter is the rule's only mutable state).
+    pub fn pending_skips(&self) -> usize {
+        self.skips.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Restore the consecutive-skip counter from a checkpoint.
+    pub fn set_pending_skips(&self, n: usize) {
+        self.skips.store(n, std::sync::atomic::Ordering::Relaxed);
+    }
 }
 
 impl CensorRule for StalenessBoundedCensor {

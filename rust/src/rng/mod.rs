@@ -113,6 +113,17 @@ impl Xoshiro256 {
         (0..n).map(|_| self.next_gaussian()).collect()
     }
 
+    /// The raw 256-bit generator state (checkpoint capture).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a captured [`Xoshiro256::state`] —
+    /// the restored stream continues bit-identically.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {

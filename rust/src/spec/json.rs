@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::{
-    AsyncConfig, ComputeModel, EngineKind, Participation,
+    AsyncConfig, ComputeModel, EngineKind, FaultPlan, Participation,
 };
 use crate::data::batch::BatchSchedule;
 use crate::net::LatencyModel;
@@ -43,8 +43,12 @@ fn s(v: &str) -> Json {
 
 impl RunSpec {
     /// Encode as a [`Json`] value (the `manifest.json` schema).
+    ///
+    /// A default (no-fault) [`FaultPlan`] is omitted entirely, so
+    /// manifests written before the fault axis existed — and all
+    /// fault-free runs — stay byte-identical.
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("version", unum(SPEC_VERSION)),
             ("task", s(self.task.name())),
             ("dataset", s(&self.dataset)),
@@ -74,7 +78,11 @@ impl RunSpec {
                 ]),
             ),
             ("record_comm_map", Json::Bool(self.record_comm_map)),
-        ])
+        ];
+        if self.faults != FaultPlan::default() {
+            pairs.push(("faults", faults_to_json(&self.faults)));
+        }
+        obj(pairs)
     }
 
     /// The pretty-printed manifest text (what `manifest.json` holds).
@@ -107,6 +115,7 @@ impl RunSpec {
                 "iters",
                 "stop",
                 "drops",
+                "faults",
                 "record_comm_map",
             ],
         )?;
@@ -197,6 +206,10 @@ impl RunSpec {
                         seed: req_u64(m, "seed")?,
                     }
                 }
+            },
+            faults: match map.get("faults") {
+                None => FaultPlan::default(),
+                Some(v) => faults_from_json(v)?,
             },
             record_comm_map: match map.get("record_comm_map") {
                 None => false,
@@ -636,6 +649,49 @@ fn codec_from_json(j: &Json) -> Result<CodecSpec, SpecError> {
     }
 }
 
+fn faults_to_json(fp: &FaultPlan) -> Json {
+    obj(vec![
+        ("crash_prob", num(fp.crash_prob)),
+        ("down_rounds", unum(fp.down_rounds as u64)),
+        ("seed", unum(fp.seed)),
+        (
+            "server_kills",
+            Json::Arr(
+                fp.server_kills.iter().map(|&k| unum(k as u64)).collect(),
+            ),
+        ),
+    ])
+}
+
+fn faults_from_json(j: &Json) -> Result<FaultPlan, SpecError> {
+    let m = as_obj(j, "faults")?;
+    check_keys(
+        m,
+        "faults",
+        &["crash_prob", "down_rounds", "seed", "server_kills"],
+    )?;
+    let server_kills = match m.get("server_kills") {
+        None => Vec::new(),
+        Some(Json::Arr(a)) => a
+            .iter()
+            .map(|v| as_u64(v, "faults.server_kills").map(|k| k as usize))
+            .collect::<Result<Vec<_>, _>>()?,
+        Some(other) => return Err(bad("faults.server_kills", "array", other)),
+    };
+    Ok(FaultPlan {
+        crash_prob: opt_f64(m, "crash_prob")?.unwrap_or(0.0),
+        down_rounds: match m.get("down_rounds") {
+            None => 1,
+            Some(v) => as_u64(v, "faults.down_rounds")? as usize,
+        },
+        seed: match m.get("seed") {
+            None => 0,
+            Some(v) => as_u64(v, "faults.seed")?,
+        },
+        server_kills,
+    })
+}
+
 fn stop_to_json(st: &StopSpec) -> Json {
     match *st {
         StopSpec::MaxIters => obj(vec![("kind", s("max-iters"))]),
@@ -842,6 +898,37 @@ mod tests {
         }"#;
         let spec = RunSpec::from_json_str(text).unwrap();
         assert_eq!(spec.codec, CodecSpec::Fp16 { error_feedback: false });
+    }
+
+    #[test]
+    fn fault_plan_round_trips_and_defaults_are_omitted() {
+        let base = RunSpec::new(TaskKind::LinReg, "synth");
+        // default plan: the "faults" key does not appear at all, so
+        // pre-existing manifests stay byte-identical
+        assert!(!base.to_json_string().contains("faults"));
+        let spec = RunSpec {
+            faults: FaultPlan {
+                crash_prob: 0.15,
+                down_rounds: 3,
+                seed: 0xFA17,
+                server_kills: vec![5, 40],
+            },
+            ..base
+        };
+        let text = spec.to_json_string();
+        assert!(text.contains("faults"));
+        assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+        // a hand-written plan gets per-field defaults
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": "chb", "iters": 10,
+            "faults": {"server_kills": [7]}
+        }"#;
+        let spec = RunSpec::from_json_str(text).unwrap();
+        assert_eq!(
+            spec.faults,
+            FaultPlan { server_kills: vec![7], ..FaultPlan::default() }
+        );
     }
 
     #[test]

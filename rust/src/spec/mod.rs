@@ -44,7 +44,7 @@ mod session;
 
 pub use session::{Registry, RunReport, Session};
 
-use crate::coordinator::{EngineKind, Participation};
+use crate::coordinator::{EngineKind, FaultPlan, Participation};
 use crate::data::batch::BatchSchedule;
 use crate::optim::Method;
 use crate::tasks::TaskKind;
@@ -428,6 +428,10 @@ pub struct RunSpec {
     pub stop: StopSpec,
     /// uplink failure injection
     pub drops: DropSpec,
+    /// seeded worker crash/rejoin + server-kill schedule (default: no
+    /// faults — the paper setting; serialized to `manifest.json` only
+    /// when non-default, so existing manifests stay byte-stable)
+    pub faults: FaultPlan,
     /// record the O(K·M) per-worker transmit map
     pub record_comm_map: bool,
 }
@@ -453,6 +457,7 @@ impl RunSpec {
             iters: 500,
             stop: StopSpec::MaxIters,
             drops: DropSpec::default(),
+            faults: FaultPlan::default(),
             record_comm_map: false,
         }
     }
@@ -479,6 +484,7 @@ impl RunSpec {
         self.validate_batch()?;
         self.validate_codec()?;
         self.validate_stop()?;
+        self.validate_faults()?;
         self.validate_seeds()?;
         finite("drops.prob", self.drops.prob)?;
         if !(0.0..=1.0).contains(&self.drops.prob) {
@@ -693,12 +699,46 @@ impl RunSpec {
         }
     }
 
+    fn validate_faults(&self) -> Result<(), SpecError> {
+        finite("faults.crash_prob", self.faults.crash_prob)?;
+        if !(0.0..=1.0).contains(&self.faults.crash_prob) {
+            return Err(SpecError::OutOfRange {
+                field: "faults.crash_prob",
+                value: self.faults.crash_prob,
+                lo: 0.0,
+                hi: 1.0,
+            });
+        }
+        if self.faults.crash_prob > 0.0 && self.faults.down_rounds == 0 {
+            return Err(SpecError::ZeroSize { field: "faults.down_rounds" });
+        }
+        let kills = &self.faults.server_kills;
+        for (i, &k) in kills.iter().enumerate() {
+            if k == 0 {
+                return Err(SpecError::ZeroSize {
+                    field: "faults.server_kills",
+                });
+            }
+            if i > 0 && kills[i - 1] >= k {
+                return Err(SpecError::Json {
+                    detail: format!(
+                        "faults.server_kills: must be strictly increasing \
+                         (got {} then {k})",
+                        kills[i - 1]
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
     /// Every seed in the spec must survive the f64-carried JSON round
     /// trip exactly, or the written manifest would replay a different
     /// stream than the run it records.
     fn validate_seeds(&self) -> Result<(), SpecError> {
         use crate::coordinator::ComputeModel;
         seed_ok("drops.seed", self.drops.seed)?;
+        seed_ok("faults.seed", self.faults.seed)?;
         match self.participation {
             Participation::UniformSample { seed, .. }
             | Participation::Straggler { seed, .. } => {
@@ -906,6 +946,53 @@ mod tests {
         let mut s = base();
         s.drops.seed = MAX_EXACT_SEED;
         s.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_plan_bounds_are_enforced() {
+        use crate::coordinator::FaultPlan;
+        let mut s = base();
+        s.faults = FaultPlan { crash_prob: 1.5, ..FaultPlan::default() };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::OutOfRange { field: "faults.crash_prob", .. })
+        ));
+        let mut s = base();
+        s.faults = FaultPlan {
+            crash_prob: 0.1,
+            down_rounds: 0,
+            ..FaultPlan::default()
+        };
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::ZeroSize { field: "faults.down_rounds" })
+        );
+        let mut s = base();
+        s.faults =
+            FaultPlan { server_kills: vec![10, 10], ..FaultPlan::default() };
+        assert!(s.validate().is_err());
+        let mut s = base();
+        s.faults =
+            FaultPlan { server_kills: vec![0], ..FaultPlan::default() };
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::ZeroSize { field: "faults.server_kills" })
+        );
+        let mut s = base();
+        s.faults = FaultPlan {
+            crash_prob: 0.1,
+            down_rounds: 2,
+            seed: 7,
+            server_kills: vec![5, 20],
+        };
+        s.validate().unwrap();
+        let mut s = base();
+        s.faults =
+            FaultPlan { seed: MAX_EXACT_SEED + 1, ..FaultPlan::default() };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::SeedTooLarge { field: "faults.seed", .. })
+        ));
     }
 
     #[test]

@@ -16,13 +16,16 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::checkpoint::{
+    fnv1a64, Checkpoint, CheckpointError, CheckpointPolicy,
+};
 use crate::compress::{
     Compressor, ErrorFeedback, PackedFp16, PackedFp32, PackedInt, TopK,
     UniformQuantizer,
 };
 use crate::coordinator::{
-    run_engine_with_rules, AsyncSummary, EngineKind, RunConfig, Server,
-    StopRule, Worker,
+    run_engine_with_rules_ctx, AsyncSummary, EngineKind, RunConfig,
+    RunContext, Server, StopRule, Worker,
 };
 use crate::experiments::Problem;
 use crate::metrics::{csv, Trace};
@@ -131,6 +134,7 @@ pub struct Session {
     engine: EngineKind,
     censor: Arc<dyn CensorRule>,
     label: String,
+    ctx: RunContext,
 }
 
 impl Session {
@@ -202,7 +206,8 @@ impl Session {
         let mut cfg = RunConfig::new(spec.method, params, spec.iters)
             .with_stop(stop)
             .with_participation(spec.participation)
-            .with_drops(spec.drops.prob, spec.drops.seed);
+            .with_drops(spec.drops.prob, spec.drops.seed)
+            .with_faults(spec.faults.clone());
         if spec.record_comm_map {
             cfg = cfg.with_comm_map();
         }
@@ -263,6 +268,13 @@ impl Session {
             EngineKind::Async(_) => format!("{}-async", spec.method.name()),
             _ => spec.method.name().to_string(),
         });
+        // every session carries its manifest hash so checkpoints it
+        // writes are pinned to this exact spec, and a resume against a
+        // different manifest is a typed error instead of divergence
+        let ctx = RunContext {
+            spec_hash: Some(fnv1a64(&spec.to_json_string())),
+            ..RunContext::default()
+        };
         Ok(Session {
             engine: spec.engine,
             spec,
@@ -271,6 +283,7 @@ impl Session {
             cfg,
             censor,
             label,
+            ctx,
         })
     }
 
@@ -290,24 +303,67 @@ impl Session {
         &self.engine
     }
 
+    /// Write a checkpoint every `policy.every` server steps (atomic
+    /// tmp-file + rename into `policy.dir`).  Checkpointing draws from
+    /// no run RNG, so a checkpointed run is bit-identical to an
+    /// un-checkpointed one.
+    pub fn with_checkpoints(mut self, policy: CheckpointPolicy) -> Session {
+        self.ctx.checkpoint = Some(policy);
+        self
+    }
+
+    /// Start this session from `checkpoint` instead of θ⁰ — the
+    /// restored run continues bit-identically to the uninterrupted
+    /// one.  The checkpoint must have been written by a session with
+    /// the same manifest (enforced via the manifest hash), the same
+    /// engine, and matching dimensions; violations surface as typed
+    /// [`CheckpointError`]s from [`Session::run_checked`].
+    pub fn resuming_from(mut self, checkpoint: Checkpoint) -> Session {
+        self.ctx.resume = Some(checkpoint);
+        self
+    }
+
+    /// Resolve `spec` against `registry` and restore `checkpoint` into
+    /// it — the `chb-fed run --resume` path: re-read `manifest.json`,
+    /// rebuild the session, continue from round k.
+    pub fn resume(
+        spec: &RunSpec,
+        registry: &Registry,
+        checkpoint: Checkpoint,
+    ) -> Result<Session> {
+        Ok(Session::from_spec(spec, registry)?.resuming_from(checkpoint))
+    }
+
     /// Execute the run.  Consumes the session (workers are spent) and
     /// cannot fail: everything fallible happened at construction.
+    /// Sessions carrying a resume image or a checkpoint policy should
+    /// use [`Session::run_checked`] — this wrapper panics on their
+    /// I/O/compatibility errors.
     pub fn run(self) -> RunReport {
+        self.run_checked()
+            .expect("checkpoint-free session runs cannot fail")
+    }
+
+    /// [`Session::run`] with checkpoint/resume errors surfaced as
+    /// typed [`CheckpointError`]s (bad resume image, checkpoint write
+    /// failure) instead of panics.
+    pub fn run_checked(self) -> Result<RunReport, CheckpointError> {
         let theta0 = self.problem.theta0();
         let server = Server::new(self.cfg.method, &self.cfg.params, theta0);
-        let out = run_engine_with_rules(
+        let out = run_engine_with_rules_ctx(
             &self.engine,
             self.workers,
             &self.cfg,
             server,
             self.censor,
             &self.label,
-        );
-        RunReport {
+            &self.ctx,
+        )?;
+        Ok(RunReport {
             spec: self.spec,
             trace: out.trace,
             async_summary: out.async_summary,
-        }
+        })
     }
 }
 

@@ -1,0 +1,343 @@
+//! Corrupt-checkpoint hardening: damaged, truncated, version-skewed,
+//! or mismatched checkpoint files must surface as **typed**
+//! [`CheckpointError`]s — never panics, and never a half-mutated run
+//! (a resume validates the whole image before touching any state).
+//!
+//! The checkpoint format itself is pinned by
+//! `tests/fixtures/checkpoint_golden.json`: the fixture must encode
+//! byte-for-byte from a known [`Checkpoint`] value and decode back to
+//! it, exactly like the manifest golden fixture.
+
+use chb_fed::checkpoint::{
+    Checkpoint, CheckpointError, CheckpointPolicy, LinkState, NetState,
+    ServerState, WorkerState, CHECKPOINT_VERSION,
+};
+use chb_fed::coordinator::{
+    run_serial, run_with_rules_ctx, EngineKind, RunConfig, RunContext,
+    SerialPool, Server,
+};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::metrics::{IterStat, Trace};
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::spec::{RunSpec, Session};
+use chb_fed::tasks::TaskKind;
+
+const GOLDEN: &str = include_str!("fixtures/checkpoint_golden.json");
+
+/// The value the golden fixture encodes: a 2-round serial run, M = 1,
+/// d = 2, with hand-picked bit patterns that are easy to audit in the
+/// hex encoding (1.0 = 3ff0…, 2.0 = 4000…, 0.5 = 3fe0…).
+fn golden_checkpoint() -> Checkpoint {
+    let stat = |k: usize, loss: f64, comms_cum: usize, step_sq: f64,
+                bits_cum: u64, epoch: f64| IterStat {
+        k,
+        loss,
+        comms_round: 1,
+        comms_cum,
+        agg_grad_sq: 2.0,
+        step_sq,
+        bits_cum,
+        vclock_us: 0.0,
+        stale_max: 0,
+        batch_frac: 1.0,
+        epoch,
+    };
+    Checkpoint {
+        version: CHECKPOINT_VERSION,
+        spec_hash: Some(0xdead_beef),
+        engine: "serial".into(),
+        k: 2,
+        dim: 2,
+        server: ServerState {
+            theta: vec![1.0, 2.0],
+            theta_prev: vec![0.5, 0.5],
+            agg_grad: vec![1.0, -1.0],
+            k: 2,
+        },
+        workers: vec![WorkerState {
+            id: 0,
+            last_tx: vec![1.0, -1.0],
+            transmissions: 2,
+            residual: Vec::new(),
+        }],
+        schedule_rng: Some([1, 2, 3, 4]),
+        net: NetState {
+            rng: [0xa, 0xb, 0xc, 0xd],
+            dropped: 0,
+            sim_clock_us: 0.0,
+            up: vec![LinkState { messages: 2, bytes: 64 }],
+            down: vec![LinkState { messages: 2, bytes: 128 }],
+        },
+        trace: Trace {
+            method: "CHB".into(),
+            iters: vec![
+                stat(1, 1.5, 1, 0.0, 128, 1.0),
+                stat(2, 0.5, 2, 0.25, 256, 2.0),
+            ],
+            per_worker_comms: vec![2],
+            participants: vec![1, 1],
+            comm_map: vec![vec![true], vec![true]],
+            worker_staleness: Vec::new(),
+            fault_downs: 0,
+            fault_rejoins: 0,
+        },
+        async_state: None,
+    }
+}
+
+/// The format pin: encode == fixture bytes, decode == value, and the
+/// decoded value re-encodes to the identical text.
+#[test]
+fn golden_checkpoint_fixture() {
+    let cp = golden_checkpoint();
+    assert_eq!(
+        cp.to_json_string(),
+        GOLDEN,
+        "checkpoint encoding drifted — if intentional, bump \
+         CHECKPOINT_VERSION and regenerate the fixture"
+    );
+    let back = Checkpoint::from_json_str(GOLDEN).unwrap();
+    assert_eq!(back.to_json_string(), GOLDEN, "decode→encode not a fixed point");
+    assert_eq!(back.version, CHECKPOINT_VERSION);
+    assert_eq!(back.spec_hash, Some(0xdead_beef));
+    assert_eq!(back.engine, "serial");
+    assert_eq!((back.k, back.dim, back.num_workers()), (2, 2, 1));
+    assert_eq!(back.server.theta, vec![1.0, 2.0]);
+    assert_eq!(back.server.agg_grad, vec![1.0, -1.0]);
+    assert_eq!(back.workers[0].transmissions, 2);
+    assert_eq!(back.net.up[0].bytes, 64);
+    assert_eq!(back.trace.iters.len(), 2);
+    assert_eq!(back.trace.iters[1].bits_cum, 256);
+    assert!(back.async_state.is_none());
+}
+
+/// Truncation anywhere yields a typed parse error, never a panic.
+#[test]
+fn truncated_files_are_typed_parse_errors() {
+    for cut in [1, 10, GOLDEN.len() / 3, GOLDEN.len() / 2, GOLDEN.len() - 2] {
+        match Checkpoint::from_json_str(&GOLDEN[..cut]) {
+            Err(CheckpointError::Parse(_)) => {}
+            other => panic!(
+                "truncation at {cut} gave {:?}, expected Parse",
+                other.map(|_| "Ok")
+            ),
+        }
+    }
+}
+
+/// A flipped bit inside a hex word (here: a hex digit knocked out of
+/// the alphabet, and a word knocked off the 16-digit grid) is caught
+/// by the strict hex codec as Corrupt.
+#[test]
+fn bit_flips_in_hex_payloads_are_corrupt_errors() {
+    // damage one hex digit of server.agg_grad
+    let bad = GOLDEN.replacen(
+        "3ff0000000000000bff0000000000000",
+        "3fz0000000000000bff0000000000000",
+        1,
+    );
+    assert!(bad != GOLDEN, "pattern not found");
+    assert!(matches!(
+        Checkpoint::from_json_str(&bad),
+        Err(CheckpointError::Corrupt(_))
+    ));
+    // damage the hex grid: a residual that is not a multiple of 16
+    let bad = GOLDEN.replace("\"residual\": \"\"", "\"residual\": \"00\"");
+    assert!(bad != GOLDEN, "pattern not found");
+    assert!(matches!(
+        Checkpoint::from_json_str(&bad),
+        Err(CheckpointError::Corrupt(_))
+    ));
+    // damage a vector length: theta loses one element (len != dim)
+    let bad = GOLDEN.replacen(
+        "\"theta\": \"3ff00000000000004000000000000000\"",
+        "\"theta\": \"3ff0000000000000\"",
+        1,
+    );
+    assert!(bad != GOLDEN, "pattern not found");
+    assert!(matches!(
+        Checkpoint::from_json_str(&bad),
+        Err(CheckpointError::Corrupt(_))
+    ));
+}
+
+/// Version skew is rejected first — even when the rest of the file is
+/// garbage, the error is Version, so upgrade messages stay honest.
+#[test]
+fn version_bump_is_rejected_before_anything_else() {
+    let bumped = GOLDEN.replace("\"version\": 1", "\"version\": 2");
+    match Checkpoint::from_json_str(&bumped) {
+        Err(CheckpointError::Version { found: 2, expected }) => {
+            assert_eq!(expected, CHECKPOINT_VERSION);
+        }
+        other => panic!("expected Version, got {:?}", other.map(|_| "Ok")),
+    }
+    // version gate fires before any payload validation
+    let bumped_and_corrupt = bumped.replacen(
+        "3ff0000000000000bff0000000000000",
+        "zzzz000000000000bff0000000000000",
+        1,
+    );
+    assert!(matches!(
+        Checkpoint::from_json_str(&bumped_and_corrupt),
+        Err(CheckpointError::Version { .. })
+    ));
+}
+
+/// Unknown and missing keys are Corrupt — the decoder is strict in
+/// both directions.
+#[test]
+fn unknown_and_missing_keys_are_corrupt_errors() {
+    let extra =
+        GOLDEN.replace("\"version\": 1", "\"version\": 1,\n  \"zzz\": 0");
+    assert!(matches!(
+        Checkpoint::from_json_str(&extra),
+        Err(CheckpointError::Corrupt(_))
+    ));
+    let missing = GOLDEN.replace(
+        "  \"schedule_rng\": [\n    \"0000000000000001\",\n    \
+         \"0000000000000002\",\n    \"0000000000000003\",\n    \
+         \"0000000000000004\"\n  ],\n",
+        "",
+    );
+    assert!(missing != GOLDEN, "pattern not found");
+    assert!(matches!(
+        Checkpoint::from_json_str(&missing),
+        Err(CheckpointError::Corrupt(_))
+    ));
+    // internal inconsistency: server.k disagrees with checkpoint k
+    let skewed = GOLDEN.replacen("\"k\": 2", "\"k\": 3", 1);
+    assert!(matches!(
+        Checkpoint::from_json_str(&skewed),
+        Err(CheckpointError::Corrupt(_))
+    ));
+}
+
+fn problem(seed: u64, m: usize, d: usize) -> Problem {
+    let l_m: Vec<f64> = (0..m).map(|i| 1.0 + 0.5 * i as f64).collect();
+    let per_worker = synthetic::per_worker_rescaled(seed, m, 14, d, &l_m);
+    Problem::from_worker_datasets(TaskKind::LinReg, "corrupt", &per_worker, 0.0)
+}
+
+/// Write a real checkpoint through a session run, for resume tests.
+fn real_checkpoint(p: &Problem, spec: &RunSpec, dir: &std::path::Path) -> Checkpoint {
+    Session::from_parts(spec.clone(), p.clone())
+        .unwrap()
+        .with_checkpoints(CheckpointPolicy::new(5, dir))
+        .run_checked()
+        .unwrap();
+    Checkpoint::load(&dir.join("checkpoint.json")).unwrap()
+}
+
+/// Resume-time identity checks are typed: a different manifest is
+/// SpecMismatch, a different engine kind is Engine, a different
+/// parameter dimension is Dimension, a different worker count is
+/// Corrupt — each detected before any state is restored.
+#[test]
+fn mismatched_resume_targets_are_typed_errors() {
+    let p = problem(0xC0, 4, 8);
+    let dir = std::env::temp_dir()
+        .join(format!("chb_ckpt_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = RunSpec { iters: 12, ..RunSpec::new(TaskKind::LinReg, "corrupt") };
+    let cp = real_checkpoint(&p, &spec, &dir);
+
+    // different manifest (iters changed) → SpecMismatch
+    let other = RunSpec { iters: 16, ..spec.clone() };
+    let err = Session::from_parts(other, p.clone())
+        .unwrap()
+        .resuming_from(cp.clone())
+        .run_checked()
+        .unwrap_err();
+    assert!(matches!(err, CheckpointError::SpecMismatch { .. }), "{err}");
+
+    // different engine kind (hash check bypassed) → Engine
+    let mut anon = cp.clone();
+    anon.spec_hash = None;
+    let threaded = RunSpec { engine: EngineKind::Threaded, ..spec.clone() };
+    let err = Session::from_parts(threaded, p.clone())
+        .unwrap()
+        .resuming_from(anon)
+        .run_checked()
+        .unwrap_err();
+    match err {
+        CheckpointError::Engine { found, expected } => {
+            assert_eq!((found.as_str(), expected.as_str()), ("serial", "threaded"));
+        }
+        other => panic!("expected Engine, got {other}"),
+    }
+
+    // same manifest, different problem dimension → Dimension
+    let p10 = problem(0xC1, 4, 10);
+    let err = Session::from_parts(spec.clone(), p10)
+        .unwrap()
+        .resuming_from(cp.clone())
+        .run_checked()
+        .unwrap_err();
+    match err {
+        CheckpointError::Dimension { found, expected } => {
+            assert_eq!((found, expected), (8, 10));
+        }
+        other => panic!("expected Dimension, got {other}"),
+    }
+
+    // same manifest and dimension, different worker count → Corrupt
+    let p3 = problem(0xC2, 3, 8);
+    let err = Session::from_parts(spec, p3)
+        .unwrap()
+        .resuming_from(cp)
+        .run_checked()
+        .unwrap_err();
+    assert!(matches!(err, CheckpointError::Corrupt(_)), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A failed resume mutates nothing: the same worker set, after the
+/// typed error, still reproduces the baseline trace bit-for-bit.
+#[test]
+fn failed_resume_leaves_engine_state_untouched() {
+    let p = problem(0xC3, 4, 8);
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 15);
+    let mut ws = p.rust_workers();
+    let baseline = run_serial(&mut ws, &cfg, p.theta0());
+
+    let mut ws2 = p.rust_workers();
+    let censor: std::sync::Arc<dyn chb_fed::optim::CensorRule> = std::sync::Arc::from(
+        chb_fed::optim::method::build_censor_rule(Method::Chb, &params),
+    );
+    // golden checkpoint: engine matches, dimension (2 vs 8) does not
+    let ctx = RunContext {
+        resume: Some(golden_checkpoint()),
+        ..RunContext::default()
+    };
+    let err = run_with_rules_ctx(
+        &mut SerialPool::new(&mut ws2),
+        &cfg,
+        Server::new(Method::Chb, &params, p.theta0()),
+        censor,
+        "CHB",
+        "serial",
+        &ctx,
+    )
+    .unwrap_err();
+    assert!(matches!(err, CheckpointError::Dimension { .. }), "{err}");
+    for w in &ws2 {
+        assert_eq!(w.transmissions, 0, "failed resume touched worker state");
+        assert!(
+            w.last_transmitted().iter().all(|&x| x == 0.0),
+            "failed resume touched a censor reference"
+        );
+    }
+    // the untouched workers replay the baseline exactly
+    let rerun = run_serial(&mut ws2, &cfg, p.theta0());
+    assert_eq!(baseline.iterations(), rerun.iterations());
+    for (a, b) in baseline.iters.iter().zip(&rerun.iters) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "k={}", a.k);
+        assert_eq!(a.comms_cum, b.comms_cum, "k={}", a.k);
+        assert_eq!(a.bits_cum, b.bits_cum, "k={}", a.k);
+    }
+}

@@ -1,0 +1,350 @@
+//! Checkpoint/restore round trips: a run resumed from a checkpoint at
+//! round k is **bit-identical** to the uninterrupted run — trace
+//! columns, uplink bit accounting, comm maps, and the emitted CSV
+//! bytes — on all four paper tasks × all four engines, and across the
+//! state-heavy configurations (minibatch sampling, top-k sparsifier,
+//! int8 error feedback, staleness-bounded censoring, drops +
+//! participation sampling).
+//!
+//! Also pinned here: writing checkpoints never perturbs a run (the
+//! checkpointed and checkpoint-free traces are bitwise equal), because
+//! serializing state draws from no run RNG.
+
+use std::path::{Path, PathBuf};
+
+use chb_fed::checkpoint::{Checkpoint, CheckpointPolicy};
+use chb_fed::coordinator::{
+    run_engine_with_rules_ctx, AsyncConfig, ComputeModel, EngineKind,
+    Participation, RunConfig, RunContext, Server,
+};
+use chb_fed::data::batch::BatchSchedule;
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::metrics::{csv, Trace};
+use chb_fed::net::LatencyModel;
+use chb_fed::optim::{Method, MethodParams};
+use chb_fed::spec::{
+    CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec, RunSpec, Session,
+};
+use chb_fed::tasks::TaskKind;
+
+/// Small instance of one paper task (the `spec_session` pattern).
+fn problem_for(task: TaskKind) -> Problem {
+    let (m, n, d) = (4usize, 12usize, 8usize);
+    let l_m: Vec<f64> = (0..m).map(|i| (1.0 + 0.4 * i as f64).powi(2)).collect();
+    let seed = 0xC4E + match task {
+        TaskKind::LinReg => 1,
+        TaskKind::LogReg => 2,
+        TaskKind::Lasso => 3,
+        TaskKind::Nn => 4,
+    };
+    let per_worker = synthetic::per_worker_rescaled(seed, m, n, d, &l_m);
+    let lam = match task {
+        TaskKind::Lasso => 0.05,
+        TaskKind::LogReg | TaskKind::Nn => 0.01,
+        TaskKind::LinReg => 0.0,
+    };
+    Problem::from_worker_datasets(task, "ckpt", &per_worker, lam)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("chb_ckpt_resume_{}", std::process::id()))
+        .join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Full bitwise trace comparison: every column of every round, plus
+/// the per-worker and fault bookkeeping.
+fn assert_traces_bitwise(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.method, b.method, "{what}: method label");
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(x.k, y.k, "{what}: round index");
+        let k = x.k;
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss k={k}");
+        assert_eq!(x.comms_round, y.comms_round, "{what}: comms_round k={k}");
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms_cum k={k}");
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² k={k}"
+        );
+        assert_eq!(
+            x.step_sq.to_bits(),
+            y.step_sq.to_bits(),
+            "{what}: step_sq k={k}"
+        );
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits_cum k={k}");
+        assert_eq!(
+            x.vclock_us.to_bits(),
+            y.vclock_us.to_bits(),
+            "{what}: vclock k={k}"
+        );
+        assert_eq!(x.stale_max, y.stale_max, "{what}: stale_max k={k}");
+        assert_eq!(
+            x.batch_frac.to_bits(),
+            y.batch_frac.to_bits(),
+            "{what}: batch_frac k={k}"
+        );
+        assert_eq!(
+            x.epoch.to_bits(),
+            y.epoch.to_bits(),
+            "{what}: epoch k={k}"
+        );
+    }
+    assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: S_m");
+    assert_eq!(a.participants, b.participants, "{what}: participants");
+    assert_eq!(a.comm_map, b.comm_map, "{what}: comm map");
+    assert_eq!(
+        a.worker_staleness.len(),
+        b.worker_staleness.len(),
+        "{what}: staleness rows"
+    );
+    for (i, (x, y)) in
+        a.worker_staleness.iter().zip(&b.worker_staleness).enumerate()
+    {
+        assert_eq!(
+            (x.folds, x.max, x.sum),
+            (y.folds, y.max, y.sum),
+            "{what}: staleness worker {i}"
+        );
+    }
+    assert_eq!(a.fault_downs, b.fault_downs, "{what}: fault_downs");
+    assert_eq!(a.fault_rejoins, b.fault_rejoins, "{what}: fault_rejoins");
+}
+
+/// The emitted trace CSVs must be byte-identical too — resume is a
+/// contract on the artifacts, not just the in-memory structs.
+fn assert_csv_bytes_equal(a: &Trace, b: &Trace, dir: &Path, what: &str) {
+    let pa = dir.join("a.csv");
+    let pb = dir.join("b.csv");
+    csv::write_trace(&pa, a, 0.0).unwrap();
+    csv::write_trace(&pb, b, 0.0).unwrap();
+    let ba = std::fs::read(&pa).unwrap();
+    let bb = std::fs::read(&pb).unwrap();
+    assert!(ba == bb, "{what}: trace CSV bytes differ");
+}
+
+fn pareto_async() -> AsyncConfig {
+    AsyncConfig {
+        compute: ComputeModel::Pareto {
+            scale_us: 800.0,
+            shape: 1.6,
+            seed: 0xA57,
+        },
+        latency: LatencyModel { fixed_us: 150.0, per_kib_us: 20.0 },
+        max_staleness: None,
+    }
+}
+
+/// Run `spec` three ways — checkpoint-free, checkpointing every
+/// `every` rounds, and resumed from the written checkpoint — and
+/// require all three traces bitwise equal.
+fn roundtrip_spec(spec: &RunSpec, p: &Problem, every: usize, what: &str) {
+    let dir = tmp_dir(&what.replace(' ', "_"));
+    let plain =
+        Session::from_parts(spec.clone(), p.clone()).unwrap().run().trace;
+    let ckpt = Session::from_parts(spec.clone(), p.clone())
+        .unwrap()
+        .with_checkpoints(CheckpointPolicy::new(every, &dir))
+        .run_checked()
+        .unwrap()
+        .trace;
+    assert_traces_bitwise(&plain, &ckpt, &format!("{what}: ckpt-write run"));
+    let cp = Checkpoint::load(&dir.join("checkpoint.json")).unwrap();
+    assert!(
+        cp.k >= every && cp.k < spec.iters,
+        "{what}: checkpoint at k={} (every={every}, iters={})",
+        cp.k,
+        spec.iters
+    );
+    let resumed = Session::from_parts(spec.clone(), p.clone())
+        .unwrap()
+        .resuming_from(cp)
+        .run_checked()
+        .unwrap()
+        .trace;
+    assert_traces_bitwise(&plain, &resumed, &format!("{what}: resume"));
+    assert_csv_bytes_equal(&plain, &resumed, &dir, what);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Resume ≡ uninterrupted on all four paper tasks × all four engines.
+#[test]
+fn resume_is_bit_identical_on_all_tasks_and_engines() {
+    for task in [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+    {
+        let p = problem_for(task);
+        let base = RunSpec {
+            params: ParamSpec {
+                alpha: Some(1.0 / p.l_global),
+                beta: 0.4,
+                epsilon: EpsilonSpec::Scaled { c: 0.1 },
+            },
+            iters: 24,
+            record_comm_map: true,
+            lambda: p.lambda_global(),
+            ..RunSpec::new(task, "ckpt")
+        };
+        let engines = [
+            EngineKind::Serial,
+            EngineKind::Threaded,
+            EngineKind::Rayon { threads: 2 },
+            EngineKind::Async(pareto_async()),
+        ];
+        for engine in engines {
+            let name = engine.name();
+            let spec = RunSpec { engine, ..base.clone() };
+            roundtrip_spec(
+                &spec,
+                &p,
+                9,
+                &format!("{} {name}", task.name()),
+            );
+        }
+    }
+}
+
+/// Resume from *every* interior round k, not just a convenient
+/// midpoint: a truncated run checkpointed at its own final round k,
+/// then resumed to the full horizon, reproduces the uninterrupted
+/// trace bitwise (sync engine family; engines are pinned bit-identical
+/// to each other elsewhere).
+#[test]
+fn resume_from_every_round_matches_uninterrupted() {
+    let p = problem_for(TaskKind::LinReg);
+    let iters = 10usize;
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    // drops + sampled participation so the net and schedule RNG
+    // streams genuinely carry state across the checkpoint boundary
+    let cfg = RunConfig::new(Method::Chb, params, iters)
+        .with_comm_map()
+        .with_participation(Participation::UniformSample {
+            frac: 0.75,
+            seed: 0x5A11,
+        })
+        .with_drops(0.15, 0xD09);
+    let censor = chb_fed::optim::method::build_censor_rule(Method::Chb, &params);
+    let censor: std::sync::Arc<dyn chb_fed::optim::CensorRule> =
+        std::sync::Arc::from(censor);
+    let run = |cfg: &RunConfig, ctx: &RunContext| {
+        let server = Server::new(cfg.method, &cfg.params, p.theta0());
+        run_engine_with_rules_ctx(
+            &EngineKind::Serial,
+            p.rust_workers(),
+            cfg,
+            server,
+            std::sync::Arc::clone(&censor),
+            "CHB",
+            ctx,
+        )
+        .map(|out| out.trace)
+    };
+    let baseline = run(&cfg, &RunContext::default()).unwrap();
+    for k in 1..iters {
+        let dir = tmp_dir(&format!("every_round_{k}"));
+        // truncated run: stops after round k, checkpointing exactly there
+        let truncated = RunConfig { max_iters: k, ..cfg.clone() };
+        let ctx = RunContext {
+            checkpoint: Some(CheckpointPolicy::new(k, &dir)),
+            ..RunContext::default()
+        };
+        run(&truncated, &ctx).unwrap();
+        let cp = Checkpoint::load(&dir.join("checkpoint.json")).unwrap();
+        assert_eq!(cp.k, k, "truncated run checkpointed at the wrong round");
+        let ctx = RunContext { resume: Some(cp), ..RunContext::default() };
+        let resumed = run(&cfg, &ctx).unwrap();
+        assert_traces_bitwise(&baseline, &resumed, &format!("resume@k={k}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The state-heavy configurations round-trip too: minibatch sampler,
+/// top-k sparsifier, int8 error-feedback residuals, drops + sampling,
+/// and the staleness-bounded censor in the async engine.
+#[test]
+fn resume_covers_minibatch_topk_int8ef_and_staleness_censor() {
+    let p = problem_for(TaskKind::LinReg);
+    let base = RunSpec {
+        params: ParamSpec {
+            alpha: Some(1.0 / p.l_global),
+            beta: 0.4,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        iters: 20,
+        record_comm_map: true,
+        ..RunSpec::new(TaskKind::LinReg, "ckpt")
+    };
+    // minibatch sampling: batch cursors are recomputed from
+    // (worker, seed, k), so nothing in the checkpoint may drift
+    let spec = RunSpec {
+        batch: BatchSchedule::Minibatch { size: 4, seed: 0xB1, replace: false },
+        censor: CensorSpec::VarianceScaled,
+        ..base.clone()
+    };
+    roundtrip_spec(&spec, &p, 7, "minibatch");
+    // top-k sparse uplink payloads
+    let spec = RunSpec {
+        codec: CodecSpec::TopK { k: 3 },
+        engine: EngineKind::Threaded,
+        ..base.clone()
+    };
+    roundtrip_spec(&spec, &p, 7, "topk");
+    // int8 + error feedback: the per-worker residual must survive the
+    // checkpoint boundary bit-for-bit
+    let spec = RunSpec {
+        codec: CodecSpec::Int { bits: 8, error_feedback: true },
+        engine: EngineKind::Rayon { threads: 2 },
+        ..base.clone()
+    };
+    roundtrip_spec(&spec, &p, 7, "int8-ef");
+    // drops + sampled participation through the spec layer
+    let spec = RunSpec {
+        drops: DropSpec { prob: 0.2, seed: 0xD06 },
+        participation: Participation::UniformSample {
+            frac: 0.6,
+            seed: 0xFACE,
+        },
+        ..base.clone()
+    };
+    roundtrip_spec(&spec, &p, 7, "drops-sampling");
+    // staleness-bounded censor in the async engine: the per-worker
+    // consecutive-skip counters live in the checkpoint's async section
+    let spec = RunSpec {
+        engine: EngineKind::Async(AsyncConfig {
+            max_staleness: Some(2),
+            ..pareto_async()
+        }),
+        ..base.clone()
+    };
+    roundtrip_spec(&spec, &p, 7, "staleness-censor");
+}
+
+/// A checkpoint file is a faithful serialization: load(save(cp))
+/// re-encodes to the identical text, on a checkpoint produced by a
+/// real run (not a hand-rolled fixture).
+#[test]
+fn checkpoint_file_round_trips_textually() {
+    let p = problem_for(TaskKind::LogReg);
+    let dir = tmp_dir("textual_roundtrip");
+    let spec = RunSpec {
+        iters: 12,
+        record_comm_map: true,
+        codec: CodecSpec::Int { bits: 8, error_feedback: true },
+        ..RunSpec::new(TaskKind::LogReg, "ckpt")
+    };
+    Session::from_parts(spec, p)
+        .unwrap()
+        .with_checkpoints(CheckpointPolicy::new(5, &dir))
+        .run_checked()
+        .unwrap();
+    let path = dir.join("checkpoint.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let cp = Checkpoint::from_json_str(&text).unwrap();
+    assert_eq!(cp.to_json_string(), text, "re-encode drifted from the file");
+    let _ = std::fs::remove_dir_all(&dir);
+}

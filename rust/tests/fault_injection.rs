@@ -1,0 +1,424 @@
+//! Fault-plan properties: seeded worker crash/rejoin schedules and
+//! server kill/restore points must never bend the protocol's
+//! invariants.
+//!
+//!   1. eq. (5) telescopes under arbitrary crash schedules: a down
+//!      worker is a carried stale term, so ∇ᵏ == Σ_m ∇f_m(θ̂_m) holds
+//!      at every horizon.
+//!   2. rejoining workers transmit uncensored on their first round
+//!      back, re-syncing θ̂ before censored reporting restarts.
+//!   3. the same `FaultPlan` seed reproduces the same trace, bit for
+//!      bit, across the serial/threaded/rayon engines and across
+//!      reruns.
+//!   4. a server killed at any schedule of steps and restored from its
+//!      last checkpoint replays to a final trace bit-identical to the
+//!      kill-free run, in both the sync and async engines.
+//!   5. the async engine's telescope bookkeeping balances under
+//!      crashes *and* uplink drops: Σ transmitted = applied + dropped
+//!      + in-flight.
+
+use std::sync::Arc;
+
+use chb_fed::checkpoint::CheckpointPolicy;
+use chb_fed::coordinator::{
+    run_async_with_rules, run_rayon, run_serial, run_threaded, AsyncConfig,
+    ComputeModel, EngineKind, FaultPlan, RunConfig, Server,
+};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::linalg;
+use chb_fed::metrics::Trace;
+use chb_fed::net::LatencyModel;
+use chb_fed::optim::{CensorDecision, Method, MethodParams};
+use chb_fed::spec::{EpsilonSpec, ParamSpec, RunSpec, Session};
+use chb_fed::tasks::TaskKind;
+use chb_fed::testing::prop::{self, Gen};
+
+fn gen_problem(g: &mut Gen) -> Problem {
+    let m = g.usize_in(2..=6);
+    let d = g.usize_in(2..=12);
+    let n = g.usize_in(4..=30);
+    let l_m: Vec<f64> = (0..m).map(|_| g.f64_in(0.5, 20.0)).collect();
+    let per_worker =
+        synthetic::per_worker_rescaled(g.seed ^ 0xFA17, m, n, d, &l_m);
+    Problem::from_worker_datasets(TaskKind::LinReg, "fault", &per_worker, 0.0)
+}
+
+fn gen_plan(g: &mut Gen) -> FaultPlan {
+    FaultPlan {
+        crash_prob: g.f64_in(0.1, 0.5),
+        down_rounds: g.usize_in(1..=3),
+        seed: g.usize_in(0..=1 << 30) as u64,
+        server_kills: Vec::new(),
+    }
+}
+
+fn assert_traces_bitwise(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "{what}: loss k={}",
+            x.k
+        );
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms k={}", x.k);
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits k={}", x.k);
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² k={}",
+            x.k
+        );
+    }
+    assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: S_m");
+    assert_eq!(a.comm_map, b.comm_map, "{what}: comm map");
+    assert_eq!(a.participants, b.participants, "{what}: participants");
+    assert_eq!(a.fault_downs, b.fault_downs, "{what}: fault_downs");
+    assert_eq!(a.fault_rejoins, b.fault_rejoins, "{what}: fault_rejoins");
+}
+
+/// Invariant 1 + 2, mirrored at the worker level so server and worker
+/// state stay inspectable: under an arbitrary seeded crash schedule
+/// the aggregate telescopes to Σ_m last-transmitted, and every rejoin
+/// round transmits (the forced re-sync is never censored away).
+#[test]
+fn crash_schedules_preserve_the_telescope() {
+    prop::check("crash telescope", 25, |g| {
+        let p = gen_problem(g);
+        let m = p.m_workers();
+        let plan = gen_plan(g);
+        let params = MethodParams::new(g.f64_in(0.1, 0.8) / p.l_global)
+            .with_beta(g.f64_in(0.0, 0.6))
+            .with_epsilon1_scaled(g.f64_in(0.01, 1.0), m);
+        let iters = g.usize_in(2..=40);
+        // mirror the engine loop exactly (full participation): down ⇒
+        // observe-only, first round back ⇒ forced uncensored transmit
+        let censor =
+            chb_fed::optim::method::build_censor_rule(Method::Chb, &params);
+        let mut server =
+            Server::new(Method::Chb, &params, p.theta0());
+        let mut workers = p.rust_workers();
+        let mut downs = 0usize;
+        let mut rejoins = 0usize;
+        for k in 1..=iters {
+            let step_sq = server.theta_step_sq();
+            let theta = server.theta.clone();
+            let rounds: Vec<_> = workers
+                .iter_mut()
+                .map(|w| {
+                    if plan.down(w.id, k) {
+                        downs += 1;
+                        w.observe(&theta)
+                    } else if plan.rejoin(w.id, k) {
+                        rejoins += 1;
+                        let r = w.round_forced(
+                            &theta,
+                            step_sq,
+                            censor.as_ref(),
+                            k,
+                        );
+                        chb_fed::assert_prop!(
+                            r.decision == CensorDecision::Transmit,
+                            "rejoin round at k={k} was censored"
+                        );
+                        r
+                    } else {
+                        w.round(&theta, step_sq, censor.as_ref(), k)
+                    }
+                })
+                .collect();
+            server.apply_round(&rounds);
+        }
+        // eq. (5): ∇ᵏ == Σ_m last_transmitted_m, crashes or not
+        let mut expect = vec![0.0; server.dim()];
+        for w in &workers {
+            linalg::axpy(1.0, w.last_transmitted(), &mut expect);
+        }
+        let diff = expect
+            .iter()
+            .zip(&server.agg_grad)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let scale = linalg::norm2(&expect).max(1.0);
+        chb_fed::assert_prop!(
+            diff <= 1e-9 * scale,
+            "crashes broke the telescope: {diff:.3e} (scale {scale:.3e})"
+        );
+        // the engine counts the same events the mirror does
+        let cfg = RunConfig::new(Method::Chb, params, iters)
+            .with_faults(plan.clone());
+        let mut ws = p.rust_workers();
+        let t = run_serial(&mut ws, &cfg, p.theta0());
+        chb_fed::assert_prop!(
+            t.fault_downs == downs && t.fault_rejoins == rejoins,
+            "engine counted ({}, {}) fault events, mirror saw ({downs}, {rejoins})",
+            t.fault_downs,
+            t.fault_rejoins
+        );
+        Ok(())
+    });
+}
+
+/// Invariant 3: one seed, one trace — across reruns and across the
+/// three synchronous engines.
+#[test]
+fn fault_schedule_is_deterministic_across_engines() {
+    prop::check("fault determinism", 10, |g| {
+        let p = gen_problem(g);
+        let plan = gen_plan(g);
+        let params = MethodParams::new(g.f64_in(0.2, 0.8) / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, p.m_workers());
+        let iters = g.usize_in(4..=30);
+        let cfg = RunConfig::new(Method::Chb, params, iters)
+            .with_comm_map()
+            .with_faults(plan);
+        let mut ws = p.rust_workers();
+        let a = run_serial(&mut ws, &cfg, p.theta0());
+        let mut ws = p.rust_workers();
+        let a2 = run_serial(&mut ws, &cfg, p.theta0());
+        assert_traces_bitwise(&a, &a2, "serial rerun");
+        let b = run_threaded(p.rust_workers(), &cfg, p.theta0());
+        assert_traces_bitwise(&a, &b, "threaded");
+        let c = run_rayon(p.rust_workers(), &cfg, p.theta0());
+        assert_traces_bitwise(&a, &c, "rayon");
+        Ok(())
+    });
+}
+
+/// A crash window of `down_rounds` rounds shows up in the trace: the
+/// engine's counters are populated and every down round is matched by
+/// at most one later rejoin.
+#[test]
+fn fault_counters_are_populated_and_consistent() {
+    let p = {
+        let l_m: Vec<f64> = (0..4).map(|i| (1.0 + 0.3 * i as f64)).collect();
+        let per_worker = synthetic::per_worker_rescaled(0xFA, 4, 16, 6, &l_m);
+        Problem::from_worker_datasets(TaskKind::LinReg, "fault", &per_worker, 0.0)
+    };
+    let plan = FaultPlan {
+        crash_prob: 0.5,
+        down_rounds: 2,
+        seed: 0xFA17,
+        server_kills: Vec::new(),
+    };
+    let params = MethodParams::new(1.0 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg =
+        RunConfig::new(Method::Chb, params, 30).with_faults(plan.clone());
+    let mut ws = p.rust_workers();
+    let t = run_serial(&mut ws, &cfg, p.theta0());
+    assert!(t.fault_downs > 0, "crash_prob 0.5 over 30 rounds hit nobody");
+    assert!(t.fault_rejoins > 0, "nobody ever rejoined");
+    // a rejoin is the first active round after a down window, so there
+    // can never be more rejoins than distinct down windows
+    assert!(
+        t.fault_rejoins <= t.fault_downs,
+        "{} rejoins from {} down rounds",
+        t.fault_rejoins,
+        t.fault_downs
+    );
+    // fault-free control: same config minus the plan transmits from
+    // round 1 with zero counters
+    let cfg0 = RunConfig::new(Method::Chb, cfg.params, 30);
+    let mut ws = p.rust_workers();
+    let t0 = run_serial(&mut ws, &cfg0, p.theta0());
+    assert_eq!(t0.fault_downs, 0);
+    assert_eq!(t0.fault_rejoins, 0);
+}
+
+/// Invariant 4, sync engines: server kills at arbitrary points — with
+/// or without a checkpoint policy backing the recovery image — replay
+/// to the kill-free trace bitwise.
+#[test]
+fn server_kill_replay_matches_kill_free_run_sync() {
+    let p = {
+        let l_m: Vec<f64> = (0..4).map(|i| (1.0 + 0.4 * i as f64)).collect();
+        let per_worker = synthetic::per_worker_rescaled(0x51, 4, 14, 7, &l_m);
+        Problem::from_worker_datasets(TaskKind::LinReg, "fault", &per_worker, 0.0)
+    };
+    let base = RunSpec {
+        params: ParamSpec {
+            alpha: Some(1.0 / p.l_global),
+            beta: 0.4,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        iters: 18,
+        record_comm_map: true,
+        ..RunSpec::new(TaskKind::LinReg, "fault")
+    };
+    let crash = FaultPlan {
+        crash_prob: 0.25,
+        down_rounds: 2,
+        seed: 0xFA17,
+        server_kills: Vec::new(),
+    };
+    for engine in
+        [EngineKind::Serial, EngineKind::Threaded, EngineKind::Rayon { threads: 2 }]
+    {
+        let name = engine.name();
+        let free = RunSpec {
+            engine,
+            faults: crash.clone(),
+            ..base.clone()
+        };
+        let baseline =
+            Session::from_parts(free.clone(), p.clone()).unwrap().run().trace;
+        // kills replayed from the implicit pre-loop recovery image
+        let killed = RunSpec {
+            faults: FaultPlan {
+                server_kills: vec![4, 11],
+                ..crash.clone()
+            },
+            ..free.clone()
+        };
+        let t = Session::from_parts(killed.clone(), p.clone())
+            .unwrap()
+            .run()
+            .trace;
+        assert_traces_bitwise(&baseline, &t, &format!("{name} kill, no ckpt"));
+        // kills replayed from a real checkpoint taken mid-run
+        let dir = std::env::temp_dir().join(format!(
+            "chb_fault_kill_{}_{name}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = Session::from_parts(killed, p.clone())
+            .unwrap()
+            .with_checkpoints(CheckpointPolicy::new(3, &dir))
+            .run_checked()
+            .unwrap()
+            .trace;
+        assert_traces_bitwise(&baseline, &t, &format!("{name} kill + ckpt"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Invariant 4, async engine: a server kill mid-virtual-time restores
+/// the entire event world (queue, stations, compute RNG streams) and
+/// replays to the kill-free outcome bitwise.
+#[test]
+fn server_kill_replay_matches_kill_free_run_async() {
+    let p = {
+        let l_m: Vec<f64> = (0..4).map(|i| (1.0 + 0.4 * i as f64)).collect();
+        let per_worker = synthetic::per_worker_rescaled(0x52, 4, 14, 7, &l_m);
+        Problem::from_worker_datasets(TaskKind::LinReg, "fault", &per_worker, 0.0)
+    };
+    let acfg = AsyncConfig {
+        compute: ComputeModel::Pareto { scale_us: 700.0, shape: 1.5, seed: 0xA5 },
+        latency: LatencyModel { fixed_us: 120.0, per_kib_us: 16.0 },
+        max_staleness: Some(3),
+    };
+    let base = RunSpec {
+        params: ParamSpec {
+            alpha: Some(1.0 / p.l_global),
+            beta: 0.4,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        iters: 20,
+        engine: EngineKind::Async(acfg),
+        ..RunSpec::new(TaskKind::LinReg, "fault")
+    };
+    let crash = FaultPlan {
+        crash_prob: 0.2,
+        down_rounds: 1,
+        seed: 0xFA18,
+        server_kills: Vec::new(),
+    };
+    let free = RunSpec { faults: crash.clone(), ..base.clone() };
+    let baseline = Session::from_parts(free, p.clone()).unwrap().run();
+    let killed = RunSpec {
+        faults: FaultPlan { server_kills: vec![5, 13], ..crash },
+        ..base
+    };
+    let report = Session::from_parts(killed, p.clone()).unwrap().run();
+    assert_traces_bitwise(
+        &baseline.trace,
+        &report.trace,
+        "async kill replay",
+    );
+    let (a, b) = (
+        baseline.async_summary.expect("async bookkeeping"),
+        report.async_summary.expect("async bookkeeping"),
+    );
+    for i in 0..a.agg_grad.len() {
+        assert_eq!(
+            a.agg_grad[i].to_bits(),
+            b.agg_grad[i].to_bits(),
+            "agg_grad[{i}] after kill replay"
+        );
+    }
+    assert_eq!(a.vclock_us.to_bits(), b.vclock_us.to_bits(), "vclock");
+}
+
+/// Invariant 5: the async engine's conservation law holds under
+/// crashes and uplink drops together — every transmitted delta is
+/// folded, dropped, or still in flight, and nothing is double-counted.
+#[test]
+fn async_telescope_balances_under_crashes_and_drops() {
+    prop::check("async fault telescope", 10, |g| {
+        let p = gen_problem(g);
+        let m = p.m_workers();
+        let params = MethodParams::new(g.f64_in(0.2, 0.8) / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, params, g.usize_in(5..=25))
+            .with_drops(g.f64_in(0.0, 0.3), g.usize_in(0..=1 << 30) as u64)
+            .with_faults(gen_plan(g));
+        let acfg = AsyncConfig {
+            compute: ComputeModel::Pareto {
+                scale_us: g.f64_in(100.0, 2_000.0),
+                shape: g.f64_in(1.1, 3.0),
+                seed: g.usize_in(0..=1 << 30) as u64,
+            },
+            latency: LatencyModel {
+                fixed_us: g.f64_in(0.0, 500.0),
+                per_kib_us: g.f64_in(0.0, 32.0),
+            },
+            max_staleness: None,
+        };
+        let censor: Arc<dyn chb_fed::optim::CensorRule> = Arc::from(
+            chb_fed::optim::method::build_censor_rule(Method::Chb, &cfg.params),
+        );
+        let server = Server::new(Method::Chb, &cfg.params, p.theta0());
+        let mut workers = p.rust_workers();
+        let out = run_async_with_rules(
+            &mut workers,
+            &cfg,
+            &acfg,
+            server,
+            censor,
+            "CHB-async",
+        );
+        // the fold accumulator is the aggregate, bit for bit
+        for i in 0..out.agg_grad.len() {
+            chb_fed::assert_prop!(
+                out.agg_grad[i].to_bits() == out.applied_sum[i].to_bits(),
+                "agg_grad[{i}] != applied_sum[{i}]"
+            );
+        }
+        // conservation: Σ_m last-transmitted == applied + dropped +
+        // in-flight (each worker's transmitted deltas telescope to its
+        // θ̂ reference, wherever each delta physically ended up)
+        let dim = out.agg_grad.len();
+        let mut lhs = vec![0.0; dim];
+        for w in &workers {
+            linalg::axpy(1.0, w.last_transmitted(), &mut lhs);
+        }
+        let mut scale = 1.0f64;
+        let mut diff = 0.0f64;
+        for i in 0..dim {
+            let rhs =
+                out.applied_sum[i] + out.dropped_sum[i] + out.inflight_sum[i];
+            diff = diff.max((lhs[i] - rhs).abs());
+            scale = scale.max(lhs[i].abs());
+        }
+        chb_fed::assert_prop!(
+            diff <= 1e-9 * scale,
+            "conservation broke under faults+drops: {diff:.3e} (scale {scale:.3e})"
+        );
+        Ok(())
+    });
+}
