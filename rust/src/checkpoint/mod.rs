@@ -404,16 +404,7 @@ impl Checkpoint {
     /// rename over the destination, so a crash mid-write leaves the
     /// previous complete checkpoint intact.
     pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
-        let mut tmp = path.as_os_str().to_owned();
-        tmp.push(".tmp");
-        let tmp = PathBuf::from(tmp);
-        std::fs::write(&tmp, self.to_json_string())?;
-        std::fs::rename(&tmp, path)?;
+        atomic_write(path, &self.to_json_string())?;
         Ok(())
     }
 
@@ -631,18 +622,43 @@ impl Checkpoint {
 }
 
 // ---------------------------------------------------------------------------
+// atomic file writes — the tmp + rename path every durable artifact uses
+// ---------------------------------------------------------------------------
+
+/// Write `text` to `path` atomically: the content lands in `<path>.tmp`
+/// first and is renamed over the destination, so a process killed
+/// mid-write can never leave a torn file — readers see either the
+/// previous complete content or the new complete content.  Parent
+/// directories are created as needed.  This is the one write path every
+/// durable artifact (checkpoints, `manifest.json`, trace CSVs, the
+/// results-store index) goes through.
+pub fn atomic_write(path: &Path, text: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // hex codecs — every f64/u64 is a 16-hex-digit bit pattern
 // ---------------------------------------------------------------------------
 
-fn hex_f64(x: f64) -> String {
+pub(crate) fn hex_f64(x: f64) -> String {
     format!("{:016x}", x.to_bits())
 }
 
-fn hex_u64(x: u64) -> String {
+pub(crate) fn hex_u64(x: u64) -> String {
     format!("{x:016x}")
 }
 
-fn hex_f64_vec(v: &[f64]) -> Json {
+pub(crate) fn hex_f64_vec(v: &[f64]) -> Json {
     let mut s = String::with_capacity(v.len() * 16);
     for x in v {
         s.push_str(&hex_f64(*x));
@@ -658,7 +674,7 @@ fn hex_u64_vec(v: &[u64]) -> Json {
     Json::Str(s)
 }
 
-fn u64_from_hex(s: &str, what: &str) -> Result<u64, CheckpointError> {
+pub(crate) fn u64_from_hex(s: &str, what: &str) -> Result<u64, CheckpointError> {
     if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
         return Err(CheckpointError::Corrupt(format!(
             "{what}: {s:?} is not a 16-hex-digit word"
@@ -682,7 +698,10 @@ fn u64_vec_from_hex(s: &str, what: &str) -> Result<Vec<u64>, CheckpointError> {
     Ok(out)
 }
 
-fn f64_vec_from_hex(s: &str, what: &str) -> Result<Vec<f64>, CheckpointError> {
+pub(crate) fn f64_vec_from_hex(
+    s: &str,
+    what: &str,
+) -> Result<Vec<f64>, CheckpointError> {
     Ok(u64_vec_from_hex(s, what)?
         .into_iter()
         .map(f64::from_bits)
@@ -693,7 +712,7 @@ fn f64_vec_from_hex(s: &str, what: &str) -> Result<Vec<f64>, CheckpointError> {
 // strict JSON accessors
 // ---------------------------------------------------------------------------
 
-fn as_obj<'a>(
+pub(crate) fn as_obj<'a>(
     v: &'a Json,
     what: &str,
 ) -> Result<&'a BTreeMap<String, Json>, CheckpointError> {
@@ -703,7 +722,7 @@ fn as_obj<'a>(
     }
 }
 
-fn req<'a>(
+pub(crate) fn req<'a>(
     o: &'a BTreeMap<String, Json>,
     key: &str,
     what: &str,
@@ -713,7 +732,7 @@ fn req<'a>(
     })
 }
 
-fn check_keys(
+pub(crate) fn check_keys(
     o: &BTreeMap<String, Json>,
     required: &[&str],
     optional: &[&str],
@@ -738,7 +757,7 @@ fn check_keys(
     Ok(())
 }
 
-fn num_field(
+pub(crate) fn num_field(
     o: &BTreeMap<String, Json>,
     key: &str,
     what: &str,
@@ -753,7 +772,7 @@ fn num_field(
     }
 }
 
-fn str_field<'a>(
+pub(crate) fn str_field<'a>(
     o: &'a BTreeMap<String, Json>,
     key: &str,
     what: &str,
@@ -773,7 +792,10 @@ fn arr_field<'a>(
     })
 }
 
-fn f64_from_json(v: &Json, what: &str) -> Result<f64, CheckpointError> {
+pub(crate) fn f64_from_json(
+    v: &Json,
+    what: &str,
+) -> Result<f64, CheckpointError> {
     match v {
         Json::Str(s) => Ok(f64::from_bits(u64_from_hex(s, what)?)),
         _ => Err(CheckpointError::Corrupt(format!(
@@ -782,7 +804,10 @@ fn f64_from_json(v: &Json, what: &str) -> Result<f64, CheckpointError> {
     }
 }
 
-fn u64_from_json(v: &Json, what: &str) -> Result<u64, CheckpointError> {
+pub(crate) fn u64_from_json(
+    v: &Json,
+    what: &str,
+) -> Result<u64, CheckpointError> {
     match v {
         Json::Str(s) => u64_from_hex(s, what),
         _ => Err(CheckpointError::Corrupt(format!(
@@ -791,7 +816,7 @@ fn u64_from_json(v: &Json, what: &str) -> Result<u64, CheckpointError> {
     }
 }
 
-fn f64_vec_field(
+pub(crate) fn f64_vec_field(
     o: &BTreeMap<String, Json>,
     key: &str,
     what: &str,
@@ -1227,7 +1252,7 @@ fn payload_from_json(v: &Json) -> Result<Payload, CheckpointError> {
     }
 }
 
-fn round_to_json(r: &WorkerRound) -> Json {
+pub(crate) fn round_to_json(r: &WorkerRound) -> Json {
     let mut o = BTreeMap::new();
     o.insert("worker".into(), Json::Num(r.worker as f64));
     o.insert(
@@ -1248,7 +1273,7 @@ fn round_to_json(r: &WorkerRound) -> Json {
     Json::Obj(o)
 }
 
-fn round_from_json(v: &Json) -> Result<WorkerRound, CheckpointError> {
+pub(crate) fn round_from_json(v: &Json) -> Result<WorkerRound, CheckpointError> {
     let o = as_obj(v, "round")?;
     check_keys(
         o,
@@ -1688,6 +1713,31 @@ mod tests {
         assert_eq!(back.server, cp.server);
         // overwrite in place succeeds (the resume loop's steady state)
         cp.save(&path).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn atomic_write_survives_a_kill_mid_write() {
+        let dir = std::env::temp_dir().join(format!(
+            "chb_ckpt_test_{}_{}",
+            std::process::id(),
+            fnv1a64("atomic_write_torn")
+        ));
+        let path = dir.join("artifact.json");
+        atomic_write(&path, "{\"ok\": 1}\n").unwrap();
+        // simulate a process killed mid-write: a torn temp file next to
+        // a complete artifact.  The artifact must still parse cleanly,
+        // and the next atomic_write must replace both.
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, "{\"ok\": 2").unwrap(); // truncated JSON
+        let text = std::fs::read_to_string(&path).unwrap();
+        Json::parse(&text).unwrap();
+        assert_eq!(text, "{\"ok\": 1}\n");
+        atomic_write(&path, "{\"ok\": 3}\n").unwrap();
+        assert!(!tmp.exists(), "rename must consume the temp file");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"ok\": 3}\n");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -527,16 +527,22 @@ pub enum EngineKind {
     /// discrete-event virtual-clock engine with per-worker compute and
     /// latency models
     Async(AsyncConfig),
+    /// the round protocol over real sockets: a loopback
+    /// [`crate::wire::WirePool`] server plus one client thread per
+    /// worker, speaking the versioned CRC-framed codec (zero chaos ⇒
+    /// bit-identical to [`EngineKind::Serial`])
+    Wire(crate::wire::WireConfig),
 }
 
 impl EngineKind {
-    /// CLI / log label ("serial", "threaded", "rayon", "async").
+    /// CLI / log label ("serial", "threaded", "rayon", "async", "wire").
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Serial => "serial",
             EngineKind::Threaded => "threaded",
             EngineKind::Rayon { .. } => "rayon",
             EngineKind::Async(_) => "async",
+            EngineKind::Wire(_) => "wire",
         }
     }
 }
@@ -634,6 +640,12 @@ pub fn run_engine_with_rules_ctx(
             let (trace, summary) = out.split();
             Ok(EngineRun { trace, async_summary: Some(summary) })
         }
+        EngineKind::Wire(wcfg) => Ok(EngineRun {
+            trace: crate::wire::run_loopback_ctx(
+                wcfg, workers, cfg, server, censor, label, ctx,
+            )?,
+            async_summary: None,
+        }),
     }
 }
 

@@ -19,6 +19,10 @@
 //! * [`coordinator`] — the federated round engines (synchronous pools
 //!   and the asynchronous discrete-event engine) behind one
 //!   [`coordinator::EngineKind`] dispatch, and comm accounting.
+//! * [`wire`] — the same round protocol over real sockets: a
+//!   `chb-fed serve` daemon, `chb-fed worker` clients, a versioned
+//!   CRC-framed codec, seeded chaos injection, and quorum/retry
+//!   supervision (loopback runs are bit-identical to serial).
 //! * [`checkpoint`] — versioned, atomically-written run snapshots
 //!   with bit-identical resume, plus the fault-injection plan
 //!   ([`coordinator::FaultPlan`]) they are tested against.
@@ -46,3 +50,4 @@ pub mod tasks;
 pub mod testing;
 pub mod theory;
 pub mod util;
+pub mod wire;

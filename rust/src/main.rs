@@ -25,7 +25,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use chb_fed::checkpoint::{fnv1a64, Checkpoint, CheckpointPolicy};
+use chb_fed::checkpoint::{atomic_write, fnv1a64, Checkpoint, CheckpointPolicy};
 use chb_fed::coordinator::{
     AsyncConfig, ComputeModel, EngineKind, FaultPlan, Participation,
 };
@@ -39,7 +39,9 @@ use chb_fed::spec::{
 };
 use chb_fed::tasks::TaskKind;
 use chb_fed::util::cli::Args;
+use chb_fed::util::json::Json;
 use chb_fed::util::logging;
+use chb_fed::wire::{run_loadgen, LoadgenConfig, TransportSpec, WireConfig};
 
 const USAGE: &str = "\
 chb-fed — Censored Heavy Ball federated learning (paper reproduction)
@@ -52,7 +54,7 @@ USAGE:
               [--task T] [--dataset D] [--method M] [--alpha A] [--beta B]
               [--eps-c C | --eps-abs E] [--iters N] [--lambda L]
               [--backend rust|pjrt]
-              [--engine serial|threaded|rayon|async] [--threads N]
+              [--engine serial|threaded|rayon|async|wire] [--threads N]
               [--participation full|sample|straggler] [--sample-frac F]
               [--timeout T] [--part-seed S]
               [--batch-schedule full|minibatch|growing] [--batch-size B]
@@ -67,6 +69,11 @@ USAGE:
               [--compute-model uniform|pareto] [--compute-us US]
               [--pareto-shape A] [--compute-seed S] [--max-staleness S]
               [--net-fixed-us F] [--net-per-kib-us P]
+              [--quorum Q] [--round-deadline-ms MS] [--heartbeat-ms MS]
+              [--retry-max N] [--retry-base-ms MS] [--retry-jitter-seed S]
+              [--chaos-drop P] [--chaos-delay-prob P] [--chaos-delay-ms MS]
+              [--chaos-duplicate P] [--chaos-corrupt P]
+              [--chaos-partition P] [--chaos-seed S]
               [--checkpoint-every N] [--checkpoint-dir DIR]
               [--resume FILE]
               [--fault-prob P] [--fault-down R] [--fault-seed S]
@@ -103,6 +110,14 @@ USAGE:
       default the run's output directory); --resume FILE restores a
       run from a checkpoint and continues it bit-identically to the
       uninterrupted run.  Checkpointing never changes the trace.
+      wire engine: the same round protocol over loopback sockets —
+      one in-process server, one client thread per worker, a
+      versioned CRC-framed codec.  With zero chaos the trace is
+      bit-identical to --engine serial.  --chaos-* inject seeded
+      drop/delay/duplicate/corrupt/partition faults on the data
+      plane; --quorum Q folds a round once Q reports arrive after
+      --round-deadline-ms (missing workers are folded as skips and
+      forced to re-sync uncensored next round).
       fault injection: --fault-prob P crashes each (worker, round)
       with seeded probability P for --fault-down rounds (down workers
       observe only; their first round back transmits uncensored to
@@ -110,6 +125,32 @@ USAGE:
       after the listed rounds and restores it from its latest
       checkpoint — the replayed trace is bit-identical to the
       kill-free run.  The plan serializes into manifest.json.
+  chb-fed serve --bind tcp:HOST:PORT|uds:PATH [run flags | --spec FILE]
+      standalone coordinator daemon: bind the transport, wait for all
+      M `chb-fed worker` processes to dial in, then drive the round
+      protocol over the wire.  The spec's engine must be wire (pass
+      --engine wire, or a wire-engine manifest).  Writes the usual run
+      artifacts plus wire_stats.csv (chaos/retry/quorum counters) into
+      <out>/serve/.  A killed server restarted with --resume picks the
+      cohort back up from its latest checkpoint; clients keep redialing
+      and re-sync via a forced uncensored transmit.
+  chb-fed worker --id N --connect tcp:HOST:PORT|uds:PATH
+                 [run flags | --spec FILE]
+      one cohort member: rebuild worker N's shard from the same spec
+      the server runs (both sides derive identical data — only frames
+      cross the wire), dial the coordinator, and serve censored
+      uplinks until the server says Bye.  Dial and mid-run failures
+      reconnect with seeded exponential backoff.
+  chb-fed loadgen [--workers M] [--rounds R] [--dim D]
+                  [--chaos-drop P] [--chaos-delay-prob P]
+                  [--chaos-delay-ms MS] [--chaos-duplicate P]
+                  [--chaos-corrupt P] [--chaos-seed S]
+                  [--bench-out FILE]
+      closed-loop wire throughput harness: M concurrent loopback
+      clients against one in-process server, reporting rounds/sec,
+      fold throughput, and p50/p99 round latency.  --bench-out merges
+      two rows (wire_loadgen_*_round, *_round_p99) into a
+      BENCH_hotpath.json-style file for tools/bench_diff.py.
   chb-fed artifact [--smoke] [--specs DIR] [--out DIR] [--data DIR]
                    [--artifacts DIR] [--full]
       the kick-tires pipeline: runs every spec in examples/specs/
@@ -158,6 +199,9 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match args.positional[0].as_str() {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
+        "loadgen" => cmd_loadgen(&args),
         "artifact" => cmd_artifact(&args),
         "list" => cmd_list(&args),
         "check-theory" => cmd_theory(&args),
@@ -390,7 +434,49 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
                     }),
             })
         }
-        other => bail!("bad --engine {other:?} (serial|threaded|rayon|async)"),
+        "wire" => {
+            let mut wcfg = WireConfig::default();
+            if let Some(v) = pick_num("quorum")? {
+                wcfg.quorum = v as usize;
+            }
+            if let Some(v) = pick_num("round-deadline-ms")? {
+                wcfg.round_deadline_ms = v as u32;
+            }
+            if let Some(v) = pick_num("heartbeat-ms")? {
+                wcfg.heartbeat_ms = v as u32;
+            }
+            if let Some(v) = pick_num("retry-max")? {
+                wcfg.retry.max_attempts = v as u32;
+            }
+            if let Some(v) = pick_num("retry-base-ms")? {
+                wcfg.retry.base_ms = v as u32;
+            }
+            wcfg.retry.jitter_seed =
+                pick_seed("retry-jitter-seed", wcfg.retry.jitter_seed)?;
+            if let Some(v) = pick_num("chaos-drop")? {
+                wcfg.chaos.drop = v;
+            }
+            if let Some(v) = pick_num("chaos-delay-prob")? {
+                wcfg.chaos.delay_prob = v;
+            }
+            if let Some(v) = pick_num("chaos-delay-ms")? {
+                wcfg.chaos.delay_ms = v as u32;
+            }
+            if let Some(v) = pick_num("chaos-duplicate")? {
+                wcfg.chaos.duplicate = v;
+            }
+            if let Some(v) = pick_num("chaos-corrupt")? {
+                wcfg.chaos.corrupt = v;
+            }
+            if let Some(v) = pick_num("chaos-partition")? {
+                wcfg.chaos.partition = v;
+            }
+            wcfg.chaos.seed = pick_seed("chaos-seed", wcfg.chaos.seed)?;
+            EngineKind::Wire(wcfg)
+        }
+        other => bail!(
+            "bad --engine {other:?} (serial|threaded|rayon|async|wire)"
+        ),
     };
 
     let backend = match pick("backend", "rust").as_str() {
@@ -442,15 +528,11 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
     })
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let out = Path::new(args.get_or("out", "results")).join("run");
-    let registry = Registry::new(
-        Path::new(args.get_or("data", "data")),
-        Path::new(args.get_or("artifacts", "artifacts")),
-    );
+/// `--spec FILE` replays a manifest verbatim (run flags next to it are
+/// rejected by the strict accounting in dispatch()); otherwise flags
+/// assemble the spec.  Shared by `run`, `serve`, and `worker`.
+fn load_spec(args: &Args) -> Result<RunSpec> {
     let spec = match args.get("spec") {
-        // --spec replays a manifest verbatim; run flags next to it are
-        // rejected by the strict accounting in dispatch()
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("read spec {path}"))?;
@@ -460,6 +542,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => spec_from_flags(args)?,
     };
     spec.validate()?;
+    Ok(spec)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let out = Path::new(args.get_or("out", "results")).join("run");
+    let registry = Registry::new(
+        Path::new(args.get_or("data", "data")),
+        Path::new(args.get_or("artifacts", "artifacts")),
+    );
+    let spec = load_spec(args)?;
     if args.flag("dump-spec") {
         println!("{}", spec.to_json_string());
         return Ok(());
@@ -538,6 +630,170 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `chb-fed serve`: the coordinator daemon half of a multi-process
+/// deployment.  Supports the same checkpoint/resume flags as `run`,
+/// which is how a killed server resumes a cohort mid-run.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let out = Path::new(args.get_or("out", "results")).join("serve");
+    let registry = Registry::new(
+        Path::new(args.get_or("data", "data")),
+        Path::new(args.get_or("artifacts", "artifacts")),
+    );
+    let bind = args
+        .get("bind")
+        .context("serve: missing --bind tcp:HOST:PORT | uds:PATH")?;
+    let transport = TransportSpec::parse(bind).map_err(anyhow::Error::msg)?;
+    let spec = load_spec(args)?;
+    let ckpt_every = args.get_parse::<usize>("checkpoint-every")?;
+    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
+    let resume_path = args.get("resume").map(str::to_string);
+    if ckpt_dir.is_some() && ckpt_every.is_none() {
+        bail!("--checkpoint-dir needs --checkpoint-every");
+    }
+    args.finish()?;
+
+    let mut session = Session::from_spec(&spec, &registry)?;
+    if let Some(every) = ckpt_every {
+        let dir = ckpt_dir.unwrap_or_else(|| out.clone());
+        session = session.with_checkpoints(CheckpointPolicy::new(every, dir));
+    }
+    if let Some(path) = resume_path {
+        let cp = Checkpoint::load(Path::new(&path))
+            .with_context(|| format!("load checkpoint {path}"))?;
+        println!("resume: {} from round {} ({})", path, cp.k, cp.engine);
+        session = session.resuming_from(cp);
+    }
+    let m = session.problem().m_workers();
+    let f_star = session.problem().f_star().unwrap_or(0.0);
+    println!(
+        "serve: {} on {} at {transport} — waiting for {m} workers",
+        spec.method.name(),
+        spec.dataset,
+    );
+    let (report, stats) = session.serve(&transport)?;
+    report.write_artifacts(&out, f_star)?;
+    let stats_path = out.join("wire_stats.csv");
+    atomic_write(&stats_path, &stats.to_csv())
+        .with_context(|| format!("write {}", stats_path.display()))?;
+    let trace = &report.trace;
+    let last = trace.iters.last().context("empty trace")?;
+    println!(
+        "serve done: {} rounds, {} comms, final loss {:.6e} \
+         (retries={} quorum_skips={} reconnects={})",
+        trace.iterations(),
+        trace.total_comms(),
+        last.loss,
+        stats.retries,
+        stats.quorum_skips,
+        stats.reconnects,
+    );
+    println!("artifacts: {}", out.display());
+    Ok(())
+}
+
+/// `chb-fed worker`: one cohort member of a multi-process deployment.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let registry = Registry::new(
+        Path::new(args.get_or("data", "data")),
+        Path::new(args.get_or("artifacts", "artifacts")),
+    );
+    let id = args
+        .get_parse::<usize>("id")?
+        .context("worker: missing --id N")?;
+    let connect = args
+        .get("connect")
+        .context("worker: missing --connect tcp:HOST:PORT | uds:PATH")?;
+    let transport =
+        TransportSpec::parse(connect).map_err(anyhow::Error::msg)?;
+    let spec = load_spec(args)?;
+    args.finish()?;
+
+    let session = Session::from_spec(&spec, &registry)?;
+    println!("worker {id}: dialing {transport}");
+    let stats = session.worker(id, &transport)?;
+    println!(
+        "worker {id} done: {} rounds, {} commits, {} rollbacks, \
+         {} retransmits, {} reconnects",
+        stats.rounds,
+        stats.commits,
+        stats.rollbacks,
+        stats.retransmits,
+        stats.reconnects,
+    );
+    Ok(())
+}
+
+/// `chb-fed loadgen`: the closed-loop wire throughput harness.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let mut cfg = LoadgenConfig::default();
+    if let Some(v) = args.get_parse::<usize>("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("rounds")? {
+        cfg.rounds = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("dim")? {
+        cfg.dim = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("chaos-drop")? {
+        cfg.wire.chaos.drop = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("chaos-delay-prob")? {
+        cfg.wire.chaos.delay_prob = v;
+    }
+    if let Some(v) = args.get_parse::<u32>("chaos-delay-ms")? {
+        cfg.wire.chaos.delay_ms = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("chaos-duplicate")? {
+        cfg.wire.chaos.duplicate = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("chaos-corrupt")? {
+        cfg.wire.chaos.corrupt = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("chaos-seed")? {
+        cfg.wire.chaos.seed = v;
+    }
+    let bench_out = args.get("bench-out").map(PathBuf::from);
+    args.finish()?;
+
+    let report = run_loadgen(&cfg)?;
+    println!("{}", report.summary());
+    if let Some(path) = bench_out {
+        merge_bench_rows(&path, report.bench_rows())?;
+        println!("bench rows merged into {}", path.display());
+    }
+    Ok(())
+}
+
+/// Merge bench rows into a `BENCH_hotpath.json`-style array file:
+/// rows with the same name are replaced, everything else is kept, and
+/// the file is created when absent.  Atomic, so a crash mid-merge
+/// never leaves `tools/bench_diff.py` an unparseable file.
+fn merge_bench_rows(path: &Path, rows: Vec<Json>) -> Result<()> {
+    let mut all: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text)
+            .with_context(|| format!("parse {}", path.display()))?
+            .as_arr()
+            .with_context(|| format!("{} is not an array", path.display()))?
+            .to_vec(),
+        Err(_) => Vec::new(),
+    };
+    let name_of = |r: &Json| -> Option<String> {
+        match r {
+            Json::Obj(o) => {
+                o.get("name").and_then(|n| n.as_str()).map(str::to_string)
+            }
+            _ => None,
+        }
+    };
+    let fresh: std::collections::BTreeSet<String> =
+        rows.iter().filter_map(&name_of).collect();
+    all.retain(|r| name_of(r).is_none_or(|n| !fresh.contains(&n)));
+    all.extend(rows);
+    atomic_write(path, &(Json::Arr(all).dump_pretty() + "\n"))
+        .with_context(|| format!("write {}", path.display()))
+}
+
 /// The kick-tires artifact pipeline: run every spec in the examples
 /// directory, index each result by its manifest hash, and (in the
 /// full profile) regenerate the paper figures/tables.
@@ -570,7 +826,6 @@ fn cmd_artifact(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&store)
         .with_context(|| format!("create {}", store.display()))?;
 
-    use chb_fed::util::json::Json;
     let mut index = Vec::new();
     let mut summary = String::from(
         "spec,hash,task,dataset,method,engine,iters,comms,bits_cum,\
@@ -668,11 +923,13 @@ fn cmd_artifact(args: &Args) -> Result<()> {
         .collect();
         index.push(Json::Obj(entry));
     }
+    // the store index is the artifact consumers key on — never leave a
+    // torn copy behind if the pipeline dies mid-write
     let index_path = store.join("index.json");
-    std::fs::write(&index_path, Json::Arr(index).dump_pretty() + "\n")
+    atomic_write(&index_path, &(Json::Arr(index).dump_pretty() + "\n"))
         .with_context(|| format!("write {}", index_path.display()))?;
-    std::fs::write(store.join("summary.csv"), summary)?;
-    std::fs::write(store.join("REPORT.md"), report_md)?;
+    atomic_write(&store.join("summary.csv"), &summary)?;
+    atomic_write(&store.join("REPORT.md"), &report_md)?;
     println!(
         "store: {} specs indexed under {}",
         spec_files.len(),

@@ -1,10 +1,17 @@
 //! CSV writers for traces and tables (no external crates).
+//!
+//! Every writer builds the full document in memory and lands it with
+//! [`crate::checkpoint::atomic_write`] (tmp file + rename), so a
+//! crash mid-write never leaves a torn CSV behind — downstream
+//! plotting and `tools/bench_diff.py` either see the old file or the
+//! complete new one.
 
-use std::fs::File;
-use std::io::{BufWriter, Write};
+use std::fmt::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+use crate::checkpoint::atomic_write;
 
 use super::Trace;
 
@@ -13,20 +20,13 @@ use super::Trace;
 /// fills (synchronous engines write the accumulated round latency
 /// and stale_max = 0).
 pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let f = File::create(path)
-        .with_context(|| format!("create {}", path.display()))?;
-    let mut w = BufWriter::new(f);
-    writeln!(
-        w,
+    let mut out = String::from(
         "k,loss,obj_err,comms_round,comms_cum,agg_grad_sq,step_sq,bits_cum,\
-         participants,vclock_us,stale_max,batch_frac,epoch"
-    )?;
+         participants,vclock_us,stale_max,batch_frac,epoch\n",
+    );
     for (i, s) in trace.iters.iter().enumerate() {
         writeln!(
-            w,
+            out,
             "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{},{:.6},{},{:.6},{:.6}",
             s.k,
             s.loss,
@@ -42,57 +42,53 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
             s.stale_max,
             s.batch_frac,
             s.epoch
-        )?;
+        )
+        .expect("String writes cannot fail");
     }
-    Ok(())
+    atomic_write(path, &out)
+        .with_context(|| format!("write {}", path.display()))
 }
 
 /// Write the per-worker staleness telemetry (async runs): one row per
 /// worker with its fold count, max and mean arrival staleness.
 pub fn write_staleness(path: &Path, trace: &Trace) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let f = File::create(path)
-        .with_context(|| format!("create {}", path.display()))?;
-    let mut w = BufWriter::new(f);
-    writeln!(w, "worker,folds,stale_max,stale_mean")?;
+    let mut out = String::from("worker,folds,stale_max,stale_mean\n");
     for (id, s) in trace.worker_staleness.iter().enumerate() {
-        writeln!(w, "{},{},{},{:.6}", id, s.folds, s.max, s.mean())?;
+        writeln!(out, "{},{},{},{:.6}", id, s.folds, s.max, s.mean())
+            .expect("String writes cannot fail");
     }
-    Ok(())
+    atomic_write(path, &out)
+        .with_context(|| format!("write {}", path.display()))
 }
 
 /// Write the per-(iteration, worker) transmit map (Fig. 1).
 pub fn write_comm_map(path: &Path, trace: &Trace) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let f = File::create(path)?;
-    let mut w = BufWriter::new(f);
     let m = trace.comm_map.first().map_or(0, |r| r.len());
     let header: Vec<String> = (0..m).map(|i| format!("w{i}")).collect();
-    writeln!(w, "k,{}", header.join(","))?;
+    let mut out = format!("k,{}\n", header.join(","));
     for (k, row) in trace.comm_map.iter().enumerate() {
         let cells: Vec<&str> =
             row.iter().map(|&b| if b { "1" } else { "0" }).collect();
-        writeln!(w, "{},{}", k + 1, cells.join(","))?;
+        writeln!(out, "{},{}", k + 1, cells.join(","))
+            .expect("String writes cannot fail");
     }
-    Ok(())
+    atomic_write(path, &out)
+        .with_context(|| format!("write {}", path.display()))
 }
 
 /// Generic table writer: header + rows of strings.
-pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let f = File::create(path)?;
-    let mut w = BufWriter::new(f);
-    writeln!(w, "{}", header.join(","))?;
+pub fn write_table(
+    path: &Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    let mut out = format!("{}\n", header.join(","));
     for row in rows {
-        writeln!(w, "{}", row.join(","))?;
+        writeln!(out, "{}", row.join(","))
+            .expect("String writes cannot fail");
     }
-    Ok(())
+    atomic_write(path, &out)
+        .with_context(|| format!("write {}", path.display()))
 }
 
 #[cfg(test)]
@@ -161,6 +157,29 @@ mod tests {
         assert_eq!(text.lines().count(), 3);
         assert!(text.contains("1,1,0"));
         assert!(text.contains("2,0,1"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn csv_writes_never_leave_partial_files_behind() {
+        // a pre-existing file stays intact until the new content has
+        // fully landed: no moment at which the path holds a prefix
+        let dir = std::env::temp_dir().join("chb_csv_test4");
+        let path = dir.join("table.csv");
+        write_table(&path, &["a", "b"], &[vec!["1".into(), "2".into()]])
+            .unwrap();
+        let before = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(before, "a,b\n1,2\n");
+        write_table(&path, &["a", "b"], &[vec!["3".into(), "4".into()]])
+            .unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a,b\n3,4\n");
+        // no stray tmp files survive a completed write
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name() != "table.csv")
+            .collect();
+        assert!(stray.is_empty(), "{stray:?}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -17,6 +17,7 @@ use crate::net::LatencyModel;
 use crate::optim::Method;
 use crate::tasks::TaskKind;
 use crate::util::json::Json;
+use crate::wire::{ChaosSpec, RetryPolicy, WireConfig};
 
 use super::{
     BackendKind, CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec,
@@ -389,6 +390,32 @@ fn engine_to_json(e: &EngineKind) -> Json {
                 },
             ),
         ]),
+        EngineKind::Wire(wcfg) => obj(vec![
+            ("kind", s("wire")),
+            ("quorum", unum(wcfg.quorum as u64)),
+            ("round_deadline_ms", unum(wcfg.round_deadline_ms as u64)),
+            ("heartbeat_ms", unum(wcfg.heartbeat_ms as u64)),
+            (
+                "retry",
+                obj(vec![
+                    ("max_attempts", unum(wcfg.retry.max_attempts as u64)),
+                    ("base_ms", unum(wcfg.retry.base_ms as u64)),
+                    ("jitter_seed", unum(wcfg.retry.jitter_seed)),
+                ]),
+            ),
+            (
+                "chaos",
+                obj(vec![
+                    ("drop", num(wcfg.chaos.drop)),
+                    ("delay_prob", num(wcfg.chaos.delay_prob)),
+                    ("delay_ms", unum(wcfg.chaos.delay_ms as u64)),
+                    ("duplicate", num(wcfg.chaos.duplicate)),
+                    ("corrupt", num(wcfg.chaos.corrupt)),
+                    ("partition", num(wcfg.chaos.partition)),
+                    ("seed", unum(wcfg.chaos.seed)),
+                ]),
+            ),
+        ]),
     }
 }
 
@@ -472,6 +499,70 @@ fn engine_from_json(j: &Json) -> Result<EngineKind, SpecError> {
                 latency,
                 max_staleness,
             }))
+        }
+        "wire" => {
+            check_keys(
+                m,
+                "engine",
+                &[
+                    "kind",
+                    "quorum",
+                    "round_deadline_ms",
+                    "heartbeat_ms",
+                    "retry",
+                    "chaos",
+                ],
+            )?;
+            let mut wcfg = WireConfig::default();
+            if let Some(v) = m.get("quorum") {
+                wcfg.quorum = as_u64(v, "engine.quorum")? as usize;
+            }
+            if let Some(v) = m.get("round_deadline_ms") {
+                wcfg.round_deadline_ms =
+                    as_u64(v, "engine.round_deadline_ms")? as u32;
+            }
+            if let Some(v) = m.get("heartbeat_ms") {
+                wcfg.heartbeat_ms = as_u64(v, "engine.heartbeat_ms")? as u32;
+            }
+            if let Some(v) = m.get("retry") {
+                let rm = as_obj(v, "engine.retry")?;
+                check_keys(
+                    rm,
+                    "engine.retry",
+                    &["max_attempts", "base_ms", "jitter_seed"],
+                )?;
+                wcfg.retry = RetryPolicy {
+                    max_attempts: req_u64(rm, "max_attempts")? as u32,
+                    base_ms: req_u64(rm, "base_ms")? as u32,
+                    jitter_seed: req_u64(rm, "jitter_seed")?,
+                };
+            }
+            if let Some(v) = m.get("chaos") {
+                let cm = as_obj(v, "engine.chaos")?;
+                check_keys(
+                    cm,
+                    "engine.chaos",
+                    &[
+                        "drop",
+                        "delay_prob",
+                        "delay_ms",
+                        "duplicate",
+                        "corrupt",
+                        "partition",
+                        "seed",
+                    ],
+                )?;
+                wcfg.chaos = ChaosSpec {
+                    drop: req_f64(cm, "drop")?,
+                    delay_prob: req_f64(cm, "delay_prob")?,
+                    delay_ms: req_u64(cm, "delay_ms")? as u32,
+                    duplicate: req_f64(cm, "duplicate")?,
+                    corrupt: req_f64(cm, "corrupt")?,
+                    partition: req_f64(cm, "partition")?,
+                    seed: req_u64(cm, "seed")?,
+                };
+            }
+            Ok(EngineKind::Wire(wcfg))
         }
         other => Err(SpecError::UnknownName {
             field: "engine.kind",
@@ -873,6 +964,53 @@ mod tests {
         };
         let text = spec.to_json_string();
         assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+    }
+
+    #[test]
+    fn wire_engine_round_trips_and_defaults() {
+        let spec = RunSpec {
+            engine: EngineKind::Wire(WireConfig {
+                quorum: 3,
+                round_deadline_ms: 750,
+                heartbeat_ms: 250,
+                retry: RetryPolicy {
+                    max_attempts: 7,
+                    base_ms: 20,
+                    jitter_seed: 0xBEE5,
+                },
+                chaos: ChaosSpec {
+                    drop: 0.1,
+                    delay_prob: 0.05,
+                    delay_ms: 2,
+                    duplicate: 0.02,
+                    corrupt: 0.01,
+                    partition: 0.005,
+                    seed: 0xC405,
+                },
+            }),
+            ..RunSpec::new(TaskKind::LinReg, "synth")
+        };
+        let text = spec.to_json_string();
+        assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+        // omitted retry/chaos sub-objects fall back to defaults
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": "chb", "iters": 10,
+            "engine": {"kind": "wire", "quorum": 2}
+        }"#;
+        let spec = RunSpec::from_json_str(text).unwrap();
+        assert_eq!(
+            spec.engine,
+            EngineKind::Wire(WireConfig { quorum: 2, ..WireConfig::default() })
+        );
+        // unknown wire keys are rejected like every other axis
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": "chb", "iters": 10,
+            "engine": {"kind": "wire", "quroum": 2}
+        }"#;
+        let err = RunSpec::from_json_str(text).unwrap_err();
+        assert!(err.to_string().contains("quroum"), "{err}");
     }
 
     #[test]

@@ -586,33 +586,87 @@ impl RunSpec {
 
     fn validate_engine(&self) -> Result<(), SpecError> {
         use crate::coordinator::ComputeModel;
-        let EngineKind::Async(acfg) = &self.engine else {
-            return Ok(());
-        };
-        match acfg.compute {
-            ComputeModel::Uniform { us } => {
-                positive("engine.compute.us", us)?;
+        match &self.engine {
+            EngineKind::Async(acfg) => {
+                match acfg.compute {
+                    ComputeModel::Uniform { us } => {
+                        positive("engine.compute.us", us)?;
+                    }
+                    ComputeModel::Pareto { scale_us, shape, .. } => {
+                        positive("engine.compute.scale_us", scale_us)?;
+                        positive("engine.compute.shape", shape)?;
+                    }
+                }
+                for (field, v) in [
+                    ("engine.latency.fixed_us", acfg.latency.fixed_us),
+                    ("engine.latency.per_kib_us", acfg.latency.per_kib_us),
+                ] {
+                    finite(field, v)?;
+                    if v < 0.0 {
+                        return Err(SpecError::OutOfRange {
+                            field,
+                            value: v,
+                            lo: 0.0,
+                            hi: f64::INFINITY,
+                        });
+                    }
+                }
+                Ok(())
             }
-            ComputeModel::Pareto { scale_us, shape, .. } => {
-                positive("engine.compute.scale_us", scale_us)?;
-                positive("engine.compute.shape", shape)?;
+            EngineKind::Wire(wcfg) => {
+                if wcfg.retry.max_attempts == 0 {
+                    return Err(SpecError::ZeroSize {
+                        field: "engine.retry.max_attempts",
+                    });
+                }
+                if wcfg.round_deadline_ms == 0 {
+                    return Err(SpecError::ZeroSize {
+                        field: "engine.round_deadline_ms",
+                    });
+                }
+                if wcfg.heartbeat_ms == 0 {
+                    return Err(SpecError::ZeroSize {
+                        field: "engine.heartbeat_ms",
+                    });
+                }
+                let c = &wcfg.chaos;
+                let mut sum = 0.0;
+                for (field, v) in [
+                    ("engine.chaos.drop", c.drop),
+                    ("engine.chaos.delay_prob", c.delay_prob),
+                    ("engine.chaos.duplicate", c.duplicate),
+                    ("engine.chaos.corrupt", c.corrupt),
+                    ("engine.chaos.partition", c.partition),
+                ] {
+                    finite(field, v)?;
+                    if !(0.0..=1.0).contains(&v) {
+                        return Err(SpecError::OutOfRange {
+                            field,
+                            value: v,
+                            lo: 0.0,
+                            hi: 1.0,
+                        });
+                    }
+                    if field != "engine.chaos.partition" {
+                        sum += v;
+                    }
+                }
+                // drop/delay/duplicate/corrupt share one draw: their
+                // thresholds must partition [0, 1]
+                if sum > 1.0 {
+                    return Err(SpecError::OutOfRange {
+                        field: "engine.chaos (drop+delay+duplicate+corrupt)",
+                        value: sum,
+                        lo: 0.0,
+                        hi: 1.0,
+                    });
+                }
+                Ok(())
             }
+            EngineKind::Serial
+            | EngineKind::Threaded
+            | EngineKind::Rayon { .. } => Ok(()),
         }
-        for (field, v) in [
-            ("engine.latency.fixed_us", acfg.latency.fixed_us),
-            ("engine.latency.per_kib_us", acfg.latency.per_kib_us),
-        ] {
-            finite(field, v)?;
-            if v < 0.0 {
-                return Err(SpecError::OutOfRange {
-                    field,
-                    value: v,
-                    lo: 0.0,
-                    hi: f64::INFINITY,
-                });
-            }
-        }
-        Ok(())
     }
 
     fn validate_participation(&self) -> Result<(), SpecError> {
@@ -757,6 +811,10 @@ impl RunSpec {
             if let ComputeModel::Pareto { seed, .. } = acfg.compute {
                 seed_ok("engine.compute.seed", seed)?;
             }
+        }
+        if let EngineKind::Wire(wcfg) = &self.engine {
+            seed_ok("engine.chaos.seed", wcfg.chaos.seed)?;
+            seed_ok("engine.retry.jitter_seed", wcfg.retry.jitter_seed)?;
         }
         Ok(())
     }

@@ -34,6 +34,10 @@ use crate::optim::censor::{
     VarianceScaledCensor,
 };
 use crate::optim::{self, CensorRule, MethodParams};
+use crate::wire::{
+    run_client, ClientConfig, ClientStats, Listener, TransportSpec, WirePool,
+    WireStats,
+};
 
 use super::{
     BackendKind, CensorSpec, CodecSpec, EpsilonSpec, RunSpec, SpecError,
@@ -119,8 +123,11 @@ impl RunReport {
             csv::write_staleness(&dir.join(name), &self.trace)?;
         }
         let manifest = dir.join("manifest.json");
-        std::fs::write(&manifest, self.spec.to_json_string() + "\n")
-            .with_context(|| format!("write {}", manifest.display()))?;
+        crate::checkpoint::atomic_write(
+            &manifest,
+            &(self.spec.to_json_string() + "\n"),
+        )
+        .with_context(|| format!("write {}", manifest.display()))?;
         Ok(())
     }
 }
@@ -364,6 +371,88 @@ impl Session {
             trace: out.trace,
             async_summary: out.async_summary,
         })
+    }
+
+    /// Run this session as a standalone coordinator daemon: bind
+    /// `transport`, wait for all M workers to dial in, then drive the
+    /// round engine with the cohort on the other side of the wire.
+    /// The spec's engine must be `wire`.  Locally-built workers are
+    /// discarded — only the cohort size and dimension matter here; the
+    /// gradients live in the `chb-fed worker` processes.
+    ///
+    /// Returns the usual [`RunReport`] plus the server-side
+    /// [`WireStats`] counters (the CLI writes them as
+    /// `wire_stats.csv`).
+    pub fn serve(
+        self,
+        transport: &TransportSpec,
+    ) -> Result<(RunReport, WireStats)> {
+        let wcfg = match self.engine {
+            EngineKind::Wire(w) => w,
+            ref other => anyhow::bail!(
+                "`serve` needs engine.kind = \"wire\" (spec says {:?})",
+                other.name()
+            ),
+        };
+        let m = self.workers.len();
+        let theta0 = self.problem.theta0();
+        let server = Server::new(self.cfg.method, &self.cfg.params, theta0);
+        let dim = server.dim();
+        let listener = Listener::bind(transport)
+            .with_context(|| format!("bind {transport}"))?;
+        let mut pool = WirePool::new(listener, m, dim, wcfg, self.ctx.spec_hash)
+            .context("wire handshake")?;
+        let trace = crate::coordinator::engine::run_with_rules_ctx(
+            &mut pool,
+            &self.cfg,
+            server,
+            self.censor,
+            &self.label,
+            "wire",
+            &self.ctx,
+        )?;
+        let stats = pool.stats();
+        pool.shutdown();
+        Ok((
+            RunReport { spec: self.spec, trace, async_summary: None },
+            stats,
+        ))
+    }
+
+    /// Run this session as worker `id`: build the same deterministic
+    /// shard every cohort member derives from the spec, keep only
+    /// worker `id`, and serve its gradients to the coordinator at
+    /// `transport` until the server says `Bye`.  The spec's engine must
+    /// be `wire` (retry/heartbeat pacing comes from it).
+    pub fn worker(
+        self,
+        id: usize,
+        transport: &TransportSpec,
+    ) -> Result<ClientStats> {
+        let wcfg = match self.engine {
+            EngineKind::Wire(w) => w,
+            ref other => anyhow::bail!(
+                "`worker` needs engine.kind = \"wire\" (spec says {:?})",
+                other.name()
+            ),
+        };
+        let m = self.workers.len();
+        anyhow::ensure!(id < m, "worker id {id} out of range (M = {m})");
+        let mut w = self
+            .workers
+            .into_iter()
+            .nth(id)
+            .expect("id < m was just checked");
+        let ccfg = ClientConfig {
+            transport: transport.clone(),
+            m,
+            spec_hash: self.ctx.spec_hash,
+            retry: wcfg.retry,
+            heartbeat_ms: wcfg.heartbeat_ms,
+            max_reconnects: 100,
+        };
+        run_client(&mut w, self.censor, &ccfg)
+            .with_context(|| format!("worker {id} against {transport}"))
     }
 }
 

@@ -1,0 +1,246 @@
+//! Seeded fault injection for the wire transport.
+//!
+//! Every decision — drop this frame, delay it, duplicate it, corrupt
+//! one body byte, partition this worker — is a pure function of
+//! `(seed, worker, direction, round, attempt)`, hashed exactly the way
+//! [`crate::coordinator::fault::FaultPlan`] derives its per-(worker,
+//! round) streams.  Nothing is sampled from wall-clock state, so a
+//! chaos schedule replays identically run after run: the *trace* of a
+//! seeded chaos run is deterministic even though the wire chatter
+//! (retry timing, poll interleaving) is not.
+//!
+//! Chaos applies to the data plane only (`Round` broadcasts and
+//! `Report` uplinks).  Control frames — handshake, snapshot, restore,
+//! heartbeat, bye — are delivered faithfully: fault tolerance of the
+//! *round protocol* is what is under test, not the test harness
+//! itself.
+
+use crate::rng::SplitMix64;
+
+/// Fault probabilities and the schedule seed.  All-zero probabilities
+/// (the default) disable injection entirely — the transport then
+/// writes frames straight through, which is the configuration the
+/// bit-identity pin runs under.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosSpec {
+    /// probability a data frame is silently dropped
+    pub drop: f64,
+    /// probability a data frame is delayed by [`ChaosSpec::delay_ms`]
+    pub delay_prob: f64,
+    /// delay applied to delayed frames, in milliseconds
+    pub delay_ms: u32,
+    /// probability a data frame is sent twice (same seq — the
+    /// receiver's duplicate suppression must absorb it)
+    pub duplicate: f64,
+    /// probability one body byte of a data frame is bit-flipped (the
+    /// receiver's CRC must reject it)
+    pub corrupt: f64,
+    /// probability a (worker, round) link is partitioned — both
+    /// directions drop everything for that round
+    pub partition: f64,
+    /// schedule seed
+    pub seed: u64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            drop: 0.0,
+            delay_prob: 0.0,
+            delay_ms: 5,
+            duplicate: 0.0,
+            corrupt: 0.0,
+            partition: 0.0,
+            seed: 0xC405,
+        }
+    }
+}
+
+/// Which way a data frame is travelling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkDir {
+    /// server → worker (`Round` broadcast)
+    Down,
+    /// worker → server (`Report` uplink)
+    Up,
+}
+
+/// The verdict for one (frame, attempt).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// send faithfully
+    Deliver,
+    /// do not send at all
+    Drop,
+    /// sleep [`ChaosSpec::delay_ms`], then send
+    Delay,
+    /// send the identical bytes twice
+    Duplicate,
+    /// flip one body bit, then send
+    Corrupt,
+}
+
+// Direction salts keep the up and down streams independent; the
+// worker/round mixing constants match FaultPlan's.
+const SALT_DOWN: u64 = 0x00D0_77AE;
+const SALT_UP: u64 = 0x001B_55C4;
+const SALT_PART: u64 = 0x00A7_0A17;
+
+impl ChaosSpec {
+    /// Whether any injection is configured at all.
+    pub fn enabled(&self) -> bool {
+        self.drop > 0.0
+            || self.delay_prob > 0.0
+            || self.duplicate > 0.0
+            || self.corrupt > 0.0
+            || self.partition > 0.0
+    }
+
+    fn draw(&self, salt: u64, worker: usize, round: u64, attempt: u32) -> f64 {
+        let mut g = SplitMix64::new(
+            self.seed
+                ^ salt
+                ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ round.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+                ^ (attempt as u64).wrapping_mul(0x1656_67B1_9E37_79F9),
+        );
+        (g.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// The verdict for one data frame.  `attempt` numbers retransmits
+    /// of the same logical message (1-based), so a retry draws a fresh
+    /// verdict — bounded retries eventually punch through any
+    /// sub-certain drop rate, deterministically.
+    pub fn action(
+        &self,
+        worker: usize,
+        dir: LinkDir,
+        round: u64,
+        attempt: u32,
+    ) -> ChaosAction {
+        let salt = match dir {
+            LinkDir::Down => SALT_DOWN,
+            LinkDir::Up => SALT_UP,
+        };
+        let u = self.draw(salt, worker, round, attempt);
+        let mut edge = self.drop;
+        if u < edge {
+            return ChaosAction::Drop;
+        }
+        edge += self.delay_prob;
+        if u < edge {
+            return ChaosAction::Delay;
+        }
+        edge += self.duplicate;
+        if u < edge {
+            return ChaosAction::Duplicate;
+        }
+        edge += self.corrupt;
+        if u < edge {
+            return ChaosAction::Corrupt;
+        }
+        ChaosAction::Deliver
+    }
+
+    /// Whether the (worker, round) link is partitioned — checked
+    /// before per-frame actions; a partition silences both directions
+    /// for the whole round regardless of retries.
+    pub fn partitioned(&self, worker: usize, round: u64) -> bool {
+        self.partition > 0.0
+            && self.draw(SALT_PART, worker, round, 0) < self.partition
+    }
+
+    /// Deterministically pick a body byte to bit-flip for a Corrupt
+    /// verdict: returns `(byte_index_within_body, bit)`.
+    pub fn corrupt_site(
+        &self,
+        worker: usize,
+        round: u64,
+        attempt: u32,
+        body_len: usize,
+    ) -> (usize, u8) {
+        let mut g = SplitMix64::new(
+            self.seed
+                ^ 0xC0_44_0B_7E
+                ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ round.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+                ^ (attempt as u64).wrapping_mul(0x1656_67B1_9E37_79F9),
+        );
+        let idx = (g.next_u64() % body_len.max(1) as u64) as usize;
+        let bit = (g.next_u64() % 8) as u8;
+        (idx, bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actions_are_pure_functions_of_the_key() {
+        let c = ChaosSpec {
+            drop: 0.2,
+            delay_prob: 0.1,
+            duplicate: 0.1,
+            corrupt: 0.1,
+            partition: 0.1,
+            ..ChaosSpec::default()
+        };
+        for w in 0..4 {
+            for k in 1..40u64 {
+                for a in 1..4 {
+                    assert_eq!(
+                        c.action(w, LinkDir::Down, k, a),
+                        c.action(w, LinkDir::Down, k, a)
+                    );
+                    assert_eq!(
+                        c.action(w, LinkDir::Up, k, a),
+                        c.action(w, LinkDir::Up, k, a)
+                    );
+                }
+                assert_eq!(c.partitioned(w, k), c.partitioned(w, k));
+            }
+        }
+    }
+
+    #[test]
+    fn directions_and_attempts_draw_independent_streams() {
+        let c = ChaosSpec { drop: 0.5, ..ChaosSpec::default() };
+        let mut differs_dir = false;
+        let mut differs_attempt = false;
+        for k in 1..200u64 {
+            if c.action(0, LinkDir::Down, k, 1) != c.action(0, LinkDir::Up, k, 1)
+            {
+                differs_dir = true;
+            }
+            if c.action(0, LinkDir::Down, k, 1)
+                != c.action(0, LinkDir::Down, k, 2)
+            {
+                differs_attempt = true;
+            }
+        }
+        assert!(differs_dir, "up/down streams should decorrelate");
+        assert!(differs_attempt, "retries should draw fresh verdicts");
+    }
+
+    #[test]
+    fn zero_spec_always_delivers() {
+        let c = ChaosSpec::default();
+        assert!(!c.enabled());
+        for k in 1..100u64 {
+            assert_eq!(c.action(0, LinkDir::Up, k, 1), ChaosAction::Deliver);
+            assert!(!c.partitioned(0, k));
+        }
+    }
+
+    #[test]
+    fn rates_land_near_their_probabilities() {
+        let c = ChaosSpec { drop: 0.3, ..ChaosSpec::default() };
+        let n = 10_000;
+        let dropped = (1..=n)
+            .filter(|&k| c.action(1, LinkDir::Up, k, 1) == ChaosAction::Drop)
+            .count();
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "drop rate {rate} far from 0.3");
+    }
+}

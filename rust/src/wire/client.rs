@@ -1,0 +1,386 @@
+//! The worker side of the wire deployment: one [`Worker`] kept in
+//! lock-step with a remote server by [`run_client`].
+//!
+//! The client is a pure responder — it never initiates protocol state,
+//! it reacts to frames in arrival order.  Robustness rests on three
+//! mechanisms:
+//!
+//! * **Transactional rounds.**  Before computing a round the client
+//!   snapshots its censor state.  If the round transmits, the
+//!   (round, snapshot) pair stays *pending* until a later `Round`
+//!   frame's `acked` field proves the server accepted the report —
+//!   otherwise the snapshot is rolled back, exactly cancelling the θ̂
+//!   advance the lost uplink would have left dangling.  Skips mutate
+//!   nothing, so they need no transaction.
+//! * **Idempotent retransmits.**  A repeated `Round` for the round
+//!   just computed is answered from a cached report body (fresh seq,
+//!   identical payload bits), so server retries can never double-run
+//!   a gradient; frames with non-advancing seq numbers are dropped.
+//! * **Reconnect.**  On any stream-level failure the client redials
+//!   under bounded seeded backoff, re-runs the `Hello`/`Welcome`
+//!   handshake, and lets the server's `Restore` frame re-install its
+//!   committed state (followed by a forced uncensored transmit,
+//!   PR 7's rejoin semantics).  A server process restart looks to the
+//!   client like one more reconnect.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pool::{run_worker_round, RoundInput};
+use crate::coordinator::worker::{Worker, WorkerSnapshot};
+use crate::optim::{CensorDecision, CensorRule};
+use crate::util::json::Json;
+
+use super::frame::{
+    hello_body, parse_bye, parse_round, parse_snapshot, parse_welcome,
+    report_body, snapshot_body, write_frame, Frame, FrameKind, FrameReader,
+    WireError,
+};
+use super::transport::{Conn, RetryPolicy, TransportSpec};
+
+/// Client-side knobs.  `m` and `spec_hash` are validated against the
+/// server's `Welcome`, so a worker can never join the wrong cohort.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// where the server listens
+    pub transport: TransportSpec,
+    /// expected cohort size M
+    pub m: usize,
+    /// expected manifest hash (None skips the check)
+    pub spec_hash: Option<u64>,
+    /// backoff pacing for dial retries
+    pub retry: RetryPolicy,
+    /// idle probe interval (milliseconds)
+    pub heartbeat_ms: u32,
+    /// redial budget across the whole run — each successful handshake
+    /// refunds nothing, so this bounds total tolerated failures
+    pub max_reconnects: u32,
+}
+
+impl ClientConfig {
+    /// Sensible defaults for a loopback deployment.
+    pub fn loopback(transport: TransportSpec, m: usize) -> ClientConfig {
+        ClientConfig {
+            transport,
+            m,
+            spec_hash: None,
+            retry: RetryPolicy::default(),
+            heartbeat_ms: 1_000,
+            max_reconnects: 100,
+        }
+    }
+}
+
+/// What happened on the client side of a run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// rounds computed (scheduled or observing)
+    pub rounds: u64,
+    /// cached-report retransmissions served
+    pub retransmits: u64,
+    /// pending transmits rolled back because the server never acked
+    pub rollbacks: u64,
+    /// pending transmits committed
+    pub commits: u64,
+    /// dials after the first (server restarts, network blips)
+    pub reconnects: u64,
+    /// damaged frames discarded by CRC / body validation
+    pub crc_rejected: u64,
+    /// frames dropped by seq-based duplicate suppression
+    pub dup_suppressed: u64,
+}
+
+/// Timeout for the `Welcome` after a `Hello`.
+const WELCOME_TIMEOUT: Duration = Duration::from_secs(5);
+/// Read-poll granularity on the established connection.
+const POLL_TIMEOUT: Duration = Duration::from_millis(50);
+
+struct Session {
+    conn: Conn,
+    reader: FrameReader,
+    seq_tx: u64,
+    seq_rx: u64,
+}
+
+impl Session {
+    fn send(
+        &mut self,
+        kind: FrameKind,
+        round: u64,
+        body: Json,
+    ) -> Result<(), WireError> {
+        self.seq_tx += 1;
+        let f = Frame::new(kind, round, self.seq_tx, body);
+        write_frame(&mut self.conn, &f)
+    }
+}
+
+/// One dial + handshake attempt.
+fn dial(
+    worker_id: usize,
+    dim: usize,
+    cfg: &ClientConfig,
+) -> Result<Session, WireError> {
+    let conn = Conn::connect(&cfg.transport)?;
+    conn.set_read_timeout(Some(POLL_TIMEOUT))?;
+    conn.set_write_timeout(Some(WELCOME_TIMEOUT))?;
+    let mut s = Session { conn, reader: FrameReader::new(), seq_tx: 0, seq_rx: 0 };
+    s.send(
+        FrameKind::Hello,
+        0,
+        hello_body(worker_id, dim, cfg.spec_hash),
+    )?;
+    let deadline = Instant::now() + WELCOME_TIMEOUT;
+    loop {
+        if let Some(f) = s.reader.poll(&mut s.conn)? {
+            if f.kind != FrameKind::Welcome {
+                return Err(WireError::Protocol(format!(
+                    "expected Welcome, got {:?}",
+                    f.kind
+                )));
+            }
+            let w = parse_welcome(&f.body)?;
+            if w.m != cfg.m {
+                return Err(WireError::Protocol(format!(
+                    "server cohort M = {}, client expects {}",
+                    w.m, cfg.m
+                )));
+            }
+            if w.dim != dim {
+                return Err(WireError::Protocol(format!(
+                    "server dim {} != worker dim {dim}",
+                    w.dim
+                )));
+            }
+            if let (Some(a), Some(b)) = (w.spec_hash, cfg.spec_hash) {
+                if a != b {
+                    return Err(WireError::Protocol(format!(
+                        "server manifest hash {a:016x} != client {b:016x}"
+                    )));
+                }
+            }
+            s.seq_rx = f.seq;
+            return Ok(s);
+        }
+        if Instant::now() > deadline {
+            return Err(WireError::Timeout("no Welcome".into()));
+        }
+    }
+}
+
+/// Dial under bounded seeded backoff; `generation` salts the jitter
+/// stream so successive reconnects don't thunder in phase.
+fn dial_with_backoff(
+    worker: &Worker,
+    cfg: &ClientConfig,
+    generation: u64,
+    budget: &mut u32,
+) -> Result<Session, WireError> {
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        match dial(worker.id, worker.dim(), cfg) {
+            Ok(s) => return Ok(s),
+            Err(e @ WireError::Protocol(_)) => return Err(e),
+            Err(e @ WireError::Version { .. }) => return Err(e),
+            Err(e) => {
+                if *budget == 0 {
+                    return Err(e);
+                }
+                *budget -= 1;
+                std::thread::sleep(Duration::from_millis(
+                    cfg.retry.backoff_ms(
+                        worker.id,
+                        generation,
+                        attempt.saturating_add(1),
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Drive `worker` against a remote server until the server says `Bye`
+/// (normal completion) or the reconnect budget runs out.
+pub fn run_client(
+    worker: &mut Worker,
+    censor: Arc<dyn CensorRule>,
+    cfg: &ClientConfig,
+) -> Result<ClientStats, WireError> {
+    let mut stats = ClientStats::default();
+    let mut budget = cfg.max_reconnects;
+    let mut generation = 0u64;
+    // transactional state, carried across reconnects
+    let mut pending: Option<(u64, WorkerSnapshot)> = None;
+    let mut last_k: u64 = 0;
+    let mut cache: Option<Json> = None;
+    let heartbeat = Duration::from_millis(cfg.heartbeat_ms.max(1) as u64);
+    'redial: loop {
+        let mut s = dial_with_backoff(worker, cfg, generation, &mut budget)?;
+        if generation > 0 {
+            stats.reconnects += 1;
+        }
+        generation += 1;
+        let mut last_heard = Instant::now();
+        let mut last_probe = Instant::now();
+        loop {
+            let frame = match s.reader.poll(&mut s.conn) {
+                Ok(Some(f)) => f,
+                Ok(None) => {
+                    // idle: probe a long-silent server so a dead TCP
+                    // stream surfaces as a write error
+                    let now = Instant::now();
+                    if now.duration_since(last_heard) > heartbeat.mul_f64(3.0)
+                        && now.duration_since(last_probe) > heartbeat
+                    {
+                        last_probe = now;
+                        if s.send(
+                            FrameKind::Heartbeat,
+                            last_k,
+                            super::frame::empty_body(),
+                        )
+                        .is_err()
+                        {
+                            continue 'redial;
+                        }
+                    }
+                    continue;
+                }
+                Err(WireError::Crc { .. }) | Err(WireError::Body(_)) => {
+                    stats.crc_rejected += 1;
+                    continue;
+                }
+                Err(_) => continue 'redial,
+            };
+            last_heard = Instant::now();
+            if frame.seq <= s.seq_rx {
+                stats.dup_suppressed += 1;
+                continue;
+            }
+            s.seq_rx = frame.seq;
+            match frame.kind {
+                FrameKind::Round => {
+                    let msg = match parse_round(&frame.body) {
+                        Ok(m) => m,
+                        Err(_) => {
+                            stats.crc_rejected += 1;
+                            continue;
+                        }
+                    };
+                    let k = frame.round;
+                    if k < last_k {
+                        stats.dup_suppressed += 1;
+                        continue;
+                    }
+                    if k == last_k {
+                        // server retry: answer from cache, never
+                        // recompute (identical bits, fresh seq)
+                        if let Some(body) = &cache {
+                            stats.retransmits += 1;
+                            let body = body.clone();
+                            if s.send(FrameKind::Report, k, body).is_err() {
+                                continue 'redial;
+                            }
+                        }
+                        continue;
+                    }
+                    // a strictly newer round resolves the pending
+                    // transactional transmit first
+                    if let Some((p, snap)) = pending.take() {
+                        if msg.acked >= p {
+                            stats.commits += 1;
+                        } else {
+                            worker.restore(&snap);
+                            stats.rollbacks += 1;
+                        }
+                    }
+                    let mut active = vec![false; cfg.m];
+                    active[worker.id] = msg.active;
+                    let force = if msg.force {
+                        let mut f = vec![false; cfg.m];
+                        f[worker.id] = true;
+                        f
+                    } else {
+                        Vec::new()
+                    };
+                    let input = RoundInput {
+                        k: k as usize,
+                        theta: Arc::new(msg.theta),
+                        step_sq: msg.step_sq,
+                        active: Arc::new(active),
+                        force: Arc::new(force),
+                        censor: Arc::clone(&censor),
+                    };
+                    let snap = worker.snapshot();
+                    let r = run_worker_round(worker, &input);
+                    stats.rounds += 1;
+                    if r.decision == CensorDecision::Transmit {
+                        pending = Some((k, snap));
+                    }
+                    let body = report_body(&r);
+                    cache = Some(body.clone());
+                    last_k = k;
+                    if s.send(FrameKind::Report, k, body).is_err() {
+                        continue 'redial;
+                    }
+                }
+                FrameKind::SnapshotReq => {
+                    let body = snapshot_body(&worker.snapshot());
+                    if s.send(FrameKind::Snapshot, frame.round, body).is_err()
+                    {
+                        continue 'redial;
+                    }
+                }
+                FrameKind::Restore => {
+                    let snap = match parse_snapshot(&frame.body) {
+                        Ok(sn) => sn,
+                        Err(_) => {
+                            stats.crc_rejected += 1;
+                            continue;
+                        }
+                    };
+                    if snap.id != worker.id
+                        || snap.last_tx.len() != worker.dim()
+                    {
+                        stats.crc_rejected += 1;
+                        continue;
+                    }
+                    worker.restore(&snap);
+                    // restored state is authoritative: whatever was
+                    // pending or cached belongs to a dead timeline
+                    pending = None;
+                    cache = None;
+                    last_k = frame.round;
+                    if s.send(
+                        FrameKind::RestoreAck,
+                        frame.round,
+                        super::frame::empty_body(),
+                    )
+                    .is_err()
+                    {
+                        continue 'redial;
+                    }
+                }
+                FrameKind::Heartbeat => {}
+                FrameKind::Bye => {
+                    if let Ok(acked) = parse_bye(&frame.body) {
+                        if let Some((p, snap)) = pending.take() {
+                            if acked >= p {
+                                stats.commits += 1;
+                            } else {
+                                worker.restore(&snap);
+                                stats.rollbacks += 1;
+                            }
+                        }
+                    }
+                    return Ok(stats);
+                }
+                _ => {
+                    // Welcome/Hello/Report/Snapshot/RestoreAck have no
+                    // business arriving here; drop them
+                    stats.dup_suppressed += 1;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,609 @@
+//! The versioned, length-framed binary protocol unit.
+//!
+//! One frame on the wire is
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "CHBW"
+//!      4     2  version (LE u16, currently 1)
+//!      6     1  kind    (FrameKind discriminant)
+//!      7     1  flags   (reserved, 0)
+//!      8     8  round   (LE u64 — the server step k this frame belongs to)
+//!     16     8  seq     (LE u64 — per-connection, per-direction counter)
+//!     24     4  len     (LE u32 — body byte length)
+//!     28   len  body    (UTF-8 JSON; floats as 16-hex-digit bit patterns)
+//! 28+len     4  crc32   (LE u32, IEEE, over header + body)
+//! ```
+//!
+//! The body reuses the checkpoint module's hex-bit-pattern codecs, so
+//! every f64 that crosses the wire is bitwise-faithful — the loopback
+//! wire run is bit-identical to the in-process serial engine because
+//! nothing is ever rounded through decimal text.
+//!
+//! Decoding is strict and total: truncation, a flipped bit, a bad
+//! CRC, an unknown kind, or a version bump all surface as typed
+//! [`WireError`]s *before* any engine state is touched.  A CRC/body
+//! failure consumes exactly one frame from the stream (the length
+//! field is covered by the header), so a corrupted frame never
+//! desynchronizes the connection.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::checkpoint::{self, CheckpointError};
+use crate::coordinator::{WorkerRound, WorkerSnapshot};
+use crate::util::json::Json;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"CHBW";
+
+/// Wire protocol version; a mismatch is rejected before the body is
+/// even length-checked.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Fixed header size in bytes (everything before the body).
+pub const HEADER_LEN: usize = 28;
+
+/// CRC trailer size in bytes.
+pub const CRC_LEN: usize = 4;
+
+/// Upper bound on a frame body — a length field beyond this is
+/// rejected as [`WireError::Oversize`] instead of allocating.
+pub const MAX_BODY_LEN: u32 = 256 * 1024 * 1024;
+
+/// What a frame is — the message vocabulary of the round protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// client → server: worker announces (id, dim, spec hash)
+    Hello = 1,
+    /// server → client: cohort shape (M, dim, spec hash) accepted
+    Welcome = 2,
+    /// server → client: one round's broadcast (θᵏ, step², flags, ack)
+    Round = 3,
+    /// client → server: the worker's [`WorkerRound`] report
+    Report = 4,
+    /// either direction: liveness probe (echoed by the peer)
+    Heartbeat = 5,
+    /// server → client: request a [`WorkerSnapshot`] (checkpointing)
+    SnapshotReq = 6,
+    /// client → server: the snapshot reply
+    Snapshot = 7,
+    /// server → client: install this snapshot (resume / reconnect)
+    Restore = 8,
+    /// client → server: snapshot installed
+    RestoreAck = 9,
+    /// server → client: run over; final ack round enclosed
+    Bye = 10,
+}
+
+impl FrameKind {
+    /// Decode a kind byte; unknown values are a typed error.
+    pub fn from_u8(b: u8) -> Result<FrameKind, WireError> {
+        Ok(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Welcome,
+            3 => FrameKind::Round,
+            4 => FrameKind::Report,
+            5 => FrameKind::Heartbeat,
+            6 => FrameKind::SnapshotReq,
+            7 => FrameKind::Snapshot,
+            8 => FrameKind::Restore,
+            9 => FrameKind::RestoreAck,
+            10 => FrameKind::Bye,
+            other => return Err(WireError::BadKind(other)),
+        })
+    }
+}
+
+/// Everything that can go wrong on the wire, typed.  Every decode
+/// failure is raised before any engine state mutates, and (except for
+/// stream-level I/O faults) identifies exactly one bad frame.
+#[derive(Debug)]
+pub enum WireError {
+    /// socket-level failure
+    Io(std::io::Error),
+    /// first four bytes were not `"CHBW"` — the stream is garbage
+    BadMagic([u8; 4]),
+    /// protocol version mismatch
+    Version {
+        /// version the peer sent
+        got: u16,
+    },
+    /// unknown [`FrameKind`] discriminant
+    BadKind(u8),
+    /// a strict whole-buffer decode got fewer bytes than the frame needs
+    Truncated {
+        /// bytes the frame claims to span
+        need: usize,
+        /// bytes actually available
+        got: usize,
+    },
+    /// body length field exceeds [`MAX_BODY_LEN`]
+    Oversize {
+        /// the claimed body length
+        len: u32,
+    },
+    /// checksum mismatch — the frame was damaged in flight
+    Crc {
+        /// CRC the sender wrote
+        want: u32,
+        /// CRC computed over the received bytes
+        got: u32,
+    },
+    /// the body failed strict JSON decoding
+    Body(String),
+    /// the peer violated the round protocol
+    Protocol(String),
+    /// the peer closed the connection
+    Disconnected,
+    /// a bounded wait expired
+    Timeout(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:02x?} (expected \"CHBW\")")
+            }
+            WireError::Version { got } => write!(
+                f,
+                "wire protocol version {got} (this build speaks \
+                 {WIRE_VERSION})"
+            ),
+            WireError::BadKind(b) => write!(f, "unknown frame kind {b}"),
+            WireError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            WireError::Oversize { len } => write!(
+                f,
+                "frame body of {len} bytes exceeds the {MAX_BODY_LEN} cap"
+            ),
+            WireError::Crc { want, got } => {
+                write!(f, "crc mismatch: frame says {want:08x}, got {got:08x}")
+            }
+            WireError::Body(d) => write!(f, "frame body: {d}"),
+            WireError::Protocol(d) => write!(f, "protocol violation: {d}"),
+            WireError::Disconnected => write!(f, "peer disconnected"),
+            WireError::Timeout(d) => write!(f, "timed out: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl From<CheckpointError> for WireError {
+    fn from(e: CheckpointError) -> Self {
+        WireError::Body(e.to_string())
+    }
+}
+
+// CRC-32 (IEEE 802.3, reflected), table generated at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of `bytes` — the checksum every frame trailer carries.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// One decoded protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    /// what this frame is
+    pub kind: FrameKind,
+    /// server step k the frame belongs to (0 for handshake frames)
+    pub round: u64,
+    /// per-connection, per-direction monotonic counter — the receiver
+    /// discards any frame whose seq does not advance, which is what
+    /// makes chaos-duplicated and reordered frames harmless
+    pub seq: u64,
+    /// JSON body (empty object for bodyless kinds)
+    pub body: Json,
+}
+
+impl Frame {
+    /// Build a frame.
+    pub fn new(kind: FrameKind, round: u64, seq: u64, body: Json) -> Frame {
+        Frame { kind, round, seq, body }
+    }
+
+    /// Encode to the byte layout documented at module level.
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.body.dump();
+        let body = body.as_bytes();
+        let mut out = Vec::with_capacity(HEADER_LEN + body.len() + CRC_LEN);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        out.push(self.kind as u8);
+        out.push(0); // flags, reserved
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(body);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Strict whole-buffer decode: `buf` must hold exactly one frame.
+    /// Every validation (magic, version, kind, length, CRC, body JSON)
+    /// runs before anything is returned, so a caller can never act on
+    /// a damaged frame.
+    pub fn decode(buf: &[u8]) -> Result<Frame, WireError> {
+        if buf.len() < HEADER_LEN + CRC_LEN {
+            return Err(WireError::Truncated {
+                need: HEADER_LEN + CRC_LEN,
+                got: buf.len(),
+            });
+        }
+        if buf[0..4] != MAGIC {
+            return Err(WireError::BadMagic([
+                buf[0], buf[1], buf[2], buf[3],
+            ]));
+        }
+        let version = u16::from_le_bytes([buf[4], buf[5]]);
+        if version != WIRE_VERSION {
+            return Err(WireError::Version { got: version });
+        }
+        let kind = FrameKind::from_u8(buf[6])?;
+        let round = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let seq = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let len = u32::from_le_bytes(buf[24..28].try_into().unwrap());
+        if len > MAX_BODY_LEN {
+            return Err(WireError::Oversize { len });
+        }
+        let total = HEADER_LEN + len as usize + CRC_LEN;
+        if buf.len() != total {
+            return Err(WireError::Truncated { need: total, got: buf.len() });
+        }
+        let want = u32::from_le_bytes(buf[total - 4..total].try_into().unwrap());
+        let got = crc32(&buf[..total - 4]);
+        if want != got {
+            return Err(WireError::Crc { want, got });
+        }
+        let body_bytes = &buf[HEADER_LEN..total - 4];
+        let text = std::str::from_utf8(body_bytes)
+            .map_err(|e| WireError::Body(format!("not UTF-8: {e}")))?;
+        let body = Json::parse(text)
+            .map_err(|e| WireError::Body(format!("parse: {e}")))?;
+        Ok(Frame { kind, round, seq, body })
+    }
+
+    /// Streaming decode from a read buffer: returns `Ok(None)` while
+    /// the buffer holds less than one complete frame, and drains
+    /// exactly one frame's bytes otherwise — *including* when that
+    /// frame fails CRC or body validation, so one damaged frame costs
+    /// one frame, never the connection.
+    pub fn take(buf: &mut Vec<u8>) -> Result<Option<Frame>, WireError> {
+        if buf.len() >= 4 && buf[0..4] != MAGIC {
+            return Err(WireError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+        }
+        if buf.len() >= 6 {
+            let version = u16::from_le_bytes([buf[4], buf[5]]);
+            if version != WIRE_VERSION {
+                return Err(WireError::Version { got: version });
+            }
+        }
+        if buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(buf[24..28].try_into().unwrap());
+        if len > MAX_BODY_LEN {
+            return Err(WireError::Oversize { len });
+        }
+        let total = HEADER_LEN + len as usize + CRC_LEN;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let result = Frame::decode(&buf[..total]);
+        buf.drain(..total);
+        result.map(Some)
+    }
+}
+
+/// Per-connection receive state: a byte buffer that frames are carved
+/// out of.  One `poll` performs at most one socket read, so a caller
+/// multiplexing many connections stays responsive.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    /// Fresh reader (empty buffer).
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Try to produce one frame: first from buffered bytes, then from
+    /// one socket read.  `Ok(None)` means "no complete frame yet"
+    /// (including read timeouts on a socket with a read deadline);
+    /// [`WireError::Disconnected`] means the peer closed cleanly.
+    pub fn poll(
+        &mut self,
+        r: &mut impl Read,
+    ) -> Result<Option<Frame>, WireError> {
+        if let Some(f) = Frame::take(&mut self.buf)? {
+            return Ok(Some(f));
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        match r.read(&mut chunk) {
+            Ok(0) => return Err(WireError::Disconnected),
+            Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(e.into()),
+        }
+        Frame::take(&mut self.buf)
+    }
+}
+
+/// Write one frame and flush it.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<(), WireError> {
+    w.write_all(&f.encode())?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// body codecs — strict JSON, floats as hex bit patterns
+// ---------------------------------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn bool_field(
+    o: &std::collections::BTreeMap<String, Json>,
+    key: &str,
+    what: &str,
+) -> Result<bool, WireError> {
+    match checkpoint::req(o, key, what)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(WireError::Body(format!("{what}.{key} is not a bool"))),
+    }
+}
+
+/// `Hello` body: the worker's identity card.
+pub fn hello_body(worker: usize, dim: usize, spec_hash: Option<u64>) -> Json {
+    obj(vec![
+        ("worker", Json::Num(worker as f64)),
+        ("dim", Json::Num(dim as f64)),
+        (
+            "spec_hash",
+            match spec_hash {
+                Some(h) => Json::Str(checkpoint::hex_u64(h)),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Decoded `Hello` body.
+pub struct HelloMsg {
+    /// announcing worker id
+    pub worker: usize,
+    /// the worker's parameter dimension
+    pub dim: usize,
+    /// FNV-1a hash of the worker's manifest (None when spec-less)
+    pub spec_hash: Option<u64>,
+}
+
+/// Decode a `Hello` body.
+pub fn parse_hello(body: &Json) -> Result<HelloMsg, WireError> {
+    let o = checkpoint::as_obj(body, "hello")?;
+    checkpoint::check_keys(o, &["worker", "dim", "spec_hash"], &[], "hello")?;
+    let spec_hash = match checkpoint::req(o, "spec_hash", "hello")? {
+        Json::Null => None,
+        v => Some(checkpoint::u64_from_json(v, "hello.spec_hash")?),
+    };
+    Ok(HelloMsg {
+        worker: checkpoint::num_field(o, "worker", "hello")? as usize,
+        dim: checkpoint::num_field(o, "dim", "hello")? as usize,
+        spec_hash,
+    })
+}
+
+/// `Welcome` body: the cohort shape the server accepted the worker into.
+pub fn welcome_body(m: usize, dim: usize, spec_hash: Option<u64>) -> Json {
+    obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("dim", Json::Num(dim as f64)),
+        (
+            "spec_hash",
+            match spec_hash {
+                Some(h) => Json::Str(checkpoint::hex_u64(h)),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Decoded `Welcome` body.
+pub struct WelcomeMsg {
+    /// cohort size M
+    pub m: usize,
+    /// server-side parameter dimension
+    pub dim: usize,
+    /// server's manifest hash
+    pub spec_hash: Option<u64>,
+}
+
+/// Decode a `Welcome` body.
+pub fn parse_welcome(body: &Json) -> Result<WelcomeMsg, WireError> {
+    let o = checkpoint::as_obj(body, "welcome")?;
+    checkpoint::check_keys(o, &["m", "dim", "spec_hash"], &[], "welcome")?;
+    let spec_hash = match checkpoint::req(o, "spec_hash", "welcome")? {
+        Json::Null => None,
+        v => Some(checkpoint::u64_from_json(v, "welcome.spec_hash")?),
+    };
+    Ok(WelcomeMsg {
+        m: checkpoint::num_field(o, "m", "welcome")? as usize,
+        dim: checkpoint::num_field(o, "dim", "welcome")? as usize,
+        spec_hash,
+    })
+}
+
+/// `Round` body.  `theta_hex` is the pre-encoded iterate (encoded once
+/// per round, shared across the cohort's frames); `acked` is the
+/// highest round whose report from this worker the server has folded —
+/// the client resolves its pending transactional transmit against it.
+pub fn round_body(
+    theta_hex: &Json,
+    step_sq: f64,
+    active: bool,
+    force: bool,
+    acked: u64,
+) -> Json {
+    obj(vec![
+        ("theta", theta_hex.clone()),
+        ("step_sq", Json::Str(checkpoint::hex_f64(step_sq))),
+        ("active", Json::Bool(active)),
+        ("force", Json::Bool(force)),
+        ("acked", Json::Str(checkpoint::hex_u64(acked))),
+    ])
+}
+
+/// Decoded `Round` body.
+pub struct RoundMsg {
+    /// broadcast iterate θᵏ
+    pub theta: Vec<f64>,
+    /// ‖θᵏ − θ^{k−1}‖² (the censor threshold's RHS scale)
+    pub step_sq: f64,
+    /// is this worker scheduled this round?
+    pub active: bool,
+    /// bypass the censor (rejoin / resync semantics)
+    pub force: bool,
+    /// highest round of this worker the server has folded
+    pub acked: u64,
+}
+
+/// Decode a `Round` body.
+pub fn parse_round(body: &Json) -> Result<RoundMsg, WireError> {
+    let o = checkpoint::as_obj(body, "round")?;
+    checkpoint::check_keys(
+        o,
+        &["theta", "step_sq", "active", "force", "acked"],
+        &[],
+        "round",
+    )?;
+    Ok(RoundMsg {
+        theta: checkpoint::f64_vec_field(o, "theta", "round")?,
+        step_sq: checkpoint::f64_from_json(
+            checkpoint::req(o, "step_sq", "round")?,
+            "round.step_sq",
+        )?,
+        active: bool_field(o, "active", "round")?,
+        force: bool_field(o, "force", "round")?,
+        acked: checkpoint::u64_from_json(
+            checkpoint::req(o, "acked", "round")?,
+            "round.acked",
+        )?,
+    })
+}
+
+/// `Report` body: the checkpoint module's [`WorkerRound`] codec, so a
+/// report crossing the wire is bitwise the report a serial pool hands
+/// the engine in-process.
+pub fn report_body(r: &WorkerRound) -> Json {
+    checkpoint::round_to_json(r)
+}
+
+/// Decode a `Report` body into a [`WorkerRound`].
+pub fn parse_report(body: &Json) -> Result<WorkerRound, WireError> {
+    Ok(checkpoint::round_from_json(body)?)
+}
+
+/// `Snapshot` / `Restore` body: a [`WorkerSnapshot`] with the same key
+/// set and hex encoding the checkpoint file uses for worker state.
+pub fn snapshot_body(s: &WorkerSnapshot) -> Json {
+    obj(vec![
+        ("id", Json::Num(s.id as f64)),
+        ("last_tx", checkpoint::hex_f64_vec(&s.last_tx)),
+        ("transmissions", Json::Num(s.transmissions as f64)),
+        ("residual", checkpoint::hex_f64_vec(&s.residual)),
+    ])
+}
+
+/// Decode a `Snapshot` / `Restore` body.
+pub fn parse_snapshot(body: &Json) -> Result<WorkerSnapshot, WireError> {
+    let o = checkpoint::as_obj(body, "snapshot")?;
+    checkpoint::check_keys(
+        o,
+        &["id", "last_tx", "transmissions", "residual"],
+        &[],
+        "snapshot",
+    )?;
+    Ok(WorkerSnapshot {
+        id: checkpoint::num_field(o, "id", "snapshot")? as usize,
+        last_tx: checkpoint::f64_vec_field(o, "last_tx", "snapshot")?,
+        transmissions: checkpoint::num_field(o, "transmissions", "snapshot")?
+            as usize,
+        residual: checkpoint::f64_vec_field(o, "residual", "snapshot")?,
+    })
+}
+
+/// `Bye` body: the final ack round, so a client can commit a pending
+/// transactional transmit before exiting.
+pub fn bye_body(acked: u64) -> Json {
+    obj(vec![("acked", Json::Str(checkpoint::hex_u64(acked)))])
+}
+
+/// Decode a `Bye` body.
+pub fn parse_bye(body: &Json) -> Result<u64, WireError> {
+    let o = checkpoint::as_obj(body, "bye")?;
+    checkpoint::check_keys(o, &["acked"], &[], "bye")?;
+    checkpoint::u64_from_json(checkpoint::req(o, "acked", "bye")?, "bye.acked")
+        .map_err(WireError::from)
+}
+
+/// Empty body for bodyless frame kinds.
+pub fn empty_body() -> Json {
+    Json::Obj(std::collections::BTreeMap::new())
+}
+
+/// A synthesized skip report — what the server folds for a worker that
+/// missed its round deadline (quorum degradation).  Shape-identical to
+/// [`crate::coordinator::Worker::observe`]'s report: zero loss
+/// contribution is *not* claimed — the loss field is 0.0 and the
+/// `batch_frac` 0.0 marks it as a non-computing observer.
+pub fn synthesized_skip(worker: usize) -> WorkerRound {
+    WorkerRound {
+        worker,
+        decision: crate::optim::CensorDecision::Skip,
+        delta: Arc::new(crate::compress::Payload::default()),
+        loss: 0.0,
+        delta_sq: 0.0,
+        bits: 0,
+        batch_frac: 0.0,
+    }
+}

@@ -1,0 +1,227 @@
+//! Closed-loop wire throughput harness: hundreds of loopback clients
+//! against one [`WirePool`], measuring rounds/sec, fold throughput,
+//! and tail latency.
+//!
+//! The pool is driven directly with hand-built [`RoundInput`]s (no
+//! [`crate::coordinator::Server`]): the point is to meter the
+//! *transport* — frame encode/decode, chaos gauntlet, collect sweeps —
+//! not the optimizer.  Workers run a tiny quadratic backend under
+//! [`NeverCensor`], so every round folds all M reports (worst-case
+//! uplink load for the protocol).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::pool::{RoundInput, WorkerPool};
+use crate::coordinator::worker::{GradientBackend, Worker};
+use crate::optim::{CensorRule, NeverCensor};
+use crate::util::json::Json;
+
+use super::client::{run_client, ClientConfig};
+use super::server::{WireConfig, WirePool, WireStats};
+use super::transport::Listener;
+use super::WireError;
+
+/// Loadgen shape: how many clients, how many rounds, what dimension.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenConfig {
+    /// concurrent loopback clients M
+    pub workers: usize,
+    /// rounds to drive
+    pub rounds: usize,
+    /// parameter dimension d (payload size knob: ~16·d bytes/frame)
+    pub dim: usize,
+    /// wire behavior (quorum, deadlines, chaos, …)
+    pub wire: WireConfig,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            workers: 100,
+            rounds: 50,
+            dim: 50,
+            wire: WireConfig::default(),
+        }
+    }
+}
+
+/// What a loadgen run measured.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// clients driven
+    pub workers: usize,
+    /// rounds completed
+    pub rounds: usize,
+    /// parameter dimension
+    pub dim: usize,
+    /// wall-clock for the full drive (seconds)
+    pub elapsed_s: f64,
+    /// rounds per second (closed loop)
+    pub rounds_per_sec: f64,
+    /// report folds per second (M × rounds/sec)
+    pub folds_per_sec: f64,
+    /// median per-round latency (ns)
+    pub median_ns: u64,
+    /// median absolute deviation of per-round latency (ns)
+    pub mad_ns: u64,
+    /// 99th-percentile per-round latency (ns)
+    pub p99_ns: u64,
+    /// fastest round (ns)
+    pub min_ns: u64,
+    /// slowest round (ns)
+    pub max_ns: u64,
+    /// server-side wire counters
+    pub stats: WireStats,
+}
+
+impl LoadgenReport {
+    /// Rows in the `BENCH_hotpath.json` schema (`tools/bench_diff.py`
+    /// consumes these): one row for the median round latency, one for
+    /// the p99 tail.
+    pub fn bench_rows(&self) -> Vec<Json> {
+        let base = format!(
+            "wire_loadgen_m{}_d{}_round",
+            self.workers, self.dim
+        );
+        let row = |name: String, center: u64, spread: u64| {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(name));
+            o.insert("median_ns".to_string(), Json::Num(center as f64));
+            o.insert("mad_ns".to_string(), Json::Num(spread as f64));
+            o.insert("iters".to_string(), Json::Num(self.rounds as f64));
+            o.insert("samples".to_string(), Json::Num(self.rounds as f64));
+            o.insert("min_ns".to_string(), Json::Num(self.min_ns as f64));
+            o.insert("max_ns".to_string(), Json::Num(self.max_ns as f64));
+            Json::Obj(o)
+        };
+        vec![
+            row(base.clone(), self.median_ns, self.mad_ns),
+            row(format!("{base}_p99"), self.p99_ns, self.mad_ns),
+        ]
+    }
+
+    /// Human-readable one-screen summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "wire loadgen: M={} d={} rounds={}\n\
+             elapsed        {:.3} s\n\
+             rounds/sec     {:.1}\n\
+             folds/sec      {:.1}\n\
+             round p50      {:.3} ms\n\
+             round p99      {:.3} ms\n\
+             round min/max  {:.3} / {:.3} ms\n\
+             retries={} quorum_skips={} reconnects={} dup_suppressed={}",
+            self.workers,
+            self.dim,
+            self.rounds,
+            self.elapsed_s,
+            self.rounds_per_sec,
+            self.folds_per_sec,
+            self.median_ns as f64 / 1e6,
+            self.p99_ns as f64 / 1e6,
+            self.min_ns as f64 / 1e6,
+            self.max_ns as f64 / 1e6,
+            self.stats.retries,
+            self.stats.quorum_skips,
+            self.stats.reconnects,
+            self.stats.dup_suppressed,
+        )
+    }
+}
+
+/// f_m(θ) = ½‖θ − c_m‖² — cheap, per-worker-distinct gradients.
+struct Quad {
+    c: Vec<f64>,
+}
+
+impl GradientBackend for Quad {
+    fn dim(&self) -> usize {
+        self.c.len()
+    }
+
+    fn grad_loss_into(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        let mut loss = 0.0;
+        for ((g, t), c) in grad.iter_mut().zip(theta).zip(&self.c) {
+            *g = t - c;
+            loss += 0.5 * (t - c) * (t - c);
+        }
+        loss
+    }
+}
+
+fn percentile(sorted: &[u64], p: usize) -> u64 {
+    let idx = (sorted.len() * p / 100).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Drive the loadgen and measure.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, WireError> {
+    let m = cfg.workers.max(1);
+    let dim = cfg.dim.max(1);
+    let rounds = cfg.rounds.max(1);
+    let (listener, addr) = Listener::bind_loopback()?;
+    let censor: Arc<dyn CensorRule> = Arc::new(NeverCensor);
+    let handles: Vec<_> = (0..m)
+        .map(|id| {
+            let censor = Arc::clone(&censor);
+            let ccfg = ClientConfig {
+                retry: cfg.wire.retry,
+                heartbeat_ms: cfg.wire.heartbeat_ms,
+                ..ClientConfig::loopback(addr.clone(), m)
+            };
+            let c = vec![(id + 1) as f64 / m as f64; dim];
+            std::thread::spawn(move || {
+                let mut w = Worker::new(id, Box::new(Quad { c }));
+                run_client(&mut w, censor, &ccfg)
+                    .expect("loadgen client failed")
+            })
+        })
+        .collect();
+    let mut pool = WirePool::new(listener, m, dim, cfg.wire, None)?;
+    let active = Arc::new(vec![true; m]);
+    let force: Arc<Vec<bool>> = Arc::new(Vec::new());
+    let mut samples = Vec::with_capacity(rounds);
+    let t0 = Instant::now();
+    for k in 1..=rounds {
+        let theta = Arc::new(vec![1.0 / k as f64; dim]);
+        let input = RoundInput {
+            k,
+            theta,
+            step_sq: 1.0,
+            active: Arc::clone(&active),
+            force: Arc::clone(&force),
+            censor: Arc::clone(&censor),
+        };
+        let t = Instant::now();
+        let reports = pool.run_round(&input);
+        samples.push(t.elapsed().as_nanos() as u64);
+        debug_assert_eq!(reports.len(), m);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let stats = pool.stats();
+    pool.shutdown();
+    for h in handles {
+        let _ = h.join().expect("loadgen client panicked");
+    }
+    samples.sort_unstable();
+    let median_ns = percentile(&samples, 50);
+    let mut dev: Vec<u64> =
+        samples.iter().map(|&s| s.abs_diff(median_ns)).collect();
+    dev.sort_unstable();
+    let mad_ns = percentile(&dev, 50);
+    Ok(LoadgenReport {
+        workers: m,
+        rounds,
+        dim,
+        elapsed_s,
+        rounds_per_sec: rounds as f64 / elapsed_s.max(1e-9),
+        folds_per_sec: (m * rounds) as f64 / elapsed_s.max(1e-9),
+        median_ns,
+        mad_ns,
+        p99_ns: percentile(&samples, 99),
+        min_ns: samples[0],
+        max_ns: samples[samples.len() - 1],
+        stats,
+    })
+}

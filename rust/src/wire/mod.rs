@@ -1,0 +1,94 @@
+//! Layer-3b: the censored-heavy-ball round protocol over real sockets.
+//!
+//! Everything the in-process engines simulate — broadcast, censored
+//! uplinks, participation, faults — here crosses a versioned,
+//! length-framed binary protocol (TCP or Unix-domain, std-only):
+//!
+//! * [`frame`] — the frame codec: `"CHBW"` magic, version, kind, seq,
+//!   CRC32 trailer, JSON bodies with hex-bit-pattern f64s (the
+//!   checkpoint codec), so wire state is bitwise-faithful.
+//! * [`transport`] — TCP/UDS listeners and connections behind one
+//!   enum, plus the seeded exponential-backoff [`RetryPolicy`].
+//! * [`chaos`] — [`ChaosSpec`]: drop/delay/duplicate/corrupt/partition
+//!   as a pure function of `(seed, link, round, attempt)`.
+//! * [`server`] — [`WirePool`], a [`crate::coordinator::WorkerPool`]
+//!   whose workers live across sockets; heartbeats, bounded retries,
+//!   quorum folds, reconnect-restore.
+//! * [`client`] — [`run_client`], the worker process loop:
+//!   transactional rounds, cached retransmits, redial-with-backoff.
+//! * [`loadgen`] — a closed-loop throughput/latency harness driving
+//!   hundreds of loopback clients against one pool.
+//!
+//! The load-bearing property (ARCHITECTURE.md invariant 6): with zero
+//! chaos and full participation, a loopback wire run is bit-identical
+//! to the in-process serial engine — same trace, same per-worker
+//! transmission counts — because [`WirePool`] feeds the *same* round
+//! engine id-ordered, bit-exact reports.
+
+pub mod chaos;
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod server;
+pub mod transport;
+
+pub use chaos::{ChaosAction, ChaosSpec, LinkDir};
+pub use client::{run_client, ClientConfig, ClientStats};
+pub use frame::{Frame, FrameKind, FrameReader, WireError, WIRE_VERSION};
+pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
+pub use server::{WireConfig, WirePool, WireStats};
+pub use transport::{Conn, Listener, RetryPolicy, TransportSpec};
+
+use std::sync::Arc;
+
+use crate::checkpoint::CheckpointError;
+use crate::coordinator::engine::{run_with_rules_ctx, RunConfig, RunContext};
+use crate::coordinator::{Server, Worker};
+use crate::metrics::Trace;
+use crate::optim::CensorRule;
+
+/// Run the full round engine over a loopback wire deployment: one
+/// [`WirePool`] server and one client thread per worker, all inside
+/// this process.  This is what `EngineKind::Wire` dispatches to — the
+/// same protocol bytes a multi-process deployment exchanges, minus the
+/// process boundary.
+pub fn run_loopback_ctx(
+    wcfg: &WireConfig,
+    workers: Vec<Worker>,
+    cfg: &RunConfig,
+    server: Server,
+    censor: Arc<dyn CensorRule>,
+    label: &str,
+    ctx: &RunContext,
+) -> Result<Trace, CheckpointError> {
+    let m = workers.len();
+    let dim = server.dim();
+    let (listener, addr) =
+        Listener::bind_loopback().expect("bind loopback listener");
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|mut w| {
+            let censor = Arc::clone(&censor);
+            let ccfg = ClientConfig {
+                spec_hash: ctx.spec_hash,
+                retry: wcfg.retry,
+                heartbeat_ms: wcfg.heartbeat_ms,
+                ..ClientConfig::loopback(addr.clone(), m)
+            };
+            std::thread::spawn(move || {
+                let stats = run_client(&mut w, censor, &ccfg)
+                    .expect("wire loopback client failed");
+                (w, stats)
+            })
+        })
+        .collect();
+    let mut pool = WirePool::new(listener, m, dim, *wcfg, ctx.spec_hash)
+        .expect("wire loopback handshake failed");
+    let trace =
+        run_with_rules_ctx(&mut pool, cfg, server, censor, label, "wire", ctx)?;
+    pool.shutdown();
+    for h in handles {
+        let _ = h.join().expect("wire loopback client panicked");
+    }
+    Ok(trace)
+}

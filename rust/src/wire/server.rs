@@ -1,0 +1,801 @@
+//! The server side of the wire deployment: [`WirePool`], a
+//! [`WorkerPool`] whose workers live across sockets.
+//!
+//! Because `WirePool` implements the same trait the in-process pools
+//! do, the whole round engine ([`run_with_rules_ctx`]
+//! (crate::coordinator::engine::run_with_rules_ctx)) — scheduling,
+//! fault plans, SimNetwork accounting, checkpointing, the server fold
+//! — runs *verbatim* over remote workers.  Reports come back in
+//! worker-id order and every f64 crosses the wire as its exact bit
+//! pattern, so a zero-fault loopback run is bit-identical to the
+//! serial engine (invariant 6).
+//!
+//! Robustness machinery, per round:
+//!
+//! * **Idempotence** — per-connection monotonic `seq` numbers mean a
+//!   chaos-duplicated or reordered frame is discarded on arrival, and
+//!   a `(worker, round)` fold-dedup means a report is folded at most
+//!   once.  Stale reports (an earlier round's retransmit) are always
+//!   discarded, never folded.
+//! * **Transactional uplinks** — each `Round` broadcast carries
+//!   `acked[w]`, the highest round whose report from `w` the server
+//!   accepted.  A client that transmitted round j but sees
+//!   `acked < j` rolls its censor state back, so the telescope
+//!   invariant (server aggregate = Σ worker θ̂ views) survives any
+//!   pattern of lost uplinks.
+//! * **Bounded retries** — a missing report triggers `Round`
+//!   retransmits under [`RetryPolicy`] backoff; attempts are bounded,
+//!   so a round always terminates.
+//! * **Quorum degradation** — past the round deadline with at least
+//!   `quorum` reports in hand, the round proceeds; absent workers are
+//!   folded as synthesized skips and flagged for a forced uncensored
+//!   transmit (PR 7's rejoin semantics) at their next active round.
+//! * **Reconnect-resume** — a worker dialing in mid-run is welcomed,
+//!   restored from the server's live mirror of its censor state, and
+//!   force-resynced; a restarted server process rebuilds the cohort
+//!   from `Hello`s and resumes from the latest checkpoint without
+//!   clients restarting.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pool::{RoundInput, WorkerPool};
+use crate::coordinator::worker::{WorkerRound, WorkerSnapshot};
+use crate::optim::CensorDecision;
+use crate::util::json::Json;
+
+use super::chaos::{ChaosAction, ChaosSpec, LinkDir};
+use super::frame::{
+    bye_body, parse_hello, parse_report, parse_snapshot, round_body,
+    snapshot_body, synthesized_skip, welcome_body, Frame, FrameKind,
+    FrameReader, WireError,
+};
+use super::transport::{Conn, Listener, RetryPolicy};
+
+/// Everything about how the wire engine behaves that belongs in the
+/// manifest (reproducibility-relevant).  The listen address is
+/// deliberately *not* here — where a run binds is environmental, like
+/// thread counts, and lives on the CLI.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireConfig {
+    /// minimum reports per round before a deadline fold may proceed;
+    /// 0 means "all M" (no degradation — the bit-identity setting)
+    pub quorum: usize,
+    /// round deadline in milliseconds — before it, the server waits
+    /// for everyone; after it, quorum folds kick in
+    pub round_deadline_ms: u32,
+    /// idle-connection probe interval in milliseconds
+    pub heartbeat_ms: u32,
+    /// retransmit pacing
+    pub retry: RetryPolicy,
+    /// seeded fault injection (all-zero = off)
+    pub chaos: ChaosSpec,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            quorum: 0,
+            round_deadline_ms: 5_000,
+            heartbeat_ms: 1_000,
+            retry: RetryPolicy::default(),
+            chaos: ChaosSpec::default(),
+        }
+    }
+}
+
+/// Wire-level event counters — what the chaos actually did and what
+/// the supervision machinery absorbed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// `Round` frames chaos-dropped on the downlink
+    pub chaos_dropped_down: u64,
+    /// `Report` frames chaos-dropped at receipt
+    pub chaos_dropped_up: u64,
+    /// frames chaos-delayed
+    pub chaos_delayed: u64,
+    /// frames chaos-duplicated
+    pub chaos_duplicated: u64,
+    /// frames chaos-corrupted (one body bit flipped)
+    pub chaos_corrupted: u64,
+    /// (worker, round) partitions hit
+    pub chaos_partitioned: u64,
+    /// frames discarded by seq-based duplicate suppression
+    pub dup_suppressed: u64,
+    /// stale-round reports discarded (never folded)
+    pub stale_frames: u64,
+    /// frames rejected by CRC / body validation
+    pub crc_rejected: u64,
+    /// `Round` retransmits sent
+    pub retries: u64,
+    /// synthesized skips folded for workers past deadline + retries
+    pub quorum_skips: u64,
+    /// forced uncensored transmits requested after degradation/rejoin
+    pub forced_resyncs: u64,
+    /// workers re-admitted mid-run
+    pub reconnects: u64,
+    /// heartbeat probes sent
+    pub heartbeats: u64,
+    /// snapshot requests answered from the live mirror because the
+    /// worker was unreachable (EF residual may be stale there)
+    pub snapshot_fallbacks: u64,
+}
+
+impl WireStats {
+    /// One CSV header + row (for `wire_stats.csv` artifacts).
+    pub fn to_csv(&self) -> String {
+        format!(
+            "chaos_dropped_down,chaos_dropped_up,chaos_delayed,\
+             chaos_duplicated,chaos_corrupted,chaos_partitioned,\
+             dup_suppressed,stale_frames,crc_rejected,retries,\
+             quorum_skips,forced_resyncs,reconnects,heartbeats,\
+             snapshot_fallbacks\n\
+             {},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            self.chaos_dropped_down,
+            self.chaos_dropped_up,
+            self.chaos_delayed,
+            self.chaos_duplicated,
+            self.chaos_corrupted,
+            self.chaos_partitioned,
+            self.dup_suppressed,
+            self.stale_frames,
+            self.crc_rejected,
+            self.retries,
+            self.quorum_skips,
+            self.forced_resyncs,
+            self.reconnects,
+            self.heartbeats,
+            self.snapshot_fallbacks,
+        )
+    }
+}
+
+/// How long the pool waits for the initial cohort of M `Hello`s.
+const HANDSHAKE_WINDOW: Duration = Duration::from_secs(60);
+/// Per-connection deadline for the `Hello` after an accept.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+/// Sleep between idle collect sweeps.
+const IDLE_SPIN: Duration = Duration::from_micros(200);
+
+struct Channel {
+    conn: Conn,
+    reader: FrameReader,
+    seq_tx: u64,
+    seq_rx: u64,
+    last_heard: Instant,
+    last_probe: Instant,
+}
+
+impl Channel {
+    fn next_seq(&mut self) -> u64 {
+        self.seq_tx += 1;
+        self.seq_tx
+    }
+}
+
+/// A [`WorkerPool`] over sockets — see the module docs.
+pub struct WirePool {
+    cfg: WireConfig,
+    listener: Listener,
+    m: usize,
+    dim: usize,
+    spec_hash: Option<u64>,
+    chans: Vec<Option<Channel>>,
+    /// highest round whose report from worker w was accepted
+    acked: Vec<u64>,
+    /// worker owes a forced uncensored transmit (degradation/rejoin)
+    resync: Vec<bool>,
+    /// live mirror of each worker's committed censor state — what a
+    /// fresh reconnect is restored from and what `per_worker_comms`
+    /// reports.  `last_tx`/`transmissions` advance exactly on accepted
+    /// Transmit reports, so the mirror always equals the client's
+    /// committed view; the EF `residual` is the one field only a real
+    /// snapshot round-trip can refresh.
+    mirror: Vec<WorkerSnapshot>,
+    /// latest accepted loss per worker (synthesized skips reuse it so
+    /// a degraded round doesn't crater the global-loss trace)
+    last_loss: Vec<f64>,
+    /// current/most recent round number
+    last_k: u64,
+    started: bool,
+    done: bool,
+    stats: WireStats,
+}
+
+impl WirePool {
+    /// Bind to `listener` and block until all `m` workers have said
+    /// `Hello` (validated against `dim` and `spec_hash`).
+    pub fn new(
+        listener: Listener,
+        m: usize,
+        dim: usize,
+        cfg: WireConfig,
+        spec_hash: Option<u64>,
+    ) -> Result<WirePool, WireError> {
+        assert!(m > 0, "wire pool needs at least one worker");
+        let now = Instant::now();
+        let mut pool = WirePool {
+            cfg,
+            listener,
+            m,
+            dim,
+            spec_hash,
+            chans: (0..m).map(|_| None).collect(),
+            acked: vec![0; m],
+            resync: vec![false; m],
+            mirror: (0..m)
+                .map(|id| WorkerSnapshot {
+                    id,
+                    last_tx: vec![0.0; dim],
+                    transmissions: 0,
+                    residual: Vec::new(),
+                })
+                .collect(),
+            last_loss: vec![0.0; m],
+            last_k: 0,
+            started: false,
+            done: false,
+            stats: WireStats::default(),
+        };
+        let deadline = now + HANDSHAKE_WINDOW;
+        while pool.chans.iter().any(|c| c.is_none()) {
+            if Instant::now() > deadline {
+                return Err(WireError::Timeout(format!(
+                    "only {}/{m} workers said hello within {}s",
+                    pool.chans.iter().filter(|c| c.is_some()).count(),
+                    HANDSHAKE_WINDOW.as_secs()
+                )));
+            }
+            match pool.listener.accept_nonblocking()? {
+                Some(conn) => {
+                    // a bad handshake only costs that connection
+                    if let Err(e) = pool.admit(conn) {
+                        match e {
+                            WireError::Io(_)
+                            | WireError::Timeout(_)
+                            | WireError::Disconnected => {}
+                            other => return Err(other),
+                        }
+                    }
+                }
+                None => std::thread::sleep(Duration::from_millis(2)),
+            }
+        }
+        pool.started = true;
+        Ok(pool)
+    }
+
+    /// Effective quorum: `cfg.quorum == 0` means all M.
+    fn quorum(&self) -> usize {
+        if self.cfg.quorum == 0 {
+            self.m
+        } else {
+            self.cfg.quorum.min(self.m)
+        }
+    }
+
+    /// Validate a dialing connection's `Hello`, send `Welcome`, and
+    /// install the channel.  Returns the admitted worker id.
+    fn admit(&mut self, mut conn: Conn) -> Result<usize, WireError> {
+        conn.set_read_timeout(Some(Duration::from_millis(50)))?;
+        conn.set_write_timeout(Some(HELLO_TIMEOUT))?;
+        let mut reader = FrameReader::new();
+        let deadline = Instant::now() + HELLO_TIMEOUT;
+        let hello = loop {
+            if let Some(f) = reader.poll(&mut conn)? {
+                if f.kind != FrameKind::Hello {
+                    return Err(WireError::Protocol(format!(
+                        "expected Hello, got {:?}",
+                        f.kind
+                    )));
+                }
+                break f;
+            }
+            if Instant::now() > deadline {
+                return Err(WireError::Timeout("no Hello".into()));
+            }
+        };
+        let msg = parse_hello(&hello.body)?;
+        if msg.worker >= self.m {
+            return Err(WireError::Protocol(format!(
+                "worker id {} out of range (M = {})",
+                msg.worker, self.m
+            )));
+        }
+        if msg.dim != self.dim {
+            return Err(WireError::Protocol(format!(
+                "worker {} has dim {}, server has {}",
+                msg.worker, msg.dim, self.dim
+            )));
+        }
+        if let (Some(a), Some(b)) = (msg.spec_hash, self.spec_hash) {
+            if a != b {
+                return Err(WireError::Protocol(format!(
+                    "worker {} manifest hash {a:016x} != server {b:016x}",
+                    msg.worker
+                )));
+            }
+        }
+        let w = msg.worker;
+        let reconnect = self.started;
+        let mut ch = Channel {
+            conn,
+            reader,
+            seq_tx: 0,
+            seq_rx: hello.seq,
+            last_heard: Instant::now(),
+            last_probe: Instant::now(),
+        };
+        let welcome = Frame::new(
+            FrameKind::Welcome,
+            0,
+            ch.next_seq(),
+            welcome_body(self.m, self.dim, self.spec_hash),
+        );
+        super::frame::write_frame(&mut ch.conn, &welcome)?;
+        if reconnect {
+            // rejoin: re-install the mirror of the worker's committed
+            // state, then require a forced uncensored transmit so its
+            // θ̂ re-syncs even if the EF residual went stale
+            let restore = Frame::new(
+                FrameKind::Restore,
+                0,
+                ch.next_seq(),
+                snapshot_body(&self.mirror[w]),
+            );
+            super::frame::write_frame(&mut ch.conn, &restore)?;
+            self.resync[w] = true;
+            self.stats.reconnects += 1;
+        }
+        // collect sweeps must never block on an idle socket
+        ch.conn.set_nonblocking(true)?;
+        ch.conn.set_write_timeout(Some(HELLO_TIMEOUT))?;
+        self.chans[w] = Some(ch);
+        Ok(w)
+    }
+
+    /// Accept any pending reconnects (non-blocking, best effort).
+    fn accept_reconnects(&mut self) {
+        while let Ok(Some(conn)) = self.listener.accept_nonblocking() {
+            let _ = self.admit(conn);
+        }
+    }
+
+    /// Send a control-plane frame (no chaos — the supervision layer is
+    /// the test subject, not the harness).  A write failure drops the
+    /// channel; the worker re-enters through the reconnect path.
+    fn send_control(&mut self, w: usize, kind: FrameKind, round: u64, body: Json) {
+        let Some(ch) = self.chans[w].as_mut() else { return };
+        let f = Frame::new(kind, round, ch.next_seq(), body);
+        if super::frame::write_frame(&mut ch.conn, &f).is_err() {
+            self.chans[w] = None;
+        }
+    }
+
+    /// Send a data-plane frame through the chaos gauntlet.
+    fn send_data(
+        &mut self,
+        w: usize,
+        kind: FrameKind,
+        round: u64,
+        body: &Json,
+        attempt: u32,
+    ) {
+        if self.chans[w].is_none() {
+            return;
+        }
+        let chaos = self.cfg.chaos;
+        let mut action = ChaosAction::Deliver;
+        if chaos.enabled() {
+            if chaos.partitioned(w, round) {
+                self.stats.chaos_partitioned += 1;
+                return;
+            }
+            action = chaos.action(w, LinkDir::Down, round, attempt);
+        }
+        match action {
+            ChaosAction::Drop => {
+                self.stats.chaos_dropped_down += 1;
+                return;
+            }
+            ChaosAction::Delay => {
+                self.stats.chaos_delayed += 1;
+                std::thread::sleep(Duration::from_millis(
+                    chaos.delay_ms as u64,
+                ));
+            }
+            ChaosAction::Duplicate => self.stats.chaos_duplicated += 1,
+            ChaosAction::Corrupt => self.stats.chaos_corrupted += 1,
+            ChaosAction::Deliver => {}
+        }
+        let Some(ch) = self.chans[w].as_mut() else { return };
+        let f = Frame::new(kind, round, ch.next_seq(), body.clone());
+        let mut bytes = f.encode();
+        if action == ChaosAction::Corrupt {
+            let body_len =
+                bytes.len() - super::frame::HEADER_LEN - super::frame::CRC_LEN;
+            if body_len > 0 {
+                let (idx, bit) =
+                    chaos.corrupt_site(w, round, attempt, body_len);
+                bytes[super::frame::HEADER_LEN + idx] ^= 1 << bit;
+            }
+        }
+        use std::io::Write;
+        let sends = if action == ChaosAction::Duplicate { 2 } else { 1 };
+        let mut failed = false;
+        for _ in 0..sends {
+            if ch.conn.write_all(&bytes).and_then(|_| ch.conn.flush()).is_err()
+            {
+                failed = true;
+                break;
+            }
+        }
+        if failed {
+            self.chans[w] = None;
+        }
+    }
+
+    /// Drain every channel's socket into decoded, seq-deduplicated
+    /// frames.  Damaged frames cost themselves; dead sockets cost the
+    /// channel (the worker rejoins later).
+    fn drain(&mut self) -> Vec<(usize, Frame)> {
+        let mut events = Vec::new();
+        for w in 0..self.m {
+            let mut dead = false;
+            if let Some(ch) = self.chans[w].as_mut() {
+                for _ in 0..64 {
+                    match ch.reader.poll(&mut ch.conn) {
+                        Ok(Some(f)) => {
+                            if f.seq <= ch.seq_rx {
+                                self.stats.dup_suppressed += 1;
+                                continue;
+                            }
+                            ch.seq_rx = f.seq;
+                            ch.last_heard = Instant::now();
+                            events.push((w, f));
+                        }
+                        Ok(None) => break,
+                        Err(WireError::Crc { .. })
+                        | Err(WireError::Body(_)) => {
+                            self.stats.crc_rejected += 1;
+                        }
+                        Err(_) => {
+                            dead = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if dead {
+                self.chans[w] = None;
+            }
+        }
+        events
+    }
+
+    /// Probe channels that have been silent past the heartbeat
+    /// interval; a failed write surfaces dead peers early.
+    fn heartbeat_sweep(&mut self) {
+        let interval = Duration::from_millis(self.cfg.heartbeat_ms as u64);
+        let now = Instant::now();
+        for w in 0..self.m {
+            let due = match self.chans[w].as_ref() {
+                Some(ch) => {
+                    now.duration_since(ch.last_heard) > interval
+                        && now.duration_since(ch.last_probe) > interval
+                }
+                None => false,
+            };
+            if due {
+                if let Some(ch) = self.chans[w].as_mut() {
+                    ch.last_probe = now;
+                }
+                self.stats.heartbeats += 1;
+                self.send_control(
+                    w,
+                    FrameKind::Heartbeat,
+                    self.last_k,
+                    super::frame::empty_body(),
+                );
+            }
+        }
+    }
+
+    /// Process one accepted report for the current round `k`.
+    fn on_report(
+        &mut self,
+        w: usize,
+        f: &Frame,
+        k: u64,
+        reports: &mut [Option<WorkerRound>],
+        rx_seen: &mut [u32],
+    ) {
+        if f.round != k {
+            self.stats.stale_frames += 1;
+            return;
+        }
+        if reports[w].is_some() {
+            self.stats.dup_suppressed += 1;
+            return;
+        }
+        rx_seen[w] += 1;
+        let chaos = self.cfg.chaos;
+        if chaos.enabled() {
+            if chaos.partitioned(w, k) {
+                self.stats.chaos_partitioned += 1;
+                return;
+            }
+            match chaos.action(w, LinkDir::Up, k, rx_seen[w]) {
+                ChaosAction::Drop => {
+                    self.stats.chaos_dropped_up += 1;
+                    return;
+                }
+                ChaosAction::Corrupt => {
+                    // receive-side damage: the CRC would have caught it
+                    self.stats.chaos_corrupted += 1;
+                    return;
+                }
+                _ => {}
+            }
+        }
+        let r = match parse_report(&f.body) {
+            Ok(r) => r,
+            Err(_) => {
+                self.stats.crc_rejected += 1;
+                return;
+            }
+        };
+        if r.worker != w {
+            self.stats.crc_rejected += 1;
+            return;
+        }
+        // accept: this is the fold-exactly-once point
+        self.acked[w] = k;
+        self.last_loss[w] = r.loss;
+        if r.decision == CensorDecision::Transmit {
+            self.mirror[w].transmissions += 1;
+            r.delta.fold_into(&mut self.mirror[w].last_tx);
+            self.resync[w] = false;
+        }
+        reports[w] = Some(r);
+    }
+
+    /// Wire-level counters (chaos actions, retries, degradations).
+    pub fn stats(&self) -> WireStats {
+        self.stats
+    }
+
+    /// Send `Bye` to everyone still connected (idempotent).
+    pub fn shutdown(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        for w in 0..self.m {
+            let body = bye_body(self.acked[w]);
+            self.send_control(w, FrameKind::Bye, self.last_k, body);
+        }
+        for ch in self.chans.iter().flatten() {
+            ch.conn.shutdown();
+        }
+    }
+}
+
+impl WorkerPool for WirePool {
+    fn num_workers(&self) -> usize {
+        self.m
+    }
+
+    fn run_round(&mut self, input: &RoundInput) -> Vec<WorkerRound> {
+        assert_eq!(input.theta.len(), self.dim, "broadcast dim");
+        let k = input.k as u64;
+        self.last_k = k;
+        let theta_hex = crate::checkpoint::hex_f64_vec(&input.theta);
+        let force_of = |pool: &WirePool, w: usize| {
+            (!input.force.is_empty() && input.force[w]) || pool.resync[w]
+        };
+        let body_of = |pool: &WirePool, w: usize| {
+            round_body(
+                &theta_hex,
+                input.step_sq,
+                input.active[w],
+                force_of(pool, w),
+                pool.acked[w],
+            )
+        };
+        // first transmission (attempt 1)
+        let mut attempts = vec![1u32; self.m];
+        let mut rx_seen = vec![0u32; self.m];
+        for w in 0..self.m {
+            if force_of(self, w) && input.active[w] {
+                self.stats.forced_resyncs += 1;
+            }
+            let body = body_of(self, w);
+            self.send_data(w, FrameKind::Round, k, &body, 1);
+        }
+        let start = Instant::now();
+        let deadline =
+            start + Duration::from_millis(self.cfg.round_deadline_ms as u64);
+        let mut next_retry: Vec<Instant> = (0..self.m)
+            .map(|w| start + Duration::from_millis(
+                self.cfg.retry.backoff_ms(w, k, 2),
+            ))
+            .collect();
+        let mut reports: Vec<Option<WorkerRound>> =
+            (0..self.m).map(|_| None).collect();
+        loop {
+            self.accept_reconnects();
+            let events = self.drain();
+            let got_any = !events.is_empty();
+            for (w, f) in events {
+                match f.kind {
+                    FrameKind::Report => {
+                        self.on_report(w, &f, k, &mut reports, &mut rx_seen)
+                    }
+                    // liveness traffic and stragglers from other
+                    // phases: seq/last_heard already updated in drain
+                    FrameKind::Heartbeat
+                    | FrameKind::Snapshot
+                    | FrameKind::RestoreAck => {}
+                    _ => self.stats.crc_rejected += 1,
+                }
+            }
+            let have = reports.iter().filter(|r| r.is_some()).count();
+            if have == self.m {
+                break;
+            }
+            let now = Instant::now();
+            // paced, bounded retransmits for the missing
+            let mut exhausted = 0usize;
+            for w in 0..self.m {
+                if reports[w].is_some() {
+                    continue;
+                }
+                if attempts[w] >= self.cfg.retry.max_attempts
+                    || self.chans[w].is_none()
+                {
+                    exhausted += 1;
+                    continue;
+                }
+                if now >= next_retry[w] {
+                    attempts[w] += 1;
+                    self.stats.retries += 1;
+                    let body = body_of(self, w);
+                    self.send_data(w, FrameKind::Round, k, &body, attempts[w]);
+                    next_retry[w] = now
+                        + Duration::from_millis(
+                            self.cfg.retry.backoff_ms(w, k, attempts[w] + 1),
+                        );
+                }
+            }
+            let past_deadline = now >= deadline;
+            if past_deadline && have >= self.quorum() {
+                break;
+            }
+            // every missing worker is out of attempts or offline and
+            // the deadline has passed: degrade rather than hang, even
+            // below quorum — bounded progress beats a stuck cohort
+            if past_deadline && exhausted == self.m - have {
+                break;
+            }
+            self.heartbeat_sweep();
+            if !got_any {
+                std::thread::sleep(IDLE_SPIN);
+            }
+        }
+        // degrade the missing: fold a synthesized skip and require a
+        // forced uncensored transmit when they next compute
+        (0..self.m)
+            .map(|w| match reports[w].take() {
+                Some(r) => r,
+                None => {
+                    self.stats.quorum_skips += 1;
+                    self.resync[w] = true;
+                    let mut r = synthesized_skip(w);
+                    r.loss = self.last_loss[w];
+                    r
+                }
+            })
+            .collect()
+    }
+
+    fn per_worker_comms(&mut self) -> Vec<usize> {
+        self.mirror.iter().map(|s| s.transmissions).collect()
+    }
+
+    fn snapshots(&mut self) -> Vec<WorkerSnapshot> {
+        // a real snapshot round-trip per worker: the EF residual lives
+        // only client-side, so the mirror alone is not checkpoint-grade
+        let deadline_each =
+            Duration::from_millis(self.cfg.round_deadline_ms as u64);
+        for w in 0..self.m {
+            self.send_control(
+                w,
+                FrameKind::SnapshotReq,
+                self.last_k,
+                super::frame::empty_body(),
+            );
+            if self.chans[w].is_none() {
+                self.stats.snapshot_fallbacks += 1;
+                continue;
+            }
+            let deadline = Instant::now() + deadline_each;
+            let mut got = false;
+            'wait: while Instant::now() < deadline {
+                let events = self.drain();
+                let idle = events.is_empty();
+                for (ew, f) in events {
+                    if f.kind == FrameKind::Snapshot && ew == w {
+                        if let Ok(s) = parse_snapshot(&f.body) {
+                            if s.id == w && s.last_tx.len() == self.dim {
+                                self.mirror[w] = s;
+                                got = true;
+                                break 'wait;
+                            }
+                        }
+                        self.stats.crc_rejected += 1;
+                    } else if f.kind == FrameKind::Report {
+                        self.stats.stale_frames += 1;
+                    }
+                }
+                if self.chans[w].is_none() {
+                    break;
+                }
+                if idle {
+                    std::thread::sleep(IDLE_SPIN);
+                }
+            }
+            if !got {
+                self.stats.snapshot_fallbacks += 1;
+            }
+        }
+        self.mirror.clone()
+    }
+
+    fn restore(&mut self, snaps: &[WorkerSnapshot]) {
+        assert_eq!(snaps.len(), self.m, "snapshot count");
+        let deadline_each =
+            Duration::from_millis(self.cfg.round_deadline_ms as u64);
+        for (w, s) in snaps.iter().enumerate() {
+            self.mirror[w] = s.clone();
+            self.acked[w] = 0;
+            self.resync[w] = false;
+            self.send_control(
+                w,
+                FrameKind::Restore,
+                0,
+                snapshot_body(s),
+            );
+            if self.chans[w].is_none() {
+                continue;
+            }
+            let deadline = Instant::now() + deadline_each;
+            'wait: while Instant::now() < deadline {
+                let events = self.drain();
+                let idle = events.is_empty();
+                for (ew, f) in events {
+                    if f.kind == FrameKind::RestoreAck && ew == w {
+                        break 'wait;
+                    } else if f.kind == FrameKind::Report {
+                        self.stats.stale_frames += 1;
+                    }
+                }
+                if self.chans[w].is_none() {
+                    break;
+                }
+                if idle {
+                    std::thread::sleep(IDLE_SPIN);
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "wire"
+    }
+}
+
+impl Drop for WirePool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

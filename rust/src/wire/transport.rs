@@ -1,0 +1,376 @@
+//! Transport selection (TCP vs Unix-domain sockets) and the retry /
+//! backoff policy, all on `std::net` — no async runtime.
+//!
+//! Both socket families are wrapped behind [`Listener`] / [`Conn`]
+//! enums so the rest of the wire module is family-agnostic.  TCP gets
+//! `TCP_NODELAY` (frames are small and latency-bound); UDS is gated
+//! `#[cfg(unix)]` and rejected with a clear error elsewhere.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::rng::SplitMix64;
+
+/// Where a server listens / a worker connects — parsed from
+/// `tcp:HOST:PORT` or `uds:/path/to.sock`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// TCP address, e.g. `127.0.0.1:7700`
+    Tcp(String),
+    /// Unix-domain socket path (unix only)
+    Uds(PathBuf),
+}
+
+impl TransportSpec {
+    /// Parse `tcp:HOST:PORT` / `uds:PATH`.
+    pub fn parse(s: &str) -> Result<TransportSpec, String> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            if addr.rsplit_once(':').is_none() {
+                return Err(format!(
+                    "tcp transport '{addr}' is not HOST:PORT"
+                ));
+            }
+            Ok(TransportSpec::Tcp(addr.to_string()))
+        } else if let Some(path) = s.strip_prefix("uds:") {
+            if path.is_empty() {
+                return Err("uds transport needs a socket path".into());
+            }
+            Ok(TransportSpec::Uds(PathBuf::from(path)))
+        } else {
+            Err(format!(
+                "transport '{s}' must start with 'tcp:' or 'uds:'"
+            ))
+        }
+    }
+}
+
+impl std::fmt::Display for TransportSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportSpec::Tcp(a) => write!(f, "tcp:{a}"),
+            TransportSpec::Uds(p) => write!(f, "uds:{}", p.display()),
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn uds_unsupported() -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "uds transport is only available on unix",
+    )
+}
+
+/// A bound server socket of either family.
+pub enum Listener {
+    /// TCP listener
+    Tcp(TcpListener),
+    /// UDS listener (unix only)
+    #[cfg(unix)]
+    Uds(UnixListener),
+}
+
+impl Listener {
+    /// Bind the spec'd address.
+    pub fn bind(spec: &TransportSpec) -> std::io::Result<Listener> {
+        match spec {
+            TransportSpec::Tcp(addr) => {
+                Ok(Listener::Tcp(TcpListener::bind(addr)?))
+            }
+            #[cfg(unix)]
+            TransportSpec::Uds(path) => {
+                // a stale socket file from a previous run blocks bind
+                let _ = std::fs::remove_file(path);
+                Ok(Listener::Uds(UnixListener::bind(path)?))
+            }
+            #[cfg(not(unix))]
+            TransportSpec::Uds(_) => Err(uds_unsupported()),
+        }
+    }
+
+    /// Bind an ephemeral loopback TCP port and return the spec a
+    /// client should dial — the in-process loopback engine's listener.
+    pub fn bind_loopback() -> std::io::Result<(Listener, TransportSpec)> {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        let addr = l.local_addr()?;
+        Ok((Listener::Tcp(l), TransportSpec::Tcp(addr.to_string())))
+    }
+
+    /// Accept one pending connection without blocking; `None` when
+    /// nobody is dialing right now.  The accepted stream is switched
+    /// back to blocking mode (callers set read deadlines per use).
+    pub fn accept_nonblocking(&self) -> std::io::Result<Option<Conn>> {
+        match self {
+            Listener::Tcp(l) => {
+                l.set_nonblocking(true)?;
+                match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        s.set_nodelay(true)?;
+                        Ok(Some(Conn::Tcp(s)))
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        Ok(None)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            #[cfg(unix)]
+            Listener::Uds(l) => {
+                l.set_nonblocking(true)?;
+                match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        Ok(Some(Conn::Uds(s)))
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        Ok(None)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+
+    /// Block until one connection arrives.
+    pub fn accept_blocking(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => {
+                l.set_nonblocking(false)?;
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Uds(l) => {
+                l.set_nonblocking(false)?;
+                let (s, _) = l.accept()?;
+                Ok(Conn::Uds(s))
+            }
+        }
+    }
+}
+
+/// One established connection of either family.
+pub enum Conn {
+    /// TCP stream
+    Tcp(TcpStream),
+    /// UDS stream (unix only)
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Conn {
+    /// Dial the spec'd address (one attempt — callers wrap this in
+    /// [`RetryPolicy`]-paced loops).
+    pub fn connect(spec: &TransportSpec) -> std::io::Result<Conn> {
+        match spec {
+            TransportSpec::Tcp(addr) => {
+                let s = TcpStream::connect(addr)?;
+                s.set_nodelay(true)?;
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            TransportSpec::Uds(path) => {
+                Ok(Conn::Uds(UnixStream::connect(path)?))
+            }
+            #[cfg(not(unix))]
+            TransportSpec::Uds(_) => Err(uds_unsupported()),
+        }
+    }
+
+    /// Set the read deadline (None = block forever).
+    pub fn set_read_timeout(
+        &self,
+        d: Option<Duration>,
+    ) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Switch non-blocking mode (the server's collect sweeps poll all
+    /// channels without ever parking on an idle one).
+    pub fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// Set the write deadline (None = block forever).
+    pub fn set_write_timeout(
+        &self,
+        d: Option<Duration>,
+    ) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_write_timeout(d),
+        }
+    }
+
+    /// Shut the connection down in both directions (best effort).
+    pub fn shutdown(&self) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Conn::Uds(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// Bounded exponential backoff with seeded jitter.  The jitter is a
+/// pure function of `(jitter_seed, worker, round, attempt)`, so retry
+/// pacing — like everything else on this wire — replays identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// total send attempts per logical message (first send included);
+    /// once exhausted the server degrades the worker for the round
+    pub max_attempts: u32,
+    /// backoff base in milliseconds (attempt n waits ~base·2ⁿ⁻¹)
+    pub base_ms: u32,
+    /// jitter stream seed
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 5, base_ms: 10, jitter_seed: 0x1077 }
+    }
+}
+
+/// Backoff ceiling — one retry never sleeps longer than this.
+pub const BACKOFF_CAP_MS: u64 = 2_000;
+
+impl RetryPolicy {
+    /// Milliseconds to wait before retry number `attempt` (2-based:
+    /// the first send is attempt 1 and waits nothing).
+    pub fn backoff_ms(&self, worker: usize, round: u64, attempt: u32) -> u64 {
+        if attempt <= 1 {
+            return 0;
+        }
+        let exp = (self.base_ms as u64)
+            .saturating_mul(1u64 << (attempt - 2).min(16));
+        let mut g = SplitMix64::new(
+            self.jitter_seed
+                ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ round.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+                ^ attempt as u64,
+        );
+        let jitter = g.next_u64() % (self.base_ms as u64 + 1);
+        (exp + jitter).min(BACKOFF_CAP_MS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_specs_parse_and_round_trip() {
+        let t = TransportSpec::parse("tcp:127.0.0.1:7700").unwrap();
+        assert_eq!(t, TransportSpec::Tcp("127.0.0.1:7700".into()));
+        assert_eq!(t.to_string(), "tcp:127.0.0.1:7700");
+        let u = TransportSpec::parse("uds:/tmp/chb.sock").unwrap();
+        assert_eq!(u, TransportSpec::Uds(PathBuf::from("/tmp/chb.sock")));
+        assert_eq!(u.to_string(), "uds:/tmp/chb.sock");
+        assert!(TransportSpec::parse("http:nope").is_err());
+        assert!(TransportSpec::parse("tcp:noport").is_err());
+        assert!(TransportSpec::parse("uds:").is_err());
+    }
+
+    #[test]
+    fn backoff_grows_is_jittered_and_capped() {
+        let r = RetryPolicy::default();
+        assert_eq!(r.backoff_ms(0, 1, 1), 0);
+        let b2 = r.backoff_ms(0, 1, 2);
+        let b4 = r.backoff_ms(0, 1, 4);
+        assert!(b2 >= 10 && b2 <= 20, "attempt 2 ~ base: {b2}");
+        assert!(b4 >= 40 && b4 <= 50, "attempt 4 ~ 4·base: {b4}");
+        assert!(r.backoff_ms(0, 1, 40) <= BACKOFF_CAP_MS);
+        // deterministic
+        assert_eq!(r.backoff_ms(3, 7, 3), r.backoff_ms(3, 7, 3));
+        // jitter decorrelates workers
+        let mut differs = false;
+        for w in 0..8 {
+            if r.backoff_ms(w, 1, 2) != r.backoff_ms(w + 1, 1, 2) {
+                differs = true;
+            }
+        }
+        assert!(differs);
+    }
+
+    #[test]
+    fn loopback_tcp_round_trips_a_frame() {
+        use crate::util::json::Json;
+        use crate::wire::frame::{
+            empty_body, write_frame, Frame, FrameKind, FrameReader,
+        };
+        let (listener, spec) = Listener::bind_loopback().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut c = Conn::connect(&spec).unwrap();
+            let f = Frame::new(FrameKind::Heartbeat, 3, 1, empty_body());
+            write_frame(&mut c, &f).unwrap();
+            c
+        });
+        let mut server_side = listener.accept_blocking().unwrap();
+        server_side
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut reader = FrameReader::new();
+        let f = loop {
+            if let Some(f) = reader.poll(&mut server_side).unwrap() {
+                break f;
+            }
+        };
+        assert_eq!(f.kind, FrameKind::Heartbeat);
+        assert_eq!(f.round, 3);
+        assert_eq!(f.seq, 1);
+        assert_eq!(f.body, Json::Obj(Default::default()));
+        drop(h.join().unwrap());
+    }
+}

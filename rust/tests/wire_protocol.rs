@@ -1,0 +1,354 @@
+//! Wire-protocol pins (ARCHITECTURE.md invariant 6 and the frame
+//! contract behind it):
+//!
+//!   1. the frame codec is **byte-frozen**: a golden `Round` frame
+//!      stored as a fixture must round-trip bit-exactly in both
+//!      directions, so any accidental codec change (field order, CRC
+//!      polynomial, hex width) fails loudly instead of silently
+//!      splitting deployed versions.
+//!   2. damaged input fails with a **typed error before any state is
+//!      touched** — truncation, bad magic, version bumps, unknown
+//!      kinds, bit flips in body or CRC all name their failure, and
+//!      [`Frame::take`] drains exactly one damaged frame so the stream
+//!      recovers at the next boundary (bad magic is stream-fatal).
+//!   3. with zero chaos, a loopback wire run is **bit-identical to the
+//!      in-process serial engine** on all four paper tasks.
+//!   4. duplicate/delay chaos never perturbs a trace (seq-based
+//!      idempotence), and a seeded lossy chaos mix reproduces the same
+//!      trace bit for bit across reruns.
+//!   5. server kills replay over the wire to the kill-free trace, with
+//!      and without a real mid-run checkpoint backing the recovery.
+
+use std::path::PathBuf;
+
+use chb_fed::checkpoint::CheckpointPolicy;
+use chb_fed::coordinator::{EngineKind, FaultPlan};
+use chb_fed::data::synthetic;
+use chb_fed::experiments::Problem;
+use chb_fed::metrics::Trace;
+use chb_fed::spec::{EpsilonSpec, ParamSpec, RunSpec, Session};
+use chb_fed::tasks::TaskKind;
+use chb_fed::util::json::Json;
+use chb_fed::wire::frame::{
+    parse_round, round_body, Frame, FrameKind, WireError,
+};
+use chb_fed::wire::{ChaosSpec, WireConfig};
+
+/// The golden frame: kind=Round, round=5, seq=9, θ=[1.0, −0.5],
+/// step_sq=0.1, active, not forced, acked=4.  160 bytes total.
+fn golden_bytes() -> Vec<u8> {
+    let hex: String = include_str!("fixtures/wire_golden.hex")
+        .chars()
+        .filter(|c| c.is_ascii_hexdigit())
+        .collect();
+    (0..hex.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&hex[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+/// Rebuild the golden frame from the codec API.
+fn golden_frame() -> Frame {
+    let theta = Json::Str("3ff0000000000000bfe0000000000000".into());
+    Frame::new(FrameKind::Round, 5, 9, round_body(&theta, 0.1, true, false, 4))
+}
+
+#[test]
+fn golden_round_frame_is_byte_exact_both_directions() {
+    let bytes = golden_bytes();
+    assert_eq!(bytes.len(), 160, "fixture length");
+    assert_eq!(
+        golden_frame().encode(),
+        bytes,
+        "encoder drifted from the golden fixture"
+    );
+    let f = Frame::decode(&bytes).expect("golden frame must decode");
+    assert_eq!(f.kind, FrameKind::Round);
+    assert_eq!((f.round, f.seq), (5, 9));
+    let msg = parse_round(&f.body).expect("golden body must parse");
+    assert_eq!(msg.theta.len(), 2);
+    assert_eq!(msg.theta[0].to_bits(), 1.0f64.to_bits());
+    assert_eq!(msg.theta[1].to_bits(), (-0.5f64).to_bits());
+    assert_eq!(msg.step_sq.to_bits(), 0.1f64.to_bits());
+    assert!(msg.active, "golden frame is an active round");
+    assert!(!msg.force, "golden frame is not a forced resync");
+    assert_eq!(msg.acked, 4);
+}
+
+#[test]
+fn damaged_frames_yield_typed_errors_before_any_state() {
+    let bytes = golden_bytes();
+    // shorter than the smallest possible frame
+    assert!(matches!(
+        Frame::decode(&bytes[..20]),
+        Err(WireError::Truncated { .. })
+    ));
+    // body cut off mid-payload: the error names what is missing
+    match Frame::decode(&bytes[..100]) {
+        Err(WireError::Truncated { need, got }) => {
+            assert_eq!((need, got), (160, 100));
+        }
+        other => panic!("want Truncated, got {other:?}"),
+    }
+    // corrupted magic
+    let mut b = bytes.clone();
+    b[0] = b'X';
+    assert!(matches!(Frame::decode(&b), Err(WireError::BadMagic(_))));
+    // a future protocol version is rejected, not misparsed
+    let mut b = bytes.clone();
+    b[4] = 2;
+    match Frame::decode(&b) {
+        Err(WireError::Version { got }) => assert_eq!(got, 2),
+        other => panic!("want Version, got {other:?}"),
+    }
+    // unknown frame kind
+    let mut b = bytes.clone();
+    b[6] = 99;
+    assert!(matches!(Frame::decode(&b), Err(WireError::BadKind(99))));
+    // a single flipped body bit trips the CRC
+    let mut b = bytes.clone();
+    b[40] ^= 0x01;
+    assert!(matches!(Frame::decode(&b), Err(WireError::Crc { .. })));
+    // as does a flipped bit in the CRC trailer itself
+    let mut b = bytes.clone();
+    let n = b.len();
+    b[n - 1] ^= 0x80;
+    assert!(matches!(Frame::decode(&b), Err(WireError::Crc { .. })));
+}
+
+#[test]
+fn take_drains_one_damaged_frame_and_recovers_at_the_next() {
+    let good = golden_bytes();
+    let mut bad = good.clone();
+    bad[40] ^= 0x04; // body damage → CRC mismatch, framing intact
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&bad);
+    buf.extend_from_slice(&good);
+    match Frame::take(&mut buf) {
+        Err(WireError::Crc { .. }) => {}
+        other => panic!("want Crc, got {other:?}"),
+    }
+    assert_eq!(buf.len(), good.len(), "damaged frame must be drained");
+    let f = Frame::take(&mut buf)
+        .expect("second frame is intact")
+        .expect("second frame is complete");
+    assert_eq!((f.kind, f.round, f.seq), (FrameKind::Round, 5, 9));
+    assert!(buf.is_empty(), "good frame fully consumed");
+    assert!(
+        Frame::take(&mut buf).unwrap().is_none(),
+        "empty buffer means no frame yet, not an error"
+    );
+    // a partial prefix of a valid frame is also just "not yet"
+    let mut buf = good[..50].to_vec();
+    assert!(Frame::take(&mut buf).unwrap().is_none());
+    assert_eq!(buf.len(), 50, "partial frames stay buffered");
+    // bad magic is stream-fatal: framing is lost, no resync possible
+    let mut buf = good.clone();
+    buf[1] = 0;
+    assert!(matches!(Frame::take(&mut buf), Err(WireError::BadMagic(_))));
+}
+
+// ---------------------------------------------------------------- //
+// engine-level pins: loopback wire runs vs. the in-process serial  //
+// ---------------------------------------------------------------- //
+
+/// Small instance of one paper task (the `spec_session` pattern).
+fn problem_for(task: TaskKind) -> Problem {
+    let (m, n, d) = (4usize, 12usize, 8usize);
+    let l_m: Vec<f64> =
+        (0..m).map(|i| (1.0 + 0.4 * i as f64).powi(2)).collect();
+    let seed = 0x31BE
+        + match task {
+            TaskKind::LinReg => 1,
+            TaskKind::LogReg => 2,
+            TaskKind::Lasso => 3,
+            TaskKind::Nn => 4,
+        };
+    let per_worker = synthetic::per_worker_rescaled(seed, m, n, d, &l_m);
+    let lam = match task {
+        TaskKind::Lasso => 0.05,
+        TaskKind::LogReg | TaskKind::Nn => 0.01,
+        TaskKind::LinReg => 0.0,
+    };
+    Problem::from_worker_datasets(task, "wire", &per_worker, lam)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("chb_wire_proto_{}", std::process::id()))
+        .join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Full bitwise trace comparison: every column of every round, plus
+/// the per-worker and fault bookkeeping.
+fn assert_traces_bitwise(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.method, b.method, "{what}: method label");
+    assert_eq!(a.iterations(), b.iterations(), "{what}: iteration count");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(x.k, y.k, "{what}: round index");
+        let k = x.k;
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss k={k}");
+        assert_eq!(x.comms_round, y.comms_round, "{what}: comms_round k={k}");
+        assert_eq!(x.comms_cum, y.comms_cum, "{what}: comms_cum k={k}");
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "{what}: ‖∇‖² k={k}"
+        );
+        assert_eq!(
+            x.step_sq.to_bits(),
+            y.step_sq.to_bits(),
+            "{what}: step_sq k={k}"
+        );
+        assert_eq!(x.bits_cum, y.bits_cum, "{what}: bits_cum k={k}");
+        assert_eq!(
+            x.vclock_us.to_bits(),
+            y.vclock_us.to_bits(),
+            "{what}: vclock k={k}"
+        );
+        assert_eq!(x.stale_max, y.stale_max, "{what}: stale_max k={k}");
+        assert_eq!(
+            x.batch_frac.to_bits(),
+            y.batch_frac.to_bits(),
+            "{what}: batch_frac k={k}"
+        );
+        assert_eq!(x.epoch.to_bits(), y.epoch.to_bits(), "{what}: epoch k={k}");
+    }
+    assert_eq!(a.per_worker_comms, b.per_worker_comms, "{what}: S_m");
+    assert_eq!(a.participants, b.participants, "{what}: participants");
+    assert_eq!(a.comm_map, b.comm_map, "{what}: comm map");
+    assert_eq!(a.fault_downs, b.fault_downs, "{what}: fault_downs");
+    assert_eq!(a.fault_rejoins, b.fault_rejoins, "{what}: fault_rejoins");
+}
+
+fn wire_spec(
+    p: &Problem,
+    task: TaskKind,
+    iters: usize,
+    engine: EngineKind,
+) -> RunSpec {
+    RunSpec {
+        params: ParamSpec {
+            alpha: Some(1.0 / p.l_global),
+            beta: 0.4,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        iters,
+        record_comm_map: true,
+        lambda: p.lambda_global(),
+        engine,
+        ..RunSpec::new(task, "wire")
+    }
+}
+
+fn run(spec: &RunSpec, p: &Problem) -> Trace {
+    Session::from_parts(spec.clone(), p.clone()).unwrap().run().trace
+}
+
+/// Invariant 6: with zero chaos and full participation, the loopback
+/// wire deployment — real sockets, real frames, real client threads —
+/// is bit-identical to the in-process serial engine on every task.
+#[test]
+fn loopback_wire_is_bit_identical_to_serial_on_all_tasks() {
+    let tasks =
+        [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn];
+    for task in tasks {
+        let p = problem_for(task);
+        let serial = run(&wire_spec(&p, task, 16, EngineKind::Serial), &p);
+        let wire = run(
+            &wire_spec(&p, task, 16, EngineKind::Wire(WireConfig::default())),
+            &p,
+        );
+        assert_traces_bitwise(&serial, &wire, &format!("{task:?} wire"));
+    }
+}
+
+/// Duplicated and delayed frames are absorbed by seq-based duplicate
+/// suppression and patient reads — the folded trace cannot tell they
+/// ever happened.
+#[test]
+fn duplicate_and_delay_chaos_never_perturb_the_trace() {
+    let task = TaskKind::LinReg;
+    let p = problem_for(task);
+    let clean = run(
+        &wire_spec(&p, task, 16, EngineKind::Wire(WireConfig::default())),
+        &p,
+    );
+    let noisy_cfg = WireConfig {
+        chaos: ChaosSpec {
+            duplicate: 0.4,
+            delay_prob: 0.2,
+            delay_ms: 1,
+            ..ChaosSpec::default()
+        },
+        ..WireConfig::default()
+    };
+    let noisy = run(&wire_spec(&p, task, 16, EngineKind::Wire(noisy_cfg)), &p);
+    assert_traces_bitwise(&clean, &noisy, "duplicate/delay chaos");
+}
+
+/// Lossy chaos (drops + corruptions) exercises retransmits, CRC
+/// rejection, and rollback/commit — and because every chaos action is
+/// a pure function of (seed, link, round, attempt), two runs of the
+/// same spec produce bit-identical traces.
+#[test]
+fn seeded_lossy_chaos_is_deterministic_across_reruns() {
+    let task = TaskKind::LogReg;
+    let p = problem_for(task);
+    let wcfg = WireConfig {
+        round_deadline_ms: 600,
+        chaos: ChaosSpec {
+            drop: 0.12,
+            duplicate: 0.1,
+            corrupt: 0.08,
+            seed: 0xD1CE,
+            ..ChaosSpec::default()
+        },
+        ..WireConfig::default()
+    };
+    let spec = wire_spec(&p, task, 14, EngineKind::Wire(wcfg));
+    let a = run(&spec, &p);
+    let b = run(&spec, &p);
+    assert_traces_bitwise(&a, &b, "seeded lossy chaos rerun");
+}
+
+/// Invariant 4 over the wire: a server killed mid-run and restored —
+/// from the implicit pre-loop image or from a real checkpoint — pushes
+/// `Restore` frames to every client and replays to the kill-free
+/// trace, bit for bit, with worker crash/rejoin chaos running too.
+#[test]
+fn server_kill_replay_matches_kill_free_wire_run() {
+    let task = TaskKind::LinReg;
+    let p = problem_for(task);
+    let crash = FaultPlan {
+        crash_prob: 0.25,
+        down_rounds: 2,
+        seed: 0xFA17,
+        server_kills: Vec::new(),
+    };
+    let engine = EngineKind::Wire(WireConfig::default());
+    let base = RunSpec {
+        faults: crash.clone(),
+        ..wire_spec(&p, task, 18, engine)
+    };
+    let baseline = run(&base, &p);
+    let killed = RunSpec {
+        faults: FaultPlan { server_kills: vec![4, 11], ..crash },
+        ..base.clone()
+    };
+    // kills replayed from the implicit pre-loop recovery image
+    let t = run(&killed, &p);
+    assert_traces_bitwise(&baseline, &t, "wire kill, no ckpt");
+    // kills replayed from a real checkpoint taken mid-run
+    let dir = tmp_dir("kill");
+    let t = Session::from_parts(killed, p.clone())
+        .unwrap()
+        .with_checkpoints(CheckpointPolicy::new(3, &dir))
+        .run_checked()
+        .unwrap()
+        .trace;
+    assert_traces_bitwise(&baseline, &t, "wire kill + ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+}
