@@ -14,7 +14,8 @@
 //! working directory — `rust/` under cargo), machine-readable so the
 //! perf trajectory is tracked PR-over-PR.  Pass `-- --smoke` for the
 //! CI-sized profile: the same bench list minus the M = 1000 scaling
-//! rows, minimal sample counts.
+//! rows, the population-scale rows clamped to M = 10⁴, minimal sample
+//! counts.
 
 use std::sync::Arc;
 
@@ -427,6 +428,101 @@ fn main() {
                 scale_problem.theta0(),
             ));
         }));
+    }
+
+    // -- population-scale rounds: cohort engine at M clients --------------
+    // The PR-level scale claim: per-simulated-round cost of the
+    // population engine at M ∈ {10⁴, 10⁵, 10⁶} clients (smoke clamps
+    // to 10⁴), cohort 256, against 8 Arc-shared base shards — round
+    // cost tracks the cohort, not the population.  Each M also emits a
+    // scale_pop_m*_rss_kib row carrying the process peak RSS (VmHWM;
+    // KiB in the ns slots — the name is the unit), the O(model +
+    // cohort + M·8B) memory claim in machine-readable form.
+    {
+        use chb_fed::coordinator::{
+            AsyncConfig, EngineKind, PopulationSpec,
+        };
+        use chb_fed::spec::{ParamSpec, RunSpec, Session};
+        let base_m = 8usize;
+        let l_m = synthetic::increasing_l(base_m);
+        let per_worker =
+            synthetic::per_worker_rescaled(0xCA11, base_m, 32, 64, &l_m);
+        let pop_problem = Problem::from_worker_datasets(
+            TaskKind::LinReg,
+            "scale",
+            &per_worker,
+            0.0,
+        );
+        let m_list: &[u64] = if smoke {
+            &[10_000]
+        } else {
+            &[10_000, 100_000, 1_000_000]
+        };
+        for &clients in m_list {
+            let cohort = 256u64.min(clients);
+            let rounds = 10usize;
+            // the population objective sums one gradient per client:
+            // α scales with 1/(M/W · L) or the run diverges
+            let mult = clients.div_ceil(base_m as u64);
+            let alpha = 1.0 / (mult as f64 * pop_problem.l_global);
+            let spec = RunSpec {
+                params: ParamSpec {
+                    alpha: Some(alpha),
+                    ..ParamSpec::default()
+                },
+                engine: EngineKind::Async(AsyncConfig::default()),
+                population: Some(PopulationSpec {
+                    clients,
+                    cohort,
+                    seed: 0xCA11,
+                }),
+                iters: rounds,
+                lambda: 0.0,
+                ..RunSpec::new(TaskKind::LinReg, "scale")
+            };
+            let reps = if clients >= 1_000_000 { 1 } else { 3 };
+            let mut times = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let session =
+                    Session::from_parts(spec.clone(), pop_problem.clone())
+                        .expect("scale spec rejected");
+                let t0 = std::time::Instant::now();
+                let report = session.run();
+                times.push(t0.elapsed().as_secs_f64() / rounds as f64);
+                black_box(report.trace.final_loss());
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let r = BenchResult {
+                name: format!("scale_pop_m{clients}_cohort{cohort}_round"),
+                samples: reps,
+                iters: reps * rounds,
+                median: times[times.len() / 2],
+                mad: 0.0,
+                min: times[0],
+                max: times[times.len() - 1],
+            };
+            println!("{}", r.report());
+            all.push(r);
+            if let Some(kib) = chb_fed::util::mem::peak_rss_kib() {
+                // ×1e-9 so write_json's ns conversion lands the raw
+                // KiB count in the median_ns slot
+                let v = kib as f64 * 1e-9;
+                all.push(BenchResult {
+                    name: format!("scale_pop_m{clients}_rss_kib"),
+                    samples: 1,
+                    iters: 1,
+                    median: v,
+                    mad: 0.0,
+                    min: v,
+                    max: v,
+                });
+                println!(
+                    "{:<44} {:>12.1} MiB peak RSS",
+                    format!("scale_pop_m{clients}_rss_kib"),
+                    kib as f64 / 1024.0
+                );
+            }
+        }
     }
 
     // -- machine-readable report ------------------------------------------

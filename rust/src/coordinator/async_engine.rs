@@ -78,14 +78,14 @@ pub enum ComputeModel {
 }
 
 impl ComputeModel {
-    fn master_seed(&self) -> u64 {
+    pub(crate) fn master_seed(&self) -> u64 {
         match self {
             ComputeModel::Uniform { .. } => 0,
             ComputeModel::Pareto { seed, .. } => *seed,
         }
     }
 
-    fn sample(&self, rng: &mut Xoshiro256) -> f64 {
+    pub(crate) fn sample(&self, rng: &mut Xoshiro256) -> f64 {
         match *self {
             ComputeModel::Uniform { us } => {
                 assert!(us > 0.0, "uniform compute time must be > 0");

@@ -36,6 +36,14 @@
 //! comparable.  `BatchSchedule::Full` is bit-identical to the legacy
 //! path on every engine (`tests/batch_equivalence.rs`).
 //!
+//! Above the resident engines sits the *population* layer
+//! ([`population`]): M up to 10⁶ simulated clients at 8 bytes each, a
+//! pure-function [`CohortSampler`] that draws each round's cohort in
+//! O(cohort), lazy worker materialization with exact censor-reference
+//! resync, and streaming O(model) aggregation off the timer-wheel
+//! event queue — per-client telemetry collapses into a bounded
+//! [`PopulationSummary`](crate::metrics::PopulationSummary).
+//!
 //! Fault tolerance cuts across every engine: a seeded [`FaultPlan`]
 //! forces workers down (observe-only rounds — telescope-safe by
 //! eq. 5) and back up (a forced uncensored transmit re-syncs θ̂), and
@@ -48,6 +56,7 @@ pub mod engine;
 pub mod fault;
 pub mod participation;
 pub mod pool;
+pub mod population;
 pub mod protocol;
 pub mod server;
 pub mod worker;
@@ -65,7 +74,8 @@ pub use engine::{
     StopRule,
 };
 pub use fault::FaultPlan;
-pub use participation::{Participation, Schedule};
+pub use participation::{CohortSampler, Participation, Schedule};
+pub use population::{run_population, PopulationOutcome, PopulationSpec};
 pub use pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
 pub use server::Server;
 pub use worker::{

@@ -16,7 +16,9 @@
 //! identical trace — on every execution backend.  A property test
 //! pins this.
 
-use crate::rng::Xoshiro256;
+use std::collections::HashMap;
+
+use crate::rng::{SplitMix64, Xoshiro256};
 
 /// Per-round client-participation policy.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
@@ -129,6 +131,59 @@ impl Schedule {
     }
 }
 
+/// Population → cohort sampler for the million-client engine.
+///
+/// Unlike [`Schedule`] (a stateful RNG stream over a resident
+/// `Vec<bool>` of all M workers — O(M) per round), this sampler is a
+/// **pure function of (round, seed)**: each round reseeds its own
+/// generator, and the draw runs a *sparse* partial Fisher–Yates that
+/// tracks only displaced entries in a hash map — O(cohort) time and
+/// memory even at M = 10⁶.  Purity is what keeps population traces
+/// engine-independent: any engine (or a resumed run) can re-derive
+/// round k's cohort without replaying rounds 1..k−1.
+#[derive(Clone, Copy, Debug)]
+pub struct CohortSampler {
+    seed: u64,
+}
+
+impl CohortSampler {
+    /// Sampler for one population run.
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    /// The round-`round` cohort: `cohort` distinct client ids drawn
+    /// uniformly without replacement from `0..clients`, in draw order.
+    pub fn draw(&self, round: u64, cohort: u64, clients: u64) -> Vec<u64> {
+        assert!(
+            cohort >= 1 && cohort <= clients,
+            "cohort {cohort} outside [1, {clients}]"
+        );
+        // per-round stream: SplitMix64 whitens (seed, round) into the
+        // xoshiro seed so consecutive rounds are decorrelated
+        let mut sm = SplitMix64::new(
+            self.seed
+                .wrapping_add(round.wrapping_mul(0xA24B_AED4_963E_E407)),
+        );
+        let mut rng = Xoshiro256::new(sm.next_u64());
+        // sparse partial Fisher–Yates over the virtual array a[x] = x:
+        // only displaced slots are materialized, so the prefix of a
+        // full M-element shuffle costs O(cohort), not O(M)
+        let mut displaced: HashMap<u64, u64> =
+            HashMap::with_capacity(2 * cohort as usize);
+        let mut out = Vec::with_capacity(cohort as usize);
+        for i in 0..cohort {
+            let j = i + rng.next_below(clients - i);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            out.push(vj);
+            // a[j] ← old a[i]; slot i is never read again
+            displaced.insert(j, vi);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,5 +273,56 @@ mod tests {
         for k in 1..=30 {
             assert_eq!(a.active_set(k, 9), b.active_set(k, 9), "round {k}");
         }
+    }
+
+    #[test]
+    fn cohort_draw_is_distinct_and_in_range() {
+        let s = CohortSampler::new(7);
+        for round in 1..=20u64 {
+            let c = s.draw(round, 50, 1_000);
+            assert_eq!(c.len(), 50);
+            assert!(c.iter().all(|&id| id < 1_000));
+            let mut sorted = c.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 50, "round {round}: duplicate client");
+        }
+    }
+
+    #[test]
+    fn cohort_draw_is_a_pure_function_of_round_and_seed() {
+        let s = CohortSampler::new(123);
+        // same (round, seed) out of order ⇒ identical cohorts — no
+        // hidden stream state between rounds
+        let r5 = s.draw(5, 10, 10_000);
+        let _ = s.draw(9, 10, 10_000);
+        let _ = s.draw(1, 10, 10_000);
+        assert_eq!(s.draw(5, 10, 10_000), r5);
+        assert_eq!(CohortSampler::new(123).draw(5, 10, 10_000), r5);
+        // different rounds / seeds draw different cohorts
+        assert_ne!(s.draw(6, 10, 10_000), r5);
+        assert_ne!(CohortSampler::new(124).draw(5, 10, 10_000), r5);
+    }
+
+    #[test]
+    fn cohort_equal_to_population_is_a_permutation() {
+        let s = CohortSampler::new(3);
+        let mut c = s.draw(1, 64, 64);
+        c.sort_unstable();
+        assert_eq!(c, (0..64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn cohort_draw_is_roughly_uniform_over_clients() {
+        // every client of a small population should appear across
+        // enough rounds (coverage, not exact balance)
+        let s = CohortSampler::new(11);
+        let mut seen = vec![false; 100];
+        for round in 1..=200u64 {
+            for id in s.draw(round, 10, 100) {
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "some client never sampled");
     }
 }

@@ -101,26 +101,38 @@ impl Server {
         self.k = k;
     }
 
-    /// Fold one round of worker reports and advance θ (eq. 4 + 5).
-    pub fn apply_round(&mut self, rounds: &[WorkerRound]) -> RoundOutcome {
-        self.k += 1;
-        let mut transmitted = 0;
-        let mut loss = 0.0;
-        for r in rounds {
-            loss += r.loss;
-            if r.decision == CensorDecision::Transmit {
-                debug_assert!(
-                    r.delta.fits(self.agg_grad.len()),
-                    "payload shape mismatch from worker {}",
-                    r.worker
-                );
-                // O(d) dense, O(nnz) sparse — each stored coordinate
-                // folds exactly once, so Σ folded payloads stays equal
-                // to Σ worker-side decoded deltas (the eq. 5 telescope)
-                r.delta.fold_into(&mut self.agg_grad);
-                transmitted += 1;
-            }
+    /// Fold one worker's uplink into the running aggregate ∇ (the
+    /// eq. 5 sum) without closing the round — the streaming half of
+    /// [`Server::apply_round`].  The population engine folds uplinks
+    /// one at a time as they arrive off the event queue, so server
+    /// memory stays O(model) instead of buffering a cohort of
+    /// reports.  Returns whether a delta was folded.
+    pub fn fold_uplink(&mut self, r: &WorkerRound) -> bool {
+        if r.decision != CensorDecision::Transmit {
+            return false;
         }
+        debug_assert!(
+            r.delta.fits(self.agg_grad.len()),
+            "payload shape mismatch from worker {}",
+            r.worker
+        );
+        // O(d) dense, O(nnz) sparse — each stored coordinate folds
+        // exactly once, so Σ folded payloads stays equal to Σ
+        // worker-side decoded deltas (the eq. 5 telescope)
+        r.delta.fold_into(&mut self.agg_grad);
+        true
+    }
+
+    /// Close a round whose uplinks were already folded via
+    /// [`Server::fold_uplink`]: advance k, measure ∇, and step θ
+    /// (eq. 4).  `transmitted` and `loss` are the caller's fold-side
+    /// counters, echoed into the outcome.
+    pub fn finish_round(
+        &mut self,
+        transmitted: usize,
+        loss: f64,
+    ) -> RoundOutcome {
+        self.k += 1;
         let agg_grad_sq = linalg::norm2_sq(&self.agg_grad);
         self.rule
             .step(&mut self.theta, &mut self.theta_prev, &self.agg_grad);
@@ -131,6 +143,20 @@ impl Server {
             agg_grad_sq,
             step_sq: self.theta_step_sq(),
         }
+    }
+
+    /// Fold one round of worker reports and advance θ (eq. 4 + 5).
+    /// Exactly [`Server::fold_uplink`] over the batch followed by
+    /// [`Server::finish_round`] — the folds never read k, so the
+    /// split is bit-identical to the historical single-pass body.
+    pub fn apply_round(&mut self, rounds: &[WorkerRound]) -> RoundOutcome {
+        let mut transmitted = 0;
+        let mut loss = 0.0;
+        for r in rounds {
+            loss += r.loss;
+            transmitted += usize::from(self.fold_uplink(r));
+        }
+        self.finish_round(transmitted, loss)
     }
 }
 
@@ -236,6 +262,35 @@ mod tests {
         assert_eq!(s.theta, vec![1.0]);
         s.apply_round(&[skip(0, 0.0)]); // θ: 1 + 1·1 (−∇=1) + 0.5·(1−0) = 2.5
         assert!((s.theta[0] - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn streaming_fold_matches_apply_round_bitwise() {
+        let p = MethodParams::new(0.3).with_beta(0.2);
+        let rounds = [
+            tx(0, vec![1.5, -0.5], 0.1),
+            skip(1, 0.2),
+            tx(2, vec![0.25, 2.0], 0.3),
+        ];
+        let mut batch = Server::new(Method::Chb, &p, vec![1.0, -1.0]);
+        let mut stream = Server::new(Method::Chb, &p, vec![1.0, -1.0]);
+        for _ in 0..3 {
+            let a = batch.apply_round(&rounds);
+            let mut t = 0;
+            let mut l = 0.0;
+            for r in &rounds {
+                l += r.loss;
+                t += usize::from(stream.fold_uplink(r));
+            }
+            let b = stream.finish_round(t, l);
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.transmitted, b.transmitted);
+            assert_eq!(a.agg_grad_sq.to_bits(), b.agg_grad_sq.to_bits());
+            assert_eq!(a.step_sq.to_bits(), b.step_sq.to_bits());
+        }
+        for (x, y) in batch.theta.iter().zip(&stream.theta) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

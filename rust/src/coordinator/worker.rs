@@ -356,6 +356,26 @@ impl Worker {
         }
     }
 
+    /// Rebuild the censor reference ∇f_m(θ̂) by direct evaluation at a
+    /// historical iterate — the population engine's lazy
+    /// rematerialization path.  A client outside the current cohort
+    /// keeps no d-vector at all, only the round index of its last
+    /// transmission; when it is sampled again, this recomputes the
+    /// reference from the archived broadcast iterate.  The recompute
+    /// is exact — bit-identical to the gradient the client transmitted
+    /// back then — because the backend is deterministic and population
+    /// runs are full-batch and codec-free (spec-validated); under a
+    /// lossy codec the reference would instead need the decoded-payload
+    /// bookkeeping this method skips.
+    pub fn resync_reference(&mut self, theta_hat: &[f64]) {
+        assert_eq!(
+            theta_hat.len(),
+            self.last_tx_grad.len(),
+            "θ̂ dimension mismatch"
+        );
+        self.backend.grad_loss_into(theta_hat, &mut self.last_tx_grad);
+    }
+
     /// Current gradient (for diagnostics; engine-side only).
     pub fn current_grad(&self) -> &[f64] {
         &self.grad
@@ -608,6 +628,23 @@ mod tests {
         // … while the gradient visited half the rows
         assert_eq!(rm.batch_frac, 0.5);
         assert_eq!(rf.batch_frac, 1.0);
+    }
+
+    #[test]
+    fn resync_reference_reproduces_the_transmitted_gradient() {
+        // client A transmitted at θ̂ and stayed resident; client B is a
+        // fresh materialization resynced at the archived θ̂ — the two
+        // must agree bitwise on the reference and on the next delta
+        let mut a = Worker::new(0, Box::new(Toy { c: vec![1.0, -2.0] }));
+        let theta_hat = [0.5, 0.25];
+        let _ = a.round(&theta_hat, 0.0, &NeverCensor, 1);
+        let mut b = Worker::new(0, Box::new(Toy { c: vec![1.0, -2.0] }));
+        b.resync_reference(&theta_hat);
+        assert_eq!(a.last_transmitted(), b.last_transmitted());
+        let ra = a.round(&[2.0, 2.0], 1.0, &NeverCensor, 2);
+        let rb = b.round(&[2.0, 2.0], 1.0, &NeverCensor, 2);
+        assert_eq!(ra.delta.to_dense(2), rb.delta.to_dense(2));
+        assert_eq!(ra.delta_sq.to_bits(), rb.delta_sq.to_bits());
     }
 
     #[test]

@@ -899,6 +899,99 @@ pub fn stochastic(out_dir: &Path, quick: bool) -> Result<()> {
     )
 }
 
+/// Ablation L: censoring × cohort size at fixed population M — the
+/// million-client regime's headline question.  Per-device uplinks are
+/// the scarce resource at population scale, so the number that
+/// matters is how much of the cohort's per-round uplink budget
+/// eq. (8) saves, and whether the saving survives smaller cohorts
+/// (each client is sampled more rarely, so its censor reference θ̂ is
+/// staler and ‖δ∇‖² larger).  One population run per
+/// (cohort, censor) cell, never-censor as the budget baseline.
+pub fn cohort_sweep(out_dir: &Path, quick: bool) -> Result<()> {
+    use crate::coordinator::PopulationSpec;
+    use crate::data::synthetic;
+
+    let clients: u64 = if quick { 10_000 } else { 100_000 };
+    let rounds = if quick { 40 } else { 150 };
+    let dir = out_dir.join("ablation_cohort");
+    println!(
+        "\n── ablation: censoring × cohort size (population M={clients})"
+    );
+    let base_m = 8usize;
+    let l_m = synthetic::increasing_l(base_m);
+    let per_worker = synthetic::per_worker_rescaled(0xC0C0, base_m, 32, 64, &l_m);
+    let p = Problem::from_worker_datasets(
+        TaskKind::LinReg,
+        "cohort",
+        &per_worker,
+        0.0,
+    );
+    // the aggregate sums one gradient per client, so the effective
+    // smoothness is ~(M / M_base) · L_base — scale α down to match
+    let mult = clients.div_ceil(base_m as u64);
+    let alpha = 1.0 / (mult as f64 * p.l_global);
+    let mut rows = Vec::new();
+    for &cohort in &[32u64, 128, 512] {
+        for (censor, label) in [
+            (CensorSpec::MethodDefault, "chb"),
+            (CensorSpec::Never, "never"),
+        ] {
+            let spec = RunSpec {
+                params: ParamSpec {
+                    alpha: Some(alpha),
+                    beta: 0.4,
+                    epsilon: EpsilonSpec::Scaled { c: 0.1 },
+                },
+                censor,
+                engine: EngineKind::Async(AsyncConfig::default()),
+                population: Some(PopulationSpec {
+                    clients,
+                    cohort,
+                    seed: 0xC0C0,
+                }),
+                iters: rounds,
+                lambda: 0.0,
+                ..RunSpec::new(TaskKind::LinReg, "cohort")
+            };
+            let report =
+                Session::from_parts(spec, p.clone())?.run_checked()?;
+            let s = report
+                .population_summary
+                .expect("population run emits a summary");
+            println!(
+                "  cohort={cohort:<4} {label:<6} uplinks {:>7}  censored {:>7} \
+                 ({:>5.1}%)  final loss {:.4e}",
+                s.uplinks,
+                s.censored,
+                100.0 * s.censor_rate(),
+                report.trace.final_loss(),
+            );
+            rows.push(vec![
+                cohort.to_string(),
+                label.to_string(),
+                s.uplinks.to_string(),
+                s.censored.to_string(),
+                format!("{:.6}", s.censor_rate()),
+                s.resyncs.to_string(),
+                format!("{:.8e}", report.trace.final_loss()),
+            ]);
+        }
+    }
+    csv::write_table(
+        &dir.join("summary.csv"),
+        &[
+            "cohort",
+            "censor",
+            "uplinks",
+            "censored",
+            "censor_rate",
+            "resyncs",
+            "final_loss",
+        ],
+        &rows,
+    )
+}
+
 /// Run every ablation.
 pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     censor_rules(out_dir, quick)?;
@@ -911,5 +1004,6 @@ pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     adaptive_epsilon(out_dir, quick)?;
     participation_sweep(out_dir, quick)?;
     stochastic(out_dir, quick)?;
-    async_heterogeneity(out_dir, quick)
+    async_heterogeneity(out_dir, quick)?;
+    cohort_sweep(out_dir, quick)
 }

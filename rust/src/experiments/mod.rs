@@ -148,6 +148,22 @@ impl Problem {
             .collect()
     }
 
+    /// Materialize the throw-away worker for one simulated client of
+    /// a population run.  Clients map onto the problem's base shards
+    /// round-robin (`client % M`), so the global population objective
+    /// is Σ_s mult_s·f_s(θ) with M resident evaluators — the data
+    /// itself is `Arc`-shared inside each [`Shard`], so this costs a
+    /// backend + workspace allocation, not a dataset copy.
+    pub fn worker_for(&self, client: u64) -> crate::coordinator::Worker {
+        let s = &self.shards[(client % self.m_workers() as u64) as usize];
+        crate::coordinator::Worker::new(
+            client as usize,
+            Box::new(crate::coordinator::RustBackend::new(
+                tasks::build_objective(self.task, s, self.lam_m),
+            )),
+        )
+    }
+
     /// Pure-rust workers with a gradient-sampling schedule attached
     /// ([`crate::data::batch::BatchSchedule::Full`] reproduces
     /// [`Problem::rust_workers`] bit for bit).

@@ -28,6 +28,7 @@ use anyhow::{bail, Context, Result};
 use chb_fed::checkpoint::{atomic_write, fnv1a64, Checkpoint, CheckpointPolicy};
 use chb_fed::coordinator::{
     AsyncConfig, ComputeModel, EngineKind, FaultPlan, Participation,
+    PopulationSpec,
 };
 use chb_fed::data::batch::BatchSchedule;
 use chb_fed::experiments::{ablations, figures, tables};
@@ -141,7 +142,8 @@ USAGE:
       cross the wire), dial the coordinator, and serve censored
       uplinks until the server says Bye.  Dial and mid-run failures
       reconnect with seeded exponential backoff.
-  chb-fed loadgen [--workers M] [--rounds R] [--dim D]
+  chb-fed loadgen [--preset cohort-10k|cohort-100k] [--population M]
+                  [--workers M] [--rounds R] [--dim D]
                   [--chaos-drop P] [--chaos-delay-prob P]
                   [--chaos-delay-ms MS] [--chaos-duplicate P]
                   [--chaos-corrupt P] [--chaos-seed S]
@@ -151,6 +153,25 @@ USAGE:
       fold throughput, and p50/p99 round latency.  --bench-out merges
       two rows (wire_loadgen_*_round, *_round_p99) into a
       BENCH_hotpath.json-style file for tools/bench_diff.py.
+      --preset drives the population cohort shapes: the clients stand
+      in for one sampled cohort out of a 10k/100k-device population
+      (wire fan-in per round is the cohort, never the population), and
+      the bench rows rename to wire_loadgen_pop*_cohort*_d*_round.
+      Explicit --workers/--rounds/--dim/--population override the
+      preset.
+  chb-fed scale [--clients M] [--cohort C] [--rounds R] [--dim D]
+                [--base-workers W] [--seed S] [--rss-budget-mb MB]
+                [--bench-out FILE]
+      population-scale benchmark: M simulated clients (default 10^6)
+      with per-round cohorts of C through the discrete-event cohort
+      engine on a synthetic linreg population (W base shards,
+      Arc-shared; client c holds shard c mod W).  Reports simulated
+      rounds/sec, uplink/censor counts, and peak RSS (VmHWM), proving
+      server memory stays O(model + cohort + M·8B), not O(M·d).
+      --bench-out merges scale_pop_m*_cohort*_round and
+      scale_pop_m*_rss_kib rows into a BENCH_hotpath.json-style file;
+      --rss-budget-mb exits nonzero when peak RSS exceeds the budget
+      (the CI scale-smoke assertion).
   chb-fed artifact [--smoke] [--specs DIR] [--out DIR] [--data DIR]
                    [--artifacts DIR] [--full]
       the kick-tires pipeline: runs every spec in examples/specs/
@@ -202,6 +223,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
         "loadgen" => cmd_loadgen(&args),
+        "scale" => cmd_scale(&args),
         "artifact" => cmd_artifact(&args),
         "list" => cmd_list(&args),
         "check-theory" => cmd_theory(&args),
@@ -726,6 +748,31 @@ fn cmd_worker(args: &Args) -> Result<()> {
 /// `chb-fed loadgen`: the closed-loop wire throughput harness.
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let mut cfg = LoadgenConfig::default();
+    // presets model the population cohort shapes: C concurrent wire
+    // clients stand in for one sampled cohort out of M devices — a
+    // population server's per-round fan-in is the cohort, so that is
+    // what the wire must sustain.  Explicit flags override below.
+    match args.get("preset") {
+        None => {}
+        Some("cohort-10k") => {
+            cfg.population = 10_000;
+            cfg.workers = 100;
+            cfg.rounds = 40;
+            cfg.dim = 64;
+        }
+        Some("cohort-100k") => {
+            cfg.population = 100_000;
+            cfg.workers = 128;
+            cfg.rounds = 30;
+            cfg.dim = 64;
+        }
+        Some(other) => {
+            bail!("bad --preset {other:?} (cohort-10k|cohort-100k)")
+        }
+    }
+    if let Some(v) = args.get_parse::<u64>("population")? {
+        cfg.population = v;
+    }
     if let Some(v) = args.get_parse::<usize>("workers")? {
         cfg.workers = v;
     }
@@ -761,6 +808,124 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if let Some(path) = bench_out {
         merge_bench_rows(&path, report.bench_rows())?;
         println!("bench rows merged into {}", path.display());
+    }
+    Ok(())
+}
+
+/// `chb-fed scale`: the population-scale benchmark behind the
+/// `scale_*` rows of `BENCH_hotpath.json` — M simulated clients with
+/// per-round cohorts of C through the discrete-event cohort engine,
+/// measured in simulated rounds/sec and peak RSS.
+fn cmd_scale(args: &Args) -> Result<()> {
+    let clients = args.get_parse_or("clients", 1_000_000u64)?;
+    let cohort = args.get_parse_or("cohort", 256u64)?;
+    let rounds = args.get_parse_or("rounds", 20usize)?;
+    let dim = args.get_parse_or("dim", 64usize)?;
+    let base_m = args.get_parse_or("base-workers", 8usize)?;
+    let seed = args.get_parse_or("seed", 0xCA11u64)?;
+    let rss_budget_mb = args.get_parse::<u64>("rss-budget-mb")?;
+    let bench_out = args.get("bench-out").map(PathBuf::from);
+    args.finish()?;
+
+    // synthetic linreg population: W base shards (Arc-shared), client
+    // c lazily materializing a worker over shard c mod W — the same
+    // construction the Fig. 1/2/3 drivers use, scaled out
+    let l_m = chb_fed::data::synthetic::increasing_l(base_m);
+    let per_worker = chb_fed::data::synthetic::per_worker_rescaled(
+        seed, base_m, 32, dim, &l_m,
+    );
+    let problem = chb_fed::experiments::Problem::from_worker_datasets(
+        TaskKind::LinReg,
+        "scale",
+        &per_worker,
+        0.0,
+    );
+    // the population objective sums one gradient per client, so its
+    // smoothness is ~(M/W)·L_base — α must scale with it or the
+    // benchmark diverges at M = 10^6
+    let mult = clients.div_ceil(base_m as u64);
+    let alpha = 1.0 / (mult as f64 * problem.l_global);
+    let spec = RunSpec {
+        params: ParamSpec { alpha: Some(alpha), ..Default::default() },
+        engine: EngineKind::Async(AsyncConfig {
+            compute: ComputeModel::Uniform { us: 1_000.0 },
+            latency: LatencyModel::default(),
+            max_staleness: None,
+        }),
+        population: Some(PopulationSpec { clients, cohort, seed }),
+        iters: rounds,
+        lambda: 0.0,
+        ..RunSpec::new(TaskKind::LinReg, "scale")
+    };
+    println!(
+        "scale: {clients} clients, cohort {cohort}, {rounds} rounds, \
+         d={dim}, {base_m} base shards, α={alpha:.3e}"
+    );
+    let session = Session::from_parts(spec, problem)?;
+    let t = chb_fed::util::timer::Timer::quiet();
+    let report = session.run_checked()?;
+    let secs = t.elapsed_secs();
+
+    let done = report.trace.iterations().max(1);
+    let per_round_ns = secs * 1e9 / done as f64;
+    let summary = report
+        .population_summary
+        .as_ref()
+        .context("population run produced no summary")?;
+    let rss_kib = chb_fed::util::mem::peak_rss_kib();
+    println!(
+        "scale done: {done} rounds in {secs:.2}s ({:.1} rounds/sec), \
+         uplinks={} censored={} (censor rate {:.3}), final loss {:.6e}",
+        done as f64 / secs.max(1e-9),
+        summary.uplinks,
+        summary.censored,
+        summary.censor_rate(),
+        report.trace.final_loss(),
+    );
+    match rss_kib {
+        Some(kib) => println!("peak RSS: {:.1} MiB", kib as f64 / 1024.0),
+        None => println!("peak RSS: unavailable (no /proc/self/status)"),
+    }
+    if let Some(path) = bench_out {
+        let row = |name: String, center: f64, samples: f64| {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(name));
+            o.insert("median_ns".to_string(), Json::Num(center));
+            o.insert("mad_ns".to_string(), Json::Num(0.0));
+            o.insert("iters".to_string(), Json::Num(done as f64));
+            o.insert("samples".to_string(), Json::Num(samples));
+            o.insert("min_ns".to_string(), Json::Num(center));
+            o.insert("max_ns".to_string(), Json::Num(center));
+            Json::Obj(o)
+        };
+        let mut rows = vec![row(
+            format!("scale_pop_m{clients}_cohort{cohort}_round"),
+            per_round_ns,
+            done as f64,
+        )];
+        if let Some(kib) = rss_kib {
+            // units abuse by design: the *_rss_kib row carries KiB in
+            // the ns slots — the name is the unit
+            rows.push(row(
+                format!("scale_pop_m{clients}_rss_kib"),
+                kib as f64,
+                1.0,
+            ));
+        }
+        merge_bench_rows(&path, rows)?;
+        println!("bench rows merged into {}", path.display());
+    }
+    if let Some(budget_mb) = rss_budget_mb {
+        let kib = rss_kib
+            .context("--rss-budget-mb needs /proc/self/status (Linux only)")?;
+        if kib > budget_mb * 1024 {
+            bail!(
+                "peak RSS {:.1} MiB exceeds the {budget_mb} MiB budget — \
+                 population state is no longer O(model + cohort)",
+                kib as f64 / 1024.0
+            );
+        }
+        println!("peak RSS within the {budget_mb} MiB budget");
     }
     Ok(())
 }

@@ -1,6 +1,9 @@
 //! Per-run instrumentation: the numbers every figure/table plots.
 
 pub mod csv;
+pub mod summary;
+
+pub use summary::{Histogram, PopulationSummary, Reservoir};
 
 /// One iteration's record.
 #[derive(Clone, Debug)]

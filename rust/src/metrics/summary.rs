@@ -1,0 +1,315 @@
+//! Bounded-memory telemetry for population-scale runs.
+//!
+//! At M = 10⁶ clients, per-client trace columns (the O(K·M) comm map,
+//! per-worker staleness rows) are exactly the memory the population
+//! engine exists to avoid.  This module provides the two streaming
+//! summaries it records instead — a seeded [`Reservoir`] sample for
+//! continuous statistics and a saturating [`Histogram`] for small
+//! integer statistics — plus [`PopulationSummary`], the fixed-size
+//! bundle a population run reports next to its O(rounds) trace.
+//!
+//! Both structures are deterministic: the reservoir draws from a
+//! seeded [`Xoshiro256`] stream, so two runs of the same spec produce
+//! bit-identical summaries regardless of population size or queue
+//! backend.
+
+use crate::rng::Xoshiro256;
+
+/// Algorithm-R reservoir sample: a uniform `cap`-element sample of an
+/// unbounded stream in O(cap) memory, deterministic from `seed`.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    sample: Vec<f64>,
+    cap: usize,
+    seen: u64,
+    rng: Xoshiro256,
+}
+
+impl Reservoir {
+    /// Empty reservoir holding at most `cap` values (`cap` ≥ 1).
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap >= 1, "reservoir capacity must be ≥ 1");
+        Self {
+            sample: Vec::with_capacity(cap),
+            cap,
+            seen: 0,
+            rng: Xoshiro256::new(seed),
+        }
+    }
+
+    /// Offer one value to the reservoir.
+    pub fn record(&mut self, x: f64) {
+        self.seen += 1;
+        if self.sample.len() < self.cap {
+            self.sample.push(x);
+        } else {
+            // Algorithm R: keep x with probability cap/seen
+            let j = self.rng.next_below(self.seen);
+            if (j as usize) < self.cap {
+                self.sample[j as usize] = x;
+            }
+        }
+    }
+
+    /// Stream length so far (not the sample size).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// The current sample (≤ cap values, unordered).
+    pub fn sample(&self) -> &[f64] {
+        &self.sample
+    }
+
+    /// Empirical `q`-quantile of the sample (nearest-rank on a sorted
+    /// copy); NaN for an empty reservoir.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.sample.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.sample.clone();
+        s.sort_by(f64::total_cmp);
+        let i = ((q.clamp(0.0, 1.0) * (s.len() - 1) as f64).round()) as usize;
+        s[i]
+    }
+
+    /// Mean of the sample (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.sample.is_empty() {
+            return f64::NAN;
+        }
+        self.sample.iter().sum::<f64>() / self.sample.len() as f64
+    }
+}
+
+/// Saturating linear histogram over small non-negative integers:
+/// value `v` lands in bucket `v`, values ≥ the bucket count land in
+/// the overflow bucket.  O(buckets) memory regardless of stream size.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    overflow: u64,
+    max: usize,
+}
+
+impl Histogram {
+    /// Histogram with `buckets` exact buckets (values 0..buckets).
+    pub fn new(buckets: usize) -> Self {
+        Self { counts: vec![0; buckets.max(1)], overflow: 0, max: 0 }
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, v: usize) {
+        match self.counts.get_mut(v) {
+            Some(c) => *c += 1,
+            None => self.overflow += 1,
+        }
+        self.max = self.max.max(v);
+    }
+
+    /// Total observations recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.overflow
+    }
+
+    /// Largest value observed (exact even for overflowed values).
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    /// Observations that landed past the last exact bucket.
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Per-bucket counts (bucket i = value i).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Nearest-rank `q`-quantile.  Overflowed mass reports as the
+    /// observed maximum; an empty histogram reports 0.
+    pub fn quantile(&self, q: f64) -> usize {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (total - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (v, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if c > 0 && cum > rank {
+                return v;
+            }
+        }
+        self.max
+    }
+
+    /// Mean value (overflowed observations contribute the observed
+    /// maximum — a lower-bound approximation); NaN when empty.
+    pub fn mean(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let sum: f64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(v, &c)| v as f64 * c as f64)
+            .sum::<f64>()
+            + self.overflow as f64 * self.max as f64;
+        sum / total as f64
+    }
+}
+
+/// Fixed-size telemetry bundle for one population run: everything the
+/// per-client columns used to carry, summarized in O(buckets + cap)
+/// memory independent of both M and the round count.
+#[derive(Clone, Debug)]
+pub struct PopulationSummary {
+    /// population size M
+    pub clients: u64,
+    /// per-round cohort size
+    pub cohort: u64,
+    /// server rounds executed
+    pub rounds: usize,
+    /// delivered uplink transmissions over the run
+    pub uplinks: u64,
+    /// cohort slots that stayed silent (censored)
+    pub censored: u64,
+    /// lazy censor-reference rematerializations performed
+    pub resyncs: u64,
+    /// censor-reference age (rounds since the client last transmitted)
+    /// at each cohort materialization; 0 for first-contact clients
+    pub reference_age: Histogram,
+    /// per-client lifetime transmission counts (filled once, at exit)
+    pub tx_per_client: Histogram,
+    /// reservoir sample of ‖δ∇‖² across all cohort evaluations
+    pub delta_sq: Reservoir,
+}
+
+impl PopulationSummary {
+    /// Empty summary for an (M, cohort) population.
+    pub fn new(clients: u64, cohort: u64) -> Self {
+        Self {
+            clients,
+            cohort,
+            rounds: 0,
+            uplinks: 0,
+            censored: 0,
+            resyncs: 0,
+            reference_age: Histogram::new(256),
+            tx_per_client: Histogram::new(256),
+            delta_sq: Reservoir::new(1024, 0x5ca1e),
+        }
+    }
+
+    /// Fraction of cohort evaluations the censor silenced — the
+    /// communication the population saved.
+    pub fn censor_rate(&self) -> f64 {
+        let evals = self.uplinks + self.censored;
+        if evals == 0 {
+            return 0.0;
+        }
+        self.censored as f64 / evals as f64
+    }
+
+    /// Summary as (name, value) rows for CSV / CLI reporting.
+    pub fn rows(&self) -> Vec<(String, f64)> {
+        vec![
+            ("clients".into(), self.clients as f64),
+            ("cohort".into(), self.cohort as f64),
+            ("rounds".into(), self.rounds as f64),
+            ("uplinks".into(), self.uplinks as f64),
+            ("censored".into(), self.censored as f64),
+            ("censor_rate".into(), self.censor_rate()),
+            ("resyncs".into(), self.resyncs as f64),
+            ("ref_age_mean".into(), self.reference_age.mean()),
+            ("ref_age_p99".into(), self.reference_age.quantile(0.99) as f64),
+            ("ref_age_max".into(), self.reference_age.max() as f64),
+            ("tx_per_client_mean".into(), self.tx_per_client.mean()),
+            (
+                "tx_per_client_p99".into(),
+                self.tx_per_client.quantile(0.99) as f64,
+            ),
+            ("delta_sq_mean".into(), self.delta_sq.mean()),
+            ("delta_sq_p99".into(), self.delta_sq.quantile(0.99)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_keeps_everything_under_capacity() {
+        let mut r = Reservoir::new(10, 1);
+        for i in 0..5 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.sample().len(), 5);
+        assert_eq!(r.seen(), 5);
+        assert_eq!(r.quantile(0.0), 0.0);
+        assert_eq!(r.quantile(1.0), 4.0);
+        assert!((r.mean() - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_deterministic() {
+        let run = || {
+            let mut r = Reservoir::new(8, 42);
+            for i in 0..10_000 {
+                r.record(i as f64);
+            }
+            r.sample().to_vec()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), 8);
+        assert_eq!(a, b, "same seed, same stream ⇒ same sample");
+    }
+
+    #[test]
+    fn reservoir_sample_is_roughly_uniform() {
+        // the median of a uniform sample of 0..10000 should be central
+        let mut r = Reservoir::new(512, 7);
+        for i in 0..10_000 {
+            r.record(i as f64);
+        }
+        let med = r.quantile(0.5);
+        assert!((2000.0..8000.0).contains(&med), "median {med}");
+    }
+
+    #[test]
+    fn histogram_counts_quantiles_and_overflow() {
+        let mut h = Histogram::new(4);
+        for v in [0, 0, 1, 2, 3, 9] {
+            h.record(v);
+        }
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.overflow(), 1); // the 9
+        assert_eq!(h.max(), 9);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 9); // overflow reports the max
+        assert_eq!(h.counts(), &[2, 1, 1, 1]);
+    }
+
+    #[test]
+    fn empty_summaries_do_not_divide_by_zero() {
+        let s = PopulationSummary::new(100, 10);
+        assert_eq!(s.censor_rate(), 0.0);
+        assert_eq!(Histogram::new(4).quantile(0.5), 0);
+        assert!(Reservoir::new(4, 0).quantile(0.5).is_nan());
+        assert!(s.rows().len() >= 10);
+    }
+
+    #[test]
+    fn censor_rate_is_censored_over_evaluations() {
+        let mut s = PopulationSummary::new(100, 10);
+        s.uplinks = 30;
+        s.censored = 70;
+        assert!((s.censor_rate() - 0.7).abs() < 1e-15);
+    }
+}

@@ -18,6 +18,8 @@ use std::collections::BinaryHeap;
 
 use crate::rng::Xoshiro256;
 
+mod wheel;
+
 /// Per-link accounting.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LinkStats {
@@ -284,12 +286,32 @@ impl<T> Ord for Entry<T> {
     }
 }
 
+/// Storage backend of an [`EventQueue`]: the radix timer wheel
+/// (default — O(1) amortized, the million-client hot path) or the
+/// original global `BinaryHeap` (the reference implementation and the
+/// `CHB_FORCE_HEAP` escape hatch).  Both pop in the identical total
+/// order, bit for bit.
+enum Backend<T> {
+    Heap(BinaryHeap<Entry<T>>),
+    Wheel(wheel::RadixWheel<T>),
+}
+
 /// Deterministic discrete-event queue over a virtual clock.
 ///
 /// The substrate of the asynchronous engine: push events at future
 /// virtual times, pop them in deterministic `(time, rank, worker,
 /// push-order)` order.  Time never flows backwards — `pop` asserts
 /// monotonicity in debug builds.
+///
+/// Two interchangeable backends sit behind this API: a radix timer
+/// wheel (default; O(1) amortized insert/pop, built for ≥10⁶ queued
+/// events) and the original global `BinaryHeap`.  They are pinned
+/// bit-identical — same pop order under the full `(time, rank,
+/// worker, seq)` total order, same checkpoint image — by a property
+/// test (`tests/prop_invariants.rs`) and the async-trace equivalence
+/// test (`tests/async_engine.rs`).  Setting the `CHB_FORCE_HEAP`
+/// environment variable (any non-empty value) makes [`EventQueue::new`]
+/// build heap-backed queues, as a production escape hatch.
 ///
 /// ```
 /// use chb_fed::net::EventQueue;
@@ -303,7 +325,7 @@ impl<T> Ord for Entry<T> {
 /// assert!(q.pop().is_none());
 /// ```
 pub struct EventQueue<T> {
-    heap: BinaryHeap<Entry<T>>,
+    backend: Backend<T>,
     seq: u64,
     last_popped_us: f64,
 }
@@ -314,10 +336,50 @@ impl<T> Default for EventQueue<T> {
     }
 }
 
+/// Is the `CHB_FORCE_HEAP` escape hatch set?  (Checked once per queue
+/// construction; an empty value counts as unset, mirroring
+/// `CHB_FORCE_SCALAR` in the SIMD layer.)
+fn force_heap() -> bool {
+    std::env::var_os("CHB_FORCE_HEAP").is_some_and(|v| !v.is_empty())
+}
+
 impl<T> EventQueue<T> {
-    /// Empty queue at virtual time 0.
+    /// Empty queue at virtual time 0 on the default backend (the
+    /// radix wheel, unless `CHB_FORCE_HEAP` is set).
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), seq: 0, last_popped_us: 0.0 }
+        if force_heap() {
+            Self::with_heap()
+        } else {
+            Self::with_wheel()
+        }
+    }
+
+    /// Empty queue on the `BinaryHeap` backend (tests + escape hatch).
+    pub fn with_heap() -> Self {
+        Self {
+            backend: Backend::Heap(BinaryHeap::new()),
+            seq: 0,
+            last_popped_us: 0.0,
+        }
+    }
+
+    /// Empty queue on the radix-wheel backend (tests pin this against
+    /// [`EventQueue::with_heap`] bit for bit).
+    pub fn with_wheel() -> Self {
+        Self {
+            backend: Backend::Wheel(wheel::RadixWheel::new()),
+            seq: 0,
+            last_popped_us: 0.0,
+        }
+    }
+
+    /// Which backend this queue runs on ("wheel" / "heap") — for
+    /// logs and tests only; behavior is identical by contract.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Heap(_) => "heap",
+            Backend::Wheel(_) => "wheel",
+        }
     }
 
     /// Schedule `payload` at virtual time `time_us` with phase `rank`
@@ -329,12 +391,18 @@ impl<T> EventQueue<T> {
         );
         let key = EventKey { time_us, rank, worker, seq: self.seq };
         self.seq += 1;
-        self.heap.push(Entry { key, payload });
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(Entry { key, payload }),
+            Backend::Wheel(w) => w.push(Entry { key, payload }),
+        }
     }
 
     /// Remove and return the earliest event.
     pub fn pop(&mut self) -> Option<(EventKey, T)> {
-        let e = self.heap.pop()?;
+        let e = match &mut self.backend {
+            Backend::Heap(h) => h.pop()?,
+            Backend::Wheel(w) => w.pop()?,
+        };
         debug_assert!(
             e.key.time_us >= self.last_popped_us,
             "virtual clock went backwards"
@@ -345,23 +413,29 @@ impl<T> EventQueue<T> {
 
     /// Key of the earliest event without removing it.
     pub fn peek(&self) -> Option<&EventKey> {
-        self.heap.peek().map(|e| &e.key)
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|e| &e.key),
+            Backend::Wheel(w) => w.peek(),
+        }
     }
 
     /// Number of queued events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Wheel(w) => w.len(),
+        }
     }
 
     /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Drain the queue, yielding remaining events in order (used by
     /// the async engine to account for in-flight messages at exit).
     pub fn drain_ordered(&mut self) -> Vec<(EventKey, T)> {
-        let mut out = Vec::with_capacity(self.heap.len());
+        let mut out = Vec::with_capacity(self.len());
         while let Some(e) = self.pop() {
             out.push(e);
         }
@@ -370,10 +444,16 @@ impl<T> EventQueue<T> {
 
     /// Non-destructive ordered view of every queued event (checkpoint
     /// capture): entries sorted by the total `(time, rank, worker,
-    /// seq)` order, with their exact keys.
+    /// seq)` order, with their exact keys.  Backend-independent, so a
+    /// wheel-backed queue checkpoints byte-identically to a
+    /// heap-backed one.
     pub fn entries_ordered(&self) -> Vec<(EventKey, &T)> {
-        let mut out: Vec<(EventKey, &T)> =
-            self.heap.iter().map(|e| (e.key, &e.payload)).collect();
+        let mut out: Vec<(EventKey, &T)> = match &self.backend {
+            Backend::Heap(h) => {
+                h.iter().map(|e| (e.key, &e.payload)).collect()
+            }
+            Backend::Wheel(w) => w.iter().map(|(k, p)| (*k, p)).collect(),
+        };
         out.sort_by(|a, b| a.0.cmp_key(&b.0));
         out
     }
@@ -387,17 +467,27 @@ impl<T> EventQueue<T> {
 
     /// Rebuild a queue from captured entries (with their original
     /// keys, including `seq`) and counters.  The restored queue pops
-    /// in exactly the order the original would have.
+    /// in exactly the order the original would have, on the default
+    /// backend — checkpoints carry no backend identity, so a PR 7
+    /// image written by a heap-backed run restores onto the wheel
+    /// (and vice versa under `CHB_FORCE_HEAP`) unchanged.
     pub fn restore(
         entries: Vec<(EventKey, T)>,
         seq: u64,
         last_popped_us: f64,
     ) -> Self {
-        let mut heap = BinaryHeap::with_capacity(entries.len());
+        let mut backend = if force_heap() {
+            Backend::Heap(BinaryHeap::with_capacity(entries.len()))
+        } else {
+            Backend::Wheel(wheel::RadixWheel::anchored_at(last_popped_us))
+        };
         for (key, payload) in entries {
-            heap.push(Entry { key, payload });
+            match &mut backend {
+                Backend::Heap(h) => h.push(Entry { key, payload }),
+                Backend::Wheel(w) => w.push(Entry { key, payload }),
+            }
         }
-        Self { heap, seq, last_popped_us }
+        Self { backend, seq, last_popped_us }
     }
 }
 

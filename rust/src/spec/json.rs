@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::{
     AsyncConfig, ComputeModel, EngineKind, FaultPlan, Participation,
+    PopulationSpec,
 };
 use crate::data::batch::BatchSchedule;
 use crate::net::LatencyModel;
@@ -83,6 +84,18 @@ impl RunSpec {
         if self.faults != FaultPlan::default() {
             pairs.push(("faults", faults_to_json(&self.faults)));
         }
+        // like faults: resident-regime manifests (the overwhelming
+        // majority) omit the key and stay byte-identical
+        if let Some(p) = &self.population {
+            pairs.push((
+                "population",
+                obj(vec![
+                    ("clients", unum(p.clients)),
+                    ("cohort", unum(p.cohort)),
+                    ("seed", unum(p.seed)),
+                ]),
+            ));
+        }
         obj(pairs)
     }
 
@@ -118,6 +131,7 @@ impl RunSpec {
                 "drops",
                 "faults",
                 "record_comm_map",
+                "population",
             ],
         )?;
         let version = req_u64(map, "version")?;
@@ -217,6 +231,25 @@ impl RunSpec {
                 Some(Json::Bool(b)) => *b,
                 Some(other) => {
                     return Err(bad("record_comm_map", "bool", other))
+                }
+            },
+            population: match map.get("population") {
+                None => None,
+                Some(v) => {
+                    let m = as_obj(v, "population")?;
+                    check_keys(
+                        m,
+                        "population",
+                        &["clients", "cohort", "seed"],
+                    )?;
+                    Some(PopulationSpec {
+                        clients: req_u64(m, "clients")?,
+                        cohort: req_u64(m, "cohort")?,
+                        seed: match m.get("seed") {
+                            None => 0,
+                            Some(v) => as_u64(v, "population.seed")?,
+                        },
+                    })
                 }
             },
         })
@@ -1067,6 +1100,42 @@ mod tests {
             spec.faults,
             FaultPlan { server_kills: vec![7], ..FaultPlan::default() }
         );
+    }
+
+    #[test]
+    fn population_round_trips_and_default_is_omitted() {
+        let base = RunSpec::new(TaskKind::LinReg, "synth");
+        assert!(!base.to_json_string().contains("population"));
+        let spec = RunSpec {
+            engine: EngineKind::Async(AsyncConfig::default()),
+            population: Some(PopulationSpec {
+                clients: 1_000_000,
+                cohort: 1_000,
+                seed: 0x5ca1e,
+            }),
+            ..base
+        };
+        let text = spec.to_json_string();
+        assert!(text.contains("population"));
+        assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+        // hand-written: seed defaults to 0, unknown keys rejected
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": "chb", "iters": 10,
+            "population": {"clients": 10000, "cohort": 100}
+        }"#;
+        let spec = RunSpec::from_json_str(text).unwrap();
+        assert_eq!(
+            spec.population,
+            Some(PopulationSpec { clients: 10_000, cohort: 100, seed: 0 })
+        );
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": "chb", "iters": 10,
+            "population": {"clients": 10000, "cohrot": 100}
+        }"#;
+        let err = RunSpec::from_json_str(text).unwrap_err();
+        assert!(err.to_string().contains("cohrot"), "{err}");
     }
 
     #[test]

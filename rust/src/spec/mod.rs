@@ -44,7 +44,7 @@ mod session;
 
 pub use session::{Registry, RunReport, Session};
 
-use crate::coordinator::{EngineKind, FaultPlan, Participation};
+use crate::coordinator::{EngineKind, FaultPlan, Participation, PopulationSpec};
 use crate::data::batch::BatchSchedule;
 use crate::optim::Method;
 use crate::tasks::TaskKind;
@@ -140,6 +140,14 @@ pub enum SpecError {
         /// human-readable description with field context
         detail: String,
     },
+    /// an invalid population/cohort combination, or a population run
+    /// combined with an axis the cohort engine cannot honor exactly
+    /// (lazy censor-reference resync needs deterministic full-batch,
+    /// codec-free gradients)
+    Population {
+        /// what is wrong
+        detail: &'static str,
+    },
 }
 
 impl std::fmt::Display for SpecError {
@@ -196,6 +204,9 @@ impl std::fmt::Display for SpecError {
                 write!(f, "spec.{field}: unknown name {name:?}")
             }
             SpecError::Json { detail } => write!(f, "spec json: {detail}"),
+            SpecError::Population { detail } => {
+                write!(f, "spec.population: {detail}")
+            }
         }
     }
 }
@@ -434,6 +445,12 @@ pub struct RunSpec {
     pub faults: FaultPlan,
     /// record the O(K·M) per-worker transmit map
     pub record_comm_map: bool,
+    /// population-scale cohort mode: simulate `clients` devices with
+    /// `cohort` materialized per round over the dataset's base shards
+    /// (None = the resident regime, one worker per shard; serialized
+    /// to `manifest.json` only when set, so existing manifests stay
+    /// byte-stable)
+    pub population: Option<PopulationSpec>,
 }
 
 impl RunSpec {
@@ -459,6 +476,7 @@ impl RunSpec {
             drops: DropSpec::default(),
             faults: FaultPlan::default(),
             record_comm_map: false,
+            population: None,
         }
     }
 
@@ -485,6 +503,7 @@ impl RunSpec {
         self.validate_codec()?;
         self.validate_stop()?;
         self.validate_faults()?;
+        self.validate_population()?;
         self.validate_seeds()?;
         finite("drops.prob", self.drops.prob)?;
         if !(0.0..=1.0).contains(&self.drops.prob) {
@@ -786,12 +805,86 @@ impl RunSpec {
         Ok(())
     }
 
+    /// The population axis composes with few others: the lazy
+    /// censor-reference resync (re-deriving ∇f_c(θ̂) from an archived
+    /// iterate) is exact only for deterministic full-batch, codec-free
+    /// gradients, and the cohort engine runs on the async engine's
+    /// compute/latency clock with its own cohort scheduling.
+    fn validate_population(&self) -> Result<(), SpecError> {
+        let Some(pop) = &self.population else { return Ok(()) };
+        if pop.clients == 0 {
+            return Err(SpecError::ZeroSize { field: "population.clients" });
+        }
+        if pop.cohort == 0 {
+            return Err(SpecError::ZeroSize { field: "population.cohort" });
+        }
+        if pop.cohort > pop.clients {
+            return Err(SpecError::Population {
+                detail: "cohort exceeds clients",
+            });
+        }
+        if !matches!(self.engine, EngineKind::Async(_)) {
+            return Err(SpecError::Population {
+                detail: "population runs need engine \"async\" (the cohort \
+                         loop schedules uplinks on its virtual clock)",
+            });
+        }
+        if self.codec != CodecSpec::None {
+            return Err(SpecError::Population {
+                detail: "population runs need codec \"none\" (lazy censor-\
+                         reference resync must reproduce the transmitted \
+                         gradient exactly)",
+            });
+        }
+        if self.batch != BatchSchedule::Full {
+            return Err(SpecError::Population {
+                detail: "population runs need full batches (lazy censor-\
+                         reference resync must reproduce the transmitted \
+                         gradient exactly)",
+            });
+        }
+        if self.backend != BackendKind::Rust {
+            return Err(SpecError::Population {
+                detail: "population runs need backend \"rust\" (clients \
+                         materialize lazily against in-process shards)",
+            });
+        }
+        if self.participation != Participation::Full {
+            return Err(SpecError::Population {
+                detail: "population runs own their scheduling (the cohort \
+                         sampler); drop the participation policy",
+            });
+        }
+        if self.drops.prob != 0.0 {
+            return Err(SpecError::Population {
+                detail: "population runs do not compose with uplink drops \
+                         yet",
+            });
+        }
+        if self.faults != FaultPlan::default() {
+            return Err(SpecError::Population {
+                detail: "population runs do not compose with fault plans \
+                         yet",
+            });
+        }
+        if self.record_comm_map {
+            return Err(SpecError::Population {
+                detail: "the per-client comm map is O(K·M) — the memory \
+                         population mode exists to avoid",
+            });
+        }
+        Ok(())
+    }
+
     /// Every seed in the spec must survive the f64-carried JSON round
     /// trip exactly, or the written manifest would replay a different
     /// stream than the run it records.
     fn validate_seeds(&self) -> Result<(), SpecError> {
         use crate::coordinator::ComputeModel;
         seed_ok("drops.seed", self.drops.seed)?;
+        if let Some(pop) = &self.population {
+            seed_ok("population.seed", pop.seed)?;
+        }
         seed_ok("faults.seed", self.faults.seed)?;
         match self.participation {
             Participation::UniformSample { seed, .. }
@@ -1069,5 +1162,88 @@ mod tests {
         assert!(msg.contains("params.alpha"), "{msg}");
         let msg = SpecError::PjrtBatching.to_string();
         assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    fn pop_base() -> RunSpec {
+        RunSpec {
+            engine: EngineKind::Async(AsyncConfig::default()),
+            population: Some(PopulationSpec {
+                clients: 10_000,
+                cohort: 100,
+                seed: 7,
+            }),
+            ..base()
+        }
+    }
+
+    #[test]
+    fn population_spec_validates_on_the_async_engine() {
+        pop_base().validate().unwrap();
+    }
+
+    #[test]
+    fn population_bounds_are_enforced() {
+        let mut s = pop_base();
+        s.population = Some(PopulationSpec { clients: 0, cohort: 1, seed: 0 });
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::ZeroSize { field: "population.clients" })
+        );
+        s.population =
+            Some(PopulationSpec { clients: 10, cohort: 0, seed: 0 });
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::ZeroSize { field: "population.cohort" })
+        );
+        s.population =
+            Some(PopulationSpec { clients: 10, cohort: 11, seed: 0 });
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::Population { .. })
+        ));
+        s.population = Some(PopulationSpec {
+            clients: 10,
+            cohort: 5,
+            seed: MAX_EXACT_SEED + 1,
+        });
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::SeedTooLarge {
+                field: "population.seed",
+                seed: MAX_EXACT_SEED + 1,
+            })
+        );
+    }
+
+    #[test]
+    fn population_rejects_uncomposable_axes() {
+        // sync engine
+        let s = RunSpec { engine: EngineKind::Serial, ..pop_base() };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
+        // codec
+        let s = RunSpec { codec: CodecSpec::TopK { k: 4 }, ..pop_base() };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
+        // minibatch
+        let s = RunSpec {
+            batch: BatchSchedule::Minibatch {
+                size: 8,
+                seed: 1,
+                replace: false,
+            },
+            ..pop_base()
+        };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
+        // pjrt
+        let s = RunSpec { backend: BackendKind::Pjrt, ..pop_base() };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
+        // comm map
+        let s = RunSpec { record_comm_map: true, ..pop_base() };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
+        // drops
+        let s = RunSpec {
+            drops: DropSpec { prob: 0.1, seed: 1 },
+            ..pop_base()
+        };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
     }
 }

@@ -24,11 +24,11 @@ use crate::compress::{
     UniformQuantizer,
 };
 use crate::coordinator::{
-    run_engine_with_rules_ctx, AsyncSummary, EngineKind, RunConfig,
-    RunContext, Server, StopRule, Worker,
+    run_engine_with_rules_ctx, run_population, AsyncSummary, EngineKind,
+    RunConfig, RunContext, Server, StopRule, Worker,
 };
 use crate::experiments::Problem;
-use crate::metrics::{csv, Trace};
+use crate::metrics::{csv, PopulationSummary, Trace};
 use crate::optim::censor::{
     AbsoluteCensor, DecayingCensor, NeverCensor, PeriodicCensor,
     VarianceScaledCensor,
@@ -86,6 +86,9 @@ pub struct RunReport {
     pub trace: Trace,
     /// async-only telemetry (`None` under synchronous engines)
     pub async_summary: Option<AsyncSummary>,
+    /// bounded-memory per-client telemetry (`None` unless the spec
+    /// set a [`crate::coordinator::PopulationSpec`])
+    pub population_summary: Option<PopulationSummary>,
 }
 
 impl RunReport {
@@ -128,6 +131,21 @@ impl RunReport {
             &(self.spec.to_json_string() + "\n"),
         )
         .with_context(|| format!("write {}", manifest.display()))?;
+        if let Some(summary) = &self.population_summary {
+            let name = format!(
+                "{}_{}_{}_population.csv",
+                self.spec.task.name(),
+                self.spec.dataset,
+                self.trace.method
+            );
+            let mut text = String::from("stat,value\n");
+            for (stat, value) in summary.rows() {
+                text.push_str(&format!("{stat},{value}\n"));
+            }
+            let path = dir.join(name);
+            crate::checkpoint::atomic_write(&path, &text)
+                .with_context(|| format!("write {}", path.display()))?;
+        }
         Ok(())
     }
 }
@@ -271,9 +289,17 @@ impl Session {
                 .map(|w| w.with_compressor(Arc::clone(&c)))
                 .collect();
         }
-        let label = spec.label.clone().unwrap_or_else(|| match spec.engine {
-            EngineKind::Async(_) => format!("{}-async", spec.method.name()),
-            _ => spec.method.name().to_string(),
+        let label = spec.label.clone().unwrap_or_else(|| {
+            if spec.population.is_some() {
+                format!("{}-pop", spec.method.name())
+            } else {
+                match spec.engine {
+                    EngineKind::Async(_) => {
+                        format!("{}-async", spec.method.name())
+                    }
+                    _ => spec.method.name().to_string(),
+                }
+            }
         });
         // every session carries its manifest hash so checkpoints it
         // writes are pinned to this exact spec, and a resume against a
@@ -357,6 +383,9 @@ impl Session {
     pub fn run_checked(self) -> Result<RunReport, CheckpointError> {
         let theta0 = self.problem.theta0();
         let server = Server::new(self.cfg.method, &self.cfg.params, theta0);
+        if let Some(pop) = self.spec.population {
+            return Ok(self.run_population_mode(pop, server));
+        }
         let out = run_engine_with_rules_ctx(
             &self.engine,
             self.workers,
@@ -370,7 +399,63 @@ impl Session {
             spec: self.spec,
             trace: out.trace,
             async_summary: out.async_summary,
+            population_summary: None,
         })
+    }
+
+    /// The population-mode tail of [`Session::run_checked`]: drive
+    /// `pop.clients` lazily-materialized clients through the cohort
+    /// engine, with the session's resident per-shard workers serving
+    /// as the exact global-loss evaluators (client c shares shard
+    /// `c % M`, so f_pop(θ) = Σ_s mult_s·f_s(θ)).
+    fn run_population_mode(
+        self,
+        pop: crate::coordinator::PopulationSpec,
+        server: Server,
+    ) -> RunReport {
+        assert!(
+            self.ctx.checkpoint.is_none() && self.ctx.resume.is_none(),
+            "population runs do not support checkpoint/resume yet"
+        );
+        // validate() pins population runs to the async engine
+        let EngineKind::Async(acfg) = &self.engine else {
+            unreachable!("validate() rejected population on {:?}", self.engine)
+        };
+        let problem = self.problem;
+        let base_m = problem.m_workers() as u64;
+        let mut evals = self.workers;
+        let mut global_loss = |theta: &[f64]| -> f64 {
+            evals
+                .iter_mut()
+                .enumerate()
+                .map(|(s, w)| {
+                    let s = s as u64;
+                    if s < pop.clients {
+                        // clients on shard s: s, s+M, s+2M, …
+                        let mult = (pop.clients - 1 - s) / base_m + 1;
+                        mult as f64 * w.observe(theta).loss
+                    } else {
+                        0.0
+                    }
+                })
+                .sum()
+        };
+        let out = run_population(
+            &pop,
+            &self.cfg,
+            acfg,
+            server,
+            self.censor,
+            &self.label,
+            &mut |c| problem.worker_for(c),
+            &mut global_loss,
+        );
+        RunReport {
+            spec: self.spec,
+            trace: out.trace,
+            async_summary: None,
+            population_summary: Some(out.summary),
+        }
     }
 
     /// Run this session as a standalone coordinator daemon: bind
@@ -414,7 +499,12 @@ impl Session {
         let stats = pool.stats();
         pool.shutdown();
         Ok((
-            RunReport { spec: self.spec, trace, async_summary: None },
+            RunReport {
+                spec: self.spec,
+                trace,
+                async_summary: None,
+                population_summary: None,
+            },
             stats,
         ))
     }
@@ -525,6 +615,48 @@ mod tests {
             Session::from_parts(spec, problem()).err(),
             Some(SpecError::PjrtNeedsRegistry)
         );
+    }
+
+    #[test]
+    fn population_session_runs_and_reports_summary() {
+        use crate::coordinator::{AsyncConfig, PopulationSpec};
+        let p = problem();
+        let spec = RunSpec {
+            engine: EngineKind::Async(AsyncConfig::default()),
+            population: Some(PopulationSpec {
+                clients: 1_000,
+                cohort: 30,
+                seed: 11,
+            }),
+            iters: 12,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        let report = Session::from_parts(spec, p).unwrap().run();
+        assert_eq!(report.trace.method, "CHB-pop");
+        assert_eq!(report.trace.iterations(), 12);
+        let summary = report.population_summary.as_ref().unwrap();
+        assert_eq!(summary.clients, 1_000);
+        assert_eq!(summary.cohort, 30);
+        assert_eq!(summary.uplinks + summary.censored, 12 * 30);
+        // population loss is a positive multiple of the shard losses
+        assert!(report.trace.iters[0].loss.is_finite());
+        assert!(report.trace.final_loss() < report.trace.iters[0].loss);
+        // determinism: the same spec replays bit-identically
+        let spec2 = RunSpec {
+            engine: EngineKind::Async(AsyncConfig::default()),
+            population: Some(PopulationSpec {
+                clients: 1_000,
+                cohort: 30,
+                seed: 11,
+            }),
+            iters: 12,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        let report2 = Session::from_parts(spec2, problem()).unwrap().run();
+        for (a, b) in report.trace.iters.iter().zip(&report2.trace.iters) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "k={}", a.k);
+            assert_eq!(a.vclock_us.to_bits(), b.vclock_us.to_bits());
+        }
     }
 
     #[test]

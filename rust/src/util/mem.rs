@@ -1,0 +1,52 @@
+//! Process peak-RSS probe — the memory column of the scale benches.
+//!
+//! The million-client claims in `BENCH_hotpath.json` are memory
+//! claims: the scale rows carry peak resident set size next to
+//! rounds/sec so a regression that quietly re-materializes O(M·d)
+//! state shows up as numbers, not vibes.  Linux exposes the high-water
+//! mark as `VmHWM` in `/proc/self/status`; elsewhere the probe
+//! reports `None` and the bench rows simply omit the RSS column.
+
+/// Peak resident set size of this process in KiB (`VmHWM`), or `None`
+/// when the platform exposes no `/proc/self/status`.
+pub fn peak_rss_kib() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    parse_vm_hwm(&status)
+}
+
+/// Extract the `VmHWM` value (KiB) from `/proc/<pid>/status` text.
+fn parse_vm_hwm(status: &str) -> Option<u64> {
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            // format: "VmHWM:\t  123456 kB"
+            return rest
+                .split_whitespace()
+                .next()
+                .and_then(|v| v.parse::<u64>().ok());
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_vm_hwm_line() {
+        let status = "Name:\tchb-fed\nVmPeak:\t  999 kB\nVmHWM:\t  \
+                      123456 kB\nVmRSS:\t  100 kB\n";
+        assert_eq!(parse_vm_hwm(status), Some(123_456));
+        assert_eq!(parse_vm_hwm("Name:\tchb-fed\n"), None);
+    }
+
+    #[test]
+    fn probe_reports_a_plausible_value_on_linux() {
+        if let Some(kib) = peak_rss_kib() {
+            // a test process certainly holds more than 1 MiB and less
+            // than 1 TiB resident
+            assert!(kib > 1024, "peak RSS {kib} KiB implausibly small");
+            assert!(kib < 1 << 30, "peak RSS {kib} KiB implausibly large");
+        }
+    }
+}

@@ -31,6 +31,13 @@ pub struct LoadgenConfig {
     pub rounds: usize,
     /// parameter dimension d (payload size knob: ~16·d bytes/frame)
     pub dim: usize,
+    /// simulated population size the cohort stands in for (0 = none).
+    /// The cohort presets (`chb-fed loadgen --preset cohort-10k`)
+    /// drive `workers` concurrent clients as one sampled cohort out of
+    /// this many devices; the value only renames the bench rows —
+    /// wire load is set by `workers`, which is the per-round fan-in a
+    /// population server actually sees.
+    pub population: u64,
     /// wire behavior (quorum, deadlines, chaos, …)
     pub wire: WireConfig,
 }
@@ -41,6 +48,7 @@ impl Default for LoadgenConfig {
             workers: 100,
             rounds: 50,
             dim: 50,
+            population: 0,
             wire: WireConfig::default(),
         }
     }
@@ -55,6 +63,8 @@ pub struct LoadgenReport {
     pub rounds: usize,
     /// parameter dimension
     pub dim: usize,
+    /// simulated population the cohort stood in for (0 = none)
+    pub population: u64,
     /// wall-clock for the full drive (seconds)
     pub elapsed_s: f64,
     /// rounds per second (closed loop)
@@ -80,10 +90,16 @@ impl LoadgenReport {
     /// consumes these): one row for the median round latency, one for
     /// the p99 tail.
     pub fn bench_rows(&self) -> Vec<Json> {
-        let base = format!(
-            "wire_loadgen_m{}_d{}_round",
-            self.workers, self.dim
-        );
+        // cohort-preset runs key their rows on the population shape
+        // (the claim being benchmarked), plain runs on the fan-in
+        let base = if self.population > 0 {
+            format!(
+                "wire_loadgen_pop{}_cohort{}_d{}_round",
+                self.population, self.workers, self.dim
+            )
+        } else {
+            format!("wire_loadgen_m{}_d{}_round", self.workers, self.dim)
+        };
         let row = |name: String, center: u64, spread: u64| {
             let mut o = std::collections::BTreeMap::new();
             o.insert("name".to_string(), Json::Str(name));
@@ -103,8 +119,16 @@ impl LoadgenReport {
 
     /// Human-readable one-screen summary.
     pub fn summary(&self) -> String {
+        let shape = if self.population > 0 {
+            format!(
+                "population={} cohort={}",
+                self.population, self.workers
+            )
+        } else {
+            format!("M={}", self.workers)
+        };
         format!(
-            "wire loadgen: M={} d={} rounds={}\n\
+            "wire loadgen: {shape} d={} rounds={}\n\
              elapsed        {:.3} s\n\
              rounds/sec     {:.1}\n\
              folds/sec      {:.1}\n\
@@ -112,7 +136,6 @@ impl LoadgenReport {
              round p99      {:.3} ms\n\
              round min/max  {:.3} / {:.3} ms\n\
              retries={} quorum_skips={} reconnects={} dup_suppressed={}",
-            self.workers,
             self.dim,
             self.rounds,
             self.elapsed_s,
@@ -214,6 +237,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport, WireError> {
         workers: m,
         rounds,
         dim,
+        population: cfg.population,
         elapsed_s,
         rounds_per_sec: rounds as f64 / elapsed_s.max(1e-9),
         folds_per_sec: (m * rounds) as f64 / elapsed_s.max(1e-9),

@@ -231,6 +231,62 @@ fn aggregate_equals_applied_deltas_under_arbitrary_orderings_and_drops() {
 }
 
 #[test]
+fn full_chb_trace_is_identical_under_chb_force_heap() {
+    // the CHB_FORCE_HEAP escape hatch swaps the EventQueue backend
+    // (radix wheel → BinaryHeap) under a non-degenerate configuration:
+    // heavy-tailed compute, real latency, a staleness bound.  The
+    // entire event history — and therefore the whole trace, virtual
+    // clock included — must be bit-identical, which is the contract
+    // that makes the wheel a safe default at 10⁶ clients.
+    let p = problem_for(TaskKind::LinReg);
+    let params = MethodParams::new(0.1 / p.l_global)
+        .with_beta(0.4)
+        .with_epsilon1_scaled(0.1, p.m_workers());
+    let cfg = RunConfig::new(Method::Chb, params, 60).with_comm_map();
+    let acfg = AsyncConfig {
+        compute: ComputeModel::Pareto {
+            scale_us: 800.0,
+            shape: 1.8,
+            seed: 0xBEEF,
+        },
+        latency: LatencyModel { fixed_us: 350.0, per_kib_us: 12.0 },
+        max_staleness: Some(5),
+    };
+    let mut ws = p.rust_workers();
+    let wheel = run_async_detailed(&mut ws, &cfg, &acfg, p.theta0()).trace;
+    std::env::set_var("CHB_FORCE_HEAP", "1");
+    let mut ws = p.rust_workers();
+    let heap = run_async_detailed(&mut ws, &cfg, &acfg, p.theta0()).trace;
+    std::env::remove_var("CHB_FORCE_HEAP");
+    // full comparison by hand: assert_trajectories_identical pins
+    // stale_max == 0, which only holds in the degenerate configuration
+    assert_eq!(wheel.iterations(), heap.iterations(), "iteration count");
+    for (x, y) in wheel.iters.iter().zip(&heap.iters) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss k={}", x.k);
+        assert_eq!(
+            x.agg_grad_sq.to_bits(),
+            y.agg_grad_sq.to_bits(),
+            "‖∇‖² k={}",
+            x.k
+        );
+        assert_eq!(x.step_sq.to_bits(), y.step_sq.to_bits(), "step k={}", x.k);
+        assert_eq!(
+            x.vclock_us.to_bits(),
+            y.vclock_us.to_bits(),
+            "virtual clock k={}",
+            x.k
+        );
+        assert_eq!(x.comms_cum, y.comms_cum, "comms k={}", x.k);
+        assert_eq!(x.bits_cum, y.bits_cum, "bits k={}", x.k);
+        assert_eq!(x.stale_max, y.stale_max, "staleness k={}", x.k);
+    }
+    assert_eq!(wheel.per_worker_comms, heap.per_worker_comms, "S_m");
+    assert_eq!(wheel.comm_map, heap.comm_map, "comm map");
+    // sanity: the run was actually non-degenerate (staleness occurred)
+    assert!(wheel.max_staleness() > 0, "configuration was degenerate");
+}
+
+#[test]
 fn max_staleness_bounds_consecutive_censored_rounds() {
     // with the bound at S, no worker may ever censor more than S
     // completions in a row: folds ≥ completions / (S + 1) per worker

@@ -324,6 +324,71 @@ fn resume_covers_minibatch_topk_int8ef_and_staleness_censor() {
     roundtrip_spec(&spec, &p, 7, "staleness-censor");
 }
 
+/// A checkpoint written under the (default) timer-wheel event queue
+/// resumes on the binary-heap backend — and vice versa — continuing
+/// bit-identically.  The async section of the PR 7 format stores the
+/// queue as an ordered entry list plus (seq, last_popped_us) counters,
+/// so `CHB_FORCE_HEAP` may flip between write and resume without
+/// perturbing a single trace bit.
+///
+/// (Setting the env var while sibling tests run concurrently is
+/// harmless: the backends are pinned identical by contract, so a
+/// sibling transiently constructing a heap-backed queue produces the
+/// same results.)
+#[test]
+fn resume_crosses_event_queue_backends_bit_identically() {
+    let p = problem_for(TaskKind::LinReg);
+    let spec = RunSpec {
+        params: ParamSpec {
+            alpha: Some(1.0 / p.l_global),
+            beta: 0.4,
+            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+        },
+        iters: 24,
+        record_comm_map: true,
+        engine: EngineKind::Async(pareto_async()),
+        ..RunSpec::new(TaskKind::LinReg, "ckpt")
+    };
+    let plain =
+        Session::from_parts(spec.clone(), p.clone()).unwrap().run().trace;
+    // checkpoint written by the wheel...
+    let dir = tmp_dir("cross_backend_wheel");
+    Session::from_parts(spec.clone(), p.clone())
+        .unwrap()
+        .with_checkpoints(CheckpointPolicy::new(9, &dir))
+        .run_checked()
+        .unwrap();
+    let cp = Checkpoint::load(&dir.join("checkpoint.json")).unwrap();
+    // ...resumed on the heap, and a second checkpoint written by the
+    // heap while the override is in force
+    std::env::set_var("CHB_FORCE_HEAP", "1");
+    let on_heap = Session::from_parts(spec.clone(), p.clone())
+        .unwrap()
+        .resuming_from(cp)
+        .run_checked()
+        .unwrap()
+        .trace;
+    let dir2 = tmp_dir("cross_backend_heap");
+    Session::from_parts(spec.clone(), p.clone())
+        .unwrap()
+        .with_checkpoints(CheckpointPolicy::new(9, &dir2))
+        .run_checked()
+        .unwrap();
+    std::env::remove_var("CHB_FORCE_HEAP");
+    // ...whose image resumes back on the wheel
+    let cp2 = Checkpoint::load(&dir2.join("checkpoint.json")).unwrap();
+    let on_wheel = Session::from_parts(spec.clone(), p.clone())
+        .unwrap()
+        .resuming_from(cp2)
+        .run_checked()
+        .unwrap()
+        .trace;
+    assert_traces_bitwise(&plain, &on_heap, "wheel ckpt → heap resume");
+    assert_traces_bitwise(&plain, &on_wheel, "heap ckpt → wheel resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
 /// A checkpoint file is a faithful serialization: load(save(cp))
 /// re-encodes to the identical text, on a checkpoint produced by a
 /// real run (not a hand-rolled fixture).

@@ -16,6 +16,11 @@
 //!   7. the fused single-pass gradient kernels are bit-identical to
 //!      the two-pass (gemv + gemv_t) composition they replace, over
 //!      random shapes.
+//!   8. the radix-wheel EventQueue backend pops in the exact total
+//!      `(time, rank, worker, seq)` order of the BinaryHeap reference
+//!      — bitwise, including same-instant batches — and its
+//!      checkpoint image (entries_ordered + counters, the PR 7
+//!      format) is backend-independent and restores mid-drain.
 
 use chb_fed::coordinator::{
     run_rayon, run_serial, run_threaded, Participation, RunConfig, Schedule,
@@ -449,6 +454,176 @@ fn straggler_skip_preserves_aggregate_telescope() {
             diff <= 1e-9 * scale,
             "straggler rounds broke the telescope: {diff:.3e} (scale {scale:.3e})"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn event_queue_wheel_matches_heap_pop_order_bitwise() {
+    use chb_fed::net::EventQueue;
+    prop::check("wheel ≡ heap pop order", 50, |g| {
+        let mut wheel = EventQueue::with_wheel();
+        let mut heap = EventQueue::with_heap();
+        // a handful of shared anchor instants force same-instant
+        // batches, where only (rank, worker, seq) breaks the tie
+        let mut anchors: Vec<f64> =
+            (0..4).map(|_| g.f64_in(0.0, 50_000.0)).collect();
+        anchors.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ops = g.usize_in(20..=300);
+        // pushes must stay at/after the popped front (virtual time
+        // never flows backwards), so track the drained clock
+        let mut clock = 0.0f64;
+        for _ in 0..ops {
+            if g.bool() || wheel.is_empty() {
+                let t = if g.bool() {
+                    // same-instant batch: identical f64, not just close
+                    clock.max(anchors[g.usize_in(0..=3)])
+                } else {
+                    clock + g.f64_in(0.0, 10_000.0)
+                };
+                let rank = g.usize_in(0..=2) as u8;
+                let worker = g.usize_in(0..=9);
+                let payload = g.usize_in(0..=1 << 30) as u64;
+                wheel.push(t, rank, worker, payload);
+                heap.push(t, rank, worker, payload);
+            } else {
+                let (kw, pw) = wheel.pop().expect("wheel non-empty");
+                let (kh, ph) = heap.pop().expect("heap tracks wheel");
+                chb_fed::assert_prop!(
+                    kw.time_us.to_bits() == kh.time_us.to_bits()
+                        && kw.rank == kh.rank
+                        && kw.worker == kh.worker
+                        && kw.seq() == kh.seq()
+                        && pw == ph,
+                    "pop diverged: wheel ({}, {}, {}, {}) p={pw} vs \
+                     heap ({}, {}, {}, {}) p={ph}",
+                    kw.time_us,
+                    kw.rank,
+                    kw.worker,
+                    kw.seq(),
+                    kh.time_us,
+                    kh.rank,
+                    kh.worker,
+                    kh.seq()
+                );
+                clock = kw.time_us;
+            }
+            chb_fed::assert_prop!(
+                wheel.len() == heap.len(),
+                "length diverged: wheel {} vs heap {}",
+                wheel.len(),
+                heap.len()
+            );
+            // peek agrees with peek, bitwise
+            match (wheel.peek(), heap.peek()) {
+                (None, None) => {}
+                (Some(a), Some(b)) => chb_fed::assert_prop!(
+                    a.time_us.to_bits() == b.time_us.to_bits()
+                        && a.rank == b.rank
+                        && a.worker == b.worker
+                        && a.seq() == b.seq(),
+                    "peek diverged"
+                ),
+                _ => chb_fed::assert_prop!(false, "peek presence diverged"),
+            }
+        }
+        // full drain: identical tail, then both empty
+        let dw = wheel.drain_ordered();
+        let dh = heap.drain_ordered();
+        chb_fed::assert_prop!(dw.len() == dh.len(), "drain lengths differ");
+        for ((ka, pa), (kb, pb)) in dw.iter().zip(&dh) {
+            chb_fed::assert_prop!(
+                ka.time_us.to_bits() == kb.time_us.to_bits()
+                    && ka.rank == kb.rank
+                    && ka.worker == kb.worker
+                    && ka.seq() == kb.seq()
+                    && pa == pb,
+                "drained tails diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn event_queue_checkpoint_image_is_backend_independent_and_restores() {
+    use chb_fed::net::EventQueue;
+    prop::check("queue checkpoint round-trip", 30, |g| {
+        let mut wheel = EventQueue::with_wheel();
+        let mut heap = EventQueue::with_heap();
+        let anchor = g.f64_in(0.0, 10_000.0);
+        let n = g.usize_in(5..=120);
+        for _ in 0..n {
+            let t = if g.bool() { anchor } else { g.f64_in(0.0, 30_000.0) };
+            let rank = g.usize_in(0..=2) as u8;
+            let worker = g.usize_in(0..=9);
+            let payload = g.usize_in(0..=1 << 30) as u64;
+            wheel.push(t, rank, worker, payload);
+            heap.push(t, rank, worker, payload);
+        }
+        // drain part-way, as a mid-run checkpoint would find the queue
+        let drain = g.usize_in(0..=n / 2);
+        for _ in 0..drain {
+            wheel.pop();
+            heap.pop();
+        }
+        // the PR 7 capture — entries_ordered + counters — must be
+        // identical across backends: a checkpoint carries no backend
+        // identity
+        let ew: Vec<_> = wheel
+            .entries_ordered()
+            .into_iter()
+            .map(|(k, p)| (k, *p))
+            .collect();
+        let eh: Vec<_> = heap
+            .entries_ordered()
+            .into_iter()
+            .map(|(k, p)| (k, *p))
+            .collect();
+        chb_fed::assert_prop!(
+            ew.len() == eh.len(),
+            "capture sizes differ: {} vs {}",
+            ew.len(),
+            eh.len()
+        );
+        for ((ka, pa), (kb, pb)) in ew.iter().zip(&eh) {
+            chb_fed::assert_prop!(
+                ka.time_us.to_bits() == kb.time_us.to_bits()
+                    && ka.rank == kb.rank
+                    && ka.worker == kb.worker
+                    && ka.seq() == kb.seq()
+                    && pa == pb,
+                "checkpoint images differ between backends"
+            );
+        }
+        chb_fed::assert_prop!(
+            wheel.counters() == heap.counters(),
+            "counters differ: {:?} vs {:?}",
+            wheel.counters(),
+            heap.counters()
+        );
+        // restore (onto the default backend) and finish the drain:
+        // the restored queue must pop exactly what the originals do
+        let (seq, last) = wheel.counters();
+        let mut restored = EventQueue::restore(ew, seq, last);
+        loop {
+            let r = restored.pop();
+            let w = wheel.pop();
+            match (r, w) {
+                (None, None) => break,
+                (Some((kr, pr)), Some((kw, pw))) => chb_fed::assert_prop!(
+                    kr.time_us.to_bits() == kw.time_us.to_bits()
+                        && kr.rank == kw.rank
+                        && kr.worker == kw.worker
+                        && kr.seq() == kw.seq()
+                        && pr == pw,
+                    "restored queue diverged from the original"
+                ),
+                _ => {
+                    chb_fed::assert_prop!(false, "restored length diverged");
+                }
+            }
+        }
         Ok(())
     });
 }

@@ -8,6 +8,11 @@ markdown table (suitable for $GITHUB_STEP_SUMMARY).  Rows whose
 current median exceeds 2x the baseline are flagged loudly; rows
 present in only one file are listed but never flagged.
 
+Population-scale rows (scale_pop_*, wire_loadgen_pop*) are
+first-class: compared and flagged like every timing row, with one
+unit quirk -- *_rss_kib rows carry raw peak-RSS KiB in the median_ns
+slot (the row name is the unit), so they render as MiB, not time.
+
 Always exits 0: shared-runner noise makes a hard gate flaky, so this
 is a warn-only step -- the signal is the table in the CI summary, not
 the exit code.
@@ -37,6 +42,13 @@ def fmt_ns(ns):
     return f"{ns:.0f} ns"
 
 
+def fmt_value(name, v):
+    """Render a row's median in its actual unit (see module doc)."""
+    if name.endswith("_rss_kib"):
+        return f"{v / 1024:.1f} MiB"
+    return fmt_ns(v)
+
+
 def main(argv):
     if len(argv) != 3:
         print(__doc__.strip())
@@ -61,7 +73,7 @@ def main(argv):
             flag = f"**>{REGRESSION_FACTOR:g}x REGRESSION**"
             regressions.append((name, ratio))
         print(
-            f"| {name} | {fmt_ns(b)} | {fmt_ns(c)} "
+            f"| {name} | {fmt_value(name, b)} | {fmt_value(name, c)} "
             f"| {ratio:.2f}x | {flag} |"
         )
     print()
