@@ -379,6 +379,37 @@ fn main() {
         ));
     }
 
+    // -- method grid: K-step local descent round --------------------------
+    // One worker round under MethodSpec::LocalSteps K=4 — K fused
+    // gradient sweeps plus the local heavy-ball recursion — against
+    // the single-sweep `worker round` rows above.  NeverCensor so
+    // every timed round runs the full local sweep.
+    {
+        use chb_fed::coordinator::LocalStepCfg;
+        let mut r = Xoshiro256::new(41);
+        let ds = synthetic::gaussian_pm1(&mut r, 768, 784);
+        let shard = shard_whole(&ds);
+        let obj = build_objective(TaskKind::LinReg, &shard, 0.0);
+        let mut worker = Worker::new(
+            0,
+            Box::new(chb_fed::coordinator::RustBackend::new(obj)),
+        )
+        .with_local_steps(LocalStepCfg {
+            k_local: 4,
+            alpha: 1e-3,
+            beta: 0.4,
+        });
+        let theta = r.gaussian_vec(784);
+        all.push(std_b.run("method_localsteps_round", |k| {
+            black_box(worker.round(
+                black_box(&theta),
+                1.0,
+                &NeverCensor,
+                k + 1,
+            ));
+        }));
+    }
+
     // -- end-to-end rounds ------------------------------------------------
     let problem = {
         let l_m = synthetic::increasing_l(9);

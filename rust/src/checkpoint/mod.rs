@@ -94,6 +94,10 @@ pub enum CheckpointError {
     /// structurally valid JSON that is not a well-formed checkpoint
     /// (missing/unknown keys, bad hex, internally inconsistent shapes)
     Corrupt(String),
+    /// the session's configuration carries state the checkpoint image
+    /// does not capture (stateful server rules, compressing downlink),
+    /// so checkpointing or resuming it would silently diverge
+    Unsupported(String),
 }
 
 impl fmt::Display for CheckpointError {
@@ -123,6 +127,9 @@ impl fmt::Display for CheckpointError {
             ),
             CheckpointError::Corrupt(d) => {
                 write!(f, "corrupt checkpoint: {d}")
+            }
+            CheckpointError::Unsupported(d) => {
+                write!(f, "checkpoint/resume unsupported: {d}")
             }
         }
     }
@@ -959,6 +966,12 @@ fn trace_to_json(t: &Trace) -> Json {
         hex_u64_vec(&t.iters.iter().map(|s| s.bits_cum).collect::<Vec<_>>()),
     );
     it.insert(
+        "down_bits_cum".into(),
+        hex_u64_vec(
+            &t.iters.iter().map(|s| s.down_bits_cum).collect::<Vec<_>>(),
+        ),
+    );
+    it.insert(
         "vclock_us".into(),
         hex_f64_vec(&t.iters.iter().map(|s| s.vclock_us).collect::<Vec<_>>()),
     );
@@ -1033,7 +1046,9 @@ fn trace_from_json(v: &Json) -> Result<Trace, CheckpointError> {
             "k", "loss", "comms_round", "comms_cum", "agg_grad_sq", "step_sq",
             "bits_cum", "vclock_us", "stale_max", "batch_frac", "epoch",
         ],
-        &[],
+        // added after PR 7's format froze; absent in older images,
+        // decoded as zeros (pre-downlink runs charged no broadcast)
+        &["down_bits_cum"],
         "trace.iters",
     )?;
     let ks = usize_arr(req(it, "k", "trace.iters")?, "trace.iters.k")?;
@@ -1052,6 +1067,15 @@ fn trace_from_json(v: &Json) -> Result<Trace, CheckpointError> {
             ))
         }
     };
+    let down_bits_cum = match it.get("down_bits_cum") {
+        Some(Json::Str(s)) => u64_vec_from_hex(s, "trace.iters.down_bits_cum")?,
+        Some(_) => {
+            return Err(CheckpointError::Corrupt(
+                "trace.iters.down_bits_cum is not a hex-vector string".into(),
+            ))
+        }
+        None => vec![0; ks.len()],
+    };
     let vclock_us = f64_vec_field(it, "vclock_us", "trace.iters")?;
     let stale_max = usize_arr(req(it, "stale_max", "trace.iters")?, "stale_max")?;
     let batch_frac = f64_vec_field(it, "batch_frac", "trace.iters")?;
@@ -1064,6 +1088,7 @@ fn trace_from_json(v: &Json) -> Result<Trace, CheckpointError> {
         ("agg_grad_sq", agg_grad_sq.len()),
         ("step_sq", step_sq.len()),
         ("bits_cum", bits_cum.len()),
+        ("down_bits_cum", down_bits_cum.len()),
         ("vclock_us", vclock_us.len()),
         ("stale_max", stale_max.len()),
         ("batch_frac", batch_frac.len()),
@@ -1084,6 +1109,7 @@ fn trace_from_json(v: &Json) -> Result<Trace, CheckpointError> {
             agg_grad_sq: agg_grad_sq[i],
             step_sq: step_sq[i],
             bits_cum: bits_cum[i],
+            down_bits_cum: down_bits_cum[i],
             vclock_us: vclock_us[i],
             stale_max: stale_max[i],
             batch_frac: batch_frac[i],
@@ -1535,6 +1561,7 @@ mod tests {
             agg_grad_sq: 0.25,
             step_sq: 1e-3,
             bits_cum: 384,
+            down_bits_cum: 384,
             vclock_us: 1000.0,
             stale_max: 0,
             batch_frac: 1.0,

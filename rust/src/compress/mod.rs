@@ -21,7 +21,7 @@
 //! fold in O(nnz) via [`crate::linalg::axpy_sparse`].
 
 use crate::linalg;
-use crate::net::{dense_delta_bits, sparse_delta_bits};
+use crate::net::{dense_delta_bits, sparse_delta_bits, sparse_packed_delta_bits};
 
 pub mod packed;
 
@@ -385,6 +385,76 @@ impl Compressor for TopK {
     }
 }
 
+/// Sparse + packed hybrid: top-k magnitude selection with the kept
+/// values quantized on a `bits`-wide uniform grid (scale = max|kept|).
+/// On the wire each kept coordinate costs a 32-bit index plus `bits`
+/// value bits, under one f32 scale header —
+/// [`sparse_packed_delta_bits`] — so `TopKInt { k, bits: 8 }` is 40/64
+/// the size of plain [`TopK`] at the same support.  The selection
+/// (including the NaN-tolerant total order and index tiebreak) is
+/// exactly [`TopK`]'s, and the decoded payload is canonical
+/// ascending-index [`Payload::Sparse`], so the O(nnz) server fold and
+/// the `DenseDecoded` pin apply unchanged.
+pub struct TopKInt {
+    /// number of coordinates kept (clamped to the vector length)
+    pub k: usize,
+    /// value bits per kept coordinate (2..=32; spec-validated)
+    pub bits: u32,
+}
+
+impl Compressor for TopKInt {
+    fn compress_into(
+        &self,
+        delta: &[f64],
+        scratch: &mut CodecScratch,
+        out: &mut Payload,
+    ) -> u64 {
+        debug_assert!(
+            (2..=32).contains(&self.bits),
+            "validated at the spec layer"
+        );
+        let d = delta.len();
+        assert!(d <= u32::MAX as usize, "sparse indices are u32");
+        let k = self.k.min(d);
+        let order = &mut scratch.order;
+        order.clear();
+        order.extend(0..d as u32);
+        // identical selection to TopK: NaN-tolerant total order with
+        // the index tiebreak, then canonical ascending indices
+        order.sort_unstable_by(|&a, &b| {
+            delta[b as usize]
+                .abs()
+                .total_cmp(&delta[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let (idx, val) = out.sparse_bufs();
+        idx.extend_from_slice(&order[..k]);
+        idx.sort_unstable();
+        val.extend(idx.iter().map(|&i| delta[i as usize]));
+        // quantize the kept values in place (k is small — scalar loop);
+        // NaN-tolerant max so a diverged coordinate can't poison scale
+        let maxabs = val.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if maxabs == 0.0 {
+            for v in val.iter_mut() {
+                *v = 0.0; // includes NaN → level 0, like PackedInt
+            }
+        } else {
+            let levels = ((1u64 << (self.bits - 1)) - 1) as f64;
+            let scale = maxabs / levels;
+            let inv = scale.recip();
+            for v in val.iter_mut() {
+                let q = (*v * inv).round().clamp(-levels, levels);
+                *v = if q.is_nan() { 0.0 } else { q * scale };
+            }
+        }
+        sparse_packed_delta_bits(self.bits, k)
+    }
+
+    fn name(&self) -> &'static str {
+        "top-k-int"
+    }
+}
+
 /// Wrapper that runs an inner codec and densifies its payload — same
 /// decoded values and wire bits, dense representation.  Exists to pin
 /// the sparse-fold invariant: a run with `TopK` must be bit-identical
@@ -509,6 +579,61 @@ mod tests {
         // all-NaN input must not panic either
         let all_nan = TopK { k: 1 }.compress(&[f64::NAN, f64::NAN]);
         assert!(all_nan.decoded.to_dense(2).iter().any(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn topk_int_quantizes_the_topk_support() {
+        let v = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let out = TopKInt { k: 2, bits: 8 }.compress(&v);
+        // same support as TopK, canonical ascending indices
+        let Payload::Sparse { idx, val } = &out.decoded else {
+            panic!("top-k-int must emit sparse");
+        };
+        assert_eq!(idx, &vec![1, 3]);
+        // values land within one 8-bit level of the originals, and the
+        // max-magnitude value lands on the extreme level
+        let scale = 5.0 / 127.0;
+        assert!((val[0] + 5.0).abs() < 1e-12);
+        assert!((val[1] - 3.0).abs() <= scale * (1.0 + 1e-12));
+        // header + (index + value bits) per kept coordinate
+        assert_eq!(out.bits, 32 + (32 + 8) * 2);
+        assert!(out.bits < TopK { k: 2 }.compress(&v).bits + 32);
+    }
+
+    #[test]
+    fn topk_int_error_shrinks_with_bits_and_handles_edge_cases() {
+        let v = ramp(101);
+        let e4 = relative_error(&TopKInt { k: 101, bits: 4 }, &v);
+        let e8 = relative_error(&TopKInt { k: 101, bits: 8 }, &v);
+        let e16 = relative_error(&TopKInt { k: 101, bits: 16 }, &v);
+        assert!(e4 > e8 && e8 > e16, "{e4} {e8} {e16}");
+        // all-zero input: zero values, header + index/value charge
+        let z = TopKInt { k: 2, bits: 8 }.compress(&[0.0; 5]);
+        assert_eq!(z.decoded.to_dense(5), vec![0.0; 5]);
+        assert_eq!(z.bits, 32 + 40 * 2);
+        // NaN coordinate is kept (sorts largest) and packs as level 0
+        let n = TopKInt { k: 2, bits: 8 }.compress(&[1.0, f64::NAN, 3.0]);
+        let dec = n.decoded.to_dense(3);
+        assert_eq!(dec[1], 0.0);
+        // k ≥ d clamps
+        let all = TopKInt { k: 99, bits: 16 }.compress(&[1.0, -2.0]);
+        assert_eq!(all.decoded.nnz(), 2);
+    }
+
+    #[test]
+    fn topk_int_dense_decoded_pin() {
+        // the satellite invariant: densifying the hybrid payload
+        // changes representation, never the decoded values or bits
+        let v = ramp(64);
+        let sparse = TopKInt { k: 9, bits: 8 }.compress(&v);
+        let dense = DenseDecoded(TopKInt { k: 9, bits: 8 }).compress(&v);
+        assert_eq!(dense.bits, sparse.bits);
+        assert!(matches!(dense.decoded, Payload::Dense(_)));
+        let a = sparse.decoded.to_dense(v.len());
+        let b = dense.decoded.to_dense(v.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -488,6 +488,12 @@ pub fn run_async_with_rules_ctx(
                 if more {
                     continue;
                 }
+                // downlink ledger: every broadcast so far carried the
+                // dense model (this engine never compresses the
+                // downlink); message counts live in the net state, so
+                // resume/replay reconstructs the ledger exactly
+                let down_cum = net.total_down_messages()
+                    * crate::net::dense_delta_bits(dim);
                 let stop = fold_batch(
                     &mut server,
                     cfg,
@@ -497,6 +503,7 @@ pub fn run_async_with_rules_ctx(
                     &mut loss_cache,
                     &mut applied_sum,
                     t,
+                    down_cum,
                 );
                 if stop || server.iteration() >= cfg.max_iters {
                     break 'event_loop;
@@ -785,6 +792,7 @@ fn fold_batch(
     loss_cache: &mut [f64],
     applied_sum: &mut [f64],
     t: f64,
+    down_bits_cum: u64,
 ) -> bool {
     debug_assert_eq!(batch.len(), versions.len());
     let mut stale_max = 0usize;
@@ -831,6 +839,7 @@ fn fold_batch(
         agg_grad_sq: out.agg_grad_sq,
         step_sq: out.step_sq,
         bits_cum: prev.map_or(0, |s| s.bits_cum) + bits_round,
+        down_bits_cum,
         vclock_us: t,
         stale_max,
         batch_frac,
@@ -932,6 +941,11 @@ mod tests {
             assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss k={}", x.k);
             assert_eq!(x.comms_cum, y.comms_cum, "comms k={}", x.k);
             assert_eq!(x.bits_cum, y.bits_cum, "bits k={}", x.k);
+            assert_eq!(
+                x.down_bits_cum, y.down_bits_cum,
+                "down bits k={}",
+                x.k
+            );
             assert_eq!(y.stale_max, 0, "staleness k={}", x.k);
         }
         assert_eq!(serial.comm_map, a.comm_map);

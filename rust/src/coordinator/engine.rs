@@ -22,14 +22,16 @@ use crate::checkpoint::{
     ServerState, WorkerState, CHECKPOINT_VERSION,
 };
 use crate::metrics::{IterStat, Trace};
-use crate::net::{Direction, LinkStats, SimNetwork};
+use crate::net::{
+    downlink_frame_bytes, Direction, DownlinkChannel, DownlinkSpec,
+    LinkStats, SimNetwork,
+};
 use crate::optim::{self, CensorDecision, CensorRule, Method, MethodParams};
 
 use super::async_engine::{run_async_with_rules_ctx, AsyncConfig};
 use super::fault::FaultPlan;
 use super::participation::{Participation, Schedule};
 use super::pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
-use super::protocol::broadcast_bytes;
 use super::server::Server;
 use super::worker::{Worker, WorkerSnapshot};
 
@@ -67,6 +69,11 @@ pub struct RunConfig {
     /// seeded worker crash/rejoin + server-kill schedule (default:
     /// none — the paper setting)
     pub faults: FaultPlan,
+    /// broadcast channel: `None` charges the uncompressed 64·d bits
+    /// per scheduled worker (bit-identical traces to the pre-downlink
+    /// code); the other variants compress the broadcast delta through
+    /// the packed codec stack (sync engines only)
+    pub downlink: DownlinkSpec,
 }
 
 impl RunConfig {
@@ -83,6 +90,7 @@ impl RunConfig {
             drop_prob: 0.0,
             drop_seed: 0,
             faults: FaultPlan::default(),
+            downlink: DownlinkSpec::None,
         }
     }
 
@@ -117,6 +125,12 @@ impl RunConfig {
         self
     }
 
+    /// Route the broadcast through a downlink codec (builder form).
+    pub fn with_downlink(mut self, downlink: DownlinkSpec) -> Self {
+        self.downlink = downlink;
+        self
+    }
+
     pub(crate) fn should_stop(&self, stat: &IterStat) -> bool {
         match self.stop {
             StopRule::MaxIters => false,
@@ -134,8 +148,9 @@ fn fold_round(
     cfg: &RunConfig,
     rounds: &mut [super::worker::WorkerRound],
     trace: &mut Trace,
+    down_bytes: u64,
+    down_bits_round: u64,
 ) -> IterStat {
-    let dim = server.dim();
     // network accounting + failure injection; payload size comes from
     // the worker (compression-aware), +8 B worker-id framing
     let mut up_bytes = Vec::with_capacity(rounds.len());
@@ -155,7 +170,7 @@ fn fold_round(
             }
         }
     }
-    net.advance_round(broadcast_bytes(dim), &up_bytes);
+    net.advance_round(down_bytes, &up_bytes);
 
     if cfg.record_comm_map {
         let mut row = vec![false; rounds.len()];
@@ -194,6 +209,7 @@ fn fold_round(
         agg_grad_sq: out.agg_grad_sq,
         step_sq: out.step_sq,
         bits_cum: prev.map_or(0, |s| s.bits_cum) + bits_round,
+        down_bits_cum: prev.map_or(0, |s| s.down_bits_cum) + down_bits_round,
         vclock_us: net.sim_clock_us,
         // synchronous rounds fold every delta at the iterate it was
         // computed on — arrival staleness is identically zero
@@ -346,6 +362,15 @@ pub fn run_with_rules_ctx(
     let mut trace = Trace::new(label);
     let dim = server.dim();
     let faults = &cfg.faults;
+    let mut channel = DownlinkChannel::new(cfg.downlink);
+    // a compressing channel carries view state the checkpoint does not
+    // capture; the spec layer rejects these combinations up front
+    debug_assert!(
+        !channel.is_compressing()
+            || (ctx.resume.is_none() && faults.server_kills.is_empty()),
+        "downlink compression does not compose with resume or \
+         server-kill replay"
+    );
 
     let mut start_k = 1;
     if let Some(cp) = &ctx.resume {
@@ -397,12 +422,16 @@ pub fn run_with_rules_ctx(
         }
         let active = Arc::new(active_vec);
         let n_active = active.iter().filter(|&&a| a).count();
-        // θᵏ only goes down to the scheduled workers
-        net.broadcast(&active, broadcast_bytes(dim));
+        // θᵏ (or the channel's codec view of it) only goes down to
+        // the scheduled workers; each one is charged the payload
+        let (theta_view, view_step_sq, down_bits) =
+            channel.encode(&server.theta, server.theta_step_sq());
+        let down_bytes = downlink_frame_bytes(down_bits);
+        net.broadcast(&active, down_bytes);
         let input = RoundInput {
             k,
-            theta: Arc::new(server.theta.clone()),
-            step_sq: server.theta_step_sq(),
+            theta: theta_view,
+            step_sq: view_step_sq,
             active,
             force: Arc::new(force),
             censor: Arc::clone(&censor),
@@ -413,7 +442,15 @@ pub fn run_with_rules_ctx(
                 && rounds.iter().enumerate().all(|(i, r)| r.worker == i),
             "pool must report every worker in id order"
         );
-        let stat = fold_round(&mut server, &mut net, cfg, &mut rounds, &mut trace);
+        let stat = fold_round(
+            &mut server,
+            &mut net,
+            cfg,
+            &mut rounds,
+            &mut trace,
+            down_bytes,
+            down_bits * n_active as u64,
+        );
         trace.participants.push(n_active);
         let stop = cfg.should_stop(&stat);
         trace.iters.push(stat);
@@ -996,6 +1033,56 @@ mod tests {
         let summary = run.async_summary.expect("async summary");
         assert_eq!(summary.agg_grad.len(), dim);
         assert_traces_bitwise_equal(&serial, &run.trace, "run_engine async");
+    }
+
+    #[test]
+    fn downlink_accounting_charges_every_scheduled_worker() {
+        let (dim, m) = (4, 3);
+        let mut ws = quad_workers(dim, m);
+        let alpha = 1.0 / total_c(m);
+        let cfg = RunConfig::new(Method::Gd, MethodParams::new(alpha), 10);
+        let trace = run_serial(&mut ws, &cfg, vec![0.0; dim]);
+        // uncompressed broadcast: 64·d bits × M workers per round
+        for (i, s) in trace.iters.iter().enumerate() {
+            assert_eq!(s.down_bits_cum, ((i + 1) * m * 64 * dim) as u64);
+        }
+        assert_eq!(trace.total_downlink_bits(), (10 * m * 64 * dim) as u64);
+    }
+
+    #[test]
+    fn compressed_downlink_converges_and_charges_fewer_bits() {
+        let (dim, m) = (6, 5);
+        let alpha = 1.0 / total_c(m);
+        let p = MethodParams::new(alpha)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let base = RunConfig::new(Method::Chb, p, 300);
+        let mut ws = quad_workers(dim, m);
+        let dense = run_serial(&mut ws, &base, vec![0.0; dim]);
+        let cfg = base
+            .clone()
+            .with_downlink(DownlinkSpec::Int { bits: 8, error_feedback: true });
+        let mut ws = quad_workers(dim, m);
+        let packed = run_serial(&mut ws, &cfg, vec![0.0; dim]);
+        let f_star = quad_f_star(dim, m);
+        let first = packed.iters.first().unwrap().loss - f_star;
+        let last = packed.final_loss() - f_star;
+        assert!(
+            last < first * 1e-3,
+            "no convergence under int8 downlink: {first} → {last}"
+        );
+        // round 1 is the dense model sync; every later round carries
+        // the 32-bit scale header + 8 bits/coordinate
+        let per_round = (32 + 8 * dim as u64) * m as u64;
+        let round1 = (64 * dim * m) as u64;
+        assert_eq!(
+            packed.total_downlink_bits(),
+            round1 + 299 * per_round
+        );
+        assert!(
+            packed.total_downlink_bits() < dense.total_downlink_bits(),
+            "int8 downlink did not reduce broadcast bits"
+        );
     }
 
     #[test]

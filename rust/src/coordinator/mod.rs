@@ -79,5 +79,6 @@ pub use population::{run_population, PopulationOutcome, PopulationSpec};
 pub use pool::{RayonPool, RoundInput, SerialPool, ThreadedPool, WorkerPool};
 pub use server::Server;
 pub use worker::{
-    GradientBackend, RustBackend, Worker, WorkerRound, WorkerSnapshot,
+    GradientBackend, LocalStepCfg, RustBackend, Worker, WorkerRound,
+    WorkerSnapshot,
 };

@@ -195,6 +195,10 @@ pub fn run_population(
             agg_grad_sq: out.agg_grad_sq,
             step_sq: out.step_sq,
             bits_cum: prev.map_or(0, |s| s.bits_cum) + bits_round,
+            // every cohorted client received the dense θᵏ broadcast
+            down_bits_cum: prev.map_or(0, |s| s.down_bits_cum)
+                + cohort.len() as u64
+                    * crate::net::dense_delta_bits(theta.len()),
             vclock_us: vclock,
             // cohort rounds fold every delta at the iterate it was
             // computed on — arrival staleness is identically zero (the

@@ -119,6 +119,22 @@ pub struct WorkerRound {
     pub batch_frac: f64,
 }
 
+/// K-step local-update configuration ([`crate::optim::MethodSpec::LocalSteps`]):
+/// between uplinks the worker runs `k_local` heavy-ball steps on its
+/// own shard objective and reports the *sum* of the visited gradients
+/// as one pseudo-gradient — censoring, uplink codecs, and the server
+/// aggregate all operate on that sum unchanged, so eq. (5) still
+/// telescopes (over pseudo-gradients instead of gradients).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LocalStepCfg {
+    /// local steps per round (≥ 2; 1 installs no local path at all)
+    pub k_local: usize,
+    /// local step size α (the session resolves the server's α here)
+    pub alpha: f64,
+    /// local momentum β (0.0 when the base method carries none)
+    pub beta: f64,
+}
+
 /// The persistent (checkpoint-worthy) slice of a [`Worker`]: the
 /// censor reference state θ̂ (as the last-transmitted gradient), the
 /// lifetime transmit counter, and the error-feedback residual.  The
@@ -164,6 +180,15 @@ pub struct Worker {
     /// optional gradient-sampling stream; `None` = the legacy
     /// full-batch path, bit-for-bit
     sampler: Option<BatchSampler>,
+    /// optional K-step local-update regime; `None` = one gradient per
+    /// round, bit-for-bit
+    local: Option<LocalStepCfg>,
+    /// scratch: local trajectory iterate θ_j (sized on first use)
+    local_theta: Vec<f64>,
+    /// scratch: local trajectory iterate θ_{j−1}
+    local_prev: Vec<f64>,
+    /// scratch: per-step local gradient ∇f_m(θ_j)
+    local_grad: Vec<f64>,
     /// lifetime transmit counter S_m (Lemma 2)
     pub transmissions: usize,
 }
@@ -187,6 +212,10 @@ impl Worker {
             codec_scratch: CodecScratch::default(),
             compressor: None,
             sampler: None,
+            local: None,
+            local_theta: Vec::new(),
+            local_prev: Vec::new(),
+            local_grad: Vec::new(),
             transmissions: 0,
         }
     }
@@ -209,6 +238,15 @@ impl Worker {
             BatchSchedule::Full => None,
             s => Some(BatchSampler::new(s, self.id, self.backend.num_rows())),
         };
+        self
+    }
+
+    /// Attach a K-step local-update regime.  `k_local = 1` installs
+    /// nothing — the worker stays on the legacy one-gradient-per-round
+    /// path, bit-for-bit.  Local steps are full-batch (the spec layer
+    /// rejects the combination with minibatch schedules).
+    pub fn with_local_steps(mut self, cfg: LocalStepCfg) -> Self {
+        self.local = if cfg.k_local > 1 { Some(cfg) } else { None };
         self
     }
 
@@ -257,26 +295,31 @@ impl Worker {
         // sampler draws a proper row subset for round k.  Batched
         // rounds still report the FULL-shard loss (measurement side,
         // zero communication) so traces stay comparable across
-        // schedules.
-        let (loss, batch_frac) = match &mut self.sampler {
-            None => {
-                (self.backend.grad_loss_into(theta, &mut self.grad), 1.0)
-            }
-            Some(s) => {
-                let n = s.n_rows() as f64;
-                match s.draw(k) {
-                    None => (
-                        self.backend.grad_loss_into(theta, &mut self.grad),
-                        1.0,
-                    ),
-                    Some(rows) => {
-                        let frac = rows.len() as f64 / n;
-                        self.backend.grad_loss_batch_into(
-                            theta,
-                            rows,
-                            &mut self.grad,
-                        );
-                        (self.backend.loss(theta), frac)
+        // schedules.  Local-step rounds walk a K-step trajectory and
+        // charge K full sweeps to the epoch column.
+        let (loss, batch_frac) = if let Some(cfg) = self.local {
+            (self.local_sweep(theta, cfg), cfg.k_local as f64)
+        } else {
+            match &mut self.sampler {
+                None => {
+                    (self.backend.grad_loss_into(theta, &mut self.grad), 1.0)
+                }
+                Some(s) => {
+                    let n = s.n_rows() as f64;
+                    match s.draw(k) {
+                        None => (
+                            self.backend.grad_loss_into(theta, &mut self.grad),
+                            1.0,
+                        ),
+                        Some(rows) => {
+                            let frac = rows.len() as f64 / n;
+                            self.backend.grad_loss_batch_into(
+                                theta,
+                                rows,
+                                &mut self.grad,
+                            );
+                            (self.backend.loss(theta), frac)
+                        }
                     }
                 }
             }
@@ -330,6 +373,49 @@ impl Worker {
             bits,
             batch_frac,
         }
+    }
+
+    /// Walk the K-step local heavy-ball trajectory from the broadcast
+    /// iterate θᵏ and leave the pseudo-gradient Σ_j ∇f_m(θ_j) in
+    /// `self.grad`.  Local momentum restarts at zero every round (the
+    /// trajectory is a pure function of θᵏ, so censor rematerialization
+    /// and checkpoint replay stay exact).  Returns f_m(θᵏ) — the loss
+    /// at the *broadcast* iterate, so traces stay comparable with every
+    /// other method.
+    fn local_sweep(&mut self, theta: &[f64], cfg: LocalStepCfg) -> f64 {
+        let dim = theta.len();
+        if self.local_theta.len() != dim {
+            self.local_theta.resize(dim, 0.0);
+            self.local_prev.resize(dim, 0.0);
+            self.local_grad.resize(dim, 0.0);
+        }
+        self.local_theta.copy_from_slice(theta);
+        self.local_prev.copy_from_slice(theta);
+        let mut loss = 0.0;
+        for j in 0..cfg.k_local {
+            let l = self
+                .backend
+                .grad_loss_into(&self.local_theta, &mut self.local_grad);
+            if j == 0 {
+                loss = l;
+                // copy, not add-into-zeros: keeps −0.0 coords bitwise
+                self.grad.copy_from_slice(&self.local_grad);
+            } else {
+                for i in 0..dim {
+                    self.grad[i] += self.local_grad[i];
+                }
+            }
+            if j + 1 < cfg.k_local {
+                // θ_{j+1} = θ_j − α∇f_m(θ_j) + β(θ_j − θ_{j−1})
+                for i in 0..dim {
+                    let t = self.local_theta[i];
+                    self.local_theta[i] = t - cfg.alpha * self.local_grad[i]
+                        + cfg.beta * (t - self.local_prev[i]);
+                    self.local_prev[i] = t;
+                }
+            }
+        }
+        loss
     }
 
     /// Measurement-only round for a worker outside the scheduled set
@@ -628,6 +714,71 @@ mod tests {
         // … while the gradient visited half the rows
         assert_eq!(rm.batch_frac, 0.5);
         assert_eq!(rf.batch_frac, 1.0);
+    }
+
+    #[test]
+    fn local_steps_report_the_sum_of_trajectory_gradients() {
+        // quadratic shard: ∇f(θ) = θ − c.  K = 2, β = 0:
+        // θ₁ = θ₀ − α(θ₀ − c); pseudo-gradient = (θ₀−c) + (θ₁−c)
+        let (alpha, c) = (0.25, 3.0);
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![c] }))
+            .with_local_steps(LocalStepCfg { k_local: 2, alpha, beta: 0.0 });
+        let th0 = 1.0_f64;
+        let r = w.round(&[th0], 0.0, &NeverCensor, 1);
+        let g0 = th0 - c;
+        let th1 = th0 - alpha * g0;
+        let expect = g0 + (th1 - c);
+        assert_eq!(r.delta.to_dense(1)[0].to_bits(), expect.to_bits());
+        assert_eq!(r.batch_frac, 2.0);
+        // loss is reported at the broadcast iterate, not a local one
+        assert_eq!(r.loss.to_bits(), (0.5 * g0 * g0).to_bits());
+    }
+
+    #[test]
+    fn local_momentum_follows_the_heavy_ball_recursion() {
+        let (alpha, beta, c) = (0.2, 0.5, 4.0);
+        let mut w = Worker::new(0, Box::new(Toy { c: vec![c] }))
+            .with_local_steps(LocalStepCfg { k_local: 3, alpha, beta });
+        // reference trajectory, same op order as the worker's
+        let mut th = 2.0_f64;
+        let mut prev = th;
+        let mut sum = 0.0_f64;
+        for j in 0..3 {
+            let g = th - c;
+            if j == 0 {
+                sum = g;
+            } else {
+                sum += g;
+            }
+            let t = th;
+            th = t - alpha * g + beta * (t - prev);
+            prev = t;
+        }
+        let r = w.round(&[2.0], 0.0, &NeverCensor, 1);
+        assert_eq!(r.delta.to_dense(1)[0].to_bits(), sum.to_bits());
+        assert_eq!(r.batch_frac, 3.0);
+    }
+
+    #[test]
+    fn one_local_step_is_bitwise_the_plain_worker() {
+        let mut plain = Worker::new(0, Box::new(Toy { c: vec![1.0, -2.0] }));
+        let mut local = Worker::new(0, Box::new(Toy { c: vec![1.0, -2.0] }))
+            .with_local_steps(LocalStepCfg {
+                k_local: 1,
+                alpha: 0.1,
+                beta: 0.4,
+            });
+        let censor = GradDiffCensor { epsilon1: 0.5 };
+        for (k, th) in
+            [[0.0, 0.0], [0.3, 0.1], [0.3, 0.1]].iter().enumerate()
+        {
+            let a = plain.round(th, 0.01, &censor, k + 1);
+            let b = local.round(th, 0.01, &censor, k + 1);
+            assert_eq!(a.decision, b.decision, "k={}", k + 1);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.delta.to_dense(2), b.delta.to_dense(2));
+            assert_eq!(b.batch_frac, 1.0);
+        }
     }
 
     #[test]

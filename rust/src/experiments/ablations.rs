@@ -16,11 +16,11 @@ use crate::coordinator::{
     run_with_rules, AsyncConfig, ComputeModel, EngineKind, Participation,
     RunConfig, SerialPool, Server,
 };
-use crate::net::LatencyModel;
+use crate::net::{DownlinkSpec, LatencyModel};
 use crate::metrics::csv;
 use crate::optim::censor::{AbsoluteCensor, PeriodicCensor};
 use crate::optim::{
-    CensorRule, GradDiffCensor, Method, MethodParams,
+    CensorRule, GradDiffCensor, Method, MethodParams, MethodSpec,
 };
 use crate::spec::{
     CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec, RunSpec,
@@ -432,26 +432,41 @@ fn run_custom(
 }
 
 /// Ablation F: censored Nesterov (CNAG) vs CHB vs censored GD — the
-/// censor rule composes with any momentum scheme.
+/// censor rule composes with any momentum scheme.  Each variant is a
+/// [`MethodSpec`] cell on the declarative grid (the rule-injection
+/// side door this ablation used to need is pinned bit-identical by
+/// `nesterov_grid_matches_the_rule_injection_side_door`).
 pub fn nesterov(out_dir: &Path, quick: bool) -> Result<()> {
-    use crate::optim::{GdRule, HeavyBallRule, NesterovRule, ServerRule};
     let p = synth_linreg_problem(0xAB6);
     let f_star = p.f_star().unwrap();
     let iters = if quick { 800 } else { 3_000 };
     let alpha = 1.0 / p.l_global;
-    let eps1 = crate::optim::censor::epsilon1_scaled(0.1, alpha, p.m_workers());
-    let censor: Arc<dyn CensorRule> =
-        Arc::new(GradDiffCensor { epsilon1: eps1 });
     println!("\n── ablation: censored momentum family (synthetic linreg)");
-    let rules: Vec<(&str, Box<dyn ServerRule>)> = vec![
-        ("C-GD (LAG)", Box::new(GdRule { alpha })),
-        ("CHB (paper)", Box::new(HeavyBallRule::new(alpha, 0.4, p.dim()))),
-        ("C-NAG", Box::new(NesterovRule::new(alpha, 0.4, p.dim()))),
+    let cases: [(&str, MethodSpec); 3] = [
+        ("C-GD (LAG)", MethodSpec::Classic(Method::Lag)),
+        ("CHB (paper)", MethodSpec::Classic(Method::Chb)),
+        ("C-NAG", MethodSpec::Nesterov { censored: true }),
     ];
     let mut rows = Vec::new();
-    for (label, rule) in rules {
-        let t = run_custom(&p, rule, Arc::clone(&censor), label, iters,
-                           Some((f_star, 1e-9)));
+    for (label, method) in cases {
+        let spec = RunSpec {
+            method,
+            params: ParamSpec {
+                alpha: Some(alpha),
+                beta: 0.4,
+                epsilon: EpsilonSpec::Scaled { c: 0.1 },
+            },
+            iters,
+            stop: crate::spec::StopSpec::ObjErr {
+                tol: 1e-9,
+                f_star: Some(f_star),
+            },
+            ..RunSpec::new(p.task, &p.dataset)
+        };
+        let t = Session::from_parts(spec, p.clone())
+            .expect("valid ablation spec")
+            .run()
+            .trace;
         println!(
             "  {label:<12} comms {:>6}  iters {:>5}  final err {:.3e}",
             t.total_comms(),
@@ -831,7 +846,7 @@ pub fn stochastic(out_dir: &Path, quick: bool) -> Result<()> {
         for (label, method, censor, batch) in regimes {
             let spec = RunSpec {
                 label: Some(label.to_string()),
-                method,
+                method: method.into(),
                 params: ParamSpec {
                     alpha: Some(alpha),
                     beta: 0.4,
@@ -894,6 +909,167 @@ pub fn stochastic(out_dir: &Path, quick: bool) -> Result<()> {
             "final_loss",
             "target_loss",
             "epochs",
+        ],
+        &rows,
+    )
+}
+
+/// Ablation K: the method family × downlink grid — bits-to-accuracy
+/// counting BOTH directions.
+///
+/// Every cell is one [`RunSpec`]: the method axis picks the grid
+/// variant (classic CHB, K = 4 censored local steps, censored Adam),
+/// the censor axis turns rule (8) on/off, and the downlink axis makes
+/// the broadcast direction paid (8-bit packed quantizer with error
+/// feedback) or free-in-f64 (`none`).  The summary CSV reports, per
+/// (task, method, censor, downlink) cell, the cumulative uplink,
+/// downlink, and total bits spent to first reach the accuracy target
+/// (90 % of the initial objective error eliminated for the convex
+/// tasks; half the initial loss for the nonconvex NN).
+///
+/// The headline comparison: once the downlink is metered, K-step
+/// local descent amortizes each broadcast over K heavy-ball updates,
+/// so a censored local-steps (or censored-Adam) cell reaches the
+/// target at lower *total* bits than censored HB.
+pub fn methods(out_dir: &Path, quick: bool) -> Result<()> {
+    let iters = if quick { 500 } else { 2_000 };
+    let dir = out_dir.join("ablation_methods");
+    println!("\n── ablation: method family × downlink codec (all tasks)");
+    // (label, grid cell, fixed α override — Adam's step is scale-free,
+    // the descent methods use 0.5/L per problem)
+    let methods: [(&str, MethodSpec, Option<f64>); 3] = [
+        ("chb", MethodSpec::Classic(Method::Chb), None),
+        ("local4", MethodSpec::local_steps(4), None),
+        ("cadam", MethodSpec::censored_adam(), Some(0.1)),
+    ];
+    let downlinks: [(&str, DownlinkSpec); 2] = [
+        ("none", DownlinkSpec::None),
+        ("int8-ef", DownlinkSpec::Int { bits: 8, error_feedback: true }),
+    ];
+    let mut rows = Vec::new();
+    for (ti, task) in [
+        TaskKind::LinReg,
+        TaskKind::LogReg,
+        TaskKind::Lasso,
+        TaskKind::Nn,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let m = 4usize;
+        let l_m: Vec<f64> =
+            (0..m).map(|i| (1.0 + 0.5 * i as f64).powi(2)).collect();
+        let per_worker = crate::data::synthetic::per_worker_rescaled(
+            0xAB20 + ti as u64,
+            m,
+            96,
+            10,
+            &l_m,
+        );
+        let lam = match task {
+            TaskKind::Lasso => 0.05,
+            TaskKind::LogReg | TaskKind::Nn => 0.01,
+            TaskKind::LinReg => 0.0,
+        };
+        let p = Problem::from_worker_datasets(task, "methods", &per_worker, lam);
+        let f_star = p.f_star();
+        let f0 = super::fstar::objective(&p, &p.theta0());
+        let target = match f_star {
+            Some(fs) => fs + 0.1 * (f0 - fs),
+            None => 0.5 * f0,
+        };
+        for (mname, method, alpha_fixed) in methods {
+            for censor_on in [true, false] {
+                let censor = if censor_on {
+                    CensorSpec::MethodDefault
+                } else {
+                    CensorSpec::Never
+                };
+                for (dname, downlink) in downlinks {
+                    let spec = RunSpec {
+                        label: Some(format!("{mname}-{dname}")),
+                        method,
+                        params: ParamSpec {
+                            alpha: Some(
+                                alpha_fixed.unwrap_or(0.5 / p.l_global),
+                            ),
+                            beta: 0.4,
+                            epsilon: EpsilonSpec::Scaled { c: 0.1 },
+                        },
+                        censor,
+                        downlink,
+                        iters,
+                        lambda: p.lambda_global(),
+                        ..RunSpec::new(task, &p.dataset)
+                    };
+                    let t = Session::from_parts(spec, p.clone())
+                        .expect("valid ablation spec")
+                        .run()
+                        .trace;
+                    let last = t.iters.last();
+                    let up_total = last.map_or(0, |s| s.bits_cum);
+                    let down_total = last.map_or(0, |s| s.down_bits_cum);
+                    let epochs = last.map_or(0.0, |s| s.epoch);
+                    let hit = t.iters.iter().find(|s| s.loss <= target);
+                    let (k_hit, up_hit, down_hit, total_hit) = hit
+                        .map(|s| {
+                            (
+                                s.k.to_string(),
+                                s.bits_cum.to_string(),
+                                s.down_bits_cum.to_string(),
+                                (s.bits_cum + s.down_bits_cum).to_string(),
+                            )
+                        })
+                        .unwrap_or_else(|| {
+                            ("-".into(), "-".into(), "-".into(), "-".into())
+                        });
+                    println!(
+                        "  {:<7} {mname:<7} censor={:<3} down={dname:<8} \
+                         comms {:>6}  total bits→target {:>11}  final f \
+                         {:.4e}",
+                        task.name(),
+                        if censor_on { "on" } else { "off" },
+                        t.total_comms(),
+                        total_hit,
+                        t.final_loss(),
+                    );
+                    rows.push(vec![
+                        task.name().to_string(),
+                        mname.to_string(),
+                        (if censor_on { "on" } else { "off" }).to_string(),
+                        dname.to_string(),
+                        t.total_comms().to_string(),
+                        format!("{epochs:.3}"),
+                        up_total.to_string(),
+                        down_total.to_string(),
+                        k_hit,
+                        up_hit,
+                        down_hit,
+                        total_hit,
+                        format!("{:.8e}", t.final_loss()),
+                        format!("{target:.8e}"),
+                    ]);
+                }
+            }
+        }
+    }
+    csv::write_table(
+        &dir.join("summary.csv"),
+        &[
+            "task",
+            "method",
+            "censor",
+            "downlink",
+            "comms",
+            "epochs",
+            "uplink_bits_total",
+            "downlink_bits_total",
+            "k_to_target",
+            "uplink_bits_to_target",
+            "downlink_bits_to_target",
+            "total_bits_to_target",
+            "final_loss",
+            "target_loss",
         ],
         &rows,
     )
@@ -1000,10 +1176,62 @@ pub fn all(out_dir: &Path, quick: bool) -> Result<()> {
     failure_injection(out_dir, quick)?;
     compression(out_dir, quick)?;
     ladder(out_dir, quick)?;
+    methods(out_dir, quick)?;
     nesterov(out_dir, quick)?;
     adaptive_epsilon(out_dir, quick)?;
     participation_sweep(out_dir, quick)?;
     stochastic(out_dir, quick)?;
     async_heterogeneity(out_dir, quick)?;
     cohort_sweep(out_dir, quick)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::NesterovRule;
+
+    /// The grid's C-NAG cell replays the rule-injection side door it
+    /// replaced, bit for bit: `MethodSpec::Nesterov { censored }`
+    /// through `Session` ≡ `run_custom(NesterovRule, GradDiffCensor)`.
+    #[test]
+    fn nesterov_grid_matches_the_rule_injection_side_door() {
+        let p = synth_linreg_problem(0xAB6);
+        let alpha = 1.0 / p.l_global;
+        let iters = 60;
+        let eps1 =
+            crate::optim::censor::epsilon1_scaled(0.1, alpha, p.m_workers());
+        let side_door = run_custom(
+            &p,
+            Box::new(NesterovRule::new(alpha, 0.4, p.dim())),
+            Arc::new(GradDiffCensor { epsilon1: eps1 }),
+            "CNAG",
+            iters,
+            None,
+        );
+        let spec = RunSpec {
+            method: MethodSpec::Nesterov { censored: true },
+            params: ParamSpec {
+                alpha: Some(alpha),
+                beta: 0.4,
+                epsilon: EpsilonSpec::Scaled { c: 0.1 },
+            },
+            iters,
+            ..RunSpec::new(p.task, &p.dataset)
+        };
+        let grid = Session::from_parts(spec, p.clone())
+            .expect("valid grid spec")
+            .run()
+            .trace;
+        assert_eq!(side_door.iterations(), grid.iterations());
+        for (a, b) in side_door.iters.iter().zip(&grid.iters) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "loss differs at k={}",
+                a.k
+            );
+            assert_eq!(a.comms_round, b.comms_round, "comms at k={}", a.k);
+            assert_eq!(a.bits_cum, b.bits_cum, "uplink bits at k={}", a.k);
+        }
+    }
 }

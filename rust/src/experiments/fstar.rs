@@ -194,7 +194,7 @@ mod tests {
     /// Run `method` at α = 1/L for `iters` through the spec layer.
     fn reference_run(p: &Problem, method: Method, iters: usize) -> f64 {
         let spec = RunSpec {
-            method,
+            method: method.into(),
             params: ParamSpec {
                 alpha: Some(1.0 / p.l_global),
                 ..ParamSpec::default()

@@ -101,7 +101,7 @@ impl Protocol {
     ) -> RunSpec {
         RunSpec {
             lambda: problem.lambda_global(),
-            method,
+            method: method.into(),
             params: ParamSpec {
                 alpha: Some(self.alpha),
                 beta: self.beta,

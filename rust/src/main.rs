@@ -32,8 +32,8 @@ use chb_fed::coordinator::{
 };
 use chb_fed::data::batch::BatchSchedule;
 use chb_fed::experiments::{ablations, figures, tables};
-use chb_fed::net::LatencyModel;
-use chb_fed::optim::Method;
+use chb_fed::net::{DownlinkSpec, LatencyModel};
+use chb_fed::optim::MethodSpec;
 use chb_fed::spec::{
     BackendKind, CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec,
     Registry, RunSpec, Session,
@@ -50,9 +50,10 @@ chb-fed — Censored Heavy Ball federated learning (paper reproduction)
 USAGE:
   chb-fed exp <id> [--out DIR] [--data DIR] [--full]
       ids: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11
-           fig12 table1 table2 table3 ablations all
+           fig12 table1 table2 table3 ablations ablation-methods all
   chb-fed run [--spec FILE] [--dump-spec]
               [--task T] [--dataset D] [--method M] [--alpha A] [--beta B]
+              [--local-steps K]
               [--eps-c C | --eps-abs E] [--iters N] [--lambda L]
               [--backend rust|pjrt]
               [--engine serial|threaded|rayon|async|wire] [--threads N]
@@ -64,8 +65,10 @@ USAGE:
                         variance-scaled]
               [--censor-tau T] [--censor-period P] [--censor-tau0 T]
               [--censor-rho R]
-              [--compress none|quant|topk|fp32|fp16|int] [--quant-bits B]
-              [--topk-k K] [--error-feedback]
+              [--compress none|quant|topk|fp32|fp16|int|topk-int]
+              [--quant-bits B] [--topk-k K] [--error-feedback]
+              [--downlink-compress none|fp32|fp16|int] [--downlink-bits B]
+              [--downlink-error-feedback]
               [--drop-prob P] [--drop-seed S] [--label NAME] [--comm-map]
               [--compute-model uniform|pareto] [--compute-us US]
               [--pareto-shape A] [--compute-seed S] [--max-staleness S]
@@ -95,10 +98,23 @@ USAGE:
       epoch columns.  rust backend only.
       packed codecs: fp32/fp16 uplink bit-packed narrowed fields
       (32/16 bits per coordinate); int uplinks --quant-bits-wide
-      integer levels plus one f32 scale header.  --error-feedback
-      carries each round's rounding error into the next uplink
-      (per-worker residual), recovering target accuracy at a fraction
-      of the bits — see EXPERIMENTS.md §Codecs.
+      integer levels plus one f32 scale header; topk-int keeps the
+      --topk-k largest coordinates and packs the survivors to
+      --quant-bits-wide levels (32 + (32+bits)·nnz on the wire).
+      --error-feedback carries each round's rounding error into the
+      next uplink (per-worker residual), recovering target accuracy at
+      a fraction of the bits — see EXPERIMENTS.md §Codecs.
+      method grid: --method also accepts nag/cnag (Nesterov server
+      rule), local-steps (each worker runs K censored heavy-ball
+      steps between uplinks; --local-steps K composes with any classic
+      base, default K=4), and censored-adam/cadam (server-side Adam on
+      the censored aggregate).  See EXPERIMENTS.md §Methods.
+      downlink codec: --downlink-compress meters the broadcast
+      direction (fp32/fp16/int --downlink-bits levels, optional
+      --downlink-error-feedback server-side residual); every trace and
+      manifest then carries downlink_bits_cum next to the uplink
+      column.  none (default) keeps the legacy free-f64 broadcast and
+      is bit-identical to pre-downlink runs.
       async engine: virtual-clock discrete-event simulation; workers
       draw per-round compute times (uniform, or Pareto heavy tails),
       messages order through the latency model, and the server folds
@@ -207,6 +223,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             "batch-replace",
             "dump-spec",
             "error-feedback",
+            "downlink-error-feedback",
             "smoke",
         ],
     )?;
@@ -289,6 +306,7 @@ fn run_experiment(
         "table2" => tables::table2(out, data, quick),
         "table3" => tables::table3(out, data, quick),
         "ablations" => ablations::all(out, quick),
+        "ablation-methods" => ablations::methods(out, quick),
         other => bail!("unknown experiment {other:?}"),
     };
     println!("[{id}: {:.1}s]", t.elapsed_secs());
@@ -335,8 +353,21 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
 
     let task = TaskKind::parse(&pick("task", "linreg"))
         .context("bad task (linreg|logreg|lasso|nn)")?;
-    let method = Method::parse(&pick("method", "chb"))
-        .context("bad method (gd|hb|lag|chb)")?;
+    let mut method = MethodSpec::parse(&pick("method", "chb")).context(
+        "bad method (gd|hb|lag|chb|nag|cnag|local-steps|censored-adam)",
+    )?;
+    if let Some(k) = pick_num("local-steps")? {
+        // wraps the parsed classic base (or overrides the default K of
+        // --method local-steps); the adaptive/Nesterov rules have no
+        // local-descent analogue on this grid
+        method = match method {
+            MethodSpec::Classic(base)
+            | MethodSpec::LocalSteps { base, .. } => {
+                MethodSpec::LocalSteps { base, k_local: k as usize }
+            }
+            _ => bail!("--local-steps only composes with gd|hb|lag|chb"),
+        };
+    }
     let params = ParamSpec {
         alpha: pick_num("alpha")?,
         beta: pick_num("beta")?.unwrap_or(0.4),
@@ -416,9 +447,30 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
             bits: pick_num("quant-bits")?.unwrap_or(8.0) as u32,
             error_feedback,
         },
+        "topk-int" => CodecSpec::TopKInt {
+            k: pick_num("topk-k")?.unwrap_or(25.0) as usize,
+            bits: pick_num("quant-bits")?.unwrap_or(8.0) as u32,
+        },
         other => bail!(
-            "bad --compress {other:?} (none|quant|topk|fp32|fp16|int)"
+            "bad --compress {other:?} \
+             (none|quant|topk|fp32|fp16|int|topk-int)"
         ),
+    };
+
+    // broadcast-direction codec: default keeps the downlink free in
+    // f64 (the paper's accounting and the bit-pinned legacy path)
+    let downlink_ef = args.flag("downlink-error-feedback");
+    let downlink = match pick("downlink-compress", "none").as_str() {
+        "none" => DownlinkSpec::None,
+        "fp32" => DownlinkSpec::Fp32 { error_feedback: downlink_ef },
+        "fp16" => DownlinkSpec::Fp16 { error_feedback: downlink_ef },
+        "int" => DownlinkSpec::Int {
+            bits: pick_num("downlink-bits")?.unwrap_or(8.0) as u32,
+            error_feedback: downlink_ef,
+        },
+        other => {
+            bail!("bad --downlink-compress {other:?} (none|fp32|fp16|int)")
+        }
     };
 
     let engine = match pick("engine", "serial").as_str() {
@@ -538,6 +590,7 @@ fn spec_from_flags(args: &Args) -> Result<RunSpec> {
         participation,
         batch,
         codec,
+        downlink,
         backend,
         iters: pick_num("iters")?.unwrap_or(500.0) as usize,
         drops: DropSpec {
@@ -1133,8 +1186,8 @@ fn cmd_list(args: &Args) -> Result<()> {
         Err(e) => println!("\nartifacts: unavailable ({e})"),
     }
     println!(
-        "\nexperiments: fig1..fig12, table1..table3, ablations, all \
-         (chb-fed exp <id>)"
+        "\nexperiments: fig1..fig12, table1..table3, ablations, \
+         ablation-methods, all (chb-fed exp <id>)"
     );
     Ok(())
 }

@@ -22,12 +22,12 @@ use super::Trace;
 pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
     let mut out = String::from(
         "k,loss,obj_err,comms_round,comms_cum,agg_grad_sq,step_sq,bits_cum,\
-         participants,vclock_us,stale_max,batch_frac,epoch\n",
+         participants,vclock_us,stale_max,batch_frac,epoch,downlink_bits_cum\n",
     );
     for (i, s) in trace.iters.iter().enumerate() {
         writeln!(
             out,
-            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{},{:.6},{},{:.6},{:.6}",
+            "{},{:.17e},{:.17e},{},{},{:.17e},{:.17e},{},{},{:.6},{},{:.6},{:.6},{}",
             s.k,
             s.loss,
             s.loss - f_star,
@@ -41,7 +41,8 @@ pub fn write_trace(path: &Path, trace: &Trace, f_star: f64) -> Result<()> {
             s.vclock_us,
             s.stale_max,
             s.batch_frac,
-            s.epoch
+            s.epoch,
+            s.down_bits_cum
         )
         .expect("String writes cannot fail");
     }
@@ -107,6 +108,7 @@ mod tests {
             agg_grad_sq: 1.0,
             step_sq: 0.5,
             bits_cum: 0,
+            down_bits_cum: 512,
             vclock_us: 1234.5,
             stale_max: 2,
             batch_frac: 0.25,
@@ -119,11 +121,11 @@ mod tests {
         let mut lines = text.lines();
         let header = lines.next().unwrap();
         assert!(header.starts_with("k,loss"));
-        assert!(header.ends_with("stale_max,batch_frac,epoch"));
+        assert!(header.ends_with("stale_max,batch_frac,epoch,downlink_bits_cum"));
         let row = lines.next().unwrap();
         assert!(row.starts_with("1,"));
         assert!(row.contains(",3,3,"));
-        assert!(row.ends_with(",1234.500000,2,0.250000,0.250000"));
+        assert!(row.ends_with(",1234.500000,2,0.250000,0.250000,512"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -23,6 +23,12 @@ pub struct IterStat {
     pub step_sq: f64,
     /// cumulative uplink payload bits (compression-aware)
     pub bits_cum: u64,
+    /// cumulative downlink payload bits: every scheduled worker's
+    /// broadcast charged per round (64·d uncompressed, the codec's
+    /// honest size under `downlink` compression) — kept separate from
+    /// `bits_cum` so the uplink-only ledger stays comparable with the
+    /// paper and with pre-downlink traces
+    pub down_bits_cum: u64,
     /// virtual-clock time (µs) at which this server step completed —
     /// event time in the async engine, accumulated [`LatencyModel`]
     /// round time in the synchronous engines
@@ -111,6 +117,16 @@ impl Trace {
         self.iters.last().map_or(0, |s| s.comms_cum)
     }
 
+    /// Total uplink payload bits over the whole run.
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.iters.last().map_or(0, |s| s.bits_cum)
+    }
+
+    /// Total downlink payload bits over the whole run.
+    pub fn total_downlink_bits(&self) -> u64 {
+        self.iters.last().map_or(0, |s| s.down_bits_cum)
+    }
+
     /// f(θ) at the final iteration (NaN for an empty trace).
     pub fn final_loss(&self) -> f64 {
         self.iters.last().map_or(f64::NAN, |s| s.loss)
@@ -174,6 +190,7 @@ mod tests {
             agg_grad_sq: 0.0,
             step_sq: 0.0,
             bits_cum: 0,
+            down_bits_cum: 0,
             vclock_us: 0.0,
             stale_max: 0,
             batch_frac: 1.0,

@@ -1,0 +1,283 @@
+//! The downlink channel: server → worker broadcasts are no longer
+//! free.
+//!
+//! The paper charges only uplink transmissions; a deployment pays for
+//! both directions.  This module makes the broadcast a first-class
+//! channel: every engine *accounts* downlink bits (64·d per scheduled
+//! worker per round when uncompressed — the `downlink_bits_cum` trace
+//! column), and the sync engines can additionally *compress* the
+//! broadcast through the same codec stack as the uplink
+//! ([`crate::compress`]), with optional server-side error feedback.
+//!
+//! Compression works on the model-delta stream: the server keeps a
+//! shared *view* θ̃ᵏ — the decoded iterate every worker holds — and
+//! each round encodes δ = θᵏ − θ̃ᵏ, folds the decode back into the
+//! view, and broadcasts the view.  Workers therefore all see the same
+//! (slightly stale) iterate, censor against the view's step ‖θ̃ᵏ −
+//! θ̃^{k−1}‖², and eq. (5)'s telescoping aggregate is untouched — the
+//! compression error enters as server-side iterate staleness, exactly
+//! dual to how uplink codecs enter as gradient staleness.  The first
+//! broadcast is the full-precision model sync (charged dense), so the
+//! view starts exact.
+//!
+//! With [`DownlinkSpec::None`] the channel is pass-through: the
+//! broadcast carries θᵏ itself and is charged
+//! [`dense_delta_bits`]`(d)` — runs are bit-identical to the
+//! pre-downlink code (pinned in `tests/engine_equivalence.rs`).
+
+use std::sync::Arc;
+
+use crate::compress::{
+    CodecScratch, Compressor, ErrorFeedback, PackedFp16, PackedFp32,
+    PackedInt, Payload,
+};
+use crate::linalg;
+
+use super::dense_delta_bits;
+
+/// The downlink-compression axis of a run spec.  `None` keeps the
+/// broadcast uncompressed (accounting only — the legacy-bitwise
+/// setting); the rest route the broadcast delta through the packed
+/// codec stack with optional server-side error feedback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DownlinkSpec {
+    /// uncompressed θ broadcast, charged 64 bits/coordinate
+    None,
+    /// f32 bit patterns (32 bits/coordinate)
+    Fp32 {
+        /// carry the narrowing error into the next broadcast
+        error_feedback: bool,
+    },
+    /// IEEE half precision (16 bits/coordinate)
+    Fp16 {
+        /// carry the rounding error into the next broadcast
+        error_feedback: bool,
+    },
+    /// bit-packed `bits`-wide uniform levels + f32 scale header
+    Int {
+        /// bits per coordinate (2..=32)
+        bits: u32,
+        /// carry the quantization error into the next broadcast
+        error_feedback: bool,
+    },
+}
+
+impl DownlinkSpec {
+    /// Spec-file name of the variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DownlinkSpec::None => "none",
+            DownlinkSpec::Fp32 { .. } => "fp32",
+            DownlinkSpec::Fp16 { .. } => "fp16",
+            DownlinkSpec::Int { .. } => "int",
+        }
+    }
+
+    /// Is this the pass-through (accounting-only) channel?
+    pub fn is_none(&self) -> bool {
+        *self == DownlinkSpec::None
+    }
+
+    /// Materialize the broadcast codec (None for pass-through).
+    pub fn build_codec(&self) -> Option<Box<dyn Compressor>> {
+        match *self {
+            DownlinkSpec::None => None,
+            DownlinkSpec::Fp32 { error_feedback: false } => {
+                Some(Box::new(PackedFp32))
+            }
+            DownlinkSpec::Fp32 { error_feedback: true } => {
+                Some(Box::new(ErrorFeedback(PackedFp32)))
+            }
+            DownlinkSpec::Fp16 { error_feedback: false } => {
+                Some(Box::new(PackedFp16))
+            }
+            DownlinkSpec::Fp16 { error_feedback: true } => {
+                Some(Box::new(ErrorFeedback(PackedFp16)))
+            }
+            DownlinkSpec::Int { bits, error_feedback: false } => {
+                Some(Box::new(PackedInt { bits }))
+            }
+            DownlinkSpec::Int { bits, error_feedback: true } => {
+                Some(Box::new(ErrorFeedback(PackedInt { bits })))
+            }
+        }
+    }
+}
+
+/// Simulated framing of one broadcast: payload bits rounded up to
+/// bytes, plus the 16-byte header [`crate::coordinator::protocol::
+/// broadcast_bytes`] charges (step_sq + round index).  For the
+/// uncompressed channel this is exactly `broadcast_bytes(d)` = 8d+16,
+/// so the sim-clock columns are unchanged under `downlink = none`.
+pub fn downlink_frame_bytes(bits: u64) -> u64 {
+    bits.div_ceil(8) + 16
+}
+
+/// Server-side state of the broadcast channel: the codec (if any),
+/// its scratch/error-feedback residual, and the shared worker view.
+pub struct DownlinkChannel {
+    codec: Option<Box<dyn Compressor>>,
+    scratch: CodecScratch,
+    payload: Payload,
+    view: Vec<f64>,
+    prev_view: Vec<f64>,
+    delta: Vec<f64>,
+    initialized: bool,
+}
+
+impl DownlinkChannel {
+    /// Channel for `spec` (pass-through when `spec` is `None`).
+    pub fn new(spec: DownlinkSpec) -> Self {
+        Self {
+            codec: spec.build_codec(),
+            scratch: CodecScratch::default(),
+            payload: Payload::default(),
+            view: Vec::new(),
+            prev_view: Vec::new(),
+            delta: Vec::new(),
+            initialized: false,
+        }
+    }
+
+    /// Is this channel actually compressing (vs. accounting only)?
+    pub fn is_compressing(&self) -> bool {
+        self.codec.is_some()
+    }
+
+    /// Encode one round's broadcast.  Returns `(view, view_step_sq,
+    /// bits)`: the iterate workers receive, the censor step reference
+    /// ‖θ̃ᵏ − θ̃^{k−1}‖² matching it, and the charged payload bits for
+    /// one worker's downlink.
+    ///
+    /// Pass-through channels return `theta` itself, `step_sq`
+    /// unchanged, and the dense charge — bit-identical to the
+    /// pre-downlink broadcast.
+    pub fn encode(
+        &mut self,
+        theta: &[f64],
+        step_sq: f64,
+    ) -> (Arc<Vec<f64>>, f64, u64) {
+        let d = theta.len();
+        let Some(codec) = &self.codec else {
+            return (Arc::new(theta.to_vec()), step_sq, dense_delta_bits(d));
+        };
+        if !self.initialized {
+            // round 0: full-precision model sync — view starts exact
+            self.initialized = true;
+            self.view.clear();
+            self.view.extend_from_slice(theta);
+            self.prev_view.clear();
+            self.prev_view.extend_from_slice(theta);
+            self.delta.resize(d, 0.0);
+            return (Arc::new(self.view.clone()), step_sq, dense_delta_bits(d));
+        }
+        // δ = θᵏ − θ̃^{k−1}; compress, then fold the *decode* into the
+        // view so server and workers track the same iterate
+        linalg::sub_into(theta, &self.view, &mut self.delta);
+        let bits =
+            codec.compress_into(&self.delta, &mut self.scratch, &mut self.payload);
+        self.prev_view.copy_from_slice(&self.view);
+        self.payload.fold_into(&mut self.view);
+        let view_step_sq: f64 = self
+            .view
+            .iter()
+            .zip(&self.prev_view)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        (Arc::new(self.view.clone()), view_step_sq, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough_channel_is_identity() {
+        let mut ch = DownlinkChannel::new(DownlinkSpec::None);
+        assert!(!ch.is_compressing());
+        let theta = vec![1.5, -2.0, 0.25];
+        let (view, sq, bits) = ch.encode(&theta, 7.5);
+        assert_eq!(*view, theta);
+        assert_eq!(sq, 7.5);
+        assert_eq!(bits, dense_delta_bits(3));
+        assert_eq!(downlink_frame_bytes(bits), (3 * 8 + 16) as u64);
+    }
+
+    #[test]
+    fn first_compressed_broadcast_is_exact_dense_sync() {
+        let spec = DownlinkSpec::Int { bits: 8, error_feedback: true };
+        let mut ch = DownlinkChannel::new(spec);
+        assert!(ch.is_compressing());
+        let theta = vec![0.5, -0.25, 3.0, 0.0];
+        let (view, sq, bits) = ch.encode(&theta, 0.0);
+        for (a, b) in theta.iter().zip(view.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(sq, 0.0);
+        assert_eq!(bits, dense_delta_bits(4));
+    }
+
+    #[test]
+    fn compressed_view_tracks_theta_within_codec_error() {
+        let spec = DownlinkSpec::Int { bits: 8, error_feedback: true };
+        let mut ch = DownlinkChannel::new(spec);
+        let d = 16;
+        let mut theta = vec![0.0; d];
+        let mut rng = crate::rng::Xoshiro256::new(0xD0FF);
+        ch.encode(&theta, 0.0);
+        for _ in 0..50 {
+            for t in theta.iter_mut() {
+                *t += 0.05 * rng.next_gaussian();
+            }
+            let (view, sq, bits) = ch.encode(&theta, 1.0);
+            assert!(sq.is_finite() && sq >= 0.0);
+            // int8 payload: 32-bit header + 8 bits/coordinate
+            assert_eq!(bits, 32 + 8 * d as u64);
+            let err: f64 = view
+                .iter()
+                .zip(&theta)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            assert!(err < 1e-2, "view diverged from theta: {err}");
+        }
+    }
+
+    #[test]
+    fn fp32_roundtrip_view_is_near_exact() {
+        let mut ch =
+            DownlinkChannel::new(DownlinkSpec::Fp32 { error_feedback: false });
+        let theta0 = vec![1.0, 2.0];
+        ch.encode(&theta0, 0.0);
+        let theta1 = vec![1.5, 2.25]; // f32-exact deltas
+        let (view, _, bits) = ch.encode(&theta1, 0.0);
+        assert_eq!(bits, 32 * 2);
+        for (a, b) in view.iter().zip(&theta1) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn codec_table_matches_spec() {
+        assert!(DownlinkSpec::None.build_codec().is_none());
+        assert!(DownlinkSpec::None.is_none());
+        for (spec, want) in [
+            (DownlinkSpec::Fp32 { error_feedback: false }, "fp32"),
+            (DownlinkSpec::Fp16 { error_feedback: false }, "fp16"),
+            (DownlinkSpec::Int { bits: 8, error_feedback: false }, "int"),
+        ] {
+            assert_eq!(spec.build_codec().unwrap().name(), spec.name());
+            assert_eq!(spec.name(), want);
+        }
+        for spec in [
+            DownlinkSpec::Fp32 { error_feedback: true },
+            DownlinkSpec::Fp16 { error_feedback: true },
+            DownlinkSpec::Int { bits: 4, error_feedback: true },
+        ] {
+            assert_eq!(
+                spec.build_codec().unwrap().name(),
+                "error-feedback"
+            );
+        }
+    }
+}

@@ -18,7 +18,10 @@ use std::collections::BinaryHeap;
 
 use crate::rng::Xoshiro256;
 
+pub mod downlink;
 mod wheel;
+
+pub use downlink::{DownlinkChannel, DownlinkSpec};
 
 /// Per-link accounting.
 #[derive(Clone, Copy, Debug, Default)]
@@ -54,6 +57,16 @@ pub fn dense_delta_bits(d: usize) -> u64 {
 /// of 64·d.
 pub fn sparse_delta_bits(nnz: usize) -> u64 {
     (32 + 32) * nnz as u64
+}
+
+/// Wire size (bits) of a sparse delta whose `nnz` kept values are
+/// quantized to `width`-bit levels: a 32-bit (f32) scale header plus,
+/// per kept coordinate, a 32-bit index and a `width`-bit value — the
+/// honest accounting for the top-k × int-n hybrid codec
+/// ([`crate::compress::TopKInt`]), which beats plain top-k's 64·nnz
+/// whenever width < 32.
+pub fn sparse_packed_delta_bits(width: u32, nnz: usize) -> u64 {
+    32 + (32 + u64::from(width)) * nnz as u64
 }
 
 /// Wire size (bits) of a bit-packed delta: `width` bits per
@@ -502,6 +515,14 @@ mod tests {
         assert_eq!(sparse_delta_bits(0), 0);
         // sparse beats dense whenever fewer than d coordinates are kept
         assert!(sparse_delta_bits(25) < dense_delta_bits(784));
+    }
+
+    #[test]
+    fn sparse_packed_bits_charge_header_index_and_width() {
+        assert_eq!(sparse_packed_delta_bits(8, 25), 32 + 40 * 25);
+        assert_eq!(sparse_packed_delta_bits(8, 0), 32);
+        // quantizing the kept values beats plain top-k for width < 32
+        assert!(sparse_packed_delta_bits(8, 100) < sparse_delta_bits(100));
     }
 
     #[test]

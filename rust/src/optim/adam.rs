@@ -1,0 +1,152 @@
+//! Censored Adam: a server-side adaptive step on the lazy aggregate.
+//!
+//! "Toward Communication Efficient Adaptive Gradient Method" shows
+//! censored/lazy aggregation composes with Adam-style preconditioning:
+//! workers keep the grad-diff skip rule (8) unchanged, the server keeps
+//! the telescoping aggregate ∇ᵏ of eq. (5), and the *update* replaces
+//! the heavy-ball step with bias-corrected Adam on ∇ᵏ:
+//!
+//! ```text
+//! m ← β₁ m + (1−β₁) ∇ᵏ         v ← β₂ v + (1−β₂) (∇ᵏ)²
+//! θ ← θ − α · (m / (1−β₁ᵗ)) / (√(v̂ / (1−β₂ᵗ)) + ε)
+//! ```
+//!
+//! with `v̂ = max-so-far(v)` when AMSGrad is on, else `v̂ = v`.  The
+//! moment vectors are runtime state (not checkpoint-serialized), so the
+//! spec layer rejects the combination with checkpoint/restore axes.
+
+use super::ServerRule;
+
+/// Bias-corrected (optionally AMSGrad) Adam as a [`ServerRule`].
+pub struct CensoredAdamRule {
+    /// step size α
+    pub alpha: f64,
+    /// first-moment decay β₁
+    pub beta1: f64,
+    /// second-moment decay β₂
+    pub beta2: f64,
+    /// denominator stabilizer ε
+    pub eps: f64,
+    /// monotone second moment (AMSGrad)?
+    pub amsgrad: bool,
+    t: u64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    vmax: Vec<f64>,
+}
+
+impl CensoredAdamRule {
+    /// Rule for a `dim`-dimensional iterate; moments start at zero.
+    pub fn new(
+        alpha: f64,
+        beta1: f64,
+        beta2: f64,
+        eps: f64,
+        amsgrad: bool,
+        dim: usize,
+    ) -> Self {
+        Self {
+            alpha,
+            beta1,
+            beta2,
+            eps,
+            amsgrad,
+            t: 0,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            vmax: vec![0.0; dim],
+        }
+    }
+}
+
+impl ServerRule for CensoredAdamRule {
+    fn step(&mut self, theta: &mut [f64], theta_prev: &mut [f64], agg_grad: &[f64]) {
+        // rotate first so theta_step_sq() sees θ^{k+1} − θ^k like the
+        // other rules
+        theta_prev.copy_from_slice(theta);
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..theta.len() {
+            let g = agg_grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let v = if self.amsgrad {
+                if self.v[i] > self.vmax[i] {
+                    self.vmax[i] = self.v[i];
+                }
+                self.vmax[i]
+            } else {
+                self.v[i]
+            };
+            let mhat = self.m[i] / bc1;
+            let vhat = v / bc2;
+            theta[i] -= self.alpha * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "censored-adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_signed_alpha_step() {
+        // t=1: m/bc1 = g, v/bc2 = g² → θ −= α·g/(|g|+ε) ≈ α·sign(g)
+        let mut rule = CensoredAdamRule::new(0.1, 0.9, 0.999, 1e-8, false, 2);
+        let mut th = vec![1.0, -1.0];
+        let mut tp = vec![0.0, 0.0];
+        rule.step(&mut th, &mut tp, &[4.0, -0.5]);
+        assert_eq!(tp, vec![1.0, -1.0]);
+        assert!((th[0] - (1.0 - 0.1 * 4.0 / (4.0 + 1e-8))).abs() < 1e-12);
+        assert!((th[1] - (-1.0 + 0.1 * 0.5 / (0.5 + 1e-8))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_gradient_leaves_theta_fixed() {
+        let mut rule = CensoredAdamRule::new(0.1, 0.9, 0.999, 1e-8, true, 1);
+        let mut th = vec![3.0];
+        let mut tp = vec![2.0];
+        rule.step(&mut th, &mut tp, &[0.0]);
+        assert_eq!(th, vec![3.0]);
+        assert_eq!(tp, vec![3.0]);
+    }
+
+    #[test]
+    fn amsgrad_keeps_monotone_denominator() {
+        let mut ams = CensoredAdamRule::new(0.1, 0.9, 0.5, 1e-8, true, 1);
+        let mut plain = CensoredAdamRule::new(0.1, 0.9, 0.5, 1e-8, false, 1);
+        let (mut th_a, mut tp_a) = (vec![0.0], vec![0.0]);
+        let (mut th_p, mut tp_p) = (vec![0.0], vec![0.0]);
+        // big gradient then small: AMSGrad's v̂ stays at the big value,
+        // so its second step is strictly smaller in magnitude
+        for rule_io in [
+            (&mut ams, &mut th_a, &mut tp_a),
+            (&mut plain, &mut th_p, &mut tp_p),
+        ] {
+            let (rule, th, tp) = rule_io;
+            rule.step(th, tp, &[10.0]);
+            rule.step(th, tp, &[0.1]);
+        }
+        let step_a = (th_a[0] - tp_a[0]).abs();
+        let step_p = (th_p[0] - tp_p[0]).abs();
+        assert!(step_a < step_p);
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // f(θ) = ½θ², ∇ = θ; 200 Adam steps from θ=5 should land near 0
+        let mut rule = CensoredAdamRule::new(0.2, 0.9, 0.999, 1e-8, false, 1);
+        let mut th = vec![5.0];
+        let mut tp = vec![5.0];
+        for _ in 0..200 {
+            let g = [th[0]];
+            rule.step(&mut th, &mut tp, &g);
+        }
+        assert!(th[0].abs() < 0.5, "theta = {}", th[0]);
+    }
+}

@@ -1,10 +1,17 @@
-//! Method descriptors: the four paper algorithms as data.
+//! Method descriptors: the paper algorithms — and the beyond-paper
+//! method grid — as data.
 //!
-//! A [`Method`] plus [`MethodParams`] fully determines a run; the
-//! coordinator materializes the server rule and censor rule from them.
+//! A [`Method`] plus [`MethodParams`] fully determines a classic run;
+//! the coordinator materializes the server rule and censor rule from
+//! them.  [`MethodSpec`] is the first-class method *grid* on top: the
+//! four classic methods (unchanged bitwise), censored Nesterov, K
+//! local steps between uplinks, and a censored-Adam server rule, each
+//! a `RunSpec::method` variant with typed validation of incompatible
+//! axes (see `spec::RunSpec::validate`).
 
 use super::{
-    CensorRule, GdRule, GradDiffCensor, HeavyBallRule, NeverCensor, ServerRule,
+    CensorRule, CensoredAdamRule, GdRule, GradDiffCensor, HeavyBallRule,
+    NesterovRule, NeverCensor, ServerRule,
 };
 
 /// The algorithms compared throughout §IV.
@@ -53,6 +60,160 @@ impl Method {
     /// Do workers apply the skip-transmission rule (8)?
     pub fn uses_censoring(self) -> bool {
         matches!(self, Method::Lag | Method::Chb)
+    }
+}
+
+/// Adam defaults (Kingma & Ba; what the censored-adam variant uses
+/// when a spec omits the moment coefficients).
+pub const ADAM_BETA1: f64 = 0.9;
+/// Second-moment decay default.
+pub const ADAM_BETA2: f64 = 0.999;
+/// Denominator-stabilizer default.
+pub const ADAM_EPS: f64 = 1e-8;
+
+/// Default K for `--method local-steps` when `--local-steps` is not
+/// given.
+pub const DEFAULT_K_LOCAL: usize = 4;
+
+/// The first-class method grid: what `RunSpec::method` holds.
+///
+/// `Classic` keeps the four paper methods byte-compatible (manifests
+/// encode them as the same plain lowercase string as before); the
+/// other variants are beyond-paper compositions that reuse the same
+/// censor/uplink/engine machinery:
+///
+/// * [`MethodSpec::Nesterov`] — the gradient-correction NAG server
+///   rule ([`NesterovRule`]), censored or not.
+/// * [`MethodSpec::LocalSteps`] — each worker runs `k_local` local
+///   GD/HB steps between uplinks and reports the *sum* of the local
+///   gradients (so `k_local = 1` reduces bitwise to the base method);
+///   censoring applies to the accumulated K-step delta, and epoch
+///   accounting advances by K gradient passes per round.
+/// * [`MethodSpec::CensoredAdam`] — a server-side bias-corrected Adam
+///   step on the lazily-aggregated ∇ᵏ of eq. (5) (the composition of
+///   the adaptive-gradient paper), with the grad-diff censor (8)
+///   unchanged on the worker side.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// one of the four paper methods, unchanged bitwise
+    Classic(Method),
+    /// (censored) Nesterov accelerated gradient, server side
+    Nesterov {
+        /// apply the grad-diff censor (8)?
+        censored: bool,
+    },
+    /// K local steps of the base method between uplinks
+    LocalSteps {
+        /// local/server update family (momentum + censor come from it)
+        base: Method,
+        /// local steps per round (1 = exactly the base method)
+        k_local: usize,
+    },
+    /// server-side Adam on the lazy aggregate, censored uplinks
+    CensoredAdam {
+        /// first-moment decay β₁
+        beta1: f64,
+        /// second-moment decay β₂
+        beta2: f64,
+        /// denominator stabilizer ε
+        eps: f64,
+        /// AMSGrad variant (monotone second moment)?
+        amsgrad: bool,
+    },
+}
+
+impl From<Method> for MethodSpec {
+    fn from(m: Method) -> MethodSpec {
+        MethodSpec::Classic(m)
+    }
+}
+
+impl MethodSpec {
+    /// Censored Adam with the standard coefficient defaults.
+    pub fn censored_adam() -> MethodSpec {
+        MethodSpec::CensoredAdam {
+            beta1: ADAM_BETA1,
+            beta2: ADAM_BETA2,
+            eps: ADAM_EPS,
+            amsgrad: false,
+        }
+    }
+
+    /// K censored-HB local steps (the grid's local-training default).
+    pub fn local_steps(k_local: usize) -> MethodSpec {
+        MethodSpec::LocalSteps { base: Method::Chb, k_local }
+    }
+
+    /// Paper-style label ("CHB", …, "NAG"/"CNAG", "LOCAL", "CADAM").
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodSpec::Classic(m) => m.name(),
+            MethodSpec::Nesterov { censored: false } => "NAG",
+            MethodSpec::Nesterov { censored: true } => "CNAG",
+            MethodSpec::LocalSteps { .. } => "LOCAL",
+            MethodSpec::CensoredAdam { .. } => "CADAM",
+        }
+    }
+
+    /// Parse a CLI method name: the four classic names plus
+    /// `nag`/`cnag`, `local-steps` (K from [`DEFAULT_K_LOCAL`]; the
+    /// CLI overrides it with `--local-steps`), and
+    /// `censored-adam`/`cadam`.
+    pub fn parse(s: &str) -> Option<MethodSpec> {
+        if let Some(m) = Method::parse(s) {
+            return Some(MethodSpec::Classic(m));
+        }
+        match s.to_ascii_lowercase().as_str() {
+            "nag" => Some(MethodSpec::Nesterov { censored: false }),
+            "cnag" => Some(MethodSpec::Nesterov { censored: true }),
+            "local-steps" | "local" => {
+                Some(MethodSpec::local_steps(DEFAULT_K_LOCAL))
+            }
+            "censored-adam" | "cadam" => Some(MethodSpec::censored_adam()),
+            _ => None,
+        }
+    }
+
+    /// Does the server update carry a momentum-type term?
+    pub fn uses_momentum(&self) -> bool {
+        match self {
+            MethodSpec::Classic(m) => m.uses_momentum(),
+            MethodSpec::Nesterov { .. } => true,
+            MethodSpec::LocalSteps { base, .. } => base.uses_momentum(),
+            // Adam's preconditioned first moment, not β(θ−θ⁻)
+            MethodSpec::CensoredAdam { .. } => false,
+        }
+    }
+
+    /// Do workers apply the skip-transmission rule (8)?
+    pub fn uses_censoring(&self) -> bool {
+        match self {
+            MethodSpec::Classic(m) => m.uses_censoring(),
+            MethodSpec::Nesterov { censored } => *censored,
+            MethodSpec::LocalSteps { base, .. } => base.uses_censoring(),
+            MethodSpec::CensoredAdam { .. } => true,
+        }
+    }
+
+    /// Local steps per round (1 for everything but `LocalSteps`).
+    pub fn k_local(&self) -> usize {
+        match self {
+            MethodSpec::LocalSteps { k_local, .. } => (*k_local).max(1),
+            _ => 1,
+        }
+    }
+
+    /// The classic method this spec degenerates to — what legacy
+    /// `RunConfig`/`Server` constructors that still take a [`Method`]
+    /// receive (the injected rule pair carries the real algorithm).
+    pub fn base_method(&self) -> Method {
+        match self {
+            MethodSpec::Classic(m) => *m,
+            MethodSpec::Nesterov { censored: true } => Method::Chb,
+            MethodSpec::Nesterov { censored: false } => Method::Hb,
+            MethodSpec::LocalSteps { base, .. } => *base,
+            MethodSpec::CensoredAdam { .. } => Method::Lag,
+        }
     }
 }
 
@@ -115,6 +276,40 @@ pub fn build_censor_rule(method: Method, p: &MethodParams) -> Box<dyn CensorRule
     }
 }
 
+/// Materialize the server rule for a grid method.  `Classic` routes
+/// through [`build_server_rule`] unchanged; `LocalSteps` uses its base
+/// method's rule (the K-step trajectory lives on the worker).
+pub fn build_server_rule_spec(
+    spec: &MethodSpec,
+    p: &MethodParams,
+    dim: usize,
+) -> Box<dyn ServerRule> {
+    match spec {
+        MethodSpec::Classic(m) => build_server_rule(*m, p, dim),
+        MethodSpec::Nesterov { .. } => {
+            Box::new(NesterovRule::new(p.alpha, p.beta, dim))
+        }
+        MethodSpec::LocalSteps { base, .. } => build_server_rule(*base, p, dim),
+        MethodSpec::CensoredAdam { beta1, beta2, eps, amsgrad } => {
+            Box::new(CensoredAdamRule::new(
+                p.alpha, *beta1, *beta2, *eps, *amsgrad, dim,
+            ))
+        }
+    }
+}
+
+/// Materialize the censor rule for a grid method.
+pub fn build_censor_rule_spec(
+    spec: &MethodSpec,
+    p: &MethodParams,
+) -> Box<dyn CensorRule> {
+    if spec.uses_censoring() {
+        Box::new(GradDiffCensor { epsilon1: p.epsilon1 })
+    } else {
+        Box::new(NeverCensor)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +338,87 @@ mod tests {
         assert_eq!(build_server_rule(Method::Lag, &p, 3).name(), "gd");
         assert_eq!(build_censor_rule(Method::Chb, &p).name(), "grad-diff");
         assert_eq!(build_censor_rule(Method::Hb, &p).name(), "never");
+    }
+
+    #[test]
+    fn spec_parse_covers_the_grid() {
+        for m in Method::ALL {
+            assert_eq!(
+                MethodSpec::parse(m.name()),
+                Some(MethodSpec::Classic(m))
+            );
+        }
+        assert_eq!(
+            MethodSpec::parse("nag"),
+            Some(MethodSpec::Nesterov { censored: false })
+        );
+        assert_eq!(
+            MethodSpec::parse("CNAG"),
+            Some(MethodSpec::Nesterov { censored: true })
+        );
+        assert_eq!(
+            MethodSpec::parse("local-steps"),
+            Some(MethodSpec::LocalSteps {
+                base: Method::Chb,
+                k_local: DEFAULT_K_LOCAL
+            })
+        );
+        assert_eq!(
+            MethodSpec::parse("cadam"),
+            Some(MethodSpec::censored_adam())
+        );
+        assert_eq!(MethodSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn spec_composition_table() {
+        assert!(MethodSpec::Classic(Method::Chb).uses_censoring());
+        assert!(MethodSpec::Nesterov { censored: true }.uses_censoring());
+        assert!(!MethodSpec::Nesterov { censored: false }.uses_censoring());
+        assert!(MethodSpec::censored_adam().uses_censoring());
+        assert!(!MethodSpec::censored_adam().uses_momentum());
+        assert!(MethodSpec::local_steps(4).uses_censoring());
+        assert_eq!(MethodSpec::local_steps(4).k_local(), 4);
+        assert_eq!(MethodSpec::Classic(Method::Gd).k_local(), 1);
+    }
+
+    #[test]
+    fn spec_builders_produce_right_rules() {
+        let p = MethodParams::new(0.1).with_epsilon1(1.0);
+        let d = 3;
+        assert_eq!(
+            build_server_rule_spec(&MethodSpec::Classic(Method::Chb), &p, d)
+                .name(),
+            "hb"
+        );
+        assert_eq!(
+            build_server_rule_spec(
+                &MethodSpec::Nesterov { censored: true },
+                &p,
+                d
+            )
+            .name(),
+            "nag"
+        );
+        assert_eq!(
+            build_server_rule_spec(&MethodSpec::local_steps(4), &p, d).name(),
+            "hb"
+        );
+        assert_eq!(
+            build_server_rule_spec(&MethodSpec::censored_adam(), &p, d).name(),
+            "censored-adam"
+        );
+        assert_eq!(
+            build_censor_rule_spec(&MethodSpec::censored_adam(), &p).name(),
+            "grad-diff"
+        );
+        assert_eq!(
+            build_censor_rule_spec(
+                &MethodSpec::Nesterov { censored: false },
+                &p
+            )
+            .name(),
+            "never"
+        );
     }
 }

@@ -14,16 +14,18 @@
 //! censoring off, ∇ᵏ equals the exact gradient and the classical
 //! methods fall out — this identity is property-tested.
 
+pub mod adam;
 pub mod censor;
 pub mod method;
 pub mod nesterov;
 
+pub use adam::CensoredAdamRule;
 pub use censor::{
     AdaptiveCensor, CensorDecision, CensorRule, DecayingCensor,
     GradDiffCensor, NeverCensor, StalenessBoundedCensor,
     VarianceScaledCensor,
 };
-pub use method::{Method, MethodParams};
+pub use method::{Method, MethodParams, MethodSpec};
 pub use nesterov::NesterovRule;
 
 use crate::linalg;

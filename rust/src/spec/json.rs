@@ -14,8 +14,9 @@ use crate::coordinator::{
     PopulationSpec,
 };
 use crate::data::batch::BatchSchedule;
-use crate::net::LatencyModel;
-use crate::optim::Method;
+use crate::net::{DownlinkSpec, LatencyModel};
+use crate::optim::method::{ADAM_BETA1, ADAM_BETA2, ADAM_EPS};
+use crate::optim::{Method, MethodSpec};
 use crate::tasks::TaskKind;
 use crate::util::json::Json;
 use crate::wire::{ChaosSpec, RetryPolicy, WireConfig};
@@ -62,7 +63,7 @@ impl RunSpec {
                 },
             ),
             ("lambda", num(self.lambda)),
-            ("method", s(&self.method.name().to_ascii_lowercase())),
+            ("method", method_to_json(&self.method)),
             ("params", params_to_json(&self.params)),
             ("censor", censor_to_json(&self.censor)),
             ("engine", engine_to_json(&self.engine)),
@@ -83,6 +84,11 @@ impl RunSpec {
         ];
         if self.faults != FaultPlan::default() {
             pairs.push(("faults", faults_to_json(&self.faults)));
+        }
+        // like faults: an uncompressed downlink (every pre-existing
+        // manifest) omits the key and stays byte-identical
+        if !self.downlink.is_none() {
+            pairs.push(("downlink", downlink_to_json(&self.downlink)));
         }
         // like faults: resident-regime manifests (the overwhelming
         // majority) omit the key and stay byte-identical
@@ -130,6 +136,7 @@ impl RunSpec {
                 "stop",
                 "drops",
                 "faults",
+                "downlink",
                 "record_comm_map",
                 "population",
             ],
@@ -150,13 +157,7 @@ impl RunSpec {
                 name: task_name.to_string(),
             }
         })?;
-        let method_name = req_str(map, "method")?;
-        let method = Method::parse(method_name).ok_or_else(|| {
-            SpecError::UnknownName {
-                field: "method",
-                name: method_name.to_string(),
-            }
-        })?;
+        let method = method_from_json(req(map, "method")?)?;
         Ok(RunSpec {
             task,
             dataset: req_str(map, "dataset")?.to_string(),
@@ -226,6 +227,10 @@ impl RunSpec {
                 None => FaultPlan::default(),
                 Some(v) => faults_from_json(v)?,
             },
+            downlink: match map.get("downlink") {
+                None => DownlinkSpec::None,
+                Some(v) => downlink_from_json(v)?,
+            },
             record_comm_map: match map.get("record_comm_map") {
                 None => false,
                 Some(Json::Bool(b)) => *b,
@@ -261,6 +266,146 @@ impl RunSpec {
             detail: format!("parse: {e}"),
         })?;
         RunSpec::from_json(&j)
+    }
+}
+
+/// Classic methods (and the two Nesterov flavors) encode as the same
+/// plain lowercase string as before this axis grew, so pre-existing
+/// manifests stay byte-identical; the parameterized grid variants are
+/// kind-tagged objects like every other axis.
+fn method_to_json(m: &MethodSpec) -> Json {
+    match *m {
+        MethodSpec::Classic(_) | MethodSpec::Nesterov { .. } => {
+            s(&m.name().to_ascii_lowercase())
+        }
+        MethodSpec::LocalSteps { base, k_local } => obj(vec![
+            ("kind", s("local-steps")),
+            ("base", s(&base.name().to_ascii_lowercase())),
+            ("k_local", unum(k_local as u64)),
+        ]),
+        MethodSpec::CensoredAdam { beta1, beta2, eps, amsgrad } => obj(vec![
+            ("kind", s("censored-adam")),
+            ("beta1", num(beta1)),
+            ("beta2", num(beta2)),
+            ("eps", num(eps)),
+            ("amsgrad", Json::Bool(amsgrad)),
+        ]),
+    }
+}
+
+fn method_from_json(j: &Json) -> Result<MethodSpec, SpecError> {
+    let m = match j {
+        Json::Str(name) => {
+            return MethodSpec::parse(name).ok_or_else(|| {
+                SpecError::UnknownName {
+                    field: "method",
+                    name: name.clone(),
+                }
+            })
+        }
+        Json::Obj(m) => m,
+        other => return Err(bad("method", "string or object", other)),
+    };
+    match kind(m, "method")? {
+        "local-steps" => {
+            check_keys(m, "method", &["kind", "base", "k_local"])?;
+            let base = match m.get("base") {
+                None => Method::Chb,
+                Some(v) => {
+                    let name = as_str(v, "method.base")?;
+                    Method::parse(name).ok_or_else(|| {
+                        SpecError::UnknownName {
+                            field: "method.base",
+                            name: name.to_string(),
+                        }
+                    })?
+                }
+            };
+            Ok(MethodSpec::LocalSteps {
+                base,
+                k_local: req_u64(m, "k_local")? as usize,
+            })
+        }
+        "censored-adam" => {
+            check_keys(
+                m,
+                "method",
+                &["kind", "beta1", "beta2", "eps", "amsgrad"],
+            )?;
+            Ok(MethodSpec::CensoredAdam {
+                beta1: opt_f64(m, "beta1")?.unwrap_or(ADAM_BETA1),
+                beta2: opt_f64(m, "beta2")?.unwrap_or(ADAM_BETA2),
+                eps: opt_f64(m, "eps")?.unwrap_or(ADAM_EPS),
+                amsgrad: match m.get("amsgrad") {
+                    None => false,
+                    Some(Json::Bool(b)) => *b,
+                    Some(other) => {
+                        return Err(bad("method.amsgrad", "bool", other))
+                    }
+                },
+            })
+        }
+        other => Err(SpecError::UnknownName {
+            field: "method.kind",
+            name: other.to_string(),
+        }),
+    }
+}
+
+fn downlink_to_json(d: &DownlinkSpec) -> Json {
+    match *d {
+        DownlinkSpec::None => obj(vec![("kind", s("none"))]),
+        DownlinkSpec::Fp32 { error_feedback } => obj(vec![
+            ("kind", s("fp32")),
+            ("error_feedback", Json::Bool(error_feedback)),
+        ]),
+        DownlinkSpec::Fp16 { error_feedback } => obj(vec![
+            ("kind", s("fp16")),
+            ("error_feedback", Json::Bool(error_feedback)),
+        ]),
+        DownlinkSpec::Int { bits, error_feedback } => obj(vec![
+            ("kind", s("int")),
+            ("bits", unum(bits as u64)),
+            ("error_feedback", Json::Bool(error_feedback)),
+        ]),
+    }
+}
+
+fn downlink_from_json(j: &Json) -> Result<DownlinkSpec, SpecError> {
+    let m = as_obj(j, "downlink")?;
+    let ef = |m: &Obj| -> Result<bool, SpecError> {
+        match m.get("error_feedback") {
+            None => Ok(false),
+            Some(Json::Bool(b)) => Ok(*b),
+            Some(other) => {
+                Err(bad("downlink.error_feedback", "bool", other))
+            }
+        }
+    };
+    match kind(m, "downlink")? {
+        "none" => {
+            check_keys(m, "downlink", &["kind"])?;
+            Ok(DownlinkSpec::None)
+        }
+        "fp32" => {
+            check_keys(m, "downlink", &["kind", "error_feedback"])?;
+            Ok(DownlinkSpec::Fp32 { error_feedback: ef(m)? })
+        }
+        "fp16" => {
+            check_keys(m, "downlink", &["kind", "error_feedback"])?;
+            Ok(DownlinkSpec::Fp16 { error_feedback: ef(m)? })
+        }
+        "int" => {
+            check_keys(m, "downlink", &["kind", "bits", "error_feedback"])?;
+            Ok(DownlinkSpec::Int {
+                bits: req_u64(m, "bits")? as u32,
+                error_feedback: ef(m)?,
+            })
+        }
+        other => Err(SpecError::UnknownName {
+            field: "downlink.kind",
+            name: other.to_string(),
+        }),
     }
 }
 
@@ -725,6 +870,11 @@ fn codec_to_json(c: &CodecSpec) -> Json {
             ("bits", unum(bits as u64)),
             ("error_feedback", Json::Bool(error_feedback)),
         ]),
+        CodecSpec::TopKInt { k, bits } => obj(vec![
+            ("kind", s("top-k-int")),
+            ("k", unum(k as u64)),
+            ("bits", unum(bits as u64)),
+        ]),
     }
 }
 
@@ -764,6 +914,13 @@ fn codec_from_json(j: &Json) -> Result<CodecSpec, SpecError> {
             Ok(CodecSpec::Int {
                 bits: req_u64(m, "bits")? as u32,
                 error_feedback: codec_ef(m)?,
+            })
+        }
+        "top-k-int" => {
+            check_keys(m, "codec", &["kind", "k", "bits"])?;
+            Ok(CodecSpec::TopKInt {
+                k: req_u64(m, "k")? as usize,
+                bits: req_u64(m, "bits")? as u32,
             })
         }
         other => Err(SpecError::UnknownName {
@@ -968,7 +1125,7 @@ mod tests {
     fn every_axis_round_trips() {
         let spec = RunSpec {
             label: Some("ablate".into()),
-            method: Method::Gd,
+            method: Method::Gd.into(),
             params: ParamSpec {
                 alpha: Some(0.015625),
                 beta: 0.25,
@@ -1136,6 +1293,86 @@ mod tests {
         }"#;
         let err = RunSpec::from_json_str(text).unwrap_err();
         assert!(err.to_string().contains("cohrot"), "{err}");
+    }
+
+    #[test]
+    fn method_grid_round_trips() {
+        for method in [
+            MethodSpec::Nesterov { censored: false },
+            MethodSpec::Nesterov { censored: true },
+            MethodSpec::LocalSteps { base: Method::Hb, k_local: 6 },
+            MethodSpec::CensoredAdam {
+                beta1: 0.875,
+                beta2: 0.984375,
+                eps: 0.0009765625,
+                amsgrad: true,
+            },
+        ] {
+            let spec = RunSpec {
+                method,
+                ..RunSpec::new(TaskKind::LinReg, "synth")
+            };
+            let text = spec.to_json_string();
+            assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec, "{text}");
+        }
+        // classic methods still encode as the bare lowercase string
+        let text = RunSpec::new(TaskKind::LinReg, "synth").to_json_string();
+        assert!(text.contains("\"method\": \"chb\""), "{text}");
+        // hand-written censored-adam gets the Kingma–Ba defaults
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": {"kind": "censored-adam"}, "iters": 10
+        }"#;
+        let spec = RunSpec::from_json_str(text).unwrap();
+        assert_eq!(spec.method, MethodSpec::censored_adam());
+        // unknown method kinds are rejected like every other axis
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": {"kind": "sgd"}, "iters": 10
+        }"#;
+        assert!(matches!(
+            RunSpec::from_json_str(text),
+            Err(SpecError::UnknownName { field: "method.kind", .. })
+        ));
+    }
+
+    #[test]
+    fn downlink_round_trips_and_default_is_omitted() {
+        use crate::net::DownlinkSpec;
+        let base = RunSpec::new(TaskKind::LinReg, "synth");
+        assert!(!base.to_json_string().contains("downlink"));
+        for downlink in [
+            DownlinkSpec::Fp32 { error_feedback: false },
+            DownlinkSpec::Fp16 { error_feedback: true },
+            DownlinkSpec::Int { bits: 8, error_feedback: true },
+        ] {
+            let spec = RunSpec { downlink, ..base.clone() };
+            let text = spec.to_json_string();
+            assert!(text.contains("downlink"));
+            assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec, "{text}");
+        }
+        // error_feedback defaults to false when the key is omitted
+        let text = r#"{
+            "version": 1, "task": "linreg", "dataset": "synth",
+            "method": "chb", "iters": 10,
+            "downlink": {"kind": "int", "bits": 8}
+        }"#;
+        let spec = RunSpec::from_json_str(text).unwrap();
+        assert_eq!(
+            spec.downlink,
+            DownlinkSpec::Int { bits: 8, error_feedback: false }
+        );
+    }
+
+    #[test]
+    fn top_k_int_codec_round_trips() {
+        let spec = RunSpec {
+            codec: CodecSpec::TopKInt { k: 12, bits: 6 },
+            ..RunSpec::new(TaskKind::LinReg, "synth")
+        };
+        let text = spec.to_json_string();
+        assert!(text.contains("top-k-int"), "{text}");
+        assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
     }
 
     #[test]

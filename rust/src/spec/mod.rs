@@ -46,8 +46,10 @@ pub use session::{Registry, RunReport, Session};
 
 use crate::coordinator::{EngineKind, FaultPlan, Participation, PopulationSpec};
 use crate::data::batch::BatchSchedule;
-use crate::optim::Method;
+use crate::optim::{Method, MethodSpec};
 use crate::tasks::TaskKind;
+
+pub use crate::net::downlink::DownlinkSpec;
 
 /// Manifest schema version written by [`RunSpec::to_json_string`].
 pub const SPEC_VERSION: u64 = 1;
@@ -148,6 +150,19 @@ pub enum SpecError {
         /// what is wrong
         detail: &'static str,
     },
+    /// an invalid method-grid combination (local steps off the
+    /// full-batch schedule, a stateful server rule under server
+    /// kills, …)
+    Method {
+        /// what is wrong
+        detail: &'static str,
+    },
+    /// an invalid downlink-channel combination (compression outside
+    /// the sync engines, server-side codec state under server kills)
+    Downlink {
+        /// what is wrong
+        detail: &'static str,
+    },
 }
 
 impl std::fmt::Display for SpecError {
@@ -206,6 +221,12 @@ impl std::fmt::Display for SpecError {
             SpecError::Json { detail } => write!(f, "spec json: {detail}"),
             SpecError::Population { detail } => {
                 write!(f, "spec.population: {detail}")
+            }
+            SpecError::Method { detail } => {
+                write!(f, "spec.method: {detail}")
+            }
+            SpecError::Downlink { detail } => {
+                write!(f, "spec.downlink: {detail}")
             }
         }
     }
@@ -334,6 +355,14 @@ pub enum CodecSpec {
         /// carry the quantization error into the next round
         error_feedback: bool,
     },
+    /// sparse + packed hybrid: top-k magnitude selection, survivors
+    /// quantized to `bits`-wide levels (32 + (32+bits)·nnz on the wire)
+    TopKInt {
+        /// coordinates kept per uplink
+        k: usize,
+        /// bits per surviving coordinate (2..=32)
+        bits: u32,
+    },
 }
 
 impl CodecSpec {
@@ -346,6 +375,7 @@ impl CodecSpec {
             CodecSpec::Fp32 { .. } => "fp32",
             CodecSpec::Fp16 { .. } => "fp16",
             CodecSpec::Int { .. } => "int",
+            CodecSpec::TopKInt { .. } => "top-k-int",
         }
     }
 }
@@ -416,8 +446,11 @@ pub struct RunSpec {
     pub label: Option<String>,
     /// global regularization λ (split λ/M per worker)
     pub lambda: f64,
-    /// which of the four paper algorithms drives the server update
-    pub method: Method,
+    /// which point of the method grid drives the run: one of the four
+    /// paper algorithms ([`MethodSpec::Classic`], unchanged bitwise),
+    /// censored Nesterov, K local steps between uplinks, or the
+    /// censored-Adam server rule
+    pub method: MethodSpec,
     /// (α, β, ε₁) in spec form
     pub params: ParamSpec,
     /// worker-side censor rule
@@ -431,6 +464,11 @@ pub struct RunSpec {
     pub batch: BatchSchedule,
     /// uplink compression codec
     pub codec: CodecSpec,
+    /// downlink (server→worker) channel: bit accounting always;
+    /// optional broadcast compression through the same codec stack
+    /// with server-side error feedback (serialized to `manifest.json`
+    /// only when not `None`, so existing manifests stay byte-stable)
+    pub downlink: DownlinkSpec,
     /// gradient backend
     pub backend: BackendKind,
     /// iteration budget (server steps in every engine)
@@ -463,13 +501,14 @@ impl RunSpec {
             dataset: dataset.to_string(),
             label: None,
             lambda: 0.001,
-            method: Method::Chb,
+            method: MethodSpec::Classic(Method::Chb),
             params: ParamSpec::default(),
             censor: CensorSpec::MethodDefault,
             engine: EngineKind::Serial,
             participation: Participation::Full,
             batch: BatchSchedule::Full,
             codec: CodecSpec::None,
+            downlink: DownlinkSpec::None,
             backend: BackendKind::Rust,
             iters: 500,
             stop: StopSpec::MaxIters,
@@ -495,12 +534,14 @@ impl RunSpec {
         if self.iters == 0 {
             return Err(SpecError::ZeroIters);
         }
+        self.validate_method()?;
         self.validate_params()?;
         self.validate_censor()?;
         self.validate_engine()?;
         self.validate_participation()?;
         self.validate_batch()?;
         self.validate_codec()?;
+        self.validate_downlink()?;
         self.validate_stop()?;
         self.validate_faults()?;
         self.validate_population()?;
@@ -528,6 +569,101 @@ impl RunSpec {
         {
             return Err(SpecError::AsyncParticipation {
                 participation: self.participation.name(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Method-grid cross-field rules.  Local steps need the
+    /// deterministic full-batch schedule (the K-step trajectory and
+    /// its censor delta are defined on exact shard gradients), and the
+    /// stateful server rules (Nesterov's previous aggregate, Adam's
+    /// moment vectors) are runtime-only state — checkpoints cannot
+    /// capture them, so server-kill schedules are rejected up front.
+    fn validate_method(&self) -> Result<(), SpecError> {
+        match self.method {
+            MethodSpec::Classic(_) => {}
+            MethodSpec::Nesterov { .. } => {
+                if !self.faults.server_kills.is_empty() {
+                    return Err(SpecError::Method {
+                        detail: "the nesterov rule's previous-aggregate \
+                                 state is not checkpoint-serialized; drop \
+                                 faults.server_kills",
+                    });
+                }
+            }
+            MethodSpec::LocalSteps { k_local, .. } => {
+                if k_local == 0 {
+                    return Err(SpecError::ZeroSize {
+                        field: "method.k_local",
+                    });
+                }
+                if self.batch != BatchSchedule::Full {
+                    return Err(SpecError::Method {
+                        detail: "local steps need the full-batch schedule \
+                                 (the K-step trajectory and its censor \
+                                 delta are defined on exact shard \
+                                 gradients)",
+                    });
+                }
+            }
+            MethodSpec::CensoredAdam { beta1, beta2, eps, .. } => {
+                for (field, v) in
+                    [("method.beta1", beta1), ("method.beta2", beta2)]
+                {
+                    finite(field, v)?;
+                    if !(0.0..1.0).contains(&v) {
+                        return Err(SpecError::OutOfRange {
+                            field,
+                            value: v,
+                            lo: 0.0,
+                            hi: 1.0,
+                        });
+                    }
+                }
+                positive("method.eps", eps)?;
+                if !self.faults.server_kills.is_empty() {
+                    return Err(SpecError::Method {
+                        detail: "adam moment vectors are not checkpoint-\
+                                 serialized; drop faults.server_kills",
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Downlink-channel cross-field rules.  Bit *accounting* composes
+    /// with every engine; broadcast *compression* runs only on the
+    /// sync engines — the async/cohort loops re-broadcast on their
+    /// virtual clock and the wire protocol frames dense hex θ — and
+    /// its server-side view/error-feedback state is runtime-only, so
+    /// server-kill schedules are rejected.
+    fn validate_downlink(&self) -> Result<(), SpecError> {
+        match self.downlink {
+            DownlinkSpec::None => return Ok(()),
+            DownlinkSpec::Fp32 { .. } | DownlinkSpec::Fp16 { .. } => {}
+            DownlinkSpec::Int { bits, .. } => {
+                if !(2..=32).contains(&bits) {
+                    return Err(SpecError::QuantBits { bits });
+                }
+            }
+        }
+        if !matches!(
+            self.engine,
+            EngineKind::Serial | EngineKind::Threaded | EngineKind::Rayon { .. }
+        ) {
+            return Err(SpecError::Downlink {
+                detail: "downlink compression runs on the sync engines \
+                         (serial/threaded/rayon); async and wire account \
+                         bits but broadcast uncompressed",
+            });
+        }
+        if !self.faults.server_kills.is_empty() {
+            return Err(SpecError::Downlink {
+                detail: "the downlink codec's view/error-feedback state is \
+                         not checkpoint-serialized; drop \
+                         faults.server_kills",
             });
         }
         Ok(())
@@ -769,6 +905,15 @@ impl RunSpec {
                 }
                 Ok(())
             }
+            CodecSpec::TopKInt { k, bits } => {
+                if k == 0 {
+                    return Err(SpecError::ZeroSize { field: "codec.k" });
+                }
+                if !(2..=32).contains(&bits) {
+                    return Err(SpecError::QuantBits { bits });
+                }
+                Ok(())
+            }
         }
     }
 
@@ -827,6 +972,13 @@ impl RunSpec {
             return Err(SpecError::Population {
                 detail: "population runs need engine \"async\" (the cohort \
                          loop schedules uplinks on its virtual clock)",
+            });
+        }
+        if !matches!(self.method, MethodSpec::Classic(_)) {
+            return Err(SpecError::Population {
+                detail: "population runs cover the four classic methods \
+                         only (the cohort loop has no local-step or \
+                         stateful-rule path)",
             });
         }
         if self.codec != CodecSpec::None {
@@ -1060,6 +1212,15 @@ mod tests {
         s.codec = CodecSpec::Int { bits: 33, error_feedback: false };
         assert_eq!(s.validate(), Err(SpecError::QuantBits { bits: 33 }));
         let mut s = base();
+        s.codec = CodecSpec::TopKInt { k: 0, bits: 8 };
+        assert_eq!(s.validate(), Err(SpecError::ZeroSize { field: "codec.k" }));
+        let mut s = base();
+        s.codec = CodecSpec::TopKInt { k: 4, bits: 1 };
+        assert_eq!(s.validate(), Err(SpecError::QuantBits { bits: 1 }));
+        let mut s = base();
+        s.codec = CodecSpec::TopKInt { k: 4, bits: 8 };
+        assert!(s.validate().is_ok());
+        let mut s = base();
         s.codec = CodecSpec::Fp16 { error_feedback: true };
         assert!(s.validate().is_ok());
         let mut s = base();
@@ -1153,6 +1314,101 @@ mod tests {
         assert_eq!(s.validate(), Err(SpecError::NoFStar));
         s.stop = StopSpec::ObjErr { tol: 1e-6, f_star: Some(0.5) };
         s.validate().unwrap();
+    }
+
+    #[test]
+    fn method_grid_bounds_are_enforced() {
+        let mut s = base();
+        s.method = MethodSpec::LocalSteps { base: Method::Chb, k_local: 0 };
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::ZeroSize { field: "method.k_local" })
+        );
+        let mut s = base();
+        s.method = MethodSpec::local_steps(4);
+        s.batch =
+            BatchSchedule::Minibatch { size: 8, seed: 1, replace: false };
+        assert!(matches!(s.validate(), Err(SpecError::Method { .. })));
+        let mut s = base();
+        s.method = MethodSpec::local_steps(4);
+        s.validate().unwrap();
+        let mut s = base();
+        s.method = MethodSpec::CensoredAdam {
+            beta1: 1.0,
+            beta2: 0.999,
+            eps: 1e-8,
+            amsgrad: false,
+        };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::OutOfRange { field: "method.beta1", .. })
+        ));
+        let mut s = base();
+        s.method = MethodSpec::CensoredAdam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 0.0,
+            amsgrad: false,
+        };
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::NonPositive { field: "method.eps", .. })
+        ));
+        // stateful server rules reject server-kill schedules
+        for m in [
+            MethodSpec::censored_adam(),
+            MethodSpec::Nesterov { censored: true },
+        ] {
+            let mut s = base();
+            s.method = m;
+            s.faults = FaultPlan {
+                server_kills: vec![5],
+                ..FaultPlan::default()
+            };
+            assert!(matches!(s.validate(), Err(SpecError::Method { .. })));
+            let mut s = base();
+            s.method = m;
+            s.validate().unwrap();
+        }
+        // local steps compose with server kills (no persistent worker
+        // state beyond what checkpoints already carry)
+        let mut s = base();
+        s.method = MethodSpec::local_steps(4);
+        s.faults =
+            FaultPlan { server_kills: vec![5], ..FaultPlan::default() };
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn downlink_bounds_are_enforced() {
+        let mut s = base();
+        s.downlink = DownlinkSpec::Int { bits: 1, error_feedback: true };
+        assert_eq!(s.validate(), Err(SpecError::QuantBits { bits: 1 }));
+        let mut s = base();
+        s.downlink = DownlinkSpec::Int { bits: 8, error_feedback: true };
+        s.validate().unwrap();
+        // compression needs a sync engine; accounting-only (None) is
+        // fine everywhere
+        let mut s = base();
+        s.downlink = DownlinkSpec::Fp16 { error_feedback: false };
+        s.engine = EngineKind::Async(AsyncConfig::default());
+        assert!(matches!(s.validate(), Err(SpecError::Downlink { .. })));
+        let mut s = base();
+        s.engine = EngineKind::Async(AsyncConfig::default());
+        s.validate().unwrap();
+        let mut s = base();
+        s.downlink = DownlinkSpec::Fp32 { error_feedback: true };
+        s.faults =
+            FaultPlan { server_kills: vec![5], ..FaultPlan::default() };
+        assert!(matches!(s.validate(), Err(SpecError::Downlink { .. })));
+    }
+
+    #[test]
+    fn population_rejects_grid_methods() {
+        let s = RunSpec { method: MethodSpec::local_steps(4), ..pop_base() };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
+        let s = RunSpec { method: MethodSpec::censored_adam(), ..pop_base() };
+        assert!(matches!(s.validate(), Err(SpecError::Population { .. })));
     }
 
     #[test]

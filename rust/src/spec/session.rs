@@ -21,11 +21,11 @@ use crate::checkpoint::{
 };
 use crate::compress::{
     Compressor, ErrorFeedback, PackedFp16, PackedFp32, PackedInt, TopK,
-    UniformQuantizer,
+    TopKInt, UniformQuantizer,
 };
 use crate::coordinator::{
     run_engine_with_rules_ctx, run_population, AsyncSummary, EngineKind,
-    RunConfig, RunContext, Server, StopRule, Worker,
+    LocalStepCfg, RunConfig, RunContext, Server, StopRule, Worker,
 };
 use crate::experiments::Problem;
 use crate::metrics::{csv, PopulationSummary, Trace};
@@ -33,7 +33,7 @@ use crate::optim::censor::{
     AbsoluteCensor, DecayingCensor, NeverCensor, PeriodicCensor,
     VarianceScaledCensor,
 };
-use crate::optim::{self, CensorRule, MethodParams};
+use crate::optim::{self, CensorRule, MethodParams, MethodSpec};
 use crate::wire::{
     run_client, ClientConfig, ClientStats, Listener, TransportSpec, WirePool,
     WireStats,
@@ -228,17 +228,21 @@ impl Session {
             }
             StopSpec::AggGrad { tol } => StopRule::AggGradBelow { tol },
         };
-        let mut cfg = RunConfig::new(spec.method, params, spec.iters)
-            .with_stop(stop)
-            .with_participation(spec.participation)
-            .with_drops(spec.drops.prob, spec.drops.seed)
-            .with_faults(spec.faults.clone());
+        // the RunConfig carries the *base* method label; the injected
+        // rule pair below carries the real algorithm
+        let mut cfg =
+            RunConfig::new(spec.method.base_method(), params, spec.iters)
+                .with_stop(stop)
+                .with_participation(spec.participation)
+                .with_drops(spec.drops.prob, spec.drops.seed)
+                .with_faults(spec.faults.clone())
+                .with_downlink(spec.downlink);
         if spec.record_comm_map {
             cfg = cfg.with_comm_map();
         }
         let censor: Arc<dyn CensorRule> = match spec.censor {
             CensorSpec::MethodDefault => Arc::from(
-                optim::method::build_censor_rule(spec.method, &params),
+                optim::method::build_censor_rule_spec(&spec.method, &params),
             ),
             CensorSpec::Never => Arc::new(NeverCensor),
             CensorSpec::Absolute { tau } => Arc::new(AbsoluteCensor { tau }),
@@ -282,11 +286,31 @@ impl Session {
             CodecSpec::Int { bits, error_feedback } => {
                 Some(ef(PackedInt { bits }, error_feedback))
             }
+            CodecSpec::TopKInt { k, bits } => {
+                Some(Arc::new(TopKInt { k, bits }))
+            }
         };
         if let Some(c) = compressor {
             workers = workers
                 .into_iter()
                 .map(|w| w.with_compressor(Arc::clone(&c)))
+                .collect();
+        }
+        if spec.method.k_local() > 1 {
+            // K-step local regime: workers walk the trajectory with the
+            // resolved α and the base method's β (0 when momentum-free)
+            let lcfg = LocalStepCfg {
+                k_local: spec.method.k_local(),
+                alpha: params.alpha,
+                beta: if spec.method.uses_momentum() {
+                    params.beta
+                } else {
+                    0.0
+                },
+            };
+            workers = workers
+                .into_iter()
+                .map(|w| w.with_local_steps(lcfg))
                 .collect();
         }
         let label = spec.label.clone().unwrap_or_else(|| {
@@ -381,8 +405,39 @@ impl Session {
     /// typed [`CheckpointError`]s (bad resume image, checkpoint write
     /// failure) instead of panics.
     pub fn run_checked(self) -> Result<RunReport, CheckpointError> {
+        if self.ctx.checkpoint.is_some() || self.ctx.resume.is_some() {
+            // checkpoints capture (θ, θ⁻, net, workers, trace) — not
+            // the Nesterov/Adam server-rule moments and not the
+            // downlink codec's view, so resuming those would silently
+            // diverge instead of replaying bit-identically
+            if matches!(
+                self.spec.method,
+                MethodSpec::Nesterov { .. } | MethodSpec::CensoredAdam { .. }
+            ) {
+                return Err(CheckpointError::Unsupported(format!(
+                    "method {} carries server-rule state the checkpoint \
+                     image does not capture",
+                    self.spec.method.name()
+                )));
+            }
+            if !self.spec.downlink.is_none() {
+                return Err(CheckpointError::Unsupported(
+                    "downlink compression carries codec view state the \
+                     checkpoint image does not capture"
+                        .into(),
+                ));
+            }
+        }
         let theta0 = self.problem.theta0();
-        let server = Server::new(self.cfg.method, &self.cfg.params, theta0);
+        let dim = theta0.len();
+        let server = Server::with_rule(
+            optim::method::build_server_rule_spec(
+                &self.spec.method,
+                &self.cfg.params,
+                dim,
+            ),
+            theta0,
+        );
         if let Some(pop) = self.spec.population {
             return Ok(self.run_population_mode(pop, server));
         }
@@ -481,7 +536,14 @@ impl Session {
         };
         let m = self.workers.len();
         let theta0 = self.problem.theta0();
-        let server = Server::new(self.cfg.method, &self.cfg.params, theta0);
+        let server = Server::with_rule(
+            optim::method::build_server_rule_spec(
+                &self.spec.method,
+                &self.cfg.params,
+                theta0.len(),
+            ),
+            theta0,
+        );
         let dim = server.dim();
         let listener = Listener::bind(transport)
             .with_context(|| format!("bind {transport}"))?;
@@ -657,6 +719,92 @@ mod tests {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "k={}", a.k);
             assert_eq!(a.vclock_us.to_bits(), b.vclock_us.to_bits());
         }
+    }
+
+    #[test]
+    fn one_local_step_session_matches_the_classic_method_bitwise() {
+        let p = problem();
+        let base = RunSpec {
+            iters: 30,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        let mut grid = base.clone();
+        grid.method =
+            MethodSpec::LocalSteps { base: Method::Chb, k_local: 1 };
+        let a = Session::from_parts(base, p.clone()).unwrap().run();
+        let b = Session::from_parts(grid, p).unwrap().run();
+        assert_eq!(a.trace.iterations(), b.trace.iterations());
+        for (x, y) in a.trace.iters.iter().zip(&b.trace.iters) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "k={}", x.k);
+            assert_eq!(x.bits_cum, y.bits_cum);
+            assert_eq!(x.down_bits_cum, y.down_bits_cum);
+        }
+    }
+
+    #[test]
+    fn local_steps_session_charges_k_sweeps_per_round() {
+        let p = problem();
+        let spec = RunSpec {
+            method: MethodSpec::local_steps(4),
+            iters: 20,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        let report = Session::from_parts(spec, p).unwrap().run();
+        assert_eq!(report.trace.method, "LOCAL");
+        // full participation, full batch: every round consumes K = 4
+        // data passes, so the epoch column advances by 4 per round
+        assert!((report.trace.iters[0].epoch - 4.0).abs() < 1e-9);
+        assert!((report.trace.iters[19].epoch - 80.0).abs() < 1e-9);
+        assert!(report.trace.final_loss() < report.trace.iters[0].loss);
+    }
+
+    #[test]
+    fn censored_adam_session_descends() {
+        let p = problem();
+        let spec = RunSpec {
+            method: MethodSpec::censored_adam(),
+            params: ParamSpec {
+                alpha: Some(0.02),
+                ..ParamSpec::default()
+            },
+            iters: 200,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        let report = Session::from_parts(spec, p).unwrap().run();
+        assert_eq!(report.trace.method, "CADAM");
+        assert!(report.trace.final_loss() < report.trace.iters[0].loss);
+        // round 1 always transmits in full (θ̂⁰ = 0 convention)
+        assert_eq!(report.trace.iters[0].comms_round, 3);
+    }
+
+    #[test]
+    fn stateful_methods_and_compressed_downlink_reject_checkpointing() {
+        use crate::checkpoint::CheckpointPolicy;
+        use crate::net::DownlinkSpec;
+        let mk = |spec: RunSpec| {
+            Session::from_parts(spec, problem())
+                .unwrap()
+                .with_checkpoints(CheckpointPolicy::new(2, "ck-never-written"))
+                .run_checked()
+        };
+        let adam = RunSpec {
+            method: MethodSpec::censored_adam(),
+            iters: 5,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        assert!(matches!(
+            mk(adam),
+            Err(CheckpointError::Unsupported(_))
+        ));
+        let down = RunSpec {
+            downlink: DownlinkSpec::Fp16 { error_feedback: false },
+            iters: 5,
+            ..RunSpec::new(TaskKind::LinReg, "sess")
+        };
+        assert!(matches!(
+            mk(down),
+            Err(CheckpointError::Unsupported(_))
+        ));
     }
 
     #[test]

@@ -118,6 +118,14 @@ pub struct WireStats {
     /// snapshot requests answered from the live mirror because the
     /// worker was unreachable (EF residual may be stale there)
     pub snapshot_fallbacks: u64,
+    /// model payload bits written in delivered `Round` frames (64·d
+    /// per frame, duplicates and retransmits charged) — the wire-side
+    /// downlink ledger the trace's `downlink_bits_cum` column is
+    /// checked against in zero-chaos loopback runs
+    pub payload_bits_down: u64,
+    /// delta payload bits of accepted Transmit reports — the wire-side
+    /// uplink ledger matching the trace's `bits_cum` column
+    pub payload_bits_up: u64,
 }
 
 impl WireStats {
@@ -128,8 +136,8 @@ impl WireStats {
              chaos_duplicated,chaos_corrupted,chaos_partitioned,\
              dup_suppressed,stale_frames,crc_rejected,retries,\
              quorum_skips,forced_resyncs,reconnects,heartbeats,\
-             snapshot_fallbacks\n\
-             {},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+             snapshot_fallbacks,payload_bits_down,payload_bits_up\n\
+             {},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             self.chaos_dropped_down,
             self.chaos_dropped_up,
             self.chaos_delayed,
@@ -145,6 +153,8 @@ impl WireStats {
             self.reconnects,
             self.heartbeats,
             self.snapshot_fallbacks,
+            self.payload_bits_down,
+            self.payload_bits_up,
         )
     }
 }
@@ -431,6 +441,11 @@ impl WirePool {
         }
         if failed {
             self.chans[w] = None;
+        } else if kind == FrameKind::Round {
+            // wire-side downlink ledger: every delivered Round frame
+            // carries the dense model; duplicates are charged too
+            self.stats.payload_bits_down +=
+                sends as u64 * crate::net::dense_delta_bits(self.dim);
         }
     }
 
@@ -552,6 +567,7 @@ impl WirePool {
         self.acked[w] = k;
         self.last_loss[w] = r.loss;
         if r.decision == CensorDecision::Transmit {
+            self.stats.payload_bits_up += r.bits;
             self.mirror[w].transmissions += 1;
             r.delta.fold_into(&mut self.mirror[w].last_tx);
             self.resync[w] = false;

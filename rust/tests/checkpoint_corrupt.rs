@@ -38,6 +38,7 @@ fn golden_checkpoint() -> Checkpoint {
         agg_grad_sq: 2.0,
         step_sq,
         bits_cum,
+        down_bits_cum: bits_cum,
         vclock_us: 0.0,
         stale_max: 0,
         batch_frac: 1.0,
@@ -110,6 +111,25 @@ fn golden_checkpoint_fixture() {
     assert_eq!(back.trace.iters.len(), 2);
     assert_eq!(back.trace.iters[1].bits_cum, 256);
     assert!(back.async_state.is_none());
+}
+
+/// Pre-downlink checkpoints (no `down_bits_cum` column) still decode:
+/// the counter back-fills to zero rather than failing the strict key
+/// check, so old images resume under the new trace schema.
+#[test]
+fn checkpoints_without_downlink_column_decode_with_zeros() {
+    let legacy = GOLDEN.replace(
+        "      \"down_bits_cum\": \"00000000000000800000000000000100\",\n",
+        "",
+    );
+    assert!(legacy != GOLDEN, "pattern not found");
+    let back = Checkpoint::from_json_str(&legacy).unwrap();
+    assert_eq!(back.trace.iters.len(), 2);
+    assert!(back.trace.iters.iter().all(|s| s.down_bits_cum == 0));
+    // re-encoding emits the column explicitly (zeros)
+    assert!(back
+        .to_json_string()
+        .contains("\"down_bits_cum\": \"00000000000000000000000000000000\""));
 }
 
 /// Truncation anywhere yields a typed parse error, never a panic.

@@ -5,13 +5,15 @@
 //! across engines.
 
 use chb_fed::coordinator::{
-    run_rayon, run_serial, run_threaded, Participation, RayonPool,
-    RoundEngine, RunConfig, StopRule,
+    run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
+    EngineKind, Participation, RayonPool, RoundEngine, RunConfig, StopRule,
 };
 use chb_fed::data::synthetic;
 use chb_fed::experiments::Problem;
 use chb_fed::metrics::Trace;
-use chb_fed::optim::{Method, MethodParams};
+use chb_fed::net::LatencyModel;
+use chb_fed::optim::{Method, MethodParams, MethodSpec};
+use chb_fed::spec::{EpsilonSpec, ParamSpec, RunSpec, Session};
 use chb_fed::tasks::TaskKind;
 
 /// Small instance of one paper task: M = 4 workers, 12×8 shards.
@@ -80,6 +82,97 @@ fn pools_are_bit_identical_on_all_four_tasks() {
             RoundEngine::new(RayonPool::with_threads(p.rust_workers(), 3))
                 .run(&cfg, p.theta0());
         assert_traces_identical(&serial, &rayon3, &format!("{name} rayon×3"));
+    }
+}
+
+/// [`assert_traces_identical`] plus the downlink ledger column.
+fn assert_traces_identical_with_downlink(a: &Trace, b: &Trace, what: &str) {
+    assert_traces_identical(a, b, what);
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            x.down_bits_cum, y.down_bits_cum,
+            "{what}: downlink bits differ at k={}",
+            x.k
+        );
+    }
+}
+
+/// ARCHITECTURE.md invariant 7: the spec-layer method grid in its
+/// degenerate corner — `MethodSpec::Classic` with the default free
+/// downlink (`DownlinkSpec::None`) — is bit-identical to the legacy
+/// `run_*` entry points on all four paper tasks, across serial /
+/// threaded / rayon and the degenerate async regime, and both sides
+/// charge the legacy 64·d downlink bits per scheduled worker.
+#[test]
+fn classic_grid_with_free_downlink_matches_legacy_entry_points() {
+    for task in [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn] {
+        let p = problem_for(task);
+        let iters = if task == TaskKind::Nn { 12 } else { 25 };
+        let params = MethodParams::new(1.0 / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, p.m_workers());
+        let cfg = RunConfig::new(Method::Chb, params, iters);
+        let run_grid = |engine: EngineKind| {
+            let spec = RunSpec {
+                method: MethodSpec::Classic(Method::Chb),
+                params: ParamSpec {
+                    alpha: Some(1.0 / p.l_global),
+                    beta: 0.4,
+                    epsilon: EpsilonSpec::Scaled { c: 0.1 },
+                },
+                iters,
+                lambda: p.lambda_global(),
+                engine,
+                ..RunSpec::new(task, "equiv")
+            };
+            Session::from_parts(spec, p.clone())
+                .expect("degenerate grid spec must validate")
+                .run()
+                .trace
+        };
+        let name = task.name();
+
+        let mut ws = p.rust_workers();
+        let serial = run_serial(&mut ws, &cfg, p.theta0());
+        assert_traces_identical_with_downlink(
+            &serial,
+            &run_grid(EngineKind::Serial),
+            &format!("{name} grid serial"),
+        );
+        assert_traces_identical_with_downlink(
+            &run_threaded(p.rust_workers(), &cfg, p.theta0()),
+            &run_grid(EngineKind::Threaded),
+            &format!("{name} grid threaded"),
+        );
+        assert_traces_identical_with_downlink(
+            &run_rayon(p.rust_workers(), &cfg, p.theta0()),
+            &run_grid(EngineKind::Rayon { threads: 0 }),
+            &format!("{name} grid rayon"),
+        );
+        let acfg = AsyncConfig {
+            latency: LatencyModel::zero(),
+            ..AsyncConfig::default()
+        };
+        let mut ws = p.rust_workers();
+        let legacy_async =
+            run_async_detailed(&mut ws, &cfg, &acfg, p.theta0()).trace;
+        assert_traces_identical_with_downlink(
+            &legacy_async,
+            &run_grid(EngineKind::Async(acfg)),
+            &format!("{name} grid async"),
+        );
+
+        // with downlink = none the ledger is exactly the legacy free
+        // broadcast: 64·d bits to each of the M scheduled workers
+        let (m, d) = (p.m_workers() as u64, p.dim() as u64);
+        for (i, s) in serial.iters.iter().enumerate() {
+            assert_eq!(
+                s.down_bits_cum,
+                (i as u64 + 1) * m * 64 * d,
+                "{name}: free-downlink formula at k={}",
+                s.k
+            );
+        }
     }
 }
 

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use chb_fed::compress::{
     Compressor, DenseDecoded, ErrorFeedback, PackedFp16, PackedFp32,
-    PackedInt, TopK,
+    PackedInt, TopK, TopKInt,
 };
 use chb_fed::coordinator::{
     run_async_detailed, run_rayon, run_serial, run_threaded, AsyncConfig,
@@ -167,6 +167,50 @@ fn packed_codecs_match_dense_decoded_on_all_four_tasks() {
                     assert_eq!(x.to_bits(), y.to_bits(), "{what}: θ̂ drifted");
                 }
             }
+        }
+    }
+}
+
+/// The sparse+packed hybrid: a run whose workers uplink `TopKInt`
+/// (top-k support, `bits`-wide quantized values, `32 + (32+bits)·nnz`
+/// on the wire) must match its `DenseDecoded` form bit for bit on all
+/// four tasks — and every transmitted delta must charge exactly the
+/// hybrid wire-size formula.
+#[test]
+fn topk_int_hybrid_matches_dense_decoded_on_all_four_tasks() {
+    let (k, bits) = (3usize, 8u32);
+    for task in
+        [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+    {
+        let p = problem_for(task);
+        let (params, iters) = params_for(&p, task);
+        let cfg = RunConfig::new(Method::Chb, params, iters);
+        let mut sparse_ws = workers_with(&p, Arc::new(TopKInt { k, bits }));
+        let sparse = run_serial(&mut sparse_ws, &cfg, p.theta0());
+        let mut dense_ws =
+            workers_with(&p, Arc::new(DenseDecoded(TopKInt { k, bits })));
+        let dense = run_serial(&mut dense_ws, &cfg, p.theta0());
+        let name = task.name();
+        assert_traces_identical(&sparse, &dense, &format!("{name} hybrid"));
+        for (a, b) in sparse_ws.iter().zip(&dense_ws) {
+            for (x, y) in
+                a.last_transmitted().iter().zip(b.last_transmitted())
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}: θ̂ drifted");
+            }
+        }
+        // the accounting pin: k < d, so every transmit is exactly the
+        // scale header plus (index + value) bits per kept coordinate
+        let per_tx = 32 + (32 + bits as u64) * k as u64;
+        let mut prev_bits = 0u64;
+        for s in &sparse.iters {
+            assert_eq!(
+                s.bits_cum - prev_bits,
+                s.comms_round as u64 * per_tx,
+                "{name}: hybrid wire-size formula at k={}",
+                s.k
+            );
+            prev_bits = s.bits_cum;
         }
     }
 }

@@ -18,8 +18,8 @@ use chb_fed::data::batch::BatchSchedule;
 use chb_fed::data::synthetic;
 use chb_fed::experiments::Problem;
 use chb_fed::metrics::Trace;
-use chb_fed::net::LatencyModel;
-use chb_fed::optim::{Method, MethodParams};
+use chb_fed::net::{DownlinkSpec, LatencyModel};
+use chb_fed::optim::{Method, MethodParams, MethodSpec};
 use chb_fed::spec::{
     CensorSpec, CodecSpec, DropSpec, EpsilonSpec, ParamSpec, Registry,
     RunSpec, Session, StopSpec,
@@ -237,7 +237,22 @@ fn random_spec(g: &mut prop::Gen) -> RunSpec {
         TaskKind::Lasso,
         TaskKind::Nn,
     ]);
-    let method = *g.choose(&[Method::Chb, Method::Hb, Method::Lag, Method::Gd]);
+    let classic =
+        |g: &mut prop::Gen| *g.choose(&[Method::Chb, Method::Hb, Method::Lag, Method::Gd]);
+    let method = match g.usize_in(0..=3) {
+        0 => MethodSpec::Classic(classic(g)),
+        1 => MethodSpec::Nesterov { censored: g.bool() },
+        2 => MethodSpec::LocalSteps {
+            base: classic(g),
+            k_local: g.usize_in(1..=16),
+        },
+        _ => MethodSpec::CensoredAdam {
+            beta1: g.f64_in(0.0, 1.0),
+            beta2: g.f64_in(0.0, 1.0),
+            eps: g.f64_in(1e-12, 1.0),
+            amsgrad: g.bool(),
+        },
+    };
     let engine = match g.usize_in(0..=3) {
         0 => EngineKind::Serial,
         1 => EngineKind::Threaded,
@@ -316,13 +331,26 @@ fn random_spec(g: &mut prop::Gen) -> RunSpec {
                 seed: seed(g),
             },
         },
-        codec: match g.usize_in(0..=5) {
+        codec: match g.usize_in(0..=6) {
             0 => CodecSpec::None,
             1 => CodecSpec::Quantizer { bits: g.usize_in(2..=32) as u32 },
             2 => CodecSpec::TopK { k: g.usize_in(1..=512) },
             3 => CodecSpec::Fp32 { error_feedback: g.bool() },
             4 => CodecSpec::Fp16 { error_feedback: g.bool() },
-            _ => CodecSpec::Int {
+            5 => CodecSpec::Int {
+                bits: g.usize_in(2..=32) as u32,
+                error_feedback: g.bool(),
+            },
+            _ => CodecSpec::TopKInt {
+                k: g.usize_in(1..=512),
+                bits: g.usize_in(2..=32) as u32,
+            },
+        },
+        downlink: match g.usize_in(0..=3) {
+            0 => DownlinkSpec::None,
+            1 => DownlinkSpec::Fp32 { error_feedback: g.bool() },
+            2 => DownlinkSpec::Fp16 { error_feedback: g.bool() },
+            _ => DownlinkSpec::Int {
                 bits: g.usize_in(2..=32) as u32,
                 error_feedback: g.bool(),
             },

@@ -20,19 +20,25 @@
 //!      and without a real mid-run checkpoint backing the recovery.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use chb_fed::checkpoint::CheckpointPolicy;
-use chb_fed::coordinator::{EngineKind, FaultPlan};
+use chb_fed::coordinator::{
+    run_with_rules_ctx, EngineKind, FaultPlan, RunConfig, RunContext, Server,
+};
 use chb_fed::data::synthetic;
 use chb_fed::experiments::Problem;
 use chb_fed::metrics::Trace;
+use chb_fed::optim::{CensorRule, Method, MethodParams};
 use chb_fed::spec::{EpsilonSpec, ParamSpec, RunSpec, Session};
 use chb_fed::tasks::TaskKind;
 use chb_fed::util::json::Json;
 use chb_fed::wire::frame::{
     parse_round, round_body, Frame, FrameKind, WireError,
 };
-use chb_fed::wire::{ChaosSpec, WireConfig};
+use chb_fed::wire::{
+    run_client, ChaosSpec, ClientConfig, Listener, WireConfig, WirePool,
+};
 
 /// The golden frame: kind=Round, round=5, seq=9, θ=[1.0, −0.5],
 /// step_sq=0.1, active, not forced, acked=4.  160 bytes total.
@@ -262,6 +268,86 @@ fn loopback_wire_is_bit_identical_to_serial_on_all_tasks() {
             &p,
         );
         assert_traces_bitwise(&serial, &wire, &format!("{task:?} wire"));
+    }
+}
+
+/// The two-direction bit ledger: in a zero-chaos, full-participation
+/// loopback run the trace's cumulative uplink and downlink bit
+/// columns equal the exact sum of model/delta payload bits carried by
+/// the delivered wire frames, as counted frame-by-frame on the server
+/// side (`WireStats::payload_bits_up` / `payload_bits_down`).  Full
+/// participation matters: the pool sends a `Round` frame to every
+/// connected worker, while the trace charges scheduled workers only —
+/// under `Participation::Full` the two populations coincide.
+#[test]
+fn loopback_bit_ledgers_match_the_frames_exactly() {
+    for task in
+        [TaskKind::LinReg, TaskKind::LogReg, TaskKind::Lasso, TaskKind::Nn]
+    {
+        let p = problem_for(task);
+        let m = p.m_workers();
+        let params = MethodParams::new(1.0 / p.l_global)
+            .with_beta(0.4)
+            .with_epsilon1_scaled(0.1, m);
+        let cfg = RunConfig::new(Method::Chb, params, 12);
+        let censor: Arc<dyn CensorRule> = Arc::from(
+            chb_fed::optim::method::build_censor_rule(Method::Chb, &params),
+        );
+        let (listener, addr) =
+            Listener::bind_loopback().expect("bind loopback");
+        let handles: Vec<_> = p
+            .rust_workers()
+            .into_iter()
+            .map(|mut w| {
+                let censor = Arc::clone(&censor);
+                let ccfg = ClientConfig::loopback(addr.clone(), m);
+                std::thread::spawn(move || {
+                    run_client(&mut w, censor, &ccfg)
+                        .expect("loopback client failed");
+                })
+            })
+            .collect();
+        let server = Server::new(Method::Chb, &params, p.theta0());
+        let dim = server.dim();
+        let mut pool =
+            WirePool::new(listener, m, dim, WireConfig::default(), None)
+                .expect("wire handshake");
+        let trace = run_with_rules_ctx(
+            &mut pool,
+            &cfg,
+            server,
+            Arc::clone(&censor),
+            "CHB",
+            "wire",
+            &RunContext::default(),
+        )
+        .expect("loopback run failed");
+        let stats = pool.stats();
+        pool.shutdown();
+        for h in handles {
+            h.join().expect("loopback client panicked");
+        }
+        let name = task.name();
+        assert!(
+            trace.total_uplink_bits() > 0,
+            "{name}: no uplink traffic — the ledger check is vacuous"
+        );
+        assert_eq!(
+            stats.payload_bits_up,
+            trace.total_uplink_bits(),
+            "{name}: uplink ledger vs delivered Transmit frames"
+        );
+        // downlink: one 64·d Round frame per worker per round
+        assert_eq!(
+            trace.total_downlink_bits(),
+            (trace.iterations() * m * 64 * dim) as u64,
+            "{name}: free-downlink formula"
+        );
+        assert_eq!(
+            stats.payload_bits_down,
+            trace.total_downlink_bits(),
+            "{name}: downlink ledger vs delivered Round frames"
+        );
     }
 }
 
